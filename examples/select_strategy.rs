@@ -1,0 +1,107 @@
+//! **End-to-end driver** (DESIGN.md §End-to-end validation): the full
+//! paper pipeline on a real small workload —
+//!
+//! 1. execute all 8 algorithms × 11 strategies on all 12 corpus graphs
+//!    (the execution-log corpus, engine + cost model),
+//! 2. augment the training logs into the synthetic set (§4.2.1),
+//! 3. train the ETRM (histogram GBDT, paper hyper-parameters scaled),
+//! 4. evaluate the 96-task split and report the paper's headline
+//!    metrics (Table 6 / Fig 6 / Fig 8 shapes),
+//! 5. cross-check the Rust model against the AOT-compiled PJRT forest
+//!    (the three-layer deployment path) when `artifacts/` is built.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example select_strategy -- \
+//!     [--scale 0.03125] [--cap 40000] [--trees 250]
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md.
+
+use gps_select::etrm::EtrmBackend;
+use gps_select::eval::pipeline::{self, Evaluation, PipelineConfig, TaskEval};
+use gps_select::eval::figures;
+use gps_select::features::encode;
+use gps_select::ml::gbdt::GbdtParams;
+use gps_select::ml::Regressor;
+use gps_select::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let default = PipelineConfig::default();
+    let config = PipelineConfig {
+        scale: args.get_f64("scale", default.scale),
+        seed: args.get_u64("seed", default.seed),
+        workers: args.get_usize("workers", default.workers),
+        augment_cap: Some(args.get_usize("cap", 40_000)),
+        gbdt: GbdtParams {
+            n_estimators: args.get_usize("trees", default.gbdt.n_estimators),
+            max_depth: args.get_usize("depth", default.gbdt.max_depth),
+            ..default.gbdt
+        },
+        ..default
+    };
+    let t0 = std::time::Instant::now();
+    let eval = pipeline::run_with_progress(config, |stage| {
+        eprintln!("[{:7.1?}] {stage}", t0.elapsed());
+    })?;
+    eprintln!("[{:7.1?}] done", t0.elapsed());
+
+    // headline summary (Table 6 shape)
+    println!("{}", figures::table6(&eval));
+    println!("{}", figures::fig6(&eval));
+    println!("{}", figures::fig8(&eval));
+
+    // a few concrete selections
+    println!("example selections:");
+    for t in eval.tasks.iter().filter(|t| t.rank == 1).take(3) {
+        println!(
+            "  {}/{} → {} (rank 1 of 11, beats worst by {:.2}×)",
+            t.graph,
+            t.algorithm.name(),
+            t.selected.name(),
+            t.scores.worst
+        );
+    }
+    let misses: Vec<&TaskEval> = eval.tasks.iter().filter(|t| t.rank > 4).collect();
+    println!("  tasks outside rank 4: {}/96", misses.len());
+
+    // three-layer deployment path: the PJRT-compiled forest must agree
+    // with the native model on the evaluation tasks
+    match gps_select::runtime::Runtime::try_default() {
+        Some(rt) => {
+            let EtrmBackend::Gbdt(model) = &eval.etrm.backend else {
+                anyhow::bail!("expected GBDT backend")
+            };
+            let forest = gps_select::runtime::gbdt::PjrtForest::new(
+                std::rc::Rc::new(rt),
+                model,
+            )?;
+            let mut checked = 0usize;
+            let mut max_rel = 0.0f64;
+            for t in eval.tasks.iter().take(12) {
+                let task = eval
+                    .store
+                    .logs
+                    .iter()
+                    .find(|l| l.graph == t.graph && l.algorithm == t.algorithm.name())
+                    .unwrap();
+                let row = encode(&task.features, t.selected).to_vec();
+                let native = model.predict(&row);
+                let pjrt = forest.predict(&row);
+                max_rel = max_rel.max((native - pjrt).abs() / (1.0 + native.abs()));
+                checked += 1;
+            }
+            println!(
+                "PJRT cross-check: {checked} predictions, max relative deviation {max_rel:.2e} ✓"
+            );
+        }
+        None => println!("PJRT cross-check skipped (run `make artifacts`)"),
+    }
+
+    let all: Vec<&TaskEval> = eval.tasks.iter().collect();
+    let (best, worst, avg) = Evaluation::mean_scores(&all);
+    println!(
+        "\nheadline: Score_best {best:.4} (paper 0.9458) | Score_worst {worst:.4} (2.0770) | Score_avg {avg:.4} (1.4558)"
+    );
+    Ok(())
+}

@@ -1,0 +1,134 @@
+"""AOT lowering: JAX/Pallas models → HLO *text* artifacts for the Rust
+PJRT runtime.
+
+Interchange format is HLO text, NOT serialized HloModuleProto — jax ≥0.5
+emits protos with 64-bit instruction ids which the published ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Writes one ``<name>.hlo.txt`` per entry point plus ``manifest.txt``
+describing the static shapes the Rust side must pad to.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # moments run in f64
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# ---- static artifact shapes (mirrored in rust/src/runtime/mod.rs) ----
+MOMENTS_N = 1 << 16          # degree-array chunk (rust merges chunks)
+GBDT_BATCH = 16              # ≥ the 11-strategy inventory
+GBDT_FEATURES = 52           # features::encoding::FEATURE_DIM
+GBDT_TREES = 1024            # ≥ the paper's n_estimators = 1000
+GBDT_NODES = 256             # padded nodes per tree
+GBDT_DEPTH = 15              # paper max_depth
+MLP_BATCH = 64
+MLP_HIDDEN = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_all():
+    """Lower every artifact; returns {name: hlo_text}."""
+    f32, f64, i32 = jnp.float32, jnp.float64, jnp.int32
+    flat = GBDT_TREES * GBDT_NODES
+    arts = {}
+
+    arts["moments"] = to_hlo_text(
+        jax.jit(model.degree_moments).lower(spec((MOMENTS_N,), f64))
+    )
+
+    etrm = functools.partial(
+        model.etrm_predict,
+        n_trees=GBDT_TREES, max_nodes=GBDT_NODES, depth=GBDT_DEPTH,
+    )
+    arts["gbdt_predict"] = to_hlo_text(
+        jax.jit(etrm).lower(
+            spec((GBDT_BATCH, GBDT_FEATURES), f32),
+            spec((flat,), i32),   # feature
+            spec((flat,), f32),   # threshold
+            spec((flat,), i32),   # left
+            spec((flat,), i32),   # right
+            spec((flat,), f32),   # value
+            spec((2,), f32),      # [base_score, learning_rate]
+        )
+    )
+
+    arts["mlp_predict"] = to_hlo_text(
+        jax.jit(model.mlp_predict).lower(
+            spec((MLP_BATCH, GBDT_FEATURES), f32),
+            spec((GBDT_FEATURES, MLP_HIDDEN), f32),
+            spec((MLP_HIDDEN,), f32),
+            spec((MLP_HIDDEN,), f32),
+            spec((), f32),
+        )
+    )
+
+    arts["mlp_train_step"] = to_hlo_text(
+        jax.jit(model.mlp_train_step).lower(
+            spec((GBDT_FEATURES, MLP_HIDDEN), f32),
+            spec((MLP_HIDDEN,), f32),
+            spec((MLP_HIDDEN,), f32),
+            spec((), f32),
+            spec((MLP_BATCH, GBDT_FEATURES), f32),
+            spec((MLP_BATCH,), f32),
+            spec((), f32),
+        )
+    )
+    return arts
+
+
+def manifest() -> str:
+    return (
+        f"moments_n {MOMENTS_N}\n"
+        f"gbdt_batch {GBDT_BATCH}\n"
+        f"gbdt_features {GBDT_FEATURES}\n"
+        f"gbdt_trees {GBDT_TREES}\n"
+        f"gbdt_nodes {GBDT_NODES}\n"
+        f"gbdt_depth {GBDT_DEPTH}\n"
+        f"mlp_batch {MLP_BATCH}\n"
+        f"mlp_hidden {MLP_HIDDEN}\n"
+    )
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for name, text in lower_all().items():
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write(manifest())
+    print(f"wrote {os.path.join(args.out, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

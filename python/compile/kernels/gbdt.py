@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: GBDT forest inference (the ETRM's Fig-2 step 3).
+
+Evaluates a *fixed-capacity* forest over a batch of encoded task
+features. Tree tensors (feature / threshold / left / right / value,
+flattened ``[n_trees · max_nodes]``) are **runtime inputs** of the
+compiled artifact, so one AOT compilation serves every trained model up
+to the padded capacity — the coordinator re-uploads tensors when the
+model is retrained, never recompiles.
+
+Traversal is data-parallel over (batch × trees): ``depth`` unrolled
+steps of ``node = x[feat[node]] <= thr[node] ? left : right`` with
+self-referencing leaves, i.e. pure gathers — VPU work with no MXU
+involvement; the natural TPU blocking is over the batch with tree
+tensors resident in VMEM (see DESIGN.md §Perf for the footprint).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _forest_kernel(n_trees, max_nodes, depth, x_ref, feat_ref, thr_ref,
+                   left_ref, right_ref, val_ref, scal_ref, o_ref):
+    x = x_ref[...]                      # [B, F]
+    feat = feat_ref[...]                # [T·N] i32
+    thr = thr_ref[...]                  # [T·N] f32
+    left = left_ref[...]                # [T·N] i32
+    right = right_ref[...]              # [T·N] i32
+    val = val_ref[...]                  # [T·N] f32
+    batch = x.shape[0]
+    tree_off = (jnp.arange(n_trees, dtype=jnp.int32) * max_nodes)[None, :]
+    node = jnp.zeros((batch, n_trees), dtype=jnp.int32)
+    for _ in range(depth):              # static unroll: fixed iterations
+        idx = tree_off + node
+        f = jnp.take(feat, idx)         # [B, T]
+        t = jnp.take(thr, idx)
+        l = jnp.take(left, idx)
+        r = jnp.take(right, idx)
+        xv = jnp.take_along_axis(x, jnp.maximum(f, 0), axis=1)
+        node = jnp.where((f >= 0) & (xv <= t), l, r)
+    leaf = jnp.take(val, tree_off + node)
+    base, lr = scal_ref[0], scal_ref[1]
+    o_ref[...] = base + lr * jnp.sum(leaf, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_trees", "max_nodes", "depth"))
+def forest_predict(x, feat, thr, left, right, val, scal, *, n_trees,
+                   max_nodes, depth):
+    """Transformed-space ensemble prediction for a batch.
+
+    ``scal = [base_score, learning_rate]``; the inverse target transform
+    (`expm1` for log targets) is applied by the caller.
+    """
+    batch, _ = x.shape
+    kern = functools.partial(_forest_kernel, n_trees, max_nodes, depth)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((batch,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, feat, thr, left, right, val, scal)

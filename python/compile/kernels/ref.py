@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness ground truth.
+
+pytest (`python/tests/`) sweeps shapes and random inputs with
+hypothesis and asserts `assert_allclose(kernel, ref)`.
+"""
+
+import jax.numpy as jnp
+
+
+def power_sums_ref(x):
+    """[Σx, Σx², Σx³, Σx⁴] of a 1-D array."""
+    x = x.astype(jnp.float64)
+    x2 = x * x
+    return jnp.stack([jnp.sum(x), jnp.sum(x2), jnp.sum(x2 * x), jnp.sum(x2 * x2)])
+
+
+def forest_predict_ref(x, feat, thr, left, right, val, scal, *, n_trees,
+                       max_nodes, depth):
+    """Forest traversal oracle (mirrors `GbdtTensors::predict_transformed`)."""
+    batch = x.shape[0]
+    out = jnp.full((batch,), scal[0], dtype=jnp.float32)
+    tree_off = (jnp.arange(n_trees, dtype=jnp.int32) * max_nodes)[None, :]
+    node = jnp.zeros((batch, n_trees), dtype=jnp.int32)
+    for _ in range(depth):
+        idx = tree_off + node
+        f = jnp.take(feat, idx)
+        t = jnp.take(thr, idx)
+        l = jnp.take(left, idx)
+        r = jnp.take(right, idx)
+        xv = jnp.take_along_axis(x, jnp.maximum(f, 0), axis=1)
+        node = jnp.where((f >= 0) & (xv <= t), l, r)
+    leaf = jnp.take(val, tree_off + node)
+    return out + scal[1] * jnp.sum(leaf, axis=1)
+
+
+def dense_relu_ref(x, w, b):
+    """max(x @ w + b, 0)."""
+    return jnp.maximum(x @ w + b[None, :], 0.0)
+
+
+def mlp_predict_ref(x, w1, b1, w2, b2):
+    """Two-layer MLP forward."""
+    h = dense_relu_ref(x, w1, b1)
+    return h @ w2 + b2

@@ -1,0 +1,67 @@
+"""L2: the JAX compute graphs that get AOT-lowered to PJRT artifacts.
+
+Four entry points, each a pure function returning a tuple (lowered with
+``return_tuple=True`` so the Rust side unwraps with ``to_tupleN``):
+
+* :func:`degree_moments` — data-feature power sums (calls the L1
+  ``moments`` kernel).
+* :func:`etrm_predict` — GBDT forest inference over encoded tasks
+  (calls the L1 ``gbdt`` kernel); the tree tensors are runtime inputs.
+* :func:`mlp_predict` — the MLP baseline forward pass (L1 fused
+  dense+ReLU kernel for the hot layer).
+* :func:`mlp_train_step` — one SGD step of the MLP baseline with
+  fwd/bwd via ``jax.grad`` (the L2 "model fwd/bwd" path); returns the
+  updated parameters and the batch loss.
+
+Python never runs at request time: ``aot.py`` lowers these once to HLO
+text and the Rust runtime executes the compiled artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import gbdt as gbdt_kernel
+from compile.kernels import mlp as mlp_kernel
+from compile.kernels import moments as moments_kernel
+
+
+def degree_moments(x):
+    """Power sums of a zero-padded degree array (f64)."""
+    return (moments_kernel.power_sums(x),)
+
+
+def etrm_predict(x, feat, thr, left, right, val, scal, *, n_trees,
+                 max_nodes, depth):
+    """Transformed-space execution-time predictions for a feature batch."""
+    out = gbdt_kernel.forest_predict(
+        x, feat, thr, left, right, val, scal,
+        n_trees=n_trees, max_nodes=max_nodes, depth=depth,
+    )
+    return (out,)
+
+
+def mlp_predict(x, w1, b1, w2, b2):
+    """MLP baseline forward pass (already-normalised inputs)."""
+    h = mlp_kernel.dense_relu(x, w1, b1)
+    return (h @ w2 + b2,)
+
+
+def _mlp_loss(params, x, y):
+    w1, b1, w2, b2 = params
+    # pure-jnp forward for differentiability (interpret-mode pallas
+    # calls are not AD-transparent); the kernel and this forward are
+    # asserted equal in python/tests.
+    h = jnp.maximum(x @ w1 + b1[None, :], 0.0)
+    pred = h @ w2 + b2
+    err = pred - y
+    # ½·mean(err²): its gradient is (1/n)·Σ err·∂pred, exactly the
+    # update rust's Mlp::train_step applies (lr/n folded the same way)
+    return 0.5 * jnp.mean(err * err)
+
+
+def mlp_train_step(w1, b1, w2, b2, x, y, lr):
+    """One SGD step; returns (w1', b1', w2', b2', loss)."""
+    params = (w1, b1, w2, b2)
+    loss, grads = jax.value_and_grad(_mlp_loss)(params, x, y)
+    new = tuple(p - lr * g for p, g in zip(params, grads))
+    return (*new, 2.0 * loss)  # report mean(err²) like the rust twin

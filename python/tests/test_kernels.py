@@ -1,0 +1,138 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+hypothesis sweeps shapes and values; every kernel must match its
+`ref.py` oracle to float tolerance.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gbdt, mlp, moments, ref
+
+# ---------------------------------------------------------------- moments
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([1.0, 100.0, 10_000.0]),
+)
+def test_power_sums_matches_ref(blocks, seed, scale):
+    rng = np.random.default_rng(seed)
+    n = blocks * moments.BLOCK
+    x = jnp.asarray(rng.random(n) * scale, dtype=jnp.float64)
+    got = moments.power_sums(x)
+    want = ref.power_sums_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-9)
+
+
+def test_power_sums_zero_padding_exact():
+    rng = np.random.default_rng(7)
+    x = rng.random(100) * 50.0
+    padded = np.zeros(moments.BLOCK, dtype=np.float64)
+    padded[:100] = x
+    got = moments.power_sums(jnp.asarray(padded))
+    want = ref.power_sums_ref(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-9)
+
+
+def test_power_sums_rejects_unaligned():
+    with pytest.raises(AssertionError):
+        moments.power_sums(jnp.zeros(moments.BLOCK + 1, dtype=jnp.float64))
+
+
+# ---------------------------------------------------------------- gbdt
+
+
+def random_forest(rng, n_trees, max_nodes, features):
+    """Random *valid* forest tensors: node i can only point to children
+    with larger indices (or itself = leaf), so traversal terminates."""
+    feat = rng.integers(-1, features, size=(n_trees * max_nodes,)).astype(np.int32)
+    thr = rng.standard_normal(n_trees * max_nodes).astype(np.float32)
+    left = np.zeros(n_trees * max_nodes, dtype=np.int32)
+    right = np.zeros(n_trees * max_nodes, dtype=np.int32)
+    val = rng.standard_normal(n_trees * max_nodes).astype(np.float32) * 0.1
+    for t in range(n_trees):
+        for i in range(max_nodes):
+            idx = t * max_nodes + i
+            if feat[idx] >= 0 and i + 2 < max_nodes:
+                left[idx] = rng.integers(i + 1, max_nodes)
+                right[idx] = rng.integers(i + 1, max_nodes)
+            else:
+                feat[idx] = -1
+                left[idx] = i
+                right[idx] = i
+    return feat, thr, left, right, val
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    batch=st.sampled_from([1, 4, 16]),
+    n_trees=st.sampled_from([1, 8, 32]),
+    depth=st.sampled_from([1, 4, 8]),
+)
+def test_forest_matches_ref(seed, batch, n_trees, depth):
+    rng = np.random.default_rng(seed)
+    max_nodes = 16
+    features = 6
+    feat, thr, left, right, val = random_forest(rng, n_trees, max_nodes, features)
+    x = rng.standard_normal((batch, features)).astype(np.float32)
+    scal = np.array([0.5, 0.1], dtype=np.float32)
+    kw = dict(n_trees=n_trees, max_nodes=max_nodes, depth=depth)
+    got = gbdt.forest_predict(
+        jnp.asarray(x), jnp.asarray(feat), jnp.asarray(thr),
+        jnp.asarray(left), jnp.asarray(right), jnp.asarray(val),
+        jnp.asarray(scal), **kw,
+    )
+    want = ref.forest_predict_ref(
+        jnp.asarray(x), jnp.asarray(feat), jnp.asarray(thr),
+        jnp.asarray(left), jnp.asarray(right), jnp.asarray(val),
+        jnp.asarray(scal), **kw,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_forest_single_stump_by_hand():
+    # stump: x0 <= 0 → leaf1 (-1), else leaf2 (+1); base 10, lr 1
+    feat = np.array([0, -1, -1], dtype=np.int32)
+    thr = np.array([0.0, 0.0, 0.0], dtype=np.float32)
+    left = np.array([1, 1, 2], dtype=np.int32)
+    right = np.array([2, 1, 2], dtype=np.int32)
+    val = np.array([0.0, -1.0, 1.0], dtype=np.float32)
+    scal = np.array([10.0, 1.0], dtype=np.float32)
+    x = np.array([[-5.0], [5.0]], dtype=np.float32)
+    out = gbdt.forest_predict(
+        jnp.asarray(x), jnp.asarray(feat), jnp.asarray(thr),
+        jnp.asarray(left), jnp.asarray(right), jnp.asarray(val),
+        jnp.asarray(scal), n_trees=1, max_nodes=3, depth=4,
+    )
+    np.testing.assert_allclose(np.asarray(out), [9.0, 11.0])
+
+
+# ---------------------------------------------------------------- mlp
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    batch=st.sampled_from([1, 8, 64]),
+    feats=st.sampled_from([3, 52]),
+    hidden=st.sampled_from([8, 64]),
+)
+def test_dense_relu_matches_ref(seed, batch, feats, hidden):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((batch, feats)).astype(np.float32)
+    w = rng.standard_normal((feats, hidden)).astype(np.float32)
+    b = rng.standard_normal(hidden).astype(np.float32)
+    got = mlp.dense_relu(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    want = ref.dense_relu_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    assert (np.asarray(got) >= 0).all()

@@ -1,0 +1,92 @@
+"""L2 model graphs: shapes, semantics and the AOT lowering path."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_mlp_predict_matches_pure_forward():
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((8, 10)).astype(np.float32)
+    w1 = rng.standard_normal((10, 16)).astype(np.float32)
+    b1 = rng.standard_normal(16).astype(np.float32)
+    w2 = rng.standard_normal(16).astype(np.float32)
+    b2 = np.float32(0.3)
+    (got,) = model.mlp_predict(
+        jnp.asarray(x), jnp.asarray(w1), jnp.asarray(b1), jnp.asarray(w2), b2
+    )
+    want = ref.mlp_predict_ref(
+        jnp.asarray(x), jnp.asarray(w1), jnp.asarray(b1), jnp.asarray(w2), b2
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_mlp_train_step_reduces_loss():
+    rng = np.random.default_rng(4)
+    f, h, b = 6, 12, 32
+    w1 = jnp.asarray(rng.standard_normal((f, h)).astype(np.float32) * 0.3)
+    b1 = jnp.zeros(h, jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal(h).astype(np.float32) * 0.3)
+    b2 = jnp.float32(0.0)
+    x = jnp.asarray(rng.standard_normal((b, f)).astype(np.float32))
+    y = jnp.asarray((np.asarray(x)[:, 0] * 2.0).astype(np.float32))
+    lr = jnp.float32(0.05)
+    losses = []
+    for _ in range(60):
+        w1, b1, w2, b2, loss = model.mlp_train_step(w1, b1, w2, b2, x, y, lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.2, losses[::10]
+
+
+def test_mlp_train_step_gradient_matches_finite_difference():
+    # pin jax.grad against a finite difference on one weight
+    rng = np.random.default_rng(5)
+    f, h, b = 3, 4, 8
+    w1 = rng.standard_normal((f, h)).astype(np.float32) * 0.5
+    b1 = np.zeros(h, np.float32)
+    w2 = rng.standard_normal(h).astype(np.float32) * 0.5
+    b2 = np.float32(0.1)
+    x = rng.standard_normal((b, f)).astype(np.float32)
+    y = rng.standard_normal(b).astype(np.float32)
+
+    def loss_of(w1v):
+        hmat = np.maximum(x @ w1v + b1[None, :], 0.0)
+        pred = hmat @ w2 + b2
+        return float(np.mean((pred - y) ** 2))
+
+    lr = 1.0
+    out = model.mlp_train_step(
+        jnp.asarray(w1), jnp.asarray(b1), jnp.asarray(w2), jnp.float32(b2),
+        jnp.asarray(x), jnp.asarray(y), jnp.float32(lr),
+    )
+    grad_w1 = (w1 - np.asarray(out[0]))  # lr = 1 → gradient itself
+    eps = 1e-3
+    w1p = w1.copy()
+    w1p[0, 0] += eps
+    w1m = w1.copy()
+    w1m[0, 0] -= eps
+    # the train step descends ½·mean(err²), so its gradient is half the
+    # finite difference of mean(err²)
+    fd = 0.5 * (loss_of(w1p) - loss_of(w1m)) / (2 * eps)
+    assert abs(grad_w1[0, 0] - fd) < 5e-3, (grad_w1[0, 0], fd)
+
+
+def test_lowering_produces_hlo_text():
+    arts = aot.lower_all()
+    assert set(arts) == {"moments", "gbdt_predict", "mlp_predict", "mlp_train_step"}
+    for name, text in arts.items():
+        assert text.startswith("HloModule"), f"{name} lowered to {text[:40]!r}"
+        assert "ENTRY" in text, name
+
+
+def test_manifest_matches_constants():
+    m = aot.manifest()
+    assert f"gbdt_features {aot.GBDT_FEATURES}" in m
+    assert f"gbdt_trees {aot.GBDT_TREES}" in m
+    assert aot.GBDT_TREES >= 1000, "capacity must cover the paper's n_estimators"

@@ -1,0 +1,97 @@
+//! Ablation study over the design choices DESIGN.md calls out:
+//!
+//! 1. **log-space target** (ln y) vs raw seconds — the regression
+//!    objective choice;
+//! 2. **synthetic augmentation** (§4.2.1) vs training on the 528 real
+//!    logs only;
+//! 3. **strategy family flags** in the encoding (extra columns beyond
+//!    the paper's one-hot);
+//! 4. **model family** — GBDT vs the ridge baseline.
+//!
+//! Each variant trains on the same corpus and reports the headline
+//! selection metrics over the 96-task split.
+
+#[path = "common.rs"]
+mod common;
+
+use gps_select::dataset::augment::augment;
+use gps_select::dataset::logs::LogStore;
+use gps_select::dataset::split::test_split;
+use gps_select::engine::cost::ClusterConfig;
+use gps_select::etrm::scores::{rank_of_selected, TaskScores};
+use gps_select::etrm::Etrm;
+use gps_select::ml::gbdt::GbdtParams;
+use gps_select::partition::Strategy;
+
+struct Outcome {
+    score_best: f64,
+    best_pick: usize,
+}
+
+fn evaluate(etrm: &Etrm, store: &LogStore) -> Outcome {
+    let mut score_best = 0.0;
+    let mut best_pick = 0;
+    let tasks = test_split();
+    for t in &tasks {
+        let log = store
+            .logs
+            .iter()
+            .find(|l| l.graph == t.graph && l.algorithm == t.algorithm.name())
+            .unwrap();
+        let times: Vec<(Strategy, f64)> = Strategy::inventory()
+            .into_iter()
+            .map(|s| (s, store.time_of(t.graph, t.algorithm.name(), s).unwrap()))
+            .collect();
+        let selected = etrm.select(&log.features);
+        let t_sel = times.iter().find(|(s, _)| *s == selected).unwrap().1;
+        let raw: Vec<f64> = times.iter().map(|(_, x)| *x).collect();
+        score_best += TaskScores::compute(&raw, t_sel).best;
+        if rank_of_selected(&times, selected) == 1 {
+            best_pick += 1;
+        }
+    }
+    Outcome { score_best: score_best / tasks.len() as f64, best_pick }
+}
+
+fn main() {
+    let scale = common::bench_scale();
+    let seed = common::bench_seed();
+    let cfg = ClusterConfig::with_workers(64);
+    eprintln!("[ablation] building corpus at scale {scale}");
+    let store = LogStore::build_corpus(scale, seed, &cfg).unwrap();
+    let synthetic = augment(&store, 2..=9, Some(15_000), seed);
+    let real_training: Vec<_> = store
+        .logs
+        .iter()
+        .filter(|l| {
+            gps_select::graph::datasets::training_graphs().contains(&l.graph.as_str())
+                && gps_select::algorithms::Algorithm::by_name(&l.algorithm)
+                    .map(|a| gps_select::algorithms::Algorithm::training().contains(&a))
+                    .unwrap_or(false)
+        })
+        .cloned()
+        .collect();
+    let params = GbdtParams { n_estimators: 150, max_depth: 8, ..GbdtParams::paper() };
+
+    println!("{:<44} {:>11} {:>10}", "variant", "Score_best", "best-pick");
+    let report = |label: &str, o: Outcome| {
+        println!("{label:<44} {:>11.4} {:>7}/96", o.score_best, o.best_pick);
+    };
+
+    report(
+        "full (ln target, augmented, GBDT)",
+        evaluate(&Etrm::train_gbdt(&synthetic, params), &store),
+    );
+    report(
+        "raw-seconds target (no log transform)",
+        evaluate(
+            &Etrm::train_gbdt(&synthetic, GbdtParams { log_target: false, ..params }),
+            &store,
+        ),
+    );
+    report(
+        "no augmentation (528 real logs only)",
+        evaluate(&Etrm::train_gbdt(&real_training, params), &store),
+    );
+    report("ridge baseline (augmented)", evaluate(&Etrm::train_ridge(&synthetic, 1.0), &store));
+}

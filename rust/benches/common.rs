@@ -1,0 +1,43 @@
+//! Shared bench scaffolding (criterion is unavailable offline; the
+//! harness is `gps_select::util::benchkit`).
+//!
+//! Scale/seed come from `GPS_BENCH_SCALE` / `GPS_BENCH_SEED`; the
+//! default keeps each `cargo bench` target under a minute on one core
+//! while preserving the paper's qualitative shapes.
+
+#![allow(dead_code)]
+
+use gps_select::eval::pipeline::{run_with_progress, Evaluation, PipelineConfig};
+use gps_select::ml::gbdt::GbdtParams;
+
+/// Bench-profile dataset scale.
+pub fn bench_scale() -> f64 {
+    std::env::var("GPS_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.008)
+}
+
+/// Bench seed.
+pub fn bench_seed() -> u64 {
+    std::env::var("GPS_BENCH_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42)
+}
+
+/// The bench pipeline configuration.
+pub fn bench_config() -> PipelineConfig {
+    PipelineConfig {
+        scale: bench_scale(),
+        seed: bench_seed(),
+        augment_cap: Some(15_000),
+        gbdt: GbdtParams { n_estimators: 150, max_depth: 8, ..GbdtParams::paper() },
+        ..PipelineConfig::default()
+    }
+}
+
+/// Run (and time) the full pipeline once for artifact rendering.
+pub fn pipeline_eval() -> Evaluation {
+    let t0 = std::time::Instant::now();
+    let eval = run_with_progress(bench_config(), |stage| {
+        eprintln!("[bench pipeline {:6.1?}] {stage}", t0.elapsed());
+    })
+    .expect("pipeline");
+    eprintln!("[bench pipeline {:6.1?}] complete", t0.elapsed());
+    eval
+}

@@ -1,0 +1,41 @@
+//! Bench: regenerate Fig 1 (motivation — best/worst strategy differs per
+//! task). Times the 5-task × 11-strategy sweep and prints the figure.
+
+#[path = "common.rs"]
+mod common;
+
+use gps_select::algorithms::Algorithm;
+use gps_select::dataset::logs::LogStore;
+use gps_select::engine::cost::ClusterConfig;
+use gps_select::eval::figures;
+use gps_select::graph::datasets::DatasetSpec;
+use gps_select::partition::Strategy;
+use gps_select::util::benchkit::Bench;
+
+fn build_store(scale: f64, seed: u64) -> LogStore {
+    let cfg = ClusterConfig::with_workers(64);
+    let mut store = LogStore::default();
+    for name in ["stanford", "gd-hu", "gd-hr"] {
+        let g = DatasetSpec::by_name(name).unwrap().build(scale, seed);
+        store
+            .record_graph(
+                &g,
+                &[Algorithm::Apcn, Algorithm::Pr, Algorithm::Tc],
+                &Strategy::inventory(),
+                &cfg,
+            )
+            .unwrap();
+    }
+    store
+}
+
+fn main() {
+    let scale = common::bench_scale();
+    let seed = common::bench_seed();
+    let bench = Bench::new(1, 3);
+    let mut store = None;
+    bench.run("fig1/5-tasks-x-11-strategies", || {
+        store = Some(build_store(scale, seed));
+    });
+    println!("\n{}", figures::fig1_from_store(&store.unwrap()));
+}

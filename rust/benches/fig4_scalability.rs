@@ -1,0 +1,19 @@
+//! Bench: regenerate Fig 4 (engine scalability, PR + TC on stanford,
+//! workers 4..64 with 2D partitioning).
+
+#[path = "common.rs"]
+mod common;
+
+use gps_select::eval::figures;
+use gps_select::util::benchkit::Bench;
+
+fn main() {
+    let scale = common::bench_scale();
+    let seed = common::bench_seed();
+    let bench = Bench::new(1, 3);
+    let mut out = String::new();
+    bench.run("fig4/scalability-sweep", || {
+        out = figures::fig4(scale, seed).unwrap();
+    });
+    println!("\n{out}");
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate Fig 6 (cumulative ratio of selected strategies'
+//! actual rank, overall + per test set).
+
+#[path = "common.rs"]
+mod common;
+
+use gps_select::eval::figures;
+
+fn main() {
+    let eval = common::pipeline_eval();
+    println!("\n{}", figures::fig6(&eval));
+}

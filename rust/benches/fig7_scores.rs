@@ -1,0 +1,11 @@
+//! Bench: regenerate Fig 7 (score box plots by graph and by algorithm).
+
+#[path = "common.rs"]
+mod common;
+
+use gps_select::eval::figures;
+
+fn main() {
+    let eval = common::pipeline_eval();
+    println!("\n{}", figures::fig7(&eval));
+}

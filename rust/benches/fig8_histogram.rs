@@ -1,0 +1,12 @@
+//! Bench: regenerate Fig 8 (case counts within distance from T_best —
+//! ETRM selection vs random picks).
+
+#[path = "common.rs"]
+mod common;
+
+use gps_select::eval::figures;
+
+fn main() {
+    let eval = common::pipeline_eval();
+    println!("\n{}", figures::fig8(&eval));
+}

@@ -1,0 +1,93 @@
+//! Hot-path micro-benchmarks (the §Perf L3 targets): partitioners, the
+//! GAS superstep loop, GBDT training/inference, the analyzer, and the
+//! native-vs-PJRT comparison for the AOT artifacts.
+
+#[path = "common.rs"]
+mod common;
+
+use gps_select::algorithms::Algorithm;
+use gps_select::analyzer::analyze;
+use gps_select::engine::cost::ClusterConfig;
+use gps_select::graph::gen::chung_lu;
+use gps_select::ml::gbdt::{Gbdt, GbdtParams};
+use gps_select::ml::{Regressor, TrainSet};
+use gps_select::partition::Strategy;
+use gps_select::util::benchkit::{black_box, Bench};
+use gps_select::util::rng::Rng;
+use gps_select::util::stats::PowerSums;
+
+fn main() {
+    let bench = Bench::from_env();
+    let mut rng = Rng::new(9000);
+    // a 100k-edge power-law graph: the partitioner benchmark substrate
+    let g = chung_lu::generate("bench", 20_000, 100_000, 2.1, true, &mut rng);
+    let workers = 64;
+
+    for s in [
+        Strategy::OneDSrc,
+        Strategy::Random,
+        Strategy::TwoD,
+        Strategy::Hybrid,
+        Strategy::Hdrf(50),
+        Strategy::Ginger,
+        Strategy::Oblivious,
+    ] {
+        bench.run(&format!("partition/{}/100k-edges", s.name()), || {
+            black_box(s.partition(&g, workers))
+        });
+    }
+
+    let p = Strategy::Hdrf(50).partition(&g, workers);
+    let cfg = ClusterConfig::with_workers(workers);
+    bench.run("engine/pagerank-10-iters/100k-edges", || {
+        black_box(Algorithm::Pr.simulate(&g, &p, &cfg))
+    });
+    bench.run("engine/triangle-count/100k-edges", || {
+        black_box(Algorithm::Tc.simulate(&g, &p, &cfg))
+    });
+
+    bench.run("analyzer/parse+count/pr.gps", || {
+        black_box(analyze(Algorithm::Pr.pseudo_code()).unwrap())
+    });
+
+    // moments: native power sums over 1M doubles
+    let xs: Vec<f64> = (0..1_000_000).map(|i| ((i * 31 + 7) % 1000) as f64).collect();
+    bench.run("moments/native/1M", || black_box(PowerSums::of(&xs)));
+
+    // GBDT: train and predict
+    let mut train = TrainSet::default();
+    for _ in 0..20_000 {
+        let row: Vec<f64> = (0..52).map(|_| rng.next_f64()).collect();
+        let y = row[0] * 5.0 + row[1] * row[2] * 3.0;
+        train.push(row, y);
+    }
+    // depth 6 keeps every tree within the PJRT artifact's padded
+    // node capacity for the native-vs-AOT comparison below
+    let params = GbdtParams { n_estimators: 50, max_depth: 6, ..GbdtParams::fast() };
+    bench.run("gbdt/train/20k-rows-50-trees", || black_box(Gbdt::fit(&train, params)));
+    let model = Gbdt::fit(&train, params);
+    let batch: Vec<Vec<f64>> = train.x[..11].to_vec();
+    bench.run("gbdt/predict-native/11-rows", || black_box(model.predict_batch(&batch)));
+
+    // PJRT artifact paths (skipped when artifacts are absent)
+    match gps_select::runtime::Runtime::try_default() {
+        Some(rt) => {
+            let rt = std::rc::Rc::new(rt);
+            bench.run("moments/pjrt/64k-chunk", || {
+                black_box(
+                    gps_select::runtime::moments::power_sums(&rt, &xs[..rt.manifest.moments_n])
+                        .unwrap(),
+                )
+            });
+            match gps_select::runtime::gbdt::PjrtForest::new(rt.clone(), &model) {
+                Ok(forest) => {
+                    bench.run("gbdt/predict-pjrt/11-rows", || {
+                        black_box(forest.predict_rows(&batch))
+                    });
+                }
+                Err(e) => eprintln!("gbdt pjrt bench skipped: {e}"),
+            }
+        }
+        None => eprintln!("PJRT benches skipped (run `make artifacts`)"),
+    }
+}

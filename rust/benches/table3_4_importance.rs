@@ -1,0 +1,13 @@
+//! Bench: regenerate Tables 3 & 4 (gain / split importance of the data
+//! and algorithm features in the trained ETRM).
+
+#[path = "common.rs"]
+mod common;
+
+use gps_select::eval::figures;
+
+fn main() {
+    let eval = common::pipeline_eval();
+    println!("\n{}", figures::table3(&eval).unwrap());
+    println!("\n{}", figures::table4(&eval).unwrap());
+}

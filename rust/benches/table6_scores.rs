@@ -1,0 +1,14 @@
+//! Bench: regenerate Table 6 (score summary — the headline
+//! Score_best/worst/avg, all cases + per test set), plus Table 2
+//! (static strategy inventory).
+
+#[path = "common.rs"]
+mod common;
+
+use gps_select::eval::figures;
+
+fn main() {
+    println!("{}", figures::table2());
+    let eval = common::pipeline_eval();
+    println!("\n{}", figures::table6(&eval));
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate Table 7 (benefit and benefit-cost ratio per
+//! graph × algorithm).
+
+#[path = "common.rs"]
+mod common;
+
+use gps_select::eval::figures;
+
+fn main() {
+    let eval = common::pipeline_eval();
+    println!("\n{}", figures::table7(&eval));
+}

@@ -1,0 +1,179 @@
+//! CC — all local clustering coefficients (§5.3.6, Eq. 18).
+//!
+//! Same two-phase neighbour-list machinery as TC; the apply of phase 1
+//! normalises the closed-wedge count: with `acc = Σ_u |N(v) ∩ N(u)| =
+//! 2·links(v)` (each edge among `N(v)` seen from both endpoints),
+//! `CC(v) = 2·links / (k(k−1)) = acc / (k(k−1))`.
+
+use crate::engine::gas::{EdgeDirection, GraphInfo, VertexProgram};
+use crate::graph::VertexId;
+
+use super::triangle::{intersect_count, NbValue};
+
+/// CC vertex program (eval-only algorithm in the paper's split).
+pub struct ClusteringCoefficient;
+
+impl VertexProgram for ClusteringCoefficient {
+    type Value = NbValue;
+    type Gather = (Vec<u32>, f64);
+
+    fn name(&self) -> &'static str {
+        "CC"
+    }
+
+    fn init(&self, _v: VertexId, _g: &GraphInfo) -> NbValue {
+        (Vec::new(), 0.0)
+    }
+
+    fn fixed_rounds(&self) -> Option<usize> {
+        Some(2)
+    }
+
+    fn gather_edges(&self, _step: usize) -> EdgeDirection {
+        EdgeDirection::Both
+    }
+
+    fn gather_init(&self) -> (Vec<u32>, f64) {
+        (Vec::new(), 0.0)
+    }
+
+    fn gather(
+        &self,
+        step: usize,
+        _v: VertexId,
+        v_val: &NbValue,
+        u: VertexId,
+        u_val: &NbValue,
+        _r: u32,
+        _g: &GraphInfo,
+    ) -> (Vec<u32>, f64) {
+        if step == 0 {
+            (vec![u], 0.0)
+        } else {
+            (Vec::new(), intersect_count(&v_val.0, &u_val.0) as f64)
+        }
+    }
+
+    fn sum(&self, mut a: (Vec<u32>, f64), b: (Vec<u32>, f64)) -> (Vec<u32>, f64) {
+        a.0.extend(b.0);
+        (a.0, a.1 + b.1)
+    }
+
+    // allocation-free hot path (see TriangleCount::gather_fold)
+    fn gather_fold(
+        &self,
+        acc: &mut (Vec<u32>, f64),
+        step: usize,
+        _v: VertexId,
+        v_val: &NbValue,
+        u: VertexId,
+        u_val: &NbValue,
+        _rank: u32,
+        _g: &crate::engine::gas::GraphInfo,
+    ) {
+        if step == 0 {
+            acc.0.push(u);
+        } else {
+            acc.1 += intersect_count(&v_val.0, &u_val.0) as f64;
+        }
+    }
+
+    fn apply(
+        &self,
+        step: usize,
+        v: VertexId,
+        _old: &NbValue,
+        acc: (Vec<u32>, f64),
+        _g: &GraphInfo,
+    ) -> NbValue {
+        if step == 0 {
+            let mut nb = acc.0;
+            nb.retain(|&u| u != v);
+            nb.sort_unstable();
+            nb.dedup();
+            (nb, 0.0)
+        } else {
+            let k = _old.0.len() as f64;
+            let cc = if k >= 2.0 { acc.1 / (k * (k - 1.0)) } else { 0.0 };
+            (Vec::new(), cc)
+        }
+    }
+
+    fn gather_cost_per_byte(&self) -> f64 {
+        0.25
+    }
+}
+
+/// Sequential oracle for the local clustering coefficient.
+pub fn clustering_oracle(g: &crate::graph::Graph) -> Vec<f64> {
+    let n = g.num_vertices();
+    let nbs: Vec<Vec<u32>> = (0..n as u32)
+        .map(|v| {
+            let mut nb = g.both_neighbors(v);
+            nb.retain(|&u| u != v);
+            nb
+        })
+        .collect();
+    (0..n)
+        .map(|v| {
+            let k = nbs[v].len();
+            if k < 2 {
+                return 0.0;
+            }
+            let mut links = 0usize;
+            for (i, &a) in nbs[v].iter().enumerate() {
+                for &b in &nbs[v][i + 1..] {
+                    if nbs[a as usize].binary_search(&b).is_ok() {
+                        links += 1;
+                    }
+                }
+            }
+            2.0 * links as f64 / (k * (k - 1)) as f64
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::cost::ClusterConfig;
+    use crate::partition::Strategy;
+
+    #[test]
+    fn triangle_has_cc_one() {
+        let g = crate::graph::Graph::from_edges("tri", 3, vec![(0, 1), (1, 2), (0, 2)], false);
+        let p = Strategy::Random.partition(&g, 2);
+        let r =
+            crate::engine::run(&g, &p, &ClusteringCoefficient, &ClusterConfig::with_workers(2));
+        for v in g.vertices() {
+            assert!((r.values[v as usize].1 - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn path_has_cc_zero() {
+        let g = crate::graph::Graph::from_edges("path", 3, vec![(0, 1), (1, 2)], false);
+        let p = Strategy::Random.partition(&g, 2);
+        let r =
+            crate::engine::run(&g, &p, &ClusteringCoefficient, &ClusterConfig::with_workers(2));
+        assert!(r.values.iter().all(|v| v.1 == 0.0));
+    }
+
+    #[test]
+    fn matches_oracle() {
+        let mut rng = crate::util::rng::Rng::new(350);
+        let g = crate::graph::gen::smallworld::generate("t", 120, 720, 0.1, &mut rng);
+        let p = Strategy::Ginger.partition(&g, 4);
+        let r =
+            crate::engine::run(&g, &p, &ClusteringCoefficient, &ClusterConfig::with_workers(4));
+        let oracle = clustering_oracle(&g);
+        for v in g.vertices() {
+            assert!(
+                (r.values[v as usize].1 - oracle[v as usize]).abs() < 1e-12,
+                "v={v}: {} vs {}",
+                r.values[v as usize].1,
+                oracle[v as usize]
+            );
+        }
+    }
+}

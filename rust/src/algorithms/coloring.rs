@@ -1,0 +1,197 @@
+//! GC — greedy graph coloring (§5.3.3, after Kosowski & Kuszner [23]).
+//!
+//! Distributed Jones–Plassmann-style greedy: in each round every
+//! *uncolored* vertex gathers its neighbours' colors and priorities; a
+//! vertex whose random priority is the local maximum among uncolored
+//! neighbours colors itself with the smallest color absent from its
+//! neighbourhood, then wakes its uncolored neighbours. Priorities are
+//! hashes of the vertex id, so chains (grids, paths) still converge in
+//! O(log n) expected rounds.
+
+use crate::engine::gas::{EdgeDirection, GraphInfo, InitialActive, VertexProgram};
+use crate::graph::VertexId;
+use crate::util::rng::hash_u64;
+
+/// Vertex color; -1 while uncolored.
+pub type Color = i64;
+
+/// Unique random priority for vertex `v` (hash high bits + id low bits
+/// so ties are impossible).
+fn priority(v: VertexId) -> f64 {
+    (((hash_u64(v as u64) >> 40) << 26) | v as u64) as f64
+}
+
+/// GC vertex program.
+pub struct GreedyColoring;
+
+impl VertexProgram for GreedyColoring {
+    /// Current color (-1 = uncolored).
+    type Value = i64;
+    /// (neighbour colors in use, max priority among uncolored
+    /// neighbours).
+    type Gather = (Vec<u32>, f64);
+
+    fn name(&self) -> &'static str {
+        "GC"
+    }
+
+    fn init(&self, _v: VertexId, _g: &GraphInfo) -> i64 {
+        -1
+    }
+
+    fn initial_active(&self, _g: &GraphInfo) -> InitialActive {
+        InitialActive::All
+    }
+
+    fn gather_edges(&self, _step: usize) -> EdgeDirection {
+        EdgeDirection::Both
+    }
+
+    fn gather_init(&self) -> (Vec<u32>, f64) {
+        (Vec::new(), -1.0)
+    }
+
+    fn gather(
+        &self,
+        _s: usize,
+        _v: VertexId,
+        _vv: &i64,
+        u: VertexId,
+        u_val: &i64,
+        _r: u32,
+        _g: &GraphInfo,
+    ) -> (Vec<u32>, f64) {
+        if *u_val >= 0 {
+            (vec![*u_val as u32], -1.0)
+        } else {
+            (Vec::new(), priority(u))
+        }
+    }
+
+    fn sum(&self, mut a: (Vec<u32>, f64), b: (Vec<u32>, f64)) -> (Vec<u32>, f64) {
+        a.0.extend(b.0);
+        (a.0, a.1.max(b.1))
+    }
+
+    // allocation-free hot path: push the color / fold the priority
+    fn gather_fold(
+        &self,
+        acc: &mut (Vec<u32>, f64),
+        _step: usize,
+        _v: VertexId,
+        _v_val: &i64,
+        u: VertexId,
+        u_val: &i64,
+        _rank: u32,
+        _g: &GraphInfo,
+    ) {
+        if *u_val >= 0 {
+            acc.0.push(*u_val as u32);
+        } else {
+            acc.1 = acc.1.max(priority(u));
+        }
+    }
+
+    fn apply(&self, _s: usize, v: VertexId, old: &i64, acc: (Vec<u32>, f64), _g: &GraphInfo) -> i64 {
+        if *old >= 0 {
+            return *old; // already colored
+        }
+        if priority(v) > acc.1 {
+            // local max among uncolored neighbours → take the mex
+            let mut used = acc.0;
+            used.sort_unstable();
+            used.dedup();
+            let mut c = 0u32;
+            for &x in &used {
+                if x == c {
+                    c += 1;
+                } else if x > c {
+                    break;
+                }
+            }
+            c as i64
+        } else {
+            -1
+        }
+    }
+
+    // No scatter phase: an uncolored vertex keeps itself active (below)
+    // and re-reads its neighbourhood on the next gather; colored
+    // vertices go quiescent, so the run terminates exactly when the
+    // last vertex colors itself.
+    fn reactivate_self(&self, _s: usize, _v: VertexId, new_val: &i64, _g: &GraphInfo) -> bool {
+        *new_val < 0
+    }
+
+    fn max_supersteps(&self) -> usize {
+        200
+    }
+}
+
+/// Check that `colors` is a proper coloring of `g` (no monochrome edge,
+/// every vertex colored).
+pub fn is_proper_coloring(g: &crate::graph::Graph, colors: &[i64]) -> bool {
+    colors.iter().all(|&c| c >= 0)
+        && g.edges().iter().all(|&(u, v)| u == v || colors[u as usize] != colors[v as usize])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::cost::ClusterConfig;
+    use crate::partition::Strategy;
+
+    #[test]
+    fn proper_coloring_on_random_graph() {
+        let mut rng = crate::util::rng::Rng::new(330);
+        let g = crate::graph::gen::erdos::generate("t", 300, 1500, false, &mut rng);
+        let p = Strategy::CanonicalRandom.partition(&g, 8);
+        let r = crate::engine::run(&g, &p, &GreedyColoring, &ClusterConfig::with_workers(8));
+        assert!(is_proper_coloring(&g, &r.values));
+    }
+
+    #[test]
+    fn proper_coloring_on_grid() {
+        // grids are the adversarial case for id-priority greedy; hashed
+        // priorities keep rounds low
+        let mut rng = crate::util::rng::Rng::new(331);
+        let g = crate::graph::gen::grid::generate("road", 900, 1600, &mut rng);
+        let p = Strategy::TwoD.partition(&g, 4);
+        let r = crate::engine::run(&g, &p, &GreedyColoring, &ClusterConfig::with_workers(4));
+        assert!(is_proper_coloring(&g, &r.values));
+        assert!(r.ops.supersteps < 100, "{} rounds", r.ops.supersteps);
+        // planar-ish grid with shortcuts: should not need many colors
+        let max_color = r.values.iter().copied().max().unwrap();
+        assert!(max_color <= 12, "used {} colors", max_color + 1);
+    }
+
+    #[test]
+    fn colors_partition_invariant() {
+        let mut rng = crate::util::rng::Rng::new(332);
+        let g = crate::graph::gen::smallworld::generate("t", 200, 1000, 0.1, &mut rng);
+        let a = crate::engine::run(
+            &g,
+            &Strategy::Random.partition(&g, 4),
+            &GreedyColoring,
+            &ClusterConfig::with_workers(4),
+        );
+        let b = crate::engine::run(
+            &g,
+            &Strategy::Ginger.partition(&g, 8),
+            &GreedyColoring,
+            &ClusterConfig::with_workers(8),
+        );
+        assert_eq!(a.values, b.values);
+    }
+
+    #[test]
+    fn triangle_needs_three_colors() {
+        let g = crate::graph::Graph::from_edges("tri", 3, vec![(0, 1), (1, 2), (0, 2)], false);
+        let p = Strategy::Random.partition(&g, 2);
+        let r = crate::engine::run(&g, &p, &GreedyColoring, &ClusterConfig::with_workers(2));
+        assert!(is_proper_coloring(&g, &r.values));
+        let mut cs = r.values.clone();
+        cs.sort_unstable();
+        assert_eq!(cs, vec![0, 1, 2]);
+    }
+}

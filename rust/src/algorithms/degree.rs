@@ -1,0 +1,139 @@
+//! AID / AOD — all-vertices in/out-degree (§5.3.1).
+//!
+//! One superstep: every replica counts its local incident edges in the
+//! relevant direction, partials are aggregated at the master (the
+//! "master-worker calculates the final result by aggregating the local
+//! results" step is the engine's final collect).
+
+use crate::engine::gas::{EdgeDirection, GraphInfo, VertexProgram};
+use crate::graph::VertexId;
+
+/// AID — in-degree of every vertex.
+pub struct InDegree;
+
+impl VertexProgram for InDegree {
+    type Value = f64;
+    type Gather = f64;
+
+    fn name(&self) -> &'static str {
+        "AID"
+    }
+
+    fn init(&self, _v: VertexId, _g: &GraphInfo) -> f64 {
+        0.0
+    }
+
+    fn fixed_rounds(&self) -> Option<usize> {
+        Some(1)
+    }
+
+    fn gather_edges(&self, _step: usize) -> EdgeDirection {
+        EdgeDirection::In
+    }
+
+    fn gather_init(&self) -> f64 {
+        0.0
+    }
+
+    fn gather(
+        &self,
+        _s: usize,
+        _v: VertexId,
+        _vv: &f64,
+        _u: VertexId,
+        _uv: &f64,
+        _r: u32,
+        _g: &GraphInfo,
+    ) -> f64 {
+        1.0
+    }
+
+    fn sum(&self, a: f64, b: f64) -> f64 {
+        a + b
+    }
+
+    fn apply(&self, _s: usize, _v: VertexId, _old: &f64, acc: f64, _g: &GraphInfo) -> f64 {
+        acc
+    }
+}
+
+/// AOD — out-degree of every vertex.
+pub struct OutDegree;
+
+impl VertexProgram for OutDegree {
+    type Value = f64;
+    type Gather = f64;
+
+    fn name(&self) -> &'static str {
+        "AOD"
+    }
+
+    fn init(&self, _v: VertexId, _g: &GraphInfo) -> f64 {
+        0.0
+    }
+
+    fn fixed_rounds(&self) -> Option<usize> {
+        Some(1)
+    }
+
+    fn gather_edges(&self, _step: usize) -> EdgeDirection {
+        EdgeDirection::Out
+    }
+
+    fn gather_init(&self) -> f64 {
+        0.0
+    }
+
+    fn gather(
+        &self,
+        _s: usize,
+        _v: VertexId,
+        _vv: &f64,
+        _u: VertexId,
+        _uv: &f64,
+        _r: u32,
+        _g: &GraphInfo,
+    ) -> f64 {
+        1.0
+    }
+
+    fn sum(&self, a: f64, b: f64) -> f64 {
+        a + b
+    }
+
+    fn apply(&self, _s: usize, _v: VertexId, _old: &f64, acc: f64, _g: &GraphInfo) -> f64 {
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::cost::ClusterConfig;
+    use crate::partition::Strategy;
+
+    #[test]
+    fn degrees_match_graph() {
+        let mut rng = crate::util::rng::Rng::new(310);
+        let g = crate::graph::gen::erdos::generate("t", 150, 700, true, &mut rng);
+        let p = Strategy::Hybrid.partition(&g, 8);
+        let cfg = ClusterConfig::with_workers(8);
+        let rin = crate::engine::run(&g, &p, &InDegree, &cfg);
+        let rout = crate::engine::run(&g, &p, &OutDegree, &cfg);
+        for v in g.vertices() {
+            assert_eq!(rin.values[v as usize], g.in_degree(v) as f64);
+            assert_eq!(rout.values[v as usize], g.out_degree(v) as f64);
+        }
+    }
+
+    #[test]
+    fn undirected_in_equals_out() {
+        let mut rng = crate::util::rng::Rng::new(311);
+        let g = crate::graph::gen::erdos::generate("t", 100, 300, false, &mut rng);
+        let p = Strategy::Random.partition(&g, 4);
+        let cfg = ClusterConfig::with_workers(4);
+        let rin = crate::engine::run(&g, &p, &InDegree, &cfg);
+        let rout = crate::engine::run(&g, &p, &OutDegree, &cfg);
+        assert_eq!(rin.values, rout.values);
+    }
+}

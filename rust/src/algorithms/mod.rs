@@ -1,0 +1,182 @@
+//! The paper's algorithm suite (§5.3) as GAS vertex programs, plus the
+//! pseudo-code sources consumed by the static analyzer (§4.1.2).
+//!
+//! | Alias | Algorithm | Module | Role |
+//! |-------|-----------|--------|------|
+//! | AID   | All-vertices in-degree  | [`degree`]     | training |
+//! | AOD   | All-vertices out-degree | [`degree`]     | training |
+//! | PR    | PageRank (10 iter)      | [`pagerank`]   | training |
+//! | GC    | Greedy graph coloring   | [`coloring`]   | training |
+//! | APCN  | All-pair common neighbours | [`apcn`]    | training |
+//! | TC    | Triangle count          | [`triangle`]   | training |
+//! | CC    | Local clustering coeff. | [`clustering`] | eval-only |
+//! | RW    | Random walk (10 steps)  | [`randomwalk`] | eval-only |
+
+pub mod apcn;
+pub mod clustering;
+pub mod coloring;
+pub mod degree;
+pub mod pagerank;
+pub mod randomwalk;
+pub mod triangle;
+
+use crate::engine::cost::{ClusterConfig, OpCounts, SimTime};
+use crate::engine::gas::VertexProgram;
+use crate::graph::Graph;
+use crate::partition::Partitioning;
+
+/// The algorithm inventory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Algorithm {
+    Aid,
+    Aod,
+    Pr,
+    Gc,
+    Apcn,
+    Tc,
+    Cc,
+    Rw,
+}
+
+/// Simulation outcome independent of the program's value type.
+#[derive(Clone, Copy, Debug)]
+pub struct SimOutcome {
+    /// Simulated execution time (the log label).
+    pub sim: SimTime,
+    /// Operation counters.
+    pub ops: OpCounts,
+    /// Order-independent checksum over final vertex values, for
+    /// cross-partitioning result-identity tests.
+    pub checksum: f64,
+}
+
+impl Algorithm {
+    /// All eight algorithms, in the paper's §5.3 order.
+    pub fn all() -> Vec<Algorithm> {
+        use Algorithm::*;
+        vec![Aid, Aod, Pr, Gc, Apcn, Tc, Cc, Rw]
+    }
+
+    /// The six algorithms used to build the augmented training set.
+    pub fn training() -> Vec<Algorithm> {
+        use Algorithm::*;
+        vec![Aid, Aod, Pr, Gc, Apcn, Tc]
+    }
+
+    /// The two evaluation-only algorithms (§5.3: CC and RW "were used
+    /// only in model evaluation").
+    pub fn heldout() -> Vec<Algorithm> {
+        vec![Algorithm::Cc, Algorithm::Rw]
+    }
+
+    /// Paper alias.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Aid => "AID",
+            Algorithm::Aod => "AOD",
+            Algorithm::Pr => "PR",
+            Algorithm::Gc => "GC",
+            Algorithm::Apcn => "APCN",
+            Algorithm::Tc => "TC",
+            Algorithm::Cc => "CC",
+            Algorithm::Rw => "RW",
+        }
+    }
+
+    /// Parse from the paper alias.
+    pub fn by_name(name: &str) -> Option<Algorithm> {
+        Self::all().into_iter().find(|a| a.name().eq_ignore_ascii_case(name))
+    }
+
+    /// The pseudo-code source analysed by `analyzer` (§4.1.2).
+    pub fn pseudo_code(&self) -> &'static str {
+        match self {
+            Algorithm::Aid => include_str!("../../../pseudo/aid.gps"),
+            Algorithm::Aod => include_str!("../../../pseudo/aod.gps"),
+            Algorithm::Pr => include_str!("../../../pseudo/pr.gps"),
+            Algorithm::Gc => include_str!("../../../pseudo/gc.gps"),
+            Algorithm::Apcn => include_str!("../../../pseudo/apcn.gps"),
+            Algorithm::Tc => include_str!("../../../pseudo/tc.gps"),
+            Algorithm::Cc => include_str!("../../../pseudo/cc.gps"),
+            Algorithm::Rw => include_str!("../../../pseudo/rw.gps"),
+        }
+    }
+
+    /// Execute on the engine and return the simulation outcome.
+    pub fn simulate(&self, g: &Graph, p: &Partitioning, cfg: &ClusterConfig) -> SimOutcome {
+        fn go<P: VertexProgram>(
+            prog: &P,
+            g: &Graph,
+            p: &Partitioning,
+            cfg: &ClusterConfig,
+            sum: impl Fn(&[P::Value]) -> f64,
+        ) -> SimOutcome {
+            let r = crate::engine::run(g, p, prog, cfg);
+            SimOutcome { sim: r.sim, ops: r.ops, checksum: sum(&r.values) }
+        }
+        match self {
+            Algorithm::Aid => go(&degree::InDegree, g, p, cfg, |v| v.iter().sum()),
+            Algorithm::Aod => go(&degree::OutDegree, g, p, cfg, |v| v.iter().sum()),
+            Algorithm::Pr => go(&pagerank::PageRank::default(), g, p, cfg, |v| v.iter().sum()),
+            Algorithm::Gc => go(&coloring::GreedyColoring, g, p, cfg, |v| {
+                v.iter().map(|&c| c as f64).sum()
+            }),
+            Algorithm::Apcn => go(&apcn::Apcn, g, p, cfg, |v| v.iter().map(|x| x.1).sum()),
+            Algorithm::Tc => go(&triangle::TriangleCount, g, p, cfg, |v| {
+                v.iter().map(|x| x.1).sum()
+            }),
+            Algorithm::Cc => go(&clustering::ClusteringCoefficient, g, p, cfg, |v| {
+                v.iter().map(|x| x.1).sum()
+            }),
+            Algorithm::Rw => go(&randomwalk::RandomWalk::default(), g, p, cfg, |v| {
+                v.iter().sum()
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::Strategy;
+
+    #[test]
+    fn inventory_and_splits() {
+        assert_eq!(Algorithm::all().len(), 8);
+        assert_eq!(Algorithm::training().len(), 6);
+        assert_eq!(Algorithm::heldout(), vec![Algorithm::Cc, Algorithm::Rw]);
+        assert_eq!(Algorithm::by_name("pr"), Some(Algorithm::Pr));
+        assert_eq!(Algorithm::by_name("APCN"), Some(Algorithm::Apcn));
+        assert_eq!(Algorithm::by_name("zzz"), None);
+    }
+
+    #[test]
+    fn pseudo_code_nonempty() {
+        for a in Algorithm::all() {
+            assert!(!a.pseudo_code().trim().is_empty(), "{}", a.name());
+        }
+    }
+
+    /// The core engine guarantee: results are partition-invariant while
+    /// simulated times are not.
+    #[test]
+    fn checksums_partition_invariant() {
+        let mut rng = crate::util::rng::Rng::new(300);
+        let g = crate::graph::gen::chung_lu::generate("t", 200, 1200, 2.2, true, &mut rng);
+        let cfg = ClusterConfig::with_workers(4);
+        for a in Algorithm::all() {
+            let refsum = a.simulate(&g, &Strategy::Random.partition(&g, 4), &cfg).checksum;
+            for s in [Strategy::Hybrid, Strategy::Hdrf(50), Strategy::TwoD] {
+                let got = a.simulate(&g, &s.partition(&g, 4), &cfg).checksum;
+                assert!(
+                    (got - refsum).abs() <= 1e-9 * (1.0 + refsum.abs()),
+                    "{} under {}: {} vs {}",
+                    a.name(),
+                    s.name(),
+                    got,
+                    refsum
+                );
+            }
+        }
+    }
+}

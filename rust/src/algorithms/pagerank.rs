@@ -1,0 +1,142 @@
+//! PR — PageRank (§5.3.2, Eq. 17; Listing 1 of the paper).
+//!
+//! Pull-style: each vertex gathers `PR(u) / |N_out(u)|` over in-edges,
+//! applies `PR(v) = (1−d)/|V| + d·Σ` (the normalised form of Listing 1)
+//! for a fixed 10 iterations (the paper's §5.3.2 setting).
+
+use crate::engine::gas::{EdgeDirection, GraphInfo, VertexProgram};
+use crate::graph::VertexId;
+
+/// PageRank with damping `d` and a fixed iteration count.
+pub struct PageRank {
+    pub damping: f64,
+    pub iterations: usize,
+}
+
+impl Default for PageRank {
+    fn default() -> Self {
+        PageRank { damping: 0.85, iterations: 10 }
+    }
+}
+
+impl VertexProgram for PageRank {
+    type Value = f64;
+    type Gather = f64;
+
+    fn name(&self) -> &'static str {
+        "PR"
+    }
+
+    fn init(&self, _v: VertexId, g: &GraphInfo) -> f64 {
+        1.0 / g.num_vertices as f64
+    }
+
+    fn fixed_rounds(&self) -> Option<usize> {
+        Some(self.iterations)
+    }
+
+    fn gather_edges(&self, _step: usize) -> EdgeDirection {
+        EdgeDirection::In
+    }
+
+    fn gather_init(&self) -> f64 {
+        0.0
+    }
+
+    fn gather(
+        &self,
+        _s: usize,
+        _v: VertexId,
+        _vv: &f64,
+        u: VertexId,
+        u_val: &f64,
+        _r: u32,
+        g: &GraphInfo,
+    ) -> f64 {
+        let odeg = g.out_degree[u as usize].max(1) as f64;
+        u_val / odeg
+    }
+
+    fn sum(&self, a: f64, b: f64) -> f64 {
+        a + b
+    }
+
+    fn apply(&self, _s: usize, _v: VertexId, _old: &f64, acc: f64, g: &GraphInfo) -> f64 {
+        (1.0 - self.damping) / g.num_vertices as f64 + self.damping * acc
+    }
+}
+
+/// Sequential oracle implementing the same update — used by tests to
+/// pin the engine's semantics.
+pub fn pagerank_oracle(g: &crate::graph::Graph, damping: f64, iterations: usize) -> Vec<f64> {
+    let n = g.num_vertices();
+    let mut rank = vec![1.0 / n as f64; n];
+    for _ in 0..iterations {
+        let mut next = vec![(1.0 - damping) / n as f64; n];
+        for v in g.vertices() {
+            let mut acc = 0.0;
+            for &u in g.in_neighbors(v) {
+                acc += rank[u as usize] / (g.out_degree(u).max(1)) as f64;
+            }
+            next[v as usize] += damping * acc;
+        }
+        rank = next;
+    }
+    rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::cost::ClusterConfig;
+    use crate::partition::Strategy;
+
+    #[test]
+    fn matches_oracle_directed() {
+        let mut rng = crate::util::rng::Rng::new(320);
+        let g = crate::graph::gen::chung_lu::generate("t", 250, 1500, 2.2, true, &mut rng);
+        let p = Strategy::Hdrf(20).partition(&g, 8);
+        let r = crate::engine::run(&g, &p, &PageRank::default(), &ClusterConfig::with_workers(8));
+        let oracle = pagerank_oracle(&g, 0.85, 10);
+        for v in g.vertices() {
+            assert!(
+                (r.values[v as usize] - oracle[v as usize]).abs() < 1e-12,
+                "v={v}: {} vs {}",
+                r.values[v as usize],
+                oracle[v as usize]
+            );
+        }
+    }
+
+    #[test]
+    fn matches_oracle_undirected() {
+        let mut rng = crate::util::rng::Rng::new(321);
+        let g = crate::graph::gen::smallworld::generate("t", 200, 800, 0.1, &mut rng);
+        let p = Strategy::Ginger.partition(&g, 4);
+        let r = crate::engine::run(&g, &p, &PageRank::default(), &ClusterConfig::with_workers(4));
+        let oracle = pagerank_oracle(&g, 0.85, 10);
+        for v in g.vertices() {
+            assert!((r.values[v as usize] - oracle[v as usize]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn runs_exactly_ten_supersteps() {
+        let mut rng = crate::util::rng::Rng::new(322);
+        let g = crate::graph::gen::erdos::generate("t", 100, 400, true, &mut rng);
+        let p = Strategy::Random.partition(&g, 4);
+        let r = crate::engine::run(&g, &p, &PageRank::default(), &ClusterConfig::with_workers(4));
+        assert_eq!(r.ops.supersteps, 10);
+    }
+
+    #[test]
+    fn ranks_sum_near_one_on_sinkless_graph() {
+        // a cycle has no sinks; ranks stay a probability distribution
+        let edges: Vec<(u32, u32)> = (0..100u32).map(|i| (i, (i + 1) % 100)).collect();
+        let g = crate::graph::Graph::from_edges("cycle", 100, edges, true);
+        let p = Strategy::OneDSrc.partition(&g, 4);
+        let r = crate::engine::run(&g, &p, &PageRank::default(), &ClusterConfig::with_workers(4));
+        let total: f64 = r.values.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "total {total}");
+    }
+}

@@ -1,0 +1,220 @@
+//! RW — random walk sampling (§5.3.7).
+//!
+//! Walkers start at the source vertices and take 10 steps along
+//! out-edges; the visited sequences form the samples used by graph
+//! learning. Routing is *deterministic pseudo-random*: walker `k`
+//! residing at `u` at step `t` moves to the out-neighbour with rank
+//! `hash(u, t, k) mod outdeg(u)` — the same trajectory on every run and
+//! under every partitioning, so results stay partition-invariant while
+//! the activation frontier (and hence cost) tracks the walk.
+//!
+//! In GAS pull form: an active vertex gathers the walkers arriving from
+//! its in-neighbours (the engine supplies the edge's rank in `u`'s
+//! out-list); apply replaces the walker count with the arrivals;
+//! scatter wakes the out-neighbours of walker-holding vertices, and the
+//! vertex keeps itself awake once more to clear its count.
+
+use crate::engine::gas::{EdgeDirection, GraphInfo, InitialActive, VertexProgram};
+use crate::graph::VertexId;
+use crate::util::rng::fnv1a64;
+
+/// RW program: `stride` selects every stride-th vertex as a source
+/// (the paper starts a sample at every vertex; the default matches
+/// that), `steps` is the walk length.
+pub struct RandomWalk {
+    pub stride: u32,
+    pub steps: usize,
+    pub seed: u64,
+}
+
+impl Default for RandomWalk {
+    fn default() -> Self {
+        // Every 64th vertex sources a walker: keeps RW in the cheap tier
+        // of the paper's Table 7 (its benefits are AID/AOD-sized, far
+        // below PR) while still exercising multi-hop routing.
+        RandomWalk { stride: 64, steps: 10, seed: 0x5eed }
+    }
+}
+
+impl RandomWalk {
+    /// Walker `k` at vertex `u` in step `t` picks this out-edge rank.
+    fn choice(&self, u: VertexId, t: usize, k: u64, outdeg: u32) -> u32 {
+        let mut buf = [0u8; 24];
+        buf[..8].copy_from_slice(&(u as u64 ^ self.seed).to_le_bytes());
+        buf[8..16].copy_from_slice(&(t as u64).to_le_bytes());
+        buf[16..].copy_from_slice(&k.to_le_bytes());
+        (fnv1a64(&buf) % outdeg.max(1) as u64) as u32
+    }
+
+    fn is_source(&self, v: VertexId) -> bool {
+        v % self.stride == 0
+    }
+}
+
+impl VertexProgram for RandomWalk {
+    /// Walkers currently residing at the vertex.
+    type Value = f64;
+    /// Walkers arriving.
+    type Gather = f64;
+
+    fn name(&self) -> &'static str {
+        "RW"
+    }
+
+    fn init(&self, v: VertexId, _g: &GraphInfo) -> f64 {
+        if self.is_source(v) {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    fn initial_active(&self, _g: &GraphInfo) -> InitialActive {
+        // step 0 must reach every potential receiver of a source's
+        // walker, so the first superstep sweeps all vertices; scatter
+        // narrows the frontier to the walk from step 1 on.
+        InitialActive::All
+    }
+
+    fn gather_edges(&self, _step: usize) -> EdgeDirection {
+        EdgeDirection::In
+    }
+
+    fn gather_init(&self) -> f64 {
+        0.0
+    }
+
+    fn gather(
+        &self,
+        step: usize,
+        _v: VertexId,
+        _v_val: &f64,
+        u: VertexId,
+        u_val: &f64,
+        rank: u32,
+        g: &GraphInfo,
+    ) -> f64 {
+        let outdeg = if g.directed { g.out_degree[u as usize] } else { g.out_degree[u as usize] };
+        if outdeg == 0 {
+            return 0.0;
+        }
+        let mut arrivals = 0.0;
+        for k in 0..*u_val as u64 {
+            if self.choice(u, step, k, outdeg) == rank {
+                arrivals += 1.0;
+            }
+        }
+        arrivals
+    }
+
+    fn sum(&self, a: f64, b: f64) -> f64 {
+        a + b
+    }
+
+    fn apply(&self, _step: usize, _v: VertexId, _old: &f64, acc: f64, _g: &GraphInfo) -> f64 {
+        acc // walkers that departed are gone; arrivals replace them
+    }
+
+    fn scatter_edges(&self, _step: usize) -> EdgeDirection {
+        EdgeDirection::Out
+    }
+
+    fn scatter(&self, _step: usize, _v: VertexId, new_val: &f64, _u: VertexId, _g: &GraphInfo) -> bool {
+        *new_val > 0.0 // wake potential receivers
+    }
+
+    fn reactivate_self(&self, _step: usize, _v: VertexId, new_val: &f64, _g: &GraphInfo) -> bool {
+        *new_val > 0.0 // must clear own count next step
+    }
+
+    fn max_supersteps(&self) -> usize {
+        self.steps
+    }
+
+    fn needs_edge_rank(&self) -> bool {
+        true
+    }
+
+    /// The scatter phase only tests a counter — far cheaper than an
+    /// arithmetic gather update.
+    fn scatter_op_cost(&self) -> f64 {
+        0.2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::cost::ClusterConfig;
+    use crate::partition::Strategy;
+
+    /// Cycle: every vertex has out-degree 1, so walkers are conserved.
+    #[test]
+    fn walkers_conserved_on_cycle() {
+        let n = 64u32;
+        let edges: Vec<(u32, u32)> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        let g = crate::graph::Graph::from_edges("cycle", n as usize, edges, true);
+        let rw = RandomWalk::default();
+        let sources = (0..n).filter(|v| v % rw.stride == 0).count() as f64;
+        let p = Strategy::Random.partition(&g, 4);
+        let r = crate::engine::run(&g, &p, &rw, &ClusterConfig::with_workers(4));
+        let total: f64 = r.values.iter().sum();
+        assert_eq!(total, sources, "walkers conserved");
+        // on a cycle each walker moved exactly `steps` positions
+        for v in 0..n {
+            let expect = if (v + n - rw.steps as u32 % n) % n % rw.stride == 0 { 1.0 } else { 0.0 };
+            assert_eq!(r.values[v as usize], expect, "v={v}");
+        }
+    }
+
+    #[test]
+    fn partition_invariant_trajectories() {
+        let mut rng = crate::util::rng::Rng::new(370);
+        let g = crate::graph::gen::chung_lu::generate("t", 300, 2400, 2.2, true, &mut rng);
+        let rw = RandomWalk::default();
+        let a = crate::engine::run(
+            &g,
+            &Strategy::Random.partition(&g, 4),
+            &rw,
+            &ClusterConfig::with_workers(4),
+        );
+        let b = crate::engine::run(
+            &g,
+            &Strategy::Hybrid.partition(&g, 8),
+            &rw,
+            &ClusterConfig::with_workers(8),
+        );
+        assert_eq!(a.values, b.values);
+    }
+
+    #[test]
+    fn walkers_die_at_sinks() {
+        // path 0→1→2 (sink): single source at 0 must vanish
+        let g = crate::graph::Graph::from_edges("path", 3, vec![(0, 1), (1, 2)], true);
+        let rw = RandomWalk { stride: 3, steps: 10, seed: 1 };
+        let p = Strategy::Random.partition(&g, 2);
+        let r = crate::engine::run(&g, &p, &rw, &ClusterConfig::with_workers(2));
+        assert_eq!(r.values.iter().sum::<f64>(), 0.0);
+    }
+
+    #[test]
+    fn cheaper_than_pagerank() {
+        // sparse frontier → far cheaper than all-active PR (Table 7
+        // tier). Needs a graph large enough that per-round latency does
+        // not dominate (as in the paper's real workloads).
+        let mut rng = crate::util::rng::Rng::new(371);
+        let g = crate::graph::gen::chung_lu::generate("t", 20_000, 160_000, 2.2, true, &mut rng);
+        let cfg = ClusterConfig::with_workers(8);
+        let p = Strategy::Random.partition(&g, 8);
+        let t_rw = crate::engine::run(&g, &p, &RandomWalk::default(), &cfg).sim.total;
+        let t_pr = crate::engine::run(
+            &g,
+            &p,
+            &super::super::pagerank::PageRank::default(),
+            &cfg,
+        )
+        .sim
+        .total;
+        assert!(t_rw < t_pr, "RW {t_rw} < PR {t_pr}");
+    }
+}

@@ -1,0 +1,219 @@
+//! TC — triangle counting (§5.3.5).
+//!
+//! Two GAS phases ("regardless of the edge direction", so both work on
+//! the undirected view):
+//!
+//! 1. every vertex gathers its neighbour ids → value = sorted
+//!    deduplicated neighbour list (the *broadcast of these lists to all
+//!    mirrors is the replication-sensitive traffic* that separates
+//!    partitioning strategies on this algorithm);
+//! 2. every vertex gathers `|N(v) ∩ N(u)|` over its edges; each
+//!    triangle at `v` is seen through two of its edges, so
+//!    `triangles(v) = acc / 2` and `Σ_v triangles(v) = 3·|triangles|`.
+
+use crate::engine::gas::{EdgeDirection, GraphInfo, VertexProgram};
+use crate::graph::VertexId;
+
+/// Vertex state: (sorted neighbour list from phase 0, per-vertex
+/// triangle count after phase 1).
+pub type NbValue = (Vec<u32>, f64);
+
+/// Count of elements common to two sorted ascending slices.
+pub fn intersect_count(a: &[u32], b: &[u32]) -> usize {
+    let (mut i, mut j, mut c) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                c += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    c
+}
+
+/// TC vertex program.
+pub struct TriangleCount;
+
+impl VertexProgram for TriangleCount {
+    type Value = NbValue;
+    type Gather = (Vec<u32>, f64);
+
+    fn name(&self) -> &'static str {
+        "TC"
+    }
+
+    fn init(&self, _v: VertexId, _g: &GraphInfo) -> NbValue {
+        (Vec::new(), 0.0)
+    }
+
+    fn fixed_rounds(&self) -> Option<usize> {
+        Some(2)
+    }
+
+    fn gather_edges(&self, _step: usize) -> EdgeDirection {
+        EdgeDirection::Both
+    }
+
+    fn gather_init(&self) -> (Vec<u32>, f64) {
+        (Vec::new(), 0.0)
+    }
+
+    fn gather(
+        &self,
+        step: usize,
+        _v: VertexId,
+        v_val: &NbValue,
+        u: VertexId,
+        u_val: &NbValue,
+        _r: u32,
+        _g: &GraphInfo,
+    ) -> (Vec<u32>, f64) {
+        if step == 0 {
+            (vec![u], 0.0)
+        } else {
+            (Vec::new(), intersect_count(&v_val.0, &u_val.0) as f64)
+        }
+    }
+
+    fn sum(&self, mut a: (Vec<u32>, f64), b: (Vec<u32>, f64)) -> (Vec<u32>, f64) {
+        a.0.extend(b.0);
+        (a.0, a.1 + b.1)
+    }
+
+    // allocation-free hot path: push the neighbour id / add the count
+    // directly instead of materialising a one-element Vec per edge
+    fn gather_fold(
+        &self,
+        acc: &mut (Vec<u32>, f64),
+        step: usize,
+        _v: VertexId,
+        v_val: &NbValue,
+        u: VertexId,
+        u_val: &NbValue,
+        _rank: u32,
+        _g: &crate::engine::gas::GraphInfo,
+    ) {
+        if step == 0 {
+            acc.0.push(u);
+        } else {
+            acc.1 += intersect_count(&v_val.0, &u_val.0) as f64;
+        }
+    }
+
+    fn apply(
+        &self,
+        step: usize,
+        v: VertexId,
+        old: &NbValue,
+        acc: (Vec<u32>, f64),
+        _g: &GraphInfo,
+    ) -> NbValue {
+        if step == 0 {
+            let mut nb = acc.0;
+            nb.retain(|&u| u != v); // self-loops form no triangle
+            nb.sort_unstable();
+            nb.dedup();
+            (nb, 0.0)
+        } else {
+            // each triangle {v,a,b} contributes via both edges (v,a) and
+            // (v,b); drop the neighbour list so the final collect ships
+            // only the count
+            (Vec::new(), acc.1 / 2.0 + old.1)
+        }
+    }
+
+    /// Merge-intersection costs ~one op per list element consumed.
+    fn gather_cost_per_byte(&self) -> f64 {
+        0.25
+    }
+}
+
+/// Sequential oracle: total triangle count of the undirected view.
+pub fn triangle_oracle(g: &crate::graph::Graph) -> u64 {
+    let n = g.num_vertices();
+    let nbs: Vec<Vec<u32>> = (0..n as u32)
+        .map(|v| {
+            let mut nb = g.both_neighbors(v);
+            nb.retain(|&u| u != v);
+            nb
+        })
+        .collect();
+    let mut total = 0u64;
+    for v in 0..n {
+        for &u in &nbs[v] {
+            if (u as usize) > v {
+                total += nbs[v]
+                    .iter()
+                    .filter(|&&w| (w as usize) > u as usize)
+                    .filter(|&&w| nbs[u as usize].binary_search(&w).is_ok())
+                    .count() as u64;
+            }
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::cost::ClusterConfig;
+    use crate::partition::Strategy;
+
+    fn total_triangles(values: &[NbValue]) -> f64 {
+        values.iter().map(|v| v.1).sum::<f64>() / 3.0
+    }
+
+    #[test]
+    fn intersect_count_basic() {
+        assert_eq!(intersect_count(&[1, 3, 5], &[2, 3, 5, 9]), 2);
+        assert_eq!(intersect_count(&[], &[1]), 0);
+        assert_eq!(intersect_count(&[7], &[7]), 1);
+    }
+
+    #[test]
+    fn counts_k4() {
+        // K4 has 4 triangles
+        let edges = vec![(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)];
+        let g = crate::graph::Graph::from_edges("k4", 4, edges, false);
+        let p = Strategy::Random.partition(&g, 2);
+        let r = crate::engine::run(&g, &p, &TriangleCount, &ClusterConfig::with_workers(2));
+        assert_eq!(total_triangles(&r.values), 4.0);
+        assert_eq!(triangle_oracle(&g), 4);
+    }
+
+    #[test]
+    fn matches_oracle_on_random_graphs() {
+        for seed in [340u64, 341, 342] {
+            let mut rng = crate::util::rng::Rng::new(seed);
+            let g = crate::graph::gen::smallworld::generate("t", 150, 900, 0.2, &mut rng);
+            let p = Strategy::Hdrf(10).partition(&g, 4);
+            let r = crate::engine::run(&g, &p, &TriangleCount, &ClusterConfig::with_workers(4));
+            assert_eq!(total_triangles(&r.values), triangle_oracle(&g) as f64, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn directed_graph_uses_undirected_view() {
+        // directed 3-cycle is one undirected triangle
+        let g = crate::graph::Graph::from_edges("c3", 3, vec![(0, 1), (1, 2), (2, 0)], true);
+        let p = Strategy::OneDSrc.partition(&g, 2);
+        let r = crate::engine::run(&g, &p, &TriangleCount, &ClusterConfig::with_workers(2));
+        assert_eq!(total_triangles(&r.values), 1.0);
+    }
+
+    #[test]
+    fn replication_sensitive_comm() {
+        // TC's phase-0 list broadcast makes high-replication strategies
+        // pay: Random (high rf) must move more bytes than Hybrid.
+        let mut rng = crate::util::rng::Rng::new(343);
+        let g = crate::graph::gen::chung_lu::generate("t", 500, 5000, 2.1, true, &mut rng);
+        let cfg = ClusterConfig::with_workers(16);
+        let brand = crate::engine::run(&g, &Strategy::Random.partition(&g, 16), &TriangleCount, &cfg).ops.bytes;
+        let bhyb = crate::engine::run(&g, &Strategy::Hybrid.partition(&g, 16), &TriangleCount, &cfg).ops.bytes;
+        assert!(bhyb < brand, "hybrid {bhyb} < random {brand}");
+    }
+}

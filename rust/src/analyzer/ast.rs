@@ -1,0 +1,398 @@
+//! AST and recursive-descent parser for the pseudo-code language.
+
+use anyhow::{bail, Context, Result};
+
+use super::token::{lex, Token};
+
+/// Graph-iteration expressions allowed in `for(list x in …)`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum IterExpr {
+    AllVertices,
+    AllEdges,
+    InOf(String),
+    OutOf(String),
+    BothOf(String),
+}
+
+/// Assignment target.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LValue {
+    Var(String),
+    /// `base.field`
+    Member(String, String),
+}
+
+/// Expressions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    Num(f64),
+    Str(String),
+    Var(String),
+    /// `base.field`
+    Member(String, String),
+    /// `callee(args…)`; callee may be dotted (`Global.apply`) or a graph
+    /// operator (`GET_IN_VERTEX_TO`).
+    Call(String, Vec<Expr>),
+    /// Binary op: `+ - * / < > <= >= == !=`
+    Binary(&'static str, Box<Expr>, Box<Expr>),
+}
+
+/// Statements and declarations.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Item {
+    /// `type name (= init)?;`
+    Decl { ty: String, name: String, init: Option<Expr> },
+    /// `for(list x in ITER){…}`
+    ForList { var: String, iter: IterExpr, body: Vec<Item> },
+    /// `for(expr){…}` — repeat-count loop
+    ForCount { count: Expr, body: Vec<Item> },
+    /// `if(cond){…} (else {…})?`
+    If { cond: Expr, then: Vec<Item>, els: Option<Vec<Item>> },
+    /// `lvalue = expr;`
+    Assign { target: LValue, value: Expr },
+    /// bare expression statement
+    Expr(Expr),
+}
+
+/// Parse a full program.
+pub fn parse(src: &str) -> Result<Vec<Item>> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    let mut items = Vec::new();
+    while !p.at_end() {
+        items.push(p.item()?);
+    }
+    Ok(items)
+}
+
+struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+const TYPES: &[&str] = &["int", "float", "list", "bool"];
+
+impl Parser {
+    fn at_end(&self) -> bool {
+        self.pos >= self.toks.len()
+    }
+
+    fn peek(&self) -> Option<&Token> {
+        self.toks.get(self.pos)
+    }
+
+    fn peek2(&self) -> Option<&Token> {
+        self.toks.get(self.pos + 1)
+    }
+
+    fn next(&mut self) -> Result<Token> {
+        let t = self.toks.get(self.pos).cloned().context("unexpected end of input")?;
+        self.pos += 1;
+        Ok(t)
+    }
+
+    fn expect_punct(&mut self, c: char) -> Result<()> {
+        match self.next()? {
+            Token::Punct(p) if p == c => Ok(()),
+            other => bail!("expected {c:?}, found {other:?}"),
+        }
+    }
+
+    fn expect_ident(&mut self) -> Result<String> {
+        match self.next()? {
+            Token::Ident(s) => Ok(s),
+            other => bail!("expected identifier, found {other:?}"),
+        }
+    }
+
+    fn item(&mut self) -> Result<Item> {
+        match self.peek() {
+            Some(Token::Ident(kw)) if kw == "for" => self.for_stmt(),
+            Some(Token::Ident(kw)) if kw == "if" => self.if_stmt(),
+            Some(Token::Ident(kw)) if TYPES.contains(&kw.as_str()) => self.decl(),
+            _ => self.assign_or_expr(),
+        }
+    }
+
+    fn block(&mut self) -> Result<Vec<Item>> {
+        self.expect_punct('{')?;
+        let mut items = Vec::new();
+        while !matches!(self.peek(), Some(Token::Punct('}'))) {
+            if self.at_end() {
+                bail!("unterminated block");
+            }
+            items.push(self.item()?);
+        }
+        self.expect_punct('}')?;
+        Ok(items)
+    }
+
+    fn decl(&mut self) -> Result<Item> {
+        let ty = self.expect_ident()?;
+        let name = self.expect_ident()?;
+        let init = if matches!(self.peek(), Some(Token::Op("="))) {
+            self.next()?;
+            Some(self.expr()?)
+        } else {
+            None
+        };
+        self.expect_punct(';')?;
+        Ok(Item::Decl { ty, name, init })
+    }
+
+    fn for_stmt(&mut self) -> Result<Item> {
+        self.expect_ident()?; // for
+        self.expect_punct('(')?;
+        // `for(list x in ITER)` vs `for(expr)`
+        if matches!(self.peek(), Some(Token::Ident(k)) if k == "list")
+            && matches!(self.peek2(), Some(Token::Ident(_)))
+        {
+            self.next()?; // list
+            let var = self.expect_ident()?;
+            match self.next()? {
+                Token::Ident(k) if k == "in" => {}
+                other => bail!("expected 'in', found {other:?}"),
+            }
+            let iter = self.iter_expr()?;
+            self.expect_punct(')')?;
+            let body = self.block()?;
+            Ok(Item::ForList { var, iter, body })
+        } else {
+            let count = self.expr()?;
+            self.expect_punct(')')?;
+            let body = self.block()?;
+            Ok(Item::ForCount { count, body })
+        }
+    }
+
+    fn iter_expr(&mut self) -> Result<IterExpr> {
+        let name = self.expect_ident()?;
+        match name.as_str() {
+            "ALL_VERTEX_LIST" => Ok(IterExpr::AllVertices),
+            "ALL_EDGE_LIST" => Ok(IterExpr::AllEdges),
+            "GET_IN_VERTEX_TO" | "GET_OUT_VERTEX_FROM" | "GET_BOTH_VERTEX_OF" => {
+                self.expect_punct('(')?;
+                let arg = self.expect_ident()?;
+                self.expect_punct(')')?;
+                Ok(match name.as_str() {
+                    "GET_IN_VERTEX_TO" => IterExpr::InOf(arg),
+                    "GET_OUT_VERTEX_FROM" => IterExpr::OutOf(arg),
+                    _ => IterExpr::BothOf(arg),
+                })
+            }
+            other => bail!("unknown iteration source {other:?}"),
+        }
+    }
+
+    fn if_stmt(&mut self) -> Result<Item> {
+        self.expect_ident()?; // if
+        self.expect_punct('(')?;
+        let cond = self.expr()?;
+        self.expect_punct(')')?;
+        let then = self.block()?;
+        let els = if matches!(self.peek(), Some(Token::Ident(k)) if k == "else") {
+            self.next()?;
+            Some(self.block()?)
+        } else {
+            None
+        };
+        Ok(Item::If { cond, then, els })
+    }
+
+    fn assign_or_expr(&mut self) -> Result<Item> {
+        let e = self.expr()?;
+        if matches!(self.peek(), Some(Token::Op("="))) {
+            self.next()?;
+            let target = match e {
+                Expr::Var(name) => LValue::Var(name),
+                Expr::Member(base, field) => LValue::Member(base, field),
+                other => bail!("invalid assignment target {other:?}"),
+            };
+            let value = self.expr()?;
+            self.expect_punct(';')?;
+            Ok(Item::Assign { target, value })
+        } else {
+            self.expect_punct(';')?;
+            Ok(Item::Expr(e))
+        }
+    }
+
+    // expression precedence: comparison < additive < multiplicative < unary/primary
+    fn expr(&mut self) -> Result<Expr> {
+        let lhs = self.additive()?;
+        if let Some(Token::Op(op @ ("<" | ">" | "<=" | ">=" | "==" | "!="))) = self.peek() {
+            let op = *op;
+            self.next()?;
+            let rhs = self.additive()?;
+            return Ok(Expr::Binary(op, Box::new(lhs), Box::new(rhs)));
+        }
+        Ok(lhs)
+    }
+
+    fn additive(&mut self) -> Result<Expr> {
+        let mut lhs = self.multiplicative()?;
+        while let Some(Token::Op(op @ ("+" | "-"))) = self.peek() {
+            let op = *op;
+            self.next()?;
+            let rhs = self.multiplicative()?;
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn multiplicative(&mut self) -> Result<Expr> {
+        let mut lhs = self.primary()?;
+        while let Some(Token::Op(op @ ("*" | "/"))) = self.peek() {
+            let op = *op;
+            self.next()?;
+            let rhs = self.primary()?;
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn primary(&mut self) -> Result<Expr> {
+        match self.next()? {
+            Token::Number(x) => Ok(Expr::Num(x)),
+            Token::Str(s) => Ok(Expr::Str(s)),
+            Token::Punct('(') => {
+                let e = self.expr()?;
+                self.expect_punct(')')?;
+                Ok(e)
+            }
+            Token::Ident(name) => {
+                // dotted path: a.b(.c)?
+                let mut path = name;
+                while matches!(self.peek(), Some(Token::Punct('.'))) {
+                    self.next()?;
+                    let field = self.expect_ident()?;
+                    if matches!(self.peek(), Some(Token::Punct('('))) {
+                        // method call like Global.apply(...)
+                        path = format!("{path}.{field}");
+                        return self.call(path);
+                    }
+                    if path.contains('.') {
+                        bail!("member chains deeper than one level are unsupported");
+                    }
+                    // simple member access
+                    let base = path.clone();
+                    // only a single member level: check for further dots
+                    if matches!(self.peek(), Some(Token::Punct('.'))) {
+                        bail!("member chains deeper than one level are unsupported");
+                    }
+                    return Ok(Expr::Member(base, field));
+                }
+                if matches!(self.peek(), Some(Token::Punct('('))) {
+                    return self.call(path);
+                }
+                Ok(Expr::Var(path))
+            }
+            other => bail!("unexpected token {other:?} in expression"),
+        }
+    }
+
+    fn call(&mut self, callee: String) -> Result<Expr> {
+        self.expect_punct('(')?;
+        let mut args = Vec::new();
+        if !matches!(self.peek(), Some(Token::Punct(')'))) {
+            loop {
+                args.push(self.expr()?);
+                match self.next()? {
+                    Token::Punct(',') => continue,
+                    Token::Punct(')') => return Ok(Expr::Call(callee, args)),
+                    other => bail!("expected ',' or ')', found {other:?}"),
+                }
+            }
+        }
+        self.expect_punct(')')?;
+        Ok(Expr::Call(callee, args))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_decl_and_assign() {
+        let items = parse("int x = 3;\nx = x + 1;").unwrap();
+        assert_eq!(items.len(), 2);
+        assert!(matches!(&items[0], Item::Decl { name, init: Some(_), .. } if name == "x"));
+        assert!(matches!(&items[1], Item::Assign { target: LValue::Var(n), .. } if n == "x"));
+    }
+
+    #[test]
+    fn parses_for_list() {
+        let items = parse("for(list v in ALL_VERTEX_LIST){ v.value = 0; }").unwrap();
+        match &items[0] {
+            Item::ForList { var, iter, body } => {
+                assert_eq!(var, "v");
+                assert_eq!(*iter, IterExpr::AllVertices);
+                assert_eq!(body.len(), 1);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_nested_graph_iter() {
+        let items =
+            parse("for(list v in ALL_VERTEX_LIST){ for(list u in GET_IN_VERTEX_TO(v)){ u.value = 1; } }")
+                .unwrap();
+        match &items[0] {
+            Item::ForList { body, .. } => match &body[0] {
+                Item::ForList { iter, .. } => assert_eq!(*iter, IterExpr::InOf("v".into())),
+                other => panic!("{other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_count_loop_and_if() {
+        let items = parse("for(10){ if(a < b){ a = a + 1; } else { b = b - 1; } }").unwrap();
+        match &items[0] {
+            Item::ForCount { count, body } => {
+                assert_eq!(*count, Expr::Num(10.0));
+                assert!(matches!(&body[0], Item::If { els: Some(_), .. }));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_method_call_and_member() {
+        let items = parse("Global.apply(v, \"float\");\nx = v.NUM_OUT_DEGREE;").unwrap();
+        assert!(matches!(&items[0], Item::Expr(Expr::Call(c, args)) if c == "Global.apply" && args.len() == 2));
+        assert!(
+            matches!(&items[1], Item::Assign { value: Expr::Member(b, f), .. } if b == "v" && f == "NUM_OUT_DEGREE")
+        );
+    }
+
+    #[test]
+    fn precedence() {
+        let items = parse("x = 1 + 2 * 3;").unwrap();
+        match &items[0] {
+            Item::Assign { value: Expr::Binary("+", _, rhs), .. } => {
+                assert!(matches!(**rhs, Expr::Binary("*", _, _)));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn whole_listing1_parses() {
+        // the paper's Listing 1 (PageRank)
+        let src = crate::algorithms::Algorithm::Pr.pseudo_code();
+        let items = parse(src).unwrap();
+        assert!(items.len() >= 4);
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(parse("for(list v in BOGUS_LIST){ }").is_err());
+        assert!(parse("x = ;").is_err());
+        assert!(parse("if(a { }").is_err());
+        assert!(parse("1 = 2;").is_err());
+    }
+}

@@ -1,0 +1,351 @@
+//! Operation counting over the parsed pseudo-code (§4.1.2).
+//!
+//! A multiplier (product of the enclosing loops' symbolic trip counts)
+//! is maintained while walking the AST; every operator occurrence adds
+//! the current multiplier to its count. Loop-count declarations like
+//! `int iterator_num = 20;` are const/symbol-folded so `for(iterator_num)`
+//! multiplies by 20, and `for(list u in GET_IN_VERTEX_TO(v))` multiplies
+//! by the mean-in-degree symbol.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::ast::{Expr, IterExpr, Item, LValue};
+use super::symbolic::{Sym, SymExpr};
+use super::OpKey;
+
+/// What kind of entity a variable denotes (decides which read/write
+/// counter a `.value` access hits).
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum VarKind {
+    Vertex,
+    Edge,
+    Other,
+}
+
+/// Walker state.
+pub(crate) struct Counter {
+    counts: BTreeMap<OpKey, SymExpr>,
+    /// variable name → kind
+    kinds: BTreeMap<String, VarKind>,
+    /// variable name → folded symbolic value (for loop counts)
+    values: BTreeMap<String, SymExpr>,
+    /// current loop-nest multiplier
+    mult: SymExpr,
+}
+
+impl Counter {
+    pub(crate) fn new() -> Self {
+        Counter {
+            counts: BTreeMap::new(),
+            kinds: BTreeMap::new(),
+            values: BTreeMap::new(),
+            mult: SymExpr::constant(1.0),
+        }
+    }
+
+    pub(crate) fn finish(self) -> BTreeMap<OpKey, SymExpr> {
+        self.counts
+    }
+
+    fn bump(&mut self, key: OpKey) {
+        let m = self.mult.clone();
+        let e = self.counts.entry(key).or_insert_with(SymExpr::zero);
+        *e = e.add(&m);
+    }
+
+    fn kind_of(&self, name: &str) -> VarKind {
+        self.kinds.get(name).copied().unwrap_or(VarKind::Other)
+    }
+
+    pub(crate) fn walk_items(&mut self, items: &[Item]) -> Result<()> {
+        for item in items {
+            self.walk_item(item)?;
+        }
+        Ok(())
+    }
+
+    fn walk_item(&mut self, item: &Item) -> Result<()> {
+        match item {
+            Item::Decl { name, init, .. } => {
+                self.kinds.insert(name.clone(), VarKind::Other);
+                if let Some(init) = init {
+                    self.walk_expr(init)?;
+                    self.bump(OpKey::OthersValueWrite);
+                    if let Some(v) = self.try_fold(init) {
+                        self.values.insert(name.clone(), v);
+                    }
+                }
+                Ok(())
+            }
+            Item::ForList { var, iter, body } => {
+                let (key, sym, kind) = match iter {
+                    IterExpr::AllVertices => {
+                        (OpKey::AllVertexList, Sym::NumVertex, VarKind::Vertex)
+                    }
+                    IterExpr::AllEdges => (OpKey::AllEdgeList, Sym::NumEdge, VarKind::Edge),
+                    IterExpr::InOf(_) => (OpKey::GetInVertexTo, Sym::MeanInDeg, VarKind::Vertex),
+                    IterExpr::OutOf(_) => {
+                        (OpKey::GetOutVertexFrom, Sym::MeanOutDeg, VarKind::Vertex)
+                    }
+                    IterExpr::BothOf(_) => {
+                        (OpKey::GetBothVertexOf, Sym::MeanBothDeg, VarKind::Vertex)
+                    }
+                };
+                // the list retrieval itself happens once per loop entry
+                self.bump(key);
+                let saved_mult = self.mult.clone();
+                let saved_kind = self.kinds.get(var).copied();
+                self.mult = self.mult.mul(&SymExpr::symbol(sym));
+                self.kinds.insert(var.clone(), kind);
+                self.walk_items(body)?;
+                self.mult = saved_mult;
+                match saved_kind {
+                    Some(k) => {
+                        self.kinds.insert(var.clone(), k);
+                    }
+                    None => {
+                        self.kinds.remove(var);
+                    }
+                }
+                Ok(())
+            }
+            Item::ForCount { count, body } => {
+                self.walk_expr(count)?;
+                let trip = match self.try_fold(count) {
+                    Some(v) => v,
+                    None => bail!("cannot fold loop count {count:?} to a symbolic value"),
+                };
+                let saved = self.mult.clone();
+                self.mult = self.mult.mul(&trip);
+                self.walk_items(body)?;
+                self.mult = saved;
+                Ok(())
+            }
+            Item::If { cond, then, els } => {
+                self.walk_expr(cond)?;
+                // static analysis cannot resolve branch frequencies: both
+                // arms are counted at the full multiplier (upper bound),
+                // matching the paper's symbolic-count philosophy
+                self.walk_items(then)?;
+                if let Some(els) = els {
+                    self.walk_items(els)?;
+                }
+                Ok(())
+            }
+            Item::Assign { target, value } => {
+                self.walk_expr(value)?;
+                match target {
+                    LValue::Var(_) => self.bump(OpKey::OthersValueWrite),
+                    LValue::Member(base, field) => match (self.kind_of(base), field.as_str()) {
+                        (VarKind::Vertex, _) => self.bump(OpKey::VertexValueWrite),
+                        (VarKind::Edge, _) => self.bump(OpKey::EdgeValueWrite),
+                        (VarKind::Other, _) => self.bump(OpKey::OthersValueWrite),
+                    },
+                }
+                Ok(())
+            }
+            Item::Expr(e) => self.walk_expr(e),
+        }
+    }
+
+    fn walk_expr(&mut self, e: &Expr) -> Result<()> {
+        match e {
+            Expr::Num(_) | Expr::Str(_) => Ok(()),
+            Expr::Var(name) => {
+                match name.as_str() {
+                    "NUM_VERTEX" => self.bump(OpKey::NumVertex),
+                    "NUM_EDGE" => self.bump(OpKey::NumEdge),
+                    _ => {
+                        // bare vertex/edge identifiers are handles, not
+                        // value reads; scalar variables are reads
+                        if self.kind_of(name) == VarKind::Other {
+                            self.bump(OpKey::OthersValueRead);
+                        }
+                    }
+                }
+                Ok(())
+            }
+            Expr::Member(base, field) => {
+                match field.as_str() {
+                    "NUM_IN_DEGREE" => self.bump(OpKey::NumInDegree),
+                    "NUM_OUT_DEGREE" => self.bump(OpKey::NumOutDegree),
+                    "NUM_BOTH_DEGREE" => self.bump(OpKey::NumBothDegree),
+                    _ => match self.kind_of(base) {
+                        VarKind::Vertex => self.bump(OpKey::VertexValueRead),
+                        VarKind::Edge => self.bump(OpKey::EdgeValueRead),
+                        VarKind::Other => self.bump(OpKey::OthersValueRead),
+                    },
+                }
+                Ok(())
+            }
+            Expr::Binary(op, l, r) => {
+                self.walk_expr(l)?;
+                self.walk_expr(r)?;
+                match *op {
+                    "+" => self.bump(OpKey::Add),
+                    "-" => self.bump(OpKey::Subtract),
+                    "*" => self.bump(OpKey::Multiply),
+                    "/" => self.bump(OpKey::Divide),
+                    _ => {} // comparisons are not in the Table-4 vocabulary
+                }
+                Ok(())
+            }
+            Expr::Call(callee, args) => {
+                match callee.as_str() {
+                    "Global.apply" => self.bump(OpKey::Apply),
+                    "GET_IN_VERTEX_TO" => self.bump(OpKey::GetInVertexTo),
+                    "GET_OUT_VERTEX_FROM" => self.bump(OpKey::GetOutVertexFrom),
+                    "GET_BOTH_VERTEX_OF" => self.bump(OpKey::GetBothVertexOf),
+                    _ => {} // helper functions (MAX, COMMON, PICK…) only
+                             // count their argument accesses
+                }
+                for a in args {
+                    self.walk_expr(a)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Fold an expression to a symbolic value when it is built from
+    /// constants, cardinality symbols, previously folded variables and
+    /// `+ - *` (plus `/` by a constant).
+    fn try_fold(&self, e: &Expr) -> Option<SymExpr> {
+        match e {
+            Expr::Num(x) => Some(SymExpr::constant(*x)),
+            Expr::Var(name) => match name.as_str() {
+                "NUM_VERTEX" => Some(SymExpr::symbol(Sym::NumVertex)),
+                "NUM_EDGE" => Some(SymExpr::symbol(Sym::NumEdge)),
+                _ => self.values.get(name).cloned(),
+            },
+            Expr::Binary(op, l, r) => {
+                let l = self.try_fold(l)?;
+                let r = self.try_fold(r)?;
+                match *op {
+                    "+" => Some(l.add(&r)),
+                    "-" => Some(l.add(&r.scale(-1.0))),
+                    "*" => Some(l.mul(&r)),
+                    "/" => {
+                        let c = r.as_constant()?;
+                        (c != 0.0).then(|| l.scale(1.0 / c))
+                    }
+                    _ => None,
+                }
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{analyze, OpKey};
+    use super::super::symbolic::SymEnv;
+
+    fn env(v: f64, e: f64, din: f64, dout: f64, dboth: f64) -> SymEnv {
+        SymEnv {
+            num_vertex: v,
+            num_edge: e,
+            mean_in_deg: din,
+            mean_out_deg: dout,
+            mean_both_deg: dboth,
+        }
+    }
+
+    /// Pin the paper's Listing-2 example: PageRank on Ego-Facebook
+    /// (|V|=4039) with 20 iterations gives GET_IN_VERTEX_TO = 80780.
+    #[test]
+    fn listing2_pagerank_counts() {
+        let src = r#"
+int iterator_num = 20;
+float dampling_factor = 0.85;
+float temp_value;
+for(list v in ALL_VERTEX_LIST){
+    v.value = 1.0 / NUM_VERTEX;
+}
+for(iterator_num){
+    for(list v in ALL_VERTEX_LIST){
+        temp_value = 0;
+        for(list v_in in GET_IN_VERTEX_TO(v)){
+            temp_value = temp_value + v_in.value / v_in.NUM_OUT_DEGREE;
+        }
+        v.value = (1 - dampling_factor) / NUM_VERTEX + dampling_factor * temp_value;
+        Global.apply(v, "float");
+    }
+}
+"#;
+        let counts = analyze(src).unwrap();
+        let facebook = env(4039.0, 88234.0, 21.85, 21.85, 43.69);
+        let eval = counts.evaluate(&facebook);
+        // GET_IN_VERTEX_TO entered once per (iteration, vertex)
+        assert_eq!(eval[&OpKey::GetInVertexTo], 20.0 * 4039.0);
+        // ALL_VERTEX_LIST: one init loop + 20 iteration loops = 21
+        assert_eq!(eval[&OpKey::AllVertexList], 21.0);
+        // the Listing-2 rendering convention
+        assert_eq!(counts.counts[&OpKey::AllVertexList].render(), "21");
+        assert_eq!(counts.counts[&OpKey::GetInVertexTo].render(), "AllOfPartSetV*20");
+        // inner-loop edge-proportional ops: V·20·meanIn each
+        let edge_ops = 4039.0 * 20.0 * 21.85;
+        let close = |a: f64, b: f64| (a - b).abs() < 1e-6 * (1.0 + b.abs());
+        assert!(close(eval[&OpKey::NumOutDegree], edge_ops));
+        assert!(close(eval[&OpKey::Divide], edge_ops + 4039.0 + 20.0 * 4039.0));
+        // one apply per vertex per iteration
+        assert_eq!(eval[&OpKey::Apply], 20.0 * 4039.0);
+        // writes: init V + temp_value (20V + 20V·meanIn) + v.value 20V
+        assert_eq!(eval[&OpKey::VertexValueWrite], 4039.0 + 20.0 * 4039.0);
+    }
+
+    #[test]
+    fn quadratic_counts_for_apcn_shape() {
+        let src = r#"
+for(list c in ALL_VERTEX_LIST){
+    for(list a in GET_BOTH_VERTEX_OF(c)){
+        for(list b in GET_BOTH_VERTEX_OF(c)){
+            Global.apply(c, "pair");
+        }
+    }
+}
+"#;
+        let counts = analyze(src).unwrap();
+        let e = env(100.0, 500.0, 5.0, 5.0, 10.0);
+        let eval = counts.evaluate(&e);
+        // apply runs V · d̄² times — the quadratic signature
+        assert_eq!(eval[&OpKey::Apply], 100.0 * 10.0 * 10.0);
+        assert_eq!(eval[&OpKey::GetBothVertexOf], 100.0 + 100.0 * 10.0);
+    }
+
+    #[test]
+    fn unfoldable_loop_count_errors() {
+        let src = "for(list v in ALL_VERTEX_LIST){ for(v.value){ v.value = 1; } }";
+        assert!(super::super::analyze(src).is_err());
+    }
+
+    #[test]
+    fn division_by_symbol_in_loop_count_errors() {
+        // NUM_VERTEX / NUM_EDGE is not a polynomial — must be rejected
+        let src = "float r = NUM_VERTEX / NUM_EDGE;\nfor(r){ int x = 1; }";
+        assert!(super::super::analyze(src).is_err());
+    }
+
+    #[test]
+    fn var_kind_scoping_restored_after_loop() {
+        // `u` is Other outside the loop, Vertex inside
+        let src = r#"
+float u = 3;
+for(list u in ALL_VERTEX_LIST){
+    u.value = 1;
+}
+u = u + 1;
+"#;
+        let counts = analyze(src).unwrap();
+        let e = env(10.0, 20.0, 2.0, 2.0, 4.0);
+        let eval = counts.evaluate(&e);
+        assert_eq!(eval[&OpKey::VertexValueWrite], 10.0);
+        // decl write + final write
+        assert_eq!(eval[&OpKey::OthersValueWrite], 2.0);
+        // final `u` read is an Others read again
+        assert_eq!(eval[&OpKey::OthersValueRead], 1.0);
+    }
+}

@@ -1,0 +1,251 @@
+//! Static pseudo-code analyzer (§4.1.2) — the replacement for the
+//! paper's JavaCC tool.
+//!
+//! The analyzer parses the algorithm's pseudo-code (the dialect of
+//! Listing 1), counts every graph/arithmetic operator of Table 4
+//! weighted by its enclosing loops' symbolic trip counts, and evaluates
+//! the symbolic counts against a graph's data features — producing the
+//! numeric algorithm-feature vector the ETRM consumes:
+//!
+//! ```no_run
+//! use gps_select::analyzer::{analyze, OpKey};
+//! use gps_select::analyzer::symbolic::SymEnv;
+//! let counts = analyze("for(list v in ALL_VERTEX_LIST){ v.value = 0; }").unwrap();
+//! let env = SymEnv { num_vertex: 100.0, num_edge: 400.0,
+//!                    mean_in_deg: 4.0, mean_out_deg: 4.0, mean_both_deg: 8.0 };
+//! assert_eq!(counts.evaluate(&env)[&OpKey::VertexValueWrite], 100.0);
+//! ```
+
+pub mod ast;
+pub mod counter;
+pub mod symbolic;
+pub mod token;
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use symbolic::{SymEnv, SymExpr};
+
+/// The 21 algorithm features of Table 4, grouped as in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum OpKey {
+    // Graph Object
+    NumVertex,
+    NumEdge,
+    NumInDegree,
+    NumOutDegree,
+    NumBothDegree,
+    // Graph Iteration
+    AllVertexList,
+    AllEdgeList,
+    GetInVertexTo,
+    GetOutVertexFrom,
+    GetBothVertexOf,
+    // Graph Operation
+    VertexValueRead,
+    VertexValueWrite,
+    EdgeValueRead,
+    EdgeValueWrite,
+    // Basic
+    Add,
+    Subtract,
+    Multiply,
+    Divide,
+    OthersValueRead,
+    OthersValueWrite,
+    Apply,
+}
+
+impl OpKey {
+    /// All 21 features in Table 4 order (the model input layout).
+    pub fn all() -> [OpKey; 21] {
+        use OpKey::*;
+        [
+            NumVertex,
+            NumEdge,
+            NumInDegree,
+            NumOutDegree,
+            NumBothDegree,
+            AllVertexList,
+            AllEdgeList,
+            GetInVertexTo,
+            GetOutVertexFrom,
+            GetBothVertexOf,
+            VertexValueRead,
+            VertexValueWrite,
+            EdgeValueRead,
+            EdgeValueWrite,
+            Add,
+            Subtract,
+            Multiply,
+            Divide,
+            OthersValueRead,
+            OthersValueWrite,
+            Apply,
+        ]
+    }
+
+    /// The paper's feature name.
+    pub fn name(&self) -> &'static str {
+        use OpKey::*;
+        match self {
+            NumVertex => "NUM_VERTEX",
+            NumEdge => "NUM_EDGE",
+            NumInDegree => "NUM_IN_DEGREE",
+            NumOutDegree => "NUM_OUT_DEGREE",
+            NumBothDegree => "NUM_BOTH_DEGREE",
+            AllVertexList => "ALL_VERTEX_LIST",
+            AllEdgeList => "ALL_EDGE_LIST",
+            GetInVertexTo => "GET_IN_VERTEX_TO",
+            GetOutVertexFrom => "GET_OUT_VERTEX_FROM",
+            GetBothVertexOf => "GET_BOTH_VERTEX_OF",
+            VertexValueRead => "VERTEX_VALUE_READ",
+            VertexValueWrite => "VERTEX_VALUE_WRITE",
+            EdgeValueRead => "EDGE_VALUE_READ",
+            EdgeValueWrite => "EDGE_VALUE_WRITE",
+            Add => "ADD",
+            Subtract => "SUBTRACT",
+            Multiply => "MULTIPLY",
+            Divide => "DIVIDE",
+            OthersValueRead => "OTHERS_VALUE_READ",
+            OthersValueWrite => "OTHERS_VALUE_WRITE",
+            Apply => "APPLY",
+        }
+    }
+
+    /// Table 4 category.
+    pub fn category(&self) -> &'static str {
+        use OpKey::*;
+        match self {
+            NumVertex | NumEdge | NumInDegree | NumOutDegree | NumBothDegree => "Graph Object",
+            AllVertexList | AllEdgeList | GetInVertexTo | GetOutVertexFrom | GetBothVertexOf => {
+                "Graph Iteration"
+            }
+            VertexValueRead | VertexValueWrite | EdgeValueRead | EdgeValueWrite => {
+                "Graph Operation"
+            }
+            _ => "Basic",
+        }
+    }
+}
+
+/// Symbolic operation counts of one algorithm.
+#[derive(Clone, Debug, Default)]
+pub struct AlgoCounts {
+    /// Operator → symbolic count (missing key = zero).
+    pub counts: BTreeMap<OpKey, SymExpr>,
+}
+
+impl AlgoCounts {
+    /// Evaluate every operator count against a graph's symbol values.
+    /// All 21 keys are present in the result (zeros included).
+    pub fn evaluate(&self, env: &SymEnv) -> BTreeMap<OpKey, f64> {
+        OpKey::all()
+            .iter()
+            .map(|&k| (k, self.counts.get(&k).map_or(0.0, |e| e.eval(env))))
+            .collect()
+    }
+
+    /// Evaluate into the fixed 21-element vector (Table 4 order) used by
+    /// the model encoding.
+    pub fn feature_vector(&self, env: &SymEnv) -> [f64; 21] {
+        let eval = self.evaluate(env);
+        let mut out = [0.0; 21];
+        for (i, k) in OpKey::all().iter().enumerate() {
+            out[i] = eval[k];
+        }
+        out
+    }
+}
+
+/// Parse and count a pseudo-code program.
+pub fn analyze(src: &str) -> Result<AlgoCounts> {
+    let items = ast::parse(src)?;
+    let mut counter = counter::Counter::new();
+    counter.walk_items(&items)?;
+    Ok(AlgoCounts { counts: counter.finish() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::Algorithm;
+
+    fn env() -> SymEnv {
+        // Ego-Facebook-like density (the regime where APCN's quadratic
+        // term dominates, as in the paper's Table 7)
+        SymEnv {
+            num_vertex: 1000.0,
+            num_edge: 20_000.0,
+            mean_in_deg: 20.0,
+            mean_out_deg: 20.0,
+            mean_both_deg: 40.0,
+        }
+    }
+
+    #[test]
+    fn all_eight_algorithms_analyze() {
+        for a in Algorithm::all() {
+            let counts = analyze(a.pseudo_code())
+                .unwrap_or_else(|e| panic!("{} failed to analyze: {e}", a.name()));
+            let eval = counts.evaluate(&env());
+            assert_eq!(eval.len(), 21, "{}", a.name());
+            assert!(
+                eval.values().any(|&v| v > 0.0),
+                "{} produced all-zero features",
+                a.name()
+            );
+        }
+    }
+
+    /// Feature shapes that the ETRM relies on: APCN is quadratic in
+    /// degree, PR is linear with a 10× iteration factor, AID is single
+    /// pass.
+    #[test]
+    fn relative_magnitudes_follow_complexity() {
+        let e = env();
+        let total = |a: Algorithm| -> f64 {
+            analyze(a.pseudo_code()).unwrap().evaluate(&e).values().sum()
+        };
+        let aid = total(Algorithm::Aid);
+        let pr = total(Algorithm::Pr);
+        let apcn = total(Algorithm::Apcn);
+        let rw = total(Algorithm::Rw);
+        assert!(pr > 5.0 * aid, "PR {pr} ≫ AID {aid}");
+        assert!(apcn > pr, "APCN {apcn} > PR {pr}");
+        assert!(rw < aid, "RW {rw} < AID {aid} (sparse sources)");
+    }
+
+    #[test]
+    fn directional_signatures() {
+        let e = env();
+        let aid = analyze(Algorithm::Aid.pseudo_code()).unwrap().evaluate(&e);
+        let aod = analyze(Algorithm::Aod.pseudo_code()).unwrap().evaluate(&e);
+        assert!(aid[&OpKey::GetInVertexTo] > 0.0);
+        assert_eq!(aid[&OpKey::GetOutVertexFrom], 0.0);
+        assert!(aod[&OpKey::GetOutVertexFrom] > 0.0);
+        assert_eq!(aod[&OpKey::GetInVertexTo], 0.0);
+    }
+
+    #[test]
+    fn opkey_metadata() {
+        assert_eq!(OpKey::all().len(), 21);
+        assert_eq!(OpKey::GetInVertexTo.name(), "GET_IN_VERTEX_TO");
+        assert_eq!(OpKey::GetInVertexTo.category(), "Graph Iteration");
+        assert_eq!(OpKey::Apply.category(), "Basic");
+        assert_eq!(OpKey::NumVertex.category(), "Graph Object");
+        // names unique
+        let names: std::collections::HashSet<_> =
+            OpKey::all().iter().map(|k| k.name()).collect();
+        assert_eq!(names.len(), 21);
+    }
+
+    #[test]
+    fn feature_vector_layout() {
+        let counts = analyze("int x = NUM_VERTEX;").unwrap();
+        let v = counts.feature_vector(&env());
+        assert_eq!(v[0], 1.0, "NUM_VERTEX is feature 0");
+        assert_eq!(v[19], 1.0, "decl write is OTHERS_VALUE_WRITE (idx 19)");
+    }
+}

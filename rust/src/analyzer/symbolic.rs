@@ -1,0 +1,231 @@
+//! Symbolic operation counts (§4.1.2, Listing 2).
+//!
+//! A count is a polynomial over the graph-cardinality symbols: e.g. the
+//! PageRank inner gather runs `NUM_VERTEX · 10 · mean-in-degree` times,
+//! represented as one monomial `10·V·D_in`. Symbols are evaluated
+//! against the target graph's data features to produce the numeric
+//! algorithm-feature vector (the paper's `Eval` step: `4039 · 20 =
+//! 80780`).
+
+use std::collections::BTreeMap;
+
+/// A cardinality symbol, with the paper's Listing-2 display names.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Sym {
+    /// `|V|` — "AllOfPartSetV".
+    NumVertex,
+    /// `|E|` — "AllOfPartSetE".
+    NumEdge,
+    /// mean in-degree — "InVertexSetToPartOfAllV".
+    MeanInDeg,
+    /// mean out-degree — "OutVertexSetFromPartOfAllV".
+    MeanOutDeg,
+    /// mean undirected degree — "BothVertexSetOfPartOfAllV".
+    MeanBothDeg,
+}
+
+impl Sym {
+    /// Listing-2 style display name.
+    pub fn display(&self) -> &'static str {
+        match self {
+            Sym::NumVertex => "AllOfPartSetV",
+            Sym::NumEdge => "AllOfPartSetE",
+            Sym::MeanInDeg => "InVertexSetToPartOfAllV",
+            Sym::MeanOutDeg => "OutVertexSetFromPartOfAllV",
+            Sym::MeanBothDeg => "BothVertexSetOfPartOfAllV",
+        }
+    }
+}
+
+/// Values for the symbols, taken from a graph's data features.
+#[derive(Clone, Copy, Debug)]
+pub struct SymEnv {
+    pub num_vertex: f64,
+    pub num_edge: f64,
+    pub mean_in_deg: f64,
+    pub mean_out_deg: f64,
+    pub mean_both_deg: f64,
+}
+
+impl SymEnv {
+    /// Value of one symbol.
+    pub fn value(&self, s: Sym) -> f64 {
+        match s {
+            Sym::NumVertex => self.num_vertex,
+            Sym::NumEdge => self.num_edge,
+            Sym::MeanInDeg => self.mean_in_deg,
+            Sym::MeanOutDeg => self.mean_out_deg,
+            Sym::MeanBothDeg => self.mean_both_deg,
+        }
+    }
+}
+
+/// A symbolic count: Σ coeff·Πsymbols. Kept normalised (monomials with
+/// identical symbol multisets merged, zero-coefficient terms dropped).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SymExpr {
+    /// map: sorted symbol multiset → coefficient
+    terms: BTreeMap<Vec<Sym>, f64>,
+}
+
+impl SymExpr {
+    /// The zero count.
+    pub fn zero() -> Self {
+        SymExpr::default()
+    }
+
+    /// A constant count.
+    pub fn constant(c: f64) -> Self {
+        let mut e = SymExpr::default();
+        if c != 0.0 {
+            e.terms.insert(vec![], c);
+        }
+        e
+    }
+
+    /// A bare symbol.
+    pub fn symbol(s: Sym) -> Self {
+        let mut e = SymExpr::default();
+        e.terms.insert(vec![s], 1.0);
+        e
+    }
+
+    /// True when the expression is identically zero.
+    pub fn is_zero(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    /// Sum of two counts.
+    pub fn add(&self, other: &SymExpr) -> SymExpr {
+        let mut out = self.clone();
+        for (k, v) in &other.terms {
+            *out.terms.entry(k.clone()).or_insert(0.0) += v;
+        }
+        out.terms.retain(|_, v| *v != 0.0);
+        out
+    }
+
+    /// Product of two counts (polynomial multiplication).
+    pub fn mul(&self, other: &SymExpr) -> SymExpr {
+        let mut out = SymExpr::default();
+        for (ka, va) in &self.terms {
+            for (kb, vb) in &other.terms {
+                let mut k = ka.clone();
+                k.extend(kb.iter().copied());
+                k.sort();
+                *out.terms.entry(k).or_insert(0.0) += va * vb;
+            }
+        }
+        out.terms.retain(|_, v| *v != 0.0);
+        out
+    }
+
+    /// Scale by a constant.
+    pub fn scale(&self, c: f64) -> SymExpr {
+        if c == 0.0 {
+            return SymExpr::zero();
+        }
+        let mut out = self.clone();
+        for v in out.terms.values_mut() {
+            *v *= c;
+        }
+        out
+    }
+
+    /// Extract the constant value if the expression has no symbols.
+    pub fn as_constant(&self) -> Option<f64> {
+        if self.terms.is_empty() {
+            return Some(0.0);
+        }
+        if self.terms.len() == 1 {
+            if let Some(v) = self.terms.get(&vec![]) {
+                return Some(*v);
+            }
+        }
+        None
+    }
+
+    /// Evaluate against an environment.
+    pub fn eval(&self, env: &SymEnv) -> f64 {
+        self.terms
+            .iter()
+            .map(|(syms, c)| c * syms.iter().map(|&s| env.value(s)).product::<f64>())
+            .sum()
+    }
+
+    /// Listing-2 style rendering, e.g.
+    /// `InVertexSetToPartOfAllV*AllOfPartSetV*20`.
+    pub fn render(&self) -> String {
+        if self.terms.is_empty() {
+            return "0".to_string();
+        }
+        self.terms
+            .iter()
+            .map(|(syms, c)| {
+                let mut parts: Vec<String> = syms.iter().map(|s| s.display().to_string()).collect();
+                if parts.is_empty() || *c != 1.0 {
+                    parts.push(format!("{c}"));
+                }
+                parts.join("*")
+            })
+            .collect::<Vec<_>>()
+            .join(" + ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> SymEnv {
+        SymEnv {
+            num_vertex: 4039.0,
+            num_edge: 88234.0,
+            mean_in_deg: 21.85,
+            mean_out_deg: 21.85,
+            mean_both_deg: 43.69,
+        }
+    }
+
+    #[test]
+    fn constant_and_symbol_eval() {
+        assert_eq!(SymExpr::constant(20.0).eval(&env()), 20.0);
+        assert_eq!(SymExpr::symbol(Sym::NumVertex).eval(&env()), 4039.0);
+        assert_eq!(SymExpr::zero().eval(&env()), 0.0);
+    }
+
+    #[test]
+    fn listing2_example() {
+        // get_in_vertex_to ≈ |V| · 20 = 80780 on Ego-Facebook
+        let e = SymExpr::symbol(Sym::NumVertex).mul(&SymExpr::constant(20.0));
+        assert_eq!(e.eval(&env()), 80780.0);
+        assert_eq!(e.render(), "AllOfPartSetV*20");
+    }
+
+    #[test]
+    fn polynomial_algebra() {
+        let v = SymExpr::symbol(Sym::NumVertex);
+        let d = SymExpr::symbol(Sym::MeanInDeg);
+        let e = v.mul(&d).add(&v.scale(2.0)); // V·D + 2V
+        assert_eq!(e.eval(&env()), 4039.0 * 21.85 + 2.0 * 4039.0);
+        // merged like terms
+        let s = v.add(&v);
+        assert_eq!(s.eval(&env()), 2.0 * 4039.0);
+        assert_eq!(s.render(), "AllOfPartSetV*2");
+    }
+
+    #[test]
+    fn as_constant() {
+        assert_eq!(SymExpr::constant(5.0).as_constant(), Some(5.0));
+        assert_eq!(SymExpr::zero().as_constant(), Some(0.0));
+        assert_eq!(SymExpr::symbol(Sym::NumEdge).as_constant(), None);
+    }
+
+    #[test]
+    fn zero_coefficients_dropped() {
+        let v = SymExpr::symbol(Sym::NumVertex);
+        let z = v.add(&v.scale(-1.0));
+        assert!(z.is_zero());
+        assert_eq!(z.render(), "0");
+    }
+}

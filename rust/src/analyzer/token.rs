@@ -1,0 +1,157 @@
+//! Lexer for the pseudo-code language of §4.1.2 (Listing 1).
+//!
+//! The language is the small C-like dialect the paper feeds to its
+//! JavaCC analyzer: declarations, assignments, `for`/`if` control flow,
+//! member access, calls, arithmetic and comparison operators, `//`
+//! comments, numeric and string literals.
+
+use anyhow::{bail, Result};
+
+/// A lexical token.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Token {
+    /// Identifier or keyword.
+    Ident(String),
+    /// Numeric literal.
+    Number(f64),
+    /// String literal (content without quotes).
+    Str(String),
+    /// Single punctuation: `{ } ( ) ; , .`
+    Punct(char),
+    /// Operator: `+ - * / = < > <= >= == !=`
+    Op(&'static str),
+}
+
+/// Tokenize source text.
+pub fn lex(src: &str) -> Result<Vec<Token>> {
+    let mut out = Vec::new();
+    let b: Vec<char> = src.chars().collect();
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            ' ' | '\t' | '\r' | '\n' => i += 1,
+            '/' if i + 1 < b.len() && b[i + 1] == '/' => {
+                while i < b.len() && b[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '{' | '}' | '(' | ')' | ';' | ',' | '.' => {
+                out.push(Token::Punct(c));
+                i += 1;
+            }
+            '+' => {
+                out.push(Token::Op("+"));
+                i += 1;
+            }
+            '-' => {
+                out.push(Token::Op("-"));
+                i += 1;
+            }
+            '*' => {
+                out.push(Token::Op("*"));
+                i += 1;
+            }
+            '/' => {
+                out.push(Token::Op("/"));
+                i += 1;
+            }
+            '=' | '<' | '>' | '!' => {
+                if i + 1 < b.len() && b[i + 1] == '=' {
+                    out.push(Token::Op(match c {
+                        '=' => "==",
+                        '<' => "<=",
+                        '>' => ">=",
+                        _ => "!=",
+                    }));
+                    i += 2;
+                } else {
+                    match c {
+                        '=' => out.push(Token::Op("=")),
+                        '<' => out.push(Token::Op("<")),
+                        '>' => out.push(Token::Op(">")),
+                        _ => bail!("stray '!' at char {i}"),
+                    }
+                    i += 1;
+                }
+            }
+            '"' => {
+                let start = i + 1;
+                let mut j = start;
+                while j < b.len() && b[j] != '"' {
+                    j += 1;
+                }
+                if j == b.len() {
+                    bail!("unterminated string literal");
+                }
+                out.push(Token::Str(b[start..j].iter().collect()));
+                i = j + 1;
+            }
+            '0'..='9' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_digit() || b[i] == '.') {
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                out.push(Token::Number(text.parse().map_err(|_| {
+                    anyhow::anyhow!("bad number literal {text:?}")
+                })?));
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                out.push(Token::Ident(b[start..i].iter().collect()));
+            }
+            other => bail!("unexpected character {other:?} at char {i}"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_listing1_line() {
+        let toks = lex("v.value = 1.0 / NUM_VERTEX;").unwrap();
+        assert_eq!(
+            toks,
+            vec![
+                Token::Ident("v".into()),
+                Token::Punct('.'),
+                Token::Ident("value".into()),
+                Token::Op("="),
+                Token::Number(1.0),
+                Token::Op("/"),
+                Token::Ident("NUM_VERTEX".into()),
+                Token::Punct(';'),
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let toks = lex("// a comment\nGlobal.apply(v, \"float\");").unwrap();
+        assert!(toks.contains(&Token::Str("float".into())));
+        assert_eq!(toks[0], Token::Ident("Global".into()));
+    }
+
+    #[test]
+    fn comparison_operators() {
+        let toks = lex("a <= b == c != d").unwrap();
+        assert_eq!(
+            toks.iter().filter(|t| matches!(t, Token::Op(_))).count(),
+            3
+        );
+    }
+
+    #[test]
+    fn errors() {
+        assert!(lex("\"unterminated").is_err());
+        assert!(lex("a # b").is_err());
+        assert!(lex("1.2.3.4").is_err());
+    }
+}

@@ -1,0 +1,232 @@
+//! Synthetic training-set augmentation (§4.2.1, Eq. 3).
+//!
+//! Synthetic tasks are multisets of the six training algorithms
+//! (combinations with replacement, r = 2..9 → Σ C^R(6, r) = 4 998
+//! synthetic algorithms). A synthetic tuple on graph `G` under strategy
+//! `p` sums the member algorithms' feature vectors and execution times
+//! (a sequential mega-task); the data features are unchanged. The full
+//! product 4 998 × 8 graphs × 11 strategies ≈ 0.43 M tuples matches the
+//! paper; `max_tuples` sub-samples deterministically for CI budgets.
+
+use std::collections::BTreeMap;
+
+use crate::algorithms::Algorithm;
+use crate::features::TaskFeatures;
+use crate::partition::Strategy;
+use crate::util::rng::Rng;
+
+use super::logs::{ExecutionLog, LogStore};
+
+/// Number of multisets of size `r` from `n` items: C(n+r-1, r).
+pub fn combinations_with_replacement(n: u64, r: u64) -> u64 {
+    // C(n+r-1, r) computed multiplicatively
+    let top = n + r - 1;
+    let mut num = 1u128;
+    let mut den = 1u128;
+    for i in 0..r {
+        num *= (top - i) as u128;
+        den *= (i + 1) as u128;
+    }
+    (num / den) as u64
+}
+
+/// Enumerate all multisets (as sorted index vectors) of size `r` over
+/// `n` items, in lexicographic order.
+pub fn multisets(n: usize, r: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut cur = vec![0usize; r];
+    loop {
+        out.push(cur.clone());
+        // next multiset: find rightmost position that can be incremented
+        let mut i = r;
+        loop {
+            if i == 0 {
+                return out;
+            }
+            i -= 1;
+            if cur[i] + 1 < n {
+                let v = cur[i] + 1;
+                for x in cur.iter_mut().skip(i) {
+                    *x = v;
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// Augmentation output: synthetic logs only (the paper: "the augmented
+/// training dataset does not include the original 528 real records").
+pub fn augment(
+    store: &LogStore,
+    r_range: std::ops::RangeInclusive<usize>,
+    max_tuples: Option<usize>,
+    seed: u64,
+) -> Vec<ExecutionLog> {
+    let algos = Algorithm::training();
+    let train_graphs: Vec<&str> = crate::graph::datasets::training_graphs();
+    // index real logs: (graph, algo, strategy) → (features, time)
+    let mut index: BTreeMap<(String, &'static str, usize), (&TaskFeatures, f64)> = BTreeMap::new();
+    for l in &store.logs {
+        if let Some(a) = Algorithm::by_name(&l.algorithm) {
+            if algos.contains(&a) && train_graphs.contains(&l.graph.as_str()) {
+                index.insert((l.graph.clone(), a.name(), l.strategy.psid()), (&l.features, l.time));
+            }
+        }
+    }
+    // all synthetic algorithm multisets
+    let mut combos: Vec<Vec<usize>> = Vec::new();
+    for r in r_range {
+        combos.extend(multisets(algos.len(), r));
+    }
+    let strategies = Strategy::inventory();
+    let mut out = Vec::new();
+    let total = combos.len() * train_graphs.len() * strategies.len();
+    let keep_probability = max_tuples.map(|m| m as f64 / total as f64);
+    let mut rng = Rng::new(seed ^ 0xau64);
+    for combo in &combos {
+        let label = {
+            let mut names: Vec<&str> = combo.iter().map(|&i| algos[i].name()).collect();
+            names.sort_unstable();
+            names.join("+")
+        };
+        for &gname in &train_graphs {
+            for s in &strategies {
+                if let Some(p) = keep_probability {
+                    if !rng.gen_bool(p) {
+                        continue;
+                    }
+                }
+                let mut feats: Vec<[f64; 21]> = Vec::with_capacity(combo.len());
+                let mut time = 0.0;
+                let mut ok = true;
+                for &ai in combo {
+                    match index.get(&(gname.to_string(), algos[ai].name(), s.psid())) {
+                        Some((f, t)) => {
+                            feats.push(f.algo);
+                            time += t;
+                        }
+                        None => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if !ok {
+                    continue;
+                }
+                let data = match store.graph_features.get(gname) {
+                    Some(d) => *d,
+                    None => continue,
+                };
+                out.push(ExecutionLog {
+                    graph: gname.to_string(),
+                    algorithm: label.clone(),
+                    strategy: *s,
+                    features: TaskFeatures::aggregate_algos(data, &feats),
+                    time,
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::cost::ClusterConfig;
+    use crate::graph::datasets::DatasetSpec;
+
+    #[test]
+    fn paper_combinatorics() {
+        // Eq. 3 with n=6: Σ_{r=2..9} C^R(6,r) = 4998
+        let total: u64 = (2..=9).map(|r| combinations_with_replacement(6, r)).sum();
+        assert_eq!(total, 4998);
+        assert_eq!(combinations_with_replacement(6, 2), 21);
+        assert_eq!(combinations_with_replacement(6, 9), 2002);
+    }
+
+    #[test]
+    fn multisets_enumeration() {
+        let ms = multisets(3, 2);
+        assert_eq!(
+            ms,
+            vec![
+                vec![0, 0],
+                vec![0, 1],
+                vec![0, 2],
+                vec![1, 1],
+                vec![1, 2],
+                vec![2, 2]
+            ]
+        );
+        assert_eq!(multisets(6, 4).len(), combinations_with_replacement(6, 4) as usize);
+        // every multiset is sorted (canonical)
+        assert!(multisets(4, 3).iter().all(|m| m.windows(2).all(|w| w[0] <= w[1])));
+    }
+
+    fn small_store() -> LogStore {
+        // one training graph, two training algorithms, two strategies
+        let mut store = LogStore::default();
+        let cfg = ClusterConfig::with_workers(4);
+        let g = DatasetSpec::by_name("wiki").unwrap().build(0.01, 7);
+        store
+            .record_graph(
+                &g,
+                &[Algorithm::Aid, Algorithm::Pr],
+                &Strategy::inventory(),
+                &cfg,
+            )
+            .unwrap();
+        store
+    }
+
+    #[test]
+    fn synthetic_tuples_sum_features_and_time() {
+        let store = small_store();
+        let synth = augment(&store, 2..=2, None, 1);
+        // only AID and PR present → multisets over {AID, PR} that are
+        // fully available: {AID,AID},{AID,PR},{PR,PR} × 11 strategies
+        assert_eq!(synth.len(), 3 * 11);
+        let aid_t = store.time_of("wiki", "AID", Strategy::Random).unwrap();
+        let pr_t = store.time_of("wiki", "PR", Strategy::Random).unwrap();
+        let tuple = synth
+            .iter()
+            .find(|l| l.algorithm == "AID+PR" && l.strategy == Strategy::Random)
+            .unwrap();
+        assert!((tuple.time - (aid_t + pr_t)).abs() < 1e-12);
+        // feature sum check on the APPLY column
+        let aid = store
+            .logs
+            .iter()
+            .find(|l| l.algorithm == "AID" && l.strategy == Strategy::Random)
+            .unwrap();
+        let pr = store
+            .logs
+            .iter()
+            .find(|l| l.algorithm == "PR" && l.strategy == Strategy::Random)
+            .unwrap();
+        for i in 0..21 {
+            assert!((tuple.features.algo[i] - (aid.features.algo[i] + pr.features.algo[i])).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sampling_cap_roughly_respected() {
+        let store = small_store();
+        let synth = augment(&store, 2..=3, Some(20), 42);
+        // unsampled would be (3 + 4) * 11 = 77
+        assert!(synth.len() < 50, "{}", synth.len());
+        // deterministic
+        let again = augment(&store, 2..=3, Some(20), 42);
+        assert_eq!(synth.len(), again.len());
+    }
+
+    #[test]
+    fn no_real_records_in_output() {
+        let store = small_store();
+        let synth = augment(&store, 2..=4, None, 1);
+        assert!(synth.iter().all(|l| l.algorithm.contains('+')));
+    }
+}

@@ -1,0 +1,204 @@
+//! Execution-log records (§4.2.1 "Data Preparation").
+//!
+//! One record per (graph, algorithm, strategy) task: the extracted
+//! features plus the engine-measured execution time. The store builds
+//! the corpus by actually running every task on the engine, and can
+//! persist to a simple CSV for reuse across binaries.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::algorithms::Algorithm;
+use crate::engine::cost::ClusterConfig;
+use crate::features::{DataFeatures, TaskFeatures};
+use crate::graph::Graph;
+use crate::partition::Strategy;
+
+/// One execution log record.
+#[derive(Clone, Debug)]
+pub struct ExecutionLog {
+    /// Dataset short name.
+    pub graph: String,
+    /// Algorithm label (`PR`, or `PR+TC+AID` for synthetic tuples).
+    pub algorithm: String,
+    /// Partitioning strategy.
+    pub strategy: Strategy,
+    /// Task features (data ⊕ algorithm).
+    pub features: TaskFeatures,
+    /// Execution time label in seconds.
+    pub time: f64,
+}
+
+/// A collection of logs plus the per-graph data features.
+#[derive(Clone, Debug, Default)]
+pub struct LogStore {
+    pub logs: Vec<ExecutionLog>,
+    /// Graph name → data features (shared by all its logs).
+    pub graph_features: BTreeMap<String, DataFeatures>,
+}
+
+impl LogStore {
+    /// Run `algorithms × strategies` on one graph and append the logs.
+    pub fn record_graph(
+        &mut self,
+        g: &Graph,
+        algorithms: &[Algorithm],
+        strategies: &[Strategy],
+        cfg: &ClusterConfig,
+    ) -> Result<()> {
+        let data = DataFeatures::of(g);
+        self.graph_features.insert(g.name.clone(), data);
+        for s in strategies {
+            let p = s.partition(g, cfg.num_workers);
+            for a in algorithms {
+                let features = TaskFeatures::extract(g, a.pseudo_code())?;
+                let outcome = a.simulate(g, &p, cfg);
+                self.logs.push(ExecutionLog {
+                    graph: g.name.clone(),
+                    algorithm: a.name().to_string(),
+                    strategy: *s,
+                    features,
+                    time: outcome.sim.total,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Build the full corpus: every dataset at `scale`, every algorithm,
+    /// the 11-strategy inventory (the paper's 12 × 8 × 11 = 1056 runs,
+    /// of which 528 over training graphs × training algorithms feed the
+    /// augmentation).
+    pub fn build_corpus(scale: f64, seed: u64, cfg: &ClusterConfig) -> Result<Self> {
+        let mut store = LogStore::default();
+        let strategies = Strategy::inventory();
+        for spec in crate::graph::datasets::CORPUS {
+            let g = spec.build(scale, seed);
+            store.record_graph(&g, &Algorithm::all(), &strategies, cfg)?;
+        }
+        Ok(store)
+    }
+
+    /// Execution time of one task under one strategy.
+    pub fn time_of(&self, graph: &str, algorithm: &str, strategy: Strategy) -> Option<f64> {
+        self.logs
+            .iter()
+            .find(|l| l.graph == graph && l.algorithm == algorithm && l.strategy == strategy)
+            .map(|l| l.time)
+    }
+
+    /// All times for one (graph, algorithm), in the inventory's strategy
+    /// order.
+    pub fn times_of_task(&self, graph: &str, algorithm: &str) -> Vec<f64> {
+        Strategy::inventory()
+            .into_iter()
+            .filter_map(|s| self.time_of(graph, algorithm, s))
+            .collect()
+    }
+
+    /// Persist as CSV (graph, algorithm, psid, time, 21 algo features).
+    pub fn save_csv(&self, path: &Path) -> Result<()> {
+        let mut out = String::from("graph,algorithm,psid,time");
+        for k in crate::analyzer::OpKey::all() {
+            out.push(',');
+            out.push_str(k.name());
+        }
+        out.push('\n');
+        for l in &self.logs {
+            out.push_str(&format!("{},{},{},{}", l.graph, l.algorithm, l.strategy.psid(), l.time));
+            for x in l.features.algo {
+                out.push_str(&format!(",{x}"));
+            }
+            out.push('\n');
+        }
+        std::fs::write(path, out).with_context(|| format!("write {}", path.display()))
+    }
+
+    /// Load a CSV written by [`LogStore::save_csv`]. Graph data features
+    /// are *not* stored in the CSV; the caller must re-attach them, so
+    /// this is primarily for external analysis.
+    pub fn load_csv(path: &Path, features_of: &BTreeMap<String, DataFeatures>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut store = LogStore { graph_features: features_of.clone(), ..Default::default() };
+        for (i, line) in text.lines().enumerate().skip(1) {
+            let cols: Vec<&str> = line.split(',').collect();
+            if cols.len() != 4 + 21 {
+                bail!("line {}: expected {} columns, got {}", i + 1, 25, cols.len());
+            }
+            let graph = cols[0].to_string();
+            let psid: usize = cols[2].parse()?;
+            let strategy = Strategy::inventory()
+                .into_iter()
+                .find(|s| s.psid() == psid)
+                .with_context(|| format!("unknown psid {psid}"))?;
+            let data = *features_of
+                .get(&graph)
+                .with_context(|| format!("no data features for graph {graph}"))?;
+            let mut algo = [0.0; 21];
+            for (j, a) in algo.iter_mut().enumerate() {
+                *a = cols[4 + j].parse()?;
+            }
+            store.logs.push(ExecutionLog {
+                graph,
+                algorithm: cols[1].to_string(),
+                strategy,
+                features: TaskFeatures::from_vector(data, algo),
+                time: cols[3].parse()?,
+            });
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::graph::datasets::DatasetSpec;
+
+    fn tiny_corpus() -> LogStore {
+        let mut store = LogStore::default();
+        let cfg = ClusterConfig::with_workers(4);
+        let spec = DatasetSpec::by_name("wiki").unwrap();
+        let g = spec.build(0.01, 7);
+        store
+            .record_graph(
+                &g,
+                &[Algorithm::Aid, Algorithm::Pr],
+                &[Strategy::Random, Strategy::Hybrid],
+                &cfg,
+            )
+            .unwrap();
+        store
+    }
+
+    #[test]
+    fn record_produces_cross_product() {
+        let store = tiny_corpus();
+        assert_eq!(store.logs.len(), 4);
+        assert!(store.time_of("wiki", "PR", Strategy::Random).is_some());
+        assert!(store.time_of("wiki", "PR", Strategy::Ginger).is_none());
+        assert!(store.logs.iter().all(|l| l.time > 0.0));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let store = tiny_corpus();
+        let dir = std::env::temp_dir().join("gps_logs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("logs.csv");
+        store.save_csv(&path).unwrap();
+        let loaded = LogStore::load_csv(&path, &store.graph_features).unwrap();
+        assert_eq!(loaded.logs.len(), store.logs.len());
+        for (a, b) in loaded.logs.iter().zip(&store.logs) {
+            assert_eq!(a.graph, b.graph);
+            assert_eq!(a.algorithm, b.algorithm);
+            assert_eq!(a.strategy, b.strategy);
+            assert!((a.time - b.time).abs() < 1e-12);
+            assert_eq!(a.features.algo, b.features.algo);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,10 @@
+//! Execution logs, synthetic augmentation and the evaluation split
+//! (§4.2.1, §5.4).
+
+pub mod augment;
+pub mod logs;
+pub mod split;
+
+pub use augment::augment;
+pub use logs::{ExecutionLog, LogStore};
+pub use split::{test_split, TestSet};

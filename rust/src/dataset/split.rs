@@ -1,0 +1,96 @@
+//! The A/B/C/D evaluation split (§5.4).
+//!
+//! 96 test tasks = 12 graphs × 8 algorithms, partitioned by whether the
+//! graph and/or algorithm participated in building the augmented
+//! training dataset:
+//!
+//! | set | graphs    | algorithms | tasks |
+//! |-----|-----------|------------|-------|
+//! | A   | held-out  | held-out   | 4×2=8 |
+//! | B   | held-out  | training   | 4×6=24 |
+//! | C   | training  | held-out   | 8×2=16 |
+//! | D   | training  | training   | 8×6=48 |
+
+use crate::algorithms::Algorithm;
+use crate::graph::datasets;
+
+/// Test-set label.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TestSet {
+    A,
+    B,
+    C,
+    D,
+}
+
+impl TestSet {
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TestSet::A => "A",
+            TestSet::B => "B",
+            TestSet::C => "C",
+            TestSet::D => "D",
+        }
+    }
+
+    /// All four sets.
+    pub fn all() -> [TestSet; 4] {
+        [TestSet::A, TestSet::B, TestSet::C, TestSet::D]
+    }
+}
+
+/// One evaluation task.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TestTask {
+    pub graph: &'static str,
+    pub algorithm: Algorithm,
+    pub set: TestSet,
+}
+
+/// Classify a (graph, algorithm) pair.
+pub fn classify(graph: &str, algorithm: Algorithm) -> TestSet {
+    let new_graph = datasets::heldout_graphs().contains(&graph);
+    let new_algo = Algorithm::heldout().contains(&algorithm);
+    match (new_graph, new_algo) {
+        (true, true) => TestSet::A,
+        (true, false) => TestSet::B,
+        (false, true) => TestSet::C,
+        (false, false) => TestSet::D,
+    }
+}
+
+/// The full 96-task split.
+pub fn test_split() -> Vec<TestTask> {
+    let mut out = Vec::with_capacity(96);
+    for spec in datasets::CORPUS {
+        for a in Algorithm::all() {
+            out.push(TestTask { graph: spec.name, algorithm: a, set: classify(spec.name, a) });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cardinalities() {
+        let split = test_split();
+        assert_eq!(split.len(), 96);
+        let count = |s: TestSet| split.iter().filter(|t| t.set == s).count();
+        assert_eq!(count(TestSet::A), 8);
+        assert_eq!(count(TestSet::B), 24);
+        assert_eq!(count(TestSet::C), 16);
+        assert_eq!(count(TestSet::D), 48);
+    }
+
+    #[test]
+    fn classification_examples() {
+        assert_eq!(classify("stanford", Algorithm::Rw), TestSet::A);
+        assert_eq!(classify("stanford", Algorithm::Pr), TestSet::B);
+        assert_eq!(classify("wiki", Algorithm::Cc), TestSet::C);
+        assert_eq!(classify("wiki", Algorithm::Pr), TestSet::D);
+    }
+}

@@ -1,0 +1,298 @@
+//! The GAS (Gather–Apply–Scatter) vertex-program abstraction (§3.2.1,
+//! PowerGraph [11]).
+//!
+//! Algorithms implement [`VertexProgram`]; the engine executes them over
+//! a partitioned graph with master/mirror vertex replication:
+//!
+//! * **Gather** — every replica of an active vertex `v` folds
+//!   [`VertexProgram::gather`] over its *local* edges in the
+//!   [`VertexProgram::gather_edges`] direction, reading the neighbour's
+//!   (mirror-synchronised) value; partial accumulators are combined with
+//!   [`VertexProgram::sum`] and sent to the master.
+//! * **Apply** — the master computes the new vertex value from the old
+//!   value and the global accumulator, then broadcasts it to mirrors.
+//! * **Scatter** — every replica walks its local edges in the
+//!   [`VertexProgram::scatter_edges`] direction and may *activate* the
+//!   neighbour for the next superstep.
+//!
+//! Values are double-buffered: every gather in superstep `t` reads
+//! values committed at `t − 1` (synchronous BSP semantics, like
+//! PowerGraph's sync engine).
+
+use crate::graph::VertexId;
+
+/// Which incident edges a phase visits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EdgeDirection {
+    /// No edges (phase skipped).
+    None,
+    /// In-edges (neighbour = source).
+    In,
+    /// Out-edges (neighbour = destination).
+    Out,
+    /// Both directions.
+    Both,
+}
+
+/// Anything that travels between workers: we account its serialized
+/// size for the communication cost model.
+pub trait Payload: Clone + Send {
+    /// Serialized size in bytes (8-byte scalar convention, matching the
+    /// MPI doubles the paper's engine exchanges).
+    fn bytes(&self) -> usize;
+}
+
+impl Payload for f64 {
+    fn bytes(&self) -> usize {
+        8
+    }
+}
+impl Payload for i64 {
+    fn bytes(&self) -> usize {
+        8
+    }
+}
+impl Payload for u32 {
+    fn bytes(&self) -> usize {
+        4
+    }
+}
+impl Payload for () {
+    fn bytes(&self) -> usize {
+        0
+    }
+}
+impl<T: Payload> Payload for Vec<T> {
+    fn bytes(&self) -> usize {
+        8 + self.iter().map(Payload::bytes).sum::<usize>()
+    }
+}
+impl<A: Payload, B: Payload> Payload for (A, B) {
+    fn bytes(&self) -> usize {
+        self.0.bytes() + self.1.bytes()
+    }
+}
+impl<T: Payload> Payload for Option<T> {
+    fn bytes(&self) -> usize {
+        1 + self.as_ref().map_or(0, Payload::bytes)
+    }
+}
+
+/// Static per-vertex graph facts handed to programs (degrees are global
+/// properties the engine pre-computes and replicates, as real GAS
+/// engines do).
+pub struct GraphInfo<'a> {
+    pub num_vertices: usize,
+    pub num_edges: usize,
+    pub directed: bool,
+    pub in_degree: &'a [u32],
+    pub out_degree: &'a [u32],
+}
+
+impl GraphInfo<'_> {
+    /// Total degree under the graph's direction convention.
+    pub fn degree(&self, v: VertexId) -> usize {
+        if self.directed {
+            (self.in_degree[v as usize] + self.out_degree[v as usize]) as usize
+        } else {
+            self.out_degree[v as usize] as usize
+        }
+    }
+}
+
+/// Initial activation set.
+#[derive(Clone, Debug)]
+pub enum InitialActive {
+    All,
+    Vertices(Vec<VertexId>),
+}
+
+/// A GAS vertex program.
+pub trait VertexProgram: Sync {
+    /// Per-vertex state (replicated master→mirror).
+    type Value: Payload;
+    /// Gather accumulator (mirror→master).
+    type Gather: Payload;
+
+    /// Human-readable name (the paper's algorithm alias, e.g. `PR`).
+    fn name(&self) -> &'static str;
+
+    /// Initial value of every vertex.
+    fn init(&self, v: VertexId, g: &GraphInfo) -> Self::Value;
+
+    /// Which vertices start active (ignored under [`fixed_rounds`]).
+    ///
+    /// [`fixed_rounds`]: VertexProgram::fixed_rounds
+    fn initial_active(&self, g: &GraphInfo) -> InitialActive {
+        let _ = g;
+        InitialActive::All
+    }
+
+    /// `Some(k)`: run exactly `k` supersteps with every vertex active
+    /// (iteration-count algorithms like PageRank); `None`:
+    /// activation-driven until quiescent.
+    fn fixed_rounds(&self) -> Option<usize> {
+        None
+    }
+
+    /// Edges visited by the gather phase in superstep `step`
+    /// (multi-phase algorithms switch direction per phase).
+    fn gather_edges(&self, step: usize) -> EdgeDirection;
+
+    /// Identity accumulator.
+    fn gather_init(&self) -> Self::Gather;
+
+    /// Per-edge gather for active vertex `v` over neighbour `u`.
+    /// `rank` is the index of `v` in `u`'s neighbour list in the
+    /// relevant direction — only computed when [`needs_edge_rank`]
+    /// returns true (deterministic random-walk routing needs it).
+    ///
+    /// [`needs_edge_rank`]: VertexProgram::needs_edge_rank
+    #[allow(clippy::too_many_arguments)]
+    fn gather(
+        &self,
+        step: usize,
+        v: VertexId,
+        v_val: &Self::Value,
+        u: VertexId,
+        u_val: &Self::Value,
+        rank: u32,
+        g: &GraphInfo,
+    ) -> Self::Gather;
+
+    /// Commutative, associative combine.
+    fn sum(&self, a: Self::Gather, b: Self::Gather) -> Self::Gather;
+
+    /// In-place fold of one edge's gather contribution into the
+    /// accumulator. The default delegates to [`gather`] + [`sum`];
+    /// list-accumulating programs (TC/CC/APCN/GC) override it to push
+    /// directly and avoid a per-edge allocation — the engine's hottest
+    /// loop runs through this method.
+    ///
+    /// [`gather`]: VertexProgram::gather
+    /// [`sum`]: VertexProgram::sum
+    #[allow(clippy::too_many_arguments)]
+    fn gather_fold(
+        &self,
+        acc: &mut Self::Gather,
+        step: usize,
+        v: VertexId,
+        v_val: &Self::Value,
+        u: VertexId,
+        u_val: &Self::Value,
+        rank: u32,
+        g: &GraphInfo,
+    ) {
+        let contribution = self.gather(step, v, v_val, u, u_val, rank, g);
+        let prev = std::mem::replace(acc, self.gather_init());
+        *acc = self.sum(prev, contribution);
+    }
+
+    /// Master-side apply; returns the new value.
+    fn apply(&self, step: usize, v: VertexId, old: &Self::Value, acc: Self::Gather, g: &GraphInfo)
+        -> Self::Value;
+
+    /// Edges visited by the scatter phase in superstep `step`.
+    fn scatter_edges(&self, step: usize) -> EdgeDirection {
+        let _ = step;
+        EdgeDirection::None
+    }
+
+    /// Per-edge scatter: decide whether neighbour `u` activates next
+    /// superstep.
+    fn scatter(&self, step: usize, v: VertexId, new_val: &Self::Value, u: VertexId, g: &GraphInfo)
+        -> bool {
+        let _ = (step, v, new_val, u, g);
+        false
+    }
+
+    /// Whether `v` itself re-activates next superstep after applying
+    /// (walker-holding vertices must clear themselves).
+    fn reactivate_self(&self, step: usize, v: VertexId, new_val: &Self::Value, g: &GraphInfo)
+        -> bool {
+        let _ = (step, v, new_val, g);
+        false
+    }
+
+    /// Hard superstep cap for activation-driven programs (safety net).
+    fn max_supersteps(&self) -> usize {
+        100
+    }
+
+    /// Whether gather needs the edge-rank argument.
+    fn needs_edge_rank(&self) -> bool {
+        false
+    }
+
+    /// Relative CPU cost of one gather edge visit (1.0 = one simple
+    /// arithmetic update).
+    fn gather_op_cost(&self) -> f64 {
+        1.0
+    }
+
+    /// Extra CPU cost per *byte* of the neighbour value consumed by one
+    /// gather (set-intersection algorithms pay per element).
+    fn gather_cost_per_byte(&self) -> f64 {
+        0.0
+    }
+
+    /// CPU cost of applying vertex `v` in superstep `step` (override for
+    /// super-linear local work such as APCN's neighbour-pair
+    /// enumeration).
+    fn apply_cost(&self, step: usize, v: VertexId, g: &GraphInfo) -> f64 {
+        let _ = (step, v, g);
+        1.0
+    }
+
+    /// Bytes this vertex's apply emits to the global result store in
+    /// superstep `step` (APCN's pair records); charged as cross-machine
+    /// traffic.
+    fn apply_emit_bytes(&self, step: usize, v: VertexId, g: &GraphInfo) -> usize {
+        let _ = (step, v, g);
+        0
+    }
+
+    /// Relative CPU cost of one scatter edge visit.
+    fn scatter_op_cost(&self) -> f64 {
+        1.0
+    }
+
+    /// Whether the engine charges a final master→leader result collect.
+    fn collect_result(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_sizes() {
+        assert_eq!(1.0f64.bytes(), 8);
+        assert_eq!(7u32.bytes(), 4);
+        assert_eq!(().bytes(), 0);
+        assert_eq!(vec![1u32, 2, 3].bytes(), 8 + 12);
+        assert_eq!((1.0f64, 2u32).bytes(), 12);
+        assert_eq!(Some(3.0f64).bytes(), 9);
+        assert_eq!(None::<f64>.bytes(), 1);
+        let nested: Vec<Vec<u32>> = vec![vec![1], vec![2, 3]];
+        assert_eq!(nested.bytes(), 8 + (8 + 4) + (8 + 8));
+    }
+
+    #[test]
+    fn graph_info_degree_convention() {
+        let ind = [1u32, 0];
+        let outd = [0u32, 1];
+        let gi = GraphInfo {
+            num_vertices: 2,
+            num_edges: 1,
+            directed: true,
+            in_degree: &ind,
+            out_degree: &outd,
+        };
+        assert_eq!(gi.degree(0), 1);
+        let gu = GraphInfo { directed: false, ..gi };
+        assert_eq!(gu.degree(1), 1);
+    }
+}

@@ -1,0 +1,420 @@
+//! The distributed GAS graph-computation engine (§3.2).
+//!
+//! The engine executes a [`gas::VertexProgram`] over a partitioned graph
+//! with exact algorithm semantics (results are bit-identical regardless
+//! of partitioning) while charging the [`cost::ClusterConfig`] model for
+//! every compute op and every master↔mirror message. The returned
+//! [`RunResult::sim`] time is the execution-log label the ETRM learns
+//! to predict; it depends on the partitioning through load balance,
+//! replication factor and locality — the channels §1 identifies.
+
+pub mod cost;
+pub mod gas;
+pub mod worker;
+
+use crate::graph::{Graph, VertexId};
+use crate::partition::Partitioning;
+
+use cost::{ClusterConfig, OpCounts, SimTime, StepCost};
+use gas::{EdgeDirection, GraphInfo, InitialActive, Payload, VertexProgram};
+use worker::{build_local_edges, LocalEdges};
+
+/// Result of one engine run.
+#[derive(Clone, Debug)]
+pub struct RunResult<V> {
+    /// Final vertex values (global, by vertex id).
+    pub values: Vec<V>,
+    /// Simulated execution time under the cluster cost model.
+    pub sim: SimTime,
+    /// Operation counters.
+    pub ops: OpCounts,
+}
+
+/// Execute `prog` on `g` partitioned by `p` under the `cfg` cost model.
+pub fn run<P: VertexProgram>(
+    g: &Graph,
+    p: &Partitioning,
+    prog: &P,
+    cfg: &ClusterConfig,
+) -> RunResult<P::Value> {
+    assert_eq!(p.num_workers, cfg.num_workers, "partitioning/cluster mismatch");
+    let n = g.num_vertices();
+    let in_degree: Vec<u32> = g.vertices().map(|v| g.in_degree(v) as u32).collect();
+    let out_degree: Vec<u32> = g.vertices().map(|v| g.out_degree(v) as u32).collect();
+    let gi = GraphInfo {
+        num_vertices: n,
+        num_edges: g.num_edges(),
+        directed: g.directed,
+        in_degree: &in_degree,
+        out_degree: &out_degree,
+    };
+    let locals = build_local_edges(g, p);
+    let mut values: Vec<P::Value> = g.vertices().map(|v| prog.init(v, &gi)).collect();
+    let mut ops = OpCounts::default();
+    let mut sim = SimTime::default();
+
+    let mut active = vec![false; n];
+    match prog.fixed_rounds() {
+        Some(_) => active.iter_mut().for_each(|a| *a = true),
+        None => match prog.initial_active(&gi) {
+            InitialActive::All => active.iter_mut().for_each(|a| *a = true),
+            InitialActive::Vertices(vs) => vs.iter().for_each(|&v| active[v as usize] = true),
+        },
+    }
+
+    // reusable gather buffers (drained every superstep)
+    let mut accs: Vec<Option<P::Gather>> = (0..n).map(|_| None).collect();
+    let mut worker_acc: Vec<Option<P::Gather>> = (0..n).map(|_| None).collect();
+    let mut touched: Vec<VertexId> = Vec::new();
+    let mut step = 0usize;
+    loop {
+        match prog.fixed_rounds() {
+            Some(k) => {
+                if step >= k {
+                    break;
+                }
+            }
+            None => {
+                if step >= prog.max_supersteps() || !active.iter().any(|&a| a) {
+                    break;
+                }
+            }
+        }
+        let gather_dir = prog.gather_edges(step);
+        let scatter_dir = prog.scatter_edges(step);
+        let mut sc = StepCost::new(cfg);
+        let mut pending: Vec<(VertexId, P::Value)> = Vec::new();
+        let mut mirror_traffic = false;
+        let mut next_active = vec![false; n];
+
+        // ---- Gather: one sequential sweep over each worker's sorted
+        // edge arrays (no per-vertex binary searches — the former hot
+        // spot; see EXPERIMENTS.md §Perf). Partials fold into `accs`
+        // in ascending-worker order, preserving the deterministic
+        // combine order of the per-replica formulation. ----
+        if gather_dir != EdgeDirection::None {
+            let needs_rank = prog.needs_edge_rank();
+            let op_cost = prog.gather_op_cost();
+            let per_byte = prog.gather_cost_per_byte();
+            let (use_in, use_out) = effective_dirs(gather_dir, g.directed);
+            for (w, local) in locals.iter().enumerate() {
+                debug_assert!(touched.is_empty());
+                let mut cost = 0.0;
+                let mut count = 0u64;
+                let mut sweep = |list: &[crate::graph::Edge]| {
+                    let mut i = 0usize;
+                    while i < list.len() {
+                        let v = list[i].0;
+                        let mut j = i + 1;
+                        while j < list.len() && list[j].0 == v {
+                            j += 1;
+                        }
+                        if active[v as usize] {
+                            let v_val = &values[v as usize];
+                            if worker_acc[v as usize].is_none() {
+                                worker_acc[v as usize] = Some(prog.gather_init());
+                                touched.push(v);
+                            }
+                            let acc = worker_acc[v as usize].as_mut().unwrap();
+                            for &(_, u) in &list[i..j] {
+                                let u_val = &values[u as usize];
+                                let rank =
+                                    if needs_rank { edge_rank(g, u, v, gather_dir) } else { 0 };
+                                prog.gather_fold(acc, step, v, v_val, u, u_val, rank, &gi);
+                                cost += op_cost + per_byte * u_val.bytes() as f64;
+                            }
+                            count += (j - i) as u64;
+                        }
+                        i = j;
+                    }
+                };
+                if use_in {
+                    sweep(&local.by_dst);
+                }
+                if use_out {
+                    sweep(&local.by_src);
+                }
+                sc.compute_ops[w] += cost;
+                ops.gathers += count;
+                // flush this worker's partials toward the masters
+                for &v in &touched {
+                    let partial = worker_acc[v as usize].take().expect("touched ⇒ some");
+                    let master = p.master[v as usize] as usize;
+                    if w != master {
+                        let b = partial.bytes();
+                        sc.charge_message(cfg, w, master, b);
+                        ops.messages += 1;
+                        ops.bytes += b as u64;
+                        mirror_traffic = true;
+                    }
+                    accs[v as usize] = Some(match accs[v as usize].take() {
+                        None => partial,
+                        Some(a) => prog.sum(a, partial),
+                    });
+                }
+                touched.clear();
+            }
+        }
+
+        // ---- Apply (reads old values, writes pending) ----
+        for v in 0..n as VertexId {
+            if !active[v as usize] {
+                continue;
+            }
+            let master = p.master[v as usize] as usize;
+            let acc = accs[v as usize].take().unwrap_or_else(|| prog.gather_init());
+            let new_val = prog.apply(step, v, &values[v as usize], acc, &gi);
+            sc.compute_ops[master] += prog.apply_cost(step, v, &gi);
+            ops.applies += 1;
+            if prog.reactivate_self(step, v, &new_val, &gi) {
+                next_active[v as usize] = true;
+            }
+            let emit = prog.apply_emit_bytes(step, v, &gi);
+            if emit > 0 {
+                // result-store records leave the master's machine
+                let target = (master + cfg.num_workers / cfg.num_machines) % cfg.num_workers;
+                sc.charge_message(cfg, master, target, emit);
+                ops.bytes += emit as u64;
+            }
+            // broadcast to mirrors
+            let vb = new_val.bytes();
+            for &w in &p.replicas[v as usize] {
+                if w as usize != master {
+                    sc.charge_message(cfg, master, w as usize, vb);
+                    ops.messages += 1;
+                    ops.bytes += vb as u64;
+                    mirror_traffic = true;
+                }
+            }
+            pending.push((v, new_val));
+        }
+        if mirror_traffic {
+            sc.message_rounds += 2; // gather-up + apply-down
+        }
+
+        // ---- Commit (BSP barrier between minor-steps) ----
+        for (v, val) in pending {
+            values[v as usize] = val;
+        }
+
+        // ---- Scatter (reads new values, drives activation) ----
+        if scatter_dir != EdgeDirection::None {
+            let mut scatter_msgs = false;
+            for v in 0..n as VertexId {
+                if !active[v as usize] {
+                    continue;
+                }
+                for &w in &p.replicas[v as usize] {
+                    let w = w as usize;
+                    let neighbors: Vec<VertexId> =
+                        neighbors_local(&locals[w], v, scatter_dir, g.directed).collect();
+                    for u in neighbors {
+                        sc.compute_ops[w] += prog.scatter_op_cost();
+                        ops.scatters += 1;
+                        if prog.scatter(step, v, &values[v as usize], u, &gi)
+                            && !next_active[u as usize]
+                        {
+                            next_active[u as usize] = true;
+                            let mu = p.master[u as usize] as usize;
+                            if mu != w {
+                                sc.charge_message(cfg, w, mu, 8);
+                                ops.messages += 1;
+                                ops.bytes += 8;
+                                scatter_msgs = true;
+                            }
+                        }
+                    }
+                }
+            }
+            if scatter_msgs {
+                sc.message_rounds += 1;
+            }
+        }
+
+        sim.add_step(&sc, cfg);
+        ops.supersteps += 1;
+        step += 1;
+        if prog.fixed_rounds().is_none() {
+            active = next_active;
+        }
+    }
+
+    // ---- Final collect: masters ship results to the leader (worker 0) ----
+    if prog.collect_result() {
+        let mut sc = StepCost::new(cfg);
+        for v in 0..n as VertexId {
+            let master = p.master[v as usize] as usize;
+            if master != 0 {
+                let b = values[v as usize].bytes();
+                sc.charge_message(cfg, master, 0, b);
+                ops.bytes += b as u64;
+            }
+        }
+        sc.message_rounds = 1;
+        sim.add_step(&sc, cfg);
+    }
+
+    RunResult { values, sim, ops }
+}
+
+/// Which local edge lists a direction maps to. Undirected graphs store
+/// each edge once in canonical order, so any direction must union both
+/// lists to see every incident edge exactly once.
+fn effective_dirs(dir: EdgeDirection, directed: bool) -> (bool, bool) {
+    match (dir, directed) {
+        (EdgeDirection::None, _) => (false, false),
+        (EdgeDirection::In, true) => (true, false),
+        (EdgeDirection::Out, true) => (false, true),
+        (EdgeDirection::Both, true) => (true, true),
+        (_, false) => (true, true),
+    }
+}
+
+/// Local neighbours of `v` in the given direction (scatter iteration).
+fn neighbors_local<'a>(
+    local: &'a LocalEdges,
+    v: VertexId,
+    dir: EdgeDirection,
+    directed: bool,
+) -> impl Iterator<Item = VertexId> + 'a {
+    let (use_in, use_out) = effective_dirs(dir, directed);
+    let ins: &[crate::graph::Edge] = if use_in { local.in_of(v) } else { &[] };
+    let outs: &[crate::graph::Edge] = if use_out { local.out_of(v) } else { &[] };
+    ins.iter().chain(outs.iter()).map(|&(_, u)| u)
+}
+
+/// Index of `dst` in `src`'s neighbour list for deterministic walk
+/// routing. For `In`-gather the edge is (u=src → v=dst), so the rank is
+/// `v`'s position among `u`'s out-neighbours.
+fn edge_rank(g: &Graph, u: VertexId, v: VertexId, dir: EdgeDirection) -> u32 {
+    let list = match dir {
+        EdgeDirection::In => g.out_neighbors(u),
+        EdgeDirection::Out => g.in_neighbors(u),
+        _ => g.out_neighbors(u),
+    };
+    list.binary_search(&v).unwrap_or(0) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::Strategy;
+
+    /// Degree-count program: gather 1 over in-edges, one round.
+    struct InDegreeProg;
+    impl VertexProgram for InDegreeProg {
+        type Value = f64;
+        type Gather = f64;
+        fn name(&self) -> &'static str {
+            "indeg"
+        }
+        fn init(&self, _v: VertexId, _g: &GraphInfo) -> f64 {
+            0.0
+        }
+        fn fixed_rounds(&self) -> Option<usize> {
+            Some(1)
+        }
+        fn gather_edges(&self, _step: usize) -> EdgeDirection {
+            EdgeDirection::In
+        }
+        fn gather_init(&self) -> f64 {
+            0.0
+        }
+        fn gather(
+            &self,
+            _s: usize,
+            _v: VertexId,
+            _vv: &f64,
+            _u: VertexId,
+            _uv: &f64,
+            _r: u32,
+            _g: &GraphInfo,
+        ) -> f64 {
+            1.0
+        }
+        fn sum(&self, a: f64, b: f64) -> f64 {
+            a + b
+        }
+        fn apply(&self, _s: usize, _v: VertexId, _old: &f64, acc: f64, _g: &GraphInfo) -> f64 {
+            acc
+        }
+    }
+
+    fn small_graph() -> Graph {
+        let mut rng = crate::util::rng::Rng::new(200);
+        crate::graph::gen::chung_lu::generate("t", 300, 1800, 2.2, true, &mut rng)
+    }
+
+    #[test]
+    fn indegree_exact_under_every_strategy() {
+        let g = small_graph();
+        let cfg = ClusterConfig::with_workers(8);
+        for s in Strategy::all() {
+            let p = s.partition(&g, 8);
+            let r = run(&g, &p, &InDegreeProg, &cfg);
+            for v in g.vertices() {
+                assert_eq!(
+                    r.values[v as usize],
+                    g.in_degree(v) as f64,
+                    "strategy {} vertex {v}",
+                    s.name()
+                );
+            }
+            assert_eq!(r.ops.supersteps, 1);
+            assert_eq!(r.ops.gathers, g.num_edges() as u64);
+        }
+    }
+
+    #[test]
+    fn sim_time_depends_on_partitioning() {
+        // needs a graph large enough that comm/compute dominate the
+        // fixed per-superstep barrier overhead
+        let mut rng = crate::util::rng::Rng::new(201);
+        let g = crate::graph::gen::chung_lu::generate("big", 8000, 64_000, 2.1, true, &mut rng);
+        let cfg = ClusterConfig::with_workers(8);
+        let times: Vec<f64> = Strategy::inventory()
+            .iter()
+            .map(|s| run(&g, &s.partition(&g, 8), &InDegreeProg, &cfg).sim.total)
+            .collect();
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        assert!(max > min * 1.05, "strategies must differentiate: {times:?}");
+    }
+
+    #[test]
+    fn results_identical_across_strategies_and_worker_counts() {
+        let g = small_graph();
+        let reference = {
+            let p = Strategy::Random.partition(&g, 4);
+            run(&g, &p, &InDegreeProg, &ClusterConfig::with_workers(4)).values
+        };
+        for &w in &[1usize, 2, 16, 64] {
+            let p = Strategy::Hdrf(50).partition(&g, w);
+            let r = run(&g, &p, &InDegreeProg, &ClusterConfig::with_workers(w));
+            assert_eq!(r.values, reference, "workers={w}");
+        }
+    }
+
+    #[test]
+    fn more_workers_reduce_compute_component() {
+        // BSP max-compute shrinks with workers (scalability, Fig 4 shape)
+        let g = small_graph();
+        let t4 = {
+            let p = Strategy::TwoD.partition(&g, 4);
+            run(&g, &p, &InDegreeProg, &ClusterConfig::with_workers(4)).sim.compute
+        };
+        let t16 = {
+            let p = Strategy::TwoD.partition(&g, 16);
+            run(&g, &p, &InDegreeProg, &ClusterConfig::with_workers(16)).sim.compute
+        };
+        assert!(t16 < t4, "compute {t16} < {t4}");
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn worker_count_mismatch_panics() {
+        let g = small_graph();
+        let p = Strategy::Random.partition(&g, 4);
+        run(&g, &p, &InDegreeProg, &ClusterConfig::with_workers(8));
+    }
+}

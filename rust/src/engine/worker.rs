@@ -1,0 +1,95 @@
+//! Per-worker local edge storage.
+//!
+//! After partitioning, each worker owns a subset of the edge list. The
+//! engine needs, per worker, "the local in/out-edges of vertex `v`" —
+//! served by two sorted copies of the worker's edges (by source and by
+//! destination) with binary-searched group lookup, mirroring the
+//! paper's sorted-edge-list representation (§3.1) at worker scope.
+
+use crate::graph::{Edge, Graph, VertexId};
+use crate::partition::Partitioning;
+
+/// One worker's edges, indexed both ways.
+#[derive(Clone, Debug, Default)]
+pub struct LocalEdges {
+    /// Worker's edges sorted by (src, dst).
+    pub by_src: Vec<Edge>,
+    /// Worker's edges as (dst, src), sorted.
+    pub by_dst: Vec<Edge>,
+}
+
+fn group<'a>(sorted: &'a [Edge], key: VertexId) -> &'a [Edge] {
+    let lo = sorted.partition_point(|&(a, _)| a < key);
+    let hi = sorted.partition_point(|&(a, _)| a <= key);
+    &sorted[lo..hi]
+}
+
+impl LocalEdges {
+    /// Out-edges of `v` held by this worker, as `(v, dst)` pairs.
+    pub fn out_of(&self, v: VertexId) -> &[Edge] {
+        group(&self.by_src, v)
+    }
+
+    /// In-edges of `v` held by this worker, as `(v, src)` pairs.
+    pub fn in_of(&self, v: VertexId) -> &[Edge] {
+        group(&self.by_dst, v)
+    }
+
+    /// Number of edges on this worker.
+    pub fn len(&self) -> usize {
+        self.by_src.len()
+    }
+
+    /// Whether the worker holds no edges.
+    pub fn is_empty(&self) -> bool {
+        self.by_src.is_empty()
+    }
+}
+
+/// Build per-worker local edge indexes from a partitioning.
+pub fn build_local_edges(g: &Graph, p: &Partitioning) -> Vec<LocalEdges> {
+    let mut locals = vec![LocalEdges::default(); p.num_workers];
+    for (e, &(u, v)) in g.edges().iter().enumerate() {
+        let w = p.edge_worker[e] as usize;
+        locals[w].by_src.push((u, v));
+        locals[w].by_dst.push((v, u));
+    }
+    for l in &mut locals {
+        l.by_src.sort_unstable();
+        l.by_dst.sort_unstable();
+    }
+    locals
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    #[test]
+    fn local_lookup() {
+        let g = Graph::from_edges("t", 5, vec![(0, 1), (0, 2), (1, 2), (3, 0)], true);
+        let p = Partitioning::from_edge_assignment(&g, 2, vec![0, 1, 0, 0]);
+        let locals = build_local_edges(&g, &p);
+        assert_eq!(locals[0].len(), 3);
+        assert_eq!(locals[1].len(), 1);
+        assert_eq!(locals[0].out_of(0), &[(0, 1)]);
+        assert_eq!(locals[1].out_of(0), &[(0, 2)]);
+        assert_eq!(locals[0].in_of(0), &[(0, 3)], "(dst, src) layout");
+        assert_eq!(locals[0].in_of(2), &[(2, 1)]);
+        assert!(locals[0].out_of(4).is_empty());
+    }
+
+    #[test]
+    fn edge_conservation() {
+        let mut rng = crate::util::rng::Rng::new(100);
+        let g = crate::graph::gen::erdos::generate("t", 100, 600, true, &mut rng);
+        let p = crate::partition::Strategy::Random.partition(&g, 8);
+        let locals = build_local_edges(&g, &p);
+        assert_eq!(locals.iter().map(LocalEdges::len).sum::<usize>(), 600);
+        for (w, l) in locals.iter().enumerate() {
+            assert_eq!(l.by_src.len(), l.by_dst.len());
+            assert_eq!(l.len(), p.edges_per_worker[w]);
+        }
+    }
+}

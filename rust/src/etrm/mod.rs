@@ -1,0 +1,8 @@
+//! The Execution Time Regression Model and strategy selector
+//! (§4.2, Fig 2 steps 3-5).
+
+pub mod model;
+pub mod scores;
+
+pub use model::{Etrm, EtrmBackend};
+pub use scores::{rank_of_selected, TaskScores};

@@ -1,0 +1,174 @@
+//! ETRM training, prediction and strategy selection.
+//!
+//! Fig 2: the task feature (data ⊕ algorithm) is encoded once per
+//! candidate strategy (one-hot), the regressor predicts each
+//! strategy's execution time ŷ_pⱼ, and the selector returns the argmin
+//! (step 4). Training consumes execution logs — usually the augmented
+//! synthetic set (§4.2.1).
+
+use std::time::Instant;
+
+use crate::dataset::logs::ExecutionLog;
+use crate::features::{encode, TaskFeatures};
+use crate::ml::gbdt::{Gbdt, GbdtParams};
+use crate::ml::linear::Ridge;
+use crate::ml::mlp::{Mlp, MlpParams};
+use crate::ml::{Regressor, TrainSet};
+use crate::partition::Strategy;
+
+/// The regression backend behind the ETRM.
+pub enum EtrmBackend {
+    /// The paper's shipped model.
+    Gbdt(Gbdt),
+    /// Ridge baseline.
+    Ridge(Ridge),
+    /// MLP baseline.
+    Mlp(Mlp),
+    /// Any external regressor (e.g. the PJRT AOT inference path).
+    External(Box<dyn Regressor>),
+}
+
+impl EtrmBackend {
+    fn regressor(&self) -> &dyn Regressor {
+        match self {
+            EtrmBackend::Gbdt(m) => m,
+            EtrmBackend::Ridge(m) => m,
+            EtrmBackend::Mlp(m) => m,
+            EtrmBackend::External(m) => m.as_ref(),
+        }
+    }
+}
+
+/// A trained Execution Time Regression Model.
+pub struct Etrm {
+    pub backend: EtrmBackend,
+}
+
+/// Build the encoded training set from logs.
+pub fn encode_logs(logs: &[ExecutionLog]) -> TrainSet {
+    let mut train = TrainSet::default();
+    for l in logs {
+        train.push(encode(&l.features, l.strategy).to_vec(), l.time);
+    }
+    train
+}
+
+impl Etrm {
+    /// Train the paper's XGBoost-style model on execution logs.
+    pub fn train_gbdt(logs: &[ExecutionLog], params: GbdtParams) -> Self {
+        Etrm { backend: EtrmBackend::Gbdt(Gbdt::fit(&encode_logs(logs), params)) }
+    }
+
+    /// Train the ridge baseline.
+    pub fn train_ridge(logs: &[ExecutionLog], lambda: f64) -> Self {
+        Etrm { backend: EtrmBackend::Ridge(Ridge::fit(&encode_logs(logs), lambda, true)) }
+    }
+
+    /// Train the MLP baseline.
+    pub fn train_mlp(logs: &[ExecutionLog], params: MlpParams) -> Self {
+        Etrm { backend: EtrmBackend::Mlp(Mlp::fit(&encode_logs(logs), params)) }
+    }
+
+    /// Predicted execution time of one task under one strategy.
+    pub fn predict(&self, task: &TaskFeatures, strategy: Strategy) -> f64 {
+        self.backend.regressor().predict(&encode(task, strategy))
+    }
+
+    /// Ŷ over the full 11-strategy inventory (Fig 2 step 3).
+    pub fn predict_all(&self, task: &TaskFeatures) -> Vec<(Strategy, f64)> {
+        Strategy::inventory().into_iter().map(|s| (s, self.predict(task, s))).collect()
+    }
+
+    /// Select the strategy with the fastest predicted time (step 4).
+    pub fn select(&self, task: &TaskFeatures) -> Strategy {
+        self.predict_all(task)
+            .into_iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(s, _)| s)
+            .expect("non-empty inventory")
+    }
+
+    /// Select and report the wall-clock selection latency (the
+    /// model-inference part of the §5.7 cost).
+    pub fn select_timed(&self, task: &TaskFeatures) -> (Strategy, f64) {
+        let t0 = Instant::now();
+        let s = self.select(task);
+        (s, t0.elapsed().as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::Algorithm;
+    use crate::dataset::logs::LogStore;
+    use crate::engine::cost::ClusterConfig;
+    use crate::graph::datasets::DatasetSpec;
+
+    /// Train on two graphs' logs; the model must reproduce the ordering
+    /// of strategies on the training tasks (in-sample sanity).
+    #[test]
+    fn in_sample_selection_close_to_best() {
+        let cfg = ClusterConfig::with_workers(8);
+        let mut store = LogStore::default();
+        for name in ["wiki", "epinions"] {
+            let g = DatasetSpec::by_name(name).unwrap().build(0.02, 11);
+            store
+                .record_graph(&g, &[Algorithm::Pr, Algorithm::Tc], &Strategy::inventory(), &cfg)
+                .unwrap();
+        }
+        // interpolation regime: no sub-sampling, no regularisation —
+        // in-sample the model must reproduce the observed ordering
+        let etrm = Etrm::train_gbdt(
+            &store.logs,
+            GbdtParams {
+                n_estimators: 300,
+                max_depth: 8,
+                learning_rate: 0.1,
+                subsample: 1.0,
+                colsample_bytree: 1.0,
+                min_child_weight: 0.5,
+                gamma: 0.0,
+                reg_alpha: 0.0,
+                ..GbdtParams::fast()
+            },
+        );
+        for (graph, algo) in [("wiki", Algorithm::Pr), ("epinions", Algorithm::Tc)] {
+            let task = store
+                .logs
+                .iter()
+                .find(|l| l.graph == graph && l.algorithm == algo.name())
+                .unwrap()
+                .features
+                .clone();
+            let selected = etrm.select(&task);
+            let t_sel = store.time_of(graph, algo.name(), selected).unwrap();
+            let times = store.times_of_task(graph, algo.name());
+            let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
+            let worst = times.iter().cloned().fold(0.0, f64::max);
+            assert!(
+                t_sel <= best + 0.5 * (worst - best),
+                "{graph}/{} selected {} at {t_sel} (best {best}, worst {worst})",
+                algo.name(),
+                selected.name()
+            );
+        }
+    }
+
+    #[test]
+    fn predict_all_covers_inventory() {
+        let cfg = ClusterConfig::with_workers(4);
+        let mut store = LogStore::default();
+        let g = DatasetSpec::by_name("wiki").unwrap().build(0.01, 5);
+        store
+            .record_graph(&g, &[Algorithm::Aid], &Strategy::inventory(), &cfg)
+            .unwrap();
+        let etrm = Etrm::train_ridge(&store.logs, 1.0);
+        let preds = etrm.predict_all(&store.logs[0].features);
+        assert_eq!(preds.len(), 11);
+        assert!(preds.iter().all(|(_, t)| t.is_finite()));
+        let (s, dt) = etrm.select_timed(&store.logs[0].features);
+        assert!(Strategy::inventory().contains(&s));
+        assert!(dt >= 0.0 && dt < 1.0);
+    }
+}

@@ -1,0 +1,85 @@
+//! Evaluation metrics for a selected strategy (§5.4, Eq. 19-21).
+
+use crate::partition::Strategy;
+
+/// Score triple of one task.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TaskScores {
+    /// `T_best / T_sel` ∈ (0, 1].
+    pub best: f64,
+    /// `T_worst / T_sel` ≥ 1 when the selection isn't the worst.
+    pub worst: f64,
+    /// `T_avg / T_sel`.
+    pub avg: f64,
+}
+
+impl TaskScores {
+    /// Compute from the per-strategy times of a task and the selected
+    /// strategy's time.
+    pub fn compute(times: &[f64], t_sel: f64) -> Self {
+        assert!(!times.is_empty() && t_sel > 0.0);
+        let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        let worst = times.iter().cloned().fold(0.0, f64::max);
+        let avg = times.iter().sum::<f64>() / times.len() as f64;
+        TaskScores { best: best / t_sel, worst: worst / t_sel, avg: avg / t_sel }
+    }
+}
+
+/// 1-based rank of the selected strategy among the candidates by
+/// execution time (rank 1 = the fastest; ties share the better rank,
+/// so selecting a time equal to the best scores rank 1).
+pub fn rank_of_selected(times: &[(Strategy, f64)], selected: Strategy) -> usize {
+    let t_sel = times
+        .iter()
+        .find(|(s, _)| *s == selected)
+        .map(|(_, t)| *t)
+        .expect("selected strategy must be in the candidate list");
+    1 + times.iter().filter(|(s, t)| *s != selected && *t < t_sel).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq_19_20_21() {
+        let times = [2.0, 4.0, 6.0];
+        let s = TaskScores::compute(&times, 2.0); // picked the best
+        assert_eq!(s.best, 1.0);
+        assert_eq!(s.worst, 3.0);
+        assert_eq!(s.avg, 2.0);
+        let s = TaskScores::compute(&times, 4.0); // picked the middle
+        assert_eq!(s.best, 0.5);
+        assert_eq!(s.worst, 1.5);
+        assert_eq!(s.avg, 1.0);
+    }
+
+    #[test]
+    fn rank_computation() {
+        let times = vec![
+            (Strategy::OneDSrc, 5.0),
+            (Strategy::Random, 1.0),
+            (Strategy::Hybrid, 3.0),
+        ];
+        assert_eq!(rank_of_selected(&times, Strategy::Random), 1);
+        assert_eq!(rank_of_selected(&times, Strategy::Hybrid), 2);
+        assert_eq!(rank_of_selected(&times, Strategy::OneDSrc), 3);
+    }
+
+    #[test]
+    fn rank_with_ties_takes_better() {
+        let times = vec![
+            (Strategy::OneDSrc, 1.0),
+            (Strategy::Random, 1.0),
+            (Strategy::Hybrid, 2.0),
+        ];
+        assert_eq!(rank_of_selected(&times, Strategy::Random), 1);
+        assert_eq!(rank_of_selected(&times, Strategy::OneDSrc), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be in the candidate list")]
+    fn rank_requires_membership() {
+        rank_of_selected(&[(Strategy::Random, 1.0)], Strategy::Hybrid);
+    }
+}

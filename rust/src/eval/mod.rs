@@ -1,0 +1,11 @@
+//! Evaluation harness: regenerates every table and figure of §5.
+//!
+//! [`pipeline`] runs the end-to-end experiment (corpus → augmentation →
+//! ETRM training → 96-task evaluation); [`figures`] renders each paper
+//! artifact from the result. The `repro figures --id <fig1|fig4|…|all>`
+//! CLI and the `cargo bench` targets both route through here.
+
+pub mod figures;
+pub mod pipeline;
+
+pub use pipeline::{Evaluation, PipelineConfig, TaskEval};

@@ -1,0 +1,279 @@
+//! End-to-end experiment pipeline (Fig 2 of the paper, run as one shot):
+//!
+//! 1. build the execution-log corpus — every dataset × all 8 algorithms
+//!    × the 11-strategy inventory, executed on the engine;
+//! 2. augment the training-graph × training-algorithm logs into the
+//!    synthetic set (§4.2.1);
+//! 3. train the ETRM on the synthetic set only;
+//! 4. evaluate the 96 test tasks (§5.4): select, rank, score, and
+//!    measure the selection cost for the §5.7 benefit-cost ratio.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::algorithms::Algorithm;
+use crate::analyzer::analyze;
+use crate::dataset::augment::augment;
+use crate::dataset::logs::LogStore;
+use crate::dataset::split::{test_split, TestSet};
+use crate::engine::cost::ClusterConfig;
+use crate::etrm::scores::{rank_of_selected, TaskScores};
+use crate::etrm::Etrm;
+use crate::features::{DataFeatures, TaskFeatures};
+use crate::ml::gbdt::GbdtParams;
+use crate::partition::Strategy;
+use crate::util::rng::Rng;
+
+/// Pipeline configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    /// Linear dataset scale (1.0 = the paper's sizes).
+    pub scale: f64,
+    /// Master seed.
+    pub seed: u64,
+    /// Cluster size (the paper: 64).
+    pub workers: usize,
+    /// Cap on synthetic tuples (None = the full ~0.43 M? at r 2..9 the
+    /// full product is 4998 × 8 × 11 = 439 824).
+    pub augment_cap: Option<usize>,
+    /// Multiset size range for augmentation.
+    pub r_lo: usize,
+    pub r_hi: usize,
+    /// ETRM hyper-parameters.
+    pub gbdt: GbdtParams,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            scale: 1.0 / 32.0,
+            seed: 42,
+            workers: 64,
+            augment_cap: Some(120_000),
+            r_lo: 2,
+            r_hi: 9,
+            gbdt: GbdtParams {
+                n_estimators: 400,
+                max_depth: 12,
+                learning_rate: 0.08,
+                ..GbdtParams::paper()
+            },
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// A fast profile for tests: tiny graphs, light model.
+    pub fn fast_test() -> Self {
+        PipelineConfig {
+            scale: 0.004,
+            workers: 16,
+            augment_cap: Some(6_000),
+            r_hi: 5,
+            gbdt: GbdtParams { n_estimators: 120, max_depth: 8, ..GbdtParams::fast() },
+            ..Default::default()
+        }
+    }
+}
+
+/// Per-task evaluation record.
+#[derive(Clone, Debug)]
+pub struct TaskEval {
+    pub graph: String,
+    pub algorithm: Algorithm,
+    pub set: TestSet,
+    /// ETRM's pick.
+    pub selected: Strategy,
+    /// 1-based actual rank of the pick among the 11 strategies.
+    pub rank: usize,
+    /// Eq. 19-21 scores.
+    pub scores: TaskScores,
+    /// Real times per strategy (inventory order).
+    pub times: Vec<(Strategy, f64)>,
+    /// The pick's real time.
+    pub t_sel: f64,
+    /// Selection cost components (measured wall seconds): data-feature
+    /// extraction (amortised per graph), code analysis, model predict.
+    pub cost_data: f64,
+    pub cost_algo: f64,
+    pub cost_predict: f64,
+    /// §5.7 benefit: `T_worst − T_sel` (simulated seconds).
+    pub benefit: f64,
+}
+
+impl TaskEval {
+    /// §5.7 benefit-cost ratio.
+    pub fn bc_ratio(&self) -> f64 {
+        self.benefit / (self.cost_data + self.cost_algo + self.cost_predict).max(1e-12)
+    }
+}
+
+/// Full pipeline output.
+pub struct Evaluation {
+    pub config: PipelineConfig,
+    /// The real-execution corpus (1056 logs at full corpus).
+    pub store: LogStore,
+    /// Number of synthetic training tuples used.
+    pub synthetic_count: usize,
+    /// The trained model.
+    pub etrm: Etrm,
+    /// The 96-task evaluation.
+    pub tasks: Vec<TaskEval>,
+}
+
+/// Run the full pipeline.
+pub fn run(config: PipelineConfig) -> Result<Evaluation> {
+    run_with_progress(config, |_| {})
+}
+
+/// Run with a progress callback (the CLI prints stage banners).
+pub fn run_with_progress(
+    config: PipelineConfig,
+    mut progress: impl FnMut(&str),
+) -> Result<Evaluation> {
+    let cfg = ClusterConfig::with_workers(config.workers);
+    progress("building execution-log corpus (12 graphs × 8 algorithms × 11 strategies)");
+    let store = LogStore::build_corpus(config.scale, config.seed, &cfg)?;
+
+    progress("augmenting synthetic training set");
+    let synthetic = augment(&store, config.r_lo..=config.r_hi, config.augment_cap, config.seed);
+    let synthetic_count = synthetic.len();
+
+    progress("training ETRM (histogram GBDT)");
+    let etrm = Etrm::train_gbdt(&synthetic, config.gbdt);
+
+    progress("evaluating 96 test tasks");
+    let mut tasks = Vec::with_capacity(96);
+    for t in test_split() {
+        // measured feature-extraction cost (the §5.7 "cost")
+        let spec = crate::graph::datasets::DatasetSpec::by_name(t.graph).unwrap();
+        let g = spec.build(config.scale, config.seed);
+        let t0 = Instant::now();
+        let data = DataFeatures::of(&g);
+        let cost_data = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let counts = analyze(t.algorithm.pseudo_code())?;
+        let cost_algo = t0.elapsed().as_secs_f64();
+        let features = TaskFeatures::from_parts(data, &counts);
+        let t0 = Instant::now();
+        let selected = etrm.select(&features);
+        let cost_predict = t0.elapsed().as_secs_f64();
+
+        let times: Vec<(Strategy, f64)> = Strategy::inventory()
+            .into_iter()
+            .map(|s| {
+                let time = store
+                    .time_of(t.graph, t.algorithm.name(), s)
+                    .expect("corpus covers all test tasks");
+                (s, time)
+            })
+            .collect();
+        let t_sel = times.iter().find(|(s, _)| *s == selected).unwrap().1;
+        let raw: Vec<f64> = times.iter().map(|(_, x)| *x).collect();
+        let worst = raw.iter().cloned().fold(0.0, f64::max);
+        tasks.push(TaskEval {
+            graph: t.graph.to_string(),
+            algorithm: t.algorithm,
+            set: t.set,
+            selected,
+            rank: rank_of_selected(&times, selected),
+            scores: TaskScores::compute(&raw, t_sel),
+            times,
+            t_sel,
+            cost_data,
+            cost_algo,
+            cost_predict,
+            benefit: worst - t_sel,
+        });
+    }
+    Ok(Evaluation { config, store, synthetic_count, etrm, tasks })
+}
+
+impl Evaluation {
+    /// Tasks of one test set.
+    pub fn of_set(&self, set: TestSet) -> Vec<&TaskEval> {
+        self.tasks.iter().filter(|t| t.set == set).collect()
+    }
+
+    /// Cumulative rank ratio curve (Fig 6): entry `r-1` = fraction of
+    /// `tasks` with actual rank ≤ r.
+    pub fn cumulative_rank_ratio(tasks: &[&TaskEval]) -> Vec<f64> {
+        let n = tasks.len().max(1) as f64;
+        (1..=Strategy::inventory().len())
+            .map(|r| tasks.iter().filter(|t| t.rank <= r).count() as f64 / n)
+            .collect()
+    }
+
+    /// Mean Eq. 19-21 scores over a task subset (Table 6 rows).
+    pub fn mean_scores(tasks: &[&TaskEval]) -> (f64, f64, f64) {
+        let n = tasks.len().max(1) as f64;
+        let sum = tasks.iter().fold((0.0, 0.0, 0.0), |acc, t| {
+            (acc.0 + t.scores.best, acc.1 + t.scores.worst, acc.2 + t.scores.avg)
+        });
+        (sum.0 / n, sum.1 / n, sum.2 / n)
+    }
+
+    /// The random-pick baseline of Fig 8: mean `Score_best` of 5 random
+    /// strategies per task (seeded).
+    pub fn random_baseline_scores(&self, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let inv = Strategy::inventory();
+        self.tasks
+            .iter()
+            .map(|t| {
+                let best = t.times.iter().map(|(_, x)| *x).fold(f64::INFINITY, f64::min);
+                let mean_perf: f64 = (0..5)
+                    .map(|_| {
+                        let s = inv[rng.gen_range(inv.len())];
+                        let time = t.times.iter().find(|(x, _)| *x == s).unwrap().1;
+                        best / time
+                    })
+                    .sum::<f64>()
+                    / 5.0;
+                mean_perf
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The whole pipeline at test scale: structure + the paper's
+    /// qualitative claims (ETRM beats random, Score_worst > 1, …).
+    #[test]
+    fn pipeline_end_to_end_fast() {
+        let eval = run(PipelineConfig::fast_test()).unwrap();
+        assert_eq!(eval.tasks.len(), 96);
+        assert_eq!(eval.store.logs.len(), 12 * 8 * 11);
+        assert!(eval.synthetic_count > 1000, "{}", eval.synthetic_count);
+        // per-set cardinalities
+        assert_eq!(eval.of_set(TestSet::A).len(), 8);
+        assert_eq!(eval.of_set(TestSet::B).len(), 24);
+        assert_eq!(eval.of_set(TestSet::C).len(), 16);
+        assert_eq!(eval.of_set(TestSet::D).len(), 48);
+        // every rank in range, curve monotone to 1.0
+        assert!(eval.tasks.iter().all(|t| (1..=11).contains(&t.rank)));
+        let all: Vec<&TaskEval> = eval.tasks.iter().collect();
+        let curve = Evaluation::cumulative_rank_ratio(&all);
+        assert_eq!(curve.len(), 11);
+        assert!(curve.windows(2).all(|w| w[0] <= w[1] + 1e-12));
+        assert!((curve[10] - 1.0).abs() < 1e-12);
+        // headline shape: the selector beats the random baseline and
+        // the mean strategy on average
+        let (best, worst, avg) = Evaluation::mean_scores(&all);
+        assert!(best > 0.5, "Score_best {best}");
+        assert!(worst >= 1.0, "Score_worst {worst}");
+        assert!(avg > 0.9, "Score_avg {avg}");
+        let rnd = eval.random_baseline_scores(7);
+        let rnd_mean: f64 = rnd.iter().sum::<f64>() / rnd.len() as f64;
+        assert!(
+            best > rnd_mean,
+            "ETRM Score_best {best} must beat random {rnd_mean}"
+        );
+        // benefit/cost well-defined
+        assert!(eval.tasks.iter().all(|t| t.benefit >= 0.0 && t.bc_ratio() >= 0.0));
+    }
+}

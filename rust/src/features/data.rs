@@ -1,0 +1,97 @@
+//! Data features (Table 3): cardinalities, in/out degree-distribution
+//! moments and graph direction.
+
+use crate::analyzer::symbolic::SymEnv;
+use crate::graph::stats::DegreeStats;
+use crate::graph::Graph;
+use crate::util::stats::Moments;
+
+/// The four moments of one degree distribution, in feature form.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MomentFeatures {
+    pub mean: f64,
+    pub std: f64,
+    pub skewness: f64,
+    pub kurtosis: f64,
+}
+
+impl From<Moments> for MomentFeatures {
+    fn from(m: Moments) -> Self {
+        MomentFeatures { mean: m.mean, std: m.std, skewness: m.skewness, kurtosis: m.kurtosis }
+    }
+}
+
+/// Table 3 data features of one graph.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DataFeatures {
+    pub num_vertices: f64,
+    pub num_edges: f64,
+    pub directed: bool,
+    pub in_deg: MomentFeatures,
+    pub out_deg: MomentFeatures,
+}
+
+impl DataFeatures {
+    /// Extract from a graph (pure-Rust moments path).
+    pub fn of(g: &Graph) -> Self {
+        Self::from_stats(&DegreeStats::of(g))
+    }
+
+    /// Assemble from pre-computed degree statistics (the PJRT `moments`
+    /// kernel path produces the same [`DegreeStats`]).
+    pub fn from_stats(s: &DegreeStats) -> Self {
+        DataFeatures {
+            num_vertices: s.num_vertices as f64,
+            num_edges: s.num_edges as f64,
+            directed: s.directed,
+            in_deg: s.in_deg.into(),
+            out_deg: s.out_deg.into(),
+        }
+    }
+
+    /// Symbol environment for evaluating the analyzer's symbolic counts
+    /// against this graph.
+    pub fn sym_env(&self) -> SymEnv {
+        let mean_both = if self.directed {
+            self.in_deg.mean + self.out_deg.mean
+        } else {
+            self.out_deg.mean
+        };
+        SymEnv {
+            num_vertex: self.num_vertices,
+            num_edge: self.num_edges,
+            mean_in_deg: self.in_deg.mean,
+            mean_out_deg: self.out_deg.mean,
+            mean_both_deg: mean_both,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extraction_matches_stats() {
+        let mut rng = crate::util::rng::Rng::new(400);
+        let g = crate::graph::gen::chung_lu::generate("t", 500, 3000, 2.2, true, &mut rng);
+        let f = DataFeatures::of(&g);
+        assert_eq!(f.num_vertices, 500.0);
+        assert_eq!(f.num_edges, 3000.0);
+        assert!(f.directed);
+        assert!((f.out_deg.mean - 6.0).abs() < 1e-9, "mean out = |E|/|V|");
+        assert!(f.out_deg.kurtosis > 0.0, "power-law tail");
+    }
+
+    #[test]
+    fn sym_env_direction_convention() {
+        let gd = crate::graph::Graph::from_edges("d", 3, vec![(0, 1), (1, 2)], true);
+        let fd = DataFeatures::of(&gd);
+        let env = fd.sym_env();
+        assert!((env.mean_both_deg - (env.mean_in_deg + env.mean_out_deg)).abs() < 1e-12);
+        let gu = crate::graph::Graph::from_edges("u", 3, vec![(0, 1), (1, 2)], false);
+        let fu = DataFeatures::of(&gu);
+        let envu = fu.sym_env();
+        assert!((envu.mean_both_deg - envu.mean_out_deg).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,195 @@
+//! Model-input encoding (Fig 5): scaling + one-hot.
+//!
+//! Layout (52 columns):
+//!
+//! | cols  | content |
+//! |-------|---------|
+//! | 0-1   | log1p(|V|), log1p(|E|) |
+//! | 2-9   | in-degree: log1p(mean), log1p(std), sign(skew), log1p(|skew|), sign(kurt), log1p(|kurt|) is 6 → cols 2-7; see below |
+//! | 2-7   | in-degree moments (mean, std, skew sign/abs, kurt sign/abs) |
+//! | 8-13  | out-degree moments (same shape) |
+//! | 14-15 | direction one-hot (undirected, directed) |
+//! | 16-36 | 21 algorithm features, log1p |
+//! | 37-47 | strategy one-hot (PSID order of `Strategy::inventory()`, 11) |
+//! | 48-51 | strategy family flags (hash, greedy, degree-aware, grid) |
+//!
+//! Skewness/kurtosis are split into sign and magnitude exactly as
+//! §4.1.1 describes ("divided into a sign and absolute value").
+
+use crate::analyzer::OpKey;
+use crate::partition::Strategy;
+
+use super::data::MomentFeatures;
+use super::task::TaskFeatures;
+
+/// Total encoded width.
+pub const FEATURE_DIM: usize = 52;
+
+fn log1p(x: f64) -> f64 {
+    (1.0 + x.max(0.0)).ln()
+}
+
+fn push_moments(out: &mut Vec<f64>, m: &MomentFeatures) {
+    out.push(log1p(m.mean));
+    out.push(log1p(m.std));
+    out.push(if m.skewness < 0.0 { -1.0 } else { 1.0 });
+    out.push(log1p(m.skewness.abs()));
+    out.push(if m.kurtosis < 0.0 { -1.0 } else { 1.0 });
+    out.push(log1p(m.kurtosis.abs()));
+}
+
+/// Encode one (task, strategy) pair into the model-input vector.
+pub fn encode(task: &TaskFeatures, strategy: Strategy) -> [f64; FEATURE_DIM] {
+    let mut out = Vec::with_capacity(FEATURE_DIM);
+    out.push(log1p(task.data.num_vertices));
+    out.push(log1p(task.data.num_edges));
+    push_moments(&mut out, &task.data.in_deg);
+    push_moments(&mut out, &task.data.out_deg);
+    // direction one-hot
+    out.push(if task.data.directed { 0.0 } else { 1.0 });
+    out.push(if task.data.directed { 1.0 } else { 0.0 });
+    // 21 algorithm counts
+    for &x in &task.algo {
+        out.push(log1p(x));
+    }
+    // strategy one-hot over the 11-strategy inventory
+    let inventory = Strategy::inventory();
+    for s in &inventory {
+        out.push(if *s == strategy { 1.0 } else { 0.0 });
+    }
+    // family flags help the tree generalise across related strategies
+    let (hash, greedy, degree_aware, grid) = match strategy {
+        Strategy::OneDSrc | Strategy::OneDDst | Strategy::Random | Strategy::CanonicalRandom => {
+            (1.0, 0.0, 0.0, 0.0)
+        }
+        Strategy::TwoD => (1.0, 0.0, 0.0, 1.0),
+        Strategy::Hybrid => (1.0, 0.0, 1.0, 0.0),
+        Strategy::Oblivious => (0.0, 1.0, 0.0, 0.0),
+        Strategy::Hdrf(_) => (0.0, 1.0, 1.0, 0.0),
+        Strategy::Ginger => (0.0, 1.0, 1.0, 0.0),
+    };
+    out.extend([hash, greedy, degree_aware, grid]);
+    debug_assert_eq!(out.len(), FEATURE_DIM);
+    let mut arr = [0.0; FEATURE_DIM];
+    arr.copy_from_slice(&out);
+    arr
+}
+
+/// Column names (for importance reporting, Tables 3/4).
+pub fn feature_names() -> Vec<String> {
+    let mut names = vec!["num_vertex".to_string(), "num_edge".to_string()];
+    for dir in ["in", "out"] {
+        for m in ["mean", "std", "skew_sign", "skew_abs", "kurt_sign", "kurt_abs"] {
+            names.push(format!("{dir}_deg_{m}"));
+        }
+    }
+    names.push("undirected".into());
+    names.push("directed".into());
+    for k in OpKey::all() {
+        names.push(k.name().to_lowercase());
+    }
+    for s in Strategy::inventory() {
+        names.push(format!("strategy_{}", s.name().to_lowercase()));
+    }
+    names.extend(
+        ["family_hash", "family_greedy", "family_degree_aware", "family_grid"]
+            .map(String::from),
+    );
+    assert_eq!(names.len(), FEATURE_DIM);
+    names
+}
+
+/// Which Table-3 row an encoded column belongs to, if any (used to
+/// aggregate per-column importance into the paper's data-feature rows).
+pub fn table3_group(col: usize) -> Option<&'static str> {
+    match col {
+        0 => Some("The number of Vertex"),
+        1 => Some("The number of Edge"),
+        2..=7 => Some("In-degree"),
+        8..=13 => Some("Out-degree"),
+        14 | 15 => Some("Graph direction"),
+        _ => None,
+    }
+}
+
+/// Which Table-4 row an encoded column belongs to, if any.
+pub fn table4_group(col: usize) -> Option<&'static str> {
+    if (16..37).contains(&col) {
+        Some(OpKey::all()[col - 16].name())
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::data::DataFeatures;
+
+    fn task() -> TaskFeatures {
+        let mut rng = crate::util::rng::Rng::new(420);
+        let g = crate::graph::gen::chung_lu::generate("t", 300, 2000, 2.2, true, &mut rng);
+        let data = DataFeatures::of(&g);
+        TaskFeatures::from_vector(data, [10.0; 21])
+    }
+
+    #[test]
+    fn dimension_and_names_agree() {
+        let t = task();
+        let v = encode(&t, Strategy::Hybrid);
+        assert_eq!(v.len(), FEATURE_DIM);
+        assert_eq!(feature_names().len(), FEATURE_DIM);
+    }
+
+    #[test]
+    fn strategy_onehot_position() {
+        let t = task();
+        let names = feature_names();
+        for (i, s) in Strategy::inventory().into_iter().enumerate() {
+            let v = encode(&t, s);
+            let hot: Vec<usize> =
+                (37..48).filter(|&c| v[c] == 1.0).collect();
+            assert_eq!(hot, vec![37 + i], "{}", s.name());
+            assert_eq!(names[37 + i], format!("strategy_{}", s.name().to_lowercase()));
+        }
+    }
+
+    #[test]
+    fn sign_split_encoding() {
+        let mut t = task();
+        t.data.in_deg.skewness = -2.0;
+        let v = encode(&t, Strategy::Random);
+        assert_eq!(v[4], -1.0, "skew sign column");
+        assert!((v[5] - (3.0f64).ln()).abs() < 1e-12, "log1p(|skew|)");
+    }
+
+    #[test]
+    fn direction_onehot() {
+        let mut t = task();
+        t.data.directed = false;
+        let v = encode(&t, Strategy::Random);
+        assert_eq!((v[14], v[15]), (1.0, 0.0));
+        t.data.directed = true;
+        let v = encode(&t, Strategy::Random);
+        assert_eq!((v[14], v[15]), (0.0, 1.0));
+    }
+
+    #[test]
+    fn group_mappings_cover_tables() {
+        assert_eq!(table3_group(0), Some("The number of Vertex"));
+        assert_eq!(table3_group(9), Some("Out-degree"));
+        assert_eq!(table3_group(16), None);
+        assert_eq!(table4_group(16), Some("NUM_VERTEX"));
+        assert_eq!(table4_group(36), Some("APPLY"));
+        assert_eq!(table4_group(37), None);
+    }
+
+    #[test]
+    fn hdrf_variants_share_family_but_not_onehot() {
+        let t = task();
+        let a = encode(&t, Strategy::Hdrf(10));
+        let b = encode(&t, Strategy::Hdrf(100));
+        assert_ne!(a[37..48], b[37..48]);
+        assert_eq!(a[48..], b[48..]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Task feature extraction and model-input encoding (§4.1, Fig 5).
+//!
+//! A *task feature* is the concatenation of the graph's data features
+//! (Table 3) and the algorithm's evaluated operation counts (Table 4);
+//! the ETRM input appends a one-hot partitioning-strategy id
+//! (Fig 5) and scales magnitudes with `log1p` (counts span 9+ orders
+//! of magnitude between AID on facebook and APCN on stanford).
+
+pub mod data;
+pub mod encoding;
+pub mod task;
+
+pub use data::DataFeatures;
+pub use encoding::{encode, feature_names, FEATURE_DIM};
+pub use task::TaskFeatures;

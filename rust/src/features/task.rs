@@ -1,0 +1,85 @@
+//! Task features: data features ⊕ algorithm features (Fig 2 steps 1-2).
+
+use anyhow::Result;
+
+use crate::analyzer::{analyze, AlgoCounts};
+use crate::graph::Graph;
+
+use super::data::DataFeatures;
+
+/// The feature bundle of one task (graph × algorithm).
+#[derive(Clone, Debug)]
+pub struct TaskFeatures {
+    /// Table 3 features of the graph.
+    pub data: DataFeatures,
+    /// Evaluated Table 4 counts (21 entries, Table 4 order).
+    pub algo: [f64; 21],
+}
+
+impl TaskFeatures {
+    /// Extract from a graph and pseudo-code source. The extraction
+    /// itself is what the paper's "cost" measures (§5.7): graph-feature
+    /// time scales with |V|+|E|, code analysis is constant-ish.
+    pub fn extract(g: &Graph, pseudo_code: &str) -> Result<Self> {
+        let data = DataFeatures::of(g);
+        let counts = analyze(pseudo_code)?;
+        Ok(Self::from_parts(data, &counts))
+    }
+
+    /// Assemble from already-computed parts (synthetic-augmentation and
+    /// PJRT paths).
+    pub fn from_parts(data: DataFeatures, counts: &AlgoCounts) -> Self {
+        let algo = counts.feature_vector(&data.sym_env());
+        TaskFeatures { data, algo }
+    }
+
+    /// Assemble from a raw evaluated algorithm-feature vector.
+    pub fn from_vector(data: DataFeatures, algo: [f64; 21]) -> Self {
+        TaskFeatures { data, algo }
+    }
+
+    /// Sum of algorithm features — the aggregation used when synthetic
+    /// tasks are built from sequences of real algorithms (§4.2.1:
+    /// `AF(s) = Σ AF(r_i)`).
+    pub fn aggregate_algos(data: DataFeatures, parts: &[[f64; 21]]) -> Self {
+        let mut algo = [0.0; 21];
+        for p in parts {
+            for i in 0..21 {
+                algo[i] += p[i];
+            }
+        }
+        TaskFeatures { data, algo }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::Algorithm;
+
+    #[test]
+    fn extract_pr_features() {
+        let mut rng = crate::util::rng::Rng::new(410);
+        let g = crate::graph::gen::erdos::generate("t", 200, 1000, true, &mut rng);
+        let tf = TaskFeatures::extract(&g, Algorithm::Pr.pseudo_code()).unwrap();
+        assert_eq!(tf.data.num_vertices, 200.0);
+        // PR applies once per vertex per iteration (10)
+        let apply_idx = crate::analyzer::OpKey::all()
+            .iter()
+            .position(|k| *k == crate::analyzer::OpKey::Apply)
+            .unwrap();
+        assert_eq!(tf.algo[apply_idx], 2000.0);
+    }
+
+    #[test]
+    fn aggregation_is_summation() {
+        let mut rng = crate::util::rng::Rng::new(411);
+        let g = crate::graph::gen::erdos::generate("t", 100, 400, true, &mut rng);
+        let a = TaskFeatures::extract(&g, Algorithm::Aid.pseudo_code()).unwrap();
+        let b = TaskFeatures::extract(&g, Algorithm::Pr.pseudo_code()).unwrap();
+        let s = TaskFeatures::aggregate_algos(a.data, &[a.algo, b.algo, b.algo]);
+        for i in 0..21 {
+            assert!((s.algo[i] - (a.algo[i] + 2.0 * b.algo[i])).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! The paper's 12-dataset corpus (Table 5), reproduced synthetically.
+//!
+//! Each [`DatasetSpec`] carries the SNAP dataset's exact |V|, |E| and
+//! directedness from Table 5 plus the generator class that reproduces its
+//! topology (DESIGN.md §Substitutions). `build(scale, seed)` produces the
+//! graph at a linear scale factor: `scale = 1.0` matches the paper's
+//! sizes; the evaluation default (`DEFAULT_SCALE`) keeps the full
+//! 8-algorithm × 12-strategy sweep tractable on one machine while
+//! preserving density and topology class per dataset.
+
+use super::gen::{chung_lu, grid, rmat, smallworld};
+use super::Graph;
+use crate::util::rng::Rng;
+
+/// Default linear scale for experiments (1/32 of the paper's sizes —
+/// the full corpus sweep stays around a minute on one core while the
+/// paper's strategy dynamics remain visible; see DESIGN.md
+/// §Substitutions).
+pub const DEFAULT_SCALE: f64 = 1.0 / 32.0;
+
+/// Topology class → generator mapping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Chung–Lu power law with the given exponent ×100 (stored as int so
+    /// the enum stays `Eq`); e.g. `PowerLaw(210)` = β 2.10.
+    PowerLaw(u32),
+    /// R-MAT web-crawl structure.
+    WebCrawl,
+    /// Watts–Strogatz small world.
+    SmallWorld,
+    /// 2-D road lattice.
+    Road,
+}
+
+/// Static description of one corpus dataset.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    /// Short name used throughout (paper's italic alias).
+    pub name: &'static str,
+    /// Full SNAP name.
+    pub full_name: &'static str,
+    /// |V| at scale 1.0 (Table 5).
+    pub vertices: usize,
+    /// |E| at scale 1.0 (Table 5).
+    pub edges: usize,
+    /// Directedness (Table 5).
+    pub directed: bool,
+    /// Generator class.
+    pub topology: Topology,
+    /// Whether the dataset is part of the augmented-training-set corpus
+    /// (§4.2.1: gemsec-deezer and web-stanford are evaluation-only).
+    pub in_training: bool,
+}
+
+/// The full 12-dataset corpus in Table 5 order.
+pub const CORPUS: &[DatasetSpec] = &[
+    DatasetSpec { name: "facebook", full_name: "Ego-Facebook", vertices: 4_039, edges: 88_234, directed: false, topology: Topology::PowerLaw(250), in_training: true },
+    DatasetSpec { name: "wiki", full_name: "Wiki-Vote", vertices: 7_115, edges: 103_689, directed: true, topology: Topology::PowerLaw(220), in_training: true },
+    DatasetSpec { name: "epinions", full_name: "Epinions", vertices: 75_879, edges: 508_837, directed: true, topology: Topology::PowerLaw(205), in_training: true },
+    DatasetSpec { name: "amazon-1", full_name: "Amazon0312", vertices: 400_727, edges: 3_200_440, directed: true, topology: Topology::WebCrawl, in_training: true },
+    DatasetSpec { name: "slashdot", full_name: "Slashdot", vertices: 77_350, edges: 516_575, directed: true, topology: Topology::PowerLaw(215), in_training: true },
+    DatasetSpec { name: "amazon-2", full_name: "Amazon", vertices: 334_863, edges: 925_872, directed: false, topology: Topology::SmallWorld, in_training: true },
+    DatasetSpec { name: "dblp", full_name: "DBLP", vertices: 317_080, edges: 1_049_866, directed: false, topology: Topology::SmallWorld, in_training: true },
+    DatasetSpec { name: "road-ca", full_name: "RoadNet-CA", vertices: 1_965_206, edges: 2_766_607, directed: false, topology: Topology::Road, in_training: true },
+    DatasetSpec { name: "gd-ro", full_name: "Gemsec-Deezer-RO", vertices: 41_773, edges: 125_826, directed: false, topology: Topology::PowerLaw(260), in_training: false },
+    DatasetSpec { name: "gd-hu", full_name: "Gemsec-Deezer-HU", vertices: 47_538, edges: 222_887, directed: false, topology: Topology::PowerLaw(245), in_training: false },
+    DatasetSpec { name: "gd-hr", full_name: "Gemsec-Deezer-HR", vertices: 54_573, edges: 498_202, directed: false, topology: Topology::PowerLaw(230), in_training: false },
+    DatasetSpec { name: "stanford", full_name: "Web-Stanford", vertices: 281_903, edges: 2_312_497, directed: true, topology: Topology::WebCrawl, in_training: false },
+];
+
+impl DatasetSpec {
+    /// Look a dataset up by short name.
+    pub fn by_name(name: &str) -> Option<&'static DatasetSpec> {
+        CORPUS.iter().find(|d| d.name == name)
+    }
+
+    /// Scaled vertex count (≥ 64 so every strategy still has work).
+    pub fn scaled_vertices(&self, scale: f64) -> usize {
+        ((self.vertices as f64 * scale) as usize).max(64)
+    }
+
+    /// Scaled edge count, preserving density, clamped to stay generable.
+    pub fn scaled_edges(&self, scale: f64) -> usize {
+        let n = self.scaled_vertices(scale);
+        let density = self.edges as f64 / self.vertices as f64;
+        let m = ((self.edges as f64 * scale) as usize).max((density * n as f64) as usize).max(n);
+        // stay below half the complete graph
+        let cap = if self.directed { n * (n - 1) / 2 } else { n * (n - 1) / 4 };
+        m.min(cap)
+    }
+
+    /// Generate the dataset at `scale` deterministically from `seed`.
+    /// The per-dataset stream is derived from the name so corpora built
+    /// incrementally or in different orders are identical.
+    pub fn build(&self, scale: f64, seed: u64) -> Graph {
+        let stream = crate::util::rng::fnv1a64(self.name.as_bytes());
+        let mut rng = Rng::new(seed ^ stream);
+        let n = self.scaled_vertices(scale);
+        let m = self.scaled_edges(scale);
+        match self.topology {
+            Topology::PowerLaw(b100) => {
+                chung_lu::generate(self.name, n, m, b100 as f64 / 100.0, self.directed, &mut rng)
+            }
+            Topology::WebCrawl => {
+                rmat::generate(self.name, n, m, rmat::RmatParams::default(), self.directed, &mut rng)
+            }
+            Topology::SmallWorld => smallworld::generate(self.name, n, m, 0.1, &mut rng),
+            Topology::Road => grid::generate(self.name, n, m, &mut rng),
+        }
+    }
+}
+
+/// Names of the 8 training graphs (§4.2.1 / §5.4).
+pub fn training_graphs() -> Vec<&'static str> {
+    CORPUS.iter().filter(|d| d.in_training).map(|d| d.name).collect()
+}
+
+/// Names of the 4 held-out evaluation graphs.
+pub fn heldout_graphs() -> Vec<&'static str> {
+    CORPUS.iter().filter(|d| !d.in_training).map(|d| d.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_matches_table5() {
+        assert_eq!(CORPUS.len(), 12);
+        let wiki = DatasetSpec::by_name("wiki").unwrap();
+        assert_eq!(wiki.vertices, 7_115);
+        assert_eq!(wiki.edges, 103_689);
+        assert!(wiki.directed);
+        let road = DatasetSpec::by_name("road-ca").unwrap();
+        assert!(!road.directed);
+        assert_eq!(road.vertices, 1_965_206);
+        assert_eq!(DatasetSpec::by_name("nope").map(|d| d.name), None);
+    }
+
+    #[test]
+    fn split_is_8_plus_4() {
+        assert_eq!(training_graphs().len(), 8);
+        assert_eq!(heldout_graphs().len(), 4);
+        assert!(heldout_graphs().contains(&"stanford"));
+        assert!(heldout_graphs().contains(&"gd-hu"));
+        assert!(training_graphs().contains(&"road-ca"));
+    }
+
+    #[test]
+    fn build_small_scale_deterministic() {
+        let spec = DatasetSpec::by_name("wiki").unwrap();
+        let g1 = spec.build(0.02, 42);
+        let g2 = spec.build(0.02, 42);
+        assert_eq!(g1.edges(), g2.edges());
+        assert_eq!(g1.num_vertices(), spec.scaled_vertices(0.02));
+        assert_eq!(g1.num_edges(), spec.scaled_edges(0.02));
+        assert!(g1.directed);
+    }
+
+    #[test]
+    fn density_preserved_under_scaling() {
+        let spec = DatasetSpec::by_name("epinions").unwrap();
+        let full_density = spec.edges as f64 / spec.vertices as f64;
+        let n = spec.scaled_vertices(0.05);
+        let m = spec.scaled_edges(0.05);
+        let scaled_density = m as f64 / n as f64;
+        assert!(
+            (scaled_density - full_density).abs() / full_density < 0.15,
+            "density {scaled_density} vs {full_density}"
+        );
+    }
+
+    #[test]
+    fn tiny_scale_clamps() {
+        let spec = DatasetSpec::by_name("facebook").unwrap();
+        let g = spec.build(0.0001, 1); // would be < 1 vertex unclamped
+        assert!(g.num_vertices() >= 64);
+        assert!(g.num_edges() >= g.num_vertices());
+    }
+
+    #[test]
+    fn all_datasets_build_at_tiny_scale() {
+        for spec in CORPUS {
+            let g = spec.build(0.004, 7);
+            assert_eq!(g.directed, spec.directed, "{}", spec.name);
+            assert!(g.num_edges() > 0, "{}", spec.name);
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Uniform G(n, m) Erdős–Rényi generator — the null model used by tests
+//! (degree distributions are binomial: near-zero skew and kurtosis).
+
+use crate::graph::gen::fill_distinct;
+use crate::graph::{Edge, Graph};
+use crate::util::rng::Rng;
+
+/// Generate G(n, m) with exactly `m` distinct edges.
+pub fn generate(name: &str, n: usize, m: usize, directed: bool, rng: &mut Rng) -> Graph {
+    Graph::from_edges(name, n, generate_edges(n, m, directed, rng), directed)
+}
+
+/// Edge-list form of [`generate`].
+pub fn generate_edges(n: usize, m: usize, directed: bool, rng: &mut Rng) -> Vec<Edge> {
+    fill_distinct(n, m, directed, rng, |r| {
+        (r.gen_range(n) as u32, r.gen_range(n) as u32)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_and_simplicity() {
+        let mut rng = Rng::new(7);
+        let g = generate("er", 100, 500, false, &mut rng);
+        assert_eq!(g.num_vertices(), 100);
+        assert_eq!(g.num_edges(), 500);
+        assert!(g.edges().iter().all(|&(u, v)| u != v));
+    }
+
+    #[test]
+    fn roughly_uniform_degrees() {
+        let mut rng = Rng::new(8);
+        let g = generate("er", 1000, 10_000, false, &mut rng);
+        let degs: Vec<f64> = g.vertices().map(|v| g.out_degree(v) as f64).collect();
+        let m = crate::util::stats::Moments::of(&degs);
+        assert!((m.mean - 20.0).abs() < 1.0, "mean degree ≈ 2m/n");
+        assert!(m.kurtosis.abs() < 1.0, "binomial tails are light: {}", m.kurtosis);
+    }
+}

@@ -1,0 +1,98 @@
+//! 2-D lattice generator with local shortcuts — the RoadNet-CA stand-in.
+//! Road networks have tightly bounded degrees (mean ≈ 2.8, max ≈ 12),
+//! essentially zero degree skew and enormous diameter; a sparse grid
+//! with a few random local diagonals reproduces those statistics.
+
+use std::collections::HashSet;
+
+use crate::graph::{Edge, Graph};
+use crate::util::rng::Rng;
+
+/// Generate a road-like graph: `n` vertices on a ⌈√n⌉ grid, exactly `m`
+/// edges built from lattice links plus short-range random shortcuts.
+/// Requires `m` ≥ the grid's spanning backbone and ≤ ~4n.
+pub fn generate(name: &str, n: usize, m: usize, rng: &mut Rng) -> Graph {
+    Graph::from_edges(name, n, generate_edges(n, m, rng), false)
+}
+
+/// Edge-list form of [`generate`].
+pub fn generate_edges(n: usize, m: usize, rng: &mut Rng) -> Vec<Edge> {
+    let side = (n as f64).sqrt().ceil() as usize;
+    let id = |r: usize, c: usize| -> Option<u32> {
+        let v = r * side + c;
+        (r < side && c < side && v < n).then_some(v as u32)
+    };
+    let mut seen: HashSet<Edge> = HashSet::with_capacity(m * 2);
+    let mut edges: Vec<Edge> = Vec::with_capacity(m);
+    let push = |u: u32, v: u32, seen: &mut HashSet<Edge>, edges: &mut Vec<Edge>| {
+        let e = if u < v { (u, v) } else { (v, u) };
+        if u != v && seen.insert(e) {
+            edges.push(e);
+        }
+    };
+    // backbone: right + down lattice links (skip ~10% to model missing
+    // road segments, keeping room for shortcuts)
+    'outer: for r in 0..side {
+        for c in 0..side {
+            let Some(u) = id(r, c) else { continue };
+            for (dr, dc) in [(0usize, 1usize), (1, 0)] {
+                if edges.len() >= m {
+                    break 'outer;
+                }
+                if rng.gen_bool(0.92) {
+                    if let Some(v) = id(r + dr, c + dc) {
+                        push(u, v, &mut seen, &mut edges);
+                    }
+                }
+            }
+        }
+    }
+    assert!(
+        edges.len() <= m,
+        "grid backbone produced {} edges, target {m} too small for n={n}",
+        edges.len()
+    );
+    // shortcuts: short-range diagonals / skips (radius ≤ 3 cells)
+    while edges.len() < m {
+        let r = rng.gen_range(side);
+        let c = rng.gen_range(side);
+        let Some(u) = id(r, c) else { continue };
+        let dr = rng.gen_range(4);
+        let dc = rng.gen_range(4);
+        if dr == 0 && dc == 0 {
+            continue;
+        }
+        if let Some(v) = id(r + dr, c + dc) {
+            push(u, v, &mut seen, &mut edges);
+        }
+    }
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Moments;
+
+    #[test]
+    fn road_like_statistics() {
+        let mut rng = Rng::new(17);
+        let g = generate("road", 10_000, 14_000, &mut rng);
+        assert_eq!(g.num_vertices(), 10_000);
+        assert_eq!(g.num_edges(), 14_000);
+        let degs: Vec<f64> = g.vertices().map(|v| g.degree(v) as f64).collect();
+        let m = Moments::of(&degs);
+        assert!((m.mean - 2.8).abs() < 0.1, "mean deg {}", m.mean);
+        assert!(m.skewness.abs() < 1.5, "roads have no heavy tail: {}", m.skewness);
+        let maxd = degs.iter().cloned().fold(0.0, f64::max);
+        assert!(maxd <= 24.0, "bounded degree, got {maxd}");
+    }
+
+    #[test]
+    fn tiny_edge_budget_truncates_backbone() {
+        // m below the full backbone: the generator stops early and still
+        // returns exactly m edges (a partial lattice).
+        let g = generate("road", 10_000, 100, &mut Rng::new(1));
+        assert_eq!(g.num_edges(), 100);
+    }
+}

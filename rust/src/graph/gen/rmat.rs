@@ -1,0 +1,108 @@
+//! R-MAT recursive-matrix generator (Chakrabarti et al.), the standard
+//! stand-in for web-crawl graphs: each edge recursively descends a 2×2
+//! partition of the adjacency matrix with probabilities `(a, b, c, d)`.
+//! Skewed corners (`a ≫ d`) produce the heavy-tailed, locally dense
+//! structure of Web-Stanford / Amazon-0312 class graphs.
+
+use crate::graph::gen::fill_distinct;
+use crate::graph::{Edge, Graph};
+use crate::util::rng::Rng;
+
+/// R-MAT parameters. Must sum to 1.
+#[derive(Clone, Copy, Debug)]
+pub struct RmatParams {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub d: f64,
+}
+
+impl Default for RmatParams {
+    /// The canonical Graph500-ish skew.
+    fn default() -> Self {
+        RmatParams { a: 0.57, b: 0.19, c: 0.19, d: 0.05 }
+    }
+}
+
+/// Generate an R-MAT graph with `n` vertices (rounded up to a power of
+/// two internally; ids above `n` are folded back) and exactly `m` edges.
+pub fn generate(
+    name: &str,
+    n: usize,
+    m: usize,
+    params: RmatParams,
+    directed: bool,
+    rng: &mut Rng,
+) -> Graph {
+    Graph::from_edges(name, n, generate_edges(n, m, params, directed, rng), directed)
+}
+
+/// Edge-list form of [`generate`].
+pub fn generate_edges(
+    n: usize,
+    m: usize,
+    params: RmatParams,
+    directed: bool,
+    rng: &mut Rng,
+) -> Vec<Edge> {
+    let sum = params.a + params.b + params.c + params.d;
+    assert!((sum - 1.0).abs() < 1e-9, "rmat params must sum to 1, got {sum}");
+    let levels = (usize::BITS - (n.max(2) - 1).leading_zeros()) as usize;
+    // Shuffle id assignment so vertex id carries no degree information
+    // (hash partitioners would otherwise see structured ids).
+    let side = 1usize << levels;
+    let mut perm: Vec<u32> = (0..side as u32).collect();
+    rng.shuffle(&mut perm);
+    let sample = move |r: &mut Rng| -> Edge {
+        let (mut row, mut col) = (0usize, 0usize);
+        for level in 0..levels {
+            let bit = 1usize << (levels - 1 - level);
+            let x = r.next_f64();
+            if x < params.a {
+                // top-left: nothing to add
+            } else if x < params.a + params.b {
+                col |= bit;
+            } else if x < params.a + params.b + params.c {
+                row |= bit;
+            } else {
+                row |= bit;
+                col |= bit;
+            }
+        }
+        ((perm[row] as usize % n) as u32, (perm[col] as usize % n) as u32)
+    };
+    fill_distinct(n, m, directed, rng, sample)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Moments;
+
+    #[test]
+    fn sizes() {
+        let mut rng = Rng::new(3);
+        let g = generate("rmat", 300, 1500, RmatParams::default(), true, &mut rng);
+        assert_eq!(g.num_vertices(), 300);
+        assert_eq!(g.num_edges(), 1500);
+    }
+
+    #[test]
+    fn skew_increases_with_a() {
+        let mut rng = Rng::new(5);
+        let sk = |p: RmatParams, rng: &mut Rng| {
+            let g = generate("r", 1024, 8192, p, true, rng);
+            let degs: Vec<f64> = g.vertices().map(|v| g.out_degree(v) as f64).collect();
+            Moments::of(&degs).skewness
+        };
+        let flat = sk(RmatParams { a: 0.25, b: 0.25, c: 0.25, d: 0.25 }, &mut rng);
+        let skewed = sk(RmatParams::default(), &mut rng);
+        assert!(skewed > flat + 0.5, "skewed={skewed} flat={flat}");
+    }
+
+    #[test]
+    #[should_panic(expected = "sum to 1")]
+    fn bad_params_panic() {
+        generate("x", 8, 4, RmatParams { a: 0.9, b: 0.9, c: 0.0, d: 0.0 }, true, &mut Rng::new(1));
+    }
+}

@@ -1,0 +1,104 @@
+//! Edge-list file I/O in the SNAP text convention: one `src dst` pair per
+//! line, `#` comments, whitespace separated. Vertex ids are compacted to
+//! `0..n` on load (SNAP files have sparse id spaces).
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{Edge, Graph};
+
+/// Parse SNAP-style edge-list text into a compacted graph.
+pub fn parse_edge_list(name: &str, text: &str, directed: bool) -> Result<Graph> {
+    let mut remap: HashMap<u64, u32> = HashMap::new();
+    let mut edges: Vec<Edge> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let parse = |tok: Option<&str>| -> Result<u64> {
+            tok.with_context(|| format!("line {}: missing vertex id", lineno + 1))?
+                .parse::<u64>()
+                .with_context(|| format!("line {}: bad vertex id", lineno + 1))
+        };
+        let u = parse(it.next())?;
+        let v = parse(it.next())?;
+        let intern = |x: u64, remap: &mut HashMap<u64, u32>| -> u32 {
+            let next = remap.len() as u32;
+            *remap.entry(x).or_insert(next)
+        };
+        let ui = intern(u, &mut remap);
+        let vi = intern(v, &mut remap);
+        edges.push((ui, vi));
+    }
+    Ok(Graph::from_edges(name, remap.len(), edges, directed))
+}
+
+/// Load an edge-list file.
+pub fn load_edge_list(path: &Path, directed: bool) -> Result<Graph> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut text = String::new();
+    for line in std::io::BufReader::new(file).lines() {
+        text.push_str(&line?);
+        text.push('\n');
+    }
+    let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("graph");
+    parse_edge_list(name, &text, directed)
+}
+
+/// Save a graph as an edge-list file (with a SNAP-style header comment).
+pub fn save_edge_list(graph: &Graph, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    writeln!(
+        w,
+        "# {} directed={} vertices={} edges={}",
+        graph.name,
+        graph.directed,
+        graph.num_vertices(),
+        graph.num_edges()
+    )?;
+    for &(u, v) in graph.edges() {
+        writeln!(w, "{u}\t{v}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_with_comments_and_remap() {
+        let text = "# comment\n10 20\n20 30\n\n10 30\n";
+        let g = parse_edge_list("t", text, true).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3);
+    }
+
+    #[test]
+    fn parse_bad_line_errors() {
+        assert!(parse_edge_list("t", "1 x\n", true).is_err());
+        assert!(parse_edge_list("t", "1\n", true).is_err());
+    }
+
+    #[test]
+    fn roundtrip_via_file() {
+        let dir = std::env::temp_dir().join("gps_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.txt");
+        let g = Graph::from_edges("rt", 4, vec![(0, 1), (1, 2), (2, 3)], false);
+        save_edge_list(&g, &path).unwrap();
+        let g2 = load_edge_list(&path, false).unwrap();
+        assert_eq!(g2.num_vertices(), 4);
+        assert_eq!(g2.edges(), g.edges());
+        assert!(!g2.directed);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,244 @@
+//! Graph representation (§3.1 of the paper).
+//!
+//! The engine's graphs are immutable once built: an edge list sorted by
+//! source vertex id plus an *inverted* edge list sorted by destination,
+//! each with CSR-style offset arrays so that enumerating the out- or
+//! in-neighbours of a vertex `v` costs `O(degree(v))` and locating a
+//! vertex costs `O(1)` (the paper quotes `O(log |V|)` for its sorted
+//! edge-list binary search; contiguous renumbering lets us do better
+//! without changing any observable behaviour). Vertex and edge
+//! properties live in separate key-value maps ([`props`]).
+
+pub mod datasets;
+pub mod gen;
+pub mod io;
+pub mod props;
+pub mod stats;
+
+/// Vertex identifier. Graphs are renumbered to `0..n` at construction.
+pub type VertexId = u32;
+
+/// A directed edge `(source, destination)`.
+pub type Edge = (VertexId, VertexId);
+
+/// An immutable graph with CSR adjacency in both directions.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// Human-readable dataset name (e.g. `wiki`, `stanford`).
+    pub name: String,
+    /// Whether edges are directed. Undirected graphs store each edge once
+    /// in `edges` but adjacency is mirrored in both CSR directions.
+    pub directed: bool,
+    n: usize,
+    /// The edge list, sorted by `(src, dst)`.
+    edges: Vec<Edge>,
+    out_off: Vec<u32>,
+    out_adj: Vec<VertexId>,
+    in_off: Vec<u32>,
+    in_adj: Vec<VertexId>,
+}
+
+impl Graph {
+    /// Build a graph from an edge list. Self-loops are kept; duplicate
+    /// edges are removed (SNAP data is simple); vertex ids must be `< n`.
+    pub fn from_edges(name: &str, n: usize, mut edges: Vec<Edge>, directed: bool) -> Self {
+        assert!(n < u32::MAX as usize, "vertex count too large");
+        edges.sort_unstable();
+        edges.dedup();
+        for &(u, v) in &edges {
+            assert!((u as usize) < n && (v as usize) < n, "edge ({u},{v}) out of range n={n}");
+        }
+        // out-CSR over directed edges; for undirected graphs both
+        // directions are materialised in the adjacency (but not in
+        // `edges`, which keeps the on-disk convention of one line per
+        // undirected edge).
+        let mut out_deg = vec![0u32; n];
+        let mut in_deg = vec![0u32; n];
+        for &(u, v) in &edges {
+            out_deg[u as usize] += 1;
+            in_deg[v as usize] += 1;
+            if !directed {
+                out_deg[v as usize] += 1;
+                in_deg[u as usize] += 1;
+            }
+        }
+        let prefix = |deg: &[u32]| {
+            let mut off = vec![0u32; n + 1];
+            for i in 0..n {
+                off[i + 1] = off[i] + deg[i];
+            }
+            off
+        };
+        let out_off = prefix(&out_deg);
+        let in_off = prefix(&in_deg);
+        let mut out_adj = vec![0u32; out_off[n] as usize];
+        let mut in_adj = vec![0u32; in_off[n] as usize];
+        let mut out_pos: Vec<u32> = out_off[..n].to_vec();
+        let mut in_pos: Vec<u32> = in_off[..n].to_vec();
+        let push = |u: VertexId, v: VertexId, out_pos: &mut Vec<u32>, in_pos: &mut Vec<u32>,
+                        out_adj: &mut Vec<u32>, in_adj: &mut Vec<u32>| {
+            out_adj[out_pos[u as usize] as usize] = v;
+            out_pos[u as usize] += 1;
+            in_adj[in_pos[v as usize] as usize] = u;
+            in_pos[v as usize] += 1;
+        };
+        for &(u, v) in &edges {
+            push(u, v, &mut out_pos, &mut in_pos, &mut out_adj, &mut in_adj);
+            if !directed {
+                push(v, u, &mut out_pos, &mut in_pos, &mut out_adj, &mut in_adj);
+            }
+        }
+        // adjacency lists sorted per vertex for deterministic iteration
+        for v in 0..n {
+            out_adj[out_off[v] as usize..out_off[v + 1] as usize].sort_unstable();
+            in_adj[in_off[v] as usize..in_off[v + 1] as usize].sort_unstable();
+        }
+        Graph { name: name.to_string(), directed, n, edges, out_off, out_adj, in_off, in_adj }
+    }
+
+    /// Number of vertices `|V|`.
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    /// Number of edges `|E|` (undirected edges counted once).
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// The sorted edge list (one entry per stored edge).
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    /// Out-neighbours of `v` (all neighbours for undirected graphs).
+    #[inline]
+    pub fn out_neighbors(&self, v: VertexId) -> &[VertexId] {
+        &self.out_adj[self.out_off[v as usize] as usize..self.out_off[v as usize + 1] as usize]
+    }
+
+    /// In-neighbours of `v` (all neighbours for undirected graphs).
+    #[inline]
+    pub fn in_neighbors(&self, v: VertexId) -> &[VertexId] {
+        &self.in_adj[self.in_off[v as usize] as usize..self.in_off[v as usize + 1] as usize]
+    }
+
+    /// Out-degree of `v`.
+    #[inline]
+    pub fn out_degree(&self, v: VertexId) -> usize {
+        (self.out_off[v as usize + 1] - self.out_off[v as usize]) as usize
+    }
+
+    /// In-degree of `v`.
+    #[inline]
+    pub fn in_degree(&self, v: VertexId) -> usize {
+        (self.in_off[v as usize + 1] - self.in_off[v as usize]) as usize
+    }
+
+    /// Total degree (in+out for directed; neighbour count for undirected,
+    /// where in == out so we report the neighbour count once).
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        if self.directed {
+            self.in_degree(v) + self.out_degree(v)
+        } else {
+            self.out_degree(v)
+        }
+    }
+
+    /// Union of in- and out-neighbours, deduplicated, sorted. For
+    /// undirected graphs this is simply the neighbour list.
+    pub fn both_neighbors(&self, v: VertexId) -> Vec<VertexId> {
+        if !self.directed {
+            return self.out_neighbors(v).to_vec();
+        }
+        let mut all: Vec<VertexId> =
+            self.out_neighbors(v).iter().chain(self.in_neighbors(v)).copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        all
+    }
+
+    /// Whether edge `(u, v)` exists (directed sense; for undirected
+    /// graphs checks the adjacency, which is symmetric).
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        self.out_neighbors(u).binary_search(&v).is_ok()
+    }
+
+    /// Iterator over all vertices.
+    pub fn vertices(&self) -> impl Iterator<Item = VertexId> + '_ {
+        0..self.n as VertexId
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        // 0 -> 1, 0 -> 2, 1 -> 3, 2 -> 3
+        Graph::from_edges("diamond", 4, vec![(0, 1), (0, 2), (1, 3), (2, 3)], true)
+    }
+
+    #[test]
+    fn directed_adjacency() {
+        let g = diamond();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.out_neighbors(0), &[1, 2]);
+        assert_eq!(g.in_neighbors(3), &[1, 2]);
+        assert_eq!(g.out_degree(3), 0);
+        assert_eq!(g.in_degree(0), 0);
+        assert_eq!(g.degree(0), 2);
+    }
+
+    #[test]
+    fn undirected_mirrors() {
+        let g = Graph::from_edges("tri", 3, vec![(0, 1), (1, 2), (0, 2)], false);
+        assert_eq!(g.num_edges(), 3, "stored once");
+        assert_eq!(g.out_neighbors(1), &[0, 2]);
+        assert_eq!(g.in_neighbors(1), &[0, 2]);
+        assert_eq!(g.degree(1), 2);
+        assert!(g.has_edge(2, 0), "symmetric adjacency");
+    }
+
+    #[test]
+    fn dedup_edges() {
+        let g = Graph::from_edges("dup", 2, vec![(0, 1), (0, 1), (0, 1)], true);
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn both_neighbors_union() {
+        let g = Graph::from_edges("b", 3, vec![(0, 1), (2, 0)], true);
+        assert_eq!(g.both_neighbors(0), vec![1, 2]);
+    }
+
+    #[test]
+    fn has_edge_directed_sense() {
+        let g = diamond();
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(1, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_edge_panics() {
+        Graph::from_edges("bad", 2, vec![(0, 5)], true);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::from_edges("empty", 3, vec![], true);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.out_neighbors(1), &[] as &[VertexId]);
+    }
+
+    #[test]
+    fn self_loop_kept() {
+        let g = Graph::from_edges("loop", 2, vec![(0, 0), (0, 1)], true);
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.out_neighbors(0), &[0, 1]);
+        assert_eq!(g.in_neighbors(0), &[0]);
+    }
+}

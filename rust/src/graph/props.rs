@@ -1,0 +1,96 @@
+//! Vertex/edge property maps (§3.1: "vertex and edge properties are
+//! stored in each key-value map").
+//!
+//! Properties are dense `f64` arrays keyed by vertex id plus a string
+//! property name — enough to back every algorithm in §5.3 (PageRank
+//! scores, colors, degree counts, clustering coefficients, ...). The
+//! map is intentionally simple; the GAS engine keeps its *hot* per-vertex
+//! state in typed vectors and uses this only at the API boundary.
+
+use std::collections::BTreeMap;
+
+use super::VertexId;
+
+/// Named dense vertex properties.
+#[derive(Clone, Debug, Default)]
+pub struct VertexProps {
+    n: usize,
+    maps: BTreeMap<String, Vec<f64>>,
+}
+
+impl VertexProps {
+    /// Create a property store for `n` vertices.
+    pub fn new(n: usize) -> Self {
+        VertexProps { n, maps: BTreeMap::new() }
+    }
+
+    /// Create (or reset) a property filled with `init`.
+    pub fn insert(&mut self, key: &str, init: f64) {
+        self.maps.insert(key.to_string(), vec![init; self.n]);
+    }
+
+    /// Adopt an existing full-length vector as a property.
+    pub fn insert_vec(&mut self, key: &str, values: Vec<f64>) {
+        assert_eq!(values.len(), self.n, "property length mismatch");
+        self.maps.insert(key.to_string(), values);
+    }
+
+    /// Read a single value.
+    pub fn get(&self, key: &str, v: VertexId) -> Option<f64> {
+        self.maps.get(key).map(|m| m[v as usize])
+    }
+
+    /// Write a single value (property must exist).
+    pub fn set(&mut self, key: &str, v: VertexId, value: f64) {
+        self.maps
+            .get_mut(key)
+            .unwrap_or_else(|| panic!("unknown property {key:?}"))[v as usize] = value;
+    }
+
+    /// Borrow the whole column.
+    pub fn column(&self, key: &str) -> Option<&[f64]> {
+        self.maps.get(key).map(|v| v.as_slice())
+    }
+
+    /// Property names, sorted.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.maps.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_set() {
+        let mut p = VertexProps::new(3);
+        p.insert("rank", 1.0);
+        assert_eq!(p.get("rank", 2), Some(1.0));
+        p.set("rank", 2, 0.5);
+        assert_eq!(p.get("rank", 2), Some(0.5));
+        assert_eq!(p.get("missing", 0), None);
+    }
+
+    #[test]
+    fn column_and_keys() {
+        let mut p = VertexProps::new(2);
+        p.insert_vec("deg", vec![3.0, 4.0]);
+        p.insert("x", 0.0);
+        assert_eq!(p.column("deg"), Some(&[3.0, 4.0][..]));
+        let keys: Vec<&str> = p.keys().collect();
+        assert_eq!(keys, vec!["deg", "x"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn wrong_length_panics() {
+        VertexProps::new(3).insert_vec("deg", vec![1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown property")]
+    fn set_unknown_panics() {
+        VertexProps::new(1).set("nope", 0, 1.0);
+    }
+}

@@ -1,0 +1,90 @@
+//! Degree-distribution statistics — the data-feature inputs of Table 3.
+//!
+//! The four moments per direction (mean, std, skewness, kurtosis) are
+//! derived from raw power sums so the computation can be served either
+//! by the pure-Rust path here or by the AOT-compiled L1 `moments`
+//! Pallas kernel (`runtime::moments`), which returns the same five
+//! power sums per degree array.
+
+use super::Graph;
+use crate::util::stats::{Moments, PowerSums};
+
+/// In/out degree moments plus cardinalities for one graph.
+#[derive(Clone, Copy, Debug)]
+pub struct DegreeStats {
+    pub num_vertices: usize,
+    pub num_edges: usize,
+    pub directed: bool,
+    pub in_deg: Moments,
+    pub out_deg: Moments,
+}
+
+/// Extract the in- and out-degree arrays as `f64` (the shape handed to
+/// the PJRT moments artifact).
+pub fn degree_arrays(g: &Graph) -> (Vec<f64>, Vec<f64>) {
+    let n = g.num_vertices();
+    let mut ind = Vec::with_capacity(n);
+    let mut outd = Vec::with_capacity(n);
+    for v in g.vertices() {
+        ind.push(g.in_degree(v) as f64);
+        outd.push(g.out_degree(v) as f64);
+    }
+    (ind, outd)
+}
+
+impl DegreeStats {
+    /// Compute with the pure-Rust path.
+    pub fn of(g: &Graph) -> Self {
+        let (ind, outd) = degree_arrays(g);
+        Self::from_power_sums(g, PowerSums::of(&ind), PowerSums::of(&outd))
+    }
+
+    /// Assemble from externally computed power sums (PJRT path).
+    pub fn from_power_sums(g: &Graph, in_sums: PowerSums, out_sums: PowerSums) -> Self {
+        DegreeStats {
+            num_vertices: g.num_vertices(),
+            num_edges: g.num_edges(),
+            directed: g.directed,
+            in_deg: Moments::from_power_sums(in_sums),
+            out_deg: Moments::from_power_sums(out_sums),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    #[test]
+    fn star_graph_moments() {
+        // star: 0 -> {1..5}; out-deg = [5,0,0,0,0,0], in-deg = [0,1,1,1,1,1]
+        let edges = (1..=5).map(|v| (0u32, v as u32)).collect();
+        let g = Graph::from_edges("star", 6, edges, true);
+        let s = DegreeStats::of(&g);
+        assert_eq!(s.num_vertices, 6);
+        assert_eq!(s.num_edges, 5);
+        assert!((s.out_deg.mean - 5.0 / 6.0).abs() < 1e-12);
+        assert!((s.in_deg.mean - 5.0 / 6.0).abs() < 1e-12);
+        // out-degree is a one-hot spike → strongly positive skew
+        assert!(s.out_deg.skewness > 1.5);
+        // in-degree is 5 ones and a zero → negative skew
+        assert!(s.in_deg.skewness < 0.0);
+    }
+
+    #[test]
+    fn undirected_in_equals_out() {
+        let g = Graph::from_edges("u", 4, vec![(0, 1), (1, 2), (2, 3)], false);
+        let s = DegreeStats::of(&g);
+        assert_eq!(s.in_deg, s.out_deg);
+        assert!(!s.directed);
+    }
+
+    #[test]
+    fn mean_degree_identity() {
+        // directed: Σ out-deg = |E| → mean out-deg = |E| / |V|
+        let g = Graph::from_edges("d", 5, vec![(0, 1), (0, 2), (3, 4), (1, 0)], true);
+        let s = DegreeStats::of(&g);
+        assert!((s.out_deg.mean - 4.0 / 5.0).abs() < 1e-12);
+    }
+}

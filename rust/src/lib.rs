@@ -1,0 +1,45 @@
+//! # gps-select
+//!
+//! Production-quality reproduction of *"Machine Learning-based Selection of
+//! Graph Partitioning Strategy Using the Characteristics of Graph Data and
+//! Algorithm"* (Park, Lee, Bui — AIDB'21).
+//!
+//! The library is organised bottom-up:
+//!
+//! * [`util`] — deterministic RNG, statistics helpers, CLI parsing, a tiny
+//!   bench harness and table formatting (no external deps beyond `xla`).
+//! * [`graph`] — edge-list/CSR graph representation, property maps, the
+//!   synthetic generators standing in for the paper's 12 SNAP datasets.
+//! * [`partition`] — the twelve partitioning strategies of Table 2
+//!   (1DSrc, 1DDst, Random, Canonical, 2D, Hybrid, Oblivious, HDRF×4,
+//!   Ginger) plus partition-quality metrics.
+//! * [`engine`] — the distributed GAS (Gather-Apply-Scatter) engine with a
+//!   deterministic cluster cost model (the paper's 4×16-worker testbed).
+//! * [`algorithms`] — the eight graph algorithms of §5.3 implemented as
+//!   GAS vertex programs, with their pseudo-code sources.
+//! * [`analyzer`] — the pseudo-code static analyzer (lexer, parser,
+//!   symbolic loop analysis) replacing the paper's JavaCC tool.
+//! * [`features`] — data features (Table 3) + algorithm features (Table 4)
+//!   and the model input encoding of Fig 5.
+//! * [`dataset`] — execution-log store, synthetic augmentation
+//!   (combinations-with-replacement, Eq. 3) and the A/B/C/D test split.
+//! * [`ml`] — from-scratch histogram GBDT (the paper's XGBoost, Eq. 4-16),
+//!   linear-regression and MLP baselines, regression metrics.
+//! * [`etrm`] — the Execution Time Regression Model wrapper + strategy
+//!   selector + the Score_best/worst/avg metrics (Eq. 19-21).
+//! * [`runtime`] — PJRT bridge loading the AOT artifacts produced by
+//!   `python/compile/aot.py` (HLO text), with pure-Rust fallbacks.
+//! * [`eval`] — drivers regenerating every table and figure of §5.
+
+pub mod algorithms;
+pub mod analyzer;
+pub mod dataset;
+pub mod engine;
+pub mod etrm;
+pub mod eval;
+pub mod features;
+pub mod graph;
+pub mod ml;
+pub mod partition;
+pub mod runtime;
+pub mod util;

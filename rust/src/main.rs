@@ -1,0 +1,289 @@
+//! `repro` — the gps-select command-line driver.
+//!
+//! Subcommands:
+//!
+//! * `figures --id <fig1|fig4|table2|table3|table4|fig6|fig7|table6|fig8|table7|all>`
+//!   — regenerate paper artifacts (runs the full pipeline once).
+//! * `pipeline` — run corpus → augmentation → training → evaluation and
+//!   print the headline summary.
+//! * `run --graph wiki --algorithm PR --strategy Hybrid` — execute one
+//!   task on the engine and report the simulated time breakdown.
+//! * `partition --graph wiki [--workers 64]` — partition-quality metrics
+//!   for every strategy.
+//! * `features --graph wiki --algorithm PR` — print the extracted task
+//!   features (Fig 2 steps 1-2).
+//! * `analyze --file pseudo/pr.gps` — symbolic operation counts of a
+//!   pseudo-code file (Listing 2).
+//! * `logs --out logs.csv` — build and save the execution-log corpus.
+//! * `runtime-check` — load the PJRT artifacts and smoke-test them.
+//!
+//! Common flags: `--scale` (default 1/32 of the paper's dataset sizes),
+//! `--seed`, `--workers`.
+
+use anyhow::{bail, Context, Result};
+use gps_select::algorithms::Algorithm;
+use gps_select::analyzer;
+use gps_select::dataset::logs::LogStore;
+use gps_select::engine::cost::ClusterConfig;
+use gps_select::eval::{figures, pipeline};
+use gps_select::features::{DataFeatures, TaskFeatures};
+use gps_select::graph::datasets::DatasetSpec;
+use gps_select::ml::gbdt::GbdtParams;
+use gps_select::partition::metrics::PartitionMetrics;
+use gps_select::partition::Strategy;
+use gps_select::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn pipeline_config(args: &Args) -> pipeline::PipelineConfig {
+    let default = pipeline::PipelineConfig::default();
+    pipeline::PipelineConfig {
+        scale: args.get_f64("scale", default.scale),
+        seed: args.get_u64("seed", default.seed),
+        workers: args.get_usize("workers", default.workers),
+        augment_cap: match args.get("cap") {
+            Some("none") => None,
+            Some(v) => Some(v.parse().expect("--cap expects an integer or 'none'")),
+            None => default.augment_cap,
+        },
+        r_lo: args.get_usize("r-lo", default.r_lo),
+        r_hi: args.get_usize("r-hi", default.r_hi),
+        gbdt: GbdtParams {
+            n_estimators: args.get_usize("trees", default.gbdt.n_estimators),
+            max_depth: args.get_usize("depth", default.gbdt.max_depth),
+            ..default.gbdt
+        },
+    }
+}
+
+fn build_graph(args: &Args) -> Result<gps_select::graph::Graph> {
+    let name = args.get("graph").context("--graph <name> required")?;
+    let spec = DatasetSpec::by_name(name)
+        .with_context(|| format!("unknown graph {name:?} (see Table 5 aliases)"))?;
+    let scale = args.get_f64("scale", pipeline::PipelineConfig::default().scale);
+    Ok(spec.build(scale, args.get_u64("seed", 42)))
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("figures") => cmd_figures(args),
+        Some("pipeline") => cmd_pipeline(args),
+        Some("run") => cmd_run(args),
+        Some("partition") => cmd_partition(args),
+        Some("features") => cmd_features(args),
+        Some("analyze") => cmd_analyze(args),
+        Some("logs") => cmd_logs(args),
+        Some("runtime-check") => cmd_runtime_check(),
+        Some(other) => bail!("unknown subcommand {other:?} (see the README)"),
+        None => {
+            println!(
+                "usage: repro <figures|pipeline|run|partition|features|analyze|logs|runtime-check> [flags]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let id = args.get_or("id", "all");
+    let config = pipeline_config(args);
+    // fig4 and table2 do not need the trained pipeline
+    if id == "table2" {
+        println!("{}", figures::table2());
+        return Ok(());
+    }
+    if id == "fig4" {
+        println!("{}", figures::fig4(config.scale, config.seed)?);
+        return Ok(());
+    }
+    let eval = pipeline::run_with_progress(config, |stage| eprintln!("[pipeline] {stage}"))?;
+    let render = |id: &str, eval: &pipeline::Evaluation| -> Result<String> {
+        Ok(match id {
+            "fig1" => figures::fig1(eval),
+            "fig4" => figures::fig4(eval.config.scale, eval.config.seed)?,
+            "table2" => figures::table2(),
+            "table3" => figures::table3(eval)?,
+            "table4" => figures::table4(eval)?,
+            "fig6" => figures::fig6(eval),
+            "fig7" => figures::fig7(eval),
+            "table6" => figures::table6(eval),
+            "fig8" => figures::fig8(eval),
+            "table7" => figures::table7(eval),
+            other => bail!("unknown figure id {other:?}"),
+        })
+    };
+    if id == "all" {
+        for id in
+            ["fig1", "fig4", "table2", "table3", "table4", "fig6", "fig7", "table6", "fig8", "table7"]
+        {
+            println!("{}\n", render(id, &eval)?);
+        }
+    } else {
+        println!("{}", render(id, &eval)?);
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let config = pipeline_config(args);
+    let eval = pipeline::run_with_progress(config, |stage| eprintln!("[pipeline] {stage}"))?;
+    let all: Vec<&pipeline::TaskEval> = eval.tasks.iter().collect();
+    let (best, worst, avg) = pipeline::Evaluation::mean_scores(&all);
+    let rank1 = all.iter().filter(|t| t.rank == 1).count() as f64 / all.len() as f64;
+    let rank4 = all.iter().filter(|t| t.rank <= 4).count() as f64 / all.len() as f64;
+    println!("pipeline summary");
+    println!("  corpus logs        : {}", eval.store.logs.len());
+    println!("  synthetic tuples   : {}", eval.synthetic_count);
+    println!("  test tasks         : {}", eval.tasks.len());
+    println!("  Score_best (mean)  : {best:.4}   (paper: 0.9458)");
+    println!("  Score_worst (mean) : {worst:.4}   (paper: 2.0770)");
+    println!("  Score_avg (mean)   : {avg:.4}   (paper: 1.4558)");
+    println!("  best-pick ratio    : {rank1:.2}     (paper: 0.52)");
+    println!("  within-rank-4 ratio: {rank4:.2}     (paper: 0.92)");
+    if let Some(path) = args.get("save-csv") {
+        eval.store.save_csv(std::path::Path::new(path))?;
+        println!("  corpus saved       : {path}");
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let g = build_graph(args)?;
+    let algo = Algorithm::by_name(args.get_or("algorithm", "PR"))
+        .context("unknown --algorithm (AID AOD PR GC APCN TC CC RW)")?;
+    let strategy = Strategy::by_name(args.get_or("strategy", "Random"))
+        .context("unknown --strategy (see table2)")?;
+    let workers = args.get_usize("workers", 64);
+    let cfg = ClusterConfig::with_workers(workers);
+    let p = strategy.partition(&g, workers);
+    let outcome = algo.simulate(&g, &p, &cfg);
+    println!(
+        "task {}/{} under {} on {} workers (|V|={}, |E|={})",
+        g.name,
+        algo.name(),
+        strategy.name(),
+        workers,
+        g.num_vertices(),
+        g.num_edges()
+    );
+    println!("  simulated time : {:.6} s", outcome.sim.total);
+    println!("    compute      : {:.6} s", outcome.sim.compute);
+    println!("    comm         : {:.6} s", outcome.sim.comm);
+    println!("    overhead     : {:.6} s", outcome.sim.overhead);
+    println!("  supersteps     : {}", outcome.ops.supersteps);
+    println!("  gathers        : {}", outcome.ops.gathers);
+    println!("  messages       : {}", outcome.ops.messages);
+    println!("  bytes          : {}", outcome.ops.bytes);
+    println!("  checksum       : {:.6}", outcome.checksum);
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let g = build_graph(args)?;
+    let workers = args.get_usize("workers", 64);
+    println!(
+        "partition metrics for {} (|V|={}, |E|={}) on {workers} workers",
+        g.name,
+        g.num_vertices(),
+        g.num_edges()
+    );
+    let mut t = gps_select::util::table::Table::new(vec![
+        "strategy",
+        "replication",
+        "edge balance",
+        "vertex balance",
+        "workers used",
+    ]);
+    for s in Strategy::all() {
+        let p = s.partition(&g, workers);
+        let m = PartitionMetrics::of(&g, &p);
+        t.row(vec![
+            s.name(),
+            format!("{:.3}", m.replication_factor),
+            format!("{:.3}", m.edge_balance),
+            format!("{:.3}", m.vertex_balance),
+            format!("{}", m.workers_used),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_features(args: &Args) -> Result<()> {
+    let g = build_graph(args)?;
+    let algo =
+        Algorithm::by_name(args.get_or("algorithm", "PR")).context("unknown --algorithm")?;
+    let tf = TaskFeatures::extract(&g, algo.pseudo_code())?;
+    println!("data features ({}):", g.name);
+    let d = &tf.data;
+    println!("  |V| = {}  |E| = {}  directed = {}", d.num_vertices, d.num_edges, d.directed);
+    for (label, m) in [("in-degree", d.in_deg), ("out-degree", d.out_deg)] {
+        println!(
+            "  {label}: mean={:.3} std={:.3} skew={:.3} kurt={:.3}",
+            m.mean, m.std, m.skewness, m.kurtosis
+        );
+    }
+    println!("algorithm features ({}):", algo.name());
+    for (k, v) in analyzer::OpKey::all().iter().zip(tf.algo.iter()) {
+        if *v != 0.0 {
+            println!("  {:<22} {v:.1}", k.name());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let source = match args.get("file") {
+        Some(path) => std::fs::read_to_string(path)?,
+        None => {
+            let algo = Algorithm::by_name(args.get_or("algorithm", "PR"))
+                .context("--file or --algorithm required")?;
+            algo.pseudo_code().to_string()
+        }
+    };
+    let counts = analyzer::analyze(&source)?;
+    println!("symbolic operation counts (Listing 2 form):");
+    for (k, e) in &counts.counts {
+        println!("  {:<22} {}", k.name(), e.render());
+    }
+    if let Some(gname) = args.get("graph") {
+        let spec = DatasetSpec::by_name(gname).context("unknown graph")?;
+        let g = spec.build(args.get_f64("scale", 1.0 / 32.0), args.get_u64("seed", 42));
+        let env = DataFeatures::of(&g).sym_env();
+        println!("evaluated against {gname}:");
+        for (k, v) in counts.evaluate(&env) {
+            if v != 0.0 {
+                println!("  {:<22} {v:.1}", k.name());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_logs(args: &Args) -> Result<()> {
+    let config = pipeline_config(args);
+    let cfg = ClusterConfig::with_workers(config.workers);
+    let store = LogStore::build_corpus(config.scale, config.seed, &cfg)?;
+    let path = args.get_or("out", "logs.csv");
+    store.save_csv(std::path::Path::new(path))?;
+    println!("wrote {} execution logs to {path}", store.logs.len());
+    Ok(())
+}
+
+fn cmd_runtime_check() -> Result<()> {
+    let rt = gps_select::runtime::Runtime::load(&gps_select::runtime::Runtime::default_dir())?;
+    println!("PJRT platform : {}", rt.platform());
+    println!("manifest      : {:?}", rt.manifest);
+    let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+    let sums = gps_select::runtime::moments::power_sums(&rt, &xs)?;
+    println!("moments check : Σx = {} (expect 5050)", sums.s1);
+    anyhow::ensure!(sums.s1 == 5050.0, "moments artifact mismatch");
+    println!("runtime OK");
+    Ok(())
+}

@@ -1,0 +1,191 @@
+//! Tensor export of a trained ensemble for the AOT-compiled PJRT
+//! inference path.
+//!
+//! The L1 Pallas kernel (`python/compile/kernels/gbdt.py`) evaluates a
+//! *fixed-shape* forest: every tree is padded to `max_nodes` slots;
+//! leaves are self-referencing (`left == right == self`), so exactly
+//! `depth` traversal iterations land on the leaf regardless of the
+//! actual path length. Because the tree tensors are runtime *inputs* of
+//! the compiled HLO, one artifact serves any trained model up to the
+//! padded capacity.
+
+use anyhow::{bail, Result};
+
+use super::{Gbdt, Tree};
+
+/// Flattened forest tensors (row-major `[n_trees, max_nodes]`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GbdtTensors {
+    pub n_trees: usize,
+    pub max_nodes: usize,
+    /// traversal iterations needed (max tree depth)
+    pub depth: usize,
+    pub feature: Vec<i32>,
+    pub threshold: Vec<f32>,
+    pub left: Vec<i32>,
+    pub right: Vec<i32>,
+    pub value: Vec<f32>,
+    pub base_score: f32,
+    /// learning rate folded into leaf values? kept separate for clarity
+    pub learning_rate: f32,
+}
+
+impl GbdtTensors {
+    /// Flatten a trained model, padding to `capacity` = (trees, nodes).
+    /// Pass `None` to size exactly to the model.
+    pub fn from_model(model: &Gbdt, capacity: Option<(usize, usize)>) -> Result<Self> {
+        let need_nodes = model.trees.iter().map(|t| t.nodes.len()).max().unwrap_or(1);
+        let need_depth = model.trees.iter().map(Tree::depth).max().unwrap_or(0);
+        let (n_trees, max_nodes) = capacity.unwrap_or((model.trees.len(), need_nodes));
+        if model.trees.len() > n_trees || need_nodes > max_nodes {
+            bail!(
+                "model ({} trees × {} nodes) exceeds capacity ({n_trees} × {max_nodes})",
+                model.trees.len(),
+                need_nodes
+            );
+        }
+        let total = n_trees * max_nodes;
+        let mut t = GbdtTensors {
+            n_trees,
+            max_nodes,
+            depth: need_depth,
+            feature: vec![-1; total],
+            threshold: vec![0.0; total],
+            left: vec![0; total],
+            right: vec![0; total],
+            value: vec![0.0; total],
+            base_score: model.base_score as f32,
+            learning_rate: model.params.learning_rate as f32,
+        };
+        // padding slots are zero-value self-leaves
+        for ti in 0..n_trees {
+            for ni in 0..max_nodes {
+                let idx = ti * max_nodes + ni;
+                t.left[idx] = ni as i32;
+                t.right[idx] = ni as i32;
+            }
+        }
+        for (ti, tree) in model.trees.iter().enumerate() {
+            for (ni, node) in tree.nodes.iter().enumerate() {
+                let idx = ti * max_nodes + ni;
+                t.feature[idx] = node.feature;
+                t.threshold[idx] = node.threshold as f32;
+                t.left[idx] = node.left as i32;
+                t.right[idx] = node.right as i32;
+                t.value[idx] = node.value as f32;
+            }
+        }
+        Ok(t)
+    }
+
+    /// Reference traversal over the flattened tensors — must agree with
+    /// both `Tree::predict` and the Pallas kernel. Returns the
+    /// *transformed-space* prediction (before the inverse target
+    /// transform).
+    pub fn predict_transformed(&self, x: &[f64]) -> f64 {
+        let mut acc = self.base_score as f64;
+        for ti in 0..self.n_trees {
+            let base = ti * self.max_nodes;
+            let mut node = 0usize;
+            for _ in 0..self.depth {
+                let f = self.feature[base + node];
+                if f >= 0 {
+                    node = if (x[f as usize] as f32) <= self.threshold[base + node] {
+                        self.left[base + node] as usize
+                    } else {
+                        self.right[base + node] as usize
+                    };
+                }
+            }
+            acc += self.learning_rate as f64 * self.value[base + node] as f64;
+        }
+        acc
+    }
+
+    /// Serialise to a simple text format (shape header + one array per
+    /// line) consumed by tests and offline tooling.
+    pub fn to_text(&self) -> String {
+        fn join<T: std::fmt::Display>(v: &[T]) -> String {
+            v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(" ")
+        }
+        format!(
+            "gbdt {} {} {} {} {}\nfeature {}\nthreshold {}\nleft {}\nright {}\nvalue {}\n",
+            self.n_trees,
+            self.max_nodes,
+            self.depth,
+            self.base_score,
+            self.learning_rate,
+            join(&self.feature),
+            join(&self.threshold),
+            join(&self.left),
+            join(&self.right),
+            join(&self.value),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::gbdt::GbdtParams;
+    use crate::ml::{Regressor, TrainSet};
+    use crate::util::rng::Rng;
+
+    fn trained() -> Gbdt {
+        let mut rng = Rng::new(520);
+        let mut train = TrainSet::default();
+        for _ in 0..400 {
+            let a = rng.next_f64() * 4.0;
+            let b = rng.next_f64();
+            train.push(vec![a, b], a * a + b);
+        }
+        Gbdt::fit(
+            &train,
+            GbdtParams { n_estimators: 30, max_depth: 4, log_target: false, ..GbdtParams::fast() },
+        )
+    }
+
+    #[test]
+    fn tensor_traversal_matches_native() {
+        let model = trained();
+        let t = GbdtTensors::from_model(&model, None).unwrap();
+        let mut rng = Rng::new(521);
+        for _ in 0..200 {
+            let x = vec![rng.next_f64() * 4.0, rng.next_f64()];
+            let native = model.predict(&x);
+            let flat = model.inverse_transform(t.predict_transformed(&x));
+            assert!(
+                (native - flat).abs() < 1e-4 * (1.0 + native.abs()),
+                "{native} vs {flat}"
+            );
+        }
+    }
+
+    #[test]
+    fn padding_is_neutral() {
+        let model = trained();
+        let exact = GbdtTensors::from_model(&model, None).unwrap();
+        let padded =
+            GbdtTensors::from_model(&model, Some((exact.n_trees + 7, exact.max_nodes + 33)))
+                .unwrap();
+        let x = vec![1.5, 0.5];
+        assert!(
+            (exact.predict_transformed(&x) - padded.predict_transformed(&x)).abs() < 1e-6
+        );
+    }
+
+    #[test]
+    fn capacity_overflow_errors() {
+        let model = trained();
+        assert!(GbdtTensors::from_model(&model, Some((1, 1))).is_err());
+    }
+
+    #[test]
+    fn text_format_header() {
+        let model = trained();
+        let t = GbdtTensors::from_model(&model, None).unwrap();
+        let text = t.to_text();
+        assert!(text.starts_with("gbdt "));
+        assert_eq!(text.lines().count(), 6);
+    }
+}

@@ -1,0 +1,122 @@
+//! Gain and split importance (§5.6, Tables 3-4).
+//!
+//! Per the paper: each feature's *average Gain* over the splits that
+//! used it, normalised so all features' averages sum to 1 (gain
+//! importance); and the raw count of splits using the feature (split
+//! importance).
+
+/// Accumulated importance statistics over an ensemble.
+#[derive(Clone, Debug, Default)]
+pub struct Importance {
+    /// Σ gain per feature.
+    pub total_gain: Vec<f64>,
+    /// split count per feature.
+    pub split_count: Vec<u64>,
+}
+
+impl Importance {
+    /// New accumulator for `dim` features.
+    pub fn new(dim: usize) -> Self {
+        Importance { total_gain: vec![0.0; dim], split_count: vec![0; dim] }
+    }
+
+    /// Record one split.
+    pub fn record_split(&mut self, feature: usize, gain: f64) {
+        self.total_gain[feature] += gain;
+        self.split_count[feature] += 1;
+    }
+
+    /// Average gain per feature (0 where never split).
+    pub fn avg_gain(&self) -> Vec<f64> {
+        self.total_gain
+            .iter()
+            .zip(&self.split_count)
+            .map(|(&g, &c)| if c == 0 { 0.0 } else { g / c as f64 })
+            .collect()
+    }
+
+    /// Normalised gain importance (sums to 1 when any split exists).
+    pub fn gain_share(&self) -> Vec<f64> {
+        let avg = self.avg_gain();
+        let total: f64 = avg.iter().sum();
+        if total == 0.0 {
+            return avg;
+        }
+        avg.into_iter().map(|g| g / total).collect()
+    }
+
+    /// Aggregate per-column importance into named groups (the Table 3/4
+    /// rows span several encoded columns). `group_of(col)` returns the
+    /// row label, or `None` to skip. Returns (label, gain-share,
+    /// split-count) triples; gain shares are re-normalised over the
+    /// selected groups.
+    pub fn grouped(
+        &self,
+        group_of: impl Fn(usize) -> Option<&'static str>,
+    ) -> Vec<(String, f64, u64)> {
+        use std::collections::BTreeMap;
+        let avg = self.avg_gain();
+        let mut gains: BTreeMap<&'static str, f64> = BTreeMap::new();
+        let mut splits: BTreeMap<&'static str, u64> = BTreeMap::new();
+        let mut order: Vec<&'static str> = Vec::new();
+        for col in 0..self.total_gain.len() {
+            if let Some(label) = group_of(col) {
+                if !gains.contains_key(label) {
+                    order.push(label);
+                }
+                *gains.entry(label).or_insert(0.0) += avg[col];
+                *splits.entry(label).or_insert(0) += self.split_count[col];
+            }
+        }
+        let total: f64 = gains.values().sum();
+        order
+            .into_iter()
+            .map(|l| {
+                let g = if total == 0.0 { 0.0 } else { gains[l] / total };
+                (l.to_string(), g, splits[l])
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn averages_and_shares() {
+        let mut imp = Importance::new(3);
+        imp.record_split(0, 10.0);
+        imp.record_split(0, 20.0); // avg 15
+        imp.record_split(2, 5.0); // avg 5
+        let avg = imp.avg_gain();
+        assert_eq!(avg, vec![15.0, 0.0, 5.0]);
+        let share = imp.gain_share();
+        assert!((share[0] - 0.75).abs() < 1e-12);
+        assert!((share[2] - 0.25).abs() < 1e-12);
+        assert_eq!(imp.split_count, vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn grouping_aggregates() {
+        let mut imp = Importance::new(4);
+        imp.record_split(0, 8.0);
+        imp.record_split(1, 4.0);
+        imp.record_split(2, 4.0);
+        let groups = imp.grouped(|c| match c {
+            0 | 1 => Some("X"),
+            2 => Some("Y"),
+            _ => None,
+        });
+        assert_eq!(groups.len(), 2);
+        let x = groups.iter().find(|g| g.0 == "X").unwrap();
+        assert!((x.1 - 12.0 / 16.0).abs() < 1e-12);
+        assert_eq!(x.2, 2);
+    }
+
+    #[test]
+    fn empty_importance_all_zero() {
+        let imp = Importance::new(2);
+        assert_eq!(imp.gain_share(), vec![0.0, 0.0]);
+    }
+}

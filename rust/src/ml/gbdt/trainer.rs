@@ -1,0 +1,316 @@
+//! Histogram tree growing (Eq. 13 gain; depth-wise).
+//!
+//! Features are quantised once into ≤`max_bins` quantile bins; each
+//! node accumulates per-bin (ΣG, ΣH, count) histograms over its rows
+//! and scans bin boundaries for the gain-maximising split. Rows are
+//! partitioned in place so node row-ranges stay contiguous.
+
+use crate::util::rng::Rng;
+
+use super::importance::Importance;
+use super::tree::{Node, Tree};
+use super::GbdtParams;
+
+/// Quantile-binned feature matrix (column-major bins + per-feature bin
+/// upper edges in raw space).
+pub struct BinnedMatrix {
+    pub rows: usize,
+    pub dim: usize,
+    /// bin index per (feature, row): `bins[f][r]`.
+    pub bins: Vec<Vec<u16>>,
+    /// raw-space threshold for "bin ≤ b": `edges[f][b]`.
+    pub edges: Vec<Vec<f64>>,
+}
+
+impl BinnedMatrix {
+    /// Quantile-bin the matrix.
+    pub fn build(x: &[Vec<f64>], max_bins: usize) -> Self {
+        assert!(max_bins >= 2 && max_bins <= u16::MAX as usize);
+        let rows = x.len();
+        let dim = x.first().map_or(0, Vec::len);
+        let mut bins = Vec::with_capacity(dim);
+        let mut edges = Vec::with_capacity(dim);
+        for f in 0..dim {
+            let mut vals: Vec<f64> = x.iter().map(|r| r[f]).collect();
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.dedup();
+            // candidate edges at quantiles of distinct values
+            let nb = max_bins.min(vals.len());
+            let mut fe: Vec<f64> = Vec::with_capacity(nb);
+            if nb <= 1 {
+                fe.push(f64::INFINITY);
+            } else {
+                for b in 0..nb - 1 {
+                    // edge between quantile positions: midpoint of
+                    // adjacent distinct values for exact reproducibility
+                    let pos = (b + 1) * vals.len() / nb;
+                    let lo = vals[pos - 1];
+                    let hi = vals[pos.min(vals.len() - 1)];
+                    fe.push((lo + hi) / 2.0);
+                }
+                fe.dedup();
+                fe.push(f64::INFINITY);
+            }
+            let fb: Vec<u16> = x
+                .iter()
+                .map(|r| {
+                    let v = r[f];
+                    fe.partition_point(|&e| e < v) as u16
+                })
+                .collect();
+            bins.push(fb);
+            edges.push(fe);
+        }
+        BinnedMatrix { rows, dim, bins, edges }
+    }
+}
+
+struct NodeWork {
+    /// node id in the output tree
+    id: u32,
+    /// row range [lo, hi) in the shared permutation
+    lo: usize,
+    hi: usize,
+    depth: usize,
+    g_sum: f64,
+    h_sum: f64,
+}
+
+fn soft_threshold(g: f64, alpha: f64) -> f64 {
+    if g > alpha {
+        g - alpha
+    } else if g < -alpha {
+        g + alpha
+    } else {
+        0.0
+    }
+}
+
+fn leaf_weight(g: f64, h: f64, p: &GbdtParams) -> f64 {
+    -soft_threshold(g, p.reg_alpha) / (h + p.reg_lambda)
+}
+
+/// A grown tree plus the leaf assignment of the sampled rows: for each
+/// leaf, its node id and the range of `rows` it covers — the boosting
+/// loop uses this to update those rows' predictions without
+/// re-traversing the tree.
+pub struct GrownTree {
+    pub tree: Tree,
+    /// (leaf node id, lo, hi) ranges into `rows`.
+    pub leaf_ranges: Vec<(u32, usize, usize)>,
+    /// The sampled row ids, partitioned so each leaf range is contiguous.
+    pub rows: Vec<u32>,
+}
+
+/// Grow one tree against gradients `grad` (hessians are 1 under squared
+/// loss).
+pub fn grow_tree(
+    m: &BinnedMatrix,
+    grad: &[f64],
+    p: &GbdtParams,
+    rng: &mut Rng,
+    importance: &mut Importance,
+) -> GrownTree {
+    // per-tree row subsample
+    let mut rows: Vec<u32> = (0..m.rows as u32).filter(|_| true).collect();
+    if p.subsample < 1.0 {
+        rows.retain(|_| rng.gen_bool(p.subsample));
+        if rows.is_empty() {
+            rows = (0..m.rows as u32).collect();
+        }
+    }
+    // per-tree feature subsample
+    let mut feats: Vec<usize> = (0..m.dim).filter(|_| rng.gen_bool(p.colsample_bytree)).collect();
+    if feats.is_empty() {
+        feats = (0..m.dim).collect();
+    }
+
+    let g0: f64 = rows.iter().map(|&r| grad[r as usize]).sum();
+    let h0 = rows.len() as f64;
+    let mut tree = Tree { nodes: vec![Node::leaf(0, leaf_weight(g0, h0, p))] };
+    let mut leaf_ranges: Vec<(u32, usize, usize)> = Vec::new();
+    let mut stack = vec![NodeWork { id: 0, lo: 0, hi: rows.len(), depth: 0, g_sum: g0, h_sum: h0 }];
+
+    while let Some(w) = stack.pop() {
+        if w.depth >= p.max_depth || w.h_sum < 2.0 * p.min_child_weight {
+            leaf_ranges.push((w.id, w.lo, w.hi));
+            continue; // stays a leaf
+        }
+        // histogram scan over sampled features
+        let mut best: Option<(f64, usize, usize)> = None; // (gain, feature, bin)
+        let parent_score = soft_threshold(w.g_sum, p.reg_alpha).powi(2) / (w.h_sum + p.reg_lambda);
+        for &f in &feats {
+            let nb = m.edges[f].len();
+            if nb <= 1 {
+                continue;
+            }
+            let mut hist_g = vec![0.0f64; nb];
+            let mut hist_h = vec![0.0f64; nb];
+            let col = &m.bins[f];
+            for &r in &rows[w.lo..w.hi] {
+                let b = col[r as usize] as usize;
+                hist_g[b] += grad[r as usize];
+                hist_h[b] += 1.0;
+            }
+            let mut gl = 0.0;
+            let mut hl = 0.0;
+            for b in 0..nb - 1 {
+                gl += hist_g[b];
+                hl += hist_h[b];
+                let gr = w.g_sum - gl;
+                let hr = w.h_sum - hl;
+                if hl < p.min_child_weight || hr < p.min_child_weight {
+                    continue;
+                }
+                // paper Eq. 13 (the ½ factor is conventional and does
+                // not change the argmax; γ subtracted below)
+                let gain = soft_threshold(gl, p.reg_alpha).powi(2) / (hl + p.reg_lambda)
+                    + soft_threshold(gr, p.reg_alpha).powi(2) / (hr + p.reg_lambda)
+                    - parent_score
+                    - p.gamma;
+                if gain > 0.0 && best.map_or(true, |(bg, _, _)| gain > bg) {
+                    best = Some((gain, f, b));
+                }
+            }
+        }
+        let Some((gain, f, bin)) = best else {
+            leaf_ranges.push((w.id, w.lo, w.hi));
+            continue;
+        };
+        // partition rows in place: bin ≤ split-bin goes left
+        let col = &m.bins[f];
+        let mut mid = w.lo;
+        let mut gl = 0.0;
+        for i in w.lo..w.hi {
+            let r = rows[i];
+            if (col[r as usize] as usize) <= bin {
+                gl += grad[r as usize];
+                rows.swap(i, mid);
+                mid += 1;
+            }
+        }
+        if mid == w.lo || mid == w.hi {
+            leaf_ranges.push((w.id, w.lo, w.hi));
+            continue; // degenerate (all rows one side) — numeric guard
+        }
+        let hl = (mid - w.lo) as f64;
+        let gr = w.g_sum - gl;
+        let hr = w.h_sum - hl;
+        importance.record_split(f, gain);
+        let left_id = tree.nodes.len() as u32;
+        let right_id = left_id + 1;
+        tree.nodes.push(Node::leaf(left_id, leaf_weight(gl, hl, p)));
+        tree.nodes.push(Node::leaf(right_id, leaf_weight(gr, hr, p)));
+        tree.nodes[w.id as usize] = Node {
+            feature: f as i32,
+            threshold: m.edges[f][bin],
+            left: left_id,
+            right: right_id,
+            value: 0.0,
+        };
+        stack.push(NodeWork { id: left_id, lo: w.lo, hi: mid, depth: w.depth + 1, g_sum: gl, h_sum: hl });
+        stack.push(NodeWork { id: right_id, lo: mid, hi: w.hi, depth: w.depth + 1, g_sum: gr, h_sum: hr });
+    }
+    GrownTree { tree, leaf_ranges, rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binning_preserves_order() {
+        let x: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64]).collect();
+        let m = BinnedMatrix::build(&x, 8);
+        assert_eq!(m.dim, 1);
+        // bins are monotone in the raw value
+        for w in m.bins[0].windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        assert!(*m.bins[0].last().unwrap() >= 6);
+        assert_eq!(*m.edges[0].last().unwrap(), f64::INFINITY);
+    }
+
+    #[test]
+    fn constant_feature_single_bin() {
+        let x: Vec<Vec<f64>> = (0..10).map(|_| vec![5.0]).collect();
+        let m = BinnedMatrix::build(&x, 8);
+        assert_eq!(m.edges[0].len(), 1);
+        assert!(m.bins[0].iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn single_split_recovers_step() {
+        // y = sign step at x = 0.5 → one split near 0.5
+        let x: Vec<Vec<f64>> = (0..200).map(|i| vec![i as f64 / 200.0]).collect();
+        let grad: Vec<f64> = x.iter().map(|r| if r[0] <= 0.5 { 1.0 } else { -1.0 }).collect();
+        let m = BinnedMatrix::build(&x, 32);
+        let p = GbdtParams {
+            max_depth: 1,
+            subsample: 1.0,
+            colsample_bytree: 1.0,
+            gamma: 0.0,
+            reg_alpha: 0.0,
+            min_child_weight: 1.0,
+            ..GbdtParams::fast()
+        };
+        let mut rng = Rng::new(1);
+        let mut imp = Importance::new(1);
+        let t = grow_tree(&m, &grad, &p, &mut rng, &mut imp).tree;
+        assert_eq!(t.depth(), 1);
+        let root = t.nodes[0];
+        assert!((root.threshold - 0.5).abs() < 0.05, "threshold {}", root.threshold);
+        // leaf weights push against the gradient
+        assert!(t.predict(&[0.2]) < 0.0);
+        assert!(t.predict(&[0.8]) > 0.0);
+    }
+
+    #[test]
+    fn min_child_weight_blocks_tiny_leaves() {
+        let x: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let grad: Vec<f64> = (0..10).map(|i| if i == 0 { 10.0 } else { -1.0 }).collect();
+        let m = BinnedMatrix::build(&x, 16);
+        let p = GbdtParams {
+            max_depth: 3,
+            subsample: 1.0,
+            colsample_bytree: 1.0,
+            min_child_weight: 5.0,
+            gamma: 0.0,
+            ..GbdtParams::fast()
+        };
+        let mut rng = Rng::new(2);
+        let mut imp = Importance::new(1);
+        let t = grow_tree(&m, &grad, &p, &mut rng, &mut imp).tree;
+        // every leaf must cover ≥ 5 rows → at most one split on 10 rows
+        assert!(t.num_leaves() <= 2, "{}", t.num_leaves());
+    }
+
+    #[test]
+    fn gamma_prunes_weak_splits() {
+        // nearly-flat gradients: with a large γ no split should clear
+        // the bar
+        let x: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64]).collect();
+        let grad: Vec<f64> = (0..100).map(|i| if i % 2 == 0 { 0.01 } else { -0.01 }).collect();
+        let m = BinnedMatrix::build(&x, 16);
+        let p = GbdtParams {
+            max_depth: 4,
+            subsample: 1.0,
+            colsample_bytree: 1.0,
+            gamma: 100.0,
+            reg_alpha: 0.0,
+            min_child_weight: 1.0,
+            ..GbdtParams::fast()
+        };
+        let mut rng = Rng::new(3);
+        let mut imp = Importance::new(1);
+        let t = grow_tree(&m, &grad, &p, &mut rng, &mut imp).tree;
+        assert_eq!(t.num_leaves(), 1, "γ must prune everything");
+    }
+
+    #[test]
+    fn soft_threshold_l1() {
+        assert_eq!(soft_threshold(5.0, 1.0), 4.0);
+        assert_eq!(soft_threshold(-5.0, 1.0), -4.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+    }
+}

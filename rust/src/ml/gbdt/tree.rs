@@ -1,0 +1,102 @@
+//! A single CART regression tree in flat-array form.
+//!
+//! Internal nodes store `(feature, threshold)`; traversal takes the
+//! left child when `x[feature] <= threshold`. Leaves carry the weight
+//! `w = −soft(G, α)/(H+λ)`. The flat layout doubles as the PJRT export
+//! format (`export.rs`): leaves are self-referencing so a fixed number
+//! of traversal iterations is safe.
+
+/// One node.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Node {
+    /// Split feature, or -1 for leaves.
+    pub feature: i32,
+    /// Split threshold (raw feature space).
+    pub threshold: f64,
+    /// Left child index (self for leaves).
+    pub left: u32,
+    /// Right child index (self for leaves).
+    pub right: u32,
+    /// Leaf weight (0 for internal nodes).
+    pub value: f64,
+}
+
+impl Node {
+    /// A leaf with the given weight at index `idx`.
+    pub fn leaf(idx: u32, value: f64) -> Node {
+        Node { feature: -1, threshold: 0.0, left: idx, right: idx, value }
+    }
+}
+
+/// A regression tree.
+#[derive(Clone, Debug, Default)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+}
+
+impl Tree {
+    /// Tree depth (longest root→leaf path, 0 for a single leaf).
+    pub fn depth(&self) -> usize {
+        fn go(nodes: &[Node], i: u32) -> usize {
+            let n = nodes[i as usize];
+            if n.feature < 0 {
+                0
+            } else {
+                1 + go(nodes, n.left).max(go(nodes, n.right))
+            }
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            go(&self.nodes, 0)
+        }
+    }
+
+    /// Number of leaves.
+    pub fn num_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.feature < 0).count()
+    }
+
+    /// Predict one row (unscaled — the ensemble applies the learning
+    /// rate).
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        let mut i = 0u32;
+        loop {
+            let n = self.nodes[i as usize];
+            if n.feature < 0 {
+                return n.value;
+            }
+            i = if x[n.feature as usize] <= n.threshold { n.left } else { n.right };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Manual stump: x0 <= 1.5 → -1, else +1.
+    #[test]
+    fn stump_prediction() {
+        let t = Tree {
+            nodes: vec![
+                Node { feature: 0, threshold: 1.5, left: 1, right: 2, value: 0.0 },
+                Node::leaf(1, -1.0),
+                Node::leaf(2, 1.0),
+            ],
+        };
+        assert_eq!(t.predict(&[1.0]), -1.0);
+        assert_eq!(t.predict(&[2.0]), 1.0);
+        assert_eq!(t.predict(&[1.5]), -1.0, "<= goes left");
+        assert_eq!(t.depth(), 1);
+        assert_eq!(t.num_leaves(), 2);
+    }
+
+    #[test]
+    fn single_leaf() {
+        let t = Tree { nodes: vec![Node::leaf(0, 0.7)] };
+        assert_eq!(t.predict(&[123.0]), 0.7);
+        assert_eq!(t.depth(), 0);
+        assert_eq!(t.num_leaves(), 1);
+    }
+}

@@ -1,0 +1,135 @@
+//! Ridge-regression baseline (one of the §4.2 candidate models).
+//!
+//! Closed-form `(XᵀX + λI)⁻¹ Xᵀy` via Gaussian elimination with partial
+//! pivoting; an intercept column is appended internally.
+
+use crate::ml::{Regressor, TrainSet};
+
+/// Trained ridge model.
+#[derive(Clone, Debug)]
+pub struct Ridge {
+    /// weights, last entry = intercept
+    pub weights: Vec<f64>,
+    /// trains on log1p(y) like the GBDT default
+    pub log_target: bool,
+}
+
+/// Solve `A·w = b` in place (A square), partial pivoting.
+fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        // pivot
+        let piv = (col..n).max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap()).unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        assert!(d.abs() > 1e-12, "singular system");
+        for row in col + 1..n {
+            let f = a[row][col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut w = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut acc = b[col];
+        for k in col + 1..n {
+            acc -= a[col][k] * w[k];
+        }
+        w[col] = acc / a[col][col];
+    }
+    w
+}
+
+impl Ridge {
+    /// Fit with L2 strength `lambda`.
+    pub fn fit(train: &TrainSet, lambda: f64, log_target: bool) -> Self {
+        assert!(!train.is_empty());
+        let d = train.dim() + 1; // + intercept
+        let y: Vec<f64> = if log_target {
+            train.y.iter().map(|v| v.max(1e-12).ln()).collect()
+        } else {
+            train.y.clone()
+        };
+        let mut xtx = vec![vec![0.0; d]; d];
+        let mut xty = vec![0.0; d];
+        for (row, &t) in train.x.iter().zip(&y) {
+            let ext = |i: usize| if i < d - 1 { row[i] } else { 1.0 };
+            for i in 0..d {
+                xty[i] += ext(i) * t;
+                for j in 0..d {
+                    xtx[i][j] += ext(i) * ext(j);
+                }
+            }
+        }
+        for (i, r) in xtx.iter_mut().enumerate().take(d - 1) {
+            r[i] += lambda; // no penalty on intercept
+        }
+        Ridge { weights: solve(xtx, xty), log_target }
+    }
+}
+
+impl Regressor for Ridge {
+    fn predict(&self, x: &[f64]) -> f64 {
+        let d = self.weights.len();
+        assert_eq!(x.len(), d - 1);
+        let mut acc = self.weights[d - 1];
+        for i in 0..d - 1 {
+            acc += self.weights[i] * x[i];
+        }
+        if self.log_target {
+            acc.exp()
+        } else {
+            acc
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recovers_exact_linear_model() {
+        let mut rng = Rng::new(540);
+        let mut train = TrainSet::default();
+        for _ in 0..200 {
+            let a = rng.next_f64();
+            let b = rng.next_f64();
+            train.push(vec![a, b], 2.0 * a - 3.0 * b + 0.5);
+        }
+        let m = Ridge::fit(&train, 1e-9, false);
+        assert!((m.weights[0] - 2.0).abs() < 1e-6);
+        assert!((m.weights[1] + 3.0).abs() < 1e-6);
+        assert!((m.weights[2] - 0.5).abs() < 1e-6);
+        assert!((m.predict(&[1.0, 1.0]) - (-0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn regularisation_shrinks_weights() {
+        let mut rng = Rng::new(541);
+        let mut train = TrainSet::default();
+        for _ in 0..100 {
+            let a = rng.next_f64();
+            train.push(vec![a], 5.0 * a);
+        }
+        let loose = Ridge::fit(&train, 1e-9, false);
+        let tight = Ridge::fit(&train, 100.0, false);
+        assert!(tight.weights[0].abs() < loose.weights[0].abs());
+    }
+
+    #[test]
+    fn solver_pivots() {
+        // A system that requires pivoting (zero on diagonal)
+        let a = vec![vec![0.0, 1.0], vec![1.0, 0.0]];
+        let w = solve(a, vec![2.0, 3.0]);
+        assert!((w[0] - 3.0).abs() < 1e-12);
+        assert!((w[1] - 2.0).abs() < 1e-12);
+    }
+}

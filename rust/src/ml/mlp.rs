@@ -1,0 +1,210 @@
+//! Two-layer-perceptron baseline (§4.2 candidate model).
+//!
+//! `x → ReLU(W₁x + b₁) → W₂h + b₂`, trained with mini-batch SGD on the
+//! squared error of the (optionally log-transformed) target. This is
+//! the pure-Rust twin of the AOT-compiled PJRT train-step artifact
+//! (`python/compile/model.py::mlp_train_step`); both implement the same
+//! update so either backend can drive training.
+
+use crate::ml::{Regressor, TrainSet};
+use crate::util::rng::Rng;
+
+/// Hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct MlpParams {
+    pub hidden: usize,
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr: f64,
+    pub log_target: bool,
+    pub seed: u64,
+}
+
+impl Default for MlpParams {
+    fn default() -> Self {
+        MlpParams { hidden: 64, epochs: 60, batch: 32, lr: 1e-2, log_target: true, seed: 0x317 }
+    }
+}
+
+/// Trained MLP (also the parameter container the PJRT path updates).
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub params: MlpParams,
+    pub dim: usize,
+    /// `[hidden][dim]`
+    pub w1: Vec<Vec<f64>>,
+    pub b1: Vec<f64>,
+    pub w2: Vec<f64>,
+    pub b2: f64,
+    /// per-feature standardisation (mean, inv_std)
+    pub norm: Vec<(f64, f64)>,
+}
+
+impl Mlp {
+    /// Initialise with small random weights.
+    pub fn new(dim: usize, params: MlpParams) -> Self {
+        let mut rng = Rng::new(params.seed);
+        let scale = (2.0 / dim as f64).sqrt();
+        Mlp {
+            params,
+            dim,
+            w1: (0..params.hidden)
+                .map(|_| (0..dim).map(|_| rng.next_normal() * scale).collect())
+                .collect(),
+            b1: vec![0.0; params.hidden],
+            w2: (0..params.hidden).map(|_| rng.next_normal() * scale).collect(),
+            b2: 0.0,
+            norm: vec![(0.0, 1.0); dim],
+        }
+    }
+
+    fn normalise(&self, x: &[f64]) -> Vec<f64> {
+        x.iter().zip(&self.norm).map(|(v, (m, s))| (v - m) * s).collect()
+    }
+
+    fn forward(&self, xn: &[f64]) -> (Vec<f64>, f64) {
+        let mut h = vec![0.0; self.params.hidden];
+        for (j, hj) in h.iter_mut().enumerate() {
+            let mut acc = self.b1[j];
+            for i in 0..self.dim {
+                acc += self.w1[j][i] * xn[i];
+            }
+            *hj = acc.max(0.0); // ReLU
+        }
+        let mut out = self.b2;
+        for j in 0..self.params.hidden {
+            out += self.w2[j] * h[j];
+        }
+        (h, out)
+    }
+
+    /// One SGD step on a batch; returns the batch loss. This is the
+    /// update the PJRT `mlp_train_step` artifact reproduces.
+    pub fn train_step(&mut self, xs: &[Vec<f64>], ys: &[f64]) -> f64 {
+        let n = xs.len() as f64;
+        let lr = self.params.lr / n;
+        let mut loss = 0.0;
+        let mut gw1 = vec![vec![0.0; self.dim]; self.params.hidden];
+        let mut gb1 = vec![0.0; self.params.hidden];
+        let mut gw2 = vec![0.0; self.params.hidden];
+        let mut gb2 = 0.0;
+        for (x, &y) in xs.iter().zip(ys) {
+            let xn = self.normalise(x);
+            let (h, out) = self.forward(&xn);
+            let err = out - y;
+            loss += err * err;
+            gb2 += err;
+            for j in 0..self.params.hidden {
+                gw2[j] += err * h[j];
+                if h[j] > 0.0 {
+                    let d = err * self.w2[j];
+                    gb1[j] += d;
+                    for i in 0..self.dim {
+                        gw1[j][i] += d * xn[i];
+                    }
+                }
+            }
+        }
+        for j in 0..self.params.hidden {
+            self.w2[j] -= lr * gw2[j];
+            self.b1[j] -= lr * gb1[j];
+            for i in 0..self.dim {
+                self.w1[j][i] -= lr * gw1[j][i];
+            }
+        }
+        self.b2 -= lr * gb2;
+        loss / n
+    }
+
+    /// Fit on a training set.
+    pub fn fit(train: &TrainSet, params: MlpParams) -> Self {
+        assert!(!train.is_empty());
+        let mut model = Mlp::new(train.dim(), params);
+        // standardise features
+        for i in 0..model.dim {
+            let col: Vec<f64> = train.x.iter().map(|r| r[i]).collect();
+            let m = crate::util::stats::mean(&col);
+            let var =
+                col.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / col.len() as f64;
+            model.norm[i] = (m, if var > 1e-12 { 1.0 / var.sqrt() } else { 1.0 });
+        }
+        let y: Vec<f64> = if params.log_target {
+            train.y.iter().map(|v| v.max(1e-12).ln()).collect()
+        } else {
+            train.y.clone()
+        };
+        let mut order: Vec<usize> = (0..train.len()).collect();
+        let mut rng = Rng::new(params.seed ^ 0x7777);
+        for _ in 0..params.epochs {
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(params.batch) {
+                let xs: Vec<Vec<f64>> = chunk.iter().map(|&i| train.x[i].clone()).collect();
+                let ys: Vec<f64> = chunk.iter().map(|&i| y[i]).collect();
+                model.train_step(&xs, &ys);
+            }
+        }
+        model
+    }
+}
+
+impl Regressor for Mlp {
+    fn predict(&self, x: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.dim);
+        let (_, out) = self.forward(&self.normalise(x));
+        if self.params.log_target {
+            out.exp()
+        } else {
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics;
+
+    #[test]
+    fn fits_nonlinear_signal() {
+        let mut rng = Rng::new(550);
+        let mut train = TrainSet::default();
+        for _ in 0..600 {
+            let a = rng.next_f64() * 2.0 - 1.0;
+            let b = rng.next_f64() * 2.0 - 1.0;
+            train.push(vec![a, b], a * a + 0.5 * b);
+        }
+        let m = Mlp::fit(
+            &train,
+            MlpParams { epochs: 120, log_target: false, ..Default::default() },
+        );
+        let preds: Vec<f64> = train.x.iter().map(|x| m.predict(x)).collect();
+        let r2 = metrics::r2(&preds, &train.y);
+        assert!(r2 > 0.9, "r2={r2}");
+    }
+
+    #[test]
+    fn train_step_reduces_loss() {
+        let mut rng = Rng::new(551);
+        let xs: Vec<Vec<f64>> = (0..64).map(|_| vec![rng.next_f64(), rng.next_f64()]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0] + x[1]).collect();
+        let mut m = Mlp::new(2, MlpParams { lr: 0.05, log_target: false, ..Default::default() });
+        let first = m.train_step(&xs, &ys);
+        let mut last = first;
+        for _ in 0..200 {
+            last = m.train_step(&xs, &ys);
+        }
+        assert!(last < first * 0.2, "loss {first} → {last}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut train = TrainSet::default();
+        for i in 0..50 {
+            train.push(vec![i as f64 / 50.0], i as f64);
+        }
+        let p = MlpParams { epochs: 5, ..Default::default() };
+        let a = Mlp::fit(&train, p);
+        let b = Mlp::fit(&train, p);
+        assert_eq!(a.predict(&[0.5]), b.predict(&[0.5]));
+    }
+}

@@ -1,0 +1,87 @@
+//! Machine-learning models for the ETRM (§4.2).
+//!
+//! The paper "tried linear regression, XGBoost, LightGBM, multi-layer
+//! perceptron and mixture of experts" and shipped XGBoost. This module
+//! provides the same family from scratch:
+//!
+//! * [`gbdt`] — histogram gradient-boosted regression trees implementing
+//!   the paper's Eq. 4-16 (second-order gain with λ, γ, α; CART
+//!   ensemble) with the published XGBRegressor hyper-parameters, plus
+//!   gain/split importance (Tables 3-4) and tensor export for the
+//!   AOT-compiled PJRT inference path.
+//! * [`linear`] — ridge regression baseline (closed form).
+//! * [`mlp`] — two-layer perceptron baseline (pure-Rust SGD; the PJRT
+//!   train-step artifact offers the same update AOT-compiled).
+//! * [`metrics`] — RMSE / MAE / R² / Spearman.
+
+pub mod gbdt;
+pub mod linear;
+pub mod metrics;
+pub mod mlp;
+
+/// A trained regression model mapping encoded feature vectors to a
+/// predicted execution time.
+pub trait Regressor {
+    /// Predict one row.
+    fn predict(&self, x: &[f64]) -> f64;
+
+    /// Predict a batch (overridable for vectorised backends).
+    fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| self.predict(x)).collect()
+    }
+}
+
+/// A regression training set: dense rows plus targets.
+#[derive(Clone, Debug, Default)]
+pub struct TrainSet {
+    pub x: Vec<Vec<f64>>,
+    pub y: Vec<f64>,
+}
+
+impl TrainSet {
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.x.is_empty()
+    }
+
+    /// Feature dimension (0 when empty).
+    pub fn dim(&self) -> usize {
+        self.x.first().map_or(0, Vec::len)
+    }
+
+    /// Append a row.
+    pub fn push(&mut self, x: Vec<f64>, y: f64) {
+        if !self.x.is_empty() {
+            assert_eq!(x.len(), self.dim(), "inconsistent feature dimension");
+        }
+        self.x.push(x);
+        self.y.push(y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trainset_invariants() {
+        let mut t = TrainSet::default();
+        assert!(t.is_empty());
+        t.push(vec![1.0, 2.0], 3.0);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.dim(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "inconsistent")]
+    fn dimension_mismatch_panics() {
+        let mut t = TrainSet::default();
+        t.push(vec![1.0], 0.0);
+        t.push(vec![1.0, 2.0], 0.0);
+    }
+}

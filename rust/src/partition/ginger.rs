@@ -1,0 +1,135 @@
+//! PowerLyra Ginger partitioning (PSID 11, §3.3.3-ii).
+//!
+//! Like Hybrid, Ginger differentiates by in-degree, but the low-degree
+//! side replaces the hash with a Fennel-style streaming score
+//! (paper Eq. 2): vertex `v` (with all of its in-edges) goes to the
+//! worker maximising
+//!
+//! ```text
+//! Ginger(v, w) = |N_in(v) ∩ V_w| − ½ (|V_w| + (|V|/|E|)·|E_w|)
+//! ```
+//!
+//! The first term pulls `v` toward workers already owning its
+//! in-neighbours (suppressing replication); the second penalises
+//! crowded workers (load balance). High-degree vertices fall back to
+//! source hashing exactly as in Hybrid.
+
+use crate::graph::Graph;
+use crate::util::rng::hash_u64;
+
+use super::{worker_of_hash, Partitioning};
+
+/// PSID 11 — Ginger with the given in-degree threshold for the
+/// low/high-degree split (the paper pairs it with Hybrid's threshold).
+pub fn partition(g: &Graph, num_workers: usize, threshold: usize) -> Partitioning {
+    let n = g.num_vertices();
+    let ratio = if g.num_edges() > 0 {
+        n as f64 / g.num_edges() as f64
+    } else {
+        1.0
+    };
+    // owner[v] = worker that received v's in-edges (low-degree only)
+    let mut owner: Vec<u16> = vec![u16::MAX; n];
+    let mut vcount = vec![0usize; num_workers];
+    let mut ecount = vec![0usize; num_workers];
+    let mut neighbor_hits = vec![0usize; num_workers];
+    let mut touched: Vec<usize> = Vec::new();
+    for v in g.vertices() {
+        let indeg = g.in_degree(v);
+        if indeg > threshold {
+            continue; // high-degree: handled by source hash below
+        }
+        // count in-neighbours already owned per worker
+        for &u in g.in_neighbors(v) {
+            let w = owner[u as usize];
+            if w != u16::MAX {
+                if neighbor_hits[w as usize] == 0 {
+                    touched.push(w as usize);
+                }
+                neighbor_hits[w as usize] += 1;
+            }
+        }
+        let mut best_w = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for w in 0..num_workers {
+            let score = neighbor_hits[w] as f64
+                - 0.5 * (vcount[w] as f64 + ratio * ecount[w] as f64);
+            if score > best_score {
+                best_score = score;
+                best_w = w;
+            }
+        }
+        for &w in &touched {
+            neighbor_hits[w] = 0;
+        }
+        touched.clear();
+        owner[v as usize] = best_w as u16;
+        vcount[best_w] += 1;
+        ecount[best_w] += indeg;
+    }
+    let assign = g
+        .edges()
+        .iter()
+        .map(|&(u, v)| {
+            if g.in_degree(v) <= threshold {
+                owner[v as usize]
+            } else {
+                worker_of_hash(hash_u64(u as u64), num_workers)
+            }
+        })
+        .collect();
+    Partitioning::from_edge_assignment(g, num_workers, assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::metrics::PartitionMetrics;
+
+    #[test]
+    fn all_low_degree_vertices_get_owner() {
+        let mut rng = crate::util::rng::Rng::new(90);
+        let g = crate::graph::gen::erdos::generate("t", 200, 800, true, &mut rng);
+        let p = partition(&g, 8, 1_000);
+        assert_eq!(p.edge_worker.len(), g.num_edges());
+        assert!(p.edge_worker.iter().all(|&w| (w as usize) < 8));
+    }
+
+    #[test]
+    fn colocates_neighborhoods_better_than_random() {
+        // community-structured small world: Ginger should achieve lower
+        // replication than the random 2-D hash
+        let mut rng = crate::util::rng::Rng::new(91);
+        let g = crate::graph::gen::smallworld::generate("sw", 800, 4800, 0.05, &mut rng);
+        let mg = PartitionMetrics::of(&g, &partition(&g, 16, 100));
+        let mr =
+            PartitionMetrics::of(&g, &crate::partition::random::partition_random(&g, 16));
+        assert!(
+            mg.replication_factor < mr.replication_factor,
+            "ginger {} < random {}",
+            mg.replication_factor,
+            mr.replication_factor
+        );
+    }
+
+    #[test]
+    fn balance_term_prevents_collapse() {
+        // without the ½(|V_w| + ...) term every vertex would chase its
+        // neighbours onto worker 0; the penalty must spread ownership.
+        let mut rng = crate::util::rng::Rng::new(92);
+        let g = crate::graph::gen::smallworld::generate("sw", 400, 2000, 0.02, &mut rng);
+        let p = partition(&g, 8, 1_000);
+        let m = PartitionMetrics::of(&g, &p);
+        assert_eq!(m.workers_used, 8, "all workers used: {:?}", p.edges_per_worker);
+        assert!(m.edge_balance < 2.0, "imbalance {}", m.edge_balance);
+    }
+
+    #[test]
+    fn high_degree_falls_back_to_source_hash() {
+        let edges: Vec<(u32, u32)> = (1..=30).map(|u| (u as u32, 0)).collect();
+        let g = crate::graph::Graph::from_edges("hub", 31, edges, true);
+        let p = partition(&g, 4, 5);
+        let by_src = crate::partition::oned::partition_src(&g, 4);
+        assert_eq!(p.edge_worker, by_src.edge_worker);
+    }
+}

@@ -1,0 +1,77 @@
+//! PowerLyra Hybrid partitioning (PSID 5, §3.3.3-i).
+//!
+//! Differentiated by in-degree: a *low-degree* vertex `v`
+//! (`in_degree(v) ≤ threshold`) has **all of its in-edges** assigned to
+//! the single worker `hash(v)` — co-locating the gather neighbourhood —
+//! while a *high-degree* vertex's in-edges are spread by hashing each
+//! edge's **source**, avoiding the load concentration a power-law hub
+//! would otherwise cause.
+
+use crate::graph::Graph;
+use crate::util::rng::hash_u64;
+
+use super::{worker_of_hash, Partitioning};
+
+/// PowerLyra's default degree threshold.
+pub const DEFAULT_THRESHOLD: usize = 100;
+
+/// PSID 5 — hybrid-cut with the given in-degree threshold.
+pub fn partition(g: &Graph, num_workers: usize, threshold: usize) -> Partitioning {
+    let assign = g
+        .edges()
+        .iter()
+        .map(|&(u, v)| {
+            if g.in_degree(v) <= threshold {
+                worker_of_hash(hash_u64(v as u64), num_workers)
+            } else {
+                worker_of_hash(hash_u64(u as u64), num_workers)
+            }
+        })
+        .collect();
+    Partitioning::from_edge_assignment(g, num_workers, assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    #[test]
+    fn low_degree_in_edges_colocate() {
+        // v=5 has in-degree 3 (≤ threshold) → all in-edges on one worker
+        let g = Graph::from_edges("h", 10, vec![(0, 5), (1, 5), (2, 5), (0, 1)], true);
+        let p = partition(&g, 4, 100);
+        let ws: Vec<u16> = g
+            .edges()
+            .iter()
+            .zip(&p.edge_worker)
+            .filter(|(&(_, v), _)| v == 5)
+            .map(|(_, &w)| w)
+            .collect();
+        assert_eq!(ws.len(), 3);
+        assert!(ws.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn high_degree_in_edges_spread_by_source() {
+        // hub vertex 0 with in-degree 50 > threshold 10
+        let edges: Vec<(u32, u32)> = (1..=50).map(|u| (u as u32, 0)).collect();
+        let g = Graph::from_edges("hub", 51, edges, true);
+        let p = partition(&g, 8, 10);
+        let distinct: std::collections::HashSet<u16> = p.edge_worker.iter().copied().collect();
+        assert!(distinct.len() > 1, "hub edges must spread, got {distinct:?}");
+        // and the assignment matches 1DSrc for those edges
+        let by_src = crate::partition::oned::partition_src(&g, 8);
+        assert_eq!(p.edge_worker, by_src.edge_worker);
+    }
+
+    #[test]
+    fn threshold_zero_equals_pure_src_hash_on_nonisolated() {
+        let mut rng = crate::util::rng::Rng::new(60);
+        let g = crate::graph::gen::erdos::generate("t", 100, 500, true, &mut rng);
+        let p0 = partition(&g, 4, 0);
+        let psrc = crate::partition::oned::partition_src(&g, 4);
+        // every destination has in-degree ≥ 1 > 0 → all high-degree
+        assert_eq!(p0.edge_worker, psrc.edge_worker);
+    }
+}

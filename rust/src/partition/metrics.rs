@@ -1,0 +1,93 @@
+//! Partition-quality metrics: the quantities the partitioning literature
+//! (and §1/§3.3 of the paper) uses to characterise a strategy —
+//! replication factor, load balance, worker utilisation.
+
+use crate::graph::Graph;
+
+use super::Partitioning;
+
+/// Quality summary of one partitioning.
+#[derive(Clone, Copy, Debug)]
+pub struct PartitionMetrics {
+    /// Σ_v |replicas(v)| / |V| — the paper's "ratio of the number of the
+    /// replicated vertex to the number of the original vertex".
+    pub replication_factor: f64,
+    /// max_w |E_w| / (|E| / |W|): 1.0 = perfect edge balance.
+    pub edge_balance: f64,
+    /// max_w |V_w| / (Σ_w |V_w| / |W|): vertex-replica balance.
+    pub vertex_balance: f64,
+    /// Number of workers that received at least one edge.
+    pub workers_used: usize,
+    /// Total mirror count Σ_v (|replicas(v)| − 1)⁺ — proportional to
+    /// gather/apply network traffic under GAS.
+    pub total_mirrors: usize,
+}
+
+impl PartitionMetrics {
+    /// Compute all metrics.
+    pub fn of(g: &Graph, p: &Partitioning) -> Self {
+        let n = g.num_vertices().max(1);
+        let mut replica_sum = 0usize;
+        let mut mirrors = 0usize;
+        let mut vcount = vec![0usize; p.num_workers];
+        for v in g.vertices() {
+            let r = p.replicas[v as usize].len();
+            replica_sum += r;
+            mirrors += r.saturating_sub(1);
+            for &w in &p.replicas[v as usize] {
+                vcount[w as usize] += 1;
+            }
+        }
+        let edges = g.num_edges();
+        let max_e = p.edges_per_worker.iter().copied().max().unwrap_or(0);
+        let mean_e = edges as f64 / p.num_workers as f64;
+        let max_v = vcount.iter().copied().max().unwrap_or(0);
+        let mean_v = replica_sum as f64 / p.num_workers as f64;
+        PartitionMetrics {
+            replication_factor: replica_sum as f64 / n as f64,
+            edge_balance: if edges == 0 { 1.0 } else { max_e as f64 / mean_e },
+            vertex_balance: if replica_sum == 0 { 1.0 } else { max_v as f64 / mean_v },
+            workers_used: p.edges_per_worker.iter().filter(|&&c| c > 0).count(),
+            total_mirrors: mirrors,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::partition::Partitioning;
+
+    #[test]
+    fn single_worker_degenerate() {
+        let g = Graph::from_edges("s", 3, vec![(0, 1), (1, 2)], true);
+        let p = Partitioning::from_edge_assignment(&g, 1, vec![0, 0]);
+        let m = PartitionMetrics::of(&g, &p);
+        assert!((m.replication_factor - 1.0).abs() < 1e-12);
+        assert_eq!(m.edge_balance, 1.0);
+        assert_eq!(m.workers_used, 1);
+        assert_eq!(m.total_mirrors, 0);
+    }
+
+    #[test]
+    fn split_vertex_counts_as_replica() {
+        let g = Graph::from_edges("s", 3, vec![(0, 1), (1, 2)], true);
+        // edge 0 on worker 0, edge 1 on worker 1 → vertex 1 replicated
+        let p = Partitioning::from_edge_assignment(&g, 2, vec![0, 1]);
+        let m = PartitionMetrics::of(&g, &p);
+        // replicas: v0→1, v1→2, v2→1 ⇒ rf = 4/3
+        assert!((m.replication_factor - 4.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.total_mirrors, 1);
+        assert_eq!(m.edge_balance, 1.0);
+    }
+
+    #[test]
+    fn imbalance_detected() {
+        let g = Graph::from_edges("i", 4, vec![(0, 1), (0, 2), (0, 3)], true);
+        let p = Partitioning::from_edge_assignment(&g, 3, vec![0, 0, 0]);
+        let m = PartitionMetrics::of(&g, &p);
+        assert_eq!(m.workers_used, 1);
+        assert!((m.edge_balance - 3.0).abs() < 1e-12, "3 edges on 1 of 3 workers");
+    }
+}

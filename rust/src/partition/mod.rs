@@ -1,0 +1,270 @@
+//! Partitioning strategies (§3.3, Table 2).
+//!
+//! All strategies are *vertex-cut*: they assign each **edge** to one of
+//! `|W|` workers; a vertex is then replicated onto every worker holding
+//! one of its incident edges, with one replica designated the master
+//! (GAS semantics, §3.2.1). The inventory matches Table 2:
+//!
+//! | PSID | Strategy          | Engine      | Module        |
+//! |------|-------------------|-------------|---------------|
+//! | 0    | 1DSrc             | GraphX      | [`oned`]      |
+//! | 1    | 1DDst (custom)    | —           | [`oned`]      |
+//! | 2    | Random            | GraphX      | [`random`]    |
+//! | 3    | Canonical Random  | GraphX      | [`random`]    |
+//! | 4    | 2D Edge Partition | GraphX      | [`twod`]      |
+//! | 5    | Hybrid            | PowerLyra   | [`hybrid`]    |
+//! | 6    | Oblivious         | PowerGraph  | [`oblivious`] |
+//! | 7-10 | HDRF λ∈{10,20,50,100} | PowerGraph | [`hdrf`]  |
+//! | 11   | Ginger            | PowerLyra   | [`ginger`]    |
+//!
+//! Oblivious (PSID 6) is implemented but excluded from the default
+//! inventory — the paper observed it "sometimes fails to utilize all
+//! workers" and dropped it (§3.3.2), leaving 11 strategies.
+
+pub mod ginger;
+pub mod hdrf;
+pub mod hybrid;
+pub mod metrics;
+pub mod oblivious;
+pub mod oned;
+pub mod random;
+pub mod twod;
+
+use crate::graph::{Graph, VertexId};
+use crate::util::rng::hash_u64;
+
+/// A partitioning strategy identifier (the paper's PSID column).
+pub type StrategyId = usize;
+
+/// The strategy inventory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// PSID 0 — hash of the source vertex id.
+    OneDSrc,
+    /// PSID 1 — hash of the destination vertex id (the paper's custom).
+    OneDDst,
+    /// PSID 2 — order-sensitive 2-D hash (Cantor pairing).
+    Random,
+    /// PSID 3 — order-insensitive 2-D hash.
+    CanonicalRandom,
+    /// PSID 4 — 2-D grid of workers, one hash per endpoint.
+    TwoD,
+    /// PSID 5 — PowerLyra hybrid (degree-threshold differentiated).
+    Hybrid,
+    /// PSID 6 — PowerGraph greedy vertex-cut (excluded from inventory).
+    Oblivious,
+    /// PSID 7..10 — HDRF with λ.
+    Hdrf(u32),
+    /// PSID 11 — PowerLyra Ginger.
+    Ginger,
+}
+
+impl Strategy {
+    /// The 11 strategies of the paper's inventory, in PSID order.
+    pub fn inventory() -> Vec<Strategy> {
+        vec![
+            Strategy::OneDSrc,
+            Strategy::OneDDst,
+            Strategy::Random,
+            Strategy::CanonicalRandom,
+            Strategy::TwoD,
+            Strategy::Hybrid,
+            Strategy::Hdrf(10),
+            Strategy::Hdrf(20),
+            Strategy::Hdrf(50),
+            Strategy::Hdrf(100),
+            Strategy::Ginger,
+        ]
+    }
+
+    /// All 12 implemented strategies (inventory + Oblivious).
+    pub fn all() -> Vec<Strategy> {
+        let mut v = Self::inventory();
+        v.insert(6, Strategy::Oblivious);
+        v
+    }
+
+    /// The paper's PSID.
+    pub fn psid(&self) -> StrategyId {
+        match self {
+            Strategy::OneDSrc => 0,
+            Strategy::OneDDst => 1,
+            Strategy::Random => 2,
+            Strategy::CanonicalRandom => 3,
+            Strategy::TwoD => 4,
+            Strategy::Hybrid => 5,
+            Strategy::Oblivious => 6,
+            Strategy::Hdrf(10) => 7,
+            Strategy::Hdrf(20) => 8,
+            Strategy::Hdrf(50) => 9,
+            Strategy::Hdrf(100) => 10,
+            Strategy::Hdrf(l) => panic!("non-inventory HDRF λ={l}"),
+            Strategy::Ginger => 11,
+        }
+    }
+
+    /// Short name (paper's italic alias).
+    pub fn name(&self) -> String {
+        match self {
+            Strategy::OneDSrc => "1DSrc".into(),
+            Strategy::OneDDst => "1DDst".into(),
+            Strategy::Random => "Random".into(),
+            Strategy::CanonicalRandom => "Cano".into(),
+            Strategy::TwoD => "2D".into(),
+            Strategy::Hybrid => "Hybrid".into(),
+            Strategy::Oblivious => "Oblivious".into(),
+            Strategy::Hdrf(l) => format!("HDRF{l}"),
+            Strategy::Ginger => "Ginger".into(),
+        }
+    }
+
+    /// Parse a strategy from its short name.
+    pub fn by_name(name: &str) -> Option<Strategy> {
+        Self::all().into_iter().find(|s| s.name().eq_ignore_ascii_case(name))
+    }
+
+    /// Run the strategy.
+    pub fn partition(&self, g: &Graph, num_workers: usize) -> Partitioning {
+        match self {
+            Strategy::OneDSrc => oned::partition_src(g, num_workers),
+            Strategy::OneDDst => oned::partition_dst(g, num_workers),
+            Strategy::Random => random::partition_random(g, num_workers),
+            Strategy::CanonicalRandom => random::partition_canonical(g, num_workers),
+            Strategy::TwoD => twod::partition(g, num_workers),
+            Strategy::Hybrid => hybrid::partition(g, num_workers, hybrid::DEFAULT_THRESHOLD),
+            Strategy::Oblivious => oblivious::partition(g, num_workers),
+            Strategy::Hdrf(l) => hdrf::partition(g, num_workers, *l as f64),
+            Strategy::Ginger => ginger::partition(g, num_workers, hybrid::DEFAULT_THRESHOLD),
+        }
+    }
+}
+
+/// The result of partitioning: a worker per stored edge, plus derived
+/// per-worker structures consumed by the GAS engine and the metrics.
+#[derive(Clone, Debug)]
+pub struct Partitioning {
+    pub num_workers: usize,
+    /// Worker id per edge, indexed like `graph.edges()`.
+    pub edge_worker: Vec<u16>,
+    /// Edge count per worker.
+    pub edges_per_worker: Vec<usize>,
+    /// For each vertex, the sorted list of workers holding a replica.
+    pub replicas: Vec<Vec<u16>>,
+    /// Master worker per vertex (hash-designated among the replicas;
+    /// isolated vertices get `hash(v) % |W|`).
+    pub master: Vec<u16>,
+}
+
+impl Partitioning {
+    /// Derive replica/master structure from a per-edge assignment.
+    pub fn from_edge_assignment(g: &Graph, num_workers: usize, edge_worker: Vec<u16>) -> Self {
+        assert_eq!(edge_worker.len(), g.num_edges());
+        assert!(num_workers > 0 && num_workers <= u16::MAX as usize);
+        let n = g.num_vertices();
+        let mut edges_per_worker = vec![0usize; num_workers];
+        let mut replicas: Vec<Vec<u16>> = vec![Vec::new(); n];
+        for (e, &(u, v)) in g.edges().iter().enumerate() {
+            let w = edge_worker[e];
+            debug_assert!((w as usize) < num_workers);
+            edges_per_worker[w as usize] += 1;
+            for x in [u, v] {
+                let r = &mut replicas[x as usize];
+                if !r.contains(&w) {
+                    r.push(w);
+                }
+            }
+        }
+        let mut master = vec![0u16; n];
+        for v in 0..n {
+            replicas[v].sort_unstable();
+            let h = (hash_u64(v as u64) % num_workers as u64) as u16;
+            master[v] = if replicas[v].is_empty() || replicas[v].contains(&h) {
+                h
+            } else {
+                // deterministic pick among replicas, spread by hash
+                replicas[v][(hash_u64(v as u64 ^ 0x5bd1e995) as usize) % replicas[v].len()]
+            };
+        }
+        Partitioning { num_workers, edge_worker, edges_per_worker, replicas, master }
+    }
+
+    /// Number of mirror replicas (replicas excluding the master copy) of
+    /// vertex `v`.
+    pub fn num_mirrors(&self, v: VertexId) -> usize {
+        let r = &self.replicas[v as usize];
+        r.len().saturating_sub(if r.contains(&self.master[v as usize]) { 1 } else { 0 })
+    }
+}
+
+/// Map a hash value to a worker id.
+#[inline]
+pub(crate) fn worker_of_hash(h: u64, num_workers: usize) -> u16 {
+    (h % num_workers as u64) as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    fn path_graph() -> Graph {
+        Graph::from_edges("p", 5, vec![(0, 1), (1, 2), (2, 3), (3, 4)], true)
+    }
+
+    #[test]
+    fn inventory_matches_table2() {
+        let inv = Strategy::inventory();
+        assert_eq!(inv.len(), 11);
+        let psids: Vec<usize> = inv.iter().map(|s| s.psid()).collect();
+        assert_eq!(psids, vec![0, 1, 2, 3, 4, 5, 7, 8, 9, 10, 11]);
+        assert!(!inv.contains(&Strategy::Oblivious));
+        assert_eq!(Strategy::all().len(), 12);
+        assert_eq!(Strategy::Oblivious.psid(), 6);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for s in Strategy::all() {
+            assert_eq!(Strategy::by_name(&s.name()), Some(s), "{}", s.name());
+        }
+        assert_eq!(Strategy::by_name("hdrf50"), Some(Strategy::Hdrf(50)));
+        assert_eq!(Strategy::by_name("bogus"), None);
+    }
+
+    #[test]
+    fn replica_and_master_derivation() {
+        let g = path_graph();
+        // all edges on worker 0 except edge (2,3) on worker 1
+        let p = Partitioning::from_edge_assignment(&g, 2, vec![0, 0, 1, 0]);
+        assert_eq!(p.edges_per_worker, vec![3, 1]);
+        assert_eq!(p.replicas[2], vec![0, 1], "vertex 2 spans both workers");
+        assert_eq!(p.replicas[0], vec![0]);
+        // master of a replicated vertex is one of its replicas
+        assert!(p.replicas[2].contains(&p.master[2]));
+        assert_eq!(p.num_mirrors(2), 1);
+        assert_eq!(p.num_mirrors(0), 0);
+    }
+
+    #[test]
+    fn all_strategies_produce_valid_assignments() {
+        let mut rng = crate::util::rng::Rng::new(33);
+        let g = crate::graph::gen::erdos::generate("t", 200, 1000, true, &mut rng);
+        for s in Strategy::all() {
+            let p = s.partition(&g, 8);
+            assert_eq!(p.edge_worker.len(), g.num_edges(), "{}", s.name());
+            assert!(p.edge_worker.iter().all(|&w| (w as usize) < 8), "{}", s.name());
+            assert_eq!(p.edges_per_worker.iter().sum::<usize>(), g.num_edges());
+        }
+    }
+
+    #[test]
+    fn strategies_are_deterministic() {
+        let mut rng = crate::util::rng::Rng::new(34);
+        let g = crate::graph::gen::erdos::generate("t", 100, 400, false, &mut rng);
+        for s in Strategy::all() {
+            let a = s.partition(&g, 4).edge_worker;
+            let b = s.partition(&g, 4).edge_worker;
+            assert_eq!(a, b, "{} must be deterministic", s.name());
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! PowerGraph Greedy vertex-cut, "Oblivious" variant (PSID 6, §3.3.2-ii).
+//!
+//! Edges are streamed one by one; each placement greedily minimises new
+//! vertex replicas while balancing edge counts, using only state
+//! accumulated so far (no global degree knowledge — hence *oblivious*):
+//!
+//! 1. both endpoints already share a worker → least-loaded shared worker;
+//! 2. both have replicas but disjoint → the worker set of the endpoint
+//!    with the **higher partial degree** is kept intact (its vertex is
+//!    likelier to keep growing, so we replicate the other one);
+//! 3. exactly one endpoint has replicas → its least-loaded worker;
+//! 4. neither → globally least-loaded worker.
+//!
+//! The paper excludes this strategy from the inventory after observing
+//! it can leave workers idle; [`tests::can_underutilize_workers`]
+//! reproduces that failure mode.
+
+use crate::graph::Graph;
+
+use super::Partitioning;
+
+/// Compact per-vertex replica bitset (supports up to 1024 workers).
+pub(crate) struct ReplicaSets {
+    words: usize,
+    bits: Vec<u64>,
+}
+
+impl ReplicaSets {
+    pub(crate) fn new(n: usize, num_workers: usize) -> Self {
+        assert!(num_workers <= 1024, "replica bitset supports ≤1024 workers");
+        let words = crate::util::div_ceil(num_workers, 64);
+        ReplicaSets { words, bits: vec![0u64; n * words] }
+    }
+
+    #[inline]
+    pub(crate) fn contains(&self, v: u32, w: usize) -> bool {
+        self.bits[v as usize * self.words + w / 64] >> (w % 64) & 1 == 1
+    }
+
+    #[inline]
+    pub(crate) fn insert(&mut self, v: u32, w: usize) {
+        self.bits[v as usize * self.words + w / 64] |= 1 << (w % 64);
+    }
+
+    /// First 64-bit word of `v`'s replica set — the whole set when the
+    /// partitioning uses ≤ 64 workers (HDRF's register fast path).
+    #[inline]
+    pub(crate) fn word0(&self, v: u32) -> u64 {
+        self.bits[v as usize * self.words]
+    }
+
+    #[inline]
+    pub(crate) fn is_empty(&self, v: u32) -> bool {
+        let s = v as usize * self.words;
+        self.bits[s..s + self.words].iter().all(|&x| x == 0)
+    }
+
+    /// Iterate worker ids present for `v`.
+    pub(crate) fn iter(&self, v: u32) -> impl Iterator<Item = usize> + '_ {
+        let s = v as usize * self.words;
+        let words = self.words;
+        (0..words).flat_map(move |wi| {
+            let mut word = self.bits[s + wi];
+            std::iter::from_fn(move || {
+                if word == 0 {
+                    None
+                } else {
+                    let b = word.trailing_zeros() as usize;
+                    word &= word - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+}
+
+fn least_loaded(workers: impl Iterator<Item = usize>, load: &[usize]) -> Option<usize> {
+    workers.min_by_key(|&w| (load[w], w))
+}
+
+/// PSID 6 — greedy Oblivious vertex-cut.
+pub fn partition(g: &Graph, num_workers: usize) -> Partitioning {
+    let n = g.num_vertices();
+    let mut replicas = ReplicaSets::new(n, num_workers);
+    let mut load = vec![0usize; num_workers];
+    let mut partial_deg = vec![0u32; n];
+    let mut assign = Vec::with_capacity(g.num_edges());
+    for &(u, v) in g.edges() {
+        let shared = least_loaded(
+            replicas.iter(u).filter(|&w| replicas.contains(v, w)),
+            &load,
+        );
+        let w = if let Some(w) = shared {
+            w
+        } else {
+            match (replicas.is_empty(u), replicas.is_empty(v)) {
+                (false, false) => {
+                    // disjoint sets: replicate the lower-partial-degree
+                    // endpoint into the higher one's set
+                    let keep = if partial_deg[u as usize] >= partial_deg[v as usize] { u } else { v };
+                    least_loaded(replicas.iter(keep), &load).unwrap()
+                }
+                (false, true) => least_loaded(replicas.iter(u), &load).unwrap(),
+                (true, false) => least_loaded(replicas.iter(v), &load).unwrap(),
+                (true, true) => least_loaded(0..num_workers, &load).unwrap(),
+            }
+        };
+        replicas.insert(u, w);
+        replicas.insert(v, w);
+        partial_deg[u as usize] += 1;
+        partial_deg[v as usize] += 1;
+        load[w] += 1;
+        assign.push(w as u16);
+    }
+    Partitioning::from_edge_assignment(g, num_workers, assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::metrics::PartitionMetrics;
+
+    #[test]
+    fn bitset_ops() {
+        let mut r = ReplicaSets::new(4, 130);
+        assert!(r.is_empty(2));
+        r.insert(2, 0);
+        r.insert(2, 64);
+        r.insert(2, 129);
+        assert!(r.contains(2, 64));
+        assert!(!r.contains(2, 63));
+        assert_eq!(r.iter(2).collect::<Vec<_>>(), vec![0, 64, 129]);
+        assert!(r.is_empty(3));
+    }
+
+    #[test]
+    fn lower_replication_than_random() {
+        let mut rng = crate::util::rng::Rng::new(70);
+        let g = crate::graph::gen::chung_lu::generate("t", 800, 8000, 2.1, true, &mut rng);
+        let mo = PartitionMetrics::of(&g, &partition(&g, 16));
+        let mr =
+            PartitionMetrics::of(&g, &crate::partition::random::partition_random(&g, 16));
+        assert!(
+            mo.replication_factor < mr.replication_factor,
+            "oblivious {} < random {}",
+            mo.replication_factor,
+            mr.replication_factor
+        );
+    }
+
+    /// The failure mode the paper cites for dropping Oblivious: on a
+    /// connected graph streamed in BFS-ish edge order, placements chase
+    /// existing replicas and some workers may receive almost nothing.
+    #[test]
+    fn can_underutilize_workers() {
+        // a star: every edge shares vertex 0, so rules 1/3 keep all edges
+        // near vertex 0's replica set; balance only grows slowly.
+        let edges: Vec<(u32, u32)> = (1..=64).map(|i| (0u32, i as u32)).collect();
+        let g = crate::graph::Graph::from_edges("star", 65, edges, true);
+        let p = partition(&g, 16);
+        let used = p.edges_per_worker.iter().filter(|&&c| c > 0).count();
+        assert!(used < 16, "star stream should not fill all workers, used={used}");
+    }
+
+    #[test]
+    fn first_edge_goes_to_least_loaded() {
+        let g = crate::graph::Graph::from_edges("e", 2, vec![(0, 1)], true);
+        let p = partition(&g, 4);
+        assert_eq!(p.edge_worker[0], 0, "empty loads tie-break to lowest id");
+    }
+}

@@ -1,0 +1,75 @@
+//! 1-D edge partitioning (PSID 0/1, §3.3.1-i and §3.3.4).
+//!
+//! `1DSrc` hashes the edge's **source** vertex id, so all out-edges of a
+//! vertex land on one worker (GraphX's `EdgePartition1D`). `1DDst` is
+//! the paper's custom mirror: hash the **destination**, co-locating all
+//! in-edges — advantageous for gather-heavy pull algorithms like
+//! PageRank on graphs with skewed in-degree.
+
+use crate::graph::Graph;
+use crate::util::rng::hash_u64;
+
+use super::{worker_of_hash, Partitioning};
+
+/// PSID 0 — hash of the source vertex.
+pub fn partition_src(g: &Graph, num_workers: usize) -> Partitioning {
+    let assign = g
+        .edges()
+        .iter()
+        .map(|&(u, _)| worker_of_hash(hash_u64(u as u64), num_workers))
+        .collect();
+    Partitioning::from_edge_assignment(g, num_workers, assign)
+}
+
+/// PSID 1 — hash of the destination vertex.
+pub fn partition_dst(g: &Graph, num_workers: usize) -> Partitioning {
+    let assign = g
+        .edges()
+        .iter()
+        .map(|&(_, v)| worker_of_hash(hash_u64(v as u64), num_workers))
+        .collect();
+    Partitioning::from_edge_assignment(g, num_workers, assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    #[test]
+    fn src_colocates_out_edges() {
+        let g = Graph::from_edges("s", 10, vec![(3, 1), (3, 5), (3, 9), (4, 2)], true);
+        let p = partition_src(&g, 4);
+        let ws: Vec<u16> = g
+            .edges()
+            .iter()
+            .zip(&p.edge_worker)
+            .filter(|(&(u, _), _)| u == 3)
+            .map(|(_, &w)| w)
+            .collect();
+        assert!(ws.windows(2).all(|p| p[0] == p[1]), "same worker for all out-edges of 3");
+    }
+
+    #[test]
+    fn dst_colocates_in_edges() {
+        let g = Graph::from_edges("d", 10, vec![(1, 7), (2, 7), (9, 7), (4, 2)], true);
+        let p = partition_dst(&g, 4);
+        let ws: Vec<u16> = g
+            .edges()
+            .iter()
+            .zip(&p.edge_worker)
+            .filter(|(&(_, v), _)| v == 7)
+            .map(|(_, &w)| w)
+            .collect();
+        assert!(ws.windows(2).all(|p| p[0] == p[1]));
+    }
+
+    #[test]
+    fn src_and_dst_differ_on_asymmetric_graph() {
+        let mut rng = crate::util::rng::Rng::new(40);
+        let g = crate::graph::gen::chung_lu::generate("a", 300, 1500, 2.1, true, &mut rng);
+        let a = partition_src(&g, 8).edge_worker;
+        let b = partition_dst(&g, 8).edge_worker;
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,87 @@
+//! 2-D edge partitioning (PSID 4, §3.3.1-iv — GraphX `EdgePartition2D`).
+//!
+//! Workers are arranged in an `r × c` grid (square when `|W|` is a
+//! perfect square); an edge `(u, v)` goes to the tile at
+//! `(hash(u) mod r, hash(v) mod c)`. Every vertex's replicas are then
+//! confined to one grid row plus one grid column, bounding the
+//! replication factor by `r + c` (= `2√|W|` for square grids — the
+//! guarantee the paper quotes from GraphBuilder [15]).
+
+use crate::graph::Graph;
+use crate::util::rng::hash_u64;
+
+use super::Partitioning;
+
+/// Choose the most-square factorisation `r × c = w` with `r ≤ c`.
+pub fn grid_shape(w: usize) -> (usize, usize) {
+    let mut best = (1, w);
+    let mut r = 1;
+    while r * r <= w {
+        if w % r == 0 {
+            best = (r, w / r);
+        }
+        r += 1;
+    }
+    best
+}
+
+/// PSID 4 — two independent 1-D hashes onto a worker grid.
+pub fn partition(g: &Graph, num_workers: usize) -> Partitioning {
+    let (rows, cols) = grid_shape(num_workers);
+    let assign = g
+        .edges()
+        .iter()
+        .map(|&(u, v)| {
+            let r = (hash_u64(u as u64) % rows as u64) as usize;
+            let c = (hash_u64(v as u64 ^ 0x9e3779b9) % cols as u64) as usize;
+            (r * cols + c) as u16
+        })
+        .collect();
+    Partitioning::from_edge_assignment(g, num_workers, assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::metrics::PartitionMetrics;
+
+    #[test]
+    fn grid_shapes() {
+        assert_eq!(grid_shape(64), (8, 8));
+        assert_eq!(grid_shape(16), (4, 4));
+        assert_eq!(grid_shape(12), (3, 4));
+        assert_eq!(grid_shape(7), (1, 7));
+        assert_eq!(grid_shape(1), (1, 1));
+    }
+
+    #[test]
+    fn replication_bounded_by_row_plus_col() {
+        // On a square grid of w workers each vertex can appear in at most
+        // 2√w tiles (its row as a source + its column as a destination).
+        let mut rng = crate::util::rng::Rng::new(50);
+        let g = crate::graph::gen::chung_lu::generate("t", 400, 6000, 2.1, true, &mut rng);
+        let p = partition(&g, 16);
+        let bound = 2 * 4; // 2√16
+        for v in g.vertices() {
+            assert!(
+                p.replicas[v as usize].len() <= bound,
+                "vertex {v} has {} replicas > bound {bound}",
+                p.replicas[v as usize].len()
+            );
+        }
+    }
+
+    #[test]
+    fn lower_replication_than_random_on_skewed_graph() {
+        let mut rng = crate::util::rng::Rng::new(51);
+        let g = crate::graph::gen::chung_lu::generate("t", 1000, 15_000, 2.05, true, &mut rng);
+        let p2d = PartitionMetrics::of(&g, &partition(&g, 64));
+        let prand = PartitionMetrics::of(&g, &crate::partition::random::partition_random(&g, 64));
+        assert!(
+            p2d.replication_factor < prand.replication_factor,
+            "2d {} < random {}",
+            p2d.replication_factor,
+            prand.replication_factor
+        );
+    }
+}

@@ -1,0 +1,141 @@
+//! PJRT path for GBDT forest inference (L1 `gbdt` kernel).
+//!
+//! The compiled artifact has fixed capacity (trees × nodes × batch from
+//! the manifest); [`PjrtForest`] pads a trained [`GbdtTensors`] into
+//! that capacity once, then serves batched predictions. It implements
+//! [`Regressor`], so it can drive the ETRM directly
+//! (`EtrmBackend::External`).
+
+use anyhow::{ensure, Result};
+
+use crate::ml::gbdt::{Gbdt, GbdtTensors};
+use crate::ml::Regressor;
+
+use super::{anyhow_xla, Runtime};
+
+/// A forest bound to the PJRT runtime.
+pub struct PjrtForest {
+    rt: std::rc::Rc<Runtime>,
+    feature: Vec<i32>,
+    threshold: Vec<f32>,
+    left: Vec<i32>,
+    right: Vec<i32>,
+    value: Vec<f32>,
+    scal: [f32; 2],
+    log_target: bool,
+    dim: usize,
+}
+
+impl PjrtForest {
+    /// Pad a trained model into the artifact's capacity.
+    pub fn new(rt: std::rc::Rc<Runtime>, model: &Gbdt) -> Result<Self> {
+        let m = &rt.manifest;
+        ensure!(
+            model.dim <= m.gbdt_features,
+            "model dim {} exceeds artifact features {}",
+            model.dim,
+            m.gbdt_features
+        );
+        let t = GbdtTensors::from_model(model, Some((m.gbdt_trees, m.gbdt_nodes)))?;
+        ensure!(
+            t.depth <= m.gbdt_depth,
+            "trained depth {} exceeds artifact depth {}",
+            t.depth,
+            m.gbdt_depth
+        );
+        Ok(PjrtForest {
+            rt,
+            feature: t.feature,
+            threshold: t.threshold,
+            left: t.left,
+            right: t.right,
+            value: t.value,
+            scal: [t.base_score, t.learning_rate],
+            log_target: model.params.log_target,
+            dim: model.dim,
+        })
+    }
+
+    /// Predict a batch (any length; executed in artifact-batch chunks).
+    pub fn predict_rows(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let m = &self.rt.manifest;
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(m.gbdt_batch) {
+            let mut x = vec![0.0f32; m.gbdt_batch * m.gbdt_features];
+            for (i, row) in chunk.iter().enumerate() {
+                ensure!(row.len() == self.dim, "row dim {} != model dim {}", row.len(), self.dim);
+                for (j, &v) in row.iter().enumerate() {
+                    x[i * m.gbdt_features + j] = v as f32;
+                }
+            }
+            let inputs = [
+                xla::Literal::vec1(&x)
+                    .reshape(&[m.gbdt_batch as i64, m.gbdt_features as i64])
+                    .map_err(anyhow_xla)?,
+                xla::Literal::vec1(&self.feature),
+                xla::Literal::vec1(&self.threshold),
+                xla::Literal::vec1(&self.left),
+                xla::Literal::vec1(&self.right),
+                xla::Literal::vec1(&self.value),
+                xla::Literal::vec1(&self.scal),
+            ];
+            let result = self.rt.execute("gbdt_predict", &inputs)?;
+            let preds = result[0].to_vec::<f32>().map_err(anyhow_xla)?;
+            for &p in preds.iter().take(chunk.len()) {
+                let p = p as f64;
+                out.push(if self.log_target { p.exp() } else { p });
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Regressor for PjrtForest {
+    fn predict(&self, x: &[f64]) -> f64 {
+        self.predict_rows(&[x.to_vec()]).expect("pjrt predict")[0]
+    }
+
+    fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        self.predict_rows(xs).expect("pjrt predict")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::gbdt::GbdtParams;
+    use crate::ml::TrainSet;
+    use crate::util::rng::Rng;
+
+    /// The AOT-compiled kernel must agree with the native ensemble.
+    #[test]
+    fn pjrt_matches_native_predictions() {
+        let Some(rt) = Runtime::try_default() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let dim = rt.manifest.gbdt_features;
+        let mut rng = Rng::new(610);
+        let mut train = TrainSet::default();
+        for _ in 0..500 {
+            let row: Vec<f64> = (0..dim).map(|_| rng.next_f64() * 4.0).collect();
+            let y = row[0] * 3.0 + row[1] * row[1] + 0.1 * rng.next_normal();
+            train.push(row, y.max(0.0));
+        }
+        let model = Gbdt::fit(
+            &train,
+            GbdtParams { n_estimators: 40, max_depth: 5, ..GbdtParams::fast() },
+        );
+        let forest = PjrtForest::new(std::rc::Rc::new(rt), &model).unwrap();
+        let test_rows: Vec<Vec<f64>> =
+            (0..37).map(|_| (0..dim).map(|_| rng.next_f64() * 4.0).collect()).collect();
+        let native: Vec<f64> = test_rows.iter().map(|r| model.predict(r)).collect();
+        let pjrt = forest.predict_rows(&test_rows).unwrap();
+        for (a, b) in pjrt.iter().zip(&native) {
+            assert!(
+                (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+                "pjrt {a} vs native {b}"
+            );
+        }
+    }
+}

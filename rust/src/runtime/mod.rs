@@ -1,0 +1,169 @@
+//! PJRT runtime bridge: load the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text) and execute them from Rust.
+//!
+//! Python runs exactly once at build time (`make artifacts`); after
+//! that the coordinator is self-contained — every artifact is compiled
+//! by `PjRtClient::cpu()` at [`Runtime::load`] and executed with
+//! runtime inputs. Interchange is HLO **text**: the crate's
+//! xla_extension 0.5.1 rejects jax ≥0.5's 64-bit-id serialized protos,
+//! while the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Every artifact has a pure-Rust twin elsewhere in the crate
+//! ([`crate::util::stats::PowerSums`], [`crate::ml::gbdt::GbdtTensors`],
+//! [`crate::ml::mlp::Mlp`]); tests assert the two paths agree, and
+//! callers fall back to the Rust path when `artifacts/` is absent.
+
+pub mod gbdt;
+pub mod mlp;
+pub mod moments;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Static artifact shapes (mirrors `aot.py`'s manifest).
+#[derive(Clone, Copy, Debug)]
+pub struct Manifest {
+    pub moments_n: usize,
+    pub gbdt_batch: usize,
+    pub gbdt_features: usize,
+    pub gbdt_trees: usize,
+    pub gbdt_nodes: usize,
+    pub gbdt_depth: usize,
+    pub mlp_batch: usize,
+    pub mlp_hidden: usize,
+}
+
+impl Manifest {
+    /// Parse `manifest.txt`'s `key value` lines.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv = BTreeMap::new();
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            if let (Some(k), Some(v)) = (it.next(), it.next()) {
+                kv.insert(k.to_string(), v.parse::<usize>().context("manifest value")?);
+            }
+        }
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k).copied().with_context(|| format!("manifest missing {k}"))
+        };
+        Ok(Manifest {
+            moments_n: get("moments_n")?,
+            gbdt_batch: get("gbdt_batch")?,
+            gbdt_features: get("gbdt_features")?,
+            gbdt_trees: get("gbdt_trees")?,
+            gbdt_nodes: get("gbdt_nodes")?,
+            gbdt_depth: get("gbdt_depth")?,
+            mlp_batch: get("mlp_batch")?,
+            mlp_hidden: get("mlp_hidden")?,
+        })
+    }
+}
+
+/// The PJRT runtime: CPU client + compiled executables.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: BTreeMap<&'static str, xla::PjRtLoadedExecutable>,
+}
+
+const ARTIFACTS: &[&str] = &["moments", "gbdt_predict", "mlp_predict", "mlp_train_step"];
+
+impl Runtime {
+    /// Default artifact directory (next to the workspace root).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("GPS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load and compile every artifact in `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.txt");
+        let manifest = Manifest::parse(
+            &std::fs::read_to_string(&manifest_path).with_context(|| {
+                format!("read {} (run `make artifacts`)", manifest_path.display())
+            })?,
+        )?;
+        let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
+        let mut executables = BTreeMap::new();
+        for &name in ARTIFACTS {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                bail!("missing artifact {}", path.display());
+            }
+            let proto =
+                xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+                    .map_err(anyhow_xla)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(anyhow_xla)?;
+            executables.insert(name, exe);
+        }
+        Ok(Runtime { manifest, client, executables })
+    }
+
+    /// Try the default directory; `None` (with no error) when artifacts
+    /// have not been built — callers use the pure-Rust fallback.
+    pub fn try_default() -> Option<Runtime> {
+        Runtime::load(&Self::default_dir()).ok()
+    }
+
+    /// Backend platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute one artifact; returns the decomposed output tuple.
+    pub(crate) fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("unknown artifact {name}"))?;
+        let bufs = exe.execute::<xla::Literal>(inputs).map_err(anyhow_xla)?;
+        let lit = bufs[0][0].to_literal_sync().map_err(anyhow_xla)?;
+        // lowered with return_tuple=True → always a tuple
+        lit.to_tuple().map_err(anyhow_xla)
+    }
+}
+
+/// Adapt the xla crate's error type.
+pub(crate) fn anyhow_xla(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(
+            "moments_n 65536\ngbdt_batch 16\ngbdt_features 52\ngbdt_trees 1024\n\
+             gbdt_nodes 256\ngbdt_depth 15\nmlp_batch 64\nmlp_hidden 64\n",
+        )
+        .unwrap();
+        assert_eq!(m.moments_n, 65536);
+        assert_eq!(m.gbdt_features, 52);
+        assert!(Manifest::parse("moments_n 1\n").is_err(), "missing keys rejected");
+    }
+
+    /// End-to-end artifact smoke test — skipped when `make artifacts`
+    /// has not run (offline CI without python).
+    #[test]
+    fn artifacts_load_and_execute() {
+        let Some(rt) = Runtime::try_default() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+        // moments on a simple padded array
+        let xs = [1.0f64, 2.0, 3.0, 4.0];
+        let sums = super::moments::power_sums(&rt, &xs).unwrap();
+        assert_eq!(sums.n, 4.0);
+        assert_eq!(sums.s1, 10.0);
+        assert_eq!(sums.s2, 30.0);
+        assert_eq!(sums.s3, 100.0);
+        assert_eq!(sums.s4, 354.0);
+    }
+}

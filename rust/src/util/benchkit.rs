@@ -1,0 +1,119 @@
+//! Micro-benchmark harness (criterion is unavailable offline, so the
+//! `cargo bench` targets use this: warmup, N timed samples, median /
+//! mean / p10 / p90 reporting, and a `black_box` to defeat dead-code
+//! elimination).
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+/// Re-export of `std::hint::black_box` under the familiar name.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Timing summary over the collected samples (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub samples: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Timing {
+    fn from_samples(mut xs: Vec<f64>) -> Self {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| crate::util::stats::quantile_sorted(&xs, p);
+        Timing {
+            samples: xs.len(),
+            mean: xs.iter().sum::<f64>() / xs.len() as f64,
+            median: q(0.5),
+            p10: q(0.1),
+            p90: q(0.9),
+            min: xs[0],
+            max: *xs.last().unwrap(),
+        }
+    }
+}
+
+/// Benchmark runner with warmup and per-sample wall timing.
+pub struct Bench {
+    warmup: usize,
+    samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, samples: 10 }
+    }
+}
+
+impl Bench {
+    /// Construct with explicit warmup iterations and timed samples.
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        assert!(samples > 0);
+        Bench { warmup, samples }
+    }
+
+    /// A faster profile for CI-style runs (controlled by `GPS_BENCH_FAST`).
+    pub fn from_env() -> Self {
+        if std::env::var("GPS_BENCH_FAST").is_ok() {
+            Bench::new(1, 3)
+        } else {
+            Bench::default()
+        }
+    }
+
+    /// Time `f` and report. The closure's result is black-boxed.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Timing {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let t = Timing::from_samples(samples);
+        println!(
+            "bench {name:<48} median={:<12} mean={:<12} p10={:<12} p90={:<12} n={}",
+            crate::util::fmt_secs(t.median),
+            crate::util::fmt_secs(t.mean),
+            crate::util::fmt_secs(t.p10),
+            crate::util::fmt_secs(t.p90),
+            t.samples
+        );
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_orders() {
+        let b = Bench::new(0, 5);
+        let t = b.run("noop-spin", || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(black_box(i));
+            }
+            s
+        });
+        assert!(t.min <= t.median && t.median <= t.max);
+        assert!(t.p10 <= t.p90);
+        assert_eq!(t.samples, 5);
+        assert!(t.min >= 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_samples_panics() {
+        Bench::new(0, 0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Minimal command-line argument parser (the build is offline; no clap).
+//!
+//! Supports `subcommand --flag value --switch positional` layouts used by
+//! the `repro` binary and the examples:
+//!
+//! ```no_run
+//! use gps_select::util::cli::Args;
+//! let a = Args::parse_from(vec!["run".into(), "--graph".into(), "wiki".into(),
+//!                               "--workers".into(), "64".into(), "--fast".into()]);
+//! assert_eq!(a.subcommand(), Some("run"));
+//! assert_eq!(a.get("graph"), Some("wiki"));
+//! assert_eq!(a.get_usize("workers", 8), 64);
+//! assert!(a.has("fast"));
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn parse() -> Self {
+        Self::parse_from(std::env::args().skip(1).collect())
+    }
+
+    /// Parse from an explicit token list (first non-flag token becomes the
+    /// subcommand; `--key value` pairs become flags; a `--key` followed by
+    /// another `--`-token or end-of-line becomes a boolean switch;
+    /// `--key=value` is also accepted).
+    pub fn parse_from(tokens: Vec<String>) -> Self {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    args.flags.insert(stripped.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.switches.push(stripped.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// The leading subcommand, if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.subcommand.as_deref()
+    }
+
+    /// String flag value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// String flag with default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// `usize` flag with default; panics with a clear message on junk.
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// `u64` flag with default.
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// `f64` flag with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    /// Boolean switch (`--fast`) or `--fast=true`.
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+            || matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Remaining positional arguments after the subcommand.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = Args::parse_from(toks("run --graph wiki --workers 64"));
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.get("graph"), Some("wiki"));
+        assert_eq!(a.get_usize("workers", 1), 64);
+    }
+
+    #[test]
+    fn switch_at_end_and_mid() {
+        let a = Args::parse_from(toks("bench --fast --n 3 --verbose"));
+        assert!(a.has("fast"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_usize("n", 0), 3);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse_from(toks("x --scale=0.25 --flag=true"));
+        assert_eq!(a.get_f64("scale", 1.0), 0.25);
+        assert!(a.has("flag"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse_from(toks(""));
+        assert_eq!(a.subcommand(), None);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_usize("n", 12), 12);
+        assert!(!a.has("fast"));
+    }
+
+    #[test]
+    fn positionals() {
+        let a = Args::parse_from(toks("cat a.txt b.txt --v"));
+        assert_eq!(a.subcommand(), Some("cat"));
+        assert_eq!(a.positional(), &["a.txt".to_string(), "b.txt".to_string()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_integer_panics() {
+        let a = Args::parse_from(toks("x --n abc"));
+        a.get_usize("n", 0);
+    }
+}

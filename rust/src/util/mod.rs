@@ -1,0 +1,51 @@
+//! Small self-contained utilities: deterministic RNG, statistics,
+//! CLI parsing, table formatting and a micro-benchmark harness.
+//!
+//! The crate deliberately depends only on `xla` + `anyhow`; everything
+//! else (arg parsing, bench timing, property-test input generation) is
+//! implemented here so the build is fully offline and deterministic.
+
+pub mod benchkit;
+pub mod cli;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Format a `f64` seconds value compactly (`1.234s`, `12.3ms`, `456µs`).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Integer ceiling division.
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(2.5), "2.500s");
+        assert_eq!(fmt_secs(0.0025), "2.500ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.500µs");
+        assert_eq!(fmt_secs(2.5e-9), "2.5ns");
+    }
+
+    #[test]
+    fn div_ceil_basic() {
+        assert_eq!(div_ceil(10, 3), 4);
+        assert_eq!(div_ceil(9, 3), 3);
+        assert_eq!(div_ceil(0, 3), 0);
+        assert_eq!(div_ceil(1, 1), 1);
+    }
+}

@@ -1,0 +1,343 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! Everything stochastic in the repository (graph generation, random-walk
+//! starts, random strategy baselines, train/test shuffles, property-test
+//! inputs) flows from a single seed through [`Rng`], a SplitMix64-seeded
+//! xoshiro256** generator. This makes every experiment bit-reproducible:
+//! the same `--seed` regenerates the identical execution logs, model and
+//! evaluation tables.
+
+/// SplitMix64 step — used to expand a single `u64` seed into the four
+/// xoshiro256** state words (as recommended by the xoshiro authors).
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** deterministic RNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent child stream, e.g. one per worker/dataset.
+    /// Mixing in `stream` keeps children decorrelated from each other.
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        let base = self.next_u64();
+        Rng::new(base ^ stream.wrapping_mul(0xA24B_AED4_963E_E407))
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f64` in `[0, 1)` using the high 53 bits.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)`. Uses Lemire's multiply-shift rejection
+    /// method for unbiased bounded generation.
+    #[inline]
+    pub fn gen_range(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0, "gen_range(0)");
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let l = m as u64;
+            if l >= n.wrapping_neg() % n {
+                return (m >> 64) as usize;
+            }
+            // reject and retry (rare: only when l < 2^64 mod n)
+            if n.is_power_of_two() {
+                return (x & (n - 1)) as usize;
+            }
+        }
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    #[inline]
+    pub fn gen_between(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.gen_range(hi - lo)
+    }
+
+    /// Bernoulli draw with probability `p`.
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via Box–Muller (one value per call; the pair's
+    /// second value is discarded to keep the state trajectory simple).
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (Floyd's algorithm for
+    /// small k, shuffle-prefix otherwise). Order is unspecified.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k={k} > n={n}");
+        if k * 4 >= n {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            return all;
+        }
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.gen_range(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.gen_range(xs.len())]
+    }
+
+    /// Draw from a discrete distribution given cumulative weights
+    /// (`cum` strictly increasing, last element = total weight).
+    pub fn choose_weighted_cum(&mut self, cum: &[f64]) -> usize {
+        let total = *cum.last().expect("empty weights");
+        let x = self.next_f64() * total;
+        match cum.binary_search_by(|w| w.partial_cmp(&x).unwrap()) {
+            Ok(i) => (i + 1).min(cum.len() - 1),
+            Err(i) => i.min(cum.len() - 1),
+        }
+    }
+}
+
+/// 64-bit FNV-1a hash — the deterministic hash used by the hash-based
+/// partitioners so partition assignments are identical across runs and
+/// platforms (std's SipHash is randomly keyed per process).
+#[inline]
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// Hash a `u64` key (used for vertex ids).
+#[inline]
+pub fn hash_u64(x: u64) -> u64 {
+    fnv1a64(&x.to_le_bytes())
+}
+
+/// Hash a pair of `u64` keys.
+#[inline]
+pub fn hash_u64_pair(a: u64, b: u64) -> u64 {
+    let mut buf = [0u8; 16];
+    buf[..8].copy_from_slice(&a.to_le_bytes());
+    buf[8..].copy_from_slice(&b.to_le_bytes());
+    fnv1a64(&buf)
+}
+
+/// Cantor pairing function π(a,b) = (a+b)(a+b+1)/2 + b — the paper cites
+/// it (ref [26]) as the 2-D→1-D mapping behind GraphX's Random strategy.
+/// Computed in u128 to avoid overflow for large vertex ids.
+#[inline]
+pub fn cantor_pair(a: u64, b: u64) -> u128 {
+    let (a, b) = (a as u128, b as u128);
+    (a + b) * (a + b + 1) / 2 + b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn gen_range_bounds_and_coverage() {
+        let mut r = Rng::new(9);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.gen_range(10);
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all buckets hit");
+    }
+
+    #[test]
+    fn gen_range_uniformity_rough() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let k = 7;
+        let mut counts = vec![0usize; k];
+        for _ in 0..n {
+            counts[r.gen_range(k)] += 1;
+        }
+        let expect = n as f64 / k as f64;
+        for &c in &counts {
+            assert!((c as f64 - expect).abs() < expect * 0.1, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(3);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>(), "shuffled order changed");
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(5);
+        for &(n, k) in &[(100, 5), (100, 80), (10, 10), (1, 1), (1000, 0)] {
+            let s = r.sample_indices(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k, "distinct");
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(13);
+        let n = 200_000;
+        let (mut sum, mut sum2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.next_normal();
+            sum += x;
+            sum2 += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sum2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn cantor_pairing_known_values() {
+        // π(0,0)=0, π(1,0)=1, π(0,1)=2, π(2,0)=3, π(1,1)=4, π(0,2)=5
+        assert_eq!(cantor_pair(0, 0), 0);
+        assert_eq!(cantor_pair(1, 0), 1);
+        assert_eq!(cantor_pair(0, 1), 2);
+        assert_eq!(cantor_pair(2, 0), 3);
+        assert_eq!(cantor_pair(1, 1), 4);
+        assert_eq!(cantor_pair(0, 2), 5);
+    }
+
+    #[test]
+    fn cantor_pairing_is_injective_on_grid() {
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..60u64 {
+            for b in 0..60u64 {
+                assert!(seen.insert(cantor_pair(a, b)));
+            }
+        }
+    }
+
+    #[test]
+    fn cantor_pairing_order_sensitive() {
+        assert_ne!(cantor_pair(3, 9), cantor_pair(9, 3));
+    }
+
+    #[test]
+    fn fnv_stable() {
+        // Golden values pin the hash so partition layouts never drift.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn fork_streams_decorrelated() {
+        let mut root = Rng::new(99);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn weighted_choice_respects_weights() {
+        let mut r = Rng::new(21);
+        let cum = [1.0, 1.0 + 3.0, 1.0 + 3.0 + 6.0]; // weights 1,3,6
+        let mut counts = [0usize; 3];
+        for _ in 0..60_000 {
+            counts[r.choose_weighted_cum(&cum)] += 1;
+        }
+        assert!((counts[0] as f64 / 6000.0 - 1.0).abs() < 0.15);
+        assert!((counts[1] as f64 / 18000.0 - 1.0).abs() < 0.15);
+        assert!((counts[2] as f64 / 36000.0 - 1.0).abs() < 0.15);
+    }
+}

@@ -1,0 +1,233 @@
+//! Descriptive statistics used throughout: the degree-distribution
+//! moments of Table 3 (mean, std, skewness, kurtosis) and the box-plot
+//! five-number summaries of Fig 7.
+
+/// Raw power sums Σx, Σx², Σx³, Σx⁴ over a sample — the quantity the L1
+/// Pallas `moments` kernel computes; the conversion to central moments
+/// happens in [`Moments::from_power_sums`] so the Rust fallback and the
+/// PJRT path share one definition.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PowerSums {
+    pub n: f64,
+    pub s1: f64,
+    pub s2: f64,
+    pub s3: f64,
+    pub s4: f64,
+}
+
+impl PowerSums {
+    /// Accumulate power sums over a sample.
+    pub fn of(xs: &[f64]) -> Self {
+        let mut p = PowerSums { n: xs.len() as f64, ..Default::default() };
+        for &x in xs {
+            let x2 = x * x;
+            p.s1 += x;
+            p.s2 += x2;
+            p.s3 += x2 * x;
+            p.s4 += x2 * x2;
+        }
+        p
+    }
+
+    /// Merge two partial sums (used by the tiled kernel's block outputs).
+    pub fn merge(self, o: PowerSums) -> PowerSums {
+        PowerSums {
+            n: self.n + o.n,
+            s1: self.s1 + o.s1,
+            s2: self.s2 + o.s2,
+            s3: self.s3 + o.s3,
+            s4: self.s4 + o.s4,
+        }
+    }
+}
+
+/// Mean, standard deviation, skewness and kurtosis of a sample.
+///
+/// Skewness is the population skewness g1 = m3 / m2^1.5; kurtosis is the
+/// *excess* kurtosis g2 = m4 / m2² − 3 (a normal distribution scores 0),
+/// matching the paper's use of signed skew/kurtosis features that are
+/// then split into sign + magnitude for the model input (§4.1.1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Moments {
+    pub n: f64,
+    pub mean: f64,
+    pub std: f64,
+    pub skewness: f64,
+    pub kurtosis: f64,
+}
+
+impl Moments {
+    /// Convert raw power sums into central moments.
+    pub fn from_power_sums(p: PowerSums) -> Self {
+        let n = p.n;
+        if n == 0.0 {
+            return Moments { n, mean: 0.0, std: 0.0, skewness: 0.0, kurtosis: 0.0 };
+        }
+        let mean = p.s1 / n;
+        // central moments via binomial expansion of E[(x-µ)^k]
+        let m2 = p.s2 / n - mean * mean;
+        let m3 = p.s3 / n - 3.0 * mean * p.s2 / n + 2.0 * mean * mean * mean;
+        let m4 = p.s4 / n - 4.0 * mean * p.s3 / n + 6.0 * mean * mean * p.s2 / n
+            - 3.0 * mean * mean * mean * mean;
+        let m2 = m2.max(0.0);
+        let std = m2.sqrt();
+        let (skewness, kurtosis) = if m2 > 1e-30 {
+            (m3 / (m2 * std), m4 / (m2 * m2) - 3.0)
+        } else {
+            (0.0, 0.0)
+        };
+        Moments { n, mean, std, skewness, kurtosis }
+    }
+
+    /// Compute directly from a sample.
+    pub fn of(xs: &[f64]) -> Self {
+        Self::from_power_sums(PowerSums::of(xs))
+    }
+}
+
+/// Five-number summary + mean for a box plot (Fig 7): minimum, first
+/// quartile, median, third quartile, maximum (outliers not separated —
+/// the paper's plots mark them, but the series we report are the box
+/// edges) and the mean (the paper's black triangles).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BoxPlot {
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub mean: f64,
+}
+
+/// Linear-interpolation quantile (type-7, the numpy default) over a
+/// *sorted* slice.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "quantile of empty sample");
+    assert!((0.0..=1.0).contains(&q));
+    let h = (sorted.len() - 1) as f64 * q;
+    let lo = h.floor() as usize;
+    let hi = h.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (h - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+impl BoxPlot {
+    /// Build from an unsorted sample.
+    pub fn of(xs: &[f64]) -> Self {
+        assert!(!xs.is_empty(), "boxplot of empty sample");
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        BoxPlot {
+            min: v[0],
+            q1: quantile_sorted(&v, 0.25),
+            median: quantile_sorted(&v, 0.5),
+            q3: quantile_sorted(&v, 0.75),
+            max: *v.last().unwrap(),
+            mean,
+        }
+    }
+}
+
+/// Arithmetic mean (0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+/// Geometric mean of strictly positive values.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn moments_constant_sample() {
+        let m = Moments::of(&[5.0; 10]);
+        assert_eq!(m.mean, 5.0);
+        assert_eq!(m.std, 0.0);
+        assert_eq!(m.skewness, 0.0);
+        assert_eq!(m.kurtosis, 0.0);
+    }
+
+    #[test]
+    fn moments_known_sample() {
+        // x = [1,2,3,4,5]: mean 3, pop-var 2, symmetric → skew 0,
+        // m4 = (16+1+0+1+16)/5 = 6.8, kurt = 6.8/4 - 3 = -1.3
+        let m = Moments::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!(close(m.mean, 3.0, 1e-12));
+        assert!(close(m.std, 2f64.sqrt(), 1e-12));
+        assert!(close(m.skewness, 0.0, 1e-12));
+        assert!(close(m.kurtosis, -1.3, 1e-12));
+    }
+
+    #[test]
+    fn moments_skewed_sample() {
+        // heavy right tail → positive skewness
+        let m = Moments::of(&[1.0, 1.0, 1.0, 1.0, 100.0]);
+        assert!(m.skewness > 1.0, "skew={}", m.skewness);
+    }
+
+    #[test]
+    fn moments_empty() {
+        let m = Moments::of(&[]);
+        assert_eq!(m.mean, 0.0);
+        assert_eq!(m.std, 0.0);
+    }
+
+    #[test]
+    fn power_sums_merge_equals_whole() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let whole = PowerSums::of(&xs);
+        let merged = PowerSums::of(&xs[..37]).merge(PowerSums::of(&xs[37..]));
+        assert!(close(whole.s1, merged.s1, 1e-12));
+        assert!(close(whole.s4, merged.s4, 1e-12));
+        let a = Moments::from_power_sums(whole);
+        let b = Moments::from_power_sums(merged);
+        assert!(close(a.kurtosis, b.kurtosis, 1e-9));
+    }
+
+    #[test]
+    fn quantiles_numpy_type7() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile_sorted(&v, 0.0), 1.0);
+        assert_eq!(quantile_sorted(&v, 1.0), 4.0);
+        assert_eq!(quantile_sorted(&v, 0.5), 2.5);
+        assert!(close(quantile_sorted(&v, 0.25), 1.75, 1e-12));
+    }
+
+    #[test]
+    fn boxplot_summary() {
+        let b = BoxPlot::of(&[9.0, 1.0, 5.0, 3.0, 7.0]);
+        assert_eq!(b.min, 1.0);
+        assert_eq!(b.median, 5.0);
+        assert_eq!(b.max, 9.0);
+        assert_eq!(b.mean, 5.0);
+        assert_eq!(b.q1, 3.0);
+        assert_eq!(b.q3, 7.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn boxplot_empty_panics() {
+        BoxPlot::of(&[]);
+    }
+
+    #[test]
+    fn geomean_known() {
+        assert!(close(geomean(&[1.0, 4.0]), 2.0, 1e-12));
+        assert!(close(geomean(&[2.0, 2.0, 2.0]), 2.0, 1e-12));
+    }
+}

@@ -1,0 +1,135 @@
+//! Integration tests across features + dataset + ml + etrm: the
+//! learning half of the pipeline, including generalisation splits and
+//! failure-injection cases.
+
+use gps_select::algorithms::Algorithm;
+use gps_select::dataset::augment::augment;
+use gps_select::dataset::logs::LogStore;
+use gps_select::engine::cost::ClusterConfig;
+use gps_select::etrm::Etrm;
+use gps_select::features::{encode, FEATURE_DIM};
+use gps_select::graph::datasets::DatasetSpec;
+use gps_select::ml::gbdt::GbdtParams;
+use gps_select::ml::metrics::spearman;
+use gps_select::partition::Strategy;
+
+fn small_corpus(scale: f64) -> LogStore {
+    let cfg = ClusterConfig::with_workers(16);
+    let mut store = LogStore::default();
+    for name in ["wiki", "epinions", "facebook", "gd-ro"] {
+        let g = DatasetSpec::by_name(name).unwrap().build(scale, 7);
+        store
+            .record_graph(
+                &g,
+                &[Algorithm::Aid, Algorithm::Pr, Algorithm::Tc, Algorithm::Gc],
+                &Strategy::inventory(),
+                &cfg,
+            )
+            .unwrap();
+    }
+    store
+}
+
+/// Train on three graphs, evaluate ordering quality on the held-out
+/// fourth (the generalisation the paper's test set B measures).
+#[test]
+fn generalises_to_unseen_graph() {
+    let store = small_corpus(0.01);
+    let train_logs: Vec<_> =
+        store.logs.iter().filter(|l| l.graph != "gd-ro").cloned().collect();
+    let synth_store = LogStore {
+        logs: train_logs,
+        graph_features: store.graph_features.clone(),
+    };
+    let synthetic = augment(&synth_store, 2..=6, Some(8000), 1);
+    assert!(!synthetic.is_empty());
+    let etrm = Etrm::train_gbdt(
+        &synthetic,
+        GbdtParams { n_estimators: 200, max_depth: 8, ..GbdtParams::paper() },
+    );
+    // rank correlation between predicted and real times on the unseen
+    // graph must be clearly positive for the expensive algorithms
+    for algo in [Algorithm::Pr, Algorithm::Tc] {
+        let task = store
+            .logs
+            .iter()
+            .find(|l| l.graph == "gd-ro" && l.algorithm == algo.name())
+            .unwrap();
+        let preds: Vec<f64> = Strategy::inventory()
+            .iter()
+            .map(|s| etrm.predict(&task.features, *s))
+            .collect();
+        let truth = store.times_of_task("gd-ro", algo.name());
+        let rho = spearman(&preds, &truth);
+        assert!(rho > 0.0, "{}: spearman {rho} (preds {preds:?}, truth {truth:?})", algo.name());
+    }
+}
+
+/// Predicted times must scale with the algorithm's cost tier even for a
+/// synthetic mega-task (feature aggregation semantics).
+#[test]
+fn synthetic_tasks_predict_larger_times() {
+    let store = small_corpus(0.008);
+    let synthetic = augment(&store, 2..=5, Some(6000), 2);
+    let etrm = Etrm::train_gbdt(
+        &synthetic,
+        GbdtParams { n_estimators: 120, max_depth: 8, ..GbdtParams::fast() },
+    );
+    let aid = store
+        .logs
+        .iter()
+        .find(|l| l.graph == "wiki" && l.algorithm == "AID")
+        .unwrap();
+    let pr = store
+        .logs
+        .iter()
+        .find(|l| l.graph == "wiki" && l.algorithm == "PR")
+        .unwrap();
+    let combined = gps_select::features::TaskFeatures::aggregate_algos(
+        aid.features.data,
+        &[aid.features.algo, pr.features.algo, pr.features.algo],
+    );
+    let t_aid = etrm.predict(&aid.features, Strategy::Random);
+    let t_combined = etrm.predict(&combined, Strategy::Random);
+    assert!(
+        t_combined > t_aid,
+        "mega-task {t_combined} must exceed single AID {t_aid}"
+    );
+}
+
+/// Encoding must be stable: same task+strategy → same vector; the
+/// feature dimension is pinned to what the AOT artifact was built with.
+#[test]
+fn encoding_stability_and_dimension() {
+    let store = small_corpus(0.008);
+    let l = &store.logs[0];
+    let a = encode(&l.features, l.strategy);
+    let b = encode(&l.features, l.strategy);
+    assert_eq!(a, b);
+    assert_eq!(FEATURE_DIM, 52, "artifact gbdt_features must match");
+}
+
+/// Failure injection: training on an empty log set must panic loudly
+/// (not silently produce a broken model).
+#[test]
+#[should_panic(expected = "empty")]
+fn empty_training_set_panics() {
+    Etrm::train_gbdt(&[], GbdtParams::fast());
+}
+
+/// Selection works even when all candidate times are identical
+/// (degenerate logs): any inventory strategy is acceptable.
+#[test]
+fn degenerate_equal_times_still_selects() {
+    let store = small_corpus(0.008);
+    let mut logs = store.logs.clone();
+    for l in &mut logs {
+        l.time = 1.0;
+    }
+    let etrm = Etrm::train_gbdt(
+        &logs,
+        GbdtParams { n_estimators: 30, max_depth: 4, ..GbdtParams::fast() },
+    );
+    let s = etrm.select(&store.logs[0].features);
+    assert!(Strategy::inventory().contains(&s));
+}

@@ -1,0 +1,121 @@
+//! Property-based tests over the partitioning strategies (the
+//! coordinator's core invariants), using seeded random graph generation
+//! as the input sweep (an offline stand-in for proptest).
+//!
+//! For every strategy × random graph × worker count:
+//! 1. every edge is assigned exactly once, to a valid worker;
+//! 2. the replica sets cover exactly the workers with incident edges;
+//! 3. the master of every non-isolated vertex is one of its replicas;
+//! 4. replication factor ≥ 1 and ≤ min(|W|, max degree bound);
+//! 5. determinism: identical inputs → identical assignments.
+
+use gps_select::graph::gen::{chung_lu, erdos, grid, smallworld};
+use gps_select::graph::Graph;
+use gps_select::partition::metrics::PartitionMetrics;
+use gps_select::partition::Strategy;
+use gps_select::util::rng::Rng;
+
+fn random_graph(case: u64) -> Graph {
+    let mut rng = Rng::new(0xbeef ^ case);
+    let n = 50 + rng.gen_range(400);
+    let density = 2 + rng.gen_range(6);
+    let m = (n * density).min(n * (n - 1) / 4);
+    match case % 4 {
+        0 => erdos::generate("er", n, m, rng.gen_bool(0.5), &mut rng),
+        1 => chung_lu::generate("cl", n, m, 2.05 + rng.next_f64(), rng.gen_bool(0.5), &mut rng),
+        2 => smallworld::generate("sw", n, m.max(n), 0.1, &mut rng),
+        _ => grid::generate("gr", n, (n * 14 / 10).min(m.max(n)), &mut rng),
+    }
+}
+
+#[test]
+fn partition_invariants_hold_over_random_inputs() {
+    for case in 0..24u64 {
+        let g = random_graph(case);
+        let workers = [1usize, 2, 7, 16, 64][(case % 5) as usize];
+        for s in Strategy::all() {
+            let p = s.partition(&g, workers);
+            // (1) complete assignment
+            assert_eq!(p.edge_worker.len(), g.num_edges(), "{case}/{}", s.name());
+            assert!(p.edge_worker.iter().all(|&w| (w as usize) < workers));
+            assert_eq!(
+                p.edges_per_worker.iter().sum::<usize>(),
+                g.num_edges(),
+                "{case}/{}",
+                s.name()
+            );
+            // (2) replica sets match incident edges
+            let mut expected: Vec<std::collections::BTreeSet<u16>> =
+                vec![Default::default(); g.num_vertices()];
+            for (e, &(u, v)) in g.edges().iter().enumerate() {
+                expected[u as usize].insert(p.edge_worker[e]);
+                expected[v as usize].insert(p.edge_worker[e]);
+            }
+            for v in g.vertices() {
+                let got: std::collections::BTreeSet<u16> =
+                    p.replicas[v as usize].iter().copied().collect();
+                assert_eq!(got, expected[v as usize], "{case}/{} vertex {v}", s.name());
+                // (3) master membership
+                if !got.is_empty() {
+                    assert!(
+                        got.contains(&p.master[v as usize]),
+                        "{case}/{} vertex {v} master outside replicas",
+                        s.name()
+                    );
+                }
+            }
+            // (4) replication factor bounds: every non-isolated vertex
+            // has ≥1 replica (isolated ones have none, so rf can dip
+            // below 1 on graphs with isolated vertices)
+            let non_isolated =
+                g.vertices().filter(|&v| g.degree(v) > 0).count() as f64;
+            let m = PartitionMetrics::of(&g, &p);
+            assert!(
+                m.replication_factor >= non_isolated / g.num_vertices() as f64 - 1e-9,
+                "{case}/{}",
+                s.name()
+            );
+            assert!(
+                m.replication_factor <= workers as f64 + 1e-9,
+                "{case}/{}: rf {}",
+                s.name(),
+                m.replication_factor
+            );
+            // (5) determinism
+            let again = s.partition(&g, workers);
+            assert_eq!(p.edge_worker, again.edge_worker, "{case}/{}", s.name());
+        }
+    }
+}
+
+/// The 2D strategy's replication bound (2√|W| for square grids) must
+/// hold on every random input — it is a *guarantee*, not a tendency.
+#[test]
+fn twod_replication_bound_is_hard() {
+    for case in 0..12u64 {
+        let g = random_graph(case);
+        for &w in &[4usize, 16, 64] {
+            let p = Strategy::TwoD.partition(&g, w);
+            let bound = 2 * (w as f64).sqrt() as usize;
+            for v in g.vertices() {
+                assert!(
+                    p.replicas[v as usize].len() <= bound,
+                    "case {case}, w {w}, vertex {v}: {} > {bound}",
+                    p.replicas[v as usize].len()
+                );
+            }
+        }
+    }
+}
+
+/// Degree-ordered invariant for HDRF: with λ → large, edge balance must
+/// approach perfection on every input.
+#[test]
+fn hdrf_high_lambda_always_balances() {
+    for case in 0..8u64 {
+        let g = random_graph(case);
+        let p = Strategy::Hdrf(100).partition(&g, 8);
+        let m = PartitionMetrics::of(&g, &p);
+        assert!(m.edge_balance < 1.35, "case {case}: {}", m.edge_balance);
+    }
+}
