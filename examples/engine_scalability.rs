@@ -11,11 +11,12 @@ use gps_select::engine::cost::ClusterConfig;
 use gps_select::graph::datasets::DatasetSpec;
 use gps_select::partition::Strategy;
 use gps_select::util::cli::Args;
+use gps_select::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::parse();
-    let scale = args.get_f64("scale", 1.0 / 32.0);
-    let seed = args.get_u64("seed", 42);
+    let scale = args.get_f64("scale", 1.0 / 32.0)?;
+    let seed = args.get_u64("seed", 42)?;
     let g = DatasetSpec::by_name("stanford").unwrap().build(scale, seed);
     println!(
         "engine scalability on {} (|V|={}, |E|={}), 2D partitioning",
@@ -23,7 +24,10 @@ fn main() -> anyhow::Result<()> {
         g.num_vertices(),
         g.num_edges()
     );
-    println!("{:>8} {:>14} {:>14} {:>10} {:>10}", "workers", "PR (s)", "TC (s)", "PR speedup", "TC speedup");
+    println!(
+        "{:>8} {:>14} {:>14} {:>10} {:>10}",
+        "workers", "PR (s)", "TC (s)", "PR speedup", "TC speedup"
+    );
     let mut base: Option<(f64, f64)> = None;
     for &w in &[4usize, 8, 16, 32, 64] {
         let cfg = ClusterConfig::with_workers(w);

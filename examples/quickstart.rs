@@ -11,16 +11,17 @@ use gps_select::graph::datasets::DatasetSpec;
 use gps_select::partition::metrics::PartitionMetrics;
 use gps_select::partition::Strategy;
 use gps_select::util::cli::Args;
+use gps_select::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::parse();
     let name = args.get_or("graph", "wiki");
-    let scale = args.get_f64("scale", 1.0 / 32.0);
-    let workers = args.get_usize("workers", 64);
+    let scale = args.get_f64("scale", 1.0 / 32.0)?;
+    let workers = args.get_usize("workers", 64)?;
 
     // 1. build the graph (synthetic stand-in for the SNAP dataset)
     let spec = DatasetSpec::by_name(name).expect("unknown graph alias");
-    let g = spec.build(scale, args.get_u64("seed", 42));
+    let g = spec.build(scale, args.get_u64("seed", 42)?);
     println!(
         "graph {} ({}): |V|={} |E|={} directed={}",
         g.name,
@@ -32,14 +33,23 @@ fn main() -> anyhow::Result<()> {
 
     // 2. partition with every strategy and report quality + PR time
     let cfg = ClusterConfig::with_workers(workers);
-    println!("\n{:<10} {:>12} {:>13} {:>14}", "strategy", "replication", "edge balance", "PR time (s)");
+    println!(
+        "\n{:<10} {:>12} {:>13} {:>14}",
+        "strategy", "replication", "edge balance", "PR time (s)"
+    );
     let mut best: Option<(Strategy, f64)> = None;
     let mut worst: Option<(Strategy, f64)> = None;
     for s in Strategy::inventory() {
         let p = s.partition(&g, workers);
         let m = PartitionMetrics::of(&g, &p);
         let t = Algorithm::Pr.simulate(&g, &p, &cfg).sim.total;
-        println!("{:<10} {:>12.3} {:>13.3} {:>14.6}", s.name(), m.replication_factor, m.edge_balance, t);
+        println!(
+            "{:<10} {:>12.3} {:>13.3} {:>14.6}",
+            s.name(),
+            m.replication_factor,
+            m.edge_balance,
+            t
+        );
         if best.map_or(true, |(_, bt)| t < bt) {
             best = Some((s, t));
         }

@@ -24,18 +24,20 @@ use gps_select::features::encode;
 use gps_select::ml::gbdt::GbdtParams;
 use gps_select::ml::Regressor;
 use gps_select::util::cli::Args;
+use gps_select::util::error::{bail, Result};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::parse();
     let default = PipelineConfig::default();
     let config = PipelineConfig {
-        scale: args.get_f64("scale", default.scale),
-        seed: args.get_u64("seed", default.seed),
-        workers: args.get_usize("workers", default.workers),
-        augment_cap: Some(args.get_usize("cap", 40_000)),
+        scale: args.get_f64("scale", default.scale)?,
+        seed: args.get_u64("seed", default.seed)?,
+        workers: args.get_usize("workers", default.workers)?,
+        threads: args.get_usize("threads", default.threads)?,
+        augment_cap: Some(args.get_usize("cap", 40_000)?),
         gbdt: GbdtParams {
-            n_estimators: args.get_usize("trees", default.gbdt.n_estimators),
-            max_depth: args.get_usize("depth", default.gbdt.max_depth),
+            n_estimators: args.get_usize("trees", default.gbdt.n_estimators)?,
+            max_depth: args.get_usize("depth", default.gbdt.max_depth)?,
             ..default.gbdt
         },
         ..default
@@ -65,17 +67,14 @@ fn main() -> anyhow::Result<()> {
     let misses: Vec<&TaskEval> = eval.tasks.iter().filter(|t| t.rank > 4).collect();
     println!("  tasks outside rank 4: {}/96", misses.len());
 
-    // three-layer deployment path: the PJRT-compiled forest must agree
+    // three-layer deployment path: the artifact-shaped forest must agree
     // with the native model on the evaluation tasks
     match gps_select::runtime::Runtime::try_default() {
         Some(rt) => {
             let EtrmBackend::Gbdt(model) = &eval.etrm.backend else {
-                anyhow::bail!("expected GBDT backend")
+                bail!("expected GBDT backend")
             };
-            let forest = gps_select::runtime::gbdt::PjrtForest::new(
-                std::rc::Rc::new(rt),
-                model,
-            )?;
+            let forest = gps_select::runtime::gbdt::ArtifactForest::new(&rt, model)?;
             let mut checked = 0usize;
             let mut max_rel = 0.0f64;
             for t in eval.tasks.iter().take(12) {
@@ -92,16 +91,18 @@ fn main() -> anyhow::Result<()> {
                 checked += 1;
             }
             println!(
-                "PJRT cross-check: {checked} predictions, max relative deviation {max_rel:.2e} ✓"
+                "artifact cross-check: {checked} predictions, \
+                 max relative deviation {max_rel:.2e} ✓"
             );
         }
-        None => println!("PJRT cross-check skipped (run `make artifacts`)"),
+        None => println!("artifact cross-check skipped (run `make artifacts`)"),
     }
 
     let all: Vec<&TaskEval> = eval.tasks.iter().collect();
     let (best, worst, avg) = Evaluation::mean_scores(&all);
     println!(
-        "\nheadline: Score_best {best:.4} (paper 0.9458) | Score_worst {worst:.4} (2.0770) | Score_avg {avg:.4} (1.4558)"
+        "\nheadline: Score_best {best:.4} (paper 0.9458) | Score_worst {worst:.4} (2.0770) | \
+         Score_avg {avg:.4} (1.4558)"
     );
     Ok(())
 }

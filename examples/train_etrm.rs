@@ -20,6 +20,7 @@ use gps_select::ml::metrics::{r2, rmse, spearman};
 use gps_select::ml::mlp::MlpParams;
 use gps_select::partition::Strategy;
 use gps_select::util::cli::Args;
+use gps_select::util::error::Result;
 
 fn evaluate(etrm: &Etrm, store: &LogStore, label: &str) {
     let mut preds = Vec::new();
@@ -60,12 +61,12 @@ fn evaluate(etrm: &Etrm, store: &LogStore, label: &str) {
     );
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::parse();
-    let scale = args.get_f64("scale", 0.02);
-    let seed = args.get_u64("seed", 42);
-    let cap = args.get_usize("cap", 20_000);
-    let cfg = ClusterConfig::with_workers(args.get_usize("workers", 64));
+    let scale = args.get_f64("scale", 0.02)?;
+    let seed = args.get_u64("seed", 42)?;
+    let cap = args.get_usize("cap", 20_000)?;
+    let cfg = ClusterConfig::with_workers(args.get_usize("workers", 64)?);
 
     eprintln!("building corpus at scale {scale}…");
     let store = LogStore::build_corpus(scale, seed, &cfg)?;
@@ -100,18 +101,19 @@ fn main() -> anyhow::Result<()> {
         let mut last = 0.0;
         for step in 0..200 {
             let lo = (step * batch) % (train.len().saturating_sub(batch).max(1));
-            let xs: Vec<Vec<f64>> = (lo..lo + batch).map(|i| train.x[i % train.len()].clone()).collect();
+            let xs: Vec<Vec<f64>> =
+                (lo..lo + batch).map(|i| train.x[i % train.len()].clone()).collect();
             let ys: Vec<f64> = (lo..lo + batch).map(|i| y[i % train.len()]).collect();
             last = gps_select::runtime::mlp::train_step(&rt, &mut model, &xs, &ys)?;
             first.get_or_insert(last);
         }
         println!(
-            "\nPJRT mlp_train_step: 200 AOT-compiled SGD steps, loss {:.4} → {:.4} ✓",
+            "\nruntime mlp_train_step: 200 artifact-shaped SGD steps, loss {:.4} → {:.4} ✓",
             first.unwrap(),
             last
         );
     } else {
-        println!("\nPJRT train-step demo skipped (run `make artifacts`)");
+        println!("\nruntime train-step demo skipped (run `make artifacts`)");
     }
     Ok(())
 }

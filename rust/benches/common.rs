@@ -2,8 +2,10 @@
 //! harness is `gps_select::util::benchkit`).
 //!
 //! Scale/seed come from `GPS_BENCH_SCALE` / `GPS_BENCH_SEED`; the
-//! default keeps each `cargo bench` target under a minute on one core
-//! while preserving the paper's qualitative shapes.
+//! default keeps each `cargo bench` target under a minute while
+//! preserving the paper's qualitative shapes. Corpus construction
+//! inside the pipeline is parallel; pin `GPS_THREADS=1` for
+//! single-core-comparable numbers.
 
 #![allow(dead_code)]
 

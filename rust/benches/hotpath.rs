@@ -1,12 +1,14 @@
 //! Hot-path micro-benchmarks (the §Perf L3 targets): partitioners, the
-//! GAS superstep loop, GBDT training/inference, the analyzer, and the
-//! native-vs-PJRT comparison for the AOT artifacts.
+//! GAS superstep loop, the parallel corpus builder (serial vs threaded
+//! with the shared partition cache), GBDT training/inference, the
+//! analyzer, and the artifact-shaped runtime paths.
 
 #[path = "common.rs"]
 mod common;
 
 use gps_select::algorithms::Algorithm;
 use gps_select::analyzer::analyze;
+use gps_select::dataset::logs::LogStore;
 use gps_select::engine::cost::ClusterConfig;
 use gps_select::graph::gen::chung_lu;
 use gps_select::ml::gbdt::{Gbdt, GbdtParams};
@@ -50,6 +52,24 @@ fn main() {
         black_box(analyze(Algorithm::Pr.pseudo_code()).unwrap())
     });
 
+    // corpus construction: the (12 × 8 × 11) task grid, serial vs the
+    // scoped worker pool with the shared (graph, strategy) partition
+    // cache — the GPS_THREADS speedup headline
+    let corpus_bench = Bench::new(0, 3);
+    let cfg64 = ClusterConfig::with_workers(64);
+    let corpus_scale = common::bench_scale().min(0.004);
+    let seed = common::bench_seed();
+    corpus_bench.run("corpus/build/1-thread", || {
+        black_box(LogStore::build_corpus_parallel(corpus_scale, seed, &cfg64, 1).unwrap())
+    });
+    for threads in [2usize, 4] {
+        corpus_bench.run(&format!("corpus/build/{threads}-threads"), || {
+            black_box(
+                LogStore::build_corpus_parallel(corpus_scale, seed, &cfg64, threads).unwrap(),
+            )
+        });
+    }
+
     // moments: native power sums over 1M doubles
     let xs: Vec<f64> = (0..1_000_000).map(|i| ((i * 31 + 7) % 1000) as f64).collect();
     bench.run("moments/native/1M", || black_box(PowerSums::of(&xs)));
@@ -69,25 +89,27 @@ fn main() {
     let batch: Vec<Vec<f64>> = train.x[..11].to_vec();
     bench.run("gbdt/predict-native/11-rows", || black_box(model.predict_batch(&batch)));
 
-    // PJRT artifact paths (skipped when artifacts are absent)
+    // artifact-shaped runtime paths (skipped when artifacts are absent)
     match gps_select::runtime::Runtime::try_default() {
         Some(rt) => {
-            let rt = std::rc::Rc::new(rt);
-            bench.run("moments/pjrt/64k-chunk", || {
+            bench.run("moments/artifact-chunked", || {
                 black_box(
-                    gps_select::runtime::moments::power_sums(&rt, &xs[..rt.manifest.moments_n])
-                        .unwrap(),
+                    gps_select::runtime::moments::power_sums(
+                        &rt,
+                        &xs[..rt.manifest.moments_n.min(xs.len())],
+                    )
+                    .unwrap(),
                 )
             });
-            match gps_select::runtime::gbdt::PjrtForest::new(rt.clone(), &model) {
+            match gps_select::runtime::gbdt::ArtifactForest::new(&rt, &model) {
                 Ok(forest) => {
-                    bench.run("gbdt/predict-pjrt/11-rows", || {
+                    bench.run("gbdt/predict-artifact/11-rows", || {
                         black_box(forest.predict_rows(&batch))
                     });
                 }
-                Err(e) => eprintln!("gbdt pjrt bench skipped: {e}"),
+                Err(e) => eprintln!("gbdt artifact bench skipped: {e}"),
             }
         }
-        None => eprintln!("PJRT benches skipped (run `make artifacts`)"),
+        None => eprintln!("runtime benches skipped (run `make artifacts`)"),
     }
 }

@@ -1,6 +1,6 @@
 //! AST and recursive-descent parser for the pseudo-code language.
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 use super::token::{lex, Token};
 

@@ -9,7 +9,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 use super::ast::{Expr, IterExpr, Item, LValue};
 use super::symbolic::{Sym, SymExpr};

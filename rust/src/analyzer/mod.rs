@@ -23,7 +23,7 @@ pub mod token;
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use symbolic::{SymEnv, SymExpr};
 

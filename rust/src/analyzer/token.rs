@@ -5,7 +5,7 @@
 //! member access, calls, arithmetic and comparison operators, `//`
 //! comments, numeric and string literals.
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, err, Result};
 
 /// A lexical token.
 #[derive(Clone, Debug, PartialEq)]
@@ -93,9 +93,9 @@ pub fn lex(src: &str) -> Result<Vec<Token>> {
                     i += 1;
                 }
                 let text: String = b[start..i].iter().collect();
-                out.push(Token::Number(text.parse().map_err(|_| {
-                    anyhow::anyhow!("bad number literal {text:?}")
-                })?));
+                out.push(Token::Number(
+                    text.parse().map_err(|_| err!("bad number literal {text:?}"))?,
+                ));
             }
             c if c.is_ascii_alphabetic() || c == '_' => {
                 let start = i;

@@ -2,19 +2,27 @@
 //!
 //! One record per (graph, algorithm, strategy) task: the extracted
 //! features plus the engine-measured execution time. The store builds
-//! the corpus by actually running every task on the engine, and can
+//! the corpus by actually running every task on the engine — in
+//! parallel over the full (dataset × algorithm × strategy) grid, with a
+//! shared [`PartitionCache`] so each `(graph, strategy)` pair is
+//! partitioned exactly once and reused by all algorithms — and can
 //! persist to a simple CSV for reuse across binaries.
+//!
+//! Results are collected in deterministic task order (graph-major, then
+//! strategy, then algorithm — the historical serial order), so the logs
+//! are bit-identical regardless of thread count.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
 use crate::algorithms::Algorithm;
+use crate::analyzer::AlgoCounts;
 use crate::engine::cost::ClusterConfig;
 use crate::features::{DataFeatures, TaskFeatures};
 use crate::graph::Graph;
-use crate::partition::Strategy;
+use crate::partition::{PartitionCache, Partitioning, Strategy};
+use crate::util::error::{bail, Context, Result};
+use crate::util::pool;
 
 /// One execution log record.
 #[derive(Clone, Debug)]
@@ -39,6 +47,36 @@ pub struct LogStore {
     pub graph_features: BTreeMap<String, DataFeatures>,
 }
 
+/// Execute one (graph, algorithm, strategy) task on the engine and
+/// record it. `data` and `counts` are the per-graph / per-algorithm
+/// feature halves, precomputed once by the callers so the hot loop does
+/// no redundant graph sweeps or pseudo-code parses.
+fn run_task(
+    g: &Graph,
+    data: DataFeatures,
+    counts: &AlgoCounts,
+    a: Algorithm,
+    s: Strategy,
+    p: &Partitioning,
+    cfg: &ClusterConfig,
+) -> ExecutionLog {
+    let features = TaskFeatures::from_parts(data, counts);
+    let outcome = a.simulate(g, p, cfg);
+    ExecutionLog {
+        graph: g.name.clone(),
+        algorithm: a.name().to_string(),
+        strategy: s,
+        features,
+        time: outcome.sim.total,
+    }
+}
+
+/// Parse every algorithm's pseudo-code once (the counts are reused for
+/// each strategy run of that algorithm).
+fn algo_counts(algorithms: &[Algorithm]) -> Result<Vec<AlgoCounts>> {
+    algorithms.iter().map(|a| crate::analyzer::analyze(a.pseudo_code())).collect()
+}
+
 impl LogStore {
     /// Run `algorithms × strategies` on one graph and append the logs.
     pub fn record_graph(
@@ -50,18 +88,11 @@ impl LogStore {
     ) -> Result<()> {
         let data = DataFeatures::of(g);
         self.graph_features.insert(g.name.clone(), data);
+        let counts = algo_counts(algorithms)?;
         for s in strategies {
             let p = s.partition(g, cfg.num_workers);
-            for a in algorithms {
-                let features = TaskFeatures::extract(g, a.pseudo_code())?;
-                let outcome = a.simulate(g, &p, cfg);
-                self.logs.push(ExecutionLog {
-                    graph: g.name.clone(),
-                    algorithm: a.name().to_string(),
-                    strategy: *s,
-                    features,
-                    time: outcome.sim.total,
-                });
+            for (a, c) in algorithms.iter().zip(&counts) {
+                self.logs.push(run_task(g, data, c, *a, *s, &p, cfg));
             }
         }
         Ok(())
@@ -70,13 +101,65 @@ impl LogStore {
     /// Build the full corpus: every dataset at `scale`, every algorithm,
     /// the 11-strategy inventory (the paper's 12 × 8 × 11 = 1056 runs,
     /// of which 528 over training graphs × training algorithms feed the
-    /// augmentation).
+    /// augmentation). Uses the `GPS_THREADS` default; see
+    /// [`LogStore::build_corpus_parallel`] for an explicit thread count.
     pub fn build_corpus(scale: f64, seed: u64, cfg: &ClusterConfig) -> Result<Self> {
-        let mut store = LogStore::default();
+        Self::build_corpus_parallel(scale, seed, cfg, 0)
+    }
+
+    /// Parallel corpus build over the (dataset × algorithm × strategy)
+    /// grid, in three stages on a scoped worker pool:
+    ///
+    /// 1. generate every dataset (and its data features) concurrently;
+    /// 2. pre-warm a shared [`PartitionCache`] over the (graph,
+    ///    strategy) grid, so each pair is partitioned **exactly once**;
+    /// 3. simulate every (graph, strategy, algorithm) task concurrently,
+    ///    each reusing its cached `Arc<Partitioning>`.
+    ///
+    /// Every task is a pure function of its grid index, and results are
+    /// collected in grid order, so the returned store is bit-identical
+    /// for any thread count. `threads == 0` means the `GPS_THREADS`
+    /// default ([`pool::resolve_threads`]).
+    pub fn build_corpus_parallel(
+        scale: f64,
+        seed: u64,
+        cfg: &ClusterConfig,
+        threads: usize,
+    ) -> Result<Self> {
+        let threads = pool::resolve_threads(threads);
         let strategies = Strategy::inventory();
-        for spec in crate::graph::datasets::CORPUS {
-            let g = spec.build(scale, seed);
-            store.record_graph(&g, &Algorithm::all(), &strategies, cfg)?;
+        let algorithms = Algorithm::all();
+        let counts = algo_counts(&algorithms)?;
+        let corpus = crate::graph::datasets::CORPUS;
+
+        // Stage 1: dataset generation + data features, one task per graph.
+        let built: Vec<(Graph, DataFeatures)> = pool::parallel_map(threads, corpus.len(), |i| {
+            let g = corpus[i].build(scale, seed);
+            let data = DataFeatures::of(&g);
+            (g, data)
+        });
+
+        // Stage 2: partition each (graph, strategy) pair exactly once.
+        let cache = PartitionCache::new(cfg.num_workers);
+        pool::parallel_map(threads, built.len() * strategies.len(), |i| {
+            let (g, _) = &built[i / strategies.len()];
+            cache.get_or_partition(g, strategies[i % strategies.len()]);
+        });
+
+        // Stage 3: the full task grid; every partition lookup is a hit.
+        let per_graph = strategies.len() * algorithms.len();
+        let logs = pool::parallel_map(threads, built.len() * per_graph, |i| {
+            let (g, data) = &built[i / per_graph];
+            let rest = i % per_graph;
+            let s = strategies[rest / algorithms.len()];
+            let a = algorithms[rest % algorithms.len()];
+            let p = cache.get_or_partition(g, s);
+            run_task(g, *data, &counts[rest % algorithms.len()], a, s, &p, cfg)
+        });
+
+        let mut store = LogStore { logs, ..Default::default() };
+        for (g, data) in &built {
+            store.graph_features.insert(g.name.clone(), *data);
         }
         Ok(store)
     }
@@ -200,5 +283,25 @@ mod tests {
             assert_eq!(a.features.algo, b.features.algo);
         }
         std::fs::remove_file(&path).unwrap();
+    }
+
+    /// The parallel builder keeps the historical serial log order:
+    /// graph-major (CORPUS order), then strategy, then algorithm.
+    #[test]
+    fn parallel_corpus_preserves_grid_order() {
+        let cfg = ClusterConfig::with_workers(4);
+        let store = LogStore::build_corpus_parallel(0.001, 3, &cfg, 2).unwrap();
+        let strategies = Strategy::inventory();
+        let algorithms = Algorithm::all();
+        let per_graph = strategies.len() * algorithms.len();
+        assert_eq!(store.logs.len(), crate::graph::datasets::CORPUS.len() * per_graph);
+        for (i, log) in store.logs.iter().enumerate() {
+            let spec = &crate::graph::datasets::CORPUS[i / per_graph];
+            let rest = i % per_graph;
+            assert_eq!(log.graph, spec.name);
+            assert_eq!(log.strategy, strategies[rest / algorithms.len()]);
+            assert_eq!(log.algorithm, algorithms[rest % algorithms.len()].name());
+        }
+        assert_eq!(store.graph_features.len(), crate::graph::datasets::CORPUS.len());
     }
 }

@@ -7,6 +7,14 @@
 //! [`RunResult::sim`] time is the execution-log label the ETRM learns
 //! to predict; it depends on the partitioning through load balance,
 //! replication factor and locality — the channels §1 identifies.
+//!
+//! [`run`] is a pure function of its arguments with no global state:
+//! all inputs are `Sync` plain data and all mutable state is local to
+//! the call. The parallel corpus builder
+//! ([`crate::dataset::logs::LogStore::build_corpus_parallel`]) relies on
+//! exactly this to execute many runs concurrently against shared
+//! `Arc<Partitioning>` values while staying bit-deterministic; the
+//! `engine_inputs_are_shareable_across_threads` test pins the contract.
 
 pub mod cost;
 pub mod gas;
@@ -416,5 +424,15 @@ mod tests {
         let g = small_graph();
         let p = Strategy::Random.partition(&g, 4);
         run(&g, &p, &InDegreeProg, &ClusterConfig::with_workers(8));
+    }
+
+    /// The concurrency contract the parallel corpus builder depends on:
+    /// every engine input can be shared across worker threads.
+    #[test]
+    fn engine_inputs_are_shareable_across_threads() {
+        fn check<T: Send + Sync>() {}
+        check::<Graph>();
+        check::<Partitioning>();
+        check::<ClusterConfig>();
     }
 }

@@ -2,8 +2,6 @@
 //! experiment index). Each returns the rendered text so benches,
 //! examples and the CLI share the exact same row generators.
 
-use anyhow::{bail, Result};
-
 use crate::algorithms::Algorithm;
 use crate::dataset::split::TestSet;
 use crate::engine::cost::ClusterConfig;
@@ -11,6 +9,7 @@ use crate::etrm::EtrmBackend;
 use crate::features::encoding::{table3_group, table4_group};
 use crate::graph::datasets::DatasetSpec;
 use crate::partition::Strategy;
+use crate::util::error::{bail, Result};
 use crate::util::stats::BoxPlot;
 use crate::util::table::{f, Table};
 

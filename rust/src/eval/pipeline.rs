@@ -8,9 +8,8 @@
 //! 4. evaluate the 96 test tasks (§5.4): select, rank, score, and
 //!    measure the selection cost for the §5.7 benefit-cost ratio.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
-
-use anyhow::Result;
 
 use crate::algorithms::Algorithm;
 use crate::analyzer::analyze;
@@ -21,8 +20,11 @@ use crate::engine::cost::ClusterConfig;
 use crate::etrm::scores::{rank_of_selected, TaskScores};
 use crate::etrm::Etrm;
 use crate::features::{DataFeatures, TaskFeatures};
+use crate::graph::Graph;
 use crate::ml::gbdt::GbdtParams;
 use crate::partition::Strategy;
+use crate::util::error::Result;
+use crate::util::pool;
 use crate::util::rng::Rng;
 
 /// Pipeline configuration.
@@ -34,6 +36,10 @@ pub struct PipelineConfig {
     pub seed: u64,
     /// Cluster size (the paper: 64).
     pub workers: usize,
+    /// Corpus-build worker threads; 0 = the `GPS_THREADS` env default
+    /// (falling back to the machine's available parallelism). Results
+    /// are bit-identical for any value.
+    pub threads: usize,
     /// Cap on synthetic tuples (None = the full ~0.43 M? at r 2..9 the
     /// full product is 4998 × 8 × 11 = 439 824).
     pub augment_cap: Option<usize>,
@@ -50,6 +56,7 @@ impl Default for PipelineConfig {
             scale: 1.0 / 32.0,
             seed: 42,
             workers: 64,
+            threads: 0,
             augment_cap: Some(120_000),
             r_lo: 2,
             r_hi: 9,
@@ -133,8 +140,12 @@ pub fn run_with_progress(
     mut progress: impl FnMut(&str),
 ) -> Result<Evaluation> {
     let cfg = ClusterConfig::with_workers(config.workers);
-    progress("building execution-log corpus (12 graphs × 8 algorithms × 11 strategies)");
-    let store = LogStore::build_corpus(config.scale, config.seed, &cfg)?;
+    let threads = pool::resolve_threads(config.threads);
+    progress(&format!(
+        "building execution-log corpus (12 graphs × 8 algorithms × 11 strategies, \
+         {threads} threads)"
+    ));
+    let store = LogStore::build_corpus_parallel(config.scale, config.seed, &cfg, threads)?;
 
     progress("augmenting synthetic training set");
     let synthetic = augment(&store, config.r_lo..=config.r_hi, config.augment_cap, config.seed);
@@ -144,13 +155,17 @@ pub fn run_with_progress(
     let etrm = Etrm::train_gbdt(&synthetic, config.gbdt);
 
     progress("evaluating 96 test tasks");
+    // each distinct graph is built once and shared by its 8 tasks
+    let mut graphs: BTreeMap<&'static str, Graph> = BTreeMap::new();
     let mut tasks = Vec::with_capacity(96);
     for t in test_split() {
         // measured feature-extraction cost (the §5.7 "cost")
-        let spec = crate::graph::datasets::DatasetSpec::by_name(t.graph).unwrap();
-        let g = spec.build(config.scale, config.seed);
+        let g = graphs.entry(t.graph).or_insert_with(|| {
+            let spec = crate::graph::datasets::DatasetSpec::by_name(t.graph).unwrap();
+            spec.build(config.scale, config.seed)
+        });
         let t0 = Instant::now();
-        let data = DataFeatures::of(&g);
+        let data = DataFeatures::of(g);
         let cost_data = t0.elapsed().as_secs_f64();
         let t0 = Instant::now();
         let counts = analyze(t.algorithm.pseudo_code())?;

@@ -1,8 +1,7 @@
 //! Task features: data features ⊕ algorithm features (Fig 2 steps 1-2).
 
-use anyhow::Result;
-
 use crate::analyzer::{analyze, AlgoCounts};
+use crate::util::error::Result;
 use crate::graph::Graph;
 
 use super::data::DataFeatures;

@@ -6,7 +6,7 @@ use std::collections::HashMap;
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use super::{Edge, Graph};
 

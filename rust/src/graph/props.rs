@@ -9,6 +9,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::util::error::{err, Result};
+
 use super::VertexId;
 
 /// Named dense vertex properties.
@@ -40,11 +42,17 @@ impl VertexProps {
         self.maps.get(key).map(|m| m[v as usize])
     }
 
-    /// Write a single value (property must exist).
-    pub fn set(&mut self, key: &str, v: VertexId, value: f64) {
-        self.maps
-            .get_mut(key)
-            .unwrap_or_else(|| panic!("unknown property {key:?}"))[v as usize] = value;
+    /// Write a single value; errors when the property does not exist
+    /// (property names arrive from user-facing APIs, so this is a
+    /// recoverable condition, not a programmer bug).
+    pub fn set(&mut self, key: &str, v: VertexId, value: f64) -> Result<()> {
+        match self.maps.get_mut(key) {
+            Some(column) => {
+                column[v as usize] = value;
+                Ok(())
+            }
+            None => Err(err!("unknown property {key:?}")),
+        }
     }
 
     /// Borrow the whole column.
@@ -67,7 +75,7 @@ mod tests {
         let mut p = VertexProps::new(3);
         p.insert("rank", 1.0);
         assert_eq!(p.get("rank", 2), Some(1.0));
-        p.set("rank", 2, 0.5);
+        p.set("rank", 2, 0.5).unwrap();
         assert_eq!(p.get("rank", 2), Some(0.5));
         assert_eq!(p.get("missing", 0), None);
     }
@@ -89,8 +97,8 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "unknown property")]
-    fn set_unknown_panics() {
-        VertexProps::new(1).set("nope", 0, 1.0);
+    fn set_unknown_errors() {
+        let e = VertexProps::new(1).set("nope", 0, 1.0).unwrap_err();
+        assert!(e.to_string().contains("unknown property"), "{e}");
     }
 }

@@ -4,15 +4,19 @@
 //! Graph Partitioning Strategy Using the Characteristics of Graph Data and
 //! Algorithm"* (Park, Lee, Bui — AIDB'21).
 //!
-//! The library is organised bottom-up:
+//! The crate builds fully offline with **zero** external dependencies,
+//! and is organised bottom-up:
 //!
-//! * [`util`] — deterministic RNG, statistics helpers, CLI parsing, a tiny
-//!   bench harness and table formatting (no external deps beyond `xla`).
+//! * [`util`] — deterministic RNG, statistics helpers, CLI parsing, a
+//!   std-only error type, a scoped worker pool (`GPS_THREADS`), a tiny
+//!   bench harness and table formatting.
 //! * [`graph`] — edge-list/CSR graph representation, property maps, the
 //!   synthetic generators standing in for the paper's 12 SNAP datasets.
 //! * [`partition`] — the twelve partitioning strategies of Table 2
 //!   (1DSrc, 1DDst, Random, Canonical, 2D, Hybrid, Oblivious, HDRF×4,
-//!   Ginger) plus partition-quality metrics.
+//!   Ginger), partition-quality metrics, and the shared
+//!   [`partition::PartitionCache`] the parallel corpus builder reuses
+//!   across algorithms.
 //! * [`engine`] — the distributed GAS (Gather-Apply-Scatter) engine with a
 //!   deterministic cluster cost model (the paper's 4×16-worker testbed).
 //! * [`algorithms`] — the eight graph algorithms of §5.3 implemented as
@@ -21,14 +25,16 @@
 //!   symbolic loop analysis) replacing the paper's JavaCC tool.
 //! * [`features`] — data features (Table 3) + algorithm features (Table 4)
 //!   and the model input encoding of Fig 5.
-//! * [`dataset`] — execution-log store, synthetic augmentation
-//!   (combinations-with-replacement, Eq. 3) and the A/B/C/D test split.
+//! * [`dataset`] — execution-log store with the parallel
+//!   (dataset × algorithm × strategy) corpus builder, synthetic
+//!   augmentation (combinations-with-replacement, Eq. 3) and the
+//!   A/B/C/D test split.
 //! * [`ml`] — from-scratch histogram GBDT (the paper's XGBoost, Eq. 4-16),
 //!   linear-regression and MLP baselines, regression metrics.
 //! * [`etrm`] — the Execution Time Regression Model wrapper + strategy
 //!   selector + the Score_best/worst/avg metrics (Eq. 19-21).
-//! * [`runtime`] — PJRT bridge loading the AOT artifacts produced by
-//!   `python/compile/aot.py` (HLO text), with pure-Rust fallbacks.
+//! * [`runtime`] — artifact-manifest runtime executing the AOT kernel
+//!   shapes (`python/compile/aot.py`) through their pure-Rust twins.
 //! * [`eval`] — drivers regenerating every table and figure of §5.
 
 pub mod algorithms;

@@ -15,12 +15,14 @@
 //! * `analyze --file pseudo/pr.gps` — symbolic operation counts of a
 //!   pseudo-code file (Listing 2).
 //! * `logs --out logs.csv` — build and save the execution-log corpus.
-//! * `runtime-check` — load the PJRT artifacts and smoke-test them.
+//! * `runtime-check` — load the AOT artifact manifest and smoke-test the
+//!   runtime kernels.
 //!
 //! Common flags: `--scale` (default 1/32 of the paper's dataset sizes),
-//! `--seed`, `--workers`.
+//! `--seed`, `--workers`, `--threads` (corpus-build parallelism;
+//! defaults to the `GPS_THREADS` env var, then to the machine's
+//! available cores).
 
-use anyhow::{bail, Context, Result};
 use gps_select::algorithms::Algorithm;
 use gps_select::analyzer;
 use gps_select::dataset::logs::LogStore;
@@ -32,42 +34,47 @@ use gps_select::ml::gbdt::GbdtParams;
 use gps_select::partition::metrics::PartitionMetrics;
 use gps_select::partition::Strategy;
 use gps_select::util::cli::Args;
+use gps_select::util::error::{bail, ensure, Context, Result};
 
 fn main() {
     let args = Args::parse();
     if let Err(e) = dispatch(&args) {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
 
-fn pipeline_config(args: &Args) -> pipeline::PipelineConfig {
+fn pipeline_config(args: &Args) -> Result<pipeline::PipelineConfig> {
     let default = pipeline::PipelineConfig::default();
-    pipeline::PipelineConfig {
-        scale: args.get_f64("scale", default.scale),
-        seed: args.get_u64("seed", default.seed),
-        workers: args.get_usize("workers", default.workers),
+    Ok(pipeline::PipelineConfig {
+        scale: args.get_f64("scale", default.scale)?,
+        seed: args.get_u64("seed", default.seed)?,
+        workers: args.get_usize("workers", default.workers)?,
+        threads: args.get_usize("threads", default.threads)?,
         augment_cap: match args.get("cap") {
             Some("none") => None,
-            Some(v) => Some(v.parse().expect("--cap expects an integer or 'none'")),
+            Some(v) => Some(
+                v.parse()
+                    .with_context(|| format!("--cap expects an integer or 'none', got {v:?}"))?,
+            ),
             None => default.augment_cap,
         },
-        r_lo: args.get_usize("r-lo", default.r_lo),
-        r_hi: args.get_usize("r-hi", default.r_hi),
+        r_lo: args.get_usize("r-lo", default.r_lo)?,
+        r_hi: args.get_usize("r-hi", default.r_hi)?,
         gbdt: GbdtParams {
-            n_estimators: args.get_usize("trees", default.gbdt.n_estimators),
-            max_depth: args.get_usize("depth", default.gbdt.max_depth),
+            n_estimators: args.get_usize("trees", default.gbdt.n_estimators)?,
+            max_depth: args.get_usize("depth", default.gbdt.max_depth)?,
             ..default.gbdt
         },
-    }
+    })
 }
 
 fn build_graph(args: &Args) -> Result<gps_select::graph::Graph> {
     let name = args.get("graph").context("--graph <name> required")?;
     let spec = DatasetSpec::by_name(name)
         .with_context(|| format!("unknown graph {name:?} (see Table 5 aliases)"))?;
-    let scale = args.get_f64("scale", pipeline::PipelineConfig::default().scale);
-    Ok(spec.build(scale, args.get_u64("seed", 42)))
+    let scale = args.get_f64("scale", pipeline::PipelineConfig::default().scale)?;
+    Ok(spec.build(scale, args.get_u64("seed", 42)?))
 }
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -83,7 +90,8 @@ fn dispatch(args: &Args) -> Result<()> {
         Some(other) => bail!("unknown subcommand {other:?} (see the README)"),
         None => {
             println!(
-                "usage: repro <figures|pipeline|run|partition|features|analyze|logs|runtime-check> [flags]"
+                "usage: repro <figures|pipeline|run|partition|features|analyze|logs|\
+                 runtime-check> [flags]"
             );
             Ok(())
         }
@@ -92,7 +100,7 @@ fn dispatch(args: &Args) -> Result<()> {
 
 fn cmd_figures(args: &Args) -> Result<()> {
     let id = args.get_or("id", "all");
-    let config = pipeline_config(args);
+    let config = pipeline_config(args)?;
     // fig4 and table2 do not need the trained pipeline
     if id == "table2" {
         println!("{}", figures::table2());
@@ -119,9 +127,10 @@ fn cmd_figures(args: &Args) -> Result<()> {
         })
     };
     if id == "all" {
-        for id in
-            ["fig1", "fig4", "table2", "table3", "table4", "fig6", "fig7", "table6", "fig8", "table7"]
-        {
+        for id in [
+            "fig1", "fig4", "table2", "table3", "table4", "fig6", "fig7", "table6", "fig8",
+            "table7",
+        ] {
             println!("{}\n", render(id, &eval)?);
         }
     } else {
@@ -131,7 +140,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
 }
 
 fn cmd_pipeline(args: &Args) -> Result<()> {
-    let config = pipeline_config(args);
+    let config = pipeline_config(args)?;
     let eval = pipeline::run_with_progress(config, |stage| eprintln!("[pipeline] {stage}"))?;
     let all: Vec<&pipeline::TaskEval> = eval.tasks.iter().collect();
     let (best, worst, avg) = pipeline::Evaluation::mean_scores(&all);
@@ -159,7 +168,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         .context("unknown --algorithm (AID AOD PR GC APCN TC CC RW)")?;
     let strategy = Strategy::by_name(args.get_or("strategy", "Random"))
         .context("unknown --strategy (see table2)")?;
-    let workers = args.get_usize("workers", 64);
+    let workers = args.get_usize("workers", 64)?;
     let cfg = ClusterConfig::with_workers(workers);
     let p = strategy.partition(&g, workers);
     let outcome = algo.simulate(&g, &p, &cfg);
@@ -186,7 +195,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 fn cmd_partition(args: &Args) -> Result<()> {
     let g = build_graph(args)?;
-    let workers = args.get_usize("workers", 64);
+    let workers = args.get_usize("workers", 64)?;
     println!(
         "partition metrics for {} (|V|={}, |E|={}) on {workers} workers",
         g.name,
@@ -254,7 +263,7 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     }
     if let Some(gname) = args.get("graph") {
         let spec = DatasetSpec::by_name(gname).context("unknown graph")?;
-        let g = spec.build(args.get_f64("scale", 1.0 / 32.0), args.get_u64("seed", 42));
+        let g = spec.build(args.get_f64("scale", 1.0 / 32.0)?, args.get_u64("seed", 42)?);
         let env = DataFeatures::of(&g).sym_env();
         println!("evaluated against {gname}:");
         for (k, v) in counts.evaluate(&env) {
@@ -267,23 +276,24 @@ fn cmd_analyze(args: &Args) -> Result<()> {
 }
 
 fn cmd_logs(args: &Args) -> Result<()> {
-    let config = pipeline_config(args);
+    let config = pipeline_config(args)?;
     let cfg = ClusterConfig::with_workers(config.workers);
-    let store = LogStore::build_corpus(config.scale, config.seed, &cfg)?;
+    let threads = gps_select::util::pool::resolve_threads(config.threads);
+    let store = LogStore::build_corpus_parallel(config.scale, config.seed, &cfg, threads)?;
     let path = args.get_or("out", "logs.csv");
     store.save_csv(std::path::Path::new(path))?;
-    println!("wrote {} execution logs to {path}", store.logs.len());
+    println!("wrote {} execution logs to {path} ({threads} threads)", store.logs.len());
     Ok(())
 }
 
 fn cmd_runtime_check() -> Result<()> {
     let rt = gps_select::runtime::Runtime::load(&gps_select::runtime::Runtime::default_dir())?;
-    println!("PJRT platform : {}", rt.platform());
+    println!("runtime       : {}", rt.platform());
     println!("manifest      : {:?}", rt.manifest);
     let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
     let sums = gps_select::runtime::moments::power_sums(&rt, &xs)?;
     println!("moments check : Σx = {} (expect 5050)", sums.s1);
-    anyhow::ensure!(sums.s1 == 5050.0, "moments artifact mismatch");
+    ensure!(sums.s1 == 5050.0, "moments kernel mismatch");
     println!("runtime OK");
     Ok(())
 }

@@ -9,7 +9,7 @@
 //! the compiled HLO, one artifact serves any trained model up to the
 //! padded capacity.
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 use super::{Gbdt, Tree};
 

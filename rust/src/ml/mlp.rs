@@ -62,7 +62,10 @@ impl Mlp {
         x.iter().zip(&self.norm).map(|(v, (m, s))| (v - m) * s).collect()
     }
 
-    fn forward(&self, xn: &[f64]) -> (Vec<f64>, f64) {
+    /// Raw forward pass on an already-normalised row (also the
+    /// semantics of the AOT `mlp_predict` artifact, which the runtime
+    /// bridge reuses directly).
+    pub(crate) fn forward(&self, xn: &[f64]) -> (Vec<f64>, f64) {
         let mut h = vec![0.0; self.params.hidden];
         for (j, hj) in h.iter_mut().enumerate() {
             let mut acc = self.b1[j];

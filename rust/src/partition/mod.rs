@@ -30,6 +30,9 @@ pub mod oned;
 pub mod random;
 pub mod twod;
 
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
 use crate::graph::{Graph, VertexId};
 use crate::util::rng::hash_u64;
 
@@ -202,6 +205,60 @@ pub(crate) fn worker_of_hash(h: u64, num_workers: usize) -> u16 {
     (h % num_workers as u64) as u16
 }
 
+/// Thread-safe cache of partitioning results at a fixed worker count,
+/// keyed by `(graph name, PSID)`.
+///
+/// Corpus construction runs every algorithm over every `(graph,
+/// strategy)` pair; partitioning is the expensive, algorithm-independent
+/// half of that work, so each pair is partitioned once and the
+/// [`Partitioning`] shared behind an [`Arc`] with every task that needs
+/// it. Graph names must be unique within one cache (true for the corpus
+/// and for any single-graph use).
+///
+/// Strategies are deterministic, so if two threads race on the same
+/// uncached key both compute bit-identical results; the first insert
+/// wins and later callers share it. Callers that must guarantee
+/// exactly-once computation (e.g. the corpus builder) pre-warm the
+/// cache over the `(graph, strategy)` grid before fanning out.
+pub struct PartitionCache {
+    num_workers: usize,
+    slots: Mutex<BTreeMap<(String, StrategyId), Arc<Partitioning>>>,
+}
+
+impl PartitionCache {
+    /// Create an empty cache for `num_workers`-way partitionings.
+    pub fn new(num_workers: usize) -> Self {
+        PartitionCache { num_workers, slots: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The worker count every cached partitioning targets.
+    pub fn num_workers(&self) -> usize {
+        self.num_workers
+    }
+
+    /// The cached partitioning of `g` under `s`, computing it on first
+    /// use. The lock is *not* held while partitioning, so independent
+    /// keys proceed in parallel.
+    pub fn get_or_partition(&self, g: &Graph, s: Strategy) -> Arc<Partitioning> {
+        let key = (g.name.clone(), s.psid());
+        if let Some(p) = self.slots.lock().unwrap().get(&key) {
+            return Arc::clone(p);
+        }
+        let fresh = Arc::new(s.partition(g, self.num_workers));
+        Arc::clone(self.slots.lock().unwrap().entry(key).or_insert(fresh))
+    }
+
+    /// Number of distinct `(graph, strategy)` pairs cached so far.
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    /// True when nothing has been partitioned yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -266,5 +323,31 @@ mod tests {
             let b = s.partition(&g, 4).edge_worker;
             assert_eq!(a, b, "{} must be deterministic", s.name());
         }
+    }
+
+    /// The cache must hand back exactly what a fresh partition call
+    /// produces — edge assignment, masters and derived metrics — for
+    /// every inventory strategy, and share one allocation per key.
+    #[test]
+    fn cache_matches_fresh_partition() {
+        let mut rng = crate::util::rng::Rng::new(35);
+        let g = crate::graph::gen::erdos::generate("cache-t", 150, 700, true, &mut rng);
+        let cache = PartitionCache::new(8);
+        assert!(cache.is_empty());
+        for s in Strategy::inventory() {
+            let cached = cache.get_or_partition(&g, s);
+            let fresh = s.partition(&g, 8);
+            assert_eq!(cached.edge_worker, fresh.edge_worker, "{}", s.name());
+            assert_eq!(cached.master, fresh.master, "{}", s.name());
+            assert_eq!(cached.replicas, fresh.replicas, "{}", s.name());
+            let mc = metrics::PartitionMetrics::of(&g, &cached);
+            let mf = metrics::PartitionMetrics::of(&g, &fresh);
+            assert_eq!(mc.replication_factor, mf.replication_factor, "{}", s.name());
+            assert_eq!(mc.edge_balance, mf.edge_balance, "{}", s.name());
+            // the second lookup is a hit on the same shared allocation
+            assert!(Arc::ptr_eq(&cached, &cache.get_or_partition(&g, s)), "{}", s.name());
+        }
+        assert_eq!(cache.len(), Strategy::inventory().len());
+        assert_eq!(cache.num_workers(), 8);
     }
 }

@@ -1,34 +1,30 @@
-//! PJRT path for GBDT forest inference (L1 `gbdt` kernel).
+//! Runtime path for GBDT forest inference (the L1 `gbdt` kernel's
+//! fixed-shape semantics, executed natively).
 //!
-//! The compiled artifact has fixed capacity (trees × nodes × batch from
-//! the manifest); [`PjrtForest`] pads a trained [`GbdtTensors`] into
-//! that capacity once, then serves batched predictions. It implements
+//! The compiled artifact had fixed capacity (trees × nodes × batch from
+//! the manifest); [`ArtifactForest`] pads a trained model into that
+//! capacity once via [`GbdtTensors`] and serves predictions through the
+//! padded flat-tensor traversal — the exact f32-threshold,
+//! `depth`-iteration walk the compiled kernel performed. It implements
 //! [`Regressor`], so it can drive the ETRM directly
 //! (`EtrmBackend::External`).
 
-use anyhow::{ensure, Result};
-
 use crate::ml::gbdt::{Gbdt, GbdtTensors};
 use crate::ml::Regressor;
+use crate::util::error::{ensure, Result};
 
-use super::{anyhow_xla, Runtime};
+use super::Runtime;
 
-/// A forest bound to the PJRT runtime.
-pub struct PjrtForest {
-    rt: std::rc::Rc<Runtime>,
-    feature: Vec<i32>,
-    threshold: Vec<f32>,
-    left: Vec<i32>,
-    right: Vec<i32>,
-    value: Vec<f32>,
-    scal: [f32; 2],
+/// A trained forest padded into the artifact manifest's capacity.
+pub struct ArtifactForest {
+    tensors: GbdtTensors,
     log_target: bool,
     dim: usize,
 }
 
-impl PjrtForest {
+impl ArtifactForest {
     /// Pad a trained model into the artifact's capacity.
-    pub fn new(rt: std::rc::Rc<Runtime>, model: &Gbdt) -> Result<Self> {
+    pub fn new(rt: &Runtime, model: &Gbdt) -> Result<Self> {
         let m = &rt.manifest;
         ensure!(
             model.dim <= m.gbdt_features,
@@ -36,67 +32,35 @@ impl PjrtForest {
             model.dim,
             m.gbdt_features
         );
-        let t = GbdtTensors::from_model(model, Some((m.gbdt_trees, m.gbdt_nodes)))?;
+        let tensors = GbdtTensors::from_model(model, Some((m.gbdt_trees, m.gbdt_nodes)))?;
         ensure!(
-            t.depth <= m.gbdt_depth,
+            tensors.depth <= m.gbdt_depth,
             "trained depth {} exceeds artifact depth {}",
-            t.depth,
+            tensors.depth,
             m.gbdt_depth
         );
-        Ok(PjrtForest {
-            rt,
-            feature: t.feature,
-            threshold: t.threshold,
-            left: t.left,
-            right: t.right,
-            value: t.value,
-            scal: [t.base_score, t.learning_rate],
-            log_target: model.params.log_target,
-            dim: model.dim,
-        })
+        Ok(ArtifactForest { tensors, log_target: model.params.log_target, dim: model.dim })
     }
 
-    /// Predict a batch (any length; executed in artifact-batch chunks).
+    /// Predict a batch of rows through the padded flat-tensor walk.
     pub fn predict_rows(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
-        let m = &self.rt.manifest;
         let mut out = Vec::with_capacity(rows.len());
-        for chunk in rows.chunks(m.gbdt_batch) {
-            let mut x = vec![0.0f32; m.gbdt_batch * m.gbdt_features];
-            for (i, row) in chunk.iter().enumerate() {
-                ensure!(row.len() == self.dim, "row dim {} != model dim {}", row.len(), self.dim);
-                for (j, &v) in row.iter().enumerate() {
-                    x[i * m.gbdt_features + j] = v as f32;
-                }
-            }
-            let inputs = [
-                xla::Literal::vec1(&x)
-                    .reshape(&[m.gbdt_batch as i64, m.gbdt_features as i64])
-                    .map_err(anyhow_xla)?,
-                xla::Literal::vec1(&self.feature),
-                xla::Literal::vec1(&self.threshold),
-                xla::Literal::vec1(&self.left),
-                xla::Literal::vec1(&self.right),
-                xla::Literal::vec1(&self.value),
-                xla::Literal::vec1(&self.scal),
-            ];
-            let result = self.rt.execute("gbdt_predict", &inputs)?;
-            let preds = result[0].to_vec::<f32>().map_err(anyhow_xla)?;
-            for &p in preds.iter().take(chunk.len()) {
-                let p = p as f64;
-                out.push(if self.log_target { p.exp() } else { p });
-            }
+        for row in rows {
+            ensure!(row.len() == self.dim, "row dim {} != model dim {}", row.len(), self.dim);
+            let p = self.tensors.predict_transformed(row);
+            out.push(if self.log_target { p.exp() } else { p });
         }
         Ok(out)
     }
 }
 
-impl Regressor for PjrtForest {
+impl Regressor for ArtifactForest {
     fn predict(&self, x: &[f64]) -> f64 {
-        self.predict_rows(&[x.to_vec()]).expect("pjrt predict")[0]
+        self.predict_rows(&[x.to_vec()]).expect("artifact predict")[0]
     }
 
     fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
-        self.predict_rows(xs).expect("pjrt predict")
+        self.predict_rows(xs).expect("artifact predict")
     }
 }
 
@@ -107,9 +71,10 @@ mod tests {
     use crate::ml::TrainSet;
     use crate::util::rng::Rng;
 
-    /// The AOT-compiled kernel must agree with the native ensemble.
+    /// The padded fixed-shape traversal must agree with the native
+    /// ensemble.
     #[test]
-    fn pjrt_matches_native_predictions() {
+    fn artifact_forest_matches_native_predictions() {
         let Some(rt) = Runtime::try_default() else {
             eprintln!("skipping: artifacts/ not built");
             return;
@@ -126,16 +91,13 @@ mod tests {
             &train,
             GbdtParams { n_estimators: 40, max_depth: 5, ..GbdtParams::fast() },
         );
-        let forest = PjrtForest::new(std::rc::Rc::new(rt), &model).unwrap();
+        let forest = ArtifactForest::new(&rt, &model).unwrap();
         let test_rows: Vec<Vec<f64>> =
             (0..37).map(|_| (0..dim).map(|_| rng.next_f64() * 4.0).collect()).collect();
         let native: Vec<f64> = test_rows.iter().map(|r| model.predict(r)).collect();
-        let pjrt = forest.predict_rows(&test_rows).unwrap();
-        for (a, b) in pjrt.iter().zip(&native) {
-            assert!(
-                (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
-                "pjrt {a} vs native {b}"
-            );
+        let padded = forest.predict_rows(&test_rows).unwrap();
+        for (a, b) in padded.iter().zip(&native) {
+            assert!((a - b).abs() <= 1e-3 * (1.0 + b.abs()), "artifact {a} vs native {b}");
         }
     }
 }

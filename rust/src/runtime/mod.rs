@@ -1,17 +1,20 @@
-//! PJRT runtime bridge: load the AOT artifacts produced by
-//! `python/compile/aot.py` (HLO text) and execute them from Rust.
+//! Native runtime bridge for the AOT artifact manifest.
 //!
-//! Python runs exactly once at build time (`make artifacts`); after
-//! that the coordinator is self-contained — every artifact is compiled
-//! by `PjRtClient::cpu()` at [`Runtime::load`] and executed with
-//! runtime inputs. Interchange is HLO **text**: the crate's
-//! xla_extension 0.5.1 rejects jax ≥0.5's 64-bit-id serialized protos,
-//! while the text parser reassigns ids (see /opt/xla-example/README.md).
+//! Historically this module compiled the HLO-text artifacts produced by
+//! `python/compile/aot.py` through a PJRT CPU client (the `xla` crate).
+//! The crate now builds fully offline with **zero** external
+//! dependencies, so the bridge executes the manifest's kernels through
+//! their pure-Rust twins instead: power-sum moments via
+//! [`crate::util::stats::PowerSums`], forest inference via the padded
+//! [`crate::ml::gbdt::GbdtTensors`] traversal (the exact fixed-shape
+//! semantics the compiled kernel implemented), and the MLP
+//! forward/train step via [`crate::ml::mlp::Mlp`].
 //!
-//! Every artifact has a pure-Rust twin elsewhere in the crate
-//! ([`crate::util::stats::PowerSums`], [`crate::ml::gbdt::GbdtTensors`],
-//! [`crate::ml::mlp::Mlp`]); tests assert the two paths agree, and
-//! callers fall back to the Rust path when `artifacts/` is absent.
+//! The manifest still gates shapes exactly like the compiled artifacts
+//! did, and `artifacts/manifest.txt` (written by `make artifacts`)
+//! remains the capability switch callers probe via
+//! [`Runtime::try_default`] — without it, callers fall back to their
+//! plain native paths.
 
 pub mod gbdt;
 pub mod mlp;
@@ -20,7 +23,7 @@ pub mod moments;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
 
 /// Static artifact shapes (mirrors `aot.py`'s manifest).
 #[derive(Clone, Copy, Debug)]
@@ -61,14 +64,11 @@ impl Manifest {
     }
 }
 
-/// The PJRT runtime: CPU client + compiled executables.
+/// The artifact runtime: the parsed manifest whose shapes gate every
+/// kernel call, executed natively.
 pub struct Runtime {
     pub manifest: Manifest,
-    client: xla::PjRtClient,
-    executables: BTreeMap<&'static str, xla::PjRtLoadedExecutable>,
 }
-
-const ARTIFACTS: &[&str] = &["moments", "gbdt_predict", "mlp_predict", "mlp_train_step"];
 
 impl Runtime {
     /// Default artifact directory (next to the workspace root).
@@ -78,7 +78,7 @@ impl Runtime {
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
     }
 
-    /// Load and compile every artifact in `dir`.
+    /// Load the artifact manifest from `dir`.
     pub fn load(dir: &Path) -> Result<Self> {
         let manifest_path = dir.join("manifest.txt");
         let manifest = Manifest::parse(
@@ -86,50 +86,19 @@ impl Runtime {
                 format!("read {} (run `make artifacts`)", manifest_path.display())
             })?,
         )?;
-        let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
-        let mut executables = BTreeMap::new();
-        for &name in ARTIFACTS {
-            let path = dir.join(format!("{name}.hlo.txt"));
-            if !path.exists() {
-                bail!("missing artifact {}", path.display());
-            }
-            let proto =
-                xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
-                    .map_err(anyhow_xla)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).map_err(anyhow_xla)?;
-            executables.insert(name, exe);
-        }
-        Ok(Runtime { manifest, client, executables })
+        Ok(Runtime { manifest })
     }
 
     /// Try the default directory; `None` (with no error) when artifacts
-    /// have not been built — callers use the pure-Rust fallback.
+    /// have not been built — callers use their plain native fallback.
     pub fn try_default() -> Option<Runtime> {
         Runtime::load(&Self::default_dir()).ok()
     }
 
     /// Backend platform name (diagnostics).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "cpu (native, offline build)".to_string()
     }
-
-    /// Execute one artifact; returns the decomposed output tuple.
-    pub(crate) fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self
-            .executables
-            .get(name)
-            .with_context(|| format!("unknown artifact {name}"))?;
-        let bufs = exe.execute::<xla::Literal>(inputs).map_err(anyhow_xla)?;
-        let lit = bufs[0][0].to_literal_sync().map_err(anyhow_xla)?;
-        // lowered with return_tuple=True → always a tuple
-        lit.to_tuple().map_err(anyhow_xla)
-    }
-}
-
-/// Adapt the xla crate's error type.
-pub(crate) fn anyhow_xla(e: xla::Error) -> anyhow::Error {
-    anyhow::anyhow!("xla: {e}")
 }
 
 #[cfg(test)]
@@ -156,8 +125,8 @@ mod tests {
             eprintln!("skipping: artifacts/ not built");
             return;
         };
-        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
-        // moments on a simple padded array
+        assert!(rt.platform().to_lowercase().contains("cpu"));
+        // moments on a simple array
         let xs = [1.0f64, 2.0, 3.0, 4.0];
         let sums = super::moments::power_sums(&rt, &xs).unwrap();
         assert_eq!(sums.n, 4.0);

@@ -1,40 +1,33 @@
-//! PJRT path for the degree-moment power sums (L1 `moments` kernel).
+//! Runtime path for the degree-moment power sums (the L1 `moments`
+//! kernel's semantics, executed natively).
 //!
-//! The artifact has a fixed chunk length `moments_n`; longer arrays are
+//! The artifact had a fixed chunk length `moments_n`; longer arrays are
 //! processed in chunks and the partial sums merged exactly (power sums
-//! are additive and zero padding is neutral).
+//! are additive and zero padding is neutral), which this path preserves
+//! so results match the compiled kernel bit-for-bit on the same chunking.
 
-use anyhow::Result;
-
+use crate::util::error::Result;
 use crate::util::stats::PowerSums;
 
-use super::{anyhow_xla, Runtime};
+use super::Runtime;
 
-/// Power sums of an arbitrary-length degree array via the AOT artifact.
+/// Power sums of an arbitrary-length degree array, chunked at the
+/// manifest's artifact length.
 pub fn power_sums(rt: &Runtime, xs: &[f64]) -> Result<PowerSums> {
-    let n = rt.manifest.moments_n;
+    let n = rt.manifest.moments_n.max(1);
     let mut total = PowerSums::default();
     for chunk in xs.chunks(n) {
-        let mut padded = vec![0.0f64; n];
-        padded[..chunk.len()].copy_from_slice(chunk);
-        let lit = xla::Literal::vec1(&padded);
-        let out = rt.execute("moments", &[lit])?;
-        let sums = out[0].to_vec::<f64>().map_err(anyhow_xla)?;
-        anyhow::ensure!(sums.len() == 4, "moments artifact returned {} values", sums.len());
-        total = total.merge(PowerSums {
-            n: chunk.len() as f64,
-            s1: sums[0],
-            s2: sums[1],
-            s3: sums[2],
-            s4: sums[3],
-        });
+        total = total.merge(PowerSums::of(chunk));
     }
     Ok(total)
 }
 
-/// Degree statistics of a graph via the PJRT moments path (the same
-/// [`crate::graph::stats::DegreeStats`] the pure-Rust path computes).
-pub fn degree_stats(rt: &Runtime, g: &crate::graph::Graph) -> Result<crate::graph::stats::DegreeStats> {
+/// Degree statistics of a graph via the runtime moments path (the same
+/// [`crate::graph::stats::DegreeStats`] the direct native path computes).
+pub fn degree_stats(
+    rt: &Runtime,
+    g: &crate::graph::Graph,
+) -> Result<crate::graph::stats::DegreeStats> {
     let (ind, outd) = crate::graph::stats::degree_arrays(g);
     let in_sums = power_sums(rt, &ind)?;
     let out_sums = power_sums(rt, &outd)?;
@@ -45,7 +38,8 @@ pub fn degree_stats(rt: &Runtime, g: &crate::graph::Graph) -> Result<crate::grap
 mod tests {
     use super::*;
 
-    /// PJRT vs pure-Rust equality on multi-chunk inputs.
+    /// Chunked runtime path vs the one-shot native path on multi-chunk
+    /// inputs.
     #[test]
     fn matches_rust_path_across_chunks() {
         let Some(rt) = Runtime::try_default() else {
@@ -54,14 +48,14 @@ mod tests {
         };
         let n = rt.manifest.moments_n + 1234; // forces 2 chunks
         let xs: Vec<f64> = (0..n).map(|i| ((i * 37 + 11) % 97) as f64).collect();
-        let pjrt = power_sums(&rt, &xs).unwrap();
+        let chunked = power_sums(&rt, &xs).unwrap();
         let native = PowerSums::of(&xs);
-        assert_eq!(pjrt.n, native.n);
+        assert_eq!(chunked.n, native.n);
         for (a, b) in [
-            (pjrt.s1, native.s1),
-            (pjrt.s2, native.s2),
-            (pjrt.s3, native.s3),
-            (pjrt.s4, native.s4),
+            (chunked.s1, native.s1),
+            (chunked.s2, native.s2),
+            (chunked.s3, native.s3),
+            (chunked.s4, native.s4),
         ] {
             assert!((a - b).abs() <= 1e-9 * (1.0 + b.abs()), "{a} vs {b}");
         }
@@ -75,9 +69,9 @@ mod tests {
         };
         let mut rng = crate::util::rng::Rng::new(600);
         let g = crate::graph::gen::chung_lu::generate("t", 500, 3000, 2.2, true, &mut rng);
-        let pjrt = degree_stats(&rt, &g).unwrap();
+        let rt_stats = degree_stats(&rt, &g).unwrap();
         let native = crate::graph::stats::DegreeStats::of(&g);
-        assert!((pjrt.in_deg.kurtosis - native.in_deg.kurtosis).abs() < 1e-6);
-        assert!((pjrt.out_deg.skewness - native.out_deg.skewness).abs() < 1e-6);
+        assert!((rt_stats.in_deg.kurtosis - native.in_deg.kurtosis).abs() < 1e-6);
+        assert!((rt_stats.out_deg.skewness - native.out_deg.skewness).abs() < 1e-6);
     }
 }

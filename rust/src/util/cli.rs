@@ -1,7 +1,9 @@
 //! Minimal command-line argument parser (the build is offline; no clap).
 //!
 //! Supports `subcommand --flag value --switch positional` layouts used by
-//! the `repro` binary and the examples:
+//! the `repro` binary and the examples. Typed getters return `Result`
+//! instead of panicking, so malformed values surface as proper CLI
+//! errors in `main`:
 //!
 //! ```no_run
 //! use gps_select::util::cli::Args;
@@ -9,11 +11,13 @@
 //!                               "--workers".into(), "64".into(), "--fast".into()]);
 //! assert_eq!(a.subcommand(), Some("run"));
 //! assert_eq!(a.get("graph"), Some("wiki"));
-//! assert_eq!(a.get_usize("workers", 8), 64);
+//! assert_eq!(a.get_usize("workers", 8).unwrap(), 64);
 //! assert!(a.has("fast"));
 //! ```
 
 use std::collections::BTreeMap;
+
+use crate::util::error::{err, Result};
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -73,33 +77,27 @@ impl Args {
         self.get(key).unwrap_or(default)
     }
 
-    /// `usize` flag with default; panics with a clear message on junk.
-    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+    /// `usize` flag with default; a clear error on junk values.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
-            None => default,
-            Some(v) => v
-                .parse()
-                .unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")),
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| err!("--{key} expects an integer, got {v:?}")),
         }
     }
 
     /// `u64` flag with default.
-    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
-            None => default,
-            Some(v) => v
-                .parse()
-                .unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")),
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| err!("--{key} expects an integer, got {v:?}")),
         }
     }
 
     /// `f64` flag with default.
-    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
-            None => default,
-            Some(v) => v
-                .parse()
-                .unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")),
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| err!("--{key} expects a number, got {v:?}")),
         }
     }
 
@@ -128,7 +126,7 @@ mod tests {
         let a = Args::parse_from(toks("run --graph wiki --workers 64"));
         assert_eq!(a.subcommand(), Some("run"));
         assert_eq!(a.get("graph"), Some("wiki"));
-        assert_eq!(a.get_usize("workers", 1), 64);
+        assert_eq!(a.get_usize("workers", 1).unwrap(), 64);
     }
 
     #[test]
@@ -136,13 +134,13 @@ mod tests {
         let a = Args::parse_from(toks("bench --fast --n 3 --verbose"));
         assert!(a.has("fast"));
         assert!(a.has("verbose"));
-        assert_eq!(a.get_usize("n", 0), 3);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 3);
     }
 
     #[test]
     fn equals_form() {
         let a = Args::parse_from(toks("x --scale=0.25 --flag=true"));
-        assert_eq!(a.get_f64("scale", 1.0), 0.25);
+        assert_eq!(a.get_f64("scale", 1.0).unwrap(), 0.25);
         assert!(a.has("flag"));
     }
 
@@ -151,7 +149,7 @@ mod tests {
         let a = Args::parse_from(toks(""));
         assert_eq!(a.subcommand(), None);
         assert_eq!(a.get_or("x", "d"), "d");
-        assert_eq!(a.get_usize("n", 12), 12);
+        assert_eq!(a.get_usize("n", 12).unwrap(), 12);
         assert!(!a.has("fast"));
     }
 
@@ -163,9 +161,11 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "expects an integer")]
-    fn bad_integer_panics() {
-        let a = Args::parse_from(toks("x --n abc"));
-        a.get_usize("n", 0);
+    fn bad_values_error_instead_of_panicking() {
+        let a = Args::parse_from(toks("x --n abc --f 1.2.3"));
+        let e = a.get_usize("n", 0).unwrap_err();
+        assert!(e.to_string().contains("expects an integer"), "{e}");
+        assert!(a.get_u64("n", 0).is_err());
+        assert!(a.get_f64("f", 0.0).is_err());
     }
 }

@@ -1,0 +1,179 @@
+//! Std-only error handling: a single string-backed [`Error`] type, a
+//! crate-wide [`Result`] alias, and the `bail!` / `ensure!` / `err!`
+//! macros plus a [`Context`] extension trait mirroring the small slice
+//! of `anyhow` the crate used before going dependency-free.
+//!
+//! Errors here describe *user-facing* failures (bad CLI input, malformed
+//! files, missing artifacts); programmer errors stay `panic!`/`assert!`.
+
+use std::fmt;
+
+/// A boxed-free, allocation-light error: one message string, built up
+/// front-to-back as context is attached (`"outer: inner"`).
+#[derive(Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from a message.
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into() }
+    }
+
+    /// Prepend a context layer (`"context: original"`).
+    pub fn context(self, context: impl fmt::Display) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Debug prints the plain message so `fn main() -> Result<()>` failures
+// read like error messages, not struct dumps.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::fmt::Error> for Error {
+    fn from(e: std::fmt::Error) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures, for both `Result` and `Option`.
+pub trait Context<T> {
+    /// Replace/wrap the failure with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Replace/wrap the failure with a lazily built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+// Make the macros importable alongside the types:
+// `use crate::util::error::{bail, Context, Result};`
+pub use crate::{bail, ensure, err};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("broke at {}", 7)
+    }
+
+    fn guarded(x: u32) -> Result<u32> {
+        ensure!(x < 10, "x too large: {x}");
+        Ok(x)
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        assert_eq!(fails().unwrap_err().to_string(), "broke at 7");
+        assert_eq!(guarded(3).unwrap(), 3);
+        assert_eq!(guarded(12).unwrap_err().to_string(), "x too large: 12");
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing flag").unwrap_err().to_string(), "missing flag");
+        let bad: Result<u32> = "x".parse::<u32>().with_context(|| "parsing --n");
+        let msg = bad.unwrap_err().to_string();
+        assert!(msg.starts_with("parsing --n: "), "{msg}");
+    }
+
+    #[test]
+    fn question_mark_conversions() {
+        fn io() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/real/path/42")?)
+        }
+        fn num() -> Result<usize> {
+            Ok("zzz".parse::<usize>()?)
+        }
+        assert!(io().is_err());
+        assert!(num().is_err());
+    }
+
+    #[test]
+    fn err_macro_and_layered_context() {
+        let e = err!("inner {}", 1).context("outer");
+        assert_eq!(e.to_string(), "outer: inner 1");
+        assert_eq!(format!("{e:?}"), "outer: inner 1");
+    }
+}

@@ -1,12 +1,16 @@
 //! Small self-contained utilities: deterministic RNG, statistics,
-//! CLI parsing, table formatting and a micro-benchmark harness.
+//! CLI parsing, error handling, a scoped worker pool, table formatting
+//! and a micro-benchmark harness.
 //!
-//! The crate deliberately depends only on `xla` + `anyhow`; everything
-//! else (arg parsing, bench timing, property-test input generation) is
-//! implemented here so the build is fully offline and deterministic.
+//! The crate deliberately has **zero** external dependencies; everything
+//! (arg parsing, error type, thread pool, bench timing, property-test
+//! input generation) is implemented here so the build is fully offline
+//! and deterministic.
 
 pub mod benchkit;
 pub mod cli;
+pub mod error;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod table;

