@@ -3,11 +3,18 @@
 //! worker count 4 → 64 (the paper's §3.2.2 experiment).
 //!
 //! ```bash
-//! cargo run --release --example engine_scalability -- [--scale 0.03125]
+//! cargo run --release --example engine_scalability -- [--scale 0.03125] \
+//!     [--engine-mode simulated|threaded]
 //! ```
+//!
+//! With `--engine-mode threaded` every run executes thread-per-worker
+//! over channels (spawning up to 64 OS threads at the top of the
+//! sweep); the reported simulated times are bit-identical to the
+//! default simulated oracle.
 
 use gps_select::algorithms::Algorithm;
 use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::ExecutionMode;
 use gps_select::graph::datasets::DatasetSpec;
 use gps_select::partition::Strategy;
 use gps_select::util::cli::Args;
@@ -17,12 +24,14 @@ fn main() -> Result<()> {
     let args = Args::parse();
     let scale = args.get_f64("scale", 1.0 / 32.0)?;
     let seed = args.get_u64("seed", 42)?;
+    let mode = ExecutionMode::resolve(args.get("engine-mode"))?;
     let g = DatasetSpec::by_name("stanford").unwrap().build(scale, seed);
     println!(
-        "engine scalability on {} (|V|={}, |E|={}), 2D partitioning",
+        "engine scalability on {} (|V|={}, |E|={}), 2D partitioning, {} engine",
         g.name,
         g.num_vertices(),
-        g.num_edges()
+        g.num_edges(),
+        mode.name()
     );
     println!(
         "{:>8} {:>14} {:>14} {:>10} {:>10}",
@@ -32,8 +41,8 @@ fn main() -> Result<()> {
     for &w in &[4usize, 8, 16, 32, 64] {
         let cfg = ClusterConfig::with_workers(w);
         let p = Strategy::TwoD.partition(&g, w);
-        let pr = Algorithm::Pr.simulate(&g, &p, &cfg).sim.total;
-        let tc = Algorithm::Tc.simulate(&g, &p, &cfg).sim.total;
+        let pr = Algorithm::Pr.execute(&g, &p, &cfg, mode).sim.total;
+        let tc = Algorithm::Tc.execute(&g, &p, &cfg, mode).sim.total;
         let (pr0, tc0) = *base.get_or_insert((pr, tc));
         println!("{w:>8} {pr:>14.5} {tc:>14.5} {:>9.2}× {:>9.2}×", pr0 / pr, tc0 / tc);
     }

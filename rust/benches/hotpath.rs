@@ -1,7 +1,14 @@
 //! Hot-path micro-benchmarks (the §Perf L3 targets): partitioners, the
-//! GAS superstep loop, the parallel corpus builder (serial vs threaded
-//! with the shared partition cache), GBDT training/inference, the
-//! analyzer, and the artifact-shaped runtime paths.
+//! GAS superstep loop (simulated vs thread-per-worker execution modes),
+//! the parallel corpus builder (serial vs threaded with the shared
+//! partitioning cache), GBDT training/inference, the analyzer, and the
+//! artifact-shaped runtime paths.
+//!
+//! An optional positional argument filters rows by substring —
+//! `cargo bench --bench hotpath -- engine` runs only the engine rows
+//! (and skips the other sections' setup). When any engine-mode pair
+//! row runs, its timings are recorded as JSON in `GPS_BENCH_OUT`
+//! (default `BENCH_engine.json`) for CI trend tracking.
 
 #[path = "common.rs"]
 mod common;
@@ -10,15 +17,28 @@ use gps_select::algorithms::Algorithm;
 use gps_select::analyzer::analyze;
 use gps_select::dataset::logs::LogStore;
 use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::ExecutionMode;
 use gps_select::graph::gen::chung_lu;
 use gps_select::ml::gbdt::{Gbdt, GbdtParams};
 use gps_select::ml::{Regressor, TrainSet};
 use gps_select::partition::Strategy;
-use gps_select::util::benchkit::{black_box, Bench};
+use gps_select::util::benchkit::{black_box, Bench, Timing};
 use gps_select::util::rng::Rng;
 use gps_select::util::stats::PowerSums;
 
+fn json_row(name: &str, t: &Timing) -> String {
+    format!(
+        "    {{\"bench\": \"{name}\", \"median_s\": {:.9}, \"mean_s\": {:.9}, \
+         \"p90_s\": {:.9}, \"samples\": {}}}",
+        t.median, t.mean, t.p90, t.samples
+    )
+}
+
 fn main() {
+    // cargo injects flag-shaped args (e.g. `--bench`) into harness=false
+    // bench binaries, so the filter is the first non-flag argument.
+    let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let want = |name: &str| filter.as_deref().map_or(true, |f| name.contains(f));
     let bench = Bench::from_env();
     let mut rng = Rng::new(9000);
     // a 100k-edge power-law graph: the partitioner benchmark substrate
@@ -34,82 +54,157 @@ fn main() {
         Strategy::Ginger,
         Strategy::Oblivious,
     ] {
-        bench.run(&format!("partition/{}/100k-edges", s.name()), || {
-            black_box(s.partition(&g, workers))
-        });
+        let name = format!("partition/{}/100k-edges", s.name());
+        if want(&name) {
+            bench.run(&name, || black_box(s.partition(&g, workers)));
+        }
     }
 
-    let p = Strategy::Hdrf(50).partition(&g, workers);
-    let cfg = ClusterConfig::with_workers(workers);
-    bench.run("engine/pagerank-10-iters/100k-edges", || {
-        black_box(Algorithm::Pr.simulate(&g, &p, &cfg))
-    });
-    bench.run("engine/triangle-count/100k-edges", || {
-        black_box(Algorithm::Tc.simulate(&g, &p, &cfg))
-    });
+    // ---- engine: 64-worker baseline + the execution-mode pair ----
+    let engine_pairs = [(Algorithm::Pr, "pagerank-10-iters"), (Algorithm::Tc, "triangle-count")];
+    let engine_modes = [ExecutionMode::Simulated, ExecutionMode::Threaded];
+    // (row name, algorithm, None = 64-worker simulated baseline /
+    //  Some(mode) = 8-worker execution-mode pair)
+    let mut engine_rows: Vec<(String, Algorithm, Option<ExecutionMode>)> = engine_pairs
+        .iter()
+        .map(|&(algo, label)| (format!("engine/{label}/100k-edges"), algo, None))
+        .collect();
+    for (algo, label) in engine_pairs {
+        for mode in engine_modes {
+            engine_rows.push((
+                format!("engine/{label}/{}-8w/100k-edges", mode.name()),
+                algo,
+                Some(mode),
+            ));
+        }
+    }
+    if engine_rows.iter().any(|(name, _, _)| want(name)) {
+        let p = Strategy::Hdrf(50).partition(&g, workers);
+        let cfg = ClusterConfig::with_workers(workers);
+        // 8 workers keeps the threaded pair's thread count honest on
+        // laptop-class CI machines
+        let p8 = Strategy::Hdrf(50).partition(&g, 8);
+        let cfg8 = ClusterConfig::with_workers(8);
+        let mut pair_json: Vec<String> = Vec::new();
+        for (name, algo, mode) in &engine_rows {
+            if !want(name) {
+                continue;
+            }
+            match mode {
+                None => {
+                    bench.run(name, || black_box(algo.simulate(&g, &p, &cfg)));
+                }
+                Some(m) => {
+                    let t = bench.run(name, || black_box(algo.execute(&g, &p8, &cfg8, *m)));
+                    pair_json.push(json_row(name, &t));
+                }
+            }
+        }
+        if !pair_json.is_empty() {
+            let out =
+                std::env::var("GPS_BENCH_OUT").unwrap_or_else(|_| "BENCH_engine.json".to_string());
+            let json = format!("{{\n  \"engine_modes\": [\n{}\n  ]\n}}\n", pair_json.join(",\n"));
+            match std::fs::write(&out, json) {
+                Ok(()) => println!("engine mode timings written to {out}"),
+                Err(e) => eprintln!("could not write {out}: {e}"),
+            }
+        }
+    }
 
-    bench.run("analyzer/parse+count/pr.gps", || {
-        black_box(analyze(Algorithm::Pr.pseudo_code()).unwrap())
-    });
+    if want("analyzer/parse+count/pr.gps") {
+        bench.run("analyzer/parse+count/pr.gps", || {
+            black_box(analyze(Algorithm::Pr.pseudo_code()).unwrap())
+        });
+    }
 
     // corpus construction: the (12 × 8 × 11) task grid, serial vs the
     // scoped worker pool with the shared (graph, strategy) partition
     // cache — the GPS_THREADS speedup headline
-    let corpus_bench = Bench::new(0, 3);
-    let cfg64 = ClusterConfig::with_workers(64);
-    let corpus_scale = common::bench_scale().min(0.004);
-    let seed = common::bench_seed();
-    corpus_bench.run("corpus/build/1-thread", || {
-        black_box(LogStore::build_corpus_parallel(corpus_scale, seed, &cfg64, 1).unwrap())
-    });
-    for threads in [2usize, 4] {
-        corpus_bench.run(&format!("corpus/build/{threads}-threads"), || {
-            black_box(
-                LogStore::build_corpus_parallel(corpus_scale, seed, &cfg64, threads).unwrap(),
-            )
-        });
-    }
-
-    // moments: native power sums over 1M doubles
-    let xs: Vec<f64> = (0..1_000_000).map(|i| ((i * 31 + 7) % 1000) as f64).collect();
-    bench.run("moments/native/1M", || black_box(PowerSums::of(&xs)));
-
-    // GBDT: train and predict
-    let mut train = TrainSet::default();
-    for _ in 0..20_000 {
-        let row: Vec<f64> = (0..52).map(|_| rng.next_f64()).collect();
-        let y = row[0] * 5.0 + row[1] * row[2] * 3.0;
-        train.push(row, y);
-    }
-    // depth 6 keeps every tree within the PJRT artifact's padded
-    // node capacity for the native-vs-AOT comparison below
-    let params = GbdtParams { n_estimators: 50, max_depth: 6, ..GbdtParams::fast() };
-    bench.run("gbdt/train/20k-rows-50-trees", || black_box(Gbdt::fit(&train, params)));
-    let model = Gbdt::fit(&train, params);
-    let batch: Vec<Vec<f64>> = train.x[..11].to_vec();
-    bench.run("gbdt/predict-native/11-rows", || black_box(model.predict_batch(&batch)));
-
-    // artifact-shaped runtime paths (skipped when artifacts are absent)
-    match gps_select::runtime::Runtime::try_default() {
-        Some(rt) => {
-            bench.run("moments/artifact-chunked", || {
-                black_box(
-                    gps_select::runtime::moments::power_sums(
-                        &rt,
-                        &xs[..rt.manifest.moments_n.min(xs.len())],
+    let corpus_rows = ["corpus/build/1-thread", "corpus/build/2-threads", "corpus/build/4-threads"];
+    if corpus_rows.iter().any(|n| want(n)) {
+        let corpus_bench = Bench::new(0, 3);
+        let cfg64 = ClusterConfig::with_workers(64);
+        let corpus_scale = common::bench_scale().min(0.004);
+        let seed = common::bench_seed();
+        for (name, threads) in corpus_rows.iter().zip([1usize, 2, 4]) {
+            if want(name) {
+                corpus_bench.run(name, || {
+                    black_box(
+                        LogStore::build_corpus_parallel(
+                            corpus_scale,
+                            seed,
+                            &cfg64,
+                            threads,
+                            ExecutionMode::Simulated,
+                        )
+                        .unwrap(),
                     )
-                    .unwrap(),
-                )
-            });
-            match gps_select::runtime::gbdt::ArtifactForest::new(&rt, &model) {
-                Ok(forest) => {
-                    bench.run("gbdt/predict-artifact/11-rows", || {
-                        black_box(forest.predict_rows(&batch))
-                    });
-                }
-                Err(e) => eprintln!("gbdt artifact bench skipped: {e}"),
+                });
             }
         }
-        None => eprintln!("runtime benches skipped (run `make artifacts`)"),
+    }
+
+    // moments: native + artifact power sums over 1M doubles
+    let xs: Option<Vec<f64>> = if want("moments/native/1M") || want("moments/artifact-chunked") {
+        Some((0..1_000_000).map(|i| ((i * 31 + 7) % 1000) as f64).collect())
+    } else {
+        None
+    };
+    if want("moments/native/1M") {
+        let xs = xs.as_ref().expect("built above");
+        bench.run("moments/native/1M", || black_box(PowerSums::of(xs)));
+    }
+    if want("moments/artifact-chunked") {
+        match gps_select::runtime::Runtime::try_default() {
+            Some(rt) => {
+                let xs = xs.as_ref().expect("built above");
+                bench.run("moments/artifact-chunked", || {
+                    black_box(
+                        gps_select::runtime::moments::power_sums(
+                            &rt,
+                            &xs[..rt.manifest.moments_n.min(xs.len())],
+                        )
+                        .unwrap(),
+                    )
+                });
+            }
+            None => eprintln!("moments artifact bench skipped (run `make artifacts`)"),
+        }
+    }
+
+    // GBDT: train and predict (native + artifact-shaped)
+    let gbdt_rows =
+        ["gbdt/train/20k-rows-50-trees", "gbdt/predict-native/11-rows", "gbdt/predict-artifact/11-rows"];
+    if gbdt_rows.iter().any(|n| want(n)) {
+        let mut train = TrainSet::default();
+        for _ in 0..20_000 {
+            let row: Vec<f64> = (0..52).map(|_| rng.next_f64()).collect();
+            let y = row[0] * 5.0 + row[1] * row[2] * 3.0;
+            train.push(row, y);
+        }
+        // depth 6 keeps every tree within the PJRT artifact's padded
+        // node capacity for the native-vs-AOT comparison below
+        let params = GbdtParams { n_estimators: 50, max_depth: 6, ..GbdtParams::fast() };
+        if want(gbdt_rows[0]) {
+            bench.run(gbdt_rows[0], || black_box(Gbdt::fit(&train, params)));
+        }
+        if want(gbdt_rows[1]) || want(gbdt_rows[2]) {
+            let model = Gbdt::fit(&train, params);
+            let batch: Vec<Vec<f64>> = train.x[..11].to_vec();
+            if want(gbdt_rows[1]) {
+                bench.run(gbdt_rows[1], || black_box(model.predict_batch(&batch)));
+            }
+            if want(gbdt_rows[2]) {
+                match gps_select::runtime::Runtime::try_default() {
+                    Some(rt) => match gps_select::runtime::gbdt::ArtifactForest::new(&rt, &model) {
+                        Ok(forest) => {
+                            bench.run(gbdt_rows[2], || black_box(forest.predict_rows(&batch)));
+                        }
+                        Err(e) => eprintln!("gbdt artifact bench skipped: {e}"),
+                    },
+                    None => eprintln!("gbdt artifact bench skipped (run `make artifacts`)"),
+                }
+            }
+        }
     }
 }

@@ -21,7 +21,8 @@ pub mod randomwalk;
 pub mod triangle;
 
 use crate::engine::cost::{ClusterConfig, OpCounts, SimTime};
-use crate::engine::gas::VertexProgram;
+use crate::engine::gas::{Payload, VertexProgram};
+use crate::engine::ExecutionMode;
 use crate::graph::Graph;
 use crate::partition::Partitioning;
 
@@ -48,6 +49,10 @@ pub struct SimOutcome {
     /// Order-independent checksum over final vertex values, for
     /// cross-partitioning result-identity tests.
     pub checksum: f64,
+    /// FNV-1a digest over the exact bit representation of the value
+    /// vector in vertex order: equal digests ⇔ bit-identical results
+    /// (the execution-mode equivalence tests compare these).
+    pub value_hash: u64,
 }
 
 impl Algorithm {
@@ -102,33 +107,52 @@ impl Algorithm {
         }
     }
 
-    /// Execute on the engine and return the simulation outcome.
+    /// Execute on the engine and return the simulation outcome
+    /// (default [`ExecutionMode::Simulated`] backend).
     pub fn simulate(&self, g: &Graph, p: &Partitioning, cfg: &ClusterConfig) -> SimOutcome {
+        self.execute(g, p, cfg, ExecutionMode::Simulated)
+    }
+
+    /// Execute on the engine with an explicit execution mode.
+    pub fn execute(
+        &self,
+        g: &Graph,
+        p: &Partitioning,
+        cfg: &ClusterConfig,
+        mode: ExecutionMode,
+    ) -> SimOutcome {
         fn go<P: VertexProgram>(
             prog: &P,
             g: &Graph,
             p: &Partitioning,
             cfg: &ClusterConfig,
+            mode: ExecutionMode,
             sum: impl Fn(&[P::Value]) -> f64,
         ) -> SimOutcome {
-            let r = crate::engine::run(g, p, prog, cfg);
-            SimOutcome { sim: r.sim, ops: r.ops, checksum: sum(&r.values) }
+            let r = crate::engine::run_mode(g, p, prog, cfg, mode);
+            let value_hash = r
+                .values
+                .iter()
+                .fold(crate::util::rng::FNV1A64_OFFSET, |h, v| v.fold_bits(h));
+            SimOutcome { sim: r.sim, ops: r.ops, checksum: sum(&r.values), value_hash }
         }
         match self {
-            Algorithm::Aid => go(&degree::InDegree, g, p, cfg, |v| v.iter().sum()),
-            Algorithm::Aod => go(&degree::OutDegree, g, p, cfg, |v| v.iter().sum()),
-            Algorithm::Pr => go(&pagerank::PageRank::default(), g, p, cfg, |v| v.iter().sum()),
-            Algorithm::Gc => go(&coloring::GreedyColoring, g, p, cfg, |v| {
+            Algorithm::Aid => go(&degree::InDegree, g, p, cfg, mode, |v| v.iter().sum()),
+            Algorithm::Aod => go(&degree::OutDegree, g, p, cfg, mode, |v| v.iter().sum()),
+            Algorithm::Pr => {
+                go(&pagerank::PageRank::default(), g, p, cfg, mode, |v| v.iter().sum())
+            }
+            Algorithm::Gc => go(&coloring::GreedyColoring, g, p, cfg, mode, |v| {
                 v.iter().map(|&c| c as f64).sum()
             }),
-            Algorithm::Apcn => go(&apcn::Apcn, g, p, cfg, |v| v.iter().map(|x| x.1).sum()),
-            Algorithm::Tc => go(&triangle::TriangleCount, g, p, cfg, |v| {
+            Algorithm::Apcn => go(&apcn::Apcn, g, p, cfg, mode, |v| v.iter().map(|x| x.1).sum()),
+            Algorithm::Tc => go(&triangle::TriangleCount, g, p, cfg, mode, |v| {
                 v.iter().map(|x| x.1).sum()
             }),
-            Algorithm::Cc => go(&clustering::ClusteringCoefficient, g, p, cfg, |v| {
+            Algorithm::Cc => go(&clustering::ClusteringCoefficient, g, p, cfg, mode, |v| {
                 v.iter().map(|x| x.1).sum()
             }),
-            Algorithm::Rw => go(&randomwalk::RandomWalk::default(), g, p, cfg, |v| {
+            Algorithm::Rw => go(&randomwalk::RandomWalk::default(), g, p, cfg, mode, |v| {
                 v.iter().sum()
             }),
         }

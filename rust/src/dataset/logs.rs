@@ -18,6 +18,7 @@ use std::path::Path;
 use crate::algorithms::Algorithm;
 use crate::analyzer::AlgoCounts;
 use crate::engine::cost::ClusterConfig;
+use crate::engine::ExecutionMode;
 use crate::features::{DataFeatures, TaskFeatures};
 use crate::graph::Graph;
 use crate::partition::{PartitionCache, Partitioning, Strategy};
@@ -51,6 +52,7 @@ pub struct LogStore {
 /// record it. `data` and `counts` are the per-graph / per-algorithm
 /// feature halves, precomputed once by the callers so the hot loop does
 /// no redundant graph sweeps or pseudo-code parses.
+#[allow(clippy::too_many_arguments)]
 fn run_task(
     g: &Graph,
     data: DataFeatures,
@@ -59,9 +61,10 @@ fn run_task(
     s: Strategy,
     p: &Partitioning,
     cfg: &ClusterConfig,
+    mode: ExecutionMode,
 ) -> ExecutionLog {
     let features = TaskFeatures::from_parts(data, counts);
-    let outcome = a.simulate(g, p, cfg);
+    let outcome = a.execute(g, p, cfg, mode);
     ExecutionLog {
         graph: g.name.clone(),
         algorithm: a.name().to_string(),
@@ -79,6 +82,9 @@ fn algo_counts(algorithms: &[Algorithm]) -> Result<Vec<AlgoCounts>> {
 
 impl LogStore {
     /// Run `algorithms × strategies` on one graph and append the logs.
+    /// Always uses the `Simulated` backend so unit-test callers are not
+    /// environment-sensitive; mode-aware corpus construction goes
+    /// through [`LogStore::build_corpus_parallel`].
     pub fn record_graph(
         &mut self,
         g: &Graph,
@@ -86,13 +92,14 @@ impl LogStore {
         strategies: &[Strategy],
         cfg: &ClusterConfig,
     ) -> Result<()> {
+        let mode = ExecutionMode::Simulated;
         let data = DataFeatures::of(g);
         self.graph_features.insert(g.name.clone(), data);
         let counts = algo_counts(algorithms)?;
         for s in strategies {
             let p = s.partition(g, cfg.num_workers);
             for (a, c) in algorithms.iter().zip(&counts) {
-                self.logs.push(run_task(g, data, c, *a, *s, &p, cfg));
+                self.logs.push(run_task(g, data, c, *a, *s, &p, cfg, mode));
             }
         }
         Ok(())
@@ -101,10 +108,11 @@ impl LogStore {
     /// Build the full corpus: every dataset at `scale`, every algorithm,
     /// the 11-strategy inventory (the paper's 12 × 8 × 11 = 1056 runs,
     /// of which 528 over training graphs × training algorithms feed the
-    /// augmentation). Uses the `GPS_THREADS` default; see
-    /// [`LogStore::build_corpus_parallel`] for an explicit thread count.
+    /// augmentation). Uses the `GPS_THREADS` and `GPS_ENGINE_MODE`
+    /// defaults; see [`LogStore::build_corpus_parallel`] for explicit
+    /// control.
     pub fn build_corpus(scale: f64, seed: u64, cfg: &ClusterConfig) -> Result<Self> {
-        Self::build_corpus_parallel(scale, seed, cfg, 0)
+        Self::build_corpus_parallel(scale, seed, cfg, 0, ExecutionMode::from_env())
     }
 
     /// Parallel corpus build over the (dataset × algorithm × strategy)
@@ -119,12 +127,17 @@ impl LogStore {
     /// Every task is a pure function of its grid index, and results are
     /// collected in grid order, so the returned store is bit-identical
     /// for any thread count. `threads == 0` means the `GPS_THREADS`
-    /// default ([`pool::resolve_threads`]).
+    /// default ([`pool::resolve_threads`]). `mode` selects the engine
+    /// backend every task runs on; the two modes produce bit-identical
+    /// logs (the threaded backend spawns `cfg.num_workers` threads *per
+    /// task* on top of the pool, so it is for validation runs, not
+    /// throughput).
     pub fn build_corpus_parallel(
         scale: f64,
         seed: u64,
         cfg: &ClusterConfig,
         threads: usize,
+        mode: ExecutionMode,
     ) -> Result<Self> {
         let threads = pool::resolve_threads(threads);
         let strategies = Strategy::inventory();
@@ -154,7 +167,7 @@ impl LogStore {
             let s = strategies[rest / algorithms.len()];
             let a = algorithms[rest % algorithms.len()];
             let p = cache.get_or_partition(g, s);
-            run_task(g, *data, &counts[rest % algorithms.len()], a, s, &p, cfg)
+            run_task(g, *data, &counts[rest % algorithms.len()], a, s, &p, cfg, mode)
         });
 
         let mut store = LogStore { logs, ..Default::default() };
@@ -290,7 +303,8 @@ mod tests {
     #[test]
     fn parallel_corpus_preserves_grid_order() {
         let cfg = ClusterConfig::with_workers(4);
-        let store = LogStore::build_corpus_parallel(0.001, 3, &cfg, 2).unwrap();
+        let store =
+            LogStore::build_corpus_parallel(0.001, 3, &cfg, 2, ExecutionMode::Simulated).unwrap();
         let strategies = Strategy::inventory();
         let algorithms = Algorithm::all();
         let per_graph = strategies.len() * algorithms.len();

@@ -73,6 +73,31 @@ impl ClusterConfig {
     pub fn machine_of(&self, w: usize) -> usize {
         w * self.num_machines / self.num_workers.max(1)
     }
+
+    /// The single source of truth for the charging rule: which
+    /// bandwidth pool a `from → to` message consumes — `None` when
+    /// local (free), shared memory within a machine, the NIC across
+    /// machines. Both [`StepCost::charge_message`] and the message
+    /// layer's send accounting route through this.
+    #[inline]
+    pub fn route(&self, from: usize, to: usize) -> Option<Link> {
+        if from == to {
+            None
+        } else if self.machine_of(from) == self.machine_of(to) {
+            Some(Link::Intra)
+        } else {
+            Some(Link::Inter)
+        }
+    }
+}
+
+/// Which bandwidth pool a cross-worker message consumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Link {
+    /// Same machine: shared-memory copy.
+    Intra,
+    /// Different machines: NIC serialisation.
+    Inter,
 }
 
 /// Mutable per-superstep accounting, folded into [`SimTime`].
@@ -106,15 +131,16 @@ impl StepCost {
     /// Charge a message of `bytes` from worker `from` to worker `to`.
     #[inline]
     pub fn charge_message(&mut self, cfg: &ClusterConfig, from: usize, to: usize, bytes: usize) {
-        if from == to {
-            return; // local, free
-        }
-        self.messages += 1;
-        let (mf, mt) = (cfg.machine_of(from), cfg.machine_of(to));
-        if mf == mt {
-            self.intra_bytes[from] += bytes as f64;
-        } else {
-            self.inter_bytes[mf] += bytes as f64;
+        match cfg.route(from, to) {
+            None => {} // local, free
+            Some(Link::Intra) => {
+                self.messages += 1;
+                self.intra_bytes[from] += bytes as f64;
+            }
+            Some(Link::Inter) => {
+                self.messages += 1;
+                self.inter_bytes[cfg.machine_of(from)] += bytes as f64;
+            }
         }
     }
 
@@ -171,6 +197,65 @@ pub struct OpCounts {
     pub supersteps: u64,
 }
 
+use super::msg::{PhaseStats, Round};
+
+/// Per-superstep cost ledger fed by the message layer.
+///
+/// Both execution modes fold each worker's [`PhaseStats`] in ascending
+/// worker order, so the floating-point bucket sums — and with them the
+/// simulated time — are bit-identical across modes and thread counts.
+/// The superstep's `message_rounds` is *derived* from which rounds saw
+/// at least one cross-worker message, instead of being inferred from a
+/// bool sprinkled through the execution loop: the cost model cannot
+/// drift from the actual traffic.
+pub struct StepLedger {
+    sc: StepCost,
+    saw_traffic: [bool; 4],
+}
+
+impl StepLedger {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        StepLedger { sc: StepCost::new(cfg), saw_traffic: [false; 4] }
+    }
+
+    /// Fold worker `w`'s stats for one phase. Must be called in
+    /// ascending worker order within a phase (the drivers do).
+    pub fn fold(
+        &mut self,
+        cfg: &ClusterConfig,
+        w: usize,
+        round: Round,
+        st: &PhaseStats,
+        ops: &mut OpCounts,
+    ) {
+        self.sc.compute_ops[w] += st.compute;
+        self.sc.intra_bytes[w] += st.send.intra;
+        self.sc.inter_bytes[cfg.machine_of(w)] += st.send.inter;
+        self.sc.messages += st.send.msgs as usize;
+        if st.send.msgs > 0 {
+            self.saw_traffic[round as usize] = true;
+        }
+        ops.gathers += st.gathers;
+        ops.applies += st.applies;
+        ops.scatters += st.scatters;
+        ops.messages += st.send.msgs;
+        ops.bytes += st.send.bytes;
+    }
+
+    /// Close a regular superstep: one latency round per message kind
+    /// that actually travelled.
+    pub fn finish(mut self, sim: &mut SimTime, cfg: &ClusterConfig) {
+        self.sc.message_rounds = self.saw_traffic.iter().filter(|&&b| b).count();
+        sim.add_step(&self.sc, cfg);
+    }
+
+    /// Close the final result-collect step (a single shipment round).
+    pub fn finish_collect(mut self, sim: &mut SimTime, cfg: &ClusterConfig) {
+        self.sc.message_rounds = 1;
+        sim.add_step(&self.sc, cfg);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -213,6 +298,30 @@ mod tests {
         let mut skewed = StepCost::new(&cfg);
         skewed.compute_ops = vec![1000.0, 0.0];
         assert!(skewed.elapsed(&cfg) > balanced.elapsed(&cfg));
+    }
+
+    #[test]
+    fn ledger_derives_rounds_from_traffic() {
+        use crate::engine::msg::{PhaseStats, Round};
+        let cfg = ClusterConfig::with_workers(2);
+        let mut ops = OpCounts::default();
+        let mut sim = SimTime::default();
+        let mut ledger = StepLedger::new(&cfg);
+        let quiet = PhaseStats::default();
+        let mut chatty = PhaseStats::default();
+        chatty.send.push(&cfg, 0, 1, 64);
+        ledger.fold(&cfg, 0, Round::Gather, &quiet, &mut ops);
+        ledger.fold(&cfg, 0, Round::Apply, &chatty, &mut ops);
+        ledger.fold(&cfg, 1, Round::Scatter, &chatty, &mut ops);
+        ledger.finish(&mut sim, &cfg);
+        // exactly two rounds saw traffic (apply + scatter), gather not
+        assert!(
+            (sim.overhead - (2.0 * cfg.latency + cfg.barrier)).abs() < 1e-12,
+            "overhead {}",
+            sim.overhead
+        );
+        assert_eq!(ops.messages, 2);
+        assert_eq!(ops.bytes, 128);
     }
 
     #[test]

@@ -40,41 +40,73 @@ pub trait Payload: Clone + Send {
     /// Serialized size in bytes (8-byte scalar convention, matching the
     /// MPI doubles the paper's engine exchanges).
     fn bytes(&self) -> usize;
+
+    /// Fold the payload's exact bit representation into an FNV-1a state
+    /// (seed with [`crate::util::rng::FNV1A64_OFFSET`]). The engine's
+    /// execution-mode equivalence guarantee is stated over these
+    /// digests: equal digests over the value vector in vertex order ⇔
+    /// bit-identical results.
+    fn fold_bits(&self, h: u64) -> u64;
 }
+
+use crate::util::rng::fnv1a64_fold;
 
 impl Payload for f64 {
     fn bytes(&self) -> usize {
         8
+    }
+    fn fold_bits(&self, h: u64) -> u64 {
+        fnv1a64_fold(h, &self.to_bits().to_le_bytes())
     }
 }
 impl Payload for i64 {
     fn bytes(&self) -> usize {
         8
     }
+    fn fold_bits(&self, h: u64) -> u64 {
+        fnv1a64_fold(h, &self.to_le_bytes())
+    }
 }
 impl Payload for u32 {
     fn bytes(&self) -> usize {
         4
+    }
+    fn fold_bits(&self, h: u64) -> u64 {
+        fnv1a64_fold(h, &self.to_le_bytes())
     }
 }
 impl Payload for () {
     fn bytes(&self) -> usize {
         0
     }
+    fn fold_bits(&self, h: u64) -> u64 {
+        h
+    }
 }
 impl<T: Payload> Payload for Vec<T> {
     fn bytes(&self) -> usize {
         8 + self.iter().map(Payload::bytes).sum::<usize>()
+    }
+    fn fold_bits(&self, h: u64) -> u64 {
+        let h = fnv1a64_fold(h, &(self.len() as u64).to_le_bytes());
+        self.iter().fold(h, |h, x| x.fold_bits(h))
     }
 }
 impl<A: Payload, B: Payload> Payload for (A, B) {
     fn bytes(&self) -> usize {
         self.0.bytes() + self.1.bytes()
     }
+    fn fold_bits(&self, h: u64) -> u64 {
+        self.1.fold_bits(self.0.fold_bits(h))
+    }
 }
 impl<T: Payload> Payload for Option<T> {
     fn bytes(&self) -> usize {
         1 + self.as_ref().map_or(0, Payload::bytes)
+    }
+    fn fold_bits(&self, h: u64) -> u64 {
+        let h = fnv1a64_fold(h, &[self.is_some() as u8]);
+        self.as_ref().map_or(h, |x| x.fold_bits(h))
     }
 }
 
@@ -278,6 +310,22 @@ mod tests {
         assert_eq!(None::<f64>.bytes(), 1);
         let nested: Vec<Vec<u32>> = vec![vec![1], vec![2, 3]];
         assert_eq!(nested.bytes(), 8 + (8 + 4) + (8 + 8));
+    }
+
+    #[test]
+    fn fold_bits_is_bit_exact() {
+        use crate::util::rng::FNV1A64_OFFSET;
+        let s = FNV1A64_OFFSET;
+        assert_eq!(1.5f64.fold_bits(s), 1.5f64.fold_bits(s));
+        assert_ne!(1.5f64.fold_bits(s), 1.6f64.fold_bits(s));
+        // -0.0 and 0.0 compare equal but differ in bits — the digest
+        // must see the difference (that is the whole point)
+        assert_ne!(0.0f64.fold_bits(s), (-0.0f64).fold_bits(s));
+        let a: Vec<u32> = vec![1, 2, 3];
+        let b: Vec<u32> = vec![1, 2, 4];
+        assert_ne!(a.fold_bits(s), b.fold_bits(s));
+        assert_ne!(Some(1.0f64).fold_bits(s), None::<f64>.fold_bits(s));
+        assert_ne!((1.0f64, 2u32).fold_bits(s), (2.0f64, 1u32).fold_bits(s));
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! The distributed GAS graph-computation engine (§3.2).
+//! The distributed GAS graph-computation engine (§3.2), worker-centric.
 //!
 //! The engine executes a [`gas::VertexProgram`] over a partitioned graph
 //! with exact algorithm semantics (results are bit-identical regardless
@@ -8,24 +8,110 @@
 //! to predict; it depends on the partitioning through load balance,
 //! replication factor and locality — the channels §1 identifies.
 //!
-//! [`run`] is a pure function of its arguments with no global state:
+//! Execution is organised around per-worker state and an explicit
+//! message layer rather than global arrays:
+//!
+//! * [`state::WorkerState`] — one worker's masters, mirror value cache
+//!   and gather buffers over its [`worker::LocalEdges`];
+//! * [`msg`] — the typed messages (gather partials up, value broadcasts
+//!   down, activation notices, result emissions) and the send-side
+//!   accounting that feeds the cost model;
+//! * [`barrier::BspBarrier`] — the superstep barrier of the threaded
+//!   backend.
+//!
+//! Two [`ExecutionMode`] backends run the **same** phase code:
+//!
+//! * [`ExecutionMode::Simulated`] (default) — one OS thread; workers
+//!   execute sequentially in ascending order and envelopes route
+//!   through in-memory inboxes. This is the cost-model oracle used for
+//!   corpus construction.
+//! * [`ExecutionMode::Threaded`] — real thread-per-worker execution
+//!   over [`std::sync::mpsc`] channels with a BSP barrier between
+//!   phases; a coordinator folds per-worker stats in ascending worker
+//!   order.
+//!
+//! Because both modes fold the same per-worker phase outputs in the
+//! same order, final values, [`cost::OpCounts`] **and** the simulated
+//! time are bit-identical between modes and across thread counts
+//! (`tests/mode_equivalence.rs` pins this).
+//!
+//! [`run`] stays a pure function of its arguments with no global state:
 //! all inputs are `Sync` plain data and all mutable state is local to
-//! the call. The parallel corpus builder
-//! ([`crate::dataset::logs::LogStore::build_corpus_parallel`]) relies on
-//! exactly this to execute many runs concurrently against shared
-//! `Arc<Partitioning>` values while staying bit-deterministic; the
-//! `engine_inputs_are_shareable_across_threads` test pins the contract.
+//! the call, so the parallel corpus builder can execute many runs
+//! concurrently against shared `Arc<Partitioning>` values.
 
+pub mod barrier;
 pub mod cost;
 pub mod gas;
+pub mod msg;
+pub mod state;
 pub mod worker;
+
+use std::sync::mpsc;
+use std::sync::Arc;
 
 use crate::graph::{Graph, VertexId};
 use crate::partition::Partitioning;
+use crate::util::error::{err, Result};
 
-use cost::{ClusterConfig, OpCounts, SimTime, StepCost};
-use gas::{EdgeDirection, GraphInfo, InitialActive, Payload, VertexProgram};
-use worker::{build_local_edges, LocalEdges};
+use barrier::BspBarrier;
+use cost::{ClusterConfig, OpCounts, SimTime, StepLedger};
+use gas::{EdgeDirection, GraphInfo, InitialActive, VertexProgram};
+use msg::{Envelope, PhaseOut, PhaseStats, Round};
+use state::{build_worker_states, WorkerState};
+
+/// Which backend executes the superstep loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutionMode {
+    /// Sequential cost-model oracle (default; fastest, fully
+    /// deterministic, used for corpus construction).
+    Simulated,
+    /// Thread-per-worker over mpsc channels with a BSP barrier.
+    /// Bit-identical to `Simulated`; spawns `num_workers` OS threads
+    /// per run, so keep worker counts moderate.
+    Threaded,
+}
+
+impl ExecutionMode {
+    /// Lower-case mode name (`simulated` / `threaded`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecutionMode::Simulated => "simulated",
+            ExecutionMode::Threaded => "threaded",
+        }
+    }
+
+    /// Parse a mode name (accepts the obvious abbreviations).
+    pub fn from_name(name: &str) -> Option<ExecutionMode> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "simulated" | "sim" => Some(ExecutionMode::Simulated),
+            "threaded" | "threads" | "thread" => Some(ExecutionMode::Threaded),
+            _ => None,
+        }
+    }
+
+    /// The `GPS_ENGINE_MODE` environment default (unset or unparsable
+    /// values fall back to [`ExecutionMode::Simulated`]).
+    pub fn from_env() -> ExecutionMode {
+        mode_from(std::env::var("GPS_ENGINE_MODE").ok().as_deref())
+    }
+
+    /// Resolve a CLI `--engine-mode` value over the environment
+    /// default: an explicit flag must parse, no flag means
+    /// [`ExecutionMode::from_env`].
+    pub fn resolve(cli: Option<&str>) -> Result<ExecutionMode> {
+        match cli {
+            Some(s) => Self::from_name(s)
+                .ok_or_else(|| err!("--engine-mode expects 'simulated' or 'threaded', got {s:?}")),
+            None => Ok(Self::from_env()),
+        }
+    }
+}
+
+/// `GPS_ENGINE_MODE` parsing rule, separated for testability.
+pub(crate) fn mode_from(value: Option<&str>) -> ExecutionMode {
+    value.and_then(ExecutionMode::from_name).unwrap_or(ExecutionMode::Simulated)
+}
 
 /// Result of one engine run.
 #[derive(Clone, Debug)]
@@ -38,17 +124,91 @@ pub struct RunResult<V> {
     pub ops: OpCounts,
 }
 
-/// Execute `prog` on `g` partitioned by `p` under the `cfg` cost model.
+/// Execute `prog` on `g` partitioned by `p` under the `cfg` cost model
+/// with the default [`ExecutionMode::Simulated`] backend.
 pub fn run<P: VertexProgram>(
     g: &Graph,
     p: &Partitioning,
     prog: &P,
     cfg: &ClusterConfig,
 ) -> RunResult<P::Value> {
+    run_mode(g, p, prog, cfg, ExecutionMode::Simulated)
+}
+
+/// Execute `prog` with an explicit execution mode.
+pub fn run_mode<P: VertexProgram>(
+    g: &Graph,
+    p: &Partitioning,
+    prog: &P,
+    cfg: &ClusterConfig,
+    mode: ExecutionMode,
+) -> RunResult<P::Value> {
     assert_eq!(p.num_workers, cfg.num_workers, "partitioning/cluster mismatch");
+    match mode {
+        ExecutionMode::Simulated => run_simulated(g, p, prog, cfg),
+        ExecutionMode::Threaded => run_threaded(g, p, prog, cfg),
+    }
+}
+
+fn degree_vecs(g: &Graph) -> (Vec<u32>, Vec<u32>) {
+    (
+        g.vertices().map(|v| g.in_degree(v) as u32).collect(),
+        g.vertices().map(|v| g.out_degree(v) as u32).collect(),
+    )
+}
+
+fn initial_active<P: VertexProgram>(prog: &P, gi: &GraphInfo, n: usize) -> Vec<bool> {
+    let mut active = vec![false; n];
+    match prog.fixed_rounds() {
+        Some(_) => active.iter_mut().for_each(|a| *a = true),
+        None => match prog.initial_active(gi) {
+            InitialActive::All => active.iter_mut().for_each(|a| *a = true),
+            InitialActive::Vertices(vs) => vs.iter().for_each(|&v| active[v as usize] = true),
+        },
+    }
+    active
+}
+
+fn should_continue<P: VertexProgram>(prog: &P, step: usize, active: &[bool]) -> bool {
+    match prog.fixed_rounds() {
+        Some(k) => step < k,
+        None => step < prog.max_supersteps() && active.iter().any(|&a| a),
+    }
+}
+
+/// Reassemble the global value vector from the per-worker master lists.
+fn assemble<V>(n: usize, lists: Vec<Vec<(VertexId, V)>>) -> Vec<V> {
+    let mut out: Vec<Option<V>> = (0..n).map(|_| None).collect();
+    for list in lists {
+        for (v, val) in list {
+            debug_assert!(out[v as usize].is_none(), "vertex {v} mastered twice");
+            out[v as usize] = Some(val);
+        }
+    }
+    out.into_iter().map(|o| o.expect("every vertex has exactly one master")).collect()
+}
+
+// ---------------------------------------------------------------- simulated
+
+/// Route a phase's envelopes into the per-worker staging inboxes.
+fn route<P: VertexProgram>(staged: &mut [Vec<Envelope<P>>], env: Vec<Envelope<P>>) {
+    for e in env {
+        staged[e.to as usize].push(e);
+    }
+}
+
+/// Sequential backend: workers run in ascending order each phase, so
+/// inboxes are naturally sorted by sender and all cost folds happen in
+/// the canonical order.
+fn run_simulated<P: VertexProgram>(
+    g: &Graph,
+    p: &Partitioning,
+    prog: &P,
+    cfg: &ClusterConfig,
+) -> RunResult<P::Value> {
     let n = g.num_vertices();
-    let in_degree: Vec<u32> = g.vertices().map(|v| g.in_degree(v) as u32).collect();
-    let out_degree: Vec<u32> = g.vertices().map(|v| g.out_degree(v) as u32).collect();
+    let w_count = p.num_workers;
+    let (in_degree, out_degree) = degree_vecs(g);
     let gi = GraphInfo {
         num_vertices: n,
         num_edges: g.num_edges(),
@@ -56,219 +216,303 @@ pub fn run<P: VertexProgram>(
         in_degree: &in_degree,
         out_degree: &out_degree,
     };
-    let locals = build_local_edges(g, p);
-    let mut values: Vec<P::Value> = g.vertices().map(|v| prog.init(v, &gi)).collect();
+    let mut workers: Vec<WorkerState<P>> = build_worker_states(g, p, prog, &gi);
     let mut ops = OpCounts::default();
     let mut sim = SimTime::default();
+    let mut active = initial_active(prog, &gi, n);
 
-    let mut active = vec![false; n];
-    match prog.fixed_rounds() {
-        Some(_) => active.iter_mut().for_each(|a| *a = true),
-        None => match prog.initial_active(&gi) {
-            InitialActive::All => active.iter_mut().for_each(|a| *a = true),
-            InitialActive::Vertices(vs) => vs.iter().for_each(|&v| active[v as usize] = true),
-        },
-    }
+    // double-buffered inboxes: `current` is drained by the running
+    // phase, `pending` collects for the next one (the BSP hand-off)
+    let mut current: Vec<Vec<Envelope<P>>> = (0..w_count).map(|_| Vec::new()).collect();
+    let mut pending: Vec<Vec<Envelope<P>>> = (0..w_count).map(|_| Vec::new()).collect();
 
-    // reusable gather buffers (drained every superstep)
-    let mut accs: Vec<Option<P::Gather>> = (0..n).map(|_| None).collect();
-    let mut worker_acc: Vec<Option<P::Gather>> = (0..n).map(|_| None).collect();
-    let mut touched: Vec<VertexId> = Vec::new();
     let mut step = 0usize;
-    loop {
-        match prog.fixed_rounds() {
-            Some(k) => {
-                if step >= k {
-                    break;
-                }
-            }
-            None => {
-                if step >= prog.max_supersteps() || !active.iter().any(|&a| a) {
-                    break;
-                }
+    let mut next = vec![false; n]; // reused across supersteps
+    while should_continue(prog, step, &active) {
+        let mut ledger = StepLedger::new(cfg);
+        // ---- Gather ----
+        for w in 0..w_count {
+            let PhaseOut { env, stats } =
+                workers[w].gather_phase(prog, g, &gi, p, &active, step, cfg);
+            ledger.fold(cfg, w, Round::Gather, &stats, &mut ops);
+            route(&mut pending, env);
+        }
+        std::mem::swap(&mut current, &mut pending);
+        // ---- Apply ----
+        for w in 0..w_count {
+            let inbox = std::mem::take(&mut current[w]);
+            let PhaseOut { env, stats } =
+                workers[w].apply_phase(prog, &gi, p, &active, step, cfg, inbox);
+            ledger.fold(cfg, w, Round::Apply, &stats, &mut ops);
+            route(&mut pending, env);
+        }
+        std::mem::swap(&mut current, &mut pending);
+        // ---- Commit (mirrors install the broadcast values) ----
+        for w in 0..w_count {
+            let inbox = std::mem::take(&mut current[w]);
+            workers[w].commit(inbox);
+        }
+        // ---- Scatter ----
+        for w in 0..w_count {
+            let PhaseOut { env, stats } =
+                workers[w].scatter_phase(prog, g, &gi, p, &active, step, cfg);
+            ledger.fold(cfg, w, Round::Scatter, &stats, &mut ops);
+            route(&mut pending, env);
+        }
+        std::mem::swap(&mut current, &mut pending);
+        // ---- Activation hand-off ----
+        for w in 0..w_count {
+            let inbox = std::mem::take(&mut current[w]);
+            workers[w].drain_activations(inbox);
+            for v in workers[w].take_next_active() {
+                next[v as usize] = true;
             }
         }
-        let gather_dir = prog.gather_edges(step);
-        let scatter_dir = prog.scatter_edges(step);
-        let mut sc = StepCost::new(cfg);
-        let mut pending: Vec<(VertexId, P::Value)> = Vec::new();
-        let mut mirror_traffic = false;
-        let mut next_active = vec![false; n];
-
-        // ---- Gather: one sequential sweep over each worker's sorted
-        // edge arrays (no per-vertex binary searches — the former hot
-        // spot; see EXPERIMENTS.md §Perf). Partials fold into `accs`
-        // in ascending-worker order, preserving the deterministic
-        // combine order of the per-replica formulation. ----
-        if gather_dir != EdgeDirection::None {
-            let needs_rank = prog.needs_edge_rank();
-            let op_cost = prog.gather_op_cost();
-            let per_byte = prog.gather_cost_per_byte();
-            let (use_in, use_out) = effective_dirs(gather_dir, g.directed);
-            for (w, local) in locals.iter().enumerate() {
-                debug_assert!(touched.is_empty());
-                let mut cost = 0.0;
-                let mut count = 0u64;
-                let mut sweep = |list: &[crate::graph::Edge]| {
-                    let mut i = 0usize;
-                    while i < list.len() {
-                        let v = list[i].0;
-                        let mut j = i + 1;
-                        while j < list.len() && list[j].0 == v {
-                            j += 1;
-                        }
-                        if active[v as usize] {
-                            let v_val = &values[v as usize];
-                            if worker_acc[v as usize].is_none() {
-                                worker_acc[v as usize] = Some(prog.gather_init());
-                                touched.push(v);
-                            }
-                            let acc = worker_acc[v as usize].as_mut().unwrap();
-                            for &(_, u) in &list[i..j] {
-                                let u_val = &values[u as usize];
-                                let rank =
-                                    if needs_rank { edge_rank(g, u, v, gather_dir) } else { 0 };
-                                prog.gather_fold(acc, step, v, v_val, u, u_val, rank, &gi);
-                                cost += op_cost + per_byte * u_val.bytes() as f64;
-                            }
-                            count += (j - i) as u64;
-                        }
-                        i = j;
-                    }
-                };
-                if use_in {
-                    sweep(&local.by_dst);
-                }
-                if use_out {
-                    sweep(&local.by_src);
-                }
-                sc.compute_ops[w] += cost;
-                ops.gathers += count;
-                // flush this worker's partials toward the masters
-                for &v in &touched {
-                    let partial = worker_acc[v as usize].take().expect("touched ⇒ some");
-                    let master = p.master[v as usize] as usize;
-                    if w != master {
-                        let b = partial.bytes();
-                        sc.charge_message(cfg, w, master, b);
-                        ops.messages += 1;
-                        ops.bytes += b as u64;
-                        mirror_traffic = true;
-                    }
-                    accs[v as usize] = Some(match accs[v as usize].take() {
-                        None => partial,
-                        Some(a) => prog.sum(a, partial),
-                    });
-                }
-                touched.clear();
-            }
-        }
-
-        // ---- Apply (reads old values, writes pending) ----
-        for v in 0..n as VertexId {
-            if !active[v as usize] {
-                continue;
-            }
-            let master = p.master[v as usize] as usize;
-            let acc = accs[v as usize].take().unwrap_or_else(|| prog.gather_init());
-            let new_val = prog.apply(step, v, &values[v as usize], acc, &gi);
-            sc.compute_ops[master] += prog.apply_cost(step, v, &gi);
-            ops.applies += 1;
-            if prog.reactivate_self(step, v, &new_val, &gi) {
-                next_active[v as usize] = true;
-            }
-            let emit = prog.apply_emit_bytes(step, v, &gi);
-            if emit > 0 {
-                // result-store records leave the master's machine
-                let target = (master + cfg.num_workers / cfg.num_machines) % cfg.num_workers;
-                sc.charge_message(cfg, master, target, emit);
-                ops.bytes += emit as u64;
-            }
-            // broadcast to mirrors
-            let vb = new_val.bytes();
-            for &w in &p.replicas[v as usize] {
-                if w as usize != master {
-                    sc.charge_message(cfg, master, w as usize, vb);
-                    ops.messages += 1;
-                    ops.bytes += vb as u64;
-                    mirror_traffic = true;
-                }
-            }
-            pending.push((v, new_val));
-        }
-        if mirror_traffic {
-            sc.message_rounds += 2; // gather-up + apply-down
-        }
-
-        // ---- Commit (BSP barrier between minor-steps) ----
-        for (v, val) in pending {
-            values[v as usize] = val;
-        }
-
-        // ---- Scatter (reads new values, drives activation) ----
-        if scatter_dir != EdgeDirection::None {
-            let mut scatter_msgs = false;
-            for v in 0..n as VertexId {
-                if !active[v as usize] {
-                    continue;
-                }
-                for &w in &p.replicas[v as usize] {
-                    let w = w as usize;
-                    let neighbors: Vec<VertexId> =
-                        neighbors_local(&locals[w], v, scatter_dir, g.directed).collect();
-                    for u in neighbors {
-                        sc.compute_ops[w] += prog.scatter_op_cost();
-                        ops.scatters += 1;
-                        if prog.scatter(step, v, &values[v as usize], u, &gi)
-                            && !next_active[u as usize]
-                        {
-                            next_active[u as usize] = true;
-                            let mu = p.master[u as usize] as usize;
-                            if mu != w {
-                                sc.charge_message(cfg, w, mu, 8);
-                                ops.messages += 1;
-                                ops.bytes += 8;
-                                scatter_msgs = true;
-                            }
-                        }
-                    }
-                }
-            }
-            if scatter_msgs {
-                sc.message_rounds += 1;
-            }
-        }
-
-        sim.add_step(&sc, cfg);
+        ledger.finish(&mut sim, cfg);
         ops.supersteps += 1;
         step += 1;
         if prog.fixed_rounds().is_none() {
-            active = next_active;
+            std::mem::swap(&mut active, &mut next);
         }
+        next.fill(false);
     }
 
-    // ---- Final collect: masters ship results to the leader (worker 0) ----
-    if prog.collect_result() {
-        let mut sc = StepCost::new(cfg);
-        for v in 0..n as VertexId {
-            let master = p.master[v as usize] as usize;
-            if master != 0 {
-                let b = values[v as usize].bytes();
-                sc.charge_message(cfg, master, 0, b);
-                ops.bytes += b as u64;
+    // ---- Final collect: masters ship results to the leader ----
+    let charge = prog.collect_result();
+    let mut ledger = StepLedger::new(cfg);
+    let mut lists = Vec::with_capacity(w_count);
+    for (w, state) in workers.iter_mut().enumerate() {
+        let (stats, vals) = state.collect_phase(cfg, charge);
+        ledger.fold(cfg, w, Round::Collect, &stats, &mut ops);
+        lists.push(vals);
+    }
+    if charge {
+        ledger.finish_collect(&mut sim, cfg);
+    }
+    RunResult { values: assemble(n, lists), sim, ops }
+}
+
+// ----------------------------------------------------------------- threaded
+
+/// Coordinator → worker control messages.
+enum Ctl {
+    /// Run one superstep against the shared activation bitmap.
+    Step { step: usize, active: Arc<Vec<bool>> },
+    /// Ship master values to the leader and exit.
+    Collect { charge: bool },
+}
+
+/// Worker → coordinator reports.
+enum Report<P: VertexProgram> {
+    Phase { worker: usize, round: Round, stats: PhaseStats },
+    StepEnd { next_active: Vec<VertexId> },
+    Collect { worker: usize, stats: PhaseStats, values: Vec<(VertexId, P::Value)> },
+}
+
+/// The thread-per-worker loop: phases run between BSP barriers; each
+/// send/drain pair is separated by two barrier generations so a phase's
+/// inbox never mixes with the next phase's traffic.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop<P: VertexProgram>(
+    mut state: WorkerState<P>,
+    prog: &P,
+    g: &Graph,
+    gi: &GraphInfo<'_>,
+    p: &Partitioning,
+    cfg: &ClusterConfig,
+    inbox: mpsc::Receiver<Envelope<P>>,
+    ctl: mpsc::Receiver<Ctl>,
+    peers: Vec<mpsc::Sender<Envelope<P>>>,
+    report: mpsc::Sender<Report<P>>,
+    barrier: &BspBarrier,
+) {
+    let worker = state.id;
+    let send_all = |env: Vec<Envelope<P>>| {
+        for e in env {
+            peers[e.to as usize].send(e).expect("peer inbox open");
+        }
+    };
+    // mpsc preserves per-sender order; a stable sort by sender yields
+    // the canonical (sender, send order) sequence of the simulated mode
+    let drain_sorted = || {
+        let mut v: Vec<Envelope<P>> = inbox.try_iter().collect();
+        v.sort_by_key(|e| e.from);
+        v
+    };
+    while let Ok(ctl_msg) = ctl.recv() {
+        match ctl_msg {
+            Ctl::Step { step, active } => {
+                let PhaseOut { env, stats } =
+                    state.gather_phase(prog, g, gi, p, &active, step, cfg);
+                send_all(env);
+                report.send(Report::Phase { worker, round: Round::Gather, stats }).unwrap();
+                barrier.wait();
+                let partials = drain_sorted();
+                barrier.wait();
+
+                let PhaseOut { env, stats } =
+                    state.apply_phase(prog, gi, p, &active, step, cfg, partials);
+                send_all(env);
+                report.send(Report::Phase { worker, round: Round::Apply, stats }).unwrap();
+                barrier.wait();
+                state.commit(drain_sorted());
+                barrier.wait();
+
+                let PhaseOut { env, stats } =
+                    state.scatter_phase(prog, g, gi, p, &active, step, cfg);
+                send_all(env);
+                report.send(Report::Phase { worker, round: Round::Scatter, stats }).unwrap();
+                barrier.wait();
+                state.drain_activations(drain_sorted());
+                let next_active = state.take_next_active();
+                report.send(Report::StepEnd { next_active }).unwrap();
+                // no trailing barrier: the coordinator only issues the
+                // next Ctl::Step after every StepEnd arrived
+            }
+            Ctl::Collect { charge } => {
+                let (stats, values) = state.collect_phase(cfg, charge);
+                report.send(Report::Collect { worker, stats, values }).unwrap();
+                return;
             }
         }
-        sc.message_rounds = 1;
-        sim.add_step(&sc, cfg);
     }
-
-    RunResult { values, sim, ops }
 }
+
+/// Receive exactly one report per worker and return the extracted
+/// payloads indexed by worker id (arrival order is
+/// scheduling-dependent; callers fold in ascending worker order).
+fn recv_indexed<P: VertexProgram, T>(
+    rx: &mpsc::Receiver<Report<P>>,
+    w_count: usize,
+    mut extract: impl FnMut(Report<P>) -> (usize, T),
+) -> Vec<T> {
+    let mut slots: Vec<Option<T>> = (0..w_count).map(|_| None).collect();
+    for _ in 0..w_count {
+        let (worker, payload) = extract(rx.recv().expect("worker thread alive"));
+        debug_assert!(slots[worker].is_none());
+        slots[worker] = Some(payload);
+    }
+    slots.into_iter().map(|s| s.expect("one report per worker")).collect()
+}
+
+/// Thread-per-worker backend: spawns one thread per engine worker plus
+/// this coordinator thread, which drives supersteps, folds the cost
+/// ledger and owns termination.
+fn run_threaded<P: VertexProgram>(
+    g: &Graph,
+    p: &Partitioning,
+    prog: &P,
+    cfg: &ClusterConfig,
+) -> RunResult<P::Value> {
+    let n = g.num_vertices();
+    let w_count = p.num_workers;
+    let (in_degree, out_degree) = degree_vecs(g);
+    let gi = GraphInfo {
+        num_vertices: n,
+        num_edges: g.num_edges(),
+        directed: g.directed,
+        in_degree: &in_degree,
+        out_degree: &out_degree,
+    };
+    let states = build_worker_states(g, p, prog, &gi);
+    let barrier = BspBarrier::new(w_count);
+
+    let mut inbox_txs: Vec<mpsc::Sender<Envelope<P>>> = Vec::with_capacity(w_count);
+    let mut inbox_rxs: Vec<mpsc::Receiver<Envelope<P>>> = Vec::with_capacity(w_count);
+    let mut ctl_txs: Vec<mpsc::Sender<Ctl>> = Vec::with_capacity(w_count);
+    let mut ctl_rxs: Vec<mpsc::Receiver<Ctl>> = Vec::with_capacity(w_count);
+    for _ in 0..w_count {
+        let (tx, rx) = mpsc::channel();
+        inbox_txs.push(tx);
+        inbox_rxs.push(rx);
+        let (tx, rx) = mpsc::channel();
+        ctl_txs.push(tx);
+        ctl_rxs.push(rx);
+    }
+    let (report_tx, report_rx) = mpsc::channel::<Report<P>>();
+
+    std::thread::scope(|scope| {
+        let gi_ref = &gi;
+        let barrier_ref = &barrier;
+        for ((state, irx), crx) in
+            states.into_iter().zip(inbox_rxs.into_iter()).zip(ctl_rxs.into_iter())
+        {
+            let peers = inbox_txs.clone();
+            let report = report_tx.clone();
+            scope.spawn(move || {
+                worker_loop(state, prog, g, gi_ref, p, cfg, irx, crx, peers, report, barrier_ref)
+            });
+        }
+        drop(inbox_txs);
+        drop(report_tx);
+
+        let mut ops = OpCounts::default();
+        let mut sim = SimTime::default();
+        let mut active = Arc::new(initial_active(prog, gi_ref, n));
+        let mut step = 0usize;
+        while should_continue(prog, step, &active) {
+            for tx in &ctl_txs {
+                tx.send(Ctl::Step { step, active: Arc::clone(&active) }).unwrap();
+            }
+            let mut ledger = StepLedger::new(cfg);
+            for round in [Round::Gather, Round::Apply, Round::Scatter] {
+                let stats = recv_indexed(&report_rx, w_count, |r| match r {
+                    Report::Phase { worker, round: got, stats } => {
+                        debug_assert_eq!(got, round);
+                        (worker, stats)
+                    }
+                    _ => unreachable!("expected a {round:?} phase report"),
+                });
+                for (w, st) in stats.iter().enumerate() {
+                    ledger.fold(cfg, w, round, st, &mut ops);
+                }
+            }
+            let mut next = vec![false; n];
+            for _ in 0..w_count {
+                match report_rx.recv().expect("worker thread alive") {
+                    Report::StepEnd { next_active, .. } => {
+                        for v in next_active {
+                            next[v as usize] = true;
+                        }
+                    }
+                    _ => unreachable!("expected a StepEnd report"),
+                }
+            }
+            ledger.finish(&mut sim, cfg);
+            ops.supersteps += 1;
+            step += 1;
+            if prog.fixed_rounds().is_none() {
+                active = Arc::new(next);
+            }
+        }
+
+        let charge = prog.collect_result();
+        for tx in &ctl_txs {
+            tx.send(Ctl::Collect { charge }).unwrap();
+        }
+        let collected = recv_indexed(&report_rx, w_count, |r| match r {
+            Report::Collect { worker, stats, values } => (worker, (stats, values)),
+            _ => unreachable!("expected a Collect report"),
+        });
+        let mut ledger = StepLedger::new(cfg);
+        let mut lists = Vec::with_capacity(w_count);
+        for (w, (stats, values)) in collected.into_iter().enumerate() {
+            ledger.fold(cfg, w, Round::Collect, &stats, &mut ops);
+            lists.push(values);
+        }
+        if charge {
+            ledger.finish_collect(&mut sim, cfg);
+        }
+        RunResult { values: assemble(n, lists), sim, ops }
+    })
+}
+
+// ------------------------------------------------------------------ shared
 
 /// Which local edge lists a direction maps to. Undirected graphs store
 /// each edge once in canonical order, so any direction must union both
 /// lists to see every incident edge exactly once.
-fn effective_dirs(dir: EdgeDirection, directed: bool) -> (bool, bool) {
+pub(crate) fn effective_dirs(dir: EdgeDirection, directed: bool) -> (bool, bool) {
     match (dir, directed) {
         (EdgeDirection::None, _) => (false, false),
         (EdgeDirection::In, true) => (true, false),
@@ -278,29 +522,26 @@ fn effective_dirs(dir: EdgeDirection, directed: bool) -> (bool, bool) {
     }
 }
 
-/// Local neighbours of `v` in the given direction (scatter iteration).
-fn neighbors_local<'a>(
-    local: &'a LocalEdges,
-    v: VertexId,
-    dir: EdgeDirection,
-    directed: bool,
-) -> impl Iterator<Item = VertexId> + 'a {
-    let (use_in, use_out) = effective_dirs(dir, directed);
-    let ins: &[crate::graph::Edge] = if use_in { local.in_of(v) } else { &[] };
-    let outs: &[crate::graph::Edge] = if use_out { local.out_of(v) } else { &[] };
-    ins.iter().chain(outs.iter()).map(|&(_, u)| u)
-}
-
 /// Index of `dst` in `src`'s neighbour list for deterministic walk
 /// routing. For `In`-gather the edge is (u=src → v=dst), so the rank is
 /// `v`'s position among `u`'s out-neighbours.
-fn edge_rank(g: &Graph, u: VertexId, v: VertexId, dir: EdgeDirection) -> u32 {
+///
+/// **Invariant**: callers pass only `(u, v)` pairs read off an actual
+/// local edge in direction `dir` (`In` or `Out`), so the lookup always
+/// succeeds — for undirected graphs the adjacency is symmetric, so both
+/// sweep lists satisfy it too. `Both`-direction gathers on directed
+/// graphs are excluded by the caller (ranks would be ambiguous there);
+/// the `edge_rank_always_resolves` test pins the invariant, and debug
+/// builds assert it instead of silently mapping a miss to rank 0.
+pub(crate) fn edge_rank(g: &Graph, u: VertexId, v: VertexId, dir: EdgeDirection) -> u32 {
     let list = match dir {
         EdgeDirection::In => g.out_neighbors(u),
         EdgeDirection::Out => g.in_neighbors(u),
         _ => g.out_neighbors(u),
     };
-    list.binary_search(&v).unwrap_or(0) as u32
+    let rank = list.binary_search(&v);
+    debug_assert!(rank.is_ok(), "edge ({u},{v}) absent from its {dir:?}-rank list");
+    rank.unwrap_or(0) as u32
 }
 
 #[cfg(test)]
@@ -434,5 +675,65 @@ mod tests {
         check::<Graph>();
         check::<Partitioning>();
         check::<ClusterConfig>();
+    }
+
+    /// The threaded backend is bit-identical to the simulated oracle —
+    /// values, op counters and simulated time (the full matrix over
+    /// algorithms/strategies lives in `tests/mode_equivalence.rs`).
+    #[test]
+    fn threaded_matches_simulated_smoke() {
+        let g = small_graph();
+        for &w in &[1usize, 3, 4] {
+            let cfg = ClusterConfig::with_workers(w);
+            let p = Strategy::Hdrf(50).partition(&g, w);
+            let a = run_mode(&g, &p, &InDegreeProg, &cfg, ExecutionMode::Simulated);
+            let b = run_mode(&g, &p, &InDegreeProg, &cfg, ExecutionMode::Threaded);
+            assert_eq!(a.values, b.values, "values differ at {w} workers");
+            assert_eq!(a.ops, b.ops, "op counts differ at {w} workers");
+            assert_eq!(
+                a.sim.total.to_bits(),
+                b.sim.total.to_bits(),
+                "sim time differs at {w} workers"
+            );
+        }
+    }
+
+    #[test]
+    fn execution_mode_parsing() {
+        assert_eq!(ExecutionMode::from_name("simulated"), Some(ExecutionMode::Simulated));
+        assert_eq!(ExecutionMode::from_name("SIM"), Some(ExecutionMode::Simulated));
+        assert_eq!(ExecutionMode::from_name(" threaded "), Some(ExecutionMode::Threaded));
+        assert_eq!(ExecutionMode::from_name("gpu"), None);
+        assert_eq!(mode_from(None), ExecutionMode::Simulated);
+        assert_eq!(mode_from(Some("junk")), ExecutionMode::Simulated);
+        assert_eq!(mode_from(Some("threads")), ExecutionMode::Threaded);
+        assert_eq!(ExecutionMode::Threaded.name(), "threaded");
+        assert!(ExecutionMode::resolve(Some("nope")).is_err());
+        assert_eq!(ExecutionMode::resolve(Some("sim")).unwrap(), ExecutionMode::Simulated);
+    }
+
+    /// The `edge_rank` invariant: every (u, v) the gather sweeps can
+    /// hand to `edge_rank` resolves to a real position — on directed
+    /// graphs for `In`/`Out`, and on undirected graphs (symmetric
+    /// adjacency) for every incident pair in both orders.
+    #[test]
+    fn edge_rank_always_resolves() {
+        let mut rng = crate::util::rng::Rng::new(202);
+        let gd = crate::graph::gen::erdos::generate("d", 80, 400, true, &mut rng);
+        for &(u, v) in gd.edges() {
+            // In-gather sees (v ← u): rank of v among u's out-neighbours
+            let r = edge_rank(&gd, u, v, EdgeDirection::In);
+            assert_eq!(gd.out_neighbors(u)[r as usize], v);
+            // Out-gather sees (u → v): rank of u among v's in-neighbours
+            let r = edge_rank(&gd, v, u, EdgeDirection::Out);
+            assert_eq!(gd.in_neighbors(v)[r as usize], u);
+        }
+        let gu = crate::graph::gen::erdos::generate("u", 80, 400, false, &mut rng);
+        for &(u, v) in gu.edges() {
+            for (a, b) in [(u, v), (v, u)] {
+                let r = edge_rank(&gu, a, b, EdgeDirection::In);
+                assert_eq!(gu.out_neighbors(a)[r as usize], b);
+            }
+        }
     }
 }

@@ -1,0 +1,252 @@
+//! The typed master↔mirror message layer.
+//!
+//! Everything that crosses a worker boundary during a superstep is an
+//! [`Envelope`] carrying one [`Msg`]; purely local traffic (a replica's
+//! partial for a vertex it masters itself, a master updating its own
+//! value cache) never becomes a message and is never charged —
+//! matching the cost model's "local is free" rule structurally.
+//!
+//! Cost accounting is derived *from* this layer instead of ad-hoc
+//! `charge_message` calls: [`PhaseOut::push`] is the only way a phase
+//! emits a message, and it simultaneously enqueues the envelope and
+//! folds its size into the phase's [`SendAccount`]. A charged byte
+//! therefore always corresponds to an actual enqueued message, in both
+//! execution modes, and the per-superstep message-round count is
+//! derived from which [`Round`]s saw traffic
+//! ([`super::cost::StepLedger`]).
+//!
+//! Envelopes are tagged with the sending worker; receivers process an
+//! inbox sorted by `(sender, send order)` so that combine order — and
+//! with it every floating-point fold — is identical whether the
+//! transport is the simulated in-memory router or real
+//! [`std::sync::mpsc`] channels.
+
+use crate::graph::VertexId;
+
+use super::cost::ClusterConfig;
+use super::gas::{Payload, VertexProgram};
+
+/// Activation notices carry one vertex id (8-byte scalar convention).
+pub const ACTIVATION_BYTES: usize = 8;
+
+/// The message round a message kind belongs to. A superstep charges one
+/// latency unit per round that saw at least one cross-worker message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Round {
+    /// Mirror→master gather partials (up).
+    Gather = 0,
+    /// Master→mirror value broadcasts and result-store emissions (down).
+    Apply = 1,
+    /// Scatter-side activation notices.
+    Scatter = 2,
+    /// Final master→leader result shipment.
+    Collect = 3,
+}
+
+/// A typed engine message.
+pub enum Msg<P: VertexProgram> {
+    /// A replica's partial accumulator for `v`, addressed to `v`'s
+    /// master (gather round).
+    GatherPartial { v: VertexId, partial: P::Gather },
+    /// `v`'s freshly applied value, master → one mirror (apply round).
+    ValueUpdate { v: VertexId, value: P::Value },
+    /// A record batch emitted to the distributed result store
+    /// (apply round; content abstracted, only the size matters).
+    ResultEmit { bytes: usize },
+    /// Activation of `v` for the next superstep, addressed to `v`'s
+    /// master (scatter round).
+    Activate { v: VertexId },
+}
+
+impl<P: VertexProgram> Msg<P> {
+    /// Serialized size charged to the communication model.
+    pub fn bytes(&self) -> usize {
+        match self {
+            Msg::GatherPartial { partial, .. } => partial.bytes(),
+            Msg::ValueUpdate { value, .. } => value.bytes(),
+            Msg::ResultEmit { bytes } => *bytes,
+            Msg::Activate { .. } => ACTIVATION_BYTES,
+        }
+    }
+
+    /// The round this message kind travels in.
+    pub fn round(&self) -> Round {
+        match self {
+            Msg::GatherPartial { .. } => Round::Gather,
+            Msg::ValueUpdate { .. } | Msg::ResultEmit { .. } => Round::Apply,
+            Msg::Activate { .. } => Round::Scatter,
+        }
+    }
+}
+
+/// An addressed message in flight. `from == to` never occurs — local
+/// hand-offs bypass the message layer entirely.
+pub struct Envelope<P: VertexProgram> {
+    pub from: u16,
+    pub to: u16,
+    pub msg: Msg<P>,
+}
+
+/// Send-side accounting for one worker's phase, accumulated in send
+/// order so the floating-point byte sums are deterministic.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SendAccount {
+    /// Cross-worker messages enqueued.
+    pub msgs: u64,
+    /// Their payload bytes.
+    pub bytes: u64,
+    /// Bytes that stayed on the sender's machine (charged against
+    /// shared-memory bandwidth).
+    pub intra: f64,
+    /// Bytes that crossed a machine boundary (charged against the NIC).
+    pub inter: f64,
+}
+
+impl SendAccount {
+    /// Account one message under the [`ClusterConfig::route`] charging
+    /// rule (local messages are free and uncounted).
+    #[inline]
+    pub fn push(&mut self, cfg: &ClusterConfig, from: usize, to: usize, bytes: usize) {
+        match cfg.route(from, to) {
+            None => {}
+            Some(link) => {
+                self.msgs += 1;
+                self.bytes += bytes as u64;
+                match link {
+                    super::cost::Link::Intra => self.intra += bytes as f64,
+                    super::cost::Link::Inter => self.inter += bytes as f64,
+                }
+            }
+        }
+    }
+}
+
+/// Everything one worker reports out of one phase: CPU work, operation
+/// counters and the send-side accounting. Folded into the step cost per
+/// worker in ascending worker order by [`super::cost::StepLedger`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseStats {
+    /// Weighted compute ops this worker performed in the phase.
+    pub compute: f64,
+    /// Gather edge visits.
+    pub gathers: u64,
+    /// Vertex applies.
+    pub applies: u64,
+    /// Scatter edge visits.
+    pub scatters: u64,
+    /// Message accounting.
+    pub send: SendAccount,
+}
+
+/// One phase's output: the envelopes to deliver plus the stats to fold.
+pub struct PhaseOut<P: VertexProgram> {
+    pub env: Vec<Envelope<P>>,
+    pub stats: PhaseStats,
+}
+
+impl<P: VertexProgram> PhaseOut<P> {
+    pub fn new() -> Self {
+        PhaseOut { env: Vec::new(), stats: PhaseStats::default() }
+    }
+
+    /// Enqueue `envelope` and charge it — the single choke point that
+    /// keeps the cost model and the actual message stream in lockstep.
+    #[inline]
+    pub fn push(&mut self, cfg: &ClusterConfig, envelope: Envelope<P>) {
+        debug_assert_ne!(envelope.from, envelope.to, "local traffic must bypass the msg layer");
+        self.stats.send.push(cfg, envelope.from as usize, envelope.to as usize, envelope.msg.bytes());
+        self.env.push(envelope);
+    }
+}
+
+impl<P: VertexProgram> Default for PhaseOut<P> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::gas::{EdgeDirection, GraphInfo};
+
+    /// A minimal program so the generic message types can be exercised.
+    struct Probe;
+    impl VertexProgram for Probe {
+        type Value = f64;
+        type Gather = (Vec<u32>, f64);
+        fn name(&self) -> &'static str {
+            "probe"
+        }
+        fn init(&self, _v: VertexId, _g: &GraphInfo) -> f64 {
+            0.0
+        }
+        fn gather_edges(&self, _step: usize) -> EdgeDirection {
+            EdgeDirection::In
+        }
+        fn gather_init(&self) -> (Vec<u32>, f64) {
+            (Vec::new(), 0.0)
+        }
+        fn gather(
+            &self,
+            _s: usize,
+            _v: VertexId,
+            _vv: &f64,
+            _u: VertexId,
+            _uv: &f64,
+            _r: u32,
+            _g: &GraphInfo,
+        ) -> (Vec<u32>, f64) {
+            (Vec::new(), 0.0)
+        }
+        fn sum(&self, a: (Vec<u32>, f64), _b: (Vec<u32>, f64)) -> (Vec<u32>, f64) {
+            a
+        }
+        fn apply(&self, _s: usize, _v: VertexId, _old: &f64, _acc: (Vec<u32>, f64), _g: &GraphInfo) -> f64 {
+            0.0
+        }
+    }
+
+    #[test]
+    fn message_sizes_and_rounds() {
+        let m: Msg<Probe> = Msg::GatherPartial { v: 3, partial: (vec![1, 2], 0.5) };
+        assert_eq!(m.bytes(), (8 + 8) + 8, "vec header + 2×u32 + f64");
+        assert_eq!(m.round(), Round::Gather);
+        let m: Msg<Probe> = Msg::ValueUpdate { v: 1, value: 2.0 };
+        assert_eq!(m.bytes(), 8);
+        assert_eq!(m.round(), Round::Apply);
+        let m: Msg<Probe> = Msg::ResultEmit { bytes: 123 };
+        assert_eq!(m.bytes(), 123);
+        assert_eq!(m.round(), Round::Apply);
+        let m: Msg<Probe> = Msg::Activate { v: 7 };
+        assert_eq!(m.bytes(), ACTIVATION_BYTES);
+        assert_eq!(m.round(), Round::Scatter);
+    }
+
+    #[test]
+    fn send_account_buckets_by_machine() {
+        let cfg = ClusterConfig { num_workers: 4, num_machines: 2, ..Default::default() };
+        let mut acc = SendAccount::default();
+        acc.push(&cfg, 0, 1, 100); // same machine
+        acc.push(&cfg, 0, 2, 10); // cross machine
+        acc.push(&cfg, 3, 3, 1000); // local: free
+        assert_eq!(acc.msgs, 2);
+        assert_eq!(acc.bytes, 110);
+        assert_eq!(acc.intra, 100.0);
+        assert_eq!(acc.inter, 10.0);
+    }
+
+    #[test]
+    fn phase_out_charges_exactly_what_it_enqueues() {
+        let cfg = ClusterConfig::with_workers(4);
+        let mut out: PhaseOut<Probe> = PhaseOut::new();
+        out.push(&cfg, Envelope { from: 1, to: 2, msg: Msg::Activate { v: 9 } });
+        out.push(&cfg, Envelope { from: 1, to: 0, msg: Msg::ValueUpdate { v: 4, value: 1.0 } });
+        assert_eq!(out.env.len(), 2);
+        assert_eq!(out.stats.send.msgs, 2);
+        assert_eq!(
+            out.stats.send.bytes,
+            out.env.iter().map(|e| e.msg.bytes() as u64).sum::<u64>()
+        );
+    }
+}

@@ -1,0 +1,492 @@
+//! Per-worker engine state and the superstep phase implementations.
+//!
+//! A [`WorkerState`] owns everything one worker of the distributed GAS
+//! engine would hold in memory: its local edges ([`LocalEdges`]), a
+//! value cache covering exactly the vertices it replicates or masters,
+//! master-side gather accumulators, and the scratch buffers of the
+//! current phase. The *same* phase methods run under both execution
+//! modes — [`super::ExecutionMode::Simulated`] calls them sequentially
+//! in ascending worker order and routes the returned envelopes through
+//! in-memory inboxes, [`super::ExecutionMode::Threaded`] runs each
+//! state on its own thread over mpsc channels — which is what makes
+//! results, operation counts and simulated times bit-identical across
+//! modes by construction.
+//!
+//! Determinism contract: a phase is a pure function of (worker state,
+//! global activation bitmap, inbox sorted by sender). Gather partials
+//! combine at the master in ascending sender-worker order with the
+//! master's own partial slotted at its own index — the historical
+//! per-replica combine order — so every floating-point fold sequence is
+//! reproduced exactly regardless of transport or thread scheduling.
+
+use crate::graph::{Edge, Graph, VertexId};
+use crate::partition::Partitioning;
+
+use super::cost::ClusterConfig;
+use super::gas::{EdgeDirection, GraphInfo, Payload, VertexProgram};
+use super::msg::{Envelope, Msg, PhaseOut, PhaseStats};
+use super::worker::{build_local_edges, LocalEdges};
+use super::{edge_rank, effective_dirs};
+
+/// Sentinel for "vertex not present on this worker".
+const NO_LID: u32 = u32::MAX;
+
+/// One worker's complete engine state.
+pub struct WorkerState<P: VertexProgram> {
+    /// Worker id (< `Partitioning::num_workers`).
+    pub id: usize,
+    /// The worker's local edges, indexed both ways.
+    pub local: LocalEdges,
+    /// Interest set: replicas ∪ mastered vertices, ascending.
+    verts: Vec<VertexId>,
+    /// Vertices this worker masters, ascending.
+    masters: Vec<VertexId>,
+    /// Global vertex id → local dense index into `values`/`accs`
+    /// (`NO_LID` when absent).
+    lid: Vec<u32>,
+    /// Mirror-synchronised value cache, by local index.
+    values: Vec<P::Value>,
+    /// Master-side gather accumulators, by local index.
+    accs: Vec<Option<P::Gather>>,
+    /// Per-phase local partials, by local index (drained every gather).
+    gacc: Vec<Option<P::Gather>>,
+    gacc_touched: Vec<VertexId>,
+    /// Partials for vertices this worker masters itself (no message).
+    self_partials: Vec<(VertexId, P::Gather)>,
+    /// Scatter-phase activation dedup (one notice per target per worker
+    /// per superstep), by local index.
+    seen: Vec<bool>,
+    seen_touched: Vec<VertexId>,
+    /// Next-superstep activations this worker's masters learned about.
+    next_active: Vec<VertexId>,
+}
+
+/// Build every worker's state: local edge indexes, interest sets, and
+/// `init` values for all replicated/mastered vertices. Initial values
+/// come from the deterministic [`VertexProgram::init`], so replicas
+/// agree without an init broadcast — the same convention real GAS
+/// engines use when loading a partitioned graph.
+pub fn build_worker_states<P: VertexProgram>(
+    g: &Graph,
+    p: &Partitioning,
+    prog: &P,
+    gi: &GraphInfo<'_>,
+) -> Vec<WorkerState<P>> {
+    let n = g.num_vertices();
+    let locals = build_local_edges(g, p);
+    let mut verts: Vec<Vec<VertexId>> = vec![Vec::new(); p.num_workers];
+    let mut masters: Vec<Vec<VertexId>> = vec![Vec::new(); p.num_workers];
+    for v in 0..n as VertexId {
+        for &w in &p.replicas[v as usize] {
+            verts[w as usize].push(v);
+        }
+        let m = p.master[v as usize];
+        masters[m as usize].push(v);
+        // isolated vertices have no replicas; their master still owns them
+        if !p.replicas[v as usize].contains(&m) {
+            verts[m as usize].push(v);
+        }
+    }
+    locals
+        .into_iter()
+        .enumerate()
+        .map(|(w, local)| {
+            let vs = std::mem::take(&mut verts[w]);
+            let ms = std::mem::take(&mut masters[w]);
+            let mut lid = vec![NO_LID; n];
+            for (i, &v) in vs.iter().enumerate() {
+                lid[v as usize] = i as u32;
+            }
+            let values: Vec<P::Value> = vs.iter().map(|&v| prog.init(v, gi)).collect();
+            let len = vs.len();
+            WorkerState {
+                id: w,
+                local,
+                verts: vs,
+                masters: ms,
+                lid,
+                values,
+                accs: (0..len).map(|_| None).collect(),
+                gacc: (0..len).map(|_| None).collect(),
+                gacc_touched: Vec::new(),
+                self_partials: Vec::new(),
+                seen: vec![false; len],
+                seen_touched: Vec::new(),
+                next_active: Vec::new(),
+            }
+        })
+        .collect()
+}
+
+/// One sequential sweep over a worker's sorted edge list: group by the
+/// owning vertex, fold active vertices' edges into local partials (no
+/// per-vertex binary searches — the engine's hottest loop).
+#[allow(clippy::too_many_arguments)]
+fn sweep<P: VertexProgram>(
+    prog: &P,
+    g: &Graph,
+    gi: &GraphInfo<'_>,
+    step: usize,
+    dir: EdgeDirection,
+    needs_rank: bool,
+    op_cost: f64,
+    per_byte: f64,
+    list: &[Edge],
+    active: &[bool],
+    lid: &[u32],
+    values: &[P::Value],
+    gacc: &mut [Option<P::Gather>],
+    touched: &mut Vec<VertexId>,
+    cost: &mut f64,
+    count: &mut u64,
+) {
+    let mut i = 0usize;
+    while i < list.len() {
+        let v = list[i].0;
+        let mut j = i + 1;
+        while j < list.len() && list[j].0 == v {
+            j += 1;
+        }
+        if active[v as usize] {
+            let vl = lid[v as usize] as usize;
+            debug_assert_ne!(vl, NO_LID as usize, "edge endpoint must be replicated here");
+            if gacc[vl].is_none() {
+                gacc[vl] = Some(prog.gather_init());
+                touched.push(v);
+            }
+            let acc = gacc[vl].as_mut().expect("just initialised");
+            let v_val = &values[vl];
+            for &(_, u) in &list[i..j] {
+                let u_val = &values[lid[u as usize] as usize];
+                let rank = if needs_rank { edge_rank(g, u, v, dir) } else { 0 };
+                prog.gather_fold(acc, step, v, v_val, u, u_val, rank, gi);
+                *cost += op_cost + per_byte * u_val.bytes() as f64;
+            }
+            *count += (j - i) as u64;
+        }
+        i = j;
+    }
+}
+
+impl<P: VertexProgram> WorkerState<P> {
+    /// Number of vertices replicated or mastered on this worker.
+    pub fn num_local_vertices(&self) -> usize {
+        self.verts.len()
+    }
+
+    /// Vertices this worker masters, ascending.
+    pub fn masters(&self) -> &[VertexId] {
+        &self.masters
+    }
+
+    /// **Gather**: fold the program's gather over this worker's local
+    /// edges of every active vertex, then flush each partial — kept
+    /// locally when this worker masters the vertex, otherwise enqueued
+    /// as a [`Msg::GatherPartial`] to the master.
+    pub fn gather_phase(
+        &mut self,
+        prog: &P,
+        g: &Graph,
+        gi: &GraphInfo<'_>,
+        p: &Partitioning,
+        active: &[bool],
+        step: usize,
+        cfg: &ClusterConfig,
+    ) -> PhaseOut<P> {
+        let mut out = PhaseOut::new();
+        let dir = prog.gather_edges(step);
+        if dir == EdgeDirection::None {
+            return out;
+        }
+        let needs_rank = prog.needs_edge_rank();
+        debug_assert!(
+            !needs_rank || dir != EdgeDirection::Both || !g.directed,
+            "edge ranks are ill-defined for Both-direction gathers on directed graphs"
+        );
+        let op_cost = prog.gather_op_cost();
+        let per_byte = prog.gather_cost_per_byte();
+        let (use_in, use_out) = effective_dirs(dir, g.directed);
+        let mut cost = 0.0;
+        let mut count = 0u64;
+        debug_assert!(self.gacc_touched.is_empty() && self.self_partials.is_empty());
+        if use_in {
+            sweep(
+                prog, g, gi, step, dir, needs_rank, op_cost, per_byte, &self.local.by_dst, active,
+                &self.lid, &self.values, &mut self.gacc, &mut self.gacc_touched, &mut cost,
+                &mut count,
+            );
+        }
+        if use_out {
+            sweep(
+                prog, g, gi, step, dir, needs_rank, op_cost, per_byte, &self.local.by_src, active,
+                &self.lid, &self.values, &mut self.gacc, &mut self.gacc_touched, &mut cost,
+                &mut count,
+            );
+        }
+        out.stats.compute = cost;
+        out.stats.gathers = count;
+        // flush partials toward the masters, in touch order
+        for &v in &self.gacc_touched {
+            let l = self.lid[v as usize] as usize;
+            let partial = self.gacc[l].take().expect("touched ⇒ some");
+            let m = p.master[v as usize];
+            if m as usize == self.id {
+                self.self_partials.push((v, partial));
+            } else {
+                out.push(
+                    cfg,
+                    Envelope { from: self.id as u16, to: m, msg: Msg::GatherPartial { v, partial } },
+                );
+            }
+        }
+        self.gacc_touched.clear();
+        out
+    }
+
+    /// Fold one gather partial into the master-side accumulator.
+    fn fold_partial(&mut self, prog: &P, v: VertexId, partial: P::Gather) {
+        let l = self.lid[v as usize] as usize;
+        debug_assert_ne!(l, NO_LID as usize, "partials only target the vertex's master");
+        self.accs[l] = Some(match self.accs[l].take() {
+            None => partial,
+            Some(a) => prog.sum(a, partial),
+        });
+    }
+
+    /// **Apply**: combine the inbound partials (ascending sender order,
+    /// with this worker's own partials at its own position), apply
+    /// every active mastered vertex, commit the master copy, and
+    /// enqueue [`Msg::ValueUpdate`]s for the mirrors plus any
+    /// [`Msg::ResultEmit`] records. `inbox` must be sorted by sender.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_phase(
+        &mut self,
+        prog: &P,
+        gi: &GraphInfo<'_>,
+        p: &Partitioning,
+        active: &[bool],
+        step: usize,
+        cfg: &ClusterConfig,
+        inbox: Vec<Envelope<P>>,
+    ) -> PhaseOut<P> {
+        debug_assert!(inbox.windows(2).all(|w| w[0].from <= w[1].from), "inbox sorted by sender");
+        let split = inbox.partition_point(|e| (e.from as usize) < self.id);
+        let mut lo = inbox;
+        let hi = lo.split_off(split);
+        let fold_envelope = |state: &mut Self, e: Envelope<P>| match e.msg {
+            Msg::GatherPartial { v, partial } => state.fold_partial(prog, v, partial),
+            _ => debug_assert!(false, "non-gather message in apply inbox"),
+        };
+        // ascending sender order, own partials slotted at this worker's
+        // own index — the historical per-replica combine order
+        for e in lo {
+            fold_envelope(self, e);
+        }
+        for (v, partial) in std::mem::take(&mut self.self_partials) {
+            self.fold_partial(prog, v, partial);
+        }
+        for e in hi {
+            fold_envelope(self, e);
+        }
+
+        let mut out = PhaseOut::new();
+        let emit_target = (self.id + cfg.num_workers / cfg.num_machines) % cfg.num_workers;
+        for mi in 0..self.masters.len() {
+            let v = self.masters[mi];
+            if !active[v as usize] {
+                continue;
+            }
+            let l = self.lid[v as usize] as usize;
+            let acc = self.accs[l].take().unwrap_or_else(|| prog.gather_init());
+            let new_val = prog.apply(step, v, &self.values[l], acc, gi);
+            out.stats.compute += prog.apply_cost(step, v, gi);
+            out.stats.applies += 1;
+            if prog.reactivate_self(step, v, &new_val, gi) {
+                self.next_active.push(v);
+            }
+            let emit = prog.apply_emit_bytes(step, v, gi);
+            if emit > 0 && emit_target != self.id {
+                out.push(
+                    cfg,
+                    Envelope {
+                        from: self.id as u16,
+                        to: emit_target as u16,
+                        msg: Msg::ResultEmit { bytes: emit },
+                    },
+                );
+            }
+            for &wr in &p.replicas[v as usize] {
+                if wr as usize != self.id {
+                    out.push(
+                        cfg,
+                        Envelope {
+                            from: self.id as u16,
+                            to: wr,
+                            msg: Msg::ValueUpdate { v, value: new_val.clone() },
+                        },
+                    );
+                }
+            }
+            // master commits its own copy directly (local, free)
+            self.values[l] = new_val;
+        }
+        out
+    }
+
+    /// **Commit**: install the value broadcasts received from masters
+    /// (the BSP barrier between apply and scatter). Result-store
+    /// records are accepted and dropped — only their size matters.
+    pub fn commit(&mut self, inbox: Vec<Envelope<P>>) {
+        for e in inbox {
+            match e.msg {
+                Msg::ValueUpdate { v, value } => {
+                    let l = self.lid[v as usize] as usize;
+                    debug_assert_ne!(l, NO_LID as usize, "updates only reach replicas");
+                    self.values[l] = value;
+                }
+                Msg::ResultEmit { .. } => {}
+                _ => debug_assert!(false, "unexpected message kind in commit"),
+            }
+        }
+    }
+
+    /// **Scatter**: walk the local edges of every active replica in the
+    /// program's scatter direction (chained slices — no per-vertex
+    /// allocation) and activate neighbours for the next superstep: a
+    /// locally mastered target is recorded directly, a remote one gets
+    /// one [`Msg::Activate`] per (worker, target) per superstep.
+    pub fn scatter_phase(
+        &mut self,
+        prog: &P,
+        g: &Graph,
+        gi: &GraphInfo<'_>,
+        p: &Partitioning,
+        active: &[bool],
+        step: usize,
+        cfg: &ClusterConfig,
+    ) -> PhaseOut<P> {
+        let mut out = PhaseOut::new();
+        let dir = prog.scatter_edges(step);
+        if dir == EdgeDirection::None {
+            return out;
+        }
+        let (use_in, use_out) = effective_dirs(dir, g.directed);
+        let scatter_cost = prog.scatter_op_cost();
+        for vi in 0..self.verts.len() {
+            let v = self.verts[vi];
+            if !active[v as usize] {
+                continue;
+            }
+            let vl = self.lid[v as usize] as usize;
+            let ins: &[Edge] = if use_in { self.local.in_of(v) } else { &[] };
+            let outs: &[Edge] = if use_out { self.local.out_of(v) } else { &[] };
+            for &(_, u) in ins.iter().chain(outs.iter()) {
+                out.stats.compute += scatter_cost;
+                out.stats.scatters += 1;
+                if prog.scatter(step, v, &self.values[vl], u, gi) {
+                    let ul = self.lid[u as usize] as usize;
+                    if !self.seen[ul] {
+                        self.seen[ul] = true;
+                        self.seen_touched.push(u);
+                        let mu = p.master[u as usize];
+                        if mu as usize == self.id {
+                            self.next_active.push(u);
+                        } else {
+                            out.push(
+                                cfg,
+                                Envelope { from: self.id as u16, to: mu, msg: Msg::Activate { v: u } },
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        for &u in &self.seen_touched {
+            self.seen[self.lid[u as usize] as usize] = false;
+        }
+        self.seen_touched.clear();
+        out
+    }
+
+    /// Record the activation notices addressed to this worker's masters.
+    pub fn drain_activations(&mut self, inbox: Vec<Envelope<P>>) {
+        for e in inbox {
+            match e.msg {
+                Msg::Activate { v } => self.next_active.push(v),
+                _ => debug_assert!(false, "unexpected message kind in activation drain"),
+            }
+        }
+    }
+
+    /// Hand the accumulated next-superstep activations to the driver.
+    pub fn take_next_active(&mut self) -> Vec<VertexId> {
+        std::mem::take(&mut self.next_active)
+    }
+
+    /// **Collect**: ship this worker's master values to the leader
+    /// (worker 0). The values always travel (they are the run's
+    /// result); the traffic is only *charged* when `charge` is set
+    /// ([`VertexProgram::collect_result`]).
+    pub fn collect_phase(
+        &mut self,
+        cfg: &ClusterConfig,
+        charge: bool,
+    ) -> (PhaseStats, Vec<(VertexId, P::Value)>) {
+        let mut stats = PhaseStats::default();
+        let mut vals = Vec::with_capacity(self.masters.len());
+        for mi in 0..self.masters.len() {
+            let v = self.masters[mi];
+            let value = self.values[self.lid[v as usize] as usize].clone();
+            if charge {
+                stats.send.push(cfg, self.id, 0, value.bytes());
+            }
+            vals.push((v, value));
+        }
+        (stats, vals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::Strategy;
+
+    #[test]
+    fn worker_states_cover_the_graph() {
+        let mut rng = crate::util::rng::Rng::new(77);
+        let g = crate::graph::gen::erdos::generate("t", 120, 500, true, &mut rng);
+        let p = Strategy::Hdrf(50).partition(&g, 6);
+        let in_degree: Vec<u32> = g.vertices().map(|v| g.in_degree(v) as u32).collect();
+        let out_degree: Vec<u32> = g.vertices().map(|v| g.out_degree(v) as u32).collect();
+        let gi = GraphInfo {
+            num_vertices: g.num_vertices(),
+            num_edges: g.num_edges(),
+            directed: g.directed,
+            in_degree: &in_degree,
+            out_degree: &out_degree,
+        };
+        let states = build_worker_states(&g, &p, &crate::algorithms::degree::InDegree, &gi);
+        assert_eq!(states.len(), 6);
+        // every vertex is mastered exactly once
+        let mastered: usize = states.iter().map(|s| s.masters().len()).sum();
+        assert_eq!(mastered, g.num_vertices());
+        for s in &states {
+            // interest sets are sorted, deduplicated and indexable
+            assert!(s.verts.windows(2).all(|w| w[0] < w[1]));
+            for (i, &v) in s.verts.iter().enumerate() {
+                assert_eq!(s.lid[v as usize] as usize, i);
+            }
+            assert_eq!(s.values.len(), s.num_local_vertices());
+            // masters are part of the interest set
+            for &v in s.masters() {
+                assert_ne!(s.lid[v as usize], NO_LID, "master {v} missing from worker {}", s.id);
+                assert_eq!(p.master[v as usize] as usize, s.id);
+            }
+            // edge endpoints are replicated locally
+            for &(a, b) in &s.local.by_src {
+                assert_ne!(s.lid[a as usize], NO_LID);
+                assert_ne!(s.lid[b as usize], NO_LID);
+            }
+        }
+    }
+}

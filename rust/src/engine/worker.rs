@@ -5,6 +5,8 @@
 //! served by two sorted copies of the worker's edges (by source and by
 //! destination) with binary-searched group lookup, mirroring the
 //! paper's sorted-edge-list representation (§3.1) at worker scope.
+//! [`super::state::WorkerState`] builds the rest of a worker's engine
+//! state (value cache, gather buffers) on top of these indexes.
 
 use crate::graph::{Edge, Graph, VertexId};
 use crate::partition::Partitioning;

@@ -17,6 +17,7 @@ use crate::dataset::augment::augment;
 use crate::dataset::logs::LogStore;
 use crate::dataset::split::{test_split, TestSet};
 use crate::engine::cost::ClusterConfig;
+use crate::engine::ExecutionMode;
 use crate::etrm::scores::{rank_of_selected, TaskScores};
 use crate::etrm::Etrm;
 use crate::features::{DataFeatures, TaskFeatures};
@@ -40,6 +41,10 @@ pub struct PipelineConfig {
     /// (falling back to the machine's available parallelism). Results
     /// are bit-identical for any value.
     pub threads: usize,
+    /// Engine backend the corpus tasks run on (default: the
+    /// `GPS_ENGINE_MODE` env, falling back to `Simulated`). The two
+    /// modes produce bit-identical logs.
+    pub engine_mode: ExecutionMode,
     /// Cap on synthetic tuples (None = the full ~0.43 M? at r 2..9 the
     /// full product is 4998 × 8 × 11 = 439 824).
     pub augment_cap: Option<usize>,
@@ -57,6 +62,7 @@ impl Default for PipelineConfig {
             seed: 42,
             workers: 64,
             threads: 0,
+            engine_mode: ExecutionMode::from_env(),
             augment_cap: Some(120_000),
             r_lo: 2,
             r_hi: 9,
@@ -143,9 +149,11 @@ pub fn run_with_progress(
     let threads = pool::resolve_threads(config.threads);
     progress(&format!(
         "building execution-log corpus (12 graphs × 8 algorithms × 11 strategies, \
-         {threads} threads)"
+         {threads} threads, {} engine)",
+        config.engine_mode.name()
     ));
-    let store = LogStore::build_corpus_parallel(config.scale, config.seed, &cfg, threads)?;
+    let store =
+        LogStore::build_corpus_parallel(config.scale, config.seed, &cfg, threads, config.engine_mode)?;
 
     progress("augmenting synthetic training set");
     let synthetic = augment(&store, config.r_lo..=config.r_hi, config.augment_cap, config.seed);

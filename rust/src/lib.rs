@@ -17,8 +17,12 @@
 //!   Ginger), partition-quality metrics, and the shared
 //!   [`partition::PartitionCache`] the parallel corpus builder reuses
 //!   across algorithms.
-//! * [`engine`] — the distributed GAS (Gather-Apply-Scatter) engine with a
-//!   deterministic cluster cost model (the paper's 4×16-worker testbed).
+//! * [`engine`] — the worker-centric distributed GAS
+//!   (Gather-Apply-Scatter) engine: per-worker state, a typed
+//!   master↔mirror message layer feeding a deterministic cluster cost
+//!   model (the paper's 4×16-worker testbed), and two bit-identical
+//!   execution modes — a simulated oracle and a real thread-per-worker
+//!   message-passing backend (`GPS_ENGINE_MODE`).
 //! * [`algorithms`] — the eight graph algorithms of §5.3 implemented as
 //!   GAS vertex programs, with their pseudo-code sources.
 //! * [`analyzer`] — the pseudo-code static analyzer (lexer, parser,

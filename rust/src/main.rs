@@ -21,12 +21,15 @@
 //! Common flags: `--scale` (default 1/32 of the paper's dataset sizes),
 //! `--seed`, `--workers`, `--threads` (corpus-build parallelism;
 //! defaults to the `GPS_THREADS` env var, then to the machine's
-//! available cores).
+//! available cores), and `--engine-mode simulated|threaded` (engine
+//! backend; defaults to the `GPS_ENGINE_MODE` env var, then to
+//! `simulated`).
 
 use gps_select::algorithms::Algorithm;
 use gps_select::analyzer;
 use gps_select::dataset::logs::LogStore;
 use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::ExecutionMode;
 use gps_select::eval::{figures, pipeline};
 use gps_select::features::{DataFeatures, TaskFeatures};
 use gps_select::graph::datasets::DatasetSpec;
@@ -51,6 +54,7 @@ fn pipeline_config(args: &Args) -> Result<pipeline::PipelineConfig> {
         seed: args.get_u64("seed", default.seed)?,
         workers: args.get_usize("workers", default.workers)?,
         threads: args.get_usize("threads", default.threads)?,
+        engine_mode: ExecutionMode::resolve(args.get("engine-mode"))?,
         augment_cap: match args.get("cap") {
             Some("none") => None,
             Some(v) => Some(
@@ -169,17 +173,19 @@ fn cmd_run(args: &Args) -> Result<()> {
     let strategy = Strategy::by_name(args.get_or("strategy", "Random"))
         .context("unknown --strategy (see table2)")?;
     let workers = args.get_usize("workers", 64)?;
+    let mode = ExecutionMode::resolve(args.get("engine-mode"))?;
     let cfg = ClusterConfig::with_workers(workers);
     let p = strategy.partition(&g, workers);
-    let outcome = algo.simulate(&g, &p, &cfg);
+    let outcome = algo.execute(&g, &p, &cfg, mode);
     println!(
-        "task {}/{} under {} on {} workers (|V|={}, |E|={})",
+        "task {}/{} under {} on {} workers (|V|={}, |E|={}, {} engine)",
         g.name,
         algo.name(),
         strategy.name(),
         workers,
         g.num_vertices(),
-        g.num_edges()
+        g.num_edges(),
+        mode.name()
     );
     println!("  simulated time : {:.6} s", outcome.sim.total);
     println!("    compute      : {:.6} s", outcome.sim.compute);
@@ -279,10 +285,15 @@ fn cmd_logs(args: &Args) -> Result<()> {
     let config = pipeline_config(args)?;
     let cfg = ClusterConfig::with_workers(config.workers);
     let threads = gps_select::util::pool::resolve_threads(config.threads);
-    let store = LogStore::build_corpus_parallel(config.scale, config.seed, &cfg, threads)?;
+    let store =
+        LogStore::build_corpus_parallel(config.scale, config.seed, &cfg, threads, config.engine_mode)?;
     let path = args.get_or("out", "logs.csv");
     store.save_csv(std::path::Path::new(path))?;
-    println!("wrote {} execution logs to {path} ({threads} threads)", store.logs.len());
+    println!(
+        "wrote {} execution logs to {path} ({threads} threads, {} engine)",
+        store.logs.len(),
+        config.engine_mode.name()
+    );
     Ok(())
 }
 

@@ -153,17 +153,28 @@ impl Rng {
     }
 }
 
-/// 64-bit FNV-1a hash — the deterministic hash used by the hash-based
-/// partitioners so partition assignments are identical across runs and
-/// platforms (std's SipHash is randomly keyed per process).
+/// FNV-1a 64-bit offset basis — the start state for incremental hashing
+/// with [`fnv1a64_fold`].
+pub const FNV1A64_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold `bytes` into an in-progress FNV-1a state (seed a fresh digest
+/// with [`FNV1A64_OFFSET`]). The engine's mode-equivalence tests hash
+/// whole value vectors incrementally through this.
 #[inline]
-pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+pub fn fnv1a64_fold(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x0100_0000_01b3);
     }
     h
+}
+
+/// 64-bit FNV-1a hash — the deterministic hash used by the hash-based
+/// partitioners so partition assignments are identical across runs and
+/// platforms (std's SipHash is randomly keyed per process).
+#[inline]
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_fold(FNV1A64_OFFSET, bytes)
 }
 
 /// Hash a `u64` key (used for vertex ids).

@@ -1,10 +1,11 @@
 //! The `GPS_THREADS` determinism contract: the parallel corpus builder
 //! and the full pipeline must produce bit-identical execution logs and
 //! identical strategy selections for the same seed, regardless of the
-//! thread count.
+//! thread count — on either engine execution mode.
 
 use gps_select::dataset::logs::LogStore;
 use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::ExecutionMode;
 use gps_select::eval::pipeline::{run, PipelineConfig};
 use gps_select::ml::gbdt::GbdtParams;
 
@@ -34,11 +35,31 @@ fn assert_stores_identical(a: &LogStore, b: &LogStore) {
 #[test]
 fn corpus_is_bit_identical_across_thread_counts() {
     let cfg = ClusterConfig::with_workers(16);
-    let serial = LogStore::build_corpus_parallel(0.002, 7, &cfg, 1).unwrap();
+    let serial =
+        LogStore::build_corpus_parallel(0.002, 7, &cfg, 1, ExecutionMode::Simulated).unwrap();
     assert_eq!(serial.logs.len(), 12 * 8 * 11);
     for threads in [2usize, 4, 7] {
-        let parallel = LogStore::build_corpus_parallel(0.002, 7, &cfg, threads).unwrap();
+        let parallel =
+            LogStore::build_corpus_parallel(0.002, 7, &cfg, threads, ExecutionMode::Simulated)
+                .unwrap();
         assert_stores_identical(&serial, &parallel);
+    }
+}
+
+/// The same contract with the corpus running on the thread-per-worker
+/// engine: bit-identical across pool thread counts, and — because the
+/// two engine backends are bit-identical — equal to the simulated-mode
+/// corpus as well.
+#[test]
+fn corpus_threaded_mode_matches_simulated_across_thread_counts() {
+    let cfg = ClusterConfig::with_workers(4);
+    let reference =
+        LogStore::build_corpus_parallel(0.002, 7, &cfg, 1, ExecutionMode::Simulated).unwrap();
+    for threads in [1usize, 3] {
+        let threaded =
+            LogStore::build_corpus_parallel(0.002, 7, &cfg, threads, ExecutionMode::Threaded)
+                .unwrap();
+        assert_stores_identical(&reference, &threaded);
     }
 }
 

@@ -1,0 +1,80 @@
+//! Execution-mode equivalence: `ExecutionMode::Threaded` (real
+//! thread-per-worker message passing over mpsc channels) must be
+//! **bit-identical** to `ExecutionMode::Simulated` (the sequential
+//! cost-model oracle) — final vertex values (compared through the
+//! bit-exact `value_hash` digest), the full `OpCounts`, and the
+//! simulated-time label — for every algorithm, across partitioning
+//! strategies and worker counts. This is the property that lets the
+//! simulated labels stand in for measured multi-worker execution.
+
+use gps_select::algorithms::Algorithm;
+use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::ExecutionMode;
+use gps_select::graph::Graph;
+use gps_select::partition::Strategy;
+use gps_select::util::rng::Rng;
+
+fn assert_modes_agree(g: &Graph, strategies: &[Strategy], workers: &[usize]) {
+    for &w in workers {
+        let cfg = ClusterConfig::with_workers(w);
+        for &s in strategies {
+            let p = s.partition(g, w);
+            for a in Algorithm::all() {
+                let sim = a.execute(g, &p, &cfg, ExecutionMode::Simulated);
+                let thr = a.execute(g, &p, &cfg, ExecutionMode::Threaded);
+                let ctx = format!("{}/{}/{} at {w} workers", g.name, a.name(), s.name());
+                assert_eq!(
+                    sim.value_hash, thr.value_hash,
+                    "{ctx}: values must be bit-identical"
+                );
+                assert_eq!(sim.ops, thr.ops, "{ctx}: op counts must match");
+                assert_eq!(
+                    sim.sim.total.to_bits(),
+                    thr.sim.total.to_bits(),
+                    "{ctx}: simulated time must be bit-identical ({} vs {})",
+                    sim.sim.total,
+                    thr.sim.total
+                );
+                assert_eq!(
+                    sim.checksum.to_bits(),
+                    thr.checksum.to_bits(),
+                    "{ctx}: checksums must match"
+                );
+            }
+        }
+    }
+}
+
+/// All 8 algorithms × 3 strategies × {1, 2, 4} workers on a directed
+/// power-law graph — the full acceptance matrix.
+#[test]
+fn threaded_is_bit_identical_to_simulated_directed() {
+    let mut rng = Rng::new(4242);
+    let g = gps_select::graph::gen::chung_lu::generate("mode-eq-d", 400, 2400, 2.2, true, &mut rng);
+    assert_modes_agree(
+        &g,
+        &[Strategy::Random, Strategy::Hdrf(50), Strategy::TwoD],
+        &[1, 2, 4],
+    );
+}
+
+/// Undirected graphs exercise the both-direction sweeps (GC/TC/CC
+/// semantics differ from the directed case) and a different strategy
+/// slice, including the degree-differentiated Hybrid cut.
+#[test]
+fn threaded_is_bit_identical_to_simulated_undirected() {
+    let mut rng = Rng::new(4243);
+    let g = gps_select::graph::gen::erdos::generate("mode-eq-u", 300, 1500, false, &mut rng);
+    assert_modes_agree(&g, &[Strategy::Hybrid, Strategy::Ginger, Strategy::OneDDst], &[2, 4]);
+}
+
+/// The activation frontier path (RW's scatter + reactivate_self) on a
+/// sparse walk-friendly graph, at a worker count that does not divide
+/// the vertex count evenly.
+#[test]
+fn threaded_matches_on_activation_frontiers() {
+    let n = 96u32;
+    let edges: Vec<(u32, u32)> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+    let g = Graph::from_edges("mode-eq-cycle", n as usize, edges, true);
+    assert_modes_agree(&g, &[Strategy::Random, Strategy::CanonicalRandom], &[1, 3]);
+}

@@ -1,11 +1,26 @@
 #!/usr/bin/env bash
-# Tier-1 verification: release build, tests, formatting.
+# Tier-1 verification: release build, tests, formatting, plus the
+# engine execution-mode gates (mode-equivalence test + a short release
+# smoke of the sim-vs-threaded engine benches).
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
 
 cargo build --release
-cargo test -q
+# The big mode-equivalence matrices are skipped in the debug pass (they
+# run in release below, where the full matrix stays fast); everything
+# else matches tier-1's `cargo test -q`.
+cargo test -q -- --skip bit_identical_to_simulated
+
+# Engine mode equivalence, explicitly and in release: Simulated and
+# Threaded must be bit-identical (values, op counts, simulated times)
+# across algorithms, strategies and worker counts.
+cargo test -q --release --test mode_equivalence
+
+# ~10-second engine bench smoke in release mode: runs only the engine
+# rows of benches/hotpath.rs (no full cargo-bench sweep) and records
+# the sim-vs-threaded timings at the repository root.
+GPS_BENCH_FAST=1 GPS_BENCH_OUT=../BENCH_engine.json cargo bench --bench hotpath -- engine
 
 # Formatting gate. The crate predates rustfmt enforcement, so on the
 # first run this applies `cargo fmt` once (commit the result), then
