@@ -12,8 +12,13 @@
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example select_strategy -- \
-//!     [--scale 0.03125] [--cap 40000] [--trees 250]
+//!     [--scale 0.03125] [--cap 40000] [--trees 250] [--checkpoint-dir ckpt/]
 //! ```
+//!
+//! With `--checkpoint-dir` (or `GPS_CHECKPOINT_DIR`) the corpus stage
+//! commits each finished graph as a crash-safe shard and resumes from
+//! them on the next run — an interrupted sweep recomputes only the
+//! unfinished graphs, bit-identically.
 //!
 //! Results are recorded in EXPERIMENTS.md.
 
@@ -34,6 +39,7 @@ fn main() -> Result<()> {
         seed: args.get_u64("seed", default.seed)?,
         workers: args.get_usize("workers", default.workers)?,
         threads: args.get_usize("threads", default.threads)?,
+        checkpoint_dir: gps_select::dataset::checkpoint::resolve_dir(args.get("checkpoint-dir")),
         augment_cap: Some(args.get_usize("cap", 40_000)?),
         gbdt: GbdtParams {
             n_estimators: args.get_usize("trees", default.gbdt.n_estimators)?,

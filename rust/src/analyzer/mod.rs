@@ -27,6 +27,14 @@ use crate::util::error::Result;
 
 use symbolic::{SymEnv, SymExpr};
 
+/// Number of Table 4 algorithm features — the length of [`OpKey::all`]
+/// and of every evaluated feature vector. Everything that serialises,
+/// parses or sizes a feature vector derives from this constant, so
+/// adding an [`OpKey`] variant without updating it fails to compile
+/// (the `all()` array literal stops matching its declared length)
+/// instead of silently corrupting persisted corpora.
+pub const NUM_OP_KEYS: usize = 21;
+
 /// The 21 algorithm features of Table 4, grouped as in the paper.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum OpKey {
@@ -58,8 +66,9 @@ pub enum OpKey {
 }
 
 impl OpKey {
-    /// All 21 features in Table 4 order (the model input layout).
-    pub fn all() -> [OpKey; 21] {
+    /// All [`NUM_OP_KEYS`] features in Table 4 order (the model input
+    /// layout).
+    pub fn all() -> [OpKey; NUM_OP_KEYS] {
         use OpKey::*;
         [
             NumVertex,
@@ -147,11 +156,11 @@ impl AlgoCounts {
             .collect()
     }
 
-    /// Evaluate into the fixed 21-element vector (Table 4 order) used by
-    /// the model encoding.
-    pub fn feature_vector(&self, env: &SymEnv) -> [f64; 21] {
+    /// Evaluate into the fixed [`NUM_OP_KEYS`]-element vector (Table 4
+    /// order) used by the model encoding.
+    pub fn feature_vector(&self, env: &SymEnv) -> [f64; NUM_OP_KEYS] {
         let eval = self.evaluate(env);
-        let mut out = [0.0; 21];
+        let mut out = [0.0; NUM_OP_KEYS];
         for (i, k) in OpKey::all().iter().enumerate() {
             out[i] = eval[k];
         }
@@ -230,7 +239,10 @@ mod tests {
 
     #[test]
     fn opkey_metadata() {
-        assert_eq!(OpKey::all().len(), 21);
+        // the paper's Table 4 has exactly 21 features; NUM_OP_KEYS is
+        // the single source of truth everything else derives from
+        assert_eq!(NUM_OP_KEYS, 21);
+        assert_eq!(OpKey::all().len(), NUM_OP_KEYS);
         assert_eq!(OpKey::GetInVertexTo.name(), "GET_IN_VERTEX_TO");
         assert_eq!(OpKey::GetInVertexTo.category(), "Graph Iteration");
         assert_eq!(OpKey::Apply.category(), "Basic");

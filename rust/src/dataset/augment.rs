@@ -11,6 +11,7 @@
 use std::collections::BTreeMap;
 
 use crate::algorithms::Algorithm;
+use crate::analyzer::NUM_OP_KEYS;
 use crate::features::TaskFeatures;
 use crate::partition::Strategy;
 use crate::util::rng::Rng;
@@ -97,7 +98,7 @@ pub fn augment(
                         continue;
                     }
                 }
-                let mut feats: Vec<[f64; 21]> = Vec::with_capacity(combo.len());
+                let mut feats: Vec<[f64; NUM_OP_KEYS]> = Vec::with_capacity(combo.len());
                 let mut time = 0.0;
                 let mut ok = true;
                 for &ai in combo {
@@ -207,7 +208,7 @@ mod tests {
             .iter()
             .find(|l| l.algorithm == "PR" && l.strategy == Strategy::Random)
             .unwrap();
-        for i in 0..21 {
+        for i in 0..NUM_OP_KEYS {
             assert!((tuple.features.algo[i] - (aid.features.algo[i] + pr.features.algo[i])).abs() < 1e-9);
         }
     }

@@ -1,0 +1,487 @@
+//! Crash-safe, resumable corpus checkpoints (ROADMAP: "Corpus
+//! checkpointing").
+//!
+//! The execution-log corpus (12 graphs × 8 algorithms × 11 strategies)
+//! is by far the most expensive artifact the pipeline builds, so a
+//! checkpoint directory lets an interrupted sweep resume from the
+//! graphs it already finished instead of recomputing the grid. The
+//! on-disk layout is:
+//!
+//! ```text
+//! <dir>/manifest.txt        build-configuration fingerprint
+//! <dir>/<graph>.shard       one shard per finished corpus graph
+//! ```
+//!
+//! **Shards are self-contained**: each one carries the graph's
+//! [`DataFeatures`] *and* its full strategy × algorithm log block, so a
+//! reload needs no external feature re-attachment (the lossy contract
+//! of `LogStore::load_csv`, which persists only the algorithm half of
+//! each feature vector, does not apply here). All `f64` values are
+//! stored as exact bit patterns (`to_bits` hex), so a resumed build is
+//! bit-identical to an uninterrupted one.
+//!
+//! **The manifest fingerprints everything that determines corpus
+//! content**: scale, seed, the full cluster configuration (workers,
+//! machines and every cost-model constant), engine mode, the strategy
+//! inventory, the algorithm roster, the graph corpus and the [`OpKey`]
+//! feature schema. A checkpoint directory whose manifest does not match
+//! the current build configuration is rejected with an error — never
+//! silently mixed into a differently-configured corpus. (The pool
+//! thread count is deliberately *not* fingerprinted: corpus content is
+//! bit-identical for any thread count, so resuming with a different
+//! `--threads` is sound.)
+//!
+//! **Every commit is atomic** ([`crate::util::fsio::write_atomic`]):
+//! shards are written to a temp sibling and renamed into place, and
+//! each shard ends in an FNV-1a checksum footer, so a crash mid-write
+//! leaves either no shard (the graph is recomputed) or a complete one —
+//! and a truncated or corrupted file is detected and rejected on load.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::algorithms::Algorithm;
+use crate::analyzer::{OpKey, NUM_OP_KEYS};
+use crate::engine::cost::ClusterConfig;
+use crate::engine::ExecutionMode;
+use crate::features::data::MomentFeatures;
+use crate::features::{DataFeatures, TaskFeatures};
+use crate::partition::Strategy;
+use crate::util::error::{bail, ensure, Context, Result};
+use crate::util::fsio;
+use crate::util::rng::fnv1a64;
+
+use super::logs::ExecutionLog;
+
+/// On-disk format version; bumped on any layout change so old
+/// directories are rejected instead of misparsed.
+pub const FORMAT_VERSION: u32 = 1;
+
+const MANIFEST_FILE: &str = "manifest.txt";
+
+/// Render the manifest for one build configuration. Two builds may
+/// share a checkpoint directory iff their manifests are byte-identical.
+/// The whole [`ClusterConfig`] is fingerprinted — not just the worker
+/// count — because every cost-model knob (machines, ops/s, bandwidths,
+/// latency, barrier) flows into the simulated time labels.
+pub fn manifest_text(scale: f64, seed: u64, cfg: &ClusterConfig, mode: ExecutionMode) -> String {
+    let mut m = String::new();
+    writeln!(m, "gps-corpus-checkpoint v{FORMAT_VERSION}").unwrap();
+    // exact bits plus the human-readable value for debugging
+    writeln!(m, "scale {:016x} ({scale})", scale.to_bits()).unwrap();
+    writeln!(m, "seed {seed}").unwrap();
+    writeln!(m, "workers {}", cfg.num_workers).unwrap();
+    writeln!(m, "machines {}", cfg.num_machines).unwrap();
+    for (key, x) in [
+        ("ops_per_sec", cfg.ops_per_sec),
+        ("bw_inter", cfg.bw_inter),
+        ("bw_intra", cfg.bw_intra),
+        ("latency", cfg.latency),
+        ("barrier", cfg.barrier),
+    ] {
+        writeln!(m, "{key} {:016x} ({x})", x.to_bits()).unwrap();
+    }
+    writeln!(m, "engine {}", mode.name()).unwrap();
+    let ops: Vec<&str> = OpKey::all().iter().map(|k| k.name()).collect();
+    writeln!(m, "opkeys {}", ops.join(",")).unwrap();
+    let strats: Vec<String> =
+        Strategy::inventory().iter().map(|s| format!("{}:{}", s.psid(), s.name())).collect();
+    writeln!(m, "strategies {}", strats.join(",")).unwrap();
+    let algos: Vec<&str> = Algorithm::all().iter().map(|a| a.name()).collect();
+    writeln!(m, "algorithms {}", algos.join(",")).unwrap();
+    let graphs: Vec<&str> = crate::graph::datasets::CORPUS.iter().map(|d| d.name).collect();
+    writeln!(m, "graphs {}", graphs.join(",")).unwrap();
+    m
+}
+
+/// Resolve the checkpoint directory: an explicit CLI value beats the
+/// `GPS_CHECKPOINT_DIR` environment variable; unset or blank means
+/// checkpointing is off.
+pub fn resolve_dir(cli: Option<&str>) -> Option<PathBuf> {
+    let raw = match cli {
+        Some(v) => v.to_string(),
+        None => std::env::var("GPS_CHECKPOINT_DIR").ok()?,
+    };
+    let raw = raw.trim();
+    if raw.is_empty() {
+        None
+    } else {
+        Some(PathBuf::from(raw))
+    }
+}
+
+/// First line on which two manifests disagree, for the mismatch error.
+fn first_diff(on_disk: &str, wanted: &str) -> String {
+    for (a, b) in on_disk.lines().zip(wanted.lines()) {
+        if a != b {
+            return format!("checkpoint has `{a}`, this build needs `{b}`");
+        }
+    }
+    "the manifests differ in length".to_string()
+}
+
+/// An open checkpoint directory whose manifest matches the current
+/// build configuration.
+#[derive(Debug)]
+pub struct CheckpointStore {
+    dir: PathBuf,
+}
+
+impl CheckpointStore {
+    /// Open `dir` for the build described by `manifest` (from
+    /// [`manifest_text`]), creating the directory and manifest on first
+    /// use. A directory carrying a *different* manifest is rejected:
+    /// resuming it would silently mix corpora built under different
+    /// configurations.
+    pub fn open(dir: &Path, manifest: &str) -> Result<Self> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create checkpoint dir {}", dir.display()))?;
+        let mpath = dir.join(MANIFEST_FILE);
+        // `create_new` claims the directory exclusively: when two
+        // processes race to initialise the same fresh directory with
+        // different configurations, exactly one creation succeeds and
+        // the loser falls through to the compare-and-reject path below
+        // instead of both installing their own manifest and mixing
+        // shards. (A crash mid-write can leave a short manifest; that
+        // fails closed — the next open reports a mismatch and tells
+        // the user to delete the directory.)
+        match std::fs::OpenOptions::new().write(true).create_new(true).open(&mpath) {
+            Ok(mut f) => {
+                use std::io::Write as _;
+                f.write_all(manifest.as_bytes())
+                    .and_then(|()| f.sync_all())
+                    .with_context(|| format!("write {}", mpath.display()))?;
+                return Ok(CheckpointStore { dir: dir.to_path_buf() });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {}
+            Err(e) => return Err(e).with_context(|| format!("create {}", mpath.display())),
+        }
+        let existing = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("read {}", mpath.display()))?;
+        if existing != manifest {
+            bail!(
+                "checkpoint manifest mismatch in {}: {}. A checkpoint only resumes the \
+                 exact configuration it was started with (scale, seed, cluster config, \
+                 engine mode, inventory/schema); use a fresh --checkpoint-dir or delete \
+                 the stale one to rebuild",
+                dir.display(),
+                first_diff(&existing, manifest)
+            );
+        }
+        Ok(CheckpointStore { dir: dir.to_path_buf() })
+    }
+
+    /// The directory this store commits to.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn shard_path(&self, graph: &str) -> PathBuf {
+        self.dir.join(format!("{graph}.shard"))
+    }
+
+    /// Whether a shard for `graph` has been committed.
+    pub fn has(&self, graph: &str) -> bool {
+        self.shard_path(graph).exists()
+    }
+
+    /// Load one graph's shard: its data features plus its full log
+    /// block, exactly as saved. `Ok(None)` if the graph has no shard
+    /// yet; a present-but-invalid shard (truncated write without the
+    /// atomic helper, bit rot, hand edits) is an error, never silently
+    /// merged.
+    pub fn load(&self, graph: &str) -> Result<Option<(DataFeatures, Vec<ExecutionLog>)>> {
+        let path = self.shard_path(graph);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e).with_context(|| format!("read shard {}", path.display())),
+        };
+        parse_shard(&text, graph)
+            .with_context(|| {
+                format!(
+                    "corrupt checkpoint shard {} (delete it to recompute this graph)",
+                    path.display()
+                )
+            })
+            .map(Some)
+    }
+
+    /// Atomically commit one graph's shard.
+    pub fn save(&self, graph: &str, data: &DataFeatures, logs: &[ExecutionLog]) -> Result<()> {
+        let path = self.shard_path(graph);
+        fsio::write_atomic(&path, render_shard(graph, data, logs).as_bytes())
+            .with_context(|| format!("commit shard {}", path.display()))
+    }
+}
+
+// ---------------------------------------------------------------------
+// shard serialization
+// ---------------------------------------------------------------------
+
+fn f64_hex(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+fn parse_f64_hex(s: &str) -> Result<f64> {
+    let bits = u64::from_str_radix(s, 16).with_context(|| format!("bad f64 bit pattern {s:?}"))?;
+    Ok(f64::from_bits(bits))
+}
+
+fn render_moments(m: &MomentFeatures, out: &mut String) {
+    for x in [m.mean, m.std, m.skewness, m.kurtosis] {
+        out.push(' ');
+        out.push_str(&f64_hex(x));
+    }
+}
+
+fn render_shard(graph: &str, data: &DataFeatures, logs: &[ExecutionLog]) -> String {
+    let mut out = String::with_capacity(64 + logs.len() * (8 + NUM_OP_KEYS) * 17);
+    writeln!(out, "gps-shard v{FORMAT_VERSION}").unwrap();
+    writeln!(out, "graph {graph}").unwrap();
+    let mut f = format!(
+        "features {} {} {}",
+        f64_hex(data.num_vertices),
+        f64_hex(data.num_edges),
+        u8::from(data.directed)
+    );
+    render_moments(&data.in_deg, &mut f);
+    render_moments(&data.out_deg, &mut f);
+    out.push_str(&f);
+    out.push('\n');
+    writeln!(out, "logs {}", logs.len()).unwrap();
+    for l in logs {
+        write!(out, "{} {} {}", l.strategy.psid(), l.algorithm, f64_hex(l.time)).unwrap();
+        for x in l.features.algo {
+            out.push(' ');
+            out.push_str(&f64_hex(x));
+        }
+        out.push('\n');
+    }
+    let sum = fnv1a64(out.as_bytes());
+    writeln!(out, "checksum {sum:016x}").unwrap();
+    out
+}
+
+fn parse_features(line: &str) -> Result<DataFeatures> {
+    let toks: Vec<&str> = line.split_whitespace().collect();
+    ensure!(
+        toks.len() == 1 + 3 + 8 && toks[0] == "features",
+        "malformed features line {line:?}"
+    );
+    let moments = |base: usize| -> Result<MomentFeatures> {
+        Ok(MomentFeatures {
+            mean: parse_f64_hex(toks[base])?,
+            std: parse_f64_hex(toks[base + 1])?,
+            skewness: parse_f64_hex(toks[base + 2])?,
+            kurtosis: parse_f64_hex(toks[base + 3])?,
+        })
+    };
+    let directed = match toks[3] {
+        "0" => false,
+        "1" => true,
+        other => bail!("bad directed flag {other:?}"),
+    };
+    Ok(DataFeatures {
+        num_vertices: parse_f64_hex(toks[1])?,
+        num_edges: parse_f64_hex(toks[2])?,
+        directed,
+        in_deg: moments(4)?,
+        out_deg: moments(8)?,
+    })
+}
+
+fn parse_shard(text: &str, expect_graph: &str) -> Result<(DataFeatures, Vec<ExecutionLog>)> {
+    // the checksum footer covers every byte before it
+    let pos = text
+        .rfind("\nchecksum ")
+        .context("missing checksum footer (truncated or partial write)")?;
+    let payload = &text[..pos + 1];
+    let footer = text[pos + 1..].trim_end();
+    let stored = footer.strip_prefix("checksum ").context("malformed checksum footer")?;
+    let actual = format!("{:016x}", fnv1a64(payload.as_bytes()));
+    ensure!(
+        stored == actual,
+        "checksum mismatch: footer says {stored}, content hashes to {actual}"
+    );
+
+    let mut lines = payload.lines();
+    let magic = lines.next().context("empty shard")?;
+    ensure!(
+        magic == format!("gps-shard v{FORMAT_VERSION}"),
+        "unsupported shard header {magic:?} (expected v{FORMAT_VERSION})"
+    );
+    let graph = lines
+        .next()
+        .and_then(|l| l.strip_prefix("graph "))
+        .context("missing graph line")?
+        .to_string();
+    ensure!(
+        graph == expect_graph,
+        "shard holds graph {graph:?} but the file is named for {expect_graph:?}"
+    );
+    let data = parse_features(lines.next().context("missing features line")?)?;
+    let count: usize = lines
+        .next()
+        .and_then(|l| l.strip_prefix("logs "))
+        .context("missing log-count line")?
+        .parse()
+        .context("bad log count")?;
+    let by_psid: BTreeMap<usize, Strategy> =
+        Strategy::inventory().into_iter().map(|s| (s.psid(), s)).collect();
+    let mut logs = Vec::with_capacity(count);
+    for i in 0..count {
+        let line = lines
+            .next()
+            .with_context(|| format!("truncated shard: {i} of {count} log lines present"))?;
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        ensure!(
+            toks.len() == 3 + NUM_OP_KEYS,
+            "log line {i} has {} fields, expected {}",
+            toks.len(),
+            3 + NUM_OP_KEYS
+        );
+        let psid: usize = toks[0].parse().with_context(|| format!("bad psid {:?}", toks[0]))?;
+        let strategy = *by_psid
+            .get(&psid)
+            .with_context(|| format!("psid {psid} is not in the strategy inventory"))?;
+        let time = parse_f64_hex(toks[2])?;
+        let mut algo = [0.0; NUM_OP_KEYS];
+        for (j, a) in algo.iter_mut().enumerate() {
+            *a = parse_f64_hex(toks[3 + j])?;
+        }
+        logs.push(ExecutionLog {
+            graph: graph.clone(),
+            algorithm: toks[1].to_string(),
+            strategy,
+            features: TaskFeatures::from_vector(data, algo),
+            time,
+        });
+    }
+    ensure!(lines.next().is_none(), "trailing data after the declared {count} log lines");
+    Ok((data, logs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::cost::ClusterConfig;
+    use crate::graph::datasets::DatasetSpec;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("gps_ckpt_unit_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn tiny_block() -> (DataFeatures, Vec<ExecutionLog>) {
+        let mut store = crate::dataset::logs::LogStore::default();
+        let cfg = ClusterConfig::with_workers(4);
+        let g = DatasetSpec::by_name("wiki").unwrap().build(0.005, 7);
+        store
+            .record_graph(&g, &[Algorithm::Aid, Algorithm::Pr], &Strategy::inventory(), &cfg)
+            .unwrap();
+        (store.graph_features["wiki"], store.logs)
+    }
+
+    #[test]
+    fn shard_roundtrip_is_bit_exact() {
+        let (data, mut logs) = tiny_block();
+        // exercise tricky bit patterns too
+        logs[0].time = -0.0;
+        logs[1].time = f64::MIN_POSITIVE / 2.0; // subnormal
+        let text = render_shard("wiki", &data, &logs);
+        let (rdata, rlogs) = parse_shard(&text, "wiki").unwrap();
+        assert_eq!(rdata, data);
+        assert_eq!(rlogs.len(), logs.len());
+        for (a, b) in rlogs.iter().zip(&logs) {
+            assert_eq!(a.graph, b.graph);
+            assert_eq!(a.algorithm, b.algorithm);
+            assert_eq!(a.strategy, b.strategy);
+            assert_eq!(a.time.to_bits(), b.time.to_bits());
+            assert_eq!(a.features.algo, b.features.algo);
+            assert_eq!(a.features.data, data);
+        }
+    }
+
+    #[test]
+    fn store_open_save_load() {
+        let dir = scratch("roundtrip");
+        let manifest =
+            manifest_text(0.005, 7, &ClusterConfig::with_workers(4), ExecutionMode::Simulated);
+        let store = CheckpointStore::open(&dir, &manifest).unwrap();
+        assert!(!store.has("wiki"));
+        assert!(store.load("wiki").unwrap().is_none());
+        let (data, logs) = tiny_block();
+        store.save("wiki", &data, &logs).unwrap();
+        assert!(store.has("wiki"));
+        let (rdata, rlogs) = store.load("wiki").unwrap().unwrap();
+        assert_eq!(rdata, data);
+        assert_eq!(rlogs.len(), logs.len());
+        // reopening with the same manifest is fine
+        CheckpointStore::open(&dir, &manifest).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn manifest_fingerprints_every_knob() {
+        let cfg4 = ClusterConfig::with_workers(4);
+        let cfg8 = ClusterConfig::with_workers(8);
+        // a cost-model knob change (not just the worker count) must
+        // also invalidate: the simulated time labels depend on it
+        let slow_nic = ClusterConfig { bw_inter: 1.0e8, ..cfg4 };
+        let base = manifest_text(0.005, 7, &cfg4, ExecutionMode::Simulated);
+        for other in [
+            manifest_text(0.006, 7, &cfg4, ExecutionMode::Simulated),
+            manifest_text(0.005, 8, &cfg4, ExecutionMode::Simulated),
+            manifest_text(0.005, 7, &cfg8, ExecutionMode::Simulated),
+            manifest_text(0.005, 7, &slow_nic, ExecutionMode::Simulated),
+            manifest_text(0.005, 7, &cfg4, ExecutionMode::Threaded),
+        ] {
+            assert_ne!(base, other);
+        }
+        // identical configuration → identical manifest
+        assert_eq!(base, manifest_text(0.005, 7, &cfg4, ExecutionMode::Simulated));
+    }
+
+    #[test]
+    fn mismatched_manifest_is_rejected() {
+        let dir = scratch("mismatch");
+        let cfg = ClusterConfig::with_workers(4);
+        let a = manifest_text(0.005, 7, &cfg, ExecutionMode::Simulated);
+        CheckpointStore::open(&dir, &a).unwrap();
+        let b = manifest_text(0.005, 8, &cfg, ExecutionMode::Simulated);
+        let err = CheckpointStore::open(&dir, &b).unwrap_err().to_string();
+        assert!(err.contains("manifest mismatch"), "{err}");
+        assert!(err.contains("seed"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncation_and_corruption_are_detected() {
+        let (data, logs) = tiny_block();
+        let text = render_shard("wiki", &data, &logs);
+        // no checksum footer at all
+        let cut = &text[..text.len() / 3];
+        assert!(parse_shard(cut, "wiki").is_err());
+        // flipped byte in the payload → checksum mismatch
+        let mid = text.len() / 2;
+        let mut bytes = text.clone().into_bytes();
+        bytes[mid] = if bytes[mid] == b'0' { b'1' } else { b'0' };
+        let err = parse_shard(std::str::from_utf8(&bytes).unwrap(), "wiki")
+            .unwrap_err()
+            .to_string();
+        assert!(!err.is_empty());
+        // wrong file name ↔ header mismatch
+        assert!(parse_shard(&text, "facebook").is_err());
+    }
+
+    #[test]
+    fn resolve_dir_precedence() {
+        assert_eq!(resolve_dir(Some("ckpt/x")), Some(PathBuf::from("ckpt/x")));
+        assert_eq!(resolve_dir(Some("  ")), None);
+        // with no CLI value the env var decides; unset in tests → None
+        // (GPS_CHECKPOINT_DIR is read through std::env, not cached)
+    }
+}

@@ -11,19 +11,28 @@
 //! Results are collected in deterministic task order (graph-major, then
 //! strategy, then algorithm — the historical serial order), so the logs
 //! are bit-identical regardless of thread count.
+//!
+//! With a checkpoint directory ([`super::checkpoint`]) the builder
+//! commits each finished graph's shard atomically as it completes, and
+//! a later build with the same configuration restores those shards
+//! instead of recomputing them — yielding a store bit-identical to an
+//! uninterrupted single-shot build.
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::OnceLock;
 
 use crate::algorithms::Algorithm;
-use crate::analyzer::AlgoCounts;
+use crate::analyzer::{AlgoCounts, NUM_OP_KEYS};
 use crate::engine::cost::ClusterConfig;
 use crate::engine::ExecutionMode;
 use crate::features::{DataFeatures, TaskFeatures};
 use crate::graph::Graph;
 use crate::partition::{PartitionCache, Partitioning, Strategy};
-use crate::util::error::{bail, Context, Result};
+use crate::util::error::{bail, ensure, Context, Result};
 use crate::util::pool;
+
+use super::checkpoint::{self, CheckpointStore};
 
 /// One execution log record.
 #[derive(Clone, Debug)]
@@ -41,11 +50,28 @@ pub struct ExecutionLog {
 }
 
 /// A collection of logs plus the per-graph data features.
+///
+/// `logs` and `graph_features` are public for read access; construct
+/// through [`LogStore::from_parts`], the builders or
+/// [`LogStore::record_graph`] rather than pushing into `logs` directly,
+/// so the internal lookup index stays coherent. (Appends/removals
+/// through the public field are tolerated — the index carries the log
+/// count it was built at and falls back to a linear scan on mismatch —
+/// but *in-place element mutation* after a query is unsupported: it
+/// leaves the length unchanged, so queries may answer from the stale
+/// index.)
 #[derive(Clone, Debug, Default)]
 pub struct LogStore {
     pub logs: Vec<ExecutionLog>,
     /// Graph name → data features (shared by all its logs).
     pub graph_features: BTreeMap<String, DataFeatures>,
+    /// Lazily built (graph, algorithm, strategy name) → time lookup
+    /// index plus the log count it was built at; the pipeline queries
+    /// [`LogStore::time_of`] ~1000 times, so the old O(logs) linear
+    /// scan was quadratic in corpus size overall. Keyed by
+    /// [`Strategy::name`] (total for every variant) rather than `psid`
+    /// (which panics on non-inventory HDRF λ values).
+    time_index: OnceLock<(usize, BTreeMap<(String, String, String), f64>)>,
 }
 
 /// Execute one (graph, algorithm, strategy) task on the engine and
@@ -80,7 +106,48 @@ fn algo_counts(algorithms: &[Algorithm]) -> Result<Vec<AlgoCounts>> {
     algorithms.iter().map(|a| crate::analyzer::analyze(a.pseudo_code())).collect()
 }
 
+/// A restored shard must cover the exact strategy × algorithm grid in
+/// grid order, or the resumed corpus would be positionally misaligned.
+fn validate_block(
+    graph: &str,
+    logs: &[ExecutionLog],
+    strategies: &[Strategy],
+    algorithms: &[Algorithm],
+) -> Result<()> {
+    ensure!(
+        logs.len() == strategies.len() * algorithms.len(),
+        "checkpoint shard for {graph} holds {} logs, expected the {}×{} strategy×algorithm grid",
+        logs.len(),
+        strategies.len(),
+        algorithms.len()
+    );
+    for (i, l) in logs.iter().enumerate() {
+        let s = strategies[i / algorithms.len()];
+        let a = algorithms[i % algorithms.len()];
+        ensure!(
+            l.graph == graph && l.strategy == s && l.algorithm == a.name(),
+            "checkpoint shard for {graph}: log {i} is {}/{}/{}, expected {graph}/{}/{}",
+            l.graph,
+            l.algorithm,
+            l.strategy.name(),
+            a.name(),
+            s.name()
+        );
+    }
+    Ok(())
+}
+
 impl LogStore {
+    /// Assemble a store from parts. (The struct carries a private
+    /// lookup-index field, so plain struct literals are not
+    /// constructible outside this module.)
+    pub fn from_parts(
+        logs: Vec<ExecutionLog>,
+        graph_features: BTreeMap<String, DataFeatures>,
+    ) -> Self {
+        LogStore { logs, graph_features, time_index: OnceLock::new() }
+    }
+
     /// Run `algorithms × strategies` on one graph and append the logs.
     /// Always uses the `Simulated` backend so unit-test callers are not
     /// environment-sensitive; mode-aware corpus construction goes
@@ -102,27 +169,53 @@ impl LogStore {
                 self.logs.push(run_task(g, data, c, *a, *s, &p, cfg, mode));
             }
         }
+        // the appended logs invalidate any previously built lookup index
+        self.time_index = OnceLock::new();
         Ok(())
     }
 
     /// Build the full corpus: every dataset at `scale`, every algorithm,
     /// the 11-strategy inventory (the paper's 12 × 8 × 11 = 1056 runs,
     /// of which 528 over training graphs × training algorithms feed the
-    /// augmentation). Uses the `GPS_THREADS` and `GPS_ENGINE_MODE`
-    /// defaults; see [`LogStore::build_corpus_parallel`] for explicit
-    /// control.
+    /// augmentation). Uses the `GPS_THREADS`, `GPS_ENGINE_MODE` and
+    /// `GPS_CHECKPOINT_DIR` defaults; see
+    /// [`LogStore::build_corpus_checkpointed`] for explicit control.
     pub fn build_corpus(scale: f64, seed: u64, cfg: &ClusterConfig) -> Result<Self> {
-        Self::build_corpus_parallel(scale, seed, cfg, 0, ExecutionMode::from_env())
+        let dir = checkpoint::resolve_dir(None);
+        Self::build_corpus_checkpointed(
+            scale,
+            seed,
+            cfg,
+            0,
+            ExecutionMode::from_env(),
+            dir.as_deref(),
+        )
     }
 
     /// Parallel corpus build over the (dataset × algorithm × strategy)
-    /// grid, in three stages on a scoped worker pool:
+    /// grid without checkpointing; see
+    /// [`LogStore::build_corpus_checkpointed`].
+    pub fn build_corpus_parallel(
+        scale: f64,
+        seed: u64,
+        cfg: &ClusterConfig,
+        threads: usize,
+        mode: ExecutionMode,
+    ) -> Result<Self> {
+        Self::build_corpus_checkpointed(scale, seed, cfg, threads, mode, None)
+    }
+
+    /// Parallel corpus build over the (dataset × algorithm × strategy)
+    /// grid, per graph in corpus order, each graph in three stages on a
+    /// scoped worker pool:
     ///
-    /// 1. generate every dataset (and its data features) concurrently;
-    /// 2. pre-warm a shared [`PartitionCache`] over the (graph,
-    ///    strategy) grid, so each pair is partitioned **exactly once**;
-    /// 3. simulate every (graph, strategy, algorithm) task concurrently,
-    ///    each reusing its cached `Arc<Partitioning>`.
+    /// 1. generate the dataset (and its data features) — all pending
+    ///    graphs concurrently, up front;
+    /// 2. pre-warm a shared [`PartitionCache`] over the graph's
+    ///    strategies, so each (graph, strategy) pair is partitioned
+    ///    **exactly once**;
+    /// 3. simulate the graph's strategy × algorithm block concurrently,
+    ///    each task reusing its cached `Arc<Partitioning>`.
     ///
     /// Every task is a pure function of its grid index, and results are
     /// collected in grid order, so the returned store is bit-identical
@@ -132,69 +225,237 @@ impl LogStore {
     /// logs (the threaded backend spawns `cfg.num_workers` threads *per
     /// task* on top of the pool, so it is for validation runs, not
     /// throughput).
-    pub fn build_corpus_parallel(
+    ///
+    /// With `checkpoint_dir` set, each finished graph's shard is
+    /// committed atomically as soon as its block completes, and graphs
+    /// already present in a configuration-matching checkpoint are
+    /// restored instead of recomputed — the result is bit-identical to
+    /// an uninterrupted build either way. A checkpoint directory built
+    /// under a *different* configuration (scale, seed, cluster config,
+    /// engine mode, inventory or feature schema) is rejected with an
+    /// error.
+    pub fn build_corpus_checkpointed(
         scale: f64,
         seed: u64,
         cfg: &ClusterConfig,
         threads: usize,
         mode: ExecutionMode,
+        checkpoint_dir: Option<&Path>,
     ) -> Result<Self> {
+        let (store, _) = Self::build_impl(scale, seed, cfg, threads, mode, checkpoint_dir, None)?;
+        Ok(store.expect("a build without a graph limit runs to completion"))
+    }
+
+    /// Checkpoint the first `limit` corpus graphs into `dir` and stop —
+    /// the programmable stand-in for "the sweep was killed after N
+    /// graphs" used by the resume tests and `scripts/verify.sh`, and a
+    /// way to split a long sweep across sessions. Returns the number of
+    /// graphs now present in the checkpoint (restored + newly built).
+    pub fn checkpoint_prefix(
+        scale: f64,
+        seed: u64,
+        cfg: &ClusterConfig,
+        threads: usize,
+        mode: ExecutionMode,
+        dir: &Path,
+        limit: usize,
+    ) -> Result<usize> {
+        let (_, done) =
+            Self::build_impl(scale, seed, cfg, threads, mode, Some(dir), Some(limit))?;
+        Ok(done)
+    }
+
+    /// Shared engine of the corpus builders. Returns the completed
+    /// store (or `None` if `limit_graphs` stopped the build early) plus
+    /// the number of graphs whose blocks exist (restored or computed).
+    fn build_impl(
+        scale: f64,
+        seed: u64,
+        cfg: &ClusterConfig,
+        threads: usize,
+        mode: ExecutionMode,
+        checkpoint_dir: Option<&Path>,
+        limit_graphs: Option<usize>,
+    ) -> Result<(Option<Self>, usize)> {
+        ensure!(
+            limit_graphs.is_none() || checkpoint_dir.is_some(),
+            "a graph limit without a checkpoint directory would discard all work"
+        );
         let threads = pool::resolve_threads(threads);
         let strategies = Strategy::inventory();
         let algorithms = Algorithm::all();
         let counts = algo_counts(&algorithms)?;
         let corpus = crate::graph::datasets::CORPUS;
 
-        // Stage 1: dataset generation + data features, one task per graph.
-        let built: Vec<(Graph, DataFeatures)> = pool::parallel_map(threads, corpus.len(), |i| {
-            let g = corpus[i].build(scale, seed);
+        let ckpt = match checkpoint_dir {
+            Some(dir) => Some(CheckpointStore::open(
+                dir,
+                &checkpoint::manifest_text(scale, seed, cfg, mode),
+            )?),
+            None => None,
+        };
+
+        // Restore finished graphs from the checkpoint. Shards are
+        // self-contained (data features + log block), so no external
+        // feature re-attachment is needed; invalid shards error out
+        // rather than merging into the corpus.
+        let mut restored: Vec<Option<(DataFeatures, Vec<ExecutionLog>)>> =
+            Vec::with_capacity(corpus.len());
+        for spec in corpus {
+            let block = match &ckpt {
+                Some(c) => c.load(spec.name)?,
+                None => None,
+            };
+            if let Some((_, logs)) = &block {
+                validate_block(spec.name, logs, &strategies, &algorithms)?;
+            }
+            restored.push(block);
+        }
+        let pending: Vec<usize> = (0..corpus.len()).filter(|&i| restored[i].is_none()).collect();
+        let done_already = corpus.len() - pending.len();
+
+        // Under a graph limit, only enough pending graphs to reach it.
+        let process: &[usize] = match limit_graphs {
+            Some(n) => &pending[..pending.len().min(n.saturating_sub(done_already))],
+            None => &pending[..],
+        };
+
+        // Stage 1: dataset generation + data features, one task per
+        // pending graph (skipped entirely for restored graphs).
+        let built: Vec<(Graph, DataFeatures)> = pool::parallel_map(threads, process.len(), |j| {
+            let g = corpus[process[j]].build(scale, seed);
             let data = DataFeatures::of(&g);
             (g, data)
         });
 
-        // Stage 2: partition each (graph, strategy) pair exactly once.
-        let cache = PartitionCache::new(cfg.num_workers);
-        pool::parallel_map(threads, built.len() * strategies.len(), |i| {
-            let (g, _) = &built[i / strategies.len()];
-            cache.get_or_partition(g, strategies[i % strategies.len()]);
-        });
-
-        // Stage 3: the full task grid; every partition lookup is a hit.
+        // Stages 2 + 3. Without a checkpoint there is nothing to commit
+        // incrementally, so the whole (graph, strategy, algorithm) grid
+        // runs as one task pool (maximum parallelism, no per-graph
+        // barriers — the historical fast path). With a checkpoint the
+        // stages run graph by graph in corpus order instead, so each
+        // graph's shard commits the moment its block completes: the
+        // crash-safety granularity is one graph. Both paths compute the
+        // same pure per-index tasks and collect in grid order, so the
+        // logs are bit-identical either way.
         let per_graph = strategies.len() * algorithms.len();
-        let logs = pool::parallel_map(threads, built.len() * per_graph, |i| {
-            let (g, data) = &built[i / per_graph];
-            let rest = i % per_graph;
-            let s = strategies[rest / algorithms.len()];
-            let a = algorithms[rest % algorithms.len()];
-            let p = cache.get_or_partition(g, s);
-            run_task(g, *data, &counts[rest % algorithms.len()], a, s, &p, cfg, mode)
-        });
+        let blocks: Vec<Vec<ExecutionLog>> = match &ckpt {
+            None => {
+                let cache = PartitionCache::new(cfg.num_workers);
+                pool::parallel_map(threads, built.len() * strategies.len(), |i| {
+                    let (g, _) = &built[i / strategies.len()];
+                    cache.get_or_partition(g, strategies[i % strategies.len()]);
+                });
+                let flat = pool::parallel_map(threads, built.len() * per_graph, |i| {
+                    let (g, data) = &built[i / per_graph];
+                    let rest = i % per_graph;
+                    let s = strategies[rest / algorithms.len()];
+                    let a = algorithms[rest % algorithms.len()];
+                    let p = cache.get_or_partition(g, s);
+                    run_task(g, *data, &counts[rest % algorithms.len()], a, s, &p, cfg, mode)
+                });
+                let mut flat = flat.into_iter();
+                (0..built.len()).map(|_| flat.by_ref().take(per_graph).collect()).collect()
+            }
+            Some(c) => {
+                let mut blocks = Vec::with_capacity(process.len());
+                for (j, &gi) in process.iter().enumerate() {
+                    let (g, data) = &built[j];
+                    let cache = PartitionCache::new(cfg.num_workers);
+                    pool::parallel_map(threads, strategies.len(), |si| {
+                        cache.get_or_partition(g, strategies[si]);
+                    });
+                    let block = pool::parallel_map(threads, per_graph, |k| {
+                        let s = strategies[k / algorithms.len()];
+                        let a = algorithms[k % algorithms.len()];
+                        let p = cache.get_or_partition(g, s);
+                        run_task(g, *data, &counts[k % algorithms.len()], a, s, &p, cfg, mode)
+                    });
+                    c.save(corpus[gi].name, data, &block)?;
+                    blocks.push(block);
+                }
+                blocks
+            }
+        };
 
-        let mut store = LogStore { logs, ..Default::default() };
-        for (g, data) in &built {
-            store.graph_features.insert(g.name.clone(), *data);
+        let done_total = done_already + process.len();
+        if process.len() < pending.len() {
+            // the limit stopped the build early; the checkpoint holds
+            // everything computed so far
+            return Ok((None, done_total));
         }
-        Ok(store)
+
+        // Assemble in corpus grid order: restored and fresh blocks
+        // interleave exactly as an uninterrupted build would have
+        // produced them.
+        let mut store = LogStore::default();
+        let mut fresh = blocks.into_iter().zip(built.iter().map(|(_, d)| *d));
+        for (i, spec) in corpus.iter().enumerate() {
+            let (data, block) = match restored[i].take() {
+                Some((data, logs)) => (data, logs),
+                None => {
+                    let (block, data) =
+                        fresh.next().expect("one fresh block per non-restored graph");
+                    (data, block)
+                }
+            };
+            store.graph_features.insert(spec.name.to_string(), data);
+            store.logs.extend(block);
+        }
+        Ok((Some(store), done_total))
+    }
+
+    /// The (graph, algorithm, strategy name) → time index, built on
+    /// first query. Duplicate keys keep their first occurrence,
+    /// matching the old linear scan's first-match semantics.
+    fn index(&self) -> &(usize, BTreeMap<(String, String, String), f64>) {
+        self.time_index.get_or_init(|| {
+            let mut m = BTreeMap::new();
+            for l in &self.logs {
+                m.entry((l.graph.clone(), l.algorithm.clone(), l.strategy.name()))
+                    .or_insert(l.time);
+            }
+            (self.logs.len(), m)
+        })
     }
 
     /// Execution time of one task under one strategy.
     pub fn time_of(&self, graph: &str, algorithm: &str, strategy: Strategy) -> Option<f64> {
-        self.logs
-            .iter()
-            .find(|l| l.graph == graph && l.algorithm == algorithm && l.strategy == strategy)
-            .map(|l| l.time)
+        let (indexed_len, index) = self.index();
+        if *indexed_len != self.logs.len() {
+            // `logs` is a public field and was mutated directly after
+            // the index was built; stay correct at linear-scan speed
+            return self
+                .logs
+                .iter()
+                .find(|l| l.graph == graph && l.algorithm == algorithm && l.strategy == strategy)
+                .map(|l| l.time);
+        }
+        index.get(&(graph.to_string(), algorithm.to_string(), strategy.name())).copied()
     }
 
     /// All times for one (graph, algorithm), in the inventory's strategy
-    /// order.
-    pub fn times_of_task(&self, graph: &str, algorithm: &str) -> Vec<f64> {
+    /// order. Errors if any inventory strategy is missing from the
+    /// store: silently dropping it would hand callers a positionally
+    /// misaligned vector (entry `i` no longer the inventory's strategy
+    /// `i`).
+    pub fn times_of_task(&self, graph: &str, algorithm: &str) -> Result<Vec<f64>> {
         Strategy::inventory()
             .into_iter()
-            .filter_map(|s| self.time_of(graph, algorithm, s))
+            .map(|s| {
+                self.time_of(graph, algorithm, s).with_context(|| {
+                    format!(
+                        "no execution log for {graph}/{algorithm} under {} (psid {}): the \
+                         store does not cover the full strategy inventory",
+                        s.name(),
+                        s.psid()
+                    )
+                })
+            })
             .collect()
     }
 
-    /// Persist as CSV (graph, algorithm, psid, time, 21 algo features).
+    /// Persist as CSV (graph, algorithm, psid, time, then the
+    /// [`NUM_OP_KEYS`] algorithm features).
     pub fn save_csv(&self, path: &Path) -> Result<()> {
         let mut out = String::from("graph,algorithm,psid,time");
         for k in crate::analyzer::OpKey::all() {
@@ -214,14 +475,19 @@ impl LogStore {
 
     /// Load a CSV written by [`LogStore::save_csv`]. Graph data features
     /// are *not* stored in the CSV; the caller must re-attach them, so
-    /// this is primarily for external analysis.
+    /// this is primarily for external analysis — a self-contained
+    /// persistence format lives in [`super::checkpoint`].
     pub fn load_csv(path: &Path, features_of: &BTreeMap<String, DataFeatures>) -> Result<Self> {
+        // the column count follows the feature schema, so a schema
+        // change shows up as a load error instead of a corrupt reload
+        const META_COLS: usize = 4;
+        let expected_cols = META_COLS + NUM_OP_KEYS;
         let text = std::fs::read_to_string(path)?;
         let mut store = LogStore { graph_features: features_of.clone(), ..Default::default() };
         for (i, line) in text.lines().enumerate().skip(1) {
             let cols: Vec<&str> = line.split(',').collect();
-            if cols.len() != 4 + 21 {
-                bail!("line {}: expected {} columns, got {}", i + 1, 25, cols.len());
+            if cols.len() != expected_cols {
+                bail!("line {}: expected {expected_cols} columns, got {}", i + 1, cols.len());
             }
             let graph = cols[0].to_string();
             let psid: usize = cols[2].parse()?;
@@ -232,9 +498,9 @@ impl LogStore {
             let data = *features_of
                 .get(&graph)
                 .with_context(|| format!("no data features for graph {graph}"))?;
-            let mut algo = [0.0; 21];
+            let mut algo = [0.0; NUM_OP_KEYS];
             for (j, a) in algo.iter_mut().enumerate() {
-                *a = cols[4 + j].parse()?;
+                *a = cols[META_COLS + j].parse()?;
             }
             store.logs.push(ExecutionLog {
                 graph,
@@ -276,7 +542,52 @@ mod tests {
         assert_eq!(store.logs.len(), 4);
         assert!(store.time_of("wiki", "PR", Strategy::Random).is_some());
         assert!(store.time_of("wiki", "PR", Strategy::Ginger).is_none());
+        // a non-inventory HDRF λ has no psid; the query must return
+        // None, not panic (regression: the index is keyed by name)
+        assert!(store.time_of("wiki", "PR", Strategy::Hdrf(30)).is_none());
         assert!(store.logs.iter().all(|l| l.time > 0.0));
+    }
+
+    /// `times_of_task` must cover the whole inventory or error — a
+    /// partial store silently dropping strategies would positionally
+    /// misalign the returned vector against the inventory.
+    #[test]
+    fn times_of_task_rejects_partial_store() {
+        let partial = tiny_corpus(); // only Random + Hybrid recorded
+        let err = partial.times_of_task("wiki", "PR").unwrap_err().to_string();
+        assert!(err.contains("strategy inventory"), "{err}");
+
+        let mut full = LogStore::default();
+        let cfg = ClusterConfig::with_workers(4);
+        let g = DatasetSpec::by_name("wiki").unwrap().build(0.01, 7);
+        full.record_graph(&g, &[Algorithm::Pr], &Strategy::inventory(), &cfg).unwrap();
+        let times = full.times_of_task("wiki", "PR").unwrap();
+        let inventory = Strategy::inventory();
+        assert_eq!(times.len(), inventory.len());
+        // entry i is inventory strategy i, bit-for-bit
+        for (t, s) in times.iter().zip(&inventory) {
+            assert_eq!(t.to_bits(), full.time_of("wiki", "PR", *s).unwrap().to_bits());
+        }
+    }
+
+    /// The index path and record_graph's invalidation: queries stay
+    /// correct when more logs are recorded after the first lookup.
+    #[test]
+    fn time_index_survives_later_records() {
+        let mut store = tiny_corpus();
+        assert!(store.time_of("wiki", "PR", Strategy::Random).is_some()); // builds the index
+        let cfg = ClusterConfig::with_workers(4);
+        let g = DatasetSpec::by_name("facebook").unwrap().build(0.01, 7);
+        store.record_graph(&g, &[Algorithm::Pr], &[Strategy::Random], &cfg).unwrap();
+        assert!(store.time_of("facebook", "PR", Strategy::Random).is_some());
+        assert!(store.time_of("wiki", "AID", Strategy::Hybrid).is_some());
+        // even a *direct* push into the public `logs` field (index not
+        // invalidated) must stay correct: the length check falls back
+        // to the linear scan
+        let mut cloned = store.logs[0].clone();
+        cloned.graph = "synthetic".to_string();
+        store.logs.push(cloned);
+        assert!(store.time_of("synthetic", "AID", Strategy::Random).is_some());
     }
 
     #[test]

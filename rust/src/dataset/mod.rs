@@ -1,10 +1,12 @@
-//! Execution logs, synthetic augmentation and the evaluation split
-//! (§4.2.1, §5.4).
+//! Execution logs, crash-safe corpus checkpointing, synthetic
+//! augmentation and the evaluation split (§4.2.1, §5.4).
 
 pub mod augment;
+pub mod checkpoint;
 pub mod logs;
 pub mod split;
 
 pub use augment::augment;
+pub use checkpoint::CheckpointStore;
 pub use logs::{ExecutionLog, LogStore};
 pub use split::{test_split, TestSet};

@@ -143,7 +143,7 @@ mod tests {
                 .clone();
             let selected = etrm.select(&task);
             let t_sel = store.time_of(graph, algo.name(), selected).unwrap();
-            let times = store.times_of_task(graph, algo.name());
+            let times = store.times_of_task(graph, algo.name()).unwrap();
             let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
             let worst = times.iter().cloned().fold(0.0, f64::max);
             assert!(

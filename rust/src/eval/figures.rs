@@ -31,7 +31,9 @@ pub fn fig1_from_store(store: &crate::dataset::logs::LogStore) -> String {
     header.extend(Strategy::inventory().iter().map(|s| s.name()));
     let mut t = Table::new(header);
     for &(graph, algo) in cases {
-        let times = store.times_of_task(graph, algo.name());
+        let times = store
+            .times_of_task(graph, algo.name())
+            .expect("the corpus covers every Fig 1 example task");
         let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
         let worst = times.iter().cloned().fold(0.0, f64::max);
         let mut row = vec![format!("{graph}/{}", algo.name())];

@@ -130,7 +130,7 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(420);
         let g = crate::graph::gen::chung_lu::generate("t", 300, 2000, 2.2, true, &mut rng);
         let data = DataFeatures::of(&g);
-        TaskFeatures::from_vector(data, [10.0; 21])
+        TaskFeatures::from_vector(data, [10.0; crate::analyzer::NUM_OP_KEYS])
     }
 
     #[test]

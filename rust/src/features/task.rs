@@ -1,6 +1,6 @@
 //! Task features: data features ⊕ algorithm features (Fig 2 steps 1-2).
 
-use crate::analyzer::{analyze, AlgoCounts};
+use crate::analyzer::{analyze, AlgoCounts, NUM_OP_KEYS};
 use crate::util::error::Result;
 use crate::graph::Graph;
 
@@ -11,8 +11,9 @@ use super::data::DataFeatures;
 pub struct TaskFeatures {
     /// Table 3 features of the graph.
     pub data: DataFeatures,
-    /// Evaluated Table 4 counts (21 entries, Table 4 order).
-    pub algo: [f64; 21],
+    /// Evaluated Table 4 counts ([`NUM_OP_KEYS`] entries, Table 4
+    /// order).
+    pub algo: [f64; NUM_OP_KEYS],
 }
 
 impl TaskFeatures {
@@ -33,17 +34,17 @@ impl TaskFeatures {
     }
 
     /// Assemble from a raw evaluated algorithm-feature vector.
-    pub fn from_vector(data: DataFeatures, algo: [f64; 21]) -> Self {
+    pub fn from_vector(data: DataFeatures, algo: [f64; NUM_OP_KEYS]) -> Self {
         TaskFeatures { data, algo }
     }
 
     /// Sum of algorithm features — the aggregation used when synthetic
     /// tasks are built from sequences of real algorithms (§4.2.1:
     /// `AF(s) = Σ AF(r_i)`).
-    pub fn aggregate_algos(data: DataFeatures, parts: &[[f64; 21]]) -> Self {
-        let mut algo = [0.0; 21];
+    pub fn aggregate_algos(data: DataFeatures, parts: &[[f64; NUM_OP_KEYS]]) -> Self {
+        let mut algo = [0.0; NUM_OP_KEYS];
         for p in parts {
-            for i in 0..21 {
+            for i in 0..NUM_OP_KEYS {
                 algo[i] += p[i];
             }
         }
@@ -77,7 +78,7 @@ mod tests {
         let a = TaskFeatures::extract(&g, Algorithm::Aid.pseudo_code()).unwrap();
         let b = TaskFeatures::extract(&g, Algorithm::Pr.pseudo_code()).unwrap();
         let s = TaskFeatures::aggregate_algos(a.data, &[a.algo, b.algo, b.algo]);
-        for i in 0..21 {
+        for i in 0..NUM_OP_KEYS {
             assert!((s.algo[i] - (a.algo[i] + 2.0 * b.algo[i])).abs() < 1e-9);
         }
     }

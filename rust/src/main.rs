@@ -14,19 +14,25 @@
 //!   features (Fig 2 steps 1-2).
 //! * `analyze --file pseudo/pr.gps` — symbolic operation counts of a
 //!   pseudo-code file (Listing 2).
-//! * `logs --out logs.csv` — build and save the execution-log corpus.
+//! * `logs --out logs.csv` — build and save the execution-log corpus;
+//!   with `--checkpoint-dir d --limit-graphs n` it instead checkpoints
+//!   the first `n` corpus graphs and stops (resume by re-running
+//!   without the limit).
 //! * `runtime-check` — load the AOT artifact manifest and smoke-test the
 //!   runtime kernels.
 //!
 //! Common flags: `--scale` (default 1/32 of the paper's dataset sizes),
 //! `--seed`, `--workers`, `--threads` (corpus-build parallelism;
 //! defaults to the `GPS_THREADS` env var, then to the machine's
-//! available cores), and `--engine-mode simulated|threaded` (engine
+//! available cores), `--engine-mode simulated|threaded` (engine
 //! backend; defaults to the `GPS_ENGINE_MODE` env var, then to
-//! `simulated`).
+//! `simulated`), and `--checkpoint-dir` (crash-safe corpus checkpoint
+//! directory; defaults to the `GPS_CHECKPOINT_DIR` env var, then to no
+//! checkpointing — see the README's corpus-checkpointing section).
 
 use gps_select::algorithms::Algorithm;
 use gps_select::analyzer;
+use gps_select::dataset::checkpoint;
 use gps_select::dataset::logs::LogStore;
 use gps_select::engine::cost::ClusterConfig;
 use gps_select::engine::ExecutionMode;
@@ -55,6 +61,7 @@ fn pipeline_config(args: &Args) -> Result<pipeline::PipelineConfig> {
         workers: args.get_usize("workers", default.workers)?,
         threads: args.get_usize("threads", default.threads)?,
         engine_mode: ExecutionMode::resolve(args.get("engine-mode"))?,
+        checkpoint_dir: checkpoint::resolve_dir(args.get("checkpoint-dir")),
         augment_cap: match args.get("cap") {
             Some("none") => None,
             Some(v) => Some(
@@ -285,8 +292,46 @@ fn cmd_logs(args: &Args) -> Result<()> {
     let config = pipeline_config(args)?;
     let cfg = ClusterConfig::with_workers(config.workers);
     let threads = gps_select::util::pool::resolve_threads(config.threads);
-    let store =
-        LogStore::build_corpus_parallel(config.scale, config.seed, &cfg, threads, config.engine_mode)?;
+    if let Some(limit) = args.get("limit-graphs") {
+        // partial sweep: checkpoint the first N graphs, then stop — a
+        // later run without the limit resumes from the checkpoint
+        ensure!(
+            args.get("out").is_none(),
+            "--out cannot be combined with --limit-graphs: a partial sweep writes only \
+             checkpoint shards, never a corpus CSV"
+        );
+        let limit: usize = limit
+            .parse()
+            .with_context(|| format!("--limit-graphs expects an integer, got {limit:?}"))?;
+        let dir = config
+            .checkpoint_dir
+            .as_deref()
+            .context("--limit-graphs requires --checkpoint-dir (or GPS_CHECKPOINT_DIR)")?;
+        let done = LogStore::checkpoint_prefix(
+            config.scale,
+            config.seed,
+            &cfg,
+            threads,
+            config.engine_mode,
+            dir,
+            limit,
+        )?;
+        println!(
+            "checkpointed {done}/{} corpus graphs in {} (re-run without --limit-graphs to \
+             resume)",
+            gps_select::graph::datasets::CORPUS.len(),
+            dir.display()
+        );
+        return Ok(());
+    }
+    let store = LogStore::build_corpus_checkpointed(
+        config.scale,
+        config.seed,
+        &cfg,
+        threads,
+        config.engine_mode,
+        config.checkpoint_dir.as_deref(),
+    )?;
     let path = args.get_or("out", "logs.csv");
     store.save_csv(std::path::Path::new(path))?;
     println!(

@@ -1,0 +1,108 @@
+//! Crash-safe file I/O: write-temp-then-rename commits.
+//!
+//! The corpus checkpoint store (and anything else that persists state a
+//! crash must not corrupt) funnels every file commit through
+//! [`write_atomic`]: content is written and flushed to a temporary
+//! sibling file in the *same directory* (so the final rename cannot
+//! cross a filesystem boundary) and only then renamed over the target.
+//! On POSIX filesystems the rename is atomic, so a reader — including a
+//! resumed build after a mid-write crash — observes either the complete
+//! old file, the complete new file, or no file; never a torn prefix.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::error::{Context, Result};
+
+/// Temporary sibling path for an in-flight write of `path`. The PID
+/// suffix keeps concurrent *processes* writing the same target from
+/// clobbering each other's temp files; the process-wide sequence number
+/// does the same for concurrent *threads*.
+fn temp_sibling(path: &Path) -> Result<PathBuf> {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    let name = path
+        .file_name()
+        .with_context(|| format!("write_atomic: {} has no file name", path.display()))?;
+    Ok(dir.join(format!(
+        ".{}.tmp.{}.{}",
+        name.to_string_lossy(),
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    )))
+}
+
+/// Atomically replace `path` with `bytes`: write + flush a temporary
+/// file in the same directory, then rename it over `path`. If any step
+/// fails the temp file is removed and `path` is left untouched.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = temp_sibling(path)?;
+    let commit = (|| -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(bytes).with_context(|| format!("write {}", tmp.display()))?;
+        // flush through the OS so a post-rename crash cannot leave the
+        // *renamed* file shorter than what was acknowledged
+        f.sync_all().with_context(|| format!("sync {}", tmp.display()))?;
+        drop(f);
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))
+    })();
+    if commit.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    commit
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("gps_fsio_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn writes_and_replaces() {
+        let dir = scratch("replace");
+        let path = dir.join("out.txt");
+        write_atomic(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        write_atomic(&path, b"second, longer content").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second, longer content");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn leaves_no_temp_files_behind() {
+        let dir = scratch("clean");
+        let path = dir.join("out.bin");
+        write_atomic(&path, &[0u8; 4096]).unwrap();
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["out.bin".to_string()], "{names:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn failure_does_not_touch_target() {
+        let dir = scratch("fail");
+        let path = dir.join("out.txt");
+        write_atomic(&path, b"kept").unwrap();
+        // writing "into" a path whose parent is a regular file must fail
+        // and must not disturb the existing target
+        let bad = path.join("child.txt");
+        assert!(write_atomic(&bad, b"x").is_err());
+        assert_eq!(std::fs::read(&path).unwrap(), b"kept");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,6 +1,6 @@
 //! Small self-contained utilities: deterministic RNG, statistics,
-//! CLI parsing, error handling, a scoped worker pool, table formatting
-//! and a micro-benchmark harness.
+//! CLI parsing, error handling, a scoped worker pool, atomic file I/O,
+//! table formatting and a micro-benchmark harness.
 //!
 //! The crate deliberately has **zero** external dependencies; everything
 //! (arg parsing, error type, thread pool, bench timing, property-test
@@ -10,6 +10,7 @@
 pub mod benchkit;
 pub mod cli;
 pub mod error;
+pub mod fsio;
 pub mod pool;
 pub mod rng;
 pub mod stats;

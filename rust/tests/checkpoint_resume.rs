@@ -1,0 +1,278 @@
+//! The corpus-checkpoint contract: a build interrupted after N graphs
+//! resumes from its checkpoint directory, recomputes only the remaining
+//! graphs, and yields a store bit-identical to an uninterrupted
+//! single-shot build — for any pool thread count and both engine
+//! modes — while corrupted shards and configuration-mismatched
+//! manifests are rejected instead of merged.
+
+use std::path::PathBuf;
+
+use gps_select::dataset::checkpoint::{manifest_text, CheckpointStore};
+use gps_select::dataset::logs::LogStore;
+use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::ExecutionMode;
+
+const SCALE: f64 = 0.002;
+const SEED: u64 = 7;
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gps_resume_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Bit-exact store equality (same contract as determinism_threads).
+fn assert_stores_identical(a: &LogStore, b: &LogStore) {
+    assert_eq!(a.logs.len(), b.logs.len());
+    for (x, y) in a.logs.iter().zip(&b.logs) {
+        assert_eq!(x.graph, y.graph);
+        assert_eq!(x.algorithm, y.algorithm);
+        assert_eq!(x.strategy, y.strategy);
+        assert_eq!(
+            x.time.to_bits(),
+            y.time.to_bits(),
+            "time bits differ for {}/{}/{}",
+            x.graph,
+            x.algorithm,
+            x.strategy.name()
+        );
+        assert_eq!(x.features.algo, y.features.algo, "{}/{}", x.graph, x.algorithm);
+        assert_eq!(x.features.data, y.features.data, "{}", x.graph);
+    }
+    assert_eq!(a.graph_features, b.graph_features);
+}
+
+#[test]
+fn interrupted_build_resumes_bit_identical() {
+    let cfg = ClusterConfig::with_workers(16);
+    let clean =
+        LogStore::build_corpus_parallel(SCALE, SEED, &cfg, 1, ExecutionMode::Simulated).unwrap();
+
+    let dir = scratch("resume");
+    // "interrupt" after 5 of the 12 graphs, on a different thread count
+    // than the resume — content must not depend on either
+    let done = LogStore::checkpoint_prefix(
+        SCALE,
+        SEED,
+        &cfg,
+        3,
+        ExecutionMode::Simulated,
+        &dir,
+        5,
+    )
+    .unwrap();
+    assert_eq!(done, 5);
+    assert!(dir.join("manifest.txt").exists());
+    let shards = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref().unwrap().file_name().to_string_lossy().ends_with(".shard")
+        })
+        .count();
+    assert_eq!(shards, 5);
+
+    // resume to completion
+    let resumed = LogStore::build_corpus_checkpointed(
+        SCALE,
+        SEED,
+        &cfg,
+        2,
+        ExecutionMode::Simulated,
+        Some(dir.as_path()),
+    )
+    .unwrap();
+    assert_stores_identical(&clean, &resumed);
+
+    // the completed checkpoint now holds all 12 graphs; a fresh run
+    // restores everything (zero recompute) and is still bit-identical
+    let restored = LogStore::build_corpus_checkpointed(
+        SCALE,
+        SEED,
+        &cfg,
+        4,
+        ExecutionMode::Simulated,
+        Some(dir.as_path()),
+    )
+    .unwrap();
+    assert_stores_identical(&clean, &restored);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn threaded_mode_resume_matches_simulated_reference() {
+    let cfg = ClusterConfig::with_workers(4);
+    let reference =
+        LogStore::build_corpus_parallel(SCALE, SEED, &cfg, 1, ExecutionMode::Simulated).unwrap();
+    let dir = scratch("threaded");
+    let done =
+        LogStore::checkpoint_prefix(SCALE, SEED, &cfg, 1, ExecutionMode::Threaded, &dir, 4)
+            .unwrap();
+    assert_eq!(done, 4);
+    let resumed = LogStore::build_corpus_checkpointed(
+        SCALE,
+        SEED,
+        &cfg,
+        2,
+        ExecutionMode::Threaded,
+        Some(dir.as_path()),
+    )
+    .unwrap();
+    // the two engine backends are bit-identical, so a threaded resumed
+    // build must equal the simulated clean reference
+    assert_stores_identical(&reference, &resumed);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Resume must actually *use* the checkpoint, not silently recompute:
+/// tamper with a committed shard through the store API (so its checksum
+/// stays valid) and check the tampered value flows into the resumed
+/// corpus.
+#[test]
+fn resume_trusts_checkpointed_shards() {
+    let cfg = ClusterConfig::with_workers(16);
+    let dir = scratch("tamper");
+    LogStore::checkpoint_prefix(SCALE, SEED, &cfg, 2, ExecutionMode::Simulated, &dir, 2)
+        .unwrap();
+
+    let manifest = manifest_text(SCALE, SEED, &cfg, ExecutionMode::Simulated);
+    let store = CheckpointStore::open(&dir, &manifest).unwrap();
+    let first = gps_select::graph::datasets::CORPUS[0].name;
+    let (data, mut logs) = store.load(first).unwrap().unwrap();
+    let marker = 12345.678_f64;
+    logs[0].time = marker;
+    store.save(first, &data, &logs).unwrap();
+
+    let resumed = LogStore::build_corpus_checkpointed(
+        SCALE,
+        SEED,
+        &cfg,
+        2,
+        ExecutionMode::Simulated,
+        Some(dir.as_path()),
+    )
+    .unwrap();
+    assert_eq!(
+        resumed.logs[0].time.to_bits(),
+        marker.to_bits(),
+        "the resumed build recomputed a graph that was already checkpointed"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn mismatched_manifest_is_rejected_not_merged() {
+    let cfg = ClusterConfig::with_workers(16);
+    let dir = scratch("mismatch");
+    LogStore::checkpoint_prefix(SCALE, SEED, &cfg, 2, ExecutionMode::Simulated, &dir, 1)
+        .unwrap();
+
+    // each fingerprinted knob, changed one at a time, must invalidate
+    let other_workers = ClusterConfig::with_workers(8);
+    let attempts: Vec<(&str, gps_select::util::error::Error)> = vec![
+        (
+            "scale",
+            LogStore::build_corpus_checkpointed(
+                0.003,
+                SEED,
+                &cfg,
+                1,
+                ExecutionMode::Simulated,
+                Some(dir.as_path()),
+            )
+            .unwrap_err(),
+        ),
+        (
+            "seed",
+            LogStore::build_corpus_checkpointed(
+                SCALE,
+                SEED + 1,
+                &cfg,
+                1,
+                ExecutionMode::Simulated,
+                Some(dir.as_path()),
+            )
+            .unwrap_err(),
+        ),
+        (
+            "workers",
+            LogStore::build_corpus_checkpointed(
+                SCALE,
+                SEED,
+                &other_workers,
+                1,
+                ExecutionMode::Simulated,
+                Some(dir.as_path()),
+            )
+            .unwrap_err(),
+        ),
+        (
+            "engine mode",
+            LogStore::build_corpus_checkpointed(
+                SCALE,
+                SEED,
+                &cfg,
+                1,
+                ExecutionMode::Threaded,
+                Some(dir.as_path()),
+            )
+            .unwrap_err(),
+        ),
+    ];
+    for (knob, err) in attempts {
+        let msg = err.to_string();
+        assert!(msg.contains("manifest mismatch"), "{knob}: {msg}");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn truncated_shard_is_rejected() {
+    let cfg = ClusterConfig::with_workers(16);
+    let dir = scratch("truncate");
+    LogStore::checkpoint_prefix(SCALE, SEED, &cfg, 2, ExecutionMode::Simulated, &dir, 1)
+        .unwrap();
+    let first = gps_select::graph::datasets::CORPUS[0].name;
+    let path = dir.join(format!("{first}.shard"));
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+
+    let err = LogStore::build_corpus_checkpointed(
+        SCALE,
+        SEED,
+        &cfg,
+        1,
+        ExecutionMode::Simulated,
+        Some(dir.as_path()),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("shard"), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn corrupted_shard_is_rejected() {
+    let cfg = ClusterConfig::with_workers(16);
+    let dir = scratch("corrupt");
+    LogStore::checkpoint_prefix(SCALE, SEED, &cfg, 2, ExecutionMode::Simulated, &dir, 1)
+        .unwrap();
+    let first = gps_select::graph::datasets::CORPUS[0].name;
+    let path = dir.join(format!("{first}.shard"));
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] = if bytes[mid] == b'0' { b'1' } else { b'0' };
+    std::fs::write(&path, bytes).unwrap();
+
+    let err = LogStore::build_corpus_checkpointed(
+        SCALE,
+        SEED,
+        &cfg,
+        1,
+        ExecutionMode::Simulated,
+        Some(dir.as_path()),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("shard"), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -37,10 +37,7 @@ fn generalises_to_unseen_graph() {
     let store = small_corpus(0.01);
     let train_logs: Vec<_> =
         store.logs.iter().filter(|l| l.graph != "gd-ro").cloned().collect();
-    let synth_store = LogStore {
-        logs: train_logs,
-        graph_features: store.graph_features.clone(),
-    };
+    let synth_store = LogStore::from_parts(train_logs, store.graph_features.clone());
     let synthetic = augment(&synth_store, 2..=6, Some(8000), 1);
     assert!(!synthetic.is_empty());
     let etrm = Etrm::train_gbdt(
@@ -59,7 +56,7 @@ fn generalises_to_unseen_graph() {
             .iter()
             .map(|s| etrm.predict(&task.features, *s))
             .collect();
-        let truth = store.times_of_task("gd-ro", algo.name());
+        let truth = store.times_of_task("gd-ro", algo.name()).unwrap();
         let rho = spearman(&preds, &truth);
         assert!(rho > 0.0, "{}: spearman {rho} (preds {preds:?}, truth {truth:?})", algo.name());
     }

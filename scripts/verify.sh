@@ -17,6 +17,22 @@ cargo test -q -- --skip bit_identical_to_simulated
 # across algorithms, strategies and worker counts.
 cargo test -q --release --test mode_equivalence
 
+# Corpus checkpoint resume round-trip: build the first 6 graphs into a
+# checkpoint directory and stop (the scripted stand-in for an
+# interrupted sweep), resume to completion from the checkpoint, and
+# byte-compare the resulting corpus CSV against a clean single-shot
+# build — resume must be bit-identical.
+CKPT_TMP=$(mktemp -d)
+trap 'rm -rf "$CKPT_TMP"' EXIT
+REPRO=target/release/repro
+"$REPRO" logs --scale 0.002 --seed 7 --workers 16 \
+    --checkpoint-dir "$CKPT_TMP/ck" --limit-graphs 6
+"$REPRO" logs --scale 0.002 --seed 7 --workers 16 \
+    --checkpoint-dir "$CKPT_TMP/ck" --out "$CKPT_TMP/resumed.csv"
+"$REPRO" logs --scale 0.002 --seed 7 --workers 16 --out "$CKPT_TMP/clean.csv"
+cmp "$CKPT_TMP/resumed.csv" "$CKPT_TMP/clean.csv"
+echo "verify: checkpoint resume round-trip is bit-identical"
+
 # ~10-second engine bench smoke in release mode: runs only the engine
 # rows of benches/hotpath.rs (no full cargo-bench sweep) and records
 # the sim-vs-threaded timings at the repository root.
