@@ -4,13 +4,16 @@
 //!
 //! ```bash
 //! cargo run --release --example engine_scalability -- [--scale 0.03125] \
-//!     [--engine-mode simulated|threaded]
+//!     [--engine-mode simulated|threaded|socket]
 //! ```
 //!
 //! With `--engine-mode threaded` every run executes thread-per-worker
 //! over channels (spawning up to 64 OS threads at the top of the
-//! sweep); the reported simulated times are bit-identical to the
-//! default simulated oracle.
+//! sweep); with `--engine-mode socket` every run spawns one worker
+//! *process* per engine worker over localhost TCP (this example
+//! installs the `--worker-rank` hook, so it can serve as its own worker
+//! binary). The reported simulated times are bit-identical to the
+//! default simulated oracle either way.
 
 use gps_select::algorithms::Algorithm;
 use gps_select::engine::cost::ClusterConfig;
@@ -22,6 +25,11 @@ use gps_select::util::error::Result;
 
 fn main() -> Result<()> {
     let args = Args::parse();
+    // socket-engine worker hook: when the coordinator re-spawns this
+    // example as a worker process, serve the run instead of sweeping
+    if let Some(result) = gps_select::algorithms::maybe_serve_socket_worker(&args) {
+        return result;
+    }
     let scale = args.get_f64("scale", 1.0 / 32.0)?;
     let seed = args.get_u64("seed", 42)?;
     let mode = ExecutionMode::resolve(args.get("engine-mode"))?;

@@ -15,6 +15,10 @@ use gps_select::util::error::Result;
 
 fn main() -> Result<()> {
     let args = Args::parse();
+    // socket-engine worker hook (see engine::transport::socket)
+    if let Some(result) = gps_select::algorithms::maybe_serve_socket_worker(&args) {
+        return result;
+    }
     let name = args.get_or("graph", "wiki");
     let scale = args.get_f64("scale", 1.0 / 32.0)?;
     let workers = args.get_usize("workers", 64)?;

@@ -33,6 +33,10 @@ use gps_select::util::error::{bail, Result};
 
 fn main() -> Result<()> {
     let args = Args::parse();
+    // socket-engine worker hook (see engine::transport::socket)
+    if let Some(result) = gps_select::algorithms::maybe_serve_socket_worker(&args) {
+        return result;
+    }
     let default = PipelineConfig::default();
     let config = PipelineConfig {
         scale: args.get_f64("scale", default.scale)?,

@@ -63,6 +63,10 @@ fn evaluate(etrm: &Etrm, store: &LogStore, label: &str) {
 
 fn main() -> Result<()> {
     let args = Args::parse();
+    // socket-engine worker hook (see engine::transport::socket)
+    if let Some(result) = gps_select::algorithms::maybe_serve_socket_worker(&args) {
+        return result;
+    }
     let scale = args.get_f64("scale", 0.02)?;
     let seed = args.get_u64("seed", 42)?;
     let cap = args.get_usize("cap", 20_000)?;

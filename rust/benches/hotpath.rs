@@ -6,9 +6,10 @@
 //!
 //! An optional positional argument filters rows by substring —
 //! `cargo bench --bench hotpath -- engine` runs only the engine rows
-//! (and skips the other sections' setup). When any engine-mode pair
-//! row runs, its timings are recorded as JSON in `GPS_BENCH_OUT`
-//! (default `BENCH_engine.json`) for CI trend tracking.
+//! (and skips the other sections' setup). When any engine-mode
+//! comparison row (simulated vs threaded vs socket, 8 workers) runs,
+//! its timings are recorded as JSON in `GPS_BENCH_OUT` (default
+//! `BENCH_engine.json`) for CI trend tracking.
 
 #[path = "common.rs"]
 mod common;
@@ -60,11 +61,15 @@ fn main() {
         }
     }
 
-    // ---- engine: 64-worker baseline + the execution-mode pair ----
+    // ---- engine: 64-worker baseline + the execution-mode triple ----
+    // the socket rows spawn worker processes; point them at the repro
+    // CLI, which installs the --worker-rank hook
+    gps_select::engine::transport::socket::set_worker_binary(env!("CARGO_BIN_EXE_repro"));
     let engine_pairs = [(Algorithm::Pr, "pagerank-10-iters"), (Algorithm::Tc, "triangle-count")];
-    let engine_modes = [ExecutionMode::Simulated, ExecutionMode::Threaded];
+    let engine_modes =
+        [ExecutionMode::Simulated, ExecutionMode::Threaded, ExecutionMode::Socket];
     // (row name, algorithm, None = 64-worker simulated baseline /
-    //  Some(mode) = 8-worker execution-mode pair)
+    //  Some(mode) = 8-worker execution-mode comparison row)
     let mut engine_rows: Vec<(String, Algorithm, Option<ExecutionMode>)> = engine_pairs
         .iter()
         .map(|&(algo, label)| (format!("engine/{label}/100k-edges"), algo, None))

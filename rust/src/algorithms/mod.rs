@@ -22,9 +22,11 @@ pub mod triangle;
 
 use crate::engine::cost::{ClusterConfig, OpCounts, SimTime};
 use crate::engine::gas::{Payload, VertexProgram};
+use crate::engine::transport::socket;
 use crate::engine::ExecutionMode;
 use crate::graph::Graph;
 use crate::partition::Partitioning;
+use crate::util::error::{Context, Result};
 
 /// The algorithm inventory.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -53,6 +55,19 @@ pub struct SimOutcome {
     /// vector in vertex order: equal digests ⇔ bit-identical results
     /// (the execution-mode equivalence tests compare these).
     pub value_hash: u64,
+    /// Measured wall-clock time of the run at the coordinator, in
+    /// milliseconds — the real-execution label channel next to the
+    /// simulated oracle. Non-deterministic by nature.
+    pub wall_clock_ms: f64,
+}
+
+/// Visitor dispatching over the concrete [`VertexProgram`] behind an
+/// [`Algorithm`] — how code that needs the program's associated types
+/// (e.g. the socket worker's wire decoding) gets at them without a
+/// `dyn`-incompatible trait object.
+pub trait ProgramVisitor {
+    type Out;
+    fn visit<P: VertexProgram>(self, prog: &P) -> Self::Out;
 }
 
 impl Algorithm {
@@ -107,13 +122,34 @@ impl Algorithm {
         }
     }
 
+    /// Dispatch `v` over this algorithm's concrete vertex program. The
+    /// program instances are the same defaults [`Algorithm::execute`]
+    /// runs, so a socket worker reconstructing a program by alias
+    /// executes exactly what the coordinator charged for.
+    pub fn visit<V: ProgramVisitor>(&self, v: V) -> V::Out {
+        match self {
+            Algorithm::Aid => v.visit(&degree::InDegree),
+            Algorithm::Aod => v.visit(&degree::OutDegree),
+            Algorithm::Pr => v.visit(&pagerank::PageRank::default()),
+            Algorithm::Gc => v.visit(&coloring::GreedyColoring),
+            Algorithm::Apcn => v.visit(&apcn::Apcn),
+            Algorithm::Tc => v.visit(&triangle::TriangleCount),
+            Algorithm::Cc => v.visit(&clustering::ClusteringCoefficient),
+            Algorithm::Rw => v.visit(&randomwalk::RandomWalk::default()),
+        }
+    }
+
     /// Execute on the engine and return the simulation outcome
     /// (default [`ExecutionMode::Simulated`] backend).
     pub fn simulate(&self, g: &Graph, p: &Partitioning, cfg: &ClusterConfig) -> SimOutcome {
         self.execute(g, p, cfg, ExecutionMode::Simulated)
     }
 
-    /// Execute on the engine with an explicit execution mode.
+    /// Execute on the engine with an explicit execution mode, panicking
+    /// on transport failures. The in-memory backends cannot fail; where
+    /// a socket-backend error (worker spawn, wire IO) should surface as
+    /// a `Result` instead — e.g. the CLI — use
+    /// [`Algorithm::try_execute`].
     pub fn execute(
         &self,
         g: &Graph,
@@ -121,6 +157,20 @@ impl Algorithm {
         cfg: &ClusterConfig,
         mode: ExecutionMode,
     ) -> SimOutcome {
+        self.try_execute(g, p, cfg, mode).unwrap_or_else(|e| {
+            panic!("engine run of {} on the {} backend failed: {e}", self.name(), mode.name())
+        })
+    }
+
+    /// Execute on the engine with an explicit execution mode, surfacing
+    /// transport errors.
+    pub fn try_execute(
+        &self,
+        g: &Graph,
+        p: &Partitioning,
+        cfg: &ClusterConfig,
+        mode: ExecutionMode,
+    ) -> Result<SimOutcome> {
         fn go<P: VertexProgram>(
             prog: &P,
             g: &Graph,
@@ -128,13 +178,19 @@ impl Algorithm {
             cfg: &ClusterConfig,
             mode: ExecutionMode,
             sum: impl Fn(&[P::Value]) -> f64,
-        ) -> SimOutcome {
-            let r = crate::engine::run_mode(g, p, prog, cfg, mode);
+        ) -> Result<SimOutcome> {
+            let r = crate::engine::try_run_mode(g, p, prog, cfg, mode)?;
             let value_hash = r
                 .values
                 .iter()
                 .fold(crate::util::rng::FNV1A64_OFFSET, |h, v| v.fold_bits(h));
-            SimOutcome { sim: r.sim, ops: r.ops, checksum: sum(&r.values), value_hash }
+            Ok(SimOutcome {
+                sim: r.sim,
+                ops: r.ops,
+                checksum: sum(&r.values),
+                value_hash,
+                wall_clock_ms: r.wall_clock_ms,
+            })
         }
         match self {
             Algorithm::Aid => go(&degree::InDegree, g, p, cfg, mode, |v| v.iter().sum()),
@@ -157,6 +213,59 @@ impl Algorithm {
             }),
         }
     }
+}
+
+/// The one-line socket-worker hook a binary installs at the top of
+/// `main` to be a valid `GPS_WORKER_BIN` target: if `args` carries
+/// `--worker-rank`, serve that worker's share of the run and return
+/// `Some(result)` (the caller returns/exits with it); otherwise `None`
+/// and the binary proceeds with its normal dispatch. The `repro` CLI
+/// and every example use this, so the flag handling lives in exactly
+/// one place.
+pub fn maybe_serve_socket_worker(args: &crate::util::cli::Args) -> Option<Result<()>> {
+    args.get("worker-rank")?;
+    Some((|| {
+        let rank = args.get_usize("worker-rank", 0)?;
+        let connect = args
+            .get("worker-connect")
+            .context("--worker-rank requires --worker-connect <host:port>")?;
+        socket_worker_main(rank, connect)
+    })())
+}
+
+/// Entry point of a `--worker-rank` socket worker process: connect to
+/// the coordinator, rebuild the run inputs from the bootstrap frame,
+/// resolve the vertex program by its inventory alias, and serve the
+/// worker's share of the run (`engine::transport::socket`).
+pub fn socket_worker_main(rank: usize, connect: &str) -> Result<()> {
+    let mut stream = socket::connect_worker(rank, connect)?;
+    let boot = socket::read_bootstrap(&mut stream)?;
+    let algo = Algorithm::by_name(&boot.algorithm).with_context(|| {
+        format!(
+            "socket worker {rank}: {:?} is not an inventory algorithm alias",
+            boot.algorithm
+        )
+    })?;
+    struct Serve<'a> {
+        g: &'a Graph,
+        p: &'a Partitioning,
+        cfg: &'a ClusterConfig,
+        rank: usize,
+        stream: &'a mut std::net::TcpStream,
+    }
+    impl ProgramVisitor for Serve<'_> {
+        type Out = Result<()>;
+        fn visit<P: VertexProgram>(self, prog: &P) -> Result<()> {
+            socket::serve_connection(prog, self.g, self.p, self.cfg, self.rank, self.stream)
+        }
+    }
+    algo.visit(Serve {
+        g: &boot.graph,
+        p: &boot.partitioning,
+        cfg: &boot.cfg,
+        rank,
+        stream: &mut stream,
+    })
 }
 
 #[cfg(test)]

@@ -66,12 +66,21 @@ pub fn augment(
 ) -> Vec<ExecutionLog> {
     let algos = Algorithm::training();
     let train_graphs: Vec<&str> = crate::graph::datasets::training_graphs();
-    // index real logs: (graph, algo, strategy) → (features, time)
-    let mut index: BTreeMap<(String, &'static str, usize), (&TaskFeatures, f64)> = BTreeMap::new();
+    // index real logs: (graph, algo, strategy) → (features, time, wall)
+    let mut index: BTreeMap<(String, &'static str, usize), (&TaskFeatures, f64, f64)> =
+        BTreeMap::new();
     for l in &store.logs {
         if let Some(a) = Algorithm::by_name(&l.algorithm) {
             if algos.contains(&a) && train_graphs.contains(&l.graph.as_str()) {
-                index.insert((l.graph.clone(), a.name(), l.strategy.psid()), (&l.features, l.time));
+                // try_psid: a non-inventory strategy in the store cannot
+                // feed the inventory-keyed synthetic grid, so skip it
+                // instead of panicking
+                if let Some(psid) = l.strategy.try_psid() {
+                    index.insert(
+                        (l.graph.clone(), a.name(), psid),
+                        (&l.features, l.time, l.wall_clock_ms),
+                    );
+                }
             }
         }
     }
@@ -100,12 +109,14 @@ pub fn augment(
                 }
                 let mut feats: Vec<[f64; NUM_OP_KEYS]> = Vec::with_capacity(combo.len());
                 let mut time = 0.0;
+                let mut wall = 0.0;
                 let mut ok = true;
                 for &ai in combo {
                     match index.get(&(gname.to_string(), algos[ai].name(), s.psid())) {
-                        Some((f, t)) => {
+                        Some((f, t, w)) => {
                             feats.push(f.algo);
                             time += t;
+                            wall += w;
                         }
                         None => {
                             ok = false;
@@ -126,6 +137,9 @@ pub fn augment(
                     strategy: *s,
                     features: TaskFeatures::aggregate_algos(data, &feats),
                     time,
+                    // a synthetic tuple models its members run back to
+                    // back, so both label channels sum
+                    wall_clock_ms: wall,
                 });
             }
         }

@@ -18,7 +18,12 @@
 //! of `LogStore::load_csv`, which persists only the algorithm half of
 //! each feature vector, does not apply here). All `f64` values are
 //! stored as exact bit patterns (`to_bits` hex), so a resumed build is
-//! bit-identical to an uninterrupted one.
+//! bit-identical to an uninterrupted one. Since format v2, each log
+//! line also carries the task's measured `wall_clock_ms` label; a
+//! restored graph keeps the wall-clock measured when it actually ran,
+//! so resume semantics are unchanged (the deterministic fields still
+//! match a clean build bit-for-bit, and the measured channel is
+//! preserved rather than re-measured).
 //!
 //! **The manifest fingerprints everything that determines corpus
 //! content**: scale, seed, the full cluster configuration (workers,
@@ -55,8 +60,16 @@ use crate::util::rng::fnv1a64;
 use super::logs::ExecutionLog;
 
 /// On-disk format version; bumped on any layout change so old
-/// directories are rejected instead of misparsed.
-pub const FORMAT_VERSION: u32 = 1;
+/// directories are rejected instead of misparsed. The version appears
+/// in both the manifest header and every shard header, so a directory
+/// written by an older build fails the manifest comparison with a clear
+/// mismatch error.
+///
+/// * v1 — original layout.
+/// * v2 — every log line additionally carries the measured
+///   `wall_clock_ms` label (exact bit pattern) after the simulated
+///   time.
+pub const FORMAT_VERSION: u32 = 2;
 
 const MANIFEST_FILE: &str = "manifest.txt";
 
@@ -211,7 +224,7 @@ impl CheckpointStore {
     /// Atomically commit one graph's shard.
     pub fn save(&self, graph: &str, data: &DataFeatures, logs: &[ExecutionLog]) -> Result<()> {
         let path = self.shard_path(graph);
-        fsio::write_atomic(&path, render_shard(graph, data, logs).as_bytes())
+        fsio::write_atomic(&path, render_shard(graph, data, logs)?.as_bytes())
             .with_context(|| format!("commit shard {}", path.display()))
     }
 }
@@ -236,8 +249,8 @@ fn render_moments(m: &MomentFeatures, out: &mut String) {
     }
 }
 
-fn render_shard(graph: &str, data: &DataFeatures, logs: &[ExecutionLog]) -> String {
-    let mut out = String::with_capacity(64 + logs.len() * (8 + NUM_OP_KEYS) * 17);
+fn render_shard(graph: &str, data: &DataFeatures, logs: &[ExecutionLog]) -> Result<String> {
+    let mut out = String::with_capacity(64 + logs.len() * (9 + NUM_OP_KEYS) * 17);
     writeln!(out, "gps-shard v{FORMAT_VERSION}").unwrap();
     writeln!(out, "graph {graph}").unwrap();
     let mut f = format!(
@@ -252,7 +265,22 @@ fn render_shard(graph: &str, data: &DataFeatures, logs: &[ExecutionLog]) -> Stri
     out.push('\n');
     writeln!(out, "logs {}", logs.len()).unwrap();
     for l in logs {
-        write!(out, "{} {} {}", l.strategy.psid(), l.algorithm, f64_hex(l.time)).unwrap();
+        // shards are PSID-keyed; a non-inventory strategy must error
+        // cleanly instead of panicking mid checkpoint commit
+        let psid = l.strategy.try_psid().with_context(|| {
+            format!(
+                "cannot checkpoint {graph}: non-inventory strategy {} has no PSID",
+                l.strategy.name()
+            )
+        })?;
+        write!(
+            out,
+            "{psid} {} {} {}",
+            l.algorithm,
+            f64_hex(l.time),
+            f64_hex(l.wall_clock_ms)
+        )
+        .unwrap();
         for x in l.features.algo {
             out.push(' ');
             out.push_str(&f64_hex(x));
@@ -261,7 +289,7 @@ fn render_shard(graph: &str, data: &DataFeatures, logs: &[ExecutionLog]) -> Stri
     }
     let sum = fnv1a64(out.as_bytes());
     writeln!(out, "checksum {sum:016x}").unwrap();
-    out
+    Ok(out)
 }
 
 fn parse_features(line: &str) -> Result<DataFeatures> {
@@ -337,19 +365,20 @@ fn parse_shard(text: &str, expect_graph: &str) -> Result<(DataFeatures, Vec<Exec
             .with_context(|| format!("truncated shard: {i} of {count} log lines present"))?;
         let toks: Vec<&str> = line.split_whitespace().collect();
         ensure!(
-            toks.len() == 3 + NUM_OP_KEYS,
+            toks.len() == 4 + NUM_OP_KEYS,
             "log line {i} has {} fields, expected {}",
             toks.len(),
-            3 + NUM_OP_KEYS
+            4 + NUM_OP_KEYS
         );
         let psid: usize = toks[0].parse().with_context(|| format!("bad psid {:?}", toks[0]))?;
         let strategy = *by_psid
             .get(&psid)
             .with_context(|| format!("psid {psid} is not in the strategy inventory"))?;
         let time = parse_f64_hex(toks[2])?;
+        let wall_clock_ms = parse_f64_hex(toks[3])?;
         let mut algo = [0.0; NUM_OP_KEYS];
         for (j, a) in algo.iter_mut().enumerate() {
-            *a = parse_f64_hex(toks[3 + j])?;
+            *a = parse_f64_hex(toks[4 + j])?;
         }
         logs.push(ExecutionLog {
             graph: graph.clone(),
@@ -357,6 +386,7 @@ fn parse_shard(text: &str, expect_graph: &str) -> Result<(DataFeatures, Vec<Exec
             strategy,
             features: TaskFeatures::from_vector(data, algo),
             time,
+            wall_clock_ms,
         });
     }
     ensure!(lines.next().is_none(), "trailing data after the declared {count} log lines");
@@ -388,10 +418,12 @@ mod tests {
     #[test]
     fn shard_roundtrip_is_bit_exact() {
         let (data, mut logs) = tiny_block();
-        // exercise tricky bit patterns too
+        // exercise tricky bit patterns too — in both label channels
         logs[0].time = -0.0;
         logs[1].time = f64::MIN_POSITIVE / 2.0; // subnormal
-        let text = render_shard("wiki", &data, &logs);
+        logs[0].wall_clock_ms = -0.0;
+        logs[1].wall_clock_ms = 12345.000000000001;
+        let text = render_shard("wiki", &data, &logs).unwrap();
         let (rdata, rlogs) = parse_shard(&text, "wiki").unwrap();
         assert_eq!(rdata, data);
         assert_eq!(rlogs.len(), logs.len());
@@ -400,9 +432,48 @@ mod tests {
             assert_eq!(a.algorithm, b.algorithm);
             assert_eq!(a.strategy, b.strategy);
             assert_eq!(a.time.to_bits(), b.time.to_bits());
+            assert_eq!(
+                a.wall_clock_ms.to_bits(),
+                b.wall_clock_ms.to_bits(),
+                "the measured label must survive the shard round trip bit-for-bit"
+            );
             assert_eq!(a.features.algo, b.features.algo);
             assert_eq!(a.features.data, data);
         }
+    }
+
+    /// A v1-era directory (no wall-clock channel) must be rejected up
+    /// front by the manifest version line, and a v1 shard header must
+    /// fail to parse rather than misparse.
+    #[test]
+    fn old_format_directories_are_rejected() {
+        let cfg = ClusterConfig::with_workers(4);
+        let manifest = manifest_text(0.005, 7, &cfg, ExecutionMode::Simulated);
+        assert!(manifest.starts_with("gps-corpus-checkpoint v2\n"), "{manifest}");
+
+        let dir = scratch("oldfmt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let old_manifest = manifest.replace("gps-corpus-checkpoint v2", "gps-corpus-checkpoint v1");
+        std::fs::write(dir.join("manifest.txt"), &old_manifest).unwrap();
+        let err = CheckpointStore::open(&dir, &manifest).unwrap_err().to_string();
+        assert!(err.contains("manifest mismatch"), "{err}");
+        assert!(err.contains("v1"), "the diff should name the stale version: {err}");
+
+        // a shard claiming the old version is rejected by its header
+        let (data, logs) = tiny_block();
+        let text = render_shard("wiki", &data, &logs)
+            .unwrap()
+            .replace("gps-shard v2", "gps-shard v1");
+        // re-checksum the tampered payload so only the version differs
+        let pos = text.rfind("\nchecksum ").unwrap();
+        let payload = &text[..pos + 1];
+        let fixed = format!(
+            "{payload}checksum {:016x}\n",
+            crate::util::rng::fnv1a64(payload.as_bytes())
+        );
+        let err = parse_shard(&fixed, "wiki").unwrap_err().to_string();
+        assert!(err.contains("v2"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
@@ -461,7 +532,7 @@ mod tests {
     #[test]
     fn truncation_and_corruption_are_detected() {
         let (data, logs) = tiny_block();
-        let text = render_shard("wiki", &data, &logs);
+        let text = render_shard("wiki", &data, &logs).unwrap();
         // no checksum footer at all
         let cut = &text[..text.len() / 3];
         assert!(parse_shard(cut, "wiki").is_err());

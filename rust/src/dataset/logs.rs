@@ -45,8 +45,15 @@ pub struct ExecutionLog {
     pub strategy: Strategy,
     /// Task features (data ⊕ algorithm).
     pub features: TaskFeatures,
-    /// Execution time label in seconds.
+    /// Execution time label in seconds (the simulated cost-model
+    /// oracle; deterministic and bit-reproducible).
     pub time: f64,
+    /// Measured wall-clock time of the task at the engine coordinator,
+    /// in milliseconds — the real-execution label channel recorded
+    /// alongside the oracle. The only non-deterministic field of a log:
+    /// resumed checkpoints restore the value measured when the task
+    /// actually ran.
+    pub wall_clock_ms: f64,
 }
 
 /// A collection of logs plus the per-graph data features.
@@ -65,19 +72,25 @@ pub struct LogStore {
     pub logs: Vec<ExecutionLog>,
     /// Graph name → data features (shared by all its logs).
     pub graph_features: BTreeMap<String, DataFeatures>,
-    /// Lazily built (graph, algorithm, strategy name) → time lookup
-    /// index plus the log count it was built at; the pipeline queries
+    /// Lazily built graph → algorithm → strategy → time lookup index
+    /// plus the log count it was built at; the pipeline queries
     /// [`LogStore::time_of`] ~1000 times, so the old O(logs) linear
-    /// scan was quadratic in corpus size overall. Keyed by
-    /// [`Strategy::name`] (total for every variant) rather than `psid`
-    /// (which panics on non-inventory HDRF λ values).
-    time_index: OnceLock<(usize, BTreeMap<(String, String, String), f64>)>,
+    /// scan was quadratic in corpus size overall. The string levels are
+    /// probed through `Borrow<str>` and the leaf by the [`Strategy`]
+    /// itself (`Ord`, total for every variant — no psid panic on
+    /// non-inventory HDRF λ), so a lookup allocates nothing.
+    time_index: OnceLock<(usize, TimeIndex)>,
 }
+
+/// graph → algorithm → strategy → time.
+type TimeIndex = BTreeMap<String, BTreeMap<String, BTreeMap<Strategy, f64>>>;
 
 /// Execute one (graph, algorithm, strategy) task on the engine and
 /// record it. `data` and `counts` are the per-graph / per-algorithm
 /// feature halves, precomputed once by the callers so the hot loop does
-/// no redundant graph sweeps or pseudo-code parses.
+/// no redundant graph sweeps or pseudo-code parses. Transport failures
+/// (socket-mode worker spawn/IO) surface as `Err` instead of panicking
+/// a pool thread mid corpus build.
 #[allow(clippy::too_many_arguments)]
 fn run_task(
     g: &Graph,
@@ -88,16 +101,19 @@ fn run_task(
     p: &Partitioning,
     cfg: &ClusterConfig,
     mode: ExecutionMode,
-) -> ExecutionLog {
+) -> Result<ExecutionLog> {
     let features = TaskFeatures::from_parts(data, counts);
-    let outcome = a.execute(g, p, cfg, mode);
-    ExecutionLog {
+    let outcome = a
+        .try_execute(g, p, cfg, mode)
+        .with_context(|| format!("corpus task {}/{}/{}", g.name, a.name(), s.name()))?;
+    Ok(ExecutionLog {
         graph: g.name.clone(),
         algorithm: a.name().to_string(),
         strategy: s,
         features,
         time: outcome.sim.total,
-    }
+        wall_clock_ms: outcome.wall_clock_ms,
+    })
 }
 
 /// Parse every algorithm's pseudo-code once (the counts are reused for
@@ -166,7 +182,7 @@ impl LogStore {
         for s in strategies {
             let p = s.partition(g, cfg.num_workers);
             for (a, c) in algorithms.iter().zip(&counts) {
-                self.logs.push(run_task(g, data, c, *a, *s, &p, cfg, mode));
+                self.logs.push(run_task(g, data, c, *a, *s, &p, cfg, mode)?);
             }
         }
         // the appended logs invalidate any previously built lookup index
@@ -221,10 +237,13 @@ impl LogStore {
     /// collected in grid order, so the returned store is bit-identical
     /// for any thread count. `threads == 0` means the `GPS_THREADS`
     /// default ([`pool::resolve_threads`]). `mode` selects the engine
-    /// backend every task runs on; the two modes produce bit-identical
-    /// logs (the threaded backend spawns `cfg.num_workers` threads *per
-    /// task* on top of the pool, so it is for validation runs, not
-    /// throughput).
+    /// backend every task runs on; all three modes produce bit-identical
+    /// deterministic log fields (the threaded backend spawns
+    /// `cfg.num_workers` threads *per task* on top of the pool, and the
+    /// socket backend spawns that many worker *processes* per task, so
+    /// both are for validation runs, not throughput). The measured
+    /// `wall_clock_ms` channel is recorded per task in every mode and is
+    /// the one legitimately non-deterministic column.
     ///
     /// With `checkpoint_dir` set, each finished graph's shard is
     /// committed atomically as soon as its block completes, and graphs
@@ -353,6 +372,7 @@ impl LogStore {
                     let p = cache.get_or_partition(g, s);
                     run_task(g, *data, &counts[rest % algorithms.len()], a, s, &p, cfg, mode)
                 });
+                let flat = flat.into_iter().collect::<Result<Vec<_>>>()?;
                 let mut flat = flat.into_iter();
                 (0..built.len()).map(|_| flat.by_ref().take(per_graph).collect()).collect()
             }
@@ -370,6 +390,7 @@ impl LogStore {
                         let p = cache.get_or_partition(g, s);
                         run_task(g, *data, &counts[k % algorithms.len()], a, s, &p, cfg, mode)
                     });
+                    let block = block.into_iter().collect::<Result<Vec<_>>>()?;
                     c.save(corpus[gi].name, data, &block)?;
                     blocks.push(block);
                 }
@@ -404,21 +425,26 @@ impl LogStore {
         Ok((Some(store), done_total))
     }
 
-    /// The (graph, algorithm, strategy name) → time index, built on
-    /// first query. Duplicate keys keep their first occurrence,
-    /// matching the old linear scan's first-match semantics.
-    fn index(&self) -> &(usize, BTreeMap<(String, String, String), f64>) {
+    /// The graph → algorithm → strategy → time index, built on first
+    /// query. Duplicate keys keep their first occurrence, matching the
+    /// old linear scan's first-match semantics.
+    fn index(&self) -> &(usize, TimeIndex) {
         self.time_index.get_or_init(|| {
-            let mut m = BTreeMap::new();
+            let mut m = TimeIndex::new();
             for l in &self.logs {
-                m.entry((l.graph.clone(), l.algorithm.clone(), l.strategy.name()))
+                m.entry(l.graph.clone())
+                    .or_default()
+                    .entry(l.algorithm.clone())
+                    .or_default()
+                    .entry(l.strategy)
                     .or_insert(l.time);
             }
             (self.logs.len(), m)
         })
     }
 
-    /// Execution time of one task under one strategy.
+    /// Execution time of one task under one strategy. Indexed lookups
+    /// are allocation-free: the string levels are probed by `&str`.
     pub fn time_of(&self, graph: &str, algorithm: &str, strategy: Strategy) -> Option<f64> {
         let (indexed_len, index) = self.index();
         if *indexed_len != self.logs.len() {
@@ -430,7 +456,11 @@ impl LogStore {
                 .find(|l| l.graph == graph && l.algorithm == algorithm && l.strategy == strategy)
                 .map(|l| l.time);
         }
-        index.get(&(graph.to_string(), algorithm.to_string(), strategy.name())).copied()
+        index
+            .get(graph)
+            .and_then(|by_algo| by_algo.get(algorithm))
+            .and_then(|by_strategy| by_strategy.get(&strategy))
+            .copied()
     }
 
     /// All times for one (graph, algorithm), in the inventory's strategy
@@ -454,17 +484,30 @@ impl LogStore {
             .collect()
     }
 
-    /// Persist as CSV (graph, algorithm, psid, time, then the
-    /// [`NUM_OP_KEYS`] algorithm features).
+    /// Persist as CSV (graph, algorithm, psid, time, wall_clock_ms,
+    /// then the [`NUM_OP_KEYS`] algorithm features). The
+    /// `wall_clock_ms` column is the measured label and the only
+    /// non-deterministic one — byte-compare corpora with it stripped
+    /// (`scripts/verify.sh` does).
     pub fn save_csv(&self, path: &Path) -> Result<()> {
-        let mut out = String::from("graph,algorithm,psid,time");
+        let mut out = String::from("graph,algorithm,psid,time,wall_clock_ms");
         for k in crate::analyzer::OpKey::all() {
             out.push(',');
             out.push_str(k.name());
         }
         out.push('\n');
         for l in &self.logs {
-            out.push_str(&format!("{},{},{},{}", l.graph, l.algorithm, l.strategy.psid(), l.time));
+            let psid = l.strategy.try_psid().with_context(|| {
+                format!(
+                    "cannot persist {} to CSV: non-inventory strategy {} has no PSID column",
+                    l.graph,
+                    l.strategy.name()
+                )
+            })?;
+            out.push_str(&format!(
+                "{},{},{psid},{},{}",
+                l.graph, l.algorithm, l.time, l.wall_clock_ms
+            ));
             for x in l.features.algo {
                 out.push_str(&format!(",{x}"));
             }
@@ -480,7 +523,7 @@ impl LogStore {
     pub fn load_csv(path: &Path, features_of: &BTreeMap<String, DataFeatures>) -> Result<Self> {
         // the column count follows the feature schema, so a schema
         // change shows up as a load error instead of a corrupt reload
-        const META_COLS: usize = 4;
+        const META_COLS: usize = 5;
         let expected_cols = META_COLS + NUM_OP_KEYS;
         let text = std::fs::read_to_string(path)?;
         let mut store = LogStore { graph_features: features_of.clone(), ..Default::default() };
@@ -508,6 +551,7 @@ impl LogStore {
                 strategy,
                 features: TaskFeatures::from_vector(data, algo),
                 time: cols[3].parse()?,
+                wall_clock_ms: cols[4].parse()?,
             });
         }
         Ok(store)
@@ -543,9 +587,12 @@ mod tests {
         assert!(store.time_of("wiki", "PR", Strategy::Random).is_some());
         assert!(store.time_of("wiki", "PR", Strategy::Ginger).is_none());
         // a non-inventory HDRF λ has no psid; the query must return
-        // None, not panic (regression: the index is keyed by name)
+        // None, not panic (regression: the index is keyed by the
+        // strategy itself, which is total)
         assert!(store.time_of("wiki", "PR", Strategy::Hdrf(30)).is_none());
         assert!(store.logs.iter().all(|l| l.time > 0.0));
+        // every task carries the measured wall-clock label channel
+        assert!(store.logs.iter().all(|l| l.wall_clock_ms > 0.0 && l.wall_clock_ms.is_finite()));
     }
 
     /// `times_of_task` must cover the whole inventory or error — a
@@ -597,6 +644,12 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("logs.csv");
         store.save_csv(&path).unwrap();
+        // the measured label channel is part of the schema
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            text.lines().next().unwrap().starts_with("graph,algorithm,psid,time,wall_clock_ms"),
+            "CSV header must carry the wall_clock_ms column"
+        );
         let loaded = LogStore::load_csv(&path, &store.graph_features).unwrap();
         assert_eq!(loaded.logs.len(), store.logs.len());
         for (a, b) in loaded.logs.iter().zip(&store.logs) {
@@ -604,9 +657,28 @@ mod tests {
             assert_eq!(a.algorithm, b.algorithm);
             assert_eq!(a.strategy, b.strategy);
             assert!((a.time - b.time).abs() < 1e-12);
+            // Rust's f64 Display prints the shortest round-trippable
+            // form, so the measured label survives the text round trip
+            assert_eq!(a.wall_clock_ms.to_bits(), b.wall_clock_ms.to_bits());
             assert_eq!(a.features.algo, b.features.algo);
         }
         std::fs::remove_file(&path).unwrap();
+    }
+
+    /// A store holding a non-inventory strategy cannot be persisted to
+    /// the PSID-keyed CSV — it must error clearly, not panic.
+    #[test]
+    fn csv_rejects_non_inventory_strategy() {
+        let mut store = tiny_corpus();
+        let mut odd = store.logs[0].clone();
+        odd.strategy = Strategy::Hdrf(42);
+        store.logs.push(odd);
+        let dir = std::env::temp_dir().join("gps_logs_oddpsid");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("logs.csv");
+        let err = store.save_csv(&path).unwrap_err().to_string();
+        assert!(err.contains("PSID"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// The parallel builder keeps the historical serial log order:

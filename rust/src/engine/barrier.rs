@@ -73,6 +73,88 @@ mod tests {
         assert_eq!(b.parties(), 1);
     }
 
+    /// Generations only ever move forward, and reusing the same barrier
+    /// across many wait cycles keeps counting monotonically — the
+    /// property the threaded engine relies on when one barrier serves
+    /// every superstep of a run.
+    #[test]
+    fn generation_is_monotonic_across_reuse() {
+        const THREADS: usize = 3;
+        const CYCLES: usize = 50;
+        let barrier = BspBarrier::new(THREADS);
+        std::thread::scope(|scope| {
+            for _ in 0..THREADS {
+                scope.spawn(|| {
+                    let mut last = 0u64;
+                    for _ in 0..CYCLES {
+                        barrier.wait();
+                        let g = barrier.generation();
+                        assert!(g > last, "generation went backwards: {g} after {last}");
+                        last = g;
+                        barrier.wait();
+                    }
+                });
+            }
+        });
+        assert_eq!(barrier.generation(), 2 * CYCLES as u64);
+    }
+
+    /// Correct release for several party counts: every thread of every
+    /// generation observes the full party count having arrived.
+    #[test]
+    fn releases_all_parties() {
+        for parties in [1usize, 2, 8] {
+            let barrier = BspBarrier::new(parties);
+            let arrived = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..parties {
+                    scope.spawn(|| {
+                        arrived.fetch_add(1, Ordering::SeqCst);
+                        barrier.wait();
+                        assert_eq!(
+                            arrived.load(Ordering::SeqCst),
+                            parties,
+                            "released before all {parties} parties arrived"
+                        );
+                    });
+                }
+            });
+            assert_eq!(barrier.generation(), 1, "parties={parties}");
+            assert_eq!(barrier.parties(), parties);
+        }
+    }
+
+    /// Regression: a second wait() cycle on the same barrier must not
+    /// deadlock — the generation hand-off has to fully reopen the
+    /// barrier for the next round (a classic cyclic-barrier bug is
+    /// leaving `waiting` or the generation check in a state where the
+    /// second round blocks forever). Workers run *detached* (not in a
+    /// scope) and report completion over a channel, so on regression
+    /// the `recv_timeout` fails the test cleanly instead of the join
+    /// hanging the suite on threads stuck in `wait()`.
+    #[test]
+    fn second_wait_cycle_does_not_deadlock() {
+        const THREADS: usize = 4;
+        let barrier = std::sync::Arc::new(BspBarrier::new(THREADS));
+        let (tx, rx) = std::sync::mpsc::channel();
+        for _ in 0..THREADS {
+            let barrier = std::sync::Arc::clone(&barrier);
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                barrier.wait(); // cycle 1
+                barrier.wait(); // cycle 2 — the regression target
+                let _ = tx.send(());
+            });
+        }
+        drop(tx);
+        for i in 0..THREADS {
+            rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap_or_else(|_| {
+                panic!("second wait() cycle deadlocked ({i} of {THREADS} threads finished)")
+            });
+        }
+        assert_eq!(barrier.generation(), 2);
+    }
+
     /// The BSP property: work of phase k+1 never observes a thread
     /// still inside phase k. Each thread bumps a counter before the
     /// barrier and checks the full count after it, for many rounds.

@@ -35,7 +35,15 @@ pub enum EdgeDirection {
 }
 
 /// Anything that travels between workers: we account its serialized
-/// size for the communication cost model.
+/// size for the communication cost model, and — for the socket
+/// transport — actually serialize it onto the wire.
+///
+/// The wire encoding ([`Payload::encode`] / [`Payload::decode`]) is
+/// **bit-exact**: floats travel as their raw little-endian bit
+/// patterns (the [`crate::dataset::checkpoint`] convention), so a value
+/// that crosses a process boundary decodes to the identical bits. That
+/// is what lets the multi-process backend stay bit-identical to the
+/// in-memory ones.
 pub trait Payload: Clone + Send {
     /// Serialized size in bytes (8-byte scalar convention, matching the
     /// MPI doubles the paper's engine exchanges).
@@ -47,8 +55,18 @@ pub trait Payload: Clone + Send {
     /// digests: equal digests over the value vector in vertex order ⇔
     /// bit-identical results.
     fn fold_bits(&self, h: u64) -> u64;
+
+    /// Append this value's exact wire encoding (little-endian scalars,
+    /// `f64` as raw bit patterns) to `out`.
+    fn encode(&self, out: &mut Vec<u8>);
+
+    /// Decode one value from the wire, consuming exactly the bytes
+    /// [`Payload::encode`] produced for it.
+    fn decode(r: &mut crate::engine::wire::Reader<'_>) -> crate::util::error::Result<Self>;
 }
 
+use crate::engine::wire::Reader;
+use crate::util::error::{bail, Result};
 use crate::util::rng::fnv1a64_fold;
 
 impl Payload for f64 {
@@ -58,6 +76,12 @@ impl Payload for f64 {
     fn fold_bits(&self, h: u64) -> u64 {
         fnv1a64_fold(h, &self.to_bits().to_le_bytes())
     }
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_bits().to_le_bytes());
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<f64> {
+        r.f64_bits()
+    }
 }
 impl Payload for i64 {
     fn bytes(&self) -> usize {
@@ -65,6 +89,12 @@ impl Payload for i64 {
     }
     fn fold_bits(&self, h: u64) -> u64 {
         fnv1a64_fold(h, &self.to_le_bytes())
+    }
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<i64> {
+        r.i64()
     }
 }
 impl Payload for u32 {
@@ -74,6 +104,12 @@ impl Payload for u32 {
     fn fold_bits(&self, h: u64) -> u64 {
         fnv1a64_fold(h, &self.to_le_bytes())
     }
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<u32> {
+        r.u32()
+    }
 }
 impl Payload for () {
     fn bytes(&self) -> usize {
@@ -81,6 +117,10 @@ impl Payload for () {
     }
     fn fold_bits(&self, h: u64) -> u64 {
         h
+    }
+    fn encode(&self, _out: &mut Vec<u8>) {}
+    fn decode(_r: &mut Reader<'_>) -> Result<()> {
+        Ok(())
     }
 }
 impl<T: Payload> Payload for Vec<T> {
@@ -91,6 +131,22 @@ impl<T: Payload> Payload for Vec<T> {
         let h = fnv1a64_fold(h, &(self.len() as u64).to_le_bytes());
         self.iter().fold(h, |h, x| x.fold_bits(h))
     }
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.len() as u64).to_le_bytes());
+        for x in self {
+            x.encode(out);
+        }
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Vec<T>> {
+        let len = r.u64()? as usize;
+        // an element encodes to at least one byte unless it is zero-sized,
+        // so cap the pre-allocation by what the buffer could possibly hold
+        let mut v = Vec::with_capacity(len.min(r.remaining().max(1)));
+        for _ in 0..len {
+            v.push(T::decode(r)?);
+        }
+        Ok(v)
+    }
 }
 impl<A: Payload, B: Payload> Payload for (A, B) {
     fn bytes(&self) -> usize {
@@ -98,6 +154,13 @@ impl<A: Payload, B: Payload> Payload for (A, B) {
     }
     fn fold_bits(&self, h: u64) -> u64 {
         self.1.fold_bits(self.0.fold_bits(h))
+    }
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.0.encode(out);
+        self.1.encode(out);
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<(A, B)> {
+        Ok((A::decode(r)?, B::decode(r)?))
     }
 }
 impl<T: Payload> Payload for Option<T> {
@@ -107,6 +170,19 @@ impl<T: Payload> Payload for Option<T> {
     fn fold_bits(&self, h: u64) -> u64 {
         let h = fnv1a64_fold(h, &[self.is_some() as u8]);
         self.as_ref().map_or(h, |x| x.fold_bits(h))
+    }
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(self.is_some() as u8);
+        if let Some(x) = self {
+            x.encode(out);
+        }
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Option<T>> {
+        match r.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(T::decode(r)?)),
+            other => bail!("bad Option tag {other} on the wire"),
+        }
     }
 }
 
@@ -310,6 +386,45 @@ mod tests {
         assert_eq!(None::<f64>.bytes(), 1);
         let nested: Vec<Vec<u32>> = vec![vec![1], vec![2, 3]];
         assert_eq!(nested.bytes(), 8 + (8 + 4) + (8 + 8));
+    }
+
+    /// Every Payload impl round-trips through the wire encoding
+    /// bit-exactly, and the encoded length equals `bytes()` — the
+    /// cost model's size accounting IS the wire size.
+    #[test]
+    fn payload_wire_roundtrip_matches_bytes() {
+        use crate::engine::wire::Reader;
+        use crate::util::rng::FNV1A64_OFFSET;
+        fn rt<T: Payload>(x: &T) {
+            let mut buf = Vec::new();
+            x.encode(&mut buf);
+            assert_eq!(buf.len(), x.bytes(), "encoded length must equal bytes()");
+            let mut r = Reader::new(&buf);
+            let y = T::decode(&mut r).expect("decode");
+            r.finish().expect("fully consumed");
+            assert_eq!(
+                x.fold_bits(FNV1A64_OFFSET),
+                y.fold_bits(FNV1A64_OFFSET),
+                "bits must survive the round trip"
+            );
+        }
+        rt(&1.5f64);
+        rt(&-0.0f64);
+        rt(&(f64::MIN_POSITIVE / 2.0));
+        rt(&-42i64);
+        rt(&7u32);
+        rt(&());
+        rt(&vec![1u32, 2, 3]);
+        rt(&Vec::<u32>::new());
+        rt(&(vec![9u32, 8], -1.25f64));
+        rt(&Some(3.5f64));
+        rt(&None::<f64>);
+        rt(&vec![vec![1u32], vec![2, 3]]);
+        // truncated input errors instead of panicking
+        let mut buf = Vec::new();
+        vec![1u32, 2, 3].encode(&mut buf);
+        let mut r = Reader::new(&buf[..buf.len() - 2]);
+        assert!(Vec::<u32>::decode(&mut r).is_err());
     }
 
     #[test]

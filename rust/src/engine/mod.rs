@@ -16,10 +16,15 @@
 //! * [`msg`] — the typed messages (gather partials up, value broadcasts
 //!   down, activation notices, result emissions) and the send-side
 //!   accounting that feeds the cost model;
+//! * [`transport`] — the pluggable transport layer: the
+//!   [`transport::Transport`] trait plus one generic superstep driver
+//!   shared by every backend;
+//! * [`wire`] — the bit-exact, FNV-1a-checksummed wire format of the
+//!   multi-process backend;
 //! * [`barrier::BspBarrier`] — the superstep barrier of the threaded
 //!   backend.
 //!
-//! Two [`ExecutionMode`] backends run the **same** phase code:
+//! Three [`ExecutionMode`] backends run the **same** phase code:
 //!
 //! * [`ExecutionMode::Simulated`] (default) — one OS thread; workers
 //!   execute sequentially in ascending order and envelopes route
@@ -27,13 +32,22 @@
 //!   corpus construction.
 //! * [`ExecutionMode::Threaded`] — real thread-per-worker execution
 //!   over [`std::sync::mpsc`] channels with a BSP barrier between
-//!   phases; a coordinator folds per-worker stats in ascending worker
-//!   order.
+//!   phases.
+//! * [`ExecutionMode::Socket`] — one worker **process** per engine
+//!   worker over localhost TCP, exchanging serialized [`wire`] frames
+//!   (spawned via `--worker-rank`; see [`transport::socket`]).
 //!
-//! Because both modes fold the same per-worker phase outputs in the
-//! same order, final values, [`cost::OpCounts`] **and** the simulated
-//! time are bit-identical between modes and across thread counts
-//! (`tests/mode_equivalence.rs` pins this).
+//! Because every backend folds the same per-worker phase outputs in the
+//! same order — and the wire format preserves exact `f64` bit
+//! patterns — final values, [`cost::OpCounts`] **and** the simulated
+//! time are bit-identical across all three modes and across thread
+//! counts (`tests/mode_equivalence.rs` pins this).
+//!
+//! Every run additionally measures its **wall-clock time at the
+//! coordinator** ([`RunResult::wall_clock_ms`]): the real elapsed
+//! milliseconds of the task, flowing into the execution-log corpus as a
+//! measured label alongside the simulated oracle. Unlike everything
+//! else the engine returns it is *not* deterministic.
 //!
 //! [`run`] stays a pure function of its arguments with no global state:
 //! all inputs are `Sync` plain data and all mutable state is local to
@@ -45,20 +59,16 @@ pub mod cost;
 pub mod gas;
 pub mod msg;
 pub mod state;
+pub mod transport;
+pub mod wire;
 pub mod worker;
-
-use std::sync::mpsc;
-use std::sync::Arc;
 
 use crate::graph::{Graph, VertexId};
 use crate::partition::Partitioning;
 use crate::util::error::{err, Result};
 
-use barrier::BspBarrier;
-use cost::{ClusterConfig, OpCounts, SimTime, StepLedger};
-use gas::{EdgeDirection, GraphInfo, InitialActive, VertexProgram};
-use msg::{Envelope, PhaseOut, PhaseStats, Round};
-use state::{build_worker_states, WorkerState};
+use cost::{ClusterConfig, OpCounts, SimTime};
+use gas::{GraphInfo, InitialActive, VertexProgram};
 
 /// Which backend executes the superstep loop.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -70,14 +80,21 @@ pub enum ExecutionMode {
     /// Bit-identical to `Simulated`; spawns `num_workers` OS threads
     /// per run, so keep worker counts moderate.
     Threaded,
+    /// Process-per-worker over localhost TCP with serialized wire
+    /// frames. Bit-identical to the other modes; spawns `num_workers`
+    /// OS *processes* per run and requires a worker binary that handles
+    /// `--worker-rank` (the `repro` CLI does), so it is for validating
+    /// the labels against real inter-process execution, not throughput.
+    Socket,
 }
 
 impl ExecutionMode {
-    /// Lower-case mode name (`simulated` / `threaded`).
+    /// Lower-case mode name (`simulated` / `threaded` / `socket`).
     pub fn name(&self) -> &'static str {
         match self {
             ExecutionMode::Simulated => "simulated",
             ExecutionMode::Threaded => "threaded",
+            ExecutionMode::Socket => "socket",
         }
     }
 
@@ -86,6 +103,9 @@ impl ExecutionMode {
         match name.trim().to_ascii_lowercase().as_str() {
             "simulated" | "sim" => Some(ExecutionMode::Simulated),
             "threaded" | "threads" | "thread" => Some(ExecutionMode::Threaded),
+            "socket" | "sockets" | "sock" | "process" | "processes" => {
+                Some(ExecutionMode::Socket)
+            }
             _ => None,
         }
     }
@@ -101,8 +121,9 @@ impl ExecutionMode {
     /// [`ExecutionMode::from_env`].
     pub fn resolve(cli: Option<&str>) -> Result<ExecutionMode> {
         match cli {
-            Some(s) => Self::from_name(s)
-                .ok_or_else(|| err!("--engine-mode expects 'simulated' or 'threaded', got {s:?}")),
+            Some(s) => Self::from_name(s).ok_or_else(|| {
+                err!("--engine-mode expects 'simulated', 'threaded' or 'socket', got {s:?}")
+            }),
             None => Ok(Self::from_env()),
         }
     }
@@ -122,6 +143,11 @@ pub struct RunResult<V> {
     pub sim: SimTime,
     /// Operation counters.
     pub ops: OpCounts,
+    /// Measured wall-clock time of the whole run (transport setup
+    /// included) in milliseconds, taken with [`std::time::Instant`] at
+    /// the coordinator. The only non-deterministic field: it is the
+    /// *measured* label channel next to the simulated oracle.
+    pub wall_clock_ms: f64,
 }
 
 /// Execute `prog` on `g` partitioned by `p` under the `cfg` cost model
@@ -135,7 +161,9 @@ pub fn run<P: VertexProgram>(
     run_mode(g, p, prog, cfg, ExecutionMode::Simulated)
 }
 
-/// Execute `prog` with an explicit execution mode.
+/// Execute `prog` with an explicit execution mode, panicking on
+/// transport failures (the in-memory backends cannot fail; socket-mode
+/// callers that want to handle spawn/IO errors use [`try_run_mode`]).
 pub fn run_mode<P: VertexProgram>(
     g: &Graph,
     p: &Partitioning,
@@ -143,21 +171,38 @@ pub fn run_mode<P: VertexProgram>(
     cfg: &ClusterConfig,
     mode: ExecutionMode,
 ) -> RunResult<P::Value> {
-    assert_eq!(p.num_workers, cfg.num_workers, "partitioning/cluster mismatch");
-    match mode {
-        ExecutionMode::Simulated => run_simulated(g, p, prog, cfg),
-        ExecutionMode::Threaded => run_threaded(g, p, prog, cfg),
-    }
+    try_run_mode(g, p, prog, cfg, mode)
+        .unwrap_or_else(|e| panic!("engine run on the {} backend failed: {e}", mode.name()))
 }
 
-fn degree_vecs(g: &Graph) -> (Vec<u32>, Vec<u32>) {
+/// Execute `prog` with an explicit execution mode, surfacing transport
+/// errors (worker spawn failures, wire corruption) as `Err`.
+pub fn try_run_mode<P: VertexProgram>(
+    g: &Graph,
+    p: &Partitioning,
+    prog: &P,
+    cfg: &ClusterConfig,
+    mode: ExecutionMode,
+) -> Result<RunResult<P::Value>> {
+    assert_eq!(p.num_workers, cfg.num_workers, "partitioning/cluster mismatch");
+    let t0 = std::time::Instant::now();
+    let mut r = match mode {
+        ExecutionMode::Simulated => transport::local::run(g, p, prog, cfg)?,
+        ExecutionMode::Threaded => transport::mpsc::run(g, p, prog, cfg)?,
+        ExecutionMode::Socket => transport::socket::run(g, p, prog, cfg)?,
+    };
+    r.wall_clock_ms = t0.elapsed().as_secs_f64() * 1e3;
+    Ok(r)
+}
+
+pub(crate) fn degree_vecs(g: &Graph) -> (Vec<u32>, Vec<u32>) {
     (
         g.vertices().map(|v| g.in_degree(v) as u32).collect(),
         g.vertices().map(|v| g.out_degree(v) as u32).collect(),
     )
 }
 
-fn initial_active<P: VertexProgram>(prog: &P, gi: &GraphInfo, n: usize) -> Vec<bool> {
+pub(crate) fn initial_active<P: VertexProgram>(prog: &P, gi: &GraphInfo, n: usize) -> Vec<bool> {
     let mut active = vec![false; n];
     match prog.fixed_rounds() {
         Some(_) => active.iter_mut().for_each(|a| *a = true),
@@ -169,7 +214,7 @@ fn initial_active<P: VertexProgram>(prog: &P, gi: &GraphInfo, n: usize) -> Vec<b
     active
 }
 
-fn should_continue<P: VertexProgram>(prog: &P, step: usize, active: &[bool]) -> bool {
+pub(crate) fn should_continue<P: VertexProgram>(prog: &P, step: usize, active: &[bool]) -> bool {
     match prog.fixed_rounds() {
         Some(k) => step < k,
         None => step < prog.max_supersteps() && active.iter().any(|&a| a),
@@ -177,7 +222,7 @@ fn should_continue<P: VertexProgram>(prog: &P, step: usize, active: &[bool]) -> 
 }
 
 /// Reassemble the global value vector from the per-worker master lists.
-fn assemble<V>(n: usize, lists: Vec<Vec<(VertexId, V)>>) -> Vec<V> {
+pub(crate) fn assemble<V>(n: usize, lists: Vec<Vec<(VertexId, V)>>) -> Vec<V> {
     let mut out: Vec<Option<V>> = (0..n).map(|_| None).collect();
     for list in lists {
         for (v, val) in list {
@@ -188,326 +233,9 @@ fn assemble<V>(n: usize, lists: Vec<Vec<(VertexId, V)>>) -> Vec<V> {
     out.into_iter().map(|o| o.expect("every vertex has exactly one master")).collect()
 }
 
-// ---------------------------------------------------------------- simulated
-
-/// Route a phase's envelopes into the per-worker staging inboxes.
-fn route<P: VertexProgram>(staged: &mut [Vec<Envelope<P>>], env: Vec<Envelope<P>>) {
-    for e in env {
-        staged[e.to as usize].push(e);
-    }
-}
-
-/// Sequential backend: workers run in ascending order each phase, so
-/// inboxes are naturally sorted by sender and all cost folds happen in
-/// the canonical order.
-fn run_simulated<P: VertexProgram>(
-    g: &Graph,
-    p: &Partitioning,
-    prog: &P,
-    cfg: &ClusterConfig,
-) -> RunResult<P::Value> {
-    let n = g.num_vertices();
-    let w_count = p.num_workers;
-    let (in_degree, out_degree) = degree_vecs(g);
-    let gi = GraphInfo {
-        num_vertices: n,
-        num_edges: g.num_edges(),
-        directed: g.directed,
-        in_degree: &in_degree,
-        out_degree: &out_degree,
-    };
-    let mut workers: Vec<WorkerState<P>> = build_worker_states(g, p, prog, &gi);
-    let mut ops = OpCounts::default();
-    let mut sim = SimTime::default();
-    let mut active = initial_active(prog, &gi, n);
-
-    // double-buffered inboxes: `current` is drained by the running
-    // phase, `pending` collects for the next one (the BSP hand-off)
-    let mut current: Vec<Vec<Envelope<P>>> = (0..w_count).map(|_| Vec::new()).collect();
-    let mut pending: Vec<Vec<Envelope<P>>> = (0..w_count).map(|_| Vec::new()).collect();
-
-    let mut step = 0usize;
-    let mut next = vec![false; n]; // reused across supersteps
-    while should_continue(prog, step, &active) {
-        let mut ledger = StepLedger::new(cfg);
-        // ---- Gather ----
-        for w in 0..w_count {
-            let PhaseOut { env, stats } =
-                workers[w].gather_phase(prog, g, &gi, p, &active, step, cfg);
-            ledger.fold(cfg, w, Round::Gather, &stats, &mut ops);
-            route(&mut pending, env);
-        }
-        std::mem::swap(&mut current, &mut pending);
-        // ---- Apply ----
-        for w in 0..w_count {
-            let inbox = std::mem::take(&mut current[w]);
-            let PhaseOut { env, stats } =
-                workers[w].apply_phase(prog, &gi, p, &active, step, cfg, inbox);
-            ledger.fold(cfg, w, Round::Apply, &stats, &mut ops);
-            route(&mut pending, env);
-        }
-        std::mem::swap(&mut current, &mut pending);
-        // ---- Commit (mirrors install the broadcast values) ----
-        for w in 0..w_count {
-            let inbox = std::mem::take(&mut current[w]);
-            workers[w].commit(inbox);
-        }
-        // ---- Scatter ----
-        for w in 0..w_count {
-            let PhaseOut { env, stats } =
-                workers[w].scatter_phase(prog, g, &gi, p, &active, step, cfg);
-            ledger.fold(cfg, w, Round::Scatter, &stats, &mut ops);
-            route(&mut pending, env);
-        }
-        std::mem::swap(&mut current, &mut pending);
-        // ---- Activation hand-off ----
-        for w in 0..w_count {
-            let inbox = std::mem::take(&mut current[w]);
-            workers[w].drain_activations(inbox);
-            for v in workers[w].take_next_active() {
-                next[v as usize] = true;
-            }
-        }
-        ledger.finish(&mut sim, cfg);
-        ops.supersteps += 1;
-        step += 1;
-        if prog.fixed_rounds().is_none() {
-            std::mem::swap(&mut active, &mut next);
-        }
-        next.fill(false);
-    }
-
-    // ---- Final collect: masters ship results to the leader ----
-    let charge = prog.collect_result();
-    let mut ledger = StepLedger::new(cfg);
-    let mut lists = Vec::with_capacity(w_count);
-    for (w, state) in workers.iter_mut().enumerate() {
-        let (stats, vals) = state.collect_phase(cfg, charge);
-        ledger.fold(cfg, w, Round::Collect, &stats, &mut ops);
-        lists.push(vals);
-    }
-    if charge {
-        ledger.finish_collect(&mut sim, cfg);
-    }
-    RunResult { values: assemble(n, lists), sim, ops }
-}
-
-// ----------------------------------------------------------------- threaded
-
-/// Coordinator → worker control messages.
-enum Ctl {
-    /// Run one superstep against the shared activation bitmap.
-    Step { step: usize, active: Arc<Vec<bool>> },
-    /// Ship master values to the leader and exit.
-    Collect { charge: bool },
-}
-
-/// Worker → coordinator reports.
-enum Report<P: VertexProgram> {
-    Phase { worker: usize, round: Round, stats: PhaseStats },
-    StepEnd { next_active: Vec<VertexId> },
-    Collect { worker: usize, stats: PhaseStats, values: Vec<(VertexId, P::Value)> },
-}
-
-/// The thread-per-worker loop: phases run between BSP barriers; each
-/// send/drain pair is separated by two barrier generations so a phase's
-/// inbox never mixes with the next phase's traffic.
-#[allow(clippy::too_many_arguments)]
-fn worker_loop<P: VertexProgram>(
-    mut state: WorkerState<P>,
-    prog: &P,
-    g: &Graph,
-    gi: &GraphInfo<'_>,
-    p: &Partitioning,
-    cfg: &ClusterConfig,
-    inbox: mpsc::Receiver<Envelope<P>>,
-    ctl: mpsc::Receiver<Ctl>,
-    peers: Vec<mpsc::Sender<Envelope<P>>>,
-    report: mpsc::Sender<Report<P>>,
-    barrier: &BspBarrier,
-) {
-    let worker = state.id;
-    let send_all = |env: Vec<Envelope<P>>| {
-        for e in env {
-            peers[e.to as usize].send(e).expect("peer inbox open");
-        }
-    };
-    // mpsc preserves per-sender order; a stable sort by sender yields
-    // the canonical (sender, send order) sequence of the simulated mode
-    let drain_sorted = || {
-        let mut v: Vec<Envelope<P>> = inbox.try_iter().collect();
-        v.sort_by_key(|e| e.from);
-        v
-    };
-    while let Ok(ctl_msg) = ctl.recv() {
-        match ctl_msg {
-            Ctl::Step { step, active } => {
-                let PhaseOut { env, stats } =
-                    state.gather_phase(prog, g, gi, p, &active, step, cfg);
-                send_all(env);
-                report.send(Report::Phase { worker, round: Round::Gather, stats }).unwrap();
-                barrier.wait();
-                let partials = drain_sorted();
-                barrier.wait();
-
-                let PhaseOut { env, stats } =
-                    state.apply_phase(prog, gi, p, &active, step, cfg, partials);
-                send_all(env);
-                report.send(Report::Phase { worker, round: Round::Apply, stats }).unwrap();
-                barrier.wait();
-                state.commit(drain_sorted());
-                barrier.wait();
-
-                let PhaseOut { env, stats } =
-                    state.scatter_phase(prog, g, gi, p, &active, step, cfg);
-                send_all(env);
-                report.send(Report::Phase { worker, round: Round::Scatter, stats }).unwrap();
-                barrier.wait();
-                state.drain_activations(drain_sorted());
-                let next_active = state.take_next_active();
-                report.send(Report::StepEnd { next_active }).unwrap();
-                // no trailing barrier: the coordinator only issues the
-                // next Ctl::Step after every StepEnd arrived
-            }
-            Ctl::Collect { charge } => {
-                let (stats, values) = state.collect_phase(cfg, charge);
-                report.send(Report::Collect { worker, stats, values }).unwrap();
-                return;
-            }
-        }
-    }
-}
-
-/// Receive exactly one report per worker and return the extracted
-/// payloads indexed by worker id (arrival order is
-/// scheduling-dependent; callers fold in ascending worker order).
-fn recv_indexed<P: VertexProgram, T>(
-    rx: &mpsc::Receiver<Report<P>>,
-    w_count: usize,
-    mut extract: impl FnMut(Report<P>) -> (usize, T),
-) -> Vec<T> {
-    let mut slots: Vec<Option<T>> = (0..w_count).map(|_| None).collect();
-    for _ in 0..w_count {
-        let (worker, payload) = extract(rx.recv().expect("worker thread alive"));
-        debug_assert!(slots[worker].is_none());
-        slots[worker] = Some(payload);
-    }
-    slots.into_iter().map(|s| s.expect("one report per worker")).collect()
-}
-
-/// Thread-per-worker backend: spawns one thread per engine worker plus
-/// this coordinator thread, which drives supersteps, folds the cost
-/// ledger and owns termination.
-fn run_threaded<P: VertexProgram>(
-    g: &Graph,
-    p: &Partitioning,
-    prog: &P,
-    cfg: &ClusterConfig,
-) -> RunResult<P::Value> {
-    let n = g.num_vertices();
-    let w_count = p.num_workers;
-    let (in_degree, out_degree) = degree_vecs(g);
-    let gi = GraphInfo {
-        num_vertices: n,
-        num_edges: g.num_edges(),
-        directed: g.directed,
-        in_degree: &in_degree,
-        out_degree: &out_degree,
-    };
-    let states = build_worker_states(g, p, prog, &gi);
-    let barrier = BspBarrier::new(w_count);
-
-    let mut inbox_txs: Vec<mpsc::Sender<Envelope<P>>> = Vec::with_capacity(w_count);
-    let mut inbox_rxs: Vec<mpsc::Receiver<Envelope<P>>> = Vec::with_capacity(w_count);
-    let mut ctl_txs: Vec<mpsc::Sender<Ctl>> = Vec::with_capacity(w_count);
-    let mut ctl_rxs: Vec<mpsc::Receiver<Ctl>> = Vec::with_capacity(w_count);
-    for _ in 0..w_count {
-        let (tx, rx) = mpsc::channel();
-        inbox_txs.push(tx);
-        inbox_rxs.push(rx);
-        let (tx, rx) = mpsc::channel();
-        ctl_txs.push(tx);
-        ctl_rxs.push(rx);
-    }
-    let (report_tx, report_rx) = mpsc::channel::<Report<P>>();
-
-    std::thread::scope(|scope| {
-        let gi_ref = &gi;
-        let barrier_ref = &barrier;
-        for ((state, irx), crx) in
-            states.into_iter().zip(inbox_rxs.into_iter()).zip(ctl_rxs.into_iter())
-        {
-            let peers = inbox_txs.clone();
-            let report = report_tx.clone();
-            scope.spawn(move || {
-                worker_loop(state, prog, g, gi_ref, p, cfg, irx, crx, peers, report, barrier_ref)
-            });
-        }
-        drop(inbox_txs);
-        drop(report_tx);
-
-        let mut ops = OpCounts::default();
-        let mut sim = SimTime::default();
-        let mut active = Arc::new(initial_active(prog, gi_ref, n));
-        let mut step = 0usize;
-        while should_continue(prog, step, &active) {
-            for tx in &ctl_txs {
-                tx.send(Ctl::Step { step, active: Arc::clone(&active) }).unwrap();
-            }
-            let mut ledger = StepLedger::new(cfg);
-            for round in [Round::Gather, Round::Apply, Round::Scatter] {
-                let stats = recv_indexed(&report_rx, w_count, |r| match r {
-                    Report::Phase { worker, round: got, stats } => {
-                        debug_assert_eq!(got, round);
-                        (worker, stats)
-                    }
-                    _ => unreachable!("expected a {round:?} phase report"),
-                });
-                for (w, st) in stats.iter().enumerate() {
-                    ledger.fold(cfg, w, round, st, &mut ops);
-                }
-            }
-            let mut next = vec![false; n];
-            for _ in 0..w_count {
-                match report_rx.recv().expect("worker thread alive") {
-                    Report::StepEnd { next_active, .. } => {
-                        for v in next_active {
-                            next[v as usize] = true;
-                        }
-                    }
-                    _ => unreachable!("expected a StepEnd report"),
-                }
-            }
-            ledger.finish(&mut sim, cfg);
-            ops.supersteps += 1;
-            step += 1;
-            if prog.fixed_rounds().is_none() {
-                active = Arc::new(next);
-            }
-        }
-
-        let charge = prog.collect_result();
-        for tx in &ctl_txs {
-            tx.send(Ctl::Collect { charge }).unwrap();
-        }
-        let collected = recv_indexed(&report_rx, w_count, |r| match r {
-            Report::Collect { worker, stats, values } => (worker, (stats, values)),
-            _ => unreachable!("expected a Collect report"),
-        });
-        let mut ledger = StepLedger::new(cfg);
-        let mut lists = Vec::with_capacity(w_count);
-        for (w, (stats, values)) in collected.into_iter().enumerate() {
-            ledger.fold(cfg, w, Round::Collect, &stats, &mut ops);
-            lists.push(values);
-        }
-        if charge {
-            ledger.finish_collect(&mut sim, cfg);
-        }
-        RunResult { values: assemble(n, lists), sim, ops }
-    })
-}
-
 // ------------------------------------------------------------------ shared
+
+use gas::EdgeDirection;
 
 /// Which local edge lists a direction maps to. Undirected graphs store
 /// each edge once in canonical order, so any direction must union both
@@ -679,7 +407,9 @@ mod tests {
 
     /// The threaded backend is bit-identical to the simulated oracle —
     /// values, op counters and simulated time (the full matrix over
-    /// algorithms/strategies lives in `tests/mode_equivalence.rs`).
+    /// algorithms/strategies/modes, including the socket backend, lives
+    /// in `tests/mode_equivalence.rs`; socket runs need a spawnable
+    /// worker binary, so they stay out of the lib-test binary).
     #[test]
     fn threaded_matches_simulated_smoke() {
         let g = small_graph();
@@ -698,18 +428,52 @@ mod tests {
         }
     }
 
+    /// Socket mode refuses programs outside the algorithm inventory
+    /// instead of spawning workers that could not reconstruct them.
+    #[test]
+    fn socket_mode_rejects_non_inventory_programs() {
+        let g = small_graph();
+        let p = Strategy::Random.partition(&g, 2);
+        let cfg = ClusterConfig::with_workers(2);
+        let err =
+            try_run_mode(&g, &p, &InDegreeProg, &cfg, ExecutionMode::Socket).unwrap_err();
+        assert!(err.to_string().contains("inventory"), "{err}");
+    }
+
+    /// Every run measures a wall-clock label at the coordinator.
+    #[test]
+    fn wall_clock_label_is_measured() {
+        let g = small_graph();
+        let p = Strategy::Random.partition(&g, 2);
+        let cfg = ClusterConfig::with_workers(2);
+        for mode in [ExecutionMode::Simulated, ExecutionMode::Threaded] {
+            let r = run_mode(&g, &p, &InDegreeProg, &cfg, mode);
+            assert!(
+                r.wall_clock_ms > 0.0 && r.wall_clock_ms.is_finite(),
+                "{}: wall {}",
+                mode.name(),
+                r.wall_clock_ms
+            );
+        }
+    }
+
     #[test]
     fn execution_mode_parsing() {
         assert_eq!(ExecutionMode::from_name("simulated"), Some(ExecutionMode::Simulated));
         assert_eq!(ExecutionMode::from_name("SIM"), Some(ExecutionMode::Simulated));
         assert_eq!(ExecutionMode::from_name(" threaded "), Some(ExecutionMode::Threaded));
+        assert_eq!(ExecutionMode::from_name("socket"), Some(ExecutionMode::Socket));
+        assert_eq!(ExecutionMode::from_name("PROCESS"), Some(ExecutionMode::Socket));
         assert_eq!(ExecutionMode::from_name("gpu"), None);
         assert_eq!(mode_from(None), ExecutionMode::Simulated);
         assert_eq!(mode_from(Some("junk")), ExecutionMode::Simulated);
         assert_eq!(mode_from(Some("threads")), ExecutionMode::Threaded);
+        assert_eq!(mode_from(Some("sock")), ExecutionMode::Socket);
         assert_eq!(ExecutionMode::Threaded.name(), "threaded");
+        assert_eq!(ExecutionMode::Socket.name(), "socket");
         assert!(ExecutionMode::resolve(Some("nope")).is_err());
         assert_eq!(ExecutionMode::resolve(Some("sim")).unwrap(), ExecutionMode::Simulated);
+        assert_eq!(ExecutionMode::resolve(Some("socket")).unwrap(), ExecutionMode::Socket);
     }
 
     /// The `edge_rank` invariant: every (u, v) the gather sweeps can

@@ -17,9 +17,11 @@
 //!
 //! Envelopes are tagged with the sending worker; receivers process an
 //! inbox sorted by `(sender, send order)` so that combine order — and
-//! with it every floating-point fold — is identical whether the
-//! transport is the simulated in-memory router or real
-//! [`std::sync::mpsc`] channels.
+//! with it every floating-point fold — is identical whichever
+//! [`super::transport::Transport`] carries the envelopes: the
+//! sequential in-memory router, [`std::sync::mpsc`] channels, or the
+//! multi-process socket backend (where envelopes additionally
+//! round-trip through the bit-exact [`super::wire`] serialization).
 
 use crate::graph::VertexId;
 

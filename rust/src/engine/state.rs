@@ -61,11 +61,45 @@ pub struct WorkerState<P: VertexProgram> {
     next_active: Vec<VertexId>,
 }
 
+/// Assemble one worker's state from its local edges, interest set and
+/// master list (both ascending). Initial values come from the
+/// deterministic [`VertexProgram::init`], so replicas agree without an
+/// init broadcast — the same convention real GAS engines use when
+/// loading a partitioned graph.
+fn make_state<P: VertexProgram>(
+    id: usize,
+    n: usize,
+    local: LocalEdges,
+    vs: Vec<VertexId>,
+    ms: Vec<VertexId>,
+    prog: &P,
+    gi: &GraphInfo<'_>,
+) -> WorkerState<P> {
+    let mut lid = vec![NO_LID; n];
+    for (i, &v) in vs.iter().enumerate() {
+        lid[v as usize] = i as u32;
+    }
+    let values: Vec<P::Value> = vs.iter().map(|&v| prog.init(v, gi)).collect();
+    let len = vs.len();
+    WorkerState {
+        id,
+        local,
+        verts: vs,
+        masters: ms,
+        lid,
+        values,
+        accs: (0..len).map(|_| None).collect(),
+        gacc: (0..len).map(|_| None).collect(),
+        gacc_touched: Vec::new(),
+        self_partials: Vec::new(),
+        seen: vec![false; len],
+        seen_touched: Vec::new(),
+        next_active: Vec::new(),
+    }
+}
+
 /// Build every worker's state: local edge indexes, interest sets, and
-/// `init` values for all replicated/mastered vertices. Initial values
-/// come from the deterministic [`VertexProgram::init`], so replicas
-/// agree without an init broadcast — the same convention real GAS
-/// engines use when loading a partitioned graph.
+/// `init` values for all replicated/mastered vertices.
 pub fn build_worker_states<P: VertexProgram>(
     g: &Graph,
     p: &Partitioning,
@@ -93,29 +127,53 @@ pub fn build_worker_states<P: VertexProgram>(
         .map(|(w, local)| {
             let vs = std::mem::take(&mut verts[w]);
             let ms = std::mem::take(&mut masters[w]);
-            let mut lid = vec![NO_LID; n];
-            for (i, &v) in vs.iter().enumerate() {
-                lid[v as usize] = i as u32;
-            }
-            let values: Vec<P::Value> = vs.iter().map(|&v| prog.init(v, gi)).collect();
-            let len = vs.len();
-            WorkerState {
-                id: w,
-                local,
-                verts: vs,
-                masters: ms,
-                lid,
-                values,
-                accs: (0..len).map(|_| None).collect(),
-                gacc: (0..len).map(|_| None).collect(),
-                gacc_touched: Vec::new(),
-                self_partials: Vec::new(),
-                seen: vec![false; len],
-                seen_touched: Vec::new(),
-                next_active: Vec::new(),
-            }
+            make_state(w, n, local, vs, ms, prog, gi)
         })
         .collect()
+}
+
+/// Build a *single* worker's state — what a socket worker process
+/// needs. Identical to `build_worker_states(..)[rank]` (the unit test
+/// pins this), but does O(local) work instead of materialising every
+/// worker's edges, interest set and init values only to discard all
+/// but one.
+pub fn build_one_worker_state<P: VertexProgram>(
+    g: &Graph,
+    p: &Partitioning,
+    prog: &P,
+    gi: &GraphInfo<'_>,
+    rank: usize,
+) -> WorkerState<P> {
+    assert!(rank < p.num_workers, "rank {rank} of {}", p.num_workers);
+    let n = g.num_vertices();
+    let w = rank as u16;
+    let mut local = LocalEdges::default();
+    for (e, &(u, v)) in g.edges().iter().enumerate() {
+        if p.edge_worker[e] == w {
+            local.by_src.push((u, v));
+            local.by_dst.push((v, u));
+        }
+    }
+    local.by_src.sort_unstable();
+    local.by_dst.sort_unstable();
+    let mut vs = Vec::new();
+    let mut ms = Vec::new();
+    // same per-vertex visit order as build_worker_states: the replica
+    // membership and the isolated-master fallback are mutually
+    // exclusive for one worker, so a single ascending sweep reproduces
+    // the exact interest-set order
+    for v in 0..n as VertexId {
+        if p.replicas[v as usize].contains(&w) {
+            vs.push(v);
+        }
+        if p.master[v as usize] == w {
+            ms.push(v);
+            if !p.replicas[v as usize].contains(&w) {
+                vs.push(v);
+            }
+        }
+    }
+    make_state(rank, n, local, vs, ms, prog, gi)
 }
 
 /// One sequential sweep over a worker's sorted edge list: group by the
@@ -450,6 +508,41 @@ impl<P: VertexProgram> WorkerState<P> {
 mod tests {
     use super::*;
     use crate::partition::Strategy;
+
+    /// `build_one_worker_state` (the socket worker's O(local) path)
+    /// must produce exactly the state `build_worker_states` would have
+    /// handed that rank — edges, interest set, masters, index and
+    /// initial values.
+    #[test]
+    fn single_worker_build_matches_full_build() {
+        let mut rng = crate::util::rng::Rng::new(78);
+        let g = crate::graph::gen::chung_lu::generate("t1", 150, 700, 2.2, true, &mut rng);
+        let prog = crate::algorithms::degree::InDegree;
+        for s in [Strategy::Hdrf(50), Strategy::OneDSrc] {
+            let p = s.partition(&g, 5);
+            let in_degree: Vec<u32> = g.vertices().map(|v| g.in_degree(v) as u32).collect();
+            let out_degree: Vec<u32> = g.vertices().map(|v| g.out_degree(v) as u32).collect();
+            let gi = GraphInfo {
+                num_vertices: g.num_vertices(),
+                num_edges: g.num_edges(),
+                directed: g.directed,
+                in_degree: &in_degree,
+                out_degree: &out_degree,
+            };
+            let all = build_worker_states(&g, &p, &prog, &gi);
+            for rank in 0..5 {
+                let one = build_one_worker_state(&g, &p, &prog, &gi, rank);
+                let full = &all[rank];
+                assert_eq!(one.id, full.id);
+                assert_eq!(one.local.by_src, full.local.by_src, "{} rank {rank}", s.name());
+                assert_eq!(one.local.by_dst, full.local.by_dst);
+                assert_eq!(one.verts, full.verts);
+                assert_eq!(one.masters, full.masters);
+                assert_eq!(one.lid, full.lid);
+                assert_eq!(one.values, full.values);
+            }
+        }
+    }
 
     #[test]
     fn worker_states_cover_the_graph() {

@@ -1,0 +1,137 @@
+//! The sequential in-memory transport (the `Simulated` oracle).
+//!
+//! Workers run one after another in ascending order on the calling
+//! thread; envelopes route through double-buffered in-memory inboxes
+//! (`pending` collects a phase's output, the swap delivers it as the
+//! next phase's input — the BSP hand-off). Because workers execute in
+//! ascending order, every delivered inbox is naturally sorted by
+//! sender, satisfying the [`super::Transport`] ordering contract with
+//! no sorting at all. This is the fastest backend and the one corpus
+//! construction uses.
+
+use crate::graph::{Graph, VertexId};
+use crate::partition::Partitioning;
+use crate::util::error::Result;
+
+use super::super::cost::ClusterConfig;
+use super::super::degree_vecs;
+use super::super::gas::{GraphInfo, VertexProgram};
+use super::super::msg::{Envelope, PhaseOut, PhaseStats};
+use super::super::state::{build_worker_states, WorkerState};
+use super::super::RunResult;
+use super::{drive, route, Transport};
+
+pub(crate) struct LocalTransport<'a, P: VertexProgram> {
+    prog: &'a P,
+    g: &'a Graph,
+    gi: &'a GraphInfo<'a>,
+    p: &'a Partitioning,
+    cfg: &'a ClusterConfig,
+    workers: Vec<WorkerState<P>>,
+    /// Inboxes of the phase currently running (drained per worker).
+    current: Vec<Vec<Envelope<P>>>,
+    /// Staging inboxes collecting the running phase's output.
+    pending: Vec<Vec<Envelope<P>>>,
+}
+
+impl<P: VertexProgram> LocalTransport<'_, P> {
+    /// The BSP hand-off: what the finished phase emitted becomes the
+    /// next phase's input.
+    fn deliver(&mut self) {
+        std::mem::swap(&mut self.current, &mut self.pending);
+    }
+}
+
+impl<P: VertexProgram> Transport<P> for LocalTransport<'_, P> {
+    fn begin_step(&mut self, _step: usize, _active: &[bool]) -> Result<()> {
+        Ok(())
+    }
+
+    fn gather(&mut self, step: usize, active: &[bool]) -> Result<Vec<PhaseStats>> {
+        let mut stats = Vec::with_capacity(self.workers.len());
+        for w in 0..self.workers.len() {
+            let PhaseOut { env, stats: st } = self.workers[w].gather_phase(
+                self.prog, self.g, self.gi, self.p, active, step, self.cfg,
+            );
+            route(&mut self.pending, env);
+            stats.push(st);
+        }
+        self.deliver();
+        Ok(stats)
+    }
+
+    fn apply(&mut self, step: usize, active: &[bool]) -> Result<Vec<PhaseStats>> {
+        let mut stats = Vec::with_capacity(self.workers.len());
+        for w in 0..self.workers.len() {
+            let inbox = std::mem::take(&mut self.current[w]);
+            let PhaseOut { env, stats: st } =
+                self.workers[w].apply_phase(self.prog, self.gi, self.p, active, step, self.cfg, inbox);
+            route(&mut self.pending, env);
+            stats.push(st);
+        }
+        self.deliver();
+        Ok(stats)
+    }
+
+    fn scatter(&mut self, step: usize, active: &[bool]) -> Result<Vec<PhaseStats>> {
+        // commit: mirrors install the apply phase's value broadcasts
+        for w in 0..self.workers.len() {
+            let inbox = std::mem::take(&mut self.current[w]);
+            self.workers[w].commit(inbox);
+        }
+        let mut stats = Vec::with_capacity(self.workers.len());
+        for w in 0..self.workers.len() {
+            let PhaseOut { env, stats: st } = self.workers[w].scatter_phase(
+                self.prog, self.g, self.gi, self.p, active, step, self.cfg,
+            );
+            route(&mut self.pending, env);
+            stats.push(st);
+        }
+        self.deliver();
+        Ok(stats)
+    }
+
+    fn end_step(&mut self) -> Result<Vec<Vec<VertexId>>> {
+        let mut out = Vec::with_capacity(self.workers.len());
+        for w in 0..self.workers.len() {
+            let inbox = std::mem::take(&mut self.current[w]);
+            self.workers[w].drain_activations(inbox);
+            out.push(self.workers[w].take_next_active());
+        }
+        Ok(out)
+    }
+
+    fn collect(&mut self, charge: bool) -> Result<Vec<(PhaseStats, Vec<(VertexId, P::Value)>)>> {
+        Ok(self.workers.iter_mut().map(|s| s.collect_phase(self.cfg, charge)).collect())
+    }
+}
+
+/// Run a program on the sequential in-memory backend.
+pub(crate) fn run<P: VertexProgram>(
+    g: &Graph,
+    p: &Partitioning,
+    prog: &P,
+    cfg: &ClusterConfig,
+) -> Result<RunResult<P::Value>> {
+    let (in_degree, out_degree) = degree_vecs(g);
+    let gi = GraphInfo {
+        num_vertices: g.num_vertices(),
+        num_edges: g.num_edges(),
+        directed: g.directed,
+        in_degree: &in_degree,
+        out_degree: &out_degree,
+    };
+    let workers = build_worker_states(g, p, prog, &gi);
+    let w_count = p.num_workers;
+    let mut t = LocalTransport {
+        prog,
+        g,
+        gi: &gi,
+        p,
+        cfg,
+        workers,
+        current: (0..w_count).map(|_| Vec::new()).collect(),
+        pending: (0..w_count).map(|_| Vec::new()).collect(),
+    };
+    drive(&mut t, prog, &gi, cfg)
+}

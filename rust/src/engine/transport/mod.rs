@@ -1,0 +1,141 @@
+//! The engine's pluggable transport layer.
+//!
+//! Historically the two execution backends each carried their own copy
+//! of the superstep driver: the simulated mode interleaved phase calls
+//! with in-memory inbox routing, and the threaded mode duplicated the
+//! same control flow around mpsc channels. This module extracts that
+//! routing/drain logic behind one [`Transport`] trait and a single
+//! generic superstep driver ([`drive`]), so a backend only has to
+//! answer "run this phase on every worker and hand me the stats and
+//! next inboxes":
+//!
+//! * [`local`] — the sequential in-memory router (the
+//!   [`super::ExecutionMode::Simulated`] oracle);
+//! * [`mpsc`] — thread-per-worker over [`std::sync::mpsc`] channels
+//!   with a BSP barrier ([`super::ExecutionMode::Threaded`]);
+//! * [`socket`] — one **worker process** per engine worker over
+//!   localhost TCP, exchanging [`super::wire`] frames
+//!   ([`super::ExecutionMode::Socket`]).
+//!
+//! The determinism contract every backend must honour (and the reason
+//! all three stay bit-identical):
+//!
+//! 1. each phase's per-worker [`PhaseStats`] are returned **in
+//!    ascending worker order** — the driver folds them into the
+//!    [`StepLedger`] in that order, fixing every floating-point sum;
+//! 2. each worker's next-phase inbox is delivered **sorted by sending
+//!    worker**, with each sender's envelopes in send order — fixing the
+//!    master-side combine order;
+//! 3. the phase code itself is the *same* [`super::state::WorkerState`]
+//!    methods everywhere; a transport only moves envelopes.
+
+pub mod local;
+pub mod mpsc;
+pub mod socket;
+
+use crate::graph::VertexId;
+use crate::util::error::Result;
+
+use super::cost::{ClusterConfig, OpCounts, SimTime, StepLedger};
+use super::gas::{GraphInfo, VertexProgram};
+use super::msg::{Envelope, PhaseStats, Round};
+use super::{assemble, initial_active, should_continue, RunResult};
+
+/// One execution backend driving `cfg.num_workers` workers through BSP
+/// supersteps. See the module docs for the ordering contract.
+pub trait Transport<P: VertexProgram> {
+    /// Announce superstep `step` (and its activation bitmap) to every
+    /// worker before the first phase runs.
+    fn begin_step(&mut self, step: usize, active: &[bool]) -> Result<()>;
+
+    /// Run the gather phase on every worker; the emitted partials
+    /// become the apply phase's inboxes.
+    fn gather(&mut self, step: usize, active: &[bool]) -> Result<Vec<PhaseStats>>;
+
+    /// Deliver the gather inboxes, run the apply phase everywhere; the
+    /// emitted value broadcasts become the commit inboxes.
+    fn apply(&mut self, step: usize, active: &[bool]) -> Result<Vec<PhaseStats>>;
+
+    /// Deliver the commit inboxes (mirrors install broadcast values),
+    /// then run the scatter phase everywhere; the emitted activation
+    /// notices become the end-of-step inboxes.
+    fn scatter(&mut self, step: usize, active: &[bool]) -> Result<Vec<PhaseStats>>;
+
+    /// Deliver the activation inboxes and return every worker's
+    /// next-superstep activations (index = worker id; union order is
+    /// irrelevant, the driver ORs them into a bitmap).
+    fn end_step(&mut self) -> Result<Vec<Vec<VertexId>>>;
+
+    /// Final collect: every worker ships its mastered `(vertex, value)`
+    /// pairs (and the collect-phase send accounting when `charge`).
+    #[allow(clippy::type_complexity)]
+    fn collect(&mut self, charge: bool) -> Result<Vec<(PhaseStats, Vec<(VertexId, P::Value)>)>>;
+}
+
+/// Route a phase's envelopes into per-destination staging inboxes.
+/// Callers invoke this per worker in ascending worker order, which is
+/// what keeps every staged inbox sorted by sender.
+pub(crate) fn route<P: VertexProgram>(staged: &mut [Vec<Envelope<P>>], env: Vec<Envelope<P>>) {
+    for e in env {
+        staged[e.to as usize].push(e);
+    }
+}
+
+/// The transport-agnostic superstep driver: the one copy of the BSP
+/// control flow all three execution modes share. Folds each phase's
+/// stats in ascending worker order, derives message rounds through the
+/// [`StepLedger`], and assembles the final value vector — so values,
+/// op counts and simulated time are bit-identical across backends by
+/// construction.
+pub(crate) fn drive<P: VertexProgram, T: Transport<P>>(
+    t: &mut T,
+    prog: &P,
+    gi: &GraphInfo<'_>,
+    cfg: &ClusterConfig,
+) -> Result<RunResult<P::Value>> {
+    let n = gi.num_vertices;
+    let w_count = cfg.num_workers;
+    let mut ops = OpCounts::default();
+    let mut sim = SimTime::default();
+    let mut active = initial_active(prog, gi, n);
+    let mut next = vec![false; n]; // reused across supersteps
+    let mut step = 0usize;
+    while should_continue(prog, step, &active) {
+        let mut ledger = StepLedger::new(cfg);
+        t.begin_step(step, &active)?;
+        for (round, stats) in [
+            (Round::Gather, t.gather(step, &active)?),
+            (Round::Apply, t.apply(step, &active)?),
+            (Round::Scatter, t.scatter(step, &active)?),
+        ] {
+            debug_assert_eq!(stats.len(), w_count);
+            for (w, st) in stats.iter().enumerate() {
+                ledger.fold(cfg, w, round, st, &mut ops);
+            }
+        }
+        for list in t.end_step()? {
+            for v in list {
+                next[v as usize] = true;
+            }
+        }
+        ledger.finish(&mut sim, cfg);
+        ops.supersteps += 1;
+        step += 1;
+        if prog.fixed_rounds().is_none() {
+            std::mem::swap(&mut active, &mut next);
+        }
+        next.fill(false);
+    }
+
+    let charge = prog.collect_result();
+    let mut ledger = StepLedger::new(cfg);
+    let mut lists = Vec::with_capacity(w_count);
+    for (w, (stats, vals)) in t.collect(charge)?.into_iter().enumerate() {
+        ledger.fold(cfg, w, Round::Collect, &stats, &mut ops);
+        lists.push(vals);
+    }
+    if charge {
+        ledger.finish_collect(&mut sim, cfg);
+    }
+    Ok(RunResult { values: assemble(n, lists), sim, ops, wall_clock_ms: 0.0 })
+}

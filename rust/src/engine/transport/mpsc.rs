@@ -1,0 +1,248 @@
+//! The thread-per-worker transport over [`std::sync::mpsc`] channels.
+//!
+//! One OS thread per engine worker; the calling thread is the
+//! coordinator. Phases on a worker run between [`BspBarrier`]
+//! generations: each send/drain pair is separated by two generations so
+//! a phase's inbox never mixes with the next phase's traffic. mpsc
+//! preserves per-sender order, so a stable sort by sender reproduces
+//! the canonical (sender, send order) inbox sequence of the sequential
+//! backend — which is what keeps this mode bit-identical to it.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::graph::{Graph, VertexId};
+use crate::partition::Partitioning;
+use crate::util::error::Result;
+
+use super::super::barrier::BspBarrier;
+use super::super::cost::ClusterConfig;
+use super::super::degree_vecs;
+use super::super::gas::{GraphInfo, VertexProgram};
+use super::super::msg::{Envelope, PhaseOut, PhaseStats, Round};
+use super::super::state::{build_worker_states, WorkerState};
+use super::super::RunResult;
+use super::{drive, Transport};
+
+/// Coordinator → worker control messages.
+enum Ctl {
+    /// Run one superstep against the shared activation bitmap.
+    Step { step: usize, active: Arc<Vec<bool>> },
+    /// Ship master values to the leader and exit.
+    Collect { charge: bool },
+}
+
+/// Worker → coordinator reports.
+enum Report<P: VertexProgram> {
+    Phase { worker: usize, round: Round, stats: PhaseStats },
+    StepEnd { next_active: Vec<VertexId> },
+    Collect { worker: usize, stats: PhaseStats, values: Vec<(VertexId, P::Value)> },
+}
+
+/// The thread-per-worker loop: phases run between BSP barriers; each
+/// send/drain pair is separated by two barrier generations so a phase's
+/// inbox never mixes with the next phase's traffic.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop<P: VertexProgram>(
+    mut state: WorkerState<P>,
+    prog: &P,
+    g: &Graph,
+    gi: &GraphInfo<'_>,
+    p: &Partitioning,
+    cfg: &ClusterConfig,
+    inbox: mpsc::Receiver<Envelope<P>>,
+    ctl: mpsc::Receiver<Ctl>,
+    peers: Vec<mpsc::Sender<Envelope<P>>>,
+    report: mpsc::Sender<Report<P>>,
+    barrier: &BspBarrier,
+) {
+    let worker = state.id;
+    let send_all = |env: Vec<Envelope<P>>| {
+        for e in env {
+            peers[e.to as usize].send(e).expect("peer inbox open");
+        }
+    };
+    // mpsc preserves per-sender order; a stable sort by sender yields
+    // the canonical (sender, send order) sequence of the simulated mode
+    let drain_sorted = || {
+        let mut v: Vec<Envelope<P>> = inbox.try_iter().collect();
+        v.sort_by_key(|e| e.from);
+        v
+    };
+    while let Ok(ctl_msg) = ctl.recv() {
+        match ctl_msg {
+            Ctl::Step { step, active } => {
+                let PhaseOut { env, stats } =
+                    state.gather_phase(prog, g, gi, p, &active, step, cfg);
+                send_all(env);
+                report.send(Report::Phase { worker, round: Round::Gather, stats }).unwrap();
+                barrier.wait();
+                let partials = drain_sorted();
+                barrier.wait();
+
+                let PhaseOut { env, stats } =
+                    state.apply_phase(prog, gi, p, &active, step, cfg, partials);
+                send_all(env);
+                report.send(Report::Phase { worker, round: Round::Apply, stats }).unwrap();
+                barrier.wait();
+                state.commit(drain_sorted());
+                barrier.wait();
+
+                let PhaseOut { env, stats } =
+                    state.scatter_phase(prog, g, gi, p, &active, step, cfg);
+                send_all(env);
+                report.send(Report::Phase { worker, round: Round::Scatter, stats }).unwrap();
+                barrier.wait();
+                state.drain_activations(drain_sorted());
+                let next_active = state.take_next_active();
+                report.send(Report::StepEnd { next_active }).unwrap();
+                // no trailing barrier: the coordinator only issues the
+                // next Ctl::Step after every StepEnd arrived
+            }
+            Ctl::Collect { charge } => {
+                let (stats, values) = state.collect_phase(cfg, charge);
+                report.send(Report::Collect { worker, stats, values }).unwrap();
+                return;
+            }
+        }
+    }
+}
+
+/// Receive exactly one report per worker and return the extracted
+/// payloads indexed by worker id (arrival order is
+/// scheduling-dependent; the driver folds in ascending worker order).
+fn recv_indexed<P: VertexProgram, T>(
+    rx: &mpsc::Receiver<Report<P>>,
+    w_count: usize,
+    mut extract: impl FnMut(Report<P>) -> (usize, T),
+) -> Vec<T> {
+    let mut slots: Vec<Option<T>> = (0..w_count).map(|_| None).collect();
+    for _ in 0..w_count {
+        let (worker, payload) = extract(rx.recv().expect("worker thread alive"));
+        debug_assert!(slots[worker].is_none());
+        slots[worker] = Some(payload);
+    }
+    slots.into_iter().map(|s| s.expect("one report per worker")).collect()
+}
+
+/// Coordinator-side transport handle: the worker threads advance
+/// themselves through a whole superstep once `Ctl::Step` arrives, so
+/// each phase method here only collects that phase's reports.
+struct MpscTransport<P: VertexProgram> {
+    ctl_txs: Vec<mpsc::Sender<Ctl>>,
+    report_rx: mpsc::Receiver<Report<P>>,
+    w_count: usize,
+}
+
+impl<P: VertexProgram> MpscTransport<P> {
+    fn phase_stats(&mut self, round: Round) -> Vec<PhaseStats> {
+        recv_indexed(&self.report_rx, self.w_count, |r| match r {
+            Report::Phase { worker, round: got, stats } => {
+                debug_assert_eq!(got, round);
+                (worker, stats)
+            }
+            _ => unreachable!("expected a {round:?} phase report"),
+        })
+    }
+}
+
+impl<P: VertexProgram> Transport<P> for MpscTransport<P> {
+    fn begin_step(&mut self, step: usize, active: &[bool]) -> Result<()> {
+        // one bitmap snapshot per superstep: the driver reuses its own
+        // buffer, so this validation backend copies what it shares with
+        // the worker threads
+        let active = Arc::new(active.to_vec());
+        for tx in &self.ctl_txs {
+            tx.send(Ctl::Step { step, active: Arc::clone(&active) }).unwrap();
+        }
+        Ok(())
+    }
+
+    fn gather(&mut self, _step: usize, _active: &[bool]) -> Result<Vec<PhaseStats>> {
+        Ok(self.phase_stats(Round::Gather))
+    }
+
+    fn apply(&mut self, _step: usize, _active: &[bool]) -> Result<Vec<PhaseStats>> {
+        Ok(self.phase_stats(Round::Apply))
+    }
+
+    fn scatter(&mut self, _step: usize, _active: &[bool]) -> Result<Vec<PhaseStats>> {
+        Ok(self.phase_stats(Round::Scatter))
+    }
+
+    fn end_step(&mut self) -> Result<Vec<Vec<VertexId>>> {
+        let mut out = Vec::with_capacity(self.w_count);
+        for _ in 0..self.w_count {
+            match self.report_rx.recv().expect("worker thread alive") {
+                Report::StepEnd { next_active } => out.push(next_active),
+                _ => unreachable!("expected a StepEnd report"),
+            }
+        }
+        Ok(out)
+    }
+
+    fn collect(&mut self, charge: bool) -> Result<Vec<(PhaseStats, Vec<(VertexId, P::Value)>)>> {
+        for tx in &self.ctl_txs {
+            tx.send(Ctl::Collect { charge }).unwrap();
+        }
+        Ok(recv_indexed(&self.report_rx, self.w_count, |r| match r {
+            Report::Collect { worker, stats, values } => (worker, (stats, values)),
+            _ => unreachable!("expected a Collect report"),
+        }))
+    }
+}
+
+/// Run a program on the thread-per-worker backend: spawns one thread
+/// per engine worker plus this coordinator thread, which drives the
+/// shared superstep loop and owns termination.
+pub(crate) fn run<P: VertexProgram>(
+    g: &Graph,
+    p: &Partitioning,
+    prog: &P,
+    cfg: &ClusterConfig,
+) -> Result<RunResult<P::Value>> {
+    let w_count = p.num_workers;
+    let (in_degree, out_degree) = degree_vecs(g);
+    let gi = GraphInfo {
+        num_vertices: g.num_vertices(),
+        num_edges: g.num_edges(),
+        directed: g.directed,
+        in_degree: &in_degree,
+        out_degree: &out_degree,
+    };
+    let states = build_worker_states(g, p, prog, &gi);
+    let barrier = BspBarrier::new(w_count);
+
+    let mut inbox_txs: Vec<mpsc::Sender<Envelope<P>>> = Vec::with_capacity(w_count);
+    let mut inbox_rxs: Vec<mpsc::Receiver<Envelope<P>>> = Vec::with_capacity(w_count);
+    let mut ctl_txs: Vec<mpsc::Sender<Ctl>> = Vec::with_capacity(w_count);
+    let mut ctl_rxs: Vec<mpsc::Receiver<Ctl>> = Vec::with_capacity(w_count);
+    for _ in 0..w_count {
+        let (tx, rx) = mpsc::channel();
+        inbox_txs.push(tx);
+        inbox_rxs.push(rx);
+        let (tx, rx) = mpsc::channel();
+        ctl_txs.push(tx);
+        ctl_rxs.push(rx);
+    }
+    let (report_tx, report_rx) = mpsc::channel::<Report<P>>();
+
+    std::thread::scope(|scope| {
+        let gi_ref = &gi;
+        let barrier_ref = &barrier;
+        for ((state, irx), crx) in
+            states.into_iter().zip(inbox_rxs.into_iter()).zip(ctl_rxs.into_iter())
+        {
+            let peers = inbox_txs.clone();
+            let report = report_tx.clone();
+            scope.spawn(move || {
+                worker_loop(state, prog, g, gi_ref, p, cfg, irx, crx, peers, report, barrier_ref)
+            });
+        }
+        drop(inbox_txs);
+        drop(report_tx);
+
+        let mut t = MpscTransport { ctl_txs, report_rx, w_count };
+        drive(&mut t, prog, gi_ref, cfg)
+    })
+}

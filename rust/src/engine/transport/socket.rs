@@ -1,0 +1,469 @@
+//! The multi-process socket transport: one **worker process** per
+//! engine worker over localhost TCP, exchanging checksummed
+//! [`super::super::wire`] frames.
+//!
+//! ## Lifecycle
+//!
+//! 1. The coordinator binds a listener on `127.0.0.1:0` and spawns one
+//!    child process per engine worker: `<worker-bin> --worker-rank <r>
+//!    --worker-connect 127.0.0.1:<port>`. The worker binary is resolved
+//!    via [`set_worker_binary`], then the `GPS_WORKER_BIN` environment
+//!    variable, then [`std::env::current_exe`] (correct for the `repro`
+//!    CLI and any binary that installs the `--worker-rank` hook).
+//! 2. Each child connects and sends a `HELLO` frame carrying its rank;
+//!    the coordinator answers with a `BOOTSTRAP` frame (algorithm
+//!    alias, graph edge list, edge→worker assignment, cluster config),
+//!    from which the child deterministically rebuilds its
+//!    [`WorkerState`] — bit-identical to the coordinator's, because
+//!    [`crate::graph::Graph::from_edges`] and
+//!    [`crate::partition::Partitioning::from_edge_assignment`] are the
+//!    same canonical constructors both sides use.
+//! 3. Per superstep the coordinator sends `STEP`, then relays each
+//!    phase: it reads every worker's `PHASE_OUT` **in ascending rank
+//!    order** (so the routed inboxes are sorted by sender, the
+//!    [`super::Transport`] contract), and answers with per-worker
+//!    `INBOX` frames. BSP is enforced by the protocol itself — no
+//!    worker receives its inbox before every worker's phase output
+//!    arrived — so no barrier primitive is needed.
+//! 4. `COLLECT` ships mastered values back; children exit, and the
+//!    transport reaps them (kill + wait on drop, so an error path never
+//!    leaks processes).
+//!
+//! Socket mode reconstructs the vertex program **by its inventory
+//! alias** (`VertexProgram::name` → `Algorithm::by_name` in the worker
+//! process), so it runs the paper's eight algorithms; ad-hoc programs
+//! that are not in the inventory fail with a clear error instead of
+//! silently running the wrong code.
+
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+use crate::graph::{Graph, VertexId};
+use crate::partition::Partitioning;
+use crate::util::error::{bail, ensure, Context, Result};
+
+use super::super::cost::ClusterConfig;
+use super::super::degree_vecs;
+use super::super::gas::{GraphInfo, VertexProgram};
+use super::super::msg::{Envelope, PhaseStats};
+use super::super::state::build_one_worker_state;
+use super::super::wire;
+use super::super::RunResult;
+use super::{drive, Transport};
+
+/// How long the coordinator waits for all workers to connect before
+/// giving up (covers process spawn + dynamic linking on loaded CI).
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(20);
+
+static WORKER_BIN: OnceLock<PathBuf> = OnceLock::new();
+
+/// Pin the binary spawned as `--worker-rank` worker processes.
+/// Integration tests and benches point this at the `repro` CLI
+/// (`env!("CARGO_BIN_EXE_repro")`); later calls with the same intent
+/// are no-ops.
+pub fn set_worker_binary(path: impl Into<PathBuf>) {
+    let _ = WORKER_BIN.set(path.into());
+}
+
+fn resolve_worker_binary() -> Result<PathBuf> {
+    if let Some(p) = WORKER_BIN.get() {
+        return Ok(p.clone());
+    }
+    if let Ok(v) = std::env::var("GPS_WORKER_BIN") {
+        if !v.trim().is_empty() {
+            return Ok(PathBuf::from(v));
+        }
+    }
+    std::env::current_exe().context("resolve current executable as the socket worker binary")
+}
+
+/// One spawned worker process plus its coordinator-side stream. Dropping
+/// the link reaps the child unconditionally, so error paths cannot leak
+/// processes (on the clean path the child has already exited and the
+/// kill is a no-op signal to a zombie).
+struct WorkerLink {
+    stream: TcpStream,
+    child: Child,
+}
+
+impl Drop for WorkerLink {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Coordinator-side transport: relays envelopes between worker
+/// processes through the star topology described in the module docs.
+struct SocketTransport<P: VertexProgram> {
+    links: Vec<WorkerLink>,
+    /// Per-destination staging inboxes for the phase being relayed.
+    pending: Vec<Vec<Envelope<P>>>,
+}
+
+impl<P: VertexProgram> SocketTransport<P> {
+    /// Read every worker's phase output in ascending rank order, stage
+    /// its envelopes per destination, then deliver each worker's inbox.
+    fn relay_phase(&mut self) -> Result<Vec<PhaseStats>> {
+        let n = self.links.len();
+        let mut stats = Vec::with_capacity(n);
+        for w in 0..n {
+            let payload = wire::expect_frame(&mut self.links[w].stream, wire::FRAME_PHASE_OUT)
+                .with_context(|| format!("phase output of socket worker {w}"))?;
+            let (st, env) = wire::decode_phase_out::<P>(&payload)?;
+            for e in env {
+                ensure!(
+                    (e.to as usize) < n,
+                    "socket worker {w} addressed worker {} of {n}",
+                    e.to
+                );
+                self.pending[e.to as usize].push(e);
+            }
+            stats.push(st);
+        }
+        for w in 0..n {
+            let env = std::mem::take(&mut self.pending[w]);
+            let payload = wire::encode_inbox(&env);
+            wire::write_frame(&mut self.links[w].stream, wire::FRAME_INBOX, &payload)
+                .with_context(|| format!("inbox delivery to socket worker {w}"))?;
+        }
+        Ok(stats)
+    }
+}
+
+impl<P: VertexProgram> Transport<P> for SocketTransport<P> {
+    fn begin_step(&mut self, step: usize, active: &[bool]) -> Result<()> {
+        let mut payload = Vec::with_capacity(16 + active.len() / 8 + 1);
+        wire::encode_step(step, active, &mut payload);
+        for (w, link) in self.links.iter_mut().enumerate() {
+            wire::write_frame(&mut link.stream, wire::FRAME_STEP, &payload)
+                .with_context(|| format!("step announcement to socket worker {w}"))?;
+        }
+        Ok(())
+    }
+
+    fn gather(&mut self, _step: usize, _active: &[bool]) -> Result<Vec<PhaseStats>> {
+        self.relay_phase()
+    }
+
+    fn apply(&mut self, _step: usize, _active: &[bool]) -> Result<Vec<PhaseStats>> {
+        self.relay_phase()
+    }
+
+    fn scatter(&mut self, _step: usize, _active: &[bool]) -> Result<Vec<PhaseStats>> {
+        self.relay_phase()
+    }
+
+    fn end_step(&mut self) -> Result<Vec<Vec<VertexId>>> {
+        let mut out = Vec::with_capacity(self.links.len());
+        for (w, link) in self.links.iter_mut().enumerate() {
+            let payload = wire::expect_frame(&mut link.stream, wire::FRAME_STEP_END)
+                .with_context(|| format!("step end of socket worker {w}"))?;
+            out.push(wire::decode_vertex_list(&payload)?);
+        }
+        Ok(out)
+    }
+
+    fn collect(&mut self, charge: bool) -> Result<Vec<(PhaseStats, Vec<(VertexId, P::Value)>)>> {
+        for (w, link) in self.links.iter_mut().enumerate() {
+            wire::write_frame(&mut link.stream, wire::FRAME_COLLECT, &[charge as u8])
+                .with_context(|| format!("collect request to socket worker {w}"))?;
+        }
+        let mut out = Vec::with_capacity(self.links.len());
+        for (w, link) in self.links.iter_mut().enumerate() {
+            let payload = wire::expect_frame(&mut link.stream, wire::FRAME_COLLECT_OUT)
+                .with_context(|| format!("collect output of socket worker {w}"))?;
+            out.push(wire::decode_collect_out::<P>(&payload)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Spawn the worker processes and complete the HELLO handshake,
+/// returning the links indexed by worker rank.
+fn connect_workers(w_count: usize) -> Result<Vec<WorkerLink>> {
+    let bin = resolve_worker_binary()?;
+    let listener =
+        TcpListener::bind(("127.0.0.1", 0)).context("bind the socket-engine listener")?;
+    let port = listener.local_addr().context("listener address")?.port();
+    listener.set_nonblocking(true).context("set listener non-blocking")?;
+
+    let mut children = Vec::with_capacity(w_count);
+    for rank in 0..w_count {
+        let child = Command::new(&bin)
+            .arg("--worker-rank")
+            .arg(rank.to_string())
+            .arg("--worker-connect")
+            .arg(format!("127.0.0.1:{port}"))
+            // recursion guard: if the spawned binary ignores
+            // --worker-rank and ends up back in this function, the
+            // marker turns a would-be fork bomb into a clean error
+            .env("GPS_SOCKET_WORKER", "1")
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawn socket worker {rank} via {}", bin.display()))?;
+        children.push(Some(child));
+    }
+    // the guard reaps every child not yet moved into a WorkerLink, so
+    // an error below cannot leak processes
+    struct Reaper(Vec<Option<Child>>);
+    impl Drop for Reaper {
+        fn drop(&mut self) {
+            for c in self.0.iter_mut().flatten() {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+    }
+    let mut reaper = Reaper(children);
+
+    let mut streams: Vec<Option<TcpStream>> = (0..w_count).map(|_| None).collect();
+    let deadline = Instant::now() + CONNECT_TIMEOUT;
+    let mut connected = 0usize;
+    while connected < w_count {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false).context("worker stream blocking mode")?;
+                stream.set_nodelay(true).context("worker stream TCP_NODELAY")?;
+                let mut stream = stream;
+                // bounded handshake: a connector that never says HELLO
+                // must not hang the coordinator forever
+                stream.set_read_timeout(Some(CONNECT_TIMEOUT)).context("handshake timeout")?;
+                let payload = wire::expect_frame(&mut stream, wire::FRAME_HELLO)?;
+                stream.set_read_timeout(None).context("clear handshake timeout")?;
+                let mut r = wire::Reader::new(&payload);
+                let rank = r.u16()? as usize;
+                r.finish()?;
+                ensure!(rank < w_count, "socket worker announced rank {rank} of {w_count}");
+                ensure!(streams[rank].is_none(), "two socket workers announced rank {rank}");
+                streams[rank] = Some(stream);
+                connected += 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                for (rank, slot) in reaper.0.iter_mut().enumerate() {
+                    if let Some(child) = slot {
+                        if let Some(status) = child.try_wait().context("poll socket worker")? {
+                            bail!(
+                                "socket worker {rank} ({}) exited with {status} before \
+                                 connecting — the worker binary must handle --worker-rank \
+                                 (use the repro CLI, or point GPS_WORKER_BIN / \
+                                 set_worker_binary at one that does)",
+                                bin.display()
+                            );
+                        }
+                    }
+                }
+                if Instant::now() > deadline {
+                    bail!(
+                        "socket workers did not connect within {CONNECT_TIMEOUT:?}; the \
+                         worker binary ({}) must handle --worker-rank (use the repro CLI, \
+                         or point GPS_WORKER_BIN / set_worker_binary at one that does)",
+                        bin.display()
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e).context("accept a socket worker connection"),
+        }
+    }
+
+    let links = reaper
+        .0
+        .iter_mut()
+        .zip(streams.into_iter())
+        .map(|(child, stream)| WorkerLink {
+            stream: stream.expect("one stream per connected rank"),
+            child: child.take().expect("child not yet reaped"),
+        })
+        .collect();
+    // all children are owned by links now; the reaper has nothing left
+    drop(reaper);
+    Ok(links)
+}
+
+/// The cheap observable knobs of a program, used to guard against an
+/// inventory-*named* but differently *configured* instance: the worker
+/// processes always reconstruct the inventory default, so a coordinator
+/// program whose fingerprint disagrees (e.g. `PageRank { iterations:
+/// 3 }` vs the default 10) must fail fast instead of silently running
+/// different code remotely. Parameter changes that alter only numeric
+/// behaviour inside gather/apply (not any of these knobs) are
+/// undetectable here — socket mode's contract is "inventory defaults
+/// only", and this guard catches the common violations.
+fn program_fingerprint<P: VertexProgram>(prog: &P) -> Vec<u64> {
+    let mut f = vec![
+        prog.fixed_rounds().map_or(u64::MAX, |k| k as u64),
+        prog.max_supersteps() as u64,
+        prog.needs_edge_rank() as u64,
+        prog.collect_result() as u64,
+        prog.gather_op_cost().to_bits(),
+        prog.gather_cost_per_byte().to_bits(),
+        prog.scatter_op_cost().to_bits(),
+    ];
+    for step in 0..4 {
+        f.push(prog.gather_edges(step) as u64);
+        f.push(prog.scatter_edges(step) as u64);
+    }
+    f
+}
+
+/// Run a program on the multi-process socket backend.
+pub(crate) fn run<P: VertexProgram>(
+    g: &Graph,
+    p: &Partitioning,
+    prog: &P,
+    cfg: &ClusterConfig,
+) -> Result<RunResult<P::Value>> {
+    let algorithm = prog.name();
+    let algo = crate::algorithms::Algorithm::by_name(algorithm).ok_or_else(|| {
+        crate::err!(
+            "socket mode reconstructs programs from the algorithm inventory; {algorithm:?} is \
+             not an inventory alias (run it on the simulated or threaded backend instead)"
+        )
+    })?;
+    struct Fp;
+    impl crate::algorithms::ProgramVisitor for Fp {
+        type Out = Vec<u64>;
+        fn visit<Q: VertexProgram>(self, prog: &Q) -> Vec<u64> {
+            program_fingerprint(prog)
+        }
+    }
+    ensure!(
+        algo.visit(Fp) == program_fingerprint(prog),
+        "socket mode runs the inventory default of {algorithm}, but this program instance's \
+         observable configuration differs from it (e.g. a custom round count); run the \
+         customised instance on the simulated or threaded backend instead"
+    );
+    ensure!(
+        std::env::var_os("GPS_SOCKET_WORKER").is_none(),
+        "recursive socket-engine spawn: this process was itself launched as a socket worker \
+         but its binary did not handle --worker-rank; point GPS_WORKER_BIN (or \
+         set_worker_binary) at a binary that does, e.g. the repro CLI"
+    );
+    let w_count = p.num_workers;
+    let mut links = connect_workers(w_count)?;
+    let bootstrap = wire::encode_bootstrap(algorithm, g, p, cfg);
+    for (w, link) in links.iter_mut().enumerate() {
+        wire::write_frame(&mut link.stream, wire::FRAME_BOOTSTRAP, &bootstrap)
+            .with_context(|| format!("bootstrap of socket worker {w}"))?;
+    }
+
+    let (in_degree, out_degree) = degree_vecs(g);
+    let gi = GraphInfo {
+        num_vertices: g.num_vertices(),
+        num_edges: g.num_edges(),
+        directed: g.directed,
+        in_degree: &in_degree,
+        out_degree: &out_degree,
+    };
+    let mut t = SocketTransport::<P> {
+        links,
+        pending: (0..w_count).map(|_| Vec::new()).collect(),
+    };
+    drive(&mut t, prog, &gi, cfg)
+}
+
+// ------------------------------------------------------------ worker side
+
+/// Connect to the coordinator and announce this worker's rank
+/// (`FRAME_HELLO`). Called by the `--worker-rank` entry point.
+pub fn connect_worker(rank: usize, connect: &str) -> Result<TcpStream> {
+    let mut stream = TcpStream::connect(connect)
+        .with_context(|| format!("socket worker {rank}: connect to coordinator {connect}"))?;
+    stream.set_nodelay(true).context("worker stream TCP_NODELAY")?;
+    let mut payload = Vec::with_capacity(2);
+    wire::put_u16(&mut payload, rank as u16);
+    wire::write_frame(&mut stream, wire::FRAME_HELLO, &payload)?;
+    Ok(stream)
+}
+
+/// Receive and decode the coordinator's `FRAME_BOOTSTRAP`.
+pub fn read_bootstrap(stream: &mut TcpStream) -> Result<wire::Bootstrap> {
+    let payload = wire::expect_frame(stream, wire::FRAME_BOOTSTRAP)?;
+    wire::decode_bootstrap(&payload)
+}
+
+/// Serve one worker's share of an engine run over an established
+/// coordinator connection: the same [`WorkerState`] phase methods as
+/// the other backends, with the coordinator gating BSP through the
+/// frame protocol. Returns after the collect phase.
+///
+/// [`WorkerState`]: super::super::state::WorkerState
+pub fn serve_connection<P: VertexProgram>(
+    prog: &P,
+    g: &Graph,
+    p: &Partitioning,
+    cfg: &ClusterConfig,
+    rank: usize,
+    stream: &mut TcpStream,
+) -> Result<()> {
+    ensure!(rank < p.num_workers, "worker rank {rank} of {}", p.num_workers);
+    let (in_degree, out_degree) = degree_vecs(g);
+    let gi = GraphInfo {
+        num_vertices: g.num_vertices(),
+        num_edges: g.num_edges(),
+        directed: g.directed,
+        in_degree: &in_degree,
+        out_degree: &out_degree,
+    };
+    let mut state = build_one_worker_state(g, p, prog, &gi, rank);
+
+    let read_inbox = |stream: &mut TcpStream| -> Result<Vec<Envelope<P>>> {
+        let payload = wire::expect_frame(stream, wire::FRAME_INBOX)?;
+        wire::decode_inbox::<P>(&payload)
+    };
+
+    loop {
+        let (kind, payload) = wire::read_frame(stream)?;
+        match kind {
+            wire::FRAME_STEP => {
+                let (step, active) = wire::decode_step(&payload, g.num_vertices())?;
+                let out = state.gather_phase(prog, g, &gi, p, &active, step, cfg);
+                wire::write_frame(
+                    stream,
+                    wire::FRAME_PHASE_OUT,
+                    &wire::encode_phase_out(&out.stats, &out.env),
+                )?;
+                let partials = read_inbox(stream)?;
+
+                let out = state.apply_phase(prog, &gi, p, &active, step, cfg, partials);
+                wire::write_frame(
+                    stream,
+                    wire::FRAME_PHASE_OUT,
+                    &wire::encode_phase_out(&out.stats, &out.env),
+                )?;
+                state.commit(read_inbox(stream)?);
+
+                let out = state.scatter_phase(prog, g, &gi, p, &active, step, cfg);
+                wire::write_frame(
+                    stream,
+                    wire::FRAME_PHASE_OUT,
+                    &wire::encode_phase_out(&out.stats, &out.env),
+                )?;
+                state.drain_activations(read_inbox(stream)?);
+
+                let next = state.take_next_active();
+                let mut payload = Vec::with_capacity(4 + 4 * next.len());
+                wire::encode_vertex_list(&next, &mut payload);
+                wire::write_frame(stream, wire::FRAME_STEP_END, &payload)?;
+            }
+            wire::FRAME_COLLECT => {
+                ensure!(payload.len() == 1, "malformed collect frame");
+                let charge = payload[0] != 0;
+                let (stats, vals) = state.collect_phase(cfg, charge);
+                wire::write_frame(
+                    stream,
+                    wire::FRAME_COLLECT_OUT,
+                    &wire::encode_collect_out::<P>(&stats, &vals),
+                )?;
+                return Ok(());
+            }
+            other => bail!("socket worker {rank}: unexpected frame kind {other}"),
+        }
+    }
+}

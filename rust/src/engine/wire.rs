@@ -1,0 +1,671 @@
+//! The engine's wire format: bit-exact envelope serialization for the
+//! multi-process socket transport.
+//!
+//! Everything the coordinator and a worker process exchange is a
+//! **frame**: `[len: u32][kind: u8][payload: len-9 bytes][checksum:
+//! u64]`, all little-endian, where `len` counts the kind byte, the
+//! payload and the checksum, and the checksum is the FNV-1a digest of
+//! the kind byte followed by the payload — the same
+//! exact-f64-bit-pattern + FNV-1a conventions as the corpus
+//! checkpoint shards ([`crate::dataset::checkpoint`]). A corrupted or
+//! truncated frame is rejected with an error, never silently accepted.
+//!
+//! Scalars travel little-endian at fixed width; `f64` values travel as
+//! their raw bit patterns ([`f64::to_bits`]), so floats decode to the
+//! identical bits on the other side of the process boundary. Payload
+//! serialization is structural ([`Payload::encode`] /
+//! [`Payload::decode`]): a [`Msg`]'s gather accumulator or vertex value
+//! round-trips bit-exactly for every program in the inventory — which
+//! is what keeps values, `OpCounts` and `SimTime` bit-identical across
+//! all three [`super::ExecutionMode`] backends
+//! (`tests/mode_equivalence.rs` and `tests/wire_roundtrip.rs` pin it).
+
+use std::io::{Read as IoRead, Write as IoWrite};
+
+use crate::graph::{Graph, VertexId};
+use crate::partition::Partitioning;
+use crate::util::error::{bail, ensure, Context, Result};
+use crate::util::rng::{fnv1a64_fold, FNV1A64_OFFSET};
+
+use super::cost::ClusterConfig;
+use super::gas::{Payload, VertexProgram};
+use super::msg::{Envelope, Msg, PhaseStats, SendAccount};
+
+/// Frame kinds of the coordinator ↔ worker-process protocol, in
+/// handshake-then-superstep order.
+pub const FRAME_HELLO: u8 = 1;
+pub const FRAME_BOOTSTRAP: u8 = 2;
+pub const FRAME_STEP: u8 = 3;
+pub const FRAME_PHASE_OUT: u8 = 4;
+pub const FRAME_INBOX: u8 = 5;
+pub const FRAME_STEP_END: u8 = 6;
+pub const FRAME_COLLECT: u8 = 7;
+pub const FRAME_COLLECT_OUT: u8 = 8;
+
+/// Upper bound on one frame's size: a corrupted length header must not
+/// trigger a multi-gigabyte allocation. The largest legitimate frame is
+/// the bootstrap (full edge list); 1 GiB covers graphs far beyond the
+/// corpus scale.
+pub const MAX_FRAME: usize = 1 << 30;
+
+// ------------------------------------------------------------- primitives
+
+/// Byte-cursor over a received payload; every getter checks bounds and
+/// returns a wire error instead of panicking on truncated input.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.remaining(),
+            "wire underrun: need {n} bytes at offset {}, only {} left",
+            self.pos,
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    pub fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    /// An `f64` from its exact bit pattern — never a textual round trip.
+    pub fn f64_bits(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| crate::err!("bad UTF-8 on the wire: {e}"))
+    }
+
+    /// Assert the payload was consumed exactly.
+    pub fn finish(self) -> Result<()> {
+        ensure!(self.remaining() == 0, "{} trailing bytes after a wire payload", self.remaining());
+        Ok(())
+    }
+}
+
+pub fn put_u16(out: &mut Vec<u8>, x: u16) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+pub fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+pub fn put_f64(out: &mut Vec<u8>, x: f64) {
+    out.extend_from_slice(&x.to_bits().to_le_bytes());
+}
+
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+// ---------------------------------------------------------------- framing
+
+fn frame_checksum(kind: u8, payload: &[u8]) -> u64 {
+    fnv1a64_fold(fnv1a64_fold(FNV1A64_OFFSET, &[kind]), payload)
+}
+
+/// Write one checksummed frame as a single contiguous write.
+pub fn write_frame(w: &mut impl IoWrite, kind: u8, payload: &[u8]) -> Result<()> {
+    let len = 1 + payload.len() + 8;
+    ensure!(len <= MAX_FRAME, "frame of {len} bytes exceeds MAX_FRAME");
+    let mut buf = Vec::with_capacity(4 + len);
+    buf.extend_from_slice(&(len as u32).to_le_bytes());
+    buf.push(kind);
+    buf.extend_from_slice(payload);
+    buf.extend_from_slice(&frame_checksum(kind, payload).to_le_bytes());
+    w.write_all(&buf).context("write wire frame")?;
+    w.flush().context("flush wire frame")?;
+    Ok(())
+}
+
+/// Read one frame, verifying its checksum. Returns `(kind, payload)`.
+pub fn read_frame(r: &mut impl IoRead) -> Result<(u8, Vec<u8>)> {
+    let mut head = [0u8; 4];
+    r.read_exact(&mut head).context("read wire frame header")?;
+    let len = u32::from_le_bytes(head) as usize;
+    ensure!((9..=MAX_FRAME).contains(&len), "implausible wire frame length {len}");
+    let mut kind = [0u8; 1];
+    r.read_exact(&mut kind).context("read wire frame kind")?;
+    let mut payload = vec![0u8; len - 9];
+    r.read_exact(&mut payload).context("read wire frame payload")?;
+    let mut sum = [0u8; 8];
+    r.read_exact(&mut sum).context("read wire frame checksum")?;
+    let stored = u64::from_le_bytes(sum);
+    let actual = frame_checksum(kind[0], &payload);
+    ensure!(
+        stored == actual,
+        "wire checksum mismatch on frame kind {}: stored {stored:016x}, content hashes to \
+         {actual:016x}",
+        kind[0]
+    );
+    Ok((kind[0], payload))
+}
+
+/// Read one frame and require a specific kind.
+pub fn expect_frame(r: &mut impl IoRead, want: u8) -> Result<Vec<u8>> {
+    let (kind, payload) = read_frame(r)?;
+    ensure!(kind == want, "wire protocol desync: expected frame kind {want}, got {kind}");
+    Ok(payload)
+}
+
+// -------------------------------------------------------------- envelopes
+
+const MSG_GATHER: u8 = 0;
+const MSG_VALUE: u8 = 1;
+const MSG_RESULT: u8 = 2;
+const MSG_ACTIVATE: u8 = 3;
+
+/// Serialize one addressed engine message.
+pub fn encode_envelope<P: VertexProgram>(e: &Envelope<P>, out: &mut Vec<u8>) {
+    put_u16(out, e.from);
+    put_u16(out, e.to);
+    match &e.msg {
+        Msg::GatherPartial { v, partial } => {
+            out.push(MSG_GATHER);
+            put_u32(out, *v);
+            partial.encode(out);
+        }
+        Msg::ValueUpdate { v, value } => {
+            out.push(MSG_VALUE);
+            put_u32(out, *v);
+            value.encode(out);
+        }
+        Msg::ResultEmit { bytes } => {
+            out.push(MSG_RESULT);
+            put_u64(out, *bytes as u64);
+        }
+        Msg::Activate { v } => {
+            out.push(MSG_ACTIVATE);
+            put_u32(out, *v);
+        }
+    }
+}
+
+/// Decode one envelope (the inverse of [`encode_envelope`]).
+pub fn decode_envelope<P: VertexProgram>(r: &mut Reader<'_>) -> Result<Envelope<P>> {
+    let from = r.u16()?;
+    let to = r.u16()?;
+    let msg = match r.u8()? {
+        MSG_GATHER => Msg::GatherPartial { v: r.u32()?, partial: P::Gather::decode(r)? },
+        MSG_VALUE => Msg::ValueUpdate { v: r.u32()?, value: P::Value::decode(r)? },
+        MSG_RESULT => Msg::ResultEmit { bytes: r.u64()? as usize },
+        MSG_ACTIVATE => Msg::Activate { v: r.u32()? },
+        other => bail!("unknown message tag {other} on the wire"),
+    };
+    Ok(Envelope { from, to, msg })
+}
+
+/// Serialize a worker's phase statistics (floats as exact bit patterns,
+/// so the coordinator folds the identical values the worker computed).
+pub fn encode_stats(st: &PhaseStats, out: &mut Vec<u8>) {
+    put_f64(out, st.compute);
+    put_u64(out, st.gathers);
+    put_u64(out, st.applies);
+    put_u64(out, st.scatters);
+    put_u64(out, st.send.msgs);
+    put_u64(out, st.send.bytes);
+    put_f64(out, st.send.intra);
+    put_f64(out, st.send.inter);
+}
+
+pub fn decode_stats(r: &mut Reader<'_>) -> Result<PhaseStats> {
+    Ok(PhaseStats {
+        compute: r.f64_bits()?,
+        gathers: r.u64()?,
+        applies: r.u64()?,
+        scatters: r.u64()?,
+        send: SendAccount {
+            msgs: r.u64()?,
+            bytes: r.u64()?,
+            intra: r.f64_bits()?,
+            inter: r.f64_bits()?,
+        },
+    })
+}
+
+/// One phase's output as a `FRAME_PHASE_OUT` payload: stats + envelopes.
+pub fn encode_phase_out<P: VertexProgram>(stats: &PhaseStats, env: &[Envelope<P>]) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_stats(stats, &mut out);
+    put_u32(&mut out, env.len() as u32);
+    for e in env {
+        encode_envelope(e, &mut out);
+    }
+    out
+}
+
+pub fn decode_phase_out<P: VertexProgram>(
+    payload: &[u8],
+) -> Result<(PhaseStats, Vec<Envelope<P>>)> {
+    let mut r = Reader::new(payload);
+    let stats = decode_stats(&mut r)?;
+    let count = r.u32()? as usize;
+    let mut env = Vec::with_capacity(count.min(r.remaining()));
+    for _ in 0..count {
+        env.push(decode_envelope::<P>(&mut r)?);
+    }
+    r.finish()?;
+    Ok((stats, env))
+}
+
+/// A delivered inbox as a `FRAME_INBOX` payload.
+pub fn encode_inbox<P: VertexProgram>(env: &[Envelope<P>]) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u32(&mut out, env.len() as u32);
+    for e in env {
+        encode_envelope(e, &mut out);
+    }
+    out
+}
+
+pub fn decode_inbox<P: VertexProgram>(payload: &[u8]) -> Result<Vec<Envelope<P>>> {
+    let mut r = Reader::new(payload);
+    let count = r.u32()? as usize;
+    let mut env = Vec::with_capacity(count.min(r.remaining()));
+    for _ in 0..count {
+        env.push(decode_envelope::<P>(&mut r)?);
+    }
+    r.finish()?;
+    Ok(env)
+}
+
+// ------------------------------------------------- superstep control data
+
+/// `FRAME_STEP` payload: the step index plus the global activation
+/// bitmap, packed 8 vertices per byte (LSB-first).
+pub fn encode_step(step: usize, active: &[bool], out: &mut Vec<u8>) {
+    put_u64(out, step as u64);
+    put_u64(out, active.len() as u64);
+    let mut byte = 0u8;
+    for (i, &a) in active.iter().enumerate() {
+        if a {
+            byte |= 1 << (i % 8);
+        }
+        if i % 8 == 7 {
+            out.push(byte);
+            byte = 0;
+        }
+    }
+    if active.len() % 8 != 0 {
+        out.push(byte);
+    }
+}
+
+pub fn decode_step(payload: &[u8], expect_n: usize) -> Result<(usize, Vec<bool>)> {
+    let mut r = Reader::new(payload);
+    let step = r.u64()? as usize;
+    let n = r.u64()? as usize;
+    ensure!(n == expect_n, "activation bitmap covers {n} vertices, graph has {expect_n}");
+    let packed = r.take((n + 7) / 8)?;
+    let active = (0..n).map(|i| packed[i / 8] & (1 << (i % 8)) != 0).collect();
+    r.finish()?;
+    Ok((step, active))
+}
+
+/// `FRAME_STEP_END` payload: the worker's next-superstep activations.
+pub fn encode_vertex_list(vs: &[VertexId], out: &mut Vec<u8>) {
+    put_u32(out, vs.len() as u32);
+    for &v in vs {
+        put_u32(out, v);
+    }
+}
+
+pub fn decode_vertex_list(payload: &[u8]) -> Result<Vec<VertexId>> {
+    let mut r = Reader::new(payload);
+    let count = r.u32()? as usize;
+    let mut vs = Vec::with_capacity(count.min(r.remaining()));
+    for _ in 0..count {
+        vs.push(r.u32()?);
+    }
+    r.finish()?;
+    Ok(vs)
+}
+
+/// `FRAME_COLLECT_OUT` payload: collect-phase stats plus the worker's
+/// mastered `(vertex, value)` pairs.
+pub fn encode_collect_out<P: VertexProgram>(
+    stats: &PhaseStats,
+    vals: &[(VertexId, P::Value)],
+) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_stats(stats, &mut out);
+    put_u32(&mut out, vals.len() as u32);
+    for (v, value) in vals {
+        put_u32(&mut out, *v);
+        value.encode(&mut out);
+    }
+    out
+}
+
+pub fn decode_collect_out<P: VertexProgram>(
+    payload: &[u8],
+) -> Result<(PhaseStats, Vec<(VertexId, P::Value)>)> {
+    let mut r = Reader::new(payload);
+    let stats = decode_stats(&mut r)?;
+    let count = r.u32()? as usize;
+    let mut vals = Vec::with_capacity(count.min(r.remaining()));
+    for _ in 0..count {
+        let v = r.u32()?;
+        vals.push((v, P::Value::decode(&mut r)?));
+    }
+    r.finish()?;
+    Ok((stats, vals))
+}
+
+// -------------------------------------------------------------- bootstrap
+
+/// Everything a worker process needs to reconstruct its engine state:
+/// the program's inventory alias, the graph, the edge→worker assignment
+/// and the cluster cost model. The graph and partitioning are rebuilt
+/// through their canonical deterministic constructors
+/// ([`Graph::from_edges`], [`Partitioning::from_edge_assignment`]), so
+/// the worker-side state is bit-identical to the coordinator's.
+pub struct Bootstrap {
+    pub algorithm: String,
+    pub graph: Graph,
+    pub partitioning: Partitioning,
+    pub cfg: ClusterConfig,
+}
+
+/// Serialize a `FRAME_BOOTSTRAP` payload.
+pub fn encode_bootstrap(
+    algorithm: &str,
+    g: &Graph,
+    p: &Partitioning,
+    cfg: &ClusterConfig,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + g.num_edges() * 10);
+    put_str(&mut out, algorithm);
+    put_str(&mut out, &g.name);
+    put_u64(&mut out, g.num_vertices() as u64);
+    out.push(g.directed as u8);
+    put_u64(&mut out, g.num_edges() as u64);
+    for &(u, v) in g.edges() {
+        put_u32(&mut out, u);
+        put_u32(&mut out, v);
+    }
+    put_u16(&mut out, p.num_workers as u16);
+    for &w in &p.edge_worker {
+        put_u16(&mut out, w);
+    }
+    put_u64(&mut out, cfg.num_workers as u64);
+    put_u64(&mut out, cfg.num_machines as u64);
+    for x in [cfg.ops_per_sec, cfg.bw_inter, cfg.bw_intra, cfg.latency, cfg.barrier] {
+        put_f64(&mut out, x);
+    }
+    out
+}
+
+/// Rebuild the run inputs from a `FRAME_BOOTSTRAP` payload.
+pub fn decode_bootstrap(payload: &[u8]) -> Result<Bootstrap> {
+    let mut r = Reader::new(payload);
+    let algorithm = r.str()?;
+    let name = r.str()?;
+    let n = r.u64()? as usize;
+    let directed = match r.u8()? {
+        0 => false,
+        1 => true,
+        other => bail!("bad directed flag {other} in bootstrap"),
+    };
+    let num_edges = r.u64()? as usize;
+    ensure!(
+        num_edges <= r.remaining() / 8,
+        "bootstrap declares {num_edges} edges but carries fewer bytes"
+    );
+    let mut edges = Vec::with_capacity(num_edges);
+    for _ in 0..num_edges {
+        let u = r.u32()?;
+        let v = r.u32()?;
+        edges.push((u, v));
+    }
+    let num_workers = r.u16()? as usize;
+    let mut edge_worker = Vec::with_capacity(num_edges);
+    for _ in 0..num_edges {
+        edge_worker.push(r.u16()?);
+    }
+    let cfg = ClusterConfig {
+        num_workers: r.u64()? as usize,
+        num_machines: r.u64()? as usize,
+        ops_per_sec: r.f64_bits()?,
+        bw_inter: r.f64_bits()?,
+        bw_intra: r.f64_bits()?,
+        latency: r.f64_bits()?,
+        barrier: r.f64_bits()?,
+    };
+    r.finish()?;
+    ensure!(
+        cfg.num_workers == num_workers,
+        "bootstrap cluster config disagrees with the partitioning's worker count"
+    );
+    // `from_edges` sorts + dedups; the coordinator's edge list is already
+    // canonical, so the rebuilt graph is identical — and the edge→worker
+    // assignment stays index-aligned.
+    let graph = Graph::from_edges(&name, n, edges, directed);
+    ensure!(
+        graph.num_edges() == num_edges,
+        "bootstrap edge list was not canonical: {} edges after dedup, {num_edges} sent",
+        graph.num_edges()
+    );
+    let partitioning = Partitioning::from_edge_assignment(&graph, num_workers, edge_worker);
+    Ok(Bootstrap { algorithm, graph, partitioning, cfg })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::gas::{EdgeDirection, GraphInfo, InitialActive};
+    use crate::util::rng::FNV1A64_OFFSET;
+
+    /// Minimal program with compound payload types so the generic
+    /// encode/decode paths are exercised.
+    struct Probe;
+    impl VertexProgram for Probe {
+        type Value = f64;
+        type Gather = (Vec<u32>, f64);
+        fn name(&self) -> &'static str {
+            "probe"
+        }
+        fn init(&self, _v: VertexId, _g: &GraphInfo) -> f64 {
+            0.0
+        }
+        fn initial_active(&self, _g: &GraphInfo) -> InitialActive {
+            InitialActive::All
+        }
+        fn gather_edges(&self, _step: usize) -> EdgeDirection {
+            EdgeDirection::In
+        }
+        fn gather_init(&self) -> (Vec<u32>, f64) {
+            (Vec::new(), 0.0)
+        }
+        fn gather(
+            &self,
+            _s: usize,
+            _v: VertexId,
+            _vv: &f64,
+            _u: VertexId,
+            _uv: &f64,
+            _r: u32,
+            _g: &GraphInfo,
+        ) -> (Vec<u32>, f64) {
+            (Vec::new(), 0.0)
+        }
+        fn sum(&self, a: (Vec<u32>, f64), _b: (Vec<u32>, f64)) -> (Vec<u32>, f64) {
+            a
+        }
+        fn apply(
+            &self,
+            _s: usize,
+            _v: VertexId,
+            _old: &f64,
+            _acc: (Vec<u32>, f64),
+            _g: &GraphInfo,
+        ) -> f64 {
+            0.0
+        }
+    }
+
+    fn roundtrip_env(e: &Envelope<Probe>) -> Envelope<Probe> {
+        let mut buf = Vec::new();
+        encode_envelope(e, &mut buf);
+        let mut r = Reader::new(&buf);
+        let out = decode_envelope::<Probe>(&mut r).unwrap();
+        r.finish().unwrap();
+        out
+    }
+
+    fn msg_digest(m: &Msg<Probe>) -> u64 {
+        match m {
+            Msg::GatherPartial { v, partial } => partial.fold_bits(v.fold_bits(FNV1A64_OFFSET)),
+            Msg::ValueUpdate { v, value } => value.fold_bits(v.fold_bits(FNV1A64_OFFSET)),
+            Msg::ResultEmit { bytes } => (*bytes as u32).fold_bits(FNV1A64_OFFSET),
+            Msg::Activate { v } => v.fold_bits(FNV1A64_OFFSET),
+        }
+    }
+
+    #[test]
+    fn envelope_roundtrip_every_variant() {
+        let cases: Vec<Envelope<Probe>> = vec![
+            Envelope {
+                from: 0,
+                to: 3,
+                msg: Msg::GatherPartial { v: 7, partial: (vec![1, 2, 9], -0.0) },
+            },
+            Envelope {
+                from: 2,
+                to: 1,
+                msg: Msg::ValueUpdate { v: 4, value: f64::MIN_POSITIVE / 2.0 },
+            },
+            Envelope { from: 5, to: 0, msg: Msg::ResultEmit { bytes: 12345 } },
+            Envelope { from: 1, to: 2, msg: Msg::Activate { v: 42 } },
+        ];
+        for e in &cases {
+            let got = roundtrip_env(e);
+            assert_eq!(got.from, e.from);
+            assert_eq!(got.to, e.to);
+            assert_eq!(std::mem::discriminant(&got.msg), std::mem::discriminant(&e.msg));
+            assert_eq!(msg_digest(&got.msg), msg_digest(&e.msg), "payload bits must survive");
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_and_corruption_detection() {
+        let payload = b"some frame payload".to_vec();
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FRAME_STEP, &payload).unwrap();
+        let (kind, got) = read_frame(&mut std::io::Cursor::new(&buf)).unwrap();
+        assert_eq!(kind, FRAME_STEP);
+        assert_eq!(got, payload);
+
+        // flip one payload byte: checksum must catch it
+        let mut bad = buf.clone();
+        bad[7] ^= 0x40;
+        let err = read_frame(&mut std::io::Cursor::new(&bad)).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+
+        // truncate: must error, not hang or misparse
+        let cut = &buf[..buf.len() - 3];
+        assert!(read_frame(&mut std::io::Cursor::new(cut)).is_err());
+
+        // wrong kind via expect_frame
+        let err = expect_frame(&mut std::io::Cursor::new(&buf), FRAME_INBOX)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("desync"), "{err}");
+    }
+
+    #[test]
+    fn stats_roundtrip_bit_exact() {
+        let st = PhaseStats {
+            compute: 1234.5678,
+            gathers: 9,
+            applies: 8,
+            scatters: 7,
+            send: SendAccount { msgs: 6, bytes: 5, intra: -0.0, inter: 1.0e-300 },
+        };
+        let mut buf = Vec::new();
+        encode_stats(&st, &mut buf);
+        let mut r = Reader::new(&buf);
+        let got = decode_stats(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(got.compute.to_bits(), st.compute.to_bits());
+        assert_eq!(got.gathers, st.gathers);
+        assert_eq!(got.send.msgs, st.send.msgs);
+        assert_eq!(got.send.intra.to_bits(), st.send.intra.to_bits());
+        assert_eq!(got.send.inter.to_bits(), st.send.inter.to_bits());
+    }
+
+    #[test]
+    fn step_bitmap_roundtrip() {
+        for n in [0usize, 1, 7, 8, 9, 300] {
+            let active: Vec<bool> = (0..n).map(|i| i % 3 == 0 || i % 7 == 2).collect();
+            let mut out = Vec::new();
+            encode_step(41, &active, &mut out);
+            let (step, got) = decode_step(&out, n).unwrap();
+            assert_eq!(step, 41);
+            assert_eq!(got, active, "n={n}");
+        }
+        let mut out = Vec::new();
+        encode_step(0, &[true, false], &mut out);
+        assert!(decode_step(&out, 3).is_err(), "bitmap size mismatch must error");
+    }
+
+    #[test]
+    fn bootstrap_roundtrip_rebuilds_identical_state() {
+        let mut rng = crate::util::rng::Rng::new(77);
+        let g = crate::graph::gen::erdos::generate("wire-boot", 60, 240, true, &mut rng);
+        let p = crate::partition::Strategy::Hdrf(50).partition(&g, 4);
+        let cfg = ClusterConfig::with_workers(4);
+        let payload = encode_bootstrap("PR", &g, &p, &cfg);
+        let boot = decode_bootstrap(&payload).unwrap();
+        assert_eq!(boot.algorithm, "PR");
+        assert_eq!(boot.graph.name, g.name);
+        assert_eq!(boot.graph.num_vertices(), g.num_vertices());
+        assert_eq!(boot.graph.edges(), g.edges());
+        assert_eq!(boot.partitioning.edge_worker, p.edge_worker);
+        assert_eq!(boot.partitioning.master, p.master);
+        assert_eq!(boot.partitioning.replicas, p.replicas);
+        assert_eq!(boot.cfg.num_workers, cfg.num_workers);
+        assert_eq!(boot.cfg.ops_per_sec.to_bits(), cfg.ops_per_sec.to_bits());
+    }
+}

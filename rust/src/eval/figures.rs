@@ -28,7 +28,7 @@ pub fn fig1_from_store(store: &crate::dataset::logs::LogStore) -> String {
     ];
     let mut out = String::from("Fig 1 — execution time by partitioning strategy (s)\n");
     let mut header: Vec<String> = vec!["task".into()];
-    header.extend(Strategy::inventory().iter().map(|s| s.name()));
+    header.extend(Strategy::inventory().iter().map(|s| s.name().into_owned()));
     let mut t = Table::new(header);
     for &(graph, algo) in cases {
         let times = store

@@ -43,8 +43,10 @@ pub struct PipelineConfig {
     /// are bit-identical for any value.
     pub threads: usize,
     /// Engine backend the corpus tasks run on (default: the
-    /// `GPS_ENGINE_MODE` env, falling back to `Simulated`). The two
-    /// modes produce bit-identical logs.
+    /// `GPS_ENGINE_MODE` env, falling back to `Simulated`). All three
+    /// modes — simulated, threaded, socket — produce bit-identical
+    /// deterministic log fields; only the measured `wall_clock_ms`
+    /// channel differs run to run.
     pub engine_mode: ExecutionMode,
     /// Corpus checkpoint directory: finished graphs are committed as
     /// crash-safe shards and restored on the next run with the same

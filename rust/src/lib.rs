@@ -20,9 +20,12 @@
 //! * [`engine`] — the worker-centric distributed GAS
 //!   (Gather-Apply-Scatter) engine: per-worker state, a typed
 //!   master↔mirror message layer feeding a deterministic cluster cost
-//!   model (the paper's 4×16-worker testbed), and two bit-identical
-//!   execution modes — a simulated oracle and a real thread-per-worker
-//!   message-passing backend (`GPS_ENGINE_MODE`).
+//!   model (the paper's 4×16-worker testbed), and a pluggable
+//!   transport layer with three bit-identical execution modes — a
+//!   simulated oracle, a thread-per-worker mpsc backend, and a
+//!   multi-process socket backend with a checksummed wire format
+//!   (`GPS_ENGINE_MODE`). Every run also measures a wall-clock label
+//!   at the coordinator.
 //! * [`algorithms`] — the eight graph algorithms of §5.3 implemented as
 //!   GAS vertex programs, with their pseudo-code sources.
 //! * [`analyzer`] — the pseudo-code static analyzer (lexer, parser,

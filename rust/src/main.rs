@@ -24,11 +24,17 @@
 //! Common flags: `--scale` (default 1/32 of the paper's dataset sizes),
 //! `--seed`, `--workers`, `--threads` (corpus-build parallelism;
 //! defaults to the `GPS_THREADS` env var, then to the machine's
-//! available cores), `--engine-mode simulated|threaded` (engine
+//! available cores), `--engine-mode simulated|threaded|socket` (engine
 //! backend; defaults to the `GPS_ENGINE_MODE` env var, then to
 //! `simulated`), and `--checkpoint-dir` (crash-safe corpus checkpoint
 //! directory; defaults to the `GPS_CHECKPOINT_DIR` env var, then to no
 //! checkpointing — see the README's corpus-checkpointing section).
+//!
+//! `--worker-rank <r> --worker-connect <addr>` is the hidden entry
+//! point of the socket engine's worker processes: the coordinator
+//! spawns this binary once per engine worker, and the process serves
+//! its share of the run over TCP instead of dispatching a subcommand
+//! (see `engine::transport::socket`).
 
 use gps_select::algorithms::Algorithm;
 use gps_select::analyzer;
@@ -47,6 +53,14 @@ use gps_select::util::error::{bail, ensure, Context, Result};
 
 fn main() {
     let args = Args::parse();
+    // socket-engine worker processes bypass normal dispatch entirely
+    if let Some(result) = gps_select::algorithms::maybe_serve_socket_worker(&args) {
+        if let Err(e) = result {
+            eprintln!("socket worker error: {e}");
+            std::process::exit(1);
+        }
+        return;
+    }
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e}");
         std::process::exit(1);
@@ -183,7 +197,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mode = ExecutionMode::resolve(args.get("engine-mode"))?;
     let cfg = ClusterConfig::with_workers(workers);
     let p = strategy.partition(&g, workers);
-    let outcome = algo.execute(&g, &p, &cfg, mode);
+    // try_execute: a socket-backend failure (worker spawn, wire IO)
+    // surfaces as a clean CLI error instead of a panic
+    let outcome = algo.try_execute(&g, &p, &cfg, mode)?;
     println!(
         "task {}/{} under {} on {} workers (|V|={}, |E|={}, {} engine)",
         g.name,
@@ -198,6 +214,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("    compute      : {:.6} s", outcome.sim.compute);
     println!("    comm         : {:.6} s", outcome.sim.comm);
     println!("    overhead     : {:.6} s", outcome.sim.overhead);
+    println!("  wall clock     : {:.3} ms (measured at the coordinator)", outcome.wall_clock_ms);
     println!("  supersteps     : {}", outcome.ops.supersteps);
     println!("  gathers        : {}", outcome.ops.gathers);
     println!("  messages       : {}", outcome.ops.messages);
@@ -226,7 +243,7 @@ fn cmd_partition(args: &Args) -> Result<()> {
         let p = s.partition(&g, workers);
         let m = PartitionMetrics::of(&g, &p);
         t.row(vec![
-            s.name(),
+            s.name().into_owned(),
             format!("{:.3}", m.replication_factor),
             format!("{:.3}", m.edge_balance),
             format!("{:.3}", m.vertex_balance),

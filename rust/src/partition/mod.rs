@@ -30,6 +30,7 @@ pub mod oned;
 pub mod random;
 pub mod twod;
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
@@ -40,7 +41,12 @@ use crate::util::rng::hash_u64;
 pub type StrategyId = usize;
 
 /// The strategy inventory.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+///
+/// `Ord` follows declaration order (with HDRF ordered by λ) so the
+/// strategy itself can key ordered maps — e.g. the execution-log time
+/// index — without going through a PSID (partial: non-inventory λ) or
+/// an allocated name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Strategy {
     /// PSID 0 — hash of the source vertex id.
     OneDSrc,
@@ -87,9 +93,12 @@ impl Strategy {
         v
     }
 
-    /// The paper's PSID.
-    pub fn psid(&self) -> StrategyId {
-        match self {
+    /// The paper's PSID, if this strategy has one. Only the four
+    /// inventory λ values of HDRF carry a PSID; any other `Hdrf(λ)` is
+    /// a legal, runnable strategy without a column in the paper's
+    /// tables, so it answers `None` here instead of panicking.
+    pub fn try_psid(&self) -> Option<StrategyId> {
+        Some(match self {
             Strategy::OneDSrc => 0,
             Strategy::OneDDst => 1,
             Strategy::Random => 2,
@@ -101,29 +110,51 @@ impl Strategy {
             Strategy::Hdrf(20) => 8,
             Strategy::Hdrf(50) => 9,
             Strategy::Hdrf(100) => 10,
-            Strategy::Hdrf(l) => panic!("non-inventory HDRF λ={l}"),
+            Strategy::Hdrf(_) => return None,
             Strategy::Ginger => 11,
-        }
+        })
     }
 
-    /// Short name (paper's italic alias).
-    pub fn name(&self) -> String {
+    /// The paper's PSID. Panics on a non-inventory HDRF λ — callers
+    /// that can meet arbitrary strategies route through
+    /// [`Strategy::try_psid`] instead.
+    pub fn psid(&self) -> StrategyId {
+        self.try_psid().unwrap_or_else(|| match self {
+            Strategy::Hdrf(l) => panic!("non-inventory HDRF λ={l}"),
+            _ => unreachable!("every non-HDRF strategy has a PSID"),
+        })
+    }
+
+    /// Short name (paper's italic alias). Static for every variant
+    /// except parameterised HDRF, so the common case allocates nothing.
+    pub fn name(&self) -> Cow<'static, str> {
         match self {
-            Strategy::OneDSrc => "1DSrc".into(),
-            Strategy::OneDDst => "1DDst".into(),
-            Strategy::Random => "Random".into(),
-            Strategy::CanonicalRandom => "Cano".into(),
-            Strategy::TwoD => "2D".into(),
-            Strategy::Hybrid => "Hybrid".into(),
-            Strategy::Oblivious => "Oblivious".into(),
-            Strategy::Hdrf(l) => format!("HDRF{l}"),
-            Strategy::Ginger => "Ginger".into(),
+            Strategy::OneDSrc => Cow::Borrowed("1DSrc"),
+            Strategy::OneDDst => Cow::Borrowed("1DDst"),
+            Strategy::Random => Cow::Borrowed("Random"),
+            Strategy::CanonicalRandom => Cow::Borrowed("Cano"),
+            Strategy::TwoD => Cow::Borrowed("2D"),
+            Strategy::Hybrid => Cow::Borrowed("Hybrid"),
+            Strategy::Oblivious => Cow::Borrowed("Oblivious"),
+            Strategy::Hdrf(l) => Cow::Owned(format!("HDRF{l}")),
+            Strategy::Ginger => Cow::Borrowed("Ginger"),
         }
     }
 
-    /// Parse a strategy from its short name.
+    /// Parse a strategy from its short name. Any `HDRF<λ>` parses —
+    /// non-inventory λ values are legal, runnable strategies (they just
+    /// carry no PSID; see [`Strategy::try_psid`]).
     pub fn by_name(name: &str) -> Option<Strategy> {
-        Self::all().into_iter().find(|s| s.name().eq_ignore_ascii_case(name))
+        let name = name.trim();
+        if let Some(s) = Self::all().into_iter().find(|s| s.name().eq_ignore_ascii_case(name)) {
+            return Some(s);
+        }
+        match name.get(..4) {
+            Some(prefix) if prefix.eq_ignore_ascii_case("hdrf") => {
+                name[4..].parse::<u32>().ok().map(Strategy::Hdrf)
+            }
+            _ => None,
+        }
     }
 
     /// Run the strategy.
@@ -206,7 +237,10 @@ pub(crate) fn worker_of_hash(h: u64, num_workers: usize) -> u16 {
 }
 
 /// Thread-safe cache of partitioning results at a fixed worker count,
-/// keyed by `(graph name, PSID)`.
+/// keyed by `(graph name, strategy)` — the strategy keys directly
+/// (`Copy + Ord`, total for every variant), so probing the cache never
+/// allocates a name and never hits the PSID panic non-inventory HDRF λ
+/// values would cause.
 ///
 /// Corpus construction runs every algorithm over every `(graph,
 /// strategy)` pair; partitioning is the expensive, algorithm-independent
@@ -222,7 +256,7 @@ pub(crate) fn worker_of_hash(h: u64, num_workers: usize) -> u16 {
 /// cache over the `(graph, strategy)` grid before fanning out.
 pub struct PartitionCache {
     num_workers: usize,
-    slots: Mutex<BTreeMap<(String, StrategyId), Arc<Partitioning>>>,
+    slots: Mutex<BTreeMap<(String, Strategy), Arc<Partitioning>>>,
 }
 
 impl PartitionCache {
@@ -240,7 +274,7 @@ impl PartitionCache {
     /// use. The lock is *not* held while partitioning, so independent
     /// keys proceed in parallel.
     pub fn get_or_partition(&self, g: &Graph, s: Strategy) -> Arc<Partitioning> {
-        let key = (g.name.clone(), s.psid());
+        let key = (g.name.clone(), s);
         if let Some(p) = self.slots.lock().unwrap().get(&key) {
             return Arc::clone(p);
         }
@@ -286,6 +320,44 @@ mod tests {
         }
         assert_eq!(Strategy::by_name("hdrf50"), Some(Strategy::Hdrf(50)));
         assert_eq!(Strategy::by_name("bogus"), None);
+    }
+
+    /// Non-inventory HDRF λ values are runnable strategies without a
+    /// PSID: `try_psid` answers `None` (regression — `psid()` used to
+    /// be the only accessor and panicked), the name is still total, and
+    /// the partition cache accepts them.
+    #[test]
+    fn non_inventory_hdrf_lambda_has_no_psid_but_works() {
+        let odd = Strategy::Hdrf(42);
+        assert_eq!(odd.try_psid(), None);
+        assert_eq!(odd.name(), "HDRF42");
+        assert_eq!(Strategy::by_name("HDRF42"), Some(odd));
+        for s in Strategy::all() {
+            assert_eq!(s.try_psid(), Some(s.psid()), "{}", s.name());
+        }
+        // the cache key is the strategy itself (total Ord), so caching
+        // cannot panic
+        let mut rng = crate::util::rng::Rng::new(36);
+        let g = crate::graph::gen::erdos::generate("odd-l", 80, 300, true, &mut rng);
+        let cache = PartitionCache::new(4);
+        let a = cache.get_or_partition(&g, odd);
+        assert_eq!(a.edge_worker, odd.partition(&g, 4).edge_worker);
+        assert!(Arc::ptr_eq(&a, &cache.get_or_partition(&g, odd)));
+        // distinct λ values get distinct cache slots
+        cache.get_or_partition(&g, Strategy::Hdrf(50));
+        assert_eq!(cache.len(), 2);
+    }
+
+    /// `Ord` on Strategy follows (declaration order, λ) — the contract
+    /// the execution-log time index relies on for its map key.
+    #[test]
+    fn strategy_ordering_is_total_and_stable() {
+        assert!(Strategy::OneDSrc < Strategy::OneDDst);
+        assert!(Strategy::Hdrf(10) < Strategy::Hdrf(20));
+        assert!(Strategy::Hdrf(100) < Strategy::Ginger);
+        let mut v = Strategy::inventory();
+        v.sort_unstable();
+        assert_eq!(v, Strategy::inventory(), "inventory is already in Ord order");
     }
 
     #[test]

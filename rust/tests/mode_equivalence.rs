@@ -1,54 +1,82 @@
 //! Execution-mode equivalence: `ExecutionMode::Threaded` (real
-//! thread-per-worker message passing over mpsc channels) must be
+//! thread-per-worker message passing over mpsc channels) **and**
+//! `ExecutionMode::Socket` (one worker process per engine worker over
+//! localhost TCP, envelopes serialized through `engine::wire`) must be
 //! **bit-identical** to `ExecutionMode::Simulated` (the sequential
 //! cost-model oracle) — final vertex values (compared through the
 //! bit-exact `value_hash` digest), the full `OpCounts`, and the
 //! simulated-time label — for every algorithm, across partitioning
 //! strategies and worker counts. This is the property that lets the
-//! simulated labels stand in for measured multi-worker execution.
+//! simulated labels stand in for measured multi-worker execution, and
+//! (for the socket mode) proves the wire format loses no bits.
 
 use gps_select::algorithms::Algorithm;
 use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::transport::socket;
 use gps_select::engine::ExecutionMode;
 use gps_select::graph::Graph;
 use gps_select::partition::Strategy;
 use gps_select::util::rng::Rng;
 
+/// The socket backend spawns worker processes; point it at the repro
+/// CLI, which installs the `--worker-rank` hook (the test binary's
+/// libtest main does not).
+fn use_repro_workers() {
+    socket::set_worker_binary(env!("CARGO_BIN_EXE_repro"));
+}
+
 fn assert_modes_agree(g: &Graph, strategies: &[Strategy], workers: &[usize]) {
+    use_repro_workers();
     for &w in workers {
         let cfg = ClusterConfig::with_workers(w);
         for &s in strategies {
             let p = s.partition(g, w);
             for a in Algorithm::all() {
                 let sim = a.execute(g, &p, &cfg, ExecutionMode::Simulated);
-                let thr = a.execute(g, &p, &cfg, ExecutionMode::Threaded);
-                let ctx = format!("{}/{}/{} at {w} workers", g.name, a.name(), s.name());
-                assert_eq!(
-                    sim.value_hash, thr.value_hash,
-                    "{ctx}: values must be bit-identical"
-                );
-                assert_eq!(sim.ops, thr.ops, "{ctx}: op counts must match");
-                assert_eq!(
-                    sim.sim.total.to_bits(),
-                    thr.sim.total.to_bits(),
-                    "{ctx}: simulated time must be bit-identical ({} vs {})",
-                    sim.sim.total,
-                    thr.sim.total
-                );
-                assert_eq!(
-                    sim.checksum.to_bits(),
-                    thr.checksum.to_bits(),
-                    "{ctx}: checksums must match"
-                );
+                for mode in [ExecutionMode::Threaded, ExecutionMode::Socket] {
+                    let other = a.execute(g, &p, &cfg, mode);
+                    let ctx = format!(
+                        "{}/{}/{} at {w} workers ({} mode)",
+                        g.name,
+                        a.name(),
+                        s.name(),
+                        mode.name()
+                    );
+                    assert_eq!(
+                        sim.value_hash, other.value_hash,
+                        "{ctx}: values must be bit-identical"
+                    );
+                    assert_eq!(sim.ops, other.ops, "{ctx}: op counts must match");
+                    assert_eq!(
+                        sim.sim.total.to_bits(),
+                        other.sim.total.to_bits(),
+                        "{ctx}: simulated time must be bit-identical ({} vs {})",
+                        sim.sim.total,
+                        other.sim.total
+                    );
+                    assert_eq!(
+                        sim.checksum.to_bits(),
+                        other.checksum.to_bits(),
+                        "{ctx}: checksums must match"
+                    );
+                    // the measured label is present in every mode (and
+                    // is the one field allowed to differ)
+                    assert!(
+                        other.wall_clock_ms > 0.0 && other.wall_clock_ms.is_finite(),
+                        "{ctx}: wall clock {}",
+                        other.wall_clock_ms
+                    );
+                }
             }
         }
     }
 }
 
 /// All 8 algorithms × 3 strategies × {1, 2, 4} workers on a directed
-/// power-law graph — the full acceptance matrix.
+/// power-law graph, across **all three** execution modes — the full
+/// acceptance matrix.
 #[test]
-fn threaded_is_bit_identical_to_simulated_directed() {
+fn threaded_and_socket_are_bit_identical_to_simulated_directed() {
     let mut rng = Rng::new(4242);
     let g = gps_select::graph::gen::chung_lu::generate("mode-eq-d", 400, 2400, 2.2, true, &mut rng);
     assert_modes_agree(
@@ -62,7 +90,7 @@ fn threaded_is_bit_identical_to_simulated_directed() {
 /// semantics differ from the directed case) and a different strategy
 /// slice, including the degree-differentiated Hybrid cut.
 #[test]
-fn threaded_is_bit_identical_to_simulated_undirected() {
+fn threaded_and_socket_are_bit_identical_to_simulated_undirected() {
     let mut rng = Rng::new(4243);
     let g = gps_select::graph::gen::erdos::generate("mode-eq-u", 300, 1500, false, &mut rng);
     assert_modes_agree(&g, &[Strategy::Hybrid, Strategy::Ginger, Strategy::OneDDst], &[2, 4]);

@@ -1,0 +1,138 @@
+//! Wire-format property test: `Envelope → bytes → Envelope` round-trips
+//! **bit-exactly** for every `Msg` variant, over randomized payloads and
+//! the real payload type shapes of the algorithm inventory (scalar f64,
+//! i64 values, and the `(Vec<u32>, f64)` neighbour-list accumulators of
+//! GC/TC/CC/APCN). Digests are compared through `Payload::fold_bits`,
+//! the same bit-exactness notion the mode-equivalence guarantee is
+//! stated over.
+
+use gps_select::algorithms::coloring::GreedyColoring;
+use gps_select::algorithms::pagerank::PageRank;
+use gps_select::algorithms::triangle::TriangleCount;
+use gps_select::engine::gas::{Payload, VertexProgram};
+use gps_select::engine::msg::{Envelope, Msg};
+use gps_select::engine::wire;
+use gps_select::util::rng::{Rng, FNV1A64_OFFSET};
+
+/// Round-trip one envelope and return the decoded copy, asserting the
+/// encoding consumed exactly and the addressing survived.
+fn roundtrip<P: VertexProgram>(e: &Envelope<P>) -> Envelope<P> {
+    let mut buf = Vec::new();
+    wire::encode_envelope(e, &mut buf);
+    let mut r = wire::Reader::new(&buf);
+    let got = wire::decode_envelope::<P>(&mut r).expect("decode");
+    r.finish().expect("no trailing bytes");
+    assert_eq!(got.from, e.from);
+    assert_eq!(got.to, e.to);
+    got
+}
+
+fn digest<P: VertexProgram>(m: &Msg<P>) -> u64 {
+    match m {
+        Msg::GatherPartial { v, partial } => partial.fold_bits(v.fold_bits(FNV1A64_OFFSET)),
+        Msg::ValueUpdate { v, value } => value.fold_bits(v.fold_bits(FNV1A64_OFFSET)),
+        Msg::ResultEmit { bytes } => (*bytes as u64 as f64).fold_bits(FNV1A64_OFFSET),
+        Msg::Activate { v } => v.fold_bits(FNV1A64_OFFSET),
+    }
+}
+
+fn assert_bits_survive<P: VertexProgram>(e: &Envelope<P>) {
+    let got = roundtrip(e);
+    assert_eq!(std::mem::discriminant(&got.msg), std::mem::discriminant(&e.msg));
+    assert_eq!(digest(&got.msg), digest(&e.msg), "payload bits must survive the wire");
+}
+
+/// Adversarial f64 bit patterns the textual formats would mangle.
+fn nasty_f64(rng: &mut Rng, i: usize) -> f64 {
+    match i % 6 {
+        0 => -0.0,
+        1 => f64::MIN_POSITIVE / 2.0, // subnormal
+        2 => f64::INFINITY,
+        3 => f64::from_bits(0x7ff8_0000_0000_1234), // NaN with payload bits
+        4 => rng.next_f64() * 1e300,
+        _ => -rng.next_f64() / 1e300,
+    }
+}
+
+/// Scalar-f64 programs (PR/AID/AOD/RW shape): every variant, random and
+/// adversarial payload bits.
+#[test]
+fn envelope_roundtrip_scalar_f64_program() {
+    let mut rng = Rng::new(0x51f7);
+    for i in 0..500 {
+        let from = rng.gen_range(64) as u16;
+        let to = rng.gen_range(64) as u16;
+        let v = rng.gen_range(100_000) as u32;
+        let x = nasty_f64(&mut rng, i);
+        let cases: Vec<Envelope<PageRank>> = vec![
+            Envelope { from, to, msg: Msg::GatherPartial { v, partial: x } },
+            Envelope { from, to, msg: Msg::ValueUpdate { v, value: x } },
+            Envelope { from, to, msg: Msg::ResultEmit { bytes: rng.gen_range(1 << 20) } },
+            Envelope { from, to, msg: Msg::Activate { v } },
+        ];
+        for e in &cases {
+            assert_bits_survive(e);
+        }
+    }
+}
+
+/// Neighbour-list programs (TC/CC/APCN shape): `(Vec<u32>, f64)` values
+/// and accumulators of random lengths, including empty.
+#[test]
+fn envelope_roundtrip_list_program() {
+    let mut rng = Rng::new(0x7c11);
+    for i in 0..300 {
+        let len = rng.gen_range(40);
+        let list: Vec<u32> = (0..len).map(|_| rng.gen_range(1 << 24) as u32).collect();
+        let pair = (list, nasty_f64(&mut rng, i));
+        let e: Envelope<TriangleCount> = Envelope {
+            from: rng.gen_range(16) as u16,
+            to: rng.gen_range(16) as u16,
+            msg: Msg::GatherPartial { v: rng.gen_range(5000) as u32, partial: pair.clone() },
+        };
+        assert_bits_survive(&e);
+        let e: Envelope<TriangleCount> = Envelope {
+            from: 1,
+            to: 2,
+            msg: Msg::ValueUpdate { v: 9, value: pair },
+        };
+        assert_bits_survive(&e);
+    }
+}
+
+/// Mixed-type program (GC: i64 values, list accumulators) — the variant
+/// matrix again under a third type shape, plus negative i64 values.
+#[test]
+fn envelope_roundtrip_mixed_program() {
+    let mut rng = Rng::new(0x6c0c);
+    for _ in 0..300 {
+        let value = (rng.next_u64() as i64).wrapping_sub(i64::MAX / 2);
+        let e: Envelope<GreedyColoring> =
+            Envelope { from: 0, to: 1, msg: Msg::ValueUpdate { v: 3, value } };
+        assert_bits_survive(&e);
+        let acc = ((0..rng.gen_range(10)).map(|_| rng.gen_range(999) as u32).collect(), -1.5);
+        let e: Envelope<GreedyColoring> =
+            Envelope { from: 3, to: 0, msg: Msg::GatherPartial { v: 8, partial: acc } };
+        assert_bits_survive(&e);
+    }
+}
+
+/// Truncating an encoded envelope anywhere must produce a decode error,
+/// never a panic or a silently short value.
+#[test]
+fn truncated_envelopes_error_cleanly() {
+    let e: Envelope<TriangleCount> = Envelope {
+        from: 1,
+        to: 2,
+        msg: Msg::GatherPartial { v: 5, partial: (vec![1, 2, 3, 4], 0.25) },
+    };
+    let mut buf = Vec::new();
+    wire::encode_envelope(&e, &mut buf);
+    for cut in 0..buf.len() {
+        let mut r = wire::Reader::new(&buf[..cut]);
+        assert!(
+            wire::decode_envelope::<TriangleCount>(&mut r).is_err(),
+            "decode of a {cut}-byte prefix must fail"
+        );
+    }
+}
