@@ -5,8 +5,16 @@
 //! train step when artifacts are available.
 //!
 //! ```bash
-//! cargo run --release --example train_etrm -- [--scale 0.02] [--cap 20000]
+//! cargo run --release --example train_etrm -- [--scale 0.02] [--cap 20000] \
+//!     [--label sim_time|wall_clock] [--model-out m.etrm]
 //! ```
+//!
+//! `--label wall_clock` trains every backend on the measured
+//! wall-clock column instead of the simulated oracle (regression
+//! metrics are then reported against that channel, while selection
+//! quality is still scored on the oracle, the reproducible ground
+//! truth). `--model-out` persists the GBDT via the model store; serve
+//! it later with `repro select --model`.
 
 use gps_select::dataset::augment::augment;
 use gps_select::dataset::logs::LogStore;
@@ -18,11 +26,12 @@ use gps_select::features::TaskFeatures;
 use gps_select::ml::gbdt::GbdtParams;
 use gps_select::ml::metrics::{r2, rmse, spearman};
 use gps_select::ml::mlp::MlpParams;
+use gps_select::ml::Label;
 use gps_select::partition::Strategy;
 use gps_select::util::cli::Args;
 use gps_select::util::error::Result;
 
-fn evaluate(etrm: &Etrm, store: &LogStore, label: &str) {
+fn evaluate(etrm: &Etrm, store: &LogStore, name: &str) {
     let mut preds = Vec::new();
     let mut truths = Vec::new();
     let mut score_best = Vec::new();
@@ -34,13 +43,21 @@ fn evaluate(etrm: &Etrm, store: &LogStore, label: &str) {
             .find(|l| l.graph == t.graph && l.algorithm == t.algorithm.name())
             .unwrap();
         let task: &TaskFeatures = &log.features;
-        let times: Vec<(Strategy, f64)> = Strategy::inventory()
-            .into_iter()
-            .map(|s| (s, store.time_of(t.graph, t.algorithm.name(), s).unwrap()))
-            .collect();
-        for (s, y) in &times {
-            preds.push(etrm.predict(task, *s));
-            truths.push(*y);
+        // one log lookup per strategy feeds both judgements:
+        // regression quality on the channel the model was trained on,
+        // selection quality always on the simulated oracle
+        let mut times: Vec<(Strategy, f64)> = Vec::with_capacity(11);
+        for s in Strategy::inventory() {
+            let log = store
+                .logs
+                .iter()
+                .find(|l| {
+                    l.graph == t.graph && l.algorithm == t.algorithm.name() && l.strategy == s
+                })
+                .unwrap();
+            preds.push(etrm.predict(task, s));
+            truths.push(log.label_value(etrm.label));
+            times.push((s, log.time));
         }
         let selected = etrm.select(task);
         let t_sel = times.iter().find(|(s, _)| *s == selected).unwrap().1;
@@ -52,7 +69,7 @@ fn evaluate(etrm: &Etrm, store: &LogStore, label: &str) {
     }
     let mean_best = score_best.iter().sum::<f64>() / score_best.len() as f64;
     println!(
-        "{label:<8} rmse={:<12.6} r2={:<8.3} spearman={:<6.3} Score_best={:.4} best-pick={}/96",
+        "{name:<8} rmse={:<12.6} r2={:<8.3} spearman={:<6.3} Score_best={:.4} best-pick={}/96",
         rmse(&preds, &truths),
         r2(&preds, &truths),
         spearman(&preds, &truths),
@@ -70,31 +87,59 @@ fn main() -> Result<()> {
     let scale = args.get_f64("scale", 0.02)?;
     let seed = args.get_u64("seed", 42)?;
     let cap = args.get_usize("cap", 20_000)?;
+    let label = Label::resolve(args.get("label"))?;
     let cfg = ClusterConfig::with_workers(args.get_usize("workers", 64)?);
 
     eprintln!("building corpus at scale {scale}…");
     let store = LogStore::build_corpus(scale, seed, &cfg)?;
     let synthetic = augment(&store, 2..=9, Some(cap), seed);
-    println!("corpus: {} real logs, {} synthetic tuples\n", store.logs.len(), synthetic.len());
+    println!(
+        "corpus: {} real logs, {} synthetic tuples ({} label)\n",
+        store.logs.len(),
+        synthetic.len(),
+        label.name()
+    );
 
     println!("model comparison on the 96-task split (lower rmse / higher rest = better):");
     let gbdt = Etrm::train_gbdt(
         &synthetic,
         GbdtParams { n_estimators: 250, max_depth: 10, ..GbdtParams::paper() },
+        label,
     );
     evaluate(&gbdt, &store, "gbdt");
-    let ridge = Etrm::train_ridge(&synthetic, 1.0);
+    let ridge = Etrm::train_ridge(&synthetic, 1.0, label);
     evaluate(&ridge, &store, "ridge");
     let mlp = Etrm::train_mlp(
         &synthetic,
         MlpParams { epochs: 30, ..Default::default() },
+        label,
     );
     evaluate(&mlp, &store, "mlp");
+
+    // train-once / serve-many: persist the GBDT through the model
+    // store and prove the reloaded artifact predicts bit-identically
+    if let Some(path) = args.get("model-out") {
+        let path = std::path::Path::new(path);
+        gps_select::etrm::store::save(&gbdt, path)?;
+        let loaded = gps_select::etrm::store::load(path)?;
+        let probe = &store.logs[0];
+        let a = gbdt.predict_all(&probe.features);
+        let b = loaded.predict_all(&probe.features);
+        assert!(
+            a.iter().zip(&b).all(|((_, x), (_, y))| x.to_bits() == y.to_bits()),
+            "reloaded artifact must predict bit-identically"
+        );
+        println!(
+            "\nmodel artifact: saved + reloaded {} ({} label), predictions bit-identical ✓",
+            path.display(),
+            loaded.label.name()
+        );
+    }
 
     // the AOT-compiled MLP train step (PJRT) doing real optimisation
     if let Some(rt) = gps_select::runtime::Runtime::try_default() {
         use gps_select::etrm::model::encode_logs;
-        let train = encode_logs(&synthetic);
+        let train = encode_logs(&synthetic, label);
         let batch = rt.manifest.mlp_batch;
         let mut model = gps_select::ml::mlp::Mlp::new(
             train.dim(),

@@ -162,6 +162,42 @@ mod tests {
         assert_eq!(combinations_with_replacement(6, 9), 2002);
     }
 
+    /// Degenerate sizes: one empty multiset at r = 0, the n singletons
+    /// at r = 1, and a single repeated element when n = 1 — each
+    /// agreeing with C^R(n, r).
+    #[test]
+    fn multisets_degenerate_sizes() {
+        assert_eq!(multisets(6, 0), vec![Vec::<usize>::new()]);
+        assert_eq!(combinations_with_replacement(6, 0), 1);
+        let singletons: Vec<Vec<usize>> = (0..6).map(|i| vec![i]).collect();
+        assert_eq!(multisets(6, 1), singletons);
+        assert_eq!(combinations_with_replacement(6, 1), 6);
+        assert_eq!(multisets(1, 4), vec![vec![0, 0, 0, 0]]);
+        assert_eq!(combinations_with_replacement(1, 4), 1);
+    }
+
+    /// The full paper range r = 2..9 over 6 algorithms: every size's
+    /// enumeration count matches C^R(6, r), the order is strictly
+    /// lexicographic, and the grand total is Eq. 3's 4 998.
+    #[test]
+    fn full_enumeration_matches_eq3_and_is_lexicographic() {
+        let mut total = 0usize;
+        for r in 2..=9usize {
+            let ms = multisets(6, r);
+            assert_eq!(
+                ms.len() as u64,
+                combinations_with_replacement(6, r as u64),
+                "count at r={r}"
+            );
+            assert!(
+                ms.windows(2).all(|w| w[0] < w[1]),
+                "enumeration at r={r} is not strictly lexicographic"
+            );
+            total += ms.len();
+        }
+        assert_eq!(total, 4998);
+    }
+
     #[test]
     fn multisets_enumeration() {
         let ms = multisets(3, 2);

@@ -54,7 +54,7 @@ use crate::features::data::MomentFeatures;
 use crate::features::{DataFeatures, TaskFeatures};
 use crate::partition::Strategy;
 use crate::util::error::{bail, ensure, Context, Result};
-use crate::util::fsio;
+use crate::util::fsio::{self, f64_hex, parse_f64_hex};
 use crate::util::rng::fnv1a64;
 
 use super::logs::ExecutionLog;
@@ -232,15 +232,6 @@ impl CheckpointStore {
 // ---------------------------------------------------------------------
 // shard serialization
 // ---------------------------------------------------------------------
-
-fn f64_hex(x: f64) -> String {
-    format!("{:016x}", x.to_bits())
-}
-
-fn parse_f64_hex(s: &str) -> Result<f64> {
-    let bits = u64::from_str_radix(s, 16).with_context(|| format!("bad f64 bit pattern {s:?}"))?;
-    Ok(f64::from_bits(bits))
-}
 
 fn render_moments(m: &MomentFeatures, out: &mut String) {
     for x in [m.mean, m.std, m.skewness, m.kurtosis] {

@@ -28,6 +28,7 @@ use crate::engine::cost::ClusterConfig;
 use crate::engine::ExecutionMode;
 use crate::features::{DataFeatures, TaskFeatures};
 use crate::graph::Graph;
+use crate::ml::Label;
 use crate::partition::{PartitionCache, Partitioning, Strategy};
 use crate::util::error::{bail, ensure, Context, Result};
 use crate::util::pool;
@@ -54,6 +55,19 @@ pub struct ExecutionLog {
     /// resumed checkpoints restore the value measured when the task
     /// actually ran.
     pub wall_clock_ms: f64,
+}
+
+impl ExecutionLog {
+    /// The training-label value of this log under one channel: the
+    /// simulated oracle (seconds) or the measured wall clock
+    /// (milliseconds). The ETRM trainers consume logs through this
+    /// accessor, so both channels flow through one code path.
+    pub fn label_value(&self, label: Label) -> f64 {
+        match label {
+            Label::SimTime => self.time,
+            Label::WallClock => self.wall_clock_ms,
+        }
+    }
 }
 
 /// A collection of logs plus the per-graph data features.
@@ -593,6 +607,11 @@ mod tests {
         assert!(store.logs.iter().all(|l| l.time > 0.0));
         // every task carries the measured wall-clock label channel
         assert!(store.logs.iter().all(|l| l.wall_clock_ms > 0.0 && l.wall_clock_ms.is_finite()));
+        // the label accessor exposes exactly the two channels
+        for l in &store.logs {
+            assert_eq!(l.label_value(Label::SimTime).to_bits(), l.time.to_bits());
+            assert_eq!(l.label_value(Label::WallClock).to_bits(), l.wall_clock_ms.to_bits());
+        }
     }
 
     /// `times_of_task` must cover the whole inventory or error — a

@@ -93,4 +93,34 @@ mod tests {
         assert_eq!(classify("wiki", Algorithm::Cc), TestSet::C);
         assert_eq!(classify("wiki", Algorithm::Pr), TestSet::D);
     }
+
+    /// Exhaustive: every (graph, algorithm) cell of the 12 × 8 corpus
+    /// grid lands in the set its held-out membership dictates, all four
+    /// sets are hit, and the per-set counts are the §5.4 cardinalities.
+    #[test]
+    fn classify_covers_every_cell_and_all_four_sets() {
+        use std::collections::BTreeMap;
+        let mut seen: BTreeMap<TestSet, usize> = BTreeMap::new();
+        for spec in datasets::CORPUS {
+            for a in Algorithm::all() {
+                let set = classify(spec.name, a);
+                let expect = match (
+                    datasets::heldout_graphs().contains(&spec.name),
+                    Algorithm::heldout().contains(&a),
+                ) {
+                    (true, true) => TestSet::A,
+                    (true, false) => TestSet::B,
+                    (false, true) => TestSet::C,
+                    (false, false) => TestSet::D,
+                };
+                assert_eq!(set, expect, "{}/{}", spec.name, a.name());
+                *seen.entry(set).or_insert(0) += 1;
+            }
+        }
+        assert_eq!(seen.len(), 4, "all four test sets must occur");
+        assert_eq!(seen[&TestSet::A], 8);
+        assert_eq!(seen[&TestSet::B], 24);
+        assert_eq!(seen[&TestSet::C], 16);
+        assert_eq!(seen[&TestSet::D], 48);
+    }
 }

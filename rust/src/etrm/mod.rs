@@ -1,8 +1,11 @@
 //! The Execution Time Regression Model and strategy selector
-//! (§4.2, Fig 2 steps 3-5).
+//! (§4.2, Fig 2 steps 3-5), plus the persistent model store that
+//! splits the lifecycle into train-once ([`store::save`]) and
+//! serve-many ([`store::load`] + [`Etrm::select_batch`]).
 
 pub mod model;
 pub mod scores;
+pub mod store;
 
-pub use model::{Etrm, EtrmBackend};
+pub use model::{encode_logs, Etrm, EtrmBackend};
 pub use scores::{rank_of_selected, TaskScores};

@@ -4,17 +4,25 @@
 //! candidate strategy (one-hot), the regressor predicts each
 //! strategy's execution time ŷ_pⱼ, and the selector returns the argmin
 //! (step 4). Training consumes execution logs — usually the augmented
-//! synthetic set (§4.2.1).
+//! synthetic set (§4.2.1) — on a chosen [`Label`] channel: the
+//! simulated cost-model oracle or the measured wall-clock column.
+//!
+//! Prediction is allocation-free on the hot path: all 11 candidate
+//! encodings of a task are written into one reused stack buffer
+//! ([`encode_into`]), and [`Etrm::select_batch`] fans tasks out over
+//! the scoped worker pool for the serve-many half of the lifecycle.
+//! Trained models persist to disk through [`crate::etrm::store`].
 
 use std::time::Instant;
 
 use crate::dataset::logs::ExecutionLog;
-use crate::features::{encode, TaskFeatures};
+use crate::features::{encode_into, TaskFeatures, FEATURE_DIM};
 use crate::ml::gbdt::{Gbdt, GbdtParams};
 use crate::ml::linear::Ridge;
 use crate::ml::mlp::{Mlp, MlpParams};
-use crate::ml::{Regressor, TrainSet};
+use crate::ml::{Label, Regressor, TrainSet};
 use crate::partition::Strategy;
+use crate::util::pool;
 
 /// The regression backend behind the ETRM.
 pub enum EtrmBackend {
@@ -25,7 +33,9 @@ pub enum EtrmBackend {
     /// MLP baseline.
     Mlp(Mlp),
     /// Any external regressor (e.g. the PJRT AOT inference path).
-    External(Box<dyn Regressor>),
+    /// Thread-safe by bound, so batched selection can fan out over the
+    /// worker pool regardless of backend.
+    External(Box<dyn Regressor + Send + Sync>),
 }
 
 impl EtrmBackend {
@@ -37,55 +47,118 @@ impl EtrmBackend {
             EtrmBackend::External(m) => m.as_ref(),
         }
     }
+
+    /// Short backend name (the `backend` field of model artifacts).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EtrmBackend::Gbdt(_) => "gbdt",
+            EtrmBackend::Ridge(_) => "ridge",
+            EtrmBackend::Mlp(_) => "mlp",
+            EtrmBackend::External(_) => "external",
+        }
+    }
 }
 
 /// A trained Execution Time Regression Model.
 pub struct Etrm {
     pub backend: EtrmBackend,
+    /// The [`Label`] channel this model was trained on. Recorded into
+    /// saved artifacts; serving can demand a specific channel so a
+    /// sim-trained model is never silently used for measured-label
+    /// predictions (or vice versa).
+    pub label: Label,
 }
 
-/// Build the encoded training set from logs.
-pub fn encode_logs(logs: &[ExecutionLog]) -> TrainSet {
-    let mut train = TrainSet::default();
+/// Build the encoded training set from logs on one label channel.
+pub fn encode_logs(logs: &[ExecutionLog], label: Label) -> TrainSet {
+    let mut train = TrainSet { label, ..TrainSet::default() };
     for l in logs {
-        train.push(encode(&l.features, l.strategy).to_vec(), l.time);
+        let row = crate::features::encode(&l.features, l.strategy).to_vec();
+        train.push(row, l.label_value(label));
     }
     train
 }
 
 impl Etrm {
     /// Train the paper's XGBoost-style model on execution logs.
-    pub fn train_gbdt(logs: &[ExecutionLog], params: GbdtParams) -> Self {
-        Etrm { backend: EtrmBackend::Gbdt(Gbdt::fit(&encode_logs(logs), params)) }
+    pub fn train_gbdt(logs: &[ExecutionLog], params: GbdtParams, label: Label) -> Self {
+        Etrm { backend: EtrmBackend::Gbdt(Gbdt::fit(&encode_logs(logs, label), params)), label }
     }
 
     /// Train the ridge baseline.
-    pub fn train_ridge(logs: &[ExecutionLog], lambda: f64) -> Self {
-        Etrm { backend: EtrmBackend::Ridge(Ridge::fit(&encode_logs(logs), lambda, true)) }
+    pub fn train_ridge(logs: &[ExecutionLog], lambda: f64, label: Label) -> Self {
+        Etrm {
+            backend: EtrmBackend::Ridge(Ridge::fit(&encode_logs(logs, label), lambda, true)),
+            label,
+        }
     }
 
     /// Train the MLP baseline.
-    pub fn train_mlp(logs: &[ExecutionLog], params: MlpParams) -> Self {
-        Etrm { backend: EtrmBackend::Mlp(Mlp::fit(&encode_logs(logs), params)) }
+    pub fn train_mlp(logs: &[ExecutionLog], params: MlpParams, label: Label) -> Self {
+        Etrm { backend: EtrmBackend::Mlp(Mlp::fit(&encode_logs(logs, label), params)), label }
     }
 
     /// Predicted execution time of one task under one strategy.
     pub fn predict(&self, task: &TaskFeatures, strategy: Strategy) -> f64 {
-        self.backend.regressor().predict(&encode(task, strategy))
+        let mut buf = [0.0; FEATURE_DIM];
+        encode_into(task, strategy, &mut buf);
+        self.backend.regressor().predict(&buf)
     }
 
-    /// Ŷ over the full 11-strategy inventory (Fig 2 step 3).
+    /// Ŷ over the full 11-strategy inventory (Fig 2 step 3). The
+    /// candidate encodings reuse one stack buffer; only the returned
+    /// vector allocates.
     pub fn predict_all(&self, task: &TaskFeatures) -> Vec<(Strategy, f64)> {
-        Strategy::inventory().into_iter().map(|s| (s, self.predict(task, s))).collect()
+        let mut buf = [0.0; FEATURE_DIM];
+        let reg = self.backend.regressor();
+        Strategy::INVENTORY
+            .iter()
+            .map(|&s| {
+                encode_into(task, s, &mut buf);
+                (s, reg.predict(&buf))
+            })
+            .collect()
     }
 
     /// Select the strategy with the fastest predicted time (step 4).
+    ///
+    /// NaN-safe, total argmin: a NaN prediction is treated as "worse
+    /// than everything" and can never be selected; ties keep the
+    /// earlier inventory strategy (strict `<` comparison), so the
+    /// result is deterministic for *any* regressor output. If every
+    /// prediction is NaN the first inventory strategy is returned —
+    /// a defined fallback instead of the old `partial_cmp().unwrap()`
+    /// panic.
     pub fn select(&self, task: &TaskFeatures) -> Strategy {
-        self.predict_all(task)
-            .into_iter()
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-            .map(|(s, _)| s)
-            .expect("non-empty inventory")
+        let mut buf = [0.0; FEATURE_DIM];
+        let reg = self.backend.regressor();
+        let mut best: Option<(Strategy, f64)> = None;
+        for s in Strategy::INVENTORY {
+            encode_into(task, s, &mut buf);
+            let t = reg.predict(&buf);
+            if t.is_nan() {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((_, bt)) => t < bt,
+            };
+            if better {
+                best = Some((s, t));
+            }
+        }
+        best.map(|(s, _)| s).unwrap_or(Strategy::INVENTORY[0])
+    }
+
+    /// Batched selection — the serve-many entry point. Tasks fan out
+    /// over the scoped worker pool ([`crate::util::pool`]), one
+    /// selection per task, each pool thread reusing its own stack
+    /// encoding buffer. `threads == 0` means the `GPS_THREADS` default;
+    /// output is identical to calling [`Etrm::select`] sequentially,
+    /// for any thread count.
+    pub fn select_batch(&self, tasks: &[TaskFeatures], threads: usize) -> Vec<Strategy> {
+        let threads = pool::resolve_threads(threads);
+        pool::parallel_map(threads, tasks.len(), |i| self.select(&tasks[i]))
     }
 
     /// Select and report the wall-clock selection latency (the
@@ -132,6 +205,7 @@ mod tests {
                 reg_alpha: 0.0,
                 ..GbdtParams::fast()
             },
+            Label::SimTime,
         );
         for (graph, algo) in [("wiki", Algorithm::Pr), ("epinions", Algorithm::Tc)] {
             let task = store
@@ -163,12 +237,44 @@ mod tests {
         store
             .record_graph(&g, &[Algorithm::Aid], &Strategy::inventory(), &cfg)
             .unwrap();
-        let etrm = Etrm::train_ridge(&store.logs, 1.0);
+        let etrm = Etrm::train_ridge(&store.logs, 1.0, Label::SimTime);
+        assert_eq!(etrm.label, Label::SimTime);
+        assert_eq!(etrm.backend.name(), "ridge");
         let preds = etrm.predict_all(&store.logs[0].features);
         assert_eq!(preds.len(), 11);
         assert!(preds.iter().all(|(_, t)| t.is_finite()));
         let (s, dt) = etrm.select_timed(&store.logs[0].features);
         assert!(Strategy::inventory().contains(&s));
         assert!(dt >= 0.0 && dt < 1.0);
+        // the buffer-reuse predict path agrees with predict_all
+        for (strategy, t) in &preds {
+            assert_eq!(
+                etrm.predict(&store.logs[0].features, *strategy).to_bits(),
+                t.to_bits()
+            );
+        }
+    }
+
+    /// Both label channels flow through the same trainer path and
+    /// produce genuinely different training targets.
+    #[test]
+    fn label_channels_select_different_targets() {
+        let cfg = ClusterConfig::with_workers(4);
+        let mut store = LogStore::default();
+        let g = DatasetSpec::by_name("wiki").unwrap().build(0.01, 5);
+        store
+            .record_graph(&g, &[Algorithm::Aid, Algorithm::Pr], &Strategy::inventory(), &cfg)
+            .unwrap();
+        let sim = encode_logs(&store.logs, Label::SimTime);
+        let wall = encode_logs(&store.logs, Label::WallClock);
+        assert_eq!(sim.label, Label::SimTime);
+        assert_eq!(wall.label, Label::WallClock);
+        assert_eq!(sim.len(), wall.len());
+        assert_eq!(sim.x, wall.x, "features are label-independent");
+        assert_ne!(sim.y, wall.y, "oracle seconds vs measured milliseconds");
+        assert!(wall.y.iter().all(|&v| v > 0.0 && v.is_finite()));
+        let etrm = Etrm::train_ridge(&store.logs, 1.0, Label::WallClock);
+        assert_eq!(etrm.label, Label::WallClock);
+        assert!(Strategy::inventory().contains(&etrm.select(&store.logs[0].features)));
     }
 }

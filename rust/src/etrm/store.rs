@@ -1,0 +1,271 @@
+//! Persistent ETRM model artifacts — train once, serve many.
+//!
+//! A trained model ([`Etrm`]) serializes to a single checksummed text
+//! file so the expensive half of the pipeline (corpus → augmentation →
+//! training) runs once and every later process serves selections from
+//! the saved artifact, bit-identically. The format follows the repo's
+//! persistence conventions: every `f64` is an exact bit pattern
+//! ([`crate::util::fsio::f64_hex`]), the file ends in an FNV-1a
+//! checksum footer covering every preceding byte, and commits go
+//! through the atomic write-temp-then-rename helper
+//! ([`crate::util::fsio::write_atomic`]).
+//!
+//! ```text
+//! gps-etrm v1                     format magic + version
+//! label sim_time                  training-label channel
+//! feature-dim 52                  encoded input width
+//! opkeys NUM_VERTEX,…             algorithm-feature schema
+//! strategies 0:1DSrc,…,11:Ginger  strategy inventory (PSID:name)
+//! backend gbdt                    regressor family
+//! …backend body…                  params + weights/trees (exact bits)
+//! checksum 0123456789abcdef       FNV-1a over everything above
+//! ```
+//!
+//! **The manifest header fingerprints everything the encoding depends
+//! on**: a model trained under a different feature schema
+//! (`NUM_OP_KEYS`/[`FEATURE_DIM`]) or strategy inventory is *rejected*
+//! on load with a clear error — never silently misused with
+//! misaligned one-hot columns. The training-label channel and the full
+//! training configuration (the backend's hyper-parameters) are
+//! recorded too, so serving can demand a specific channel
+//! ([`load_expecting`]) and a loaded model is a faithful, auditable
+//! copy of the one that was trained. Truncated or bit-rotted files
+//! fail the checksum before any field is interpreted.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::etrm::{Etrm, EtrmBackend};
+use crate::features::{TaskFeatures, FEATURE_DIM};
+use crate::ml::codec::{take, values};
+use crate::ml::gbdt::Gbdt;
+use crate::ml::linear::Ridge;
+use crate::ml::mlp::Mlp;
+use crate::ml::Label;
+use crate::partition::Strategy;
+use crate::util::error::{bail, ensure, Context, Result};
+use crate::util::fsio;
+use crate::util::rng::fnv1a64;
+
+/// On-disk format version; bumped on any layout change so stale
+/// artifacts are rejected by the header line instead of misparsed.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// The algorithm-feature schema fingerprint: the full ordered
+/// [`crate::analyzer::OpKey`] roster.
+fn schema_opkeys() -> String {
+    let names: Vec<&str> = crate::analyzer::OpKey::all().iter().map(|k| k.name()).collect();
+    names.join(",")
+}
+
+/// The strategy-inventory fingerprint (`psid:name`, inventory order) —
+/// the one-hot columns of the encoding depend on exactly this list.
+fn schema_strategies() -> String {
+    let entries: Vec<String> =
+        Strategy::inventory().iter().map(|s| format!("{}:{}", s.psid(), s.name())).collect();
+    entries.join(",")
+}
+
+/// Render the full artifact text for a trained model. The `External`
+/// backend wraps an opaque foreign regressor and has no serialization.
+pub fn render(etrm: &Etrm) -> Result<String> {
+    let mut out = String::new();
+    writeln!(out, "gps-etrm v{FORMAT_VERSION}").unwrap();
+    writeln!(out, "label {}", etrm.label.name()).unwrap();
+    writeln!(out, "feature-dim {FEATURE_DIM}").unwrap();
+    writeln!(out, "opkeys {}", schema_opkeys()).unwrap();
+    writeln!(out, "strategies {}", schema_strategies()).unwrap();
+    match &etrm.backend {
+        EtrmBackend::Gbdt(m) => {
+            writeln!(out, "backend gbdt").unwrap();
+            m.encode(&mut out);
+        }
+        EtrmBackend::Ridge(m) => {
+            writeln!(out, "backend ridge").unwrap();
+            m.encode(&mut out);
+        }
+        EtrmBackend::Mlp(m) => {
+            writeln!(out, "backend mlp").unwrap();
+            m.encode(&mut out);
+        }
+        EtrmBackend::External(_) => bail!(
+            "an External ETRM backend wraps an opaque regressor and cannot be serialized; \
+             only gbdt/ridge/mlp models have artifacts"
+        ),
+    }
+    let sum = fnv1a64(out.as_bytes());
+    writeln!(out, "checksum {sum:016x}").unwrap();
+    Ok(out)
+}
+
+/// Atomically commit a trained model to `path`.
+pub fn save(etrm: &Etrm, path: &Path) -> Result<()> {
+    fsio::write_atomic(path, render(etrm)?.as_bytes())
+        .with_context(|| format!("commit model artifact {}", path.display()))
+}
+
+/// Parse an artifact text back into a trained model, verifying the
+/// checksum and the schema/inventory manifest against *this* build.
+pub fn parse(text: &str) -> Result<Etrm> {
+    // the checksum footer covers every byte before it — verify first,
+    // so no corrupted field is ever interpreted
+    let pos = text
+        .rfind("\nchecksum ")
+        .context("missing checksum footer (truncated or partial write)")?;
+    let payload = &text[..pos + 1];
+    let footer = text[pos + 1..].trim_end();
+    let stored = footer.strip_prefix("checksum ").context("malformed checksum footer")?;
+    let actual = format!("{:016x}", fnv1a64(payload.as_bytes()));
+    ensure!(
+        stored == actual,
+        "checksum mismatch: footer says {stored}, content hashes to {actual}"
+    );
+
+    let mut lines = payload.lines();
+    let magic = take(&mut lines, "header")?;
+    ensure!(
+        magic == format!("gps-etrm v{FORMAT_VERSION}"),
+        "unsupported model artifact header {magic:?} (expected gps-etrm v{FORMAT_VERSION})"
+    );
+    let v = values(take(&mut lines, "label")?, "label", 1)?;
+    let label = Label::by_name(v[0])
+        .with_context(|| format!("unknown label channel {:?} in model artifact", v[0]))?;
+    let v = values(take(&mut lines, "feature-dim")?, "feature-dim", 1)?;
+    let dim: usize = v[0].parse().context("feature-dim")?;
+    ensure!(
+        dim == FEATURE_DIM,
+        "model artifact was built for feature dimension {dim}, but this build encodes \
+         {FEATURE_DIM} columns: the feature schema changed — retrain the model"
+    );
+    let v = values(take(&mut lines, "opkeys")?, "opkeys", 1)?;
+    ensure!(
+        v[0] == schema_opkeys(),
+        "model artifact opkey schema {:?} does not match this build's {:?}: the \
+         algorithm-feature schema changed — retrain the model",
+        v[0],
+        schema_opkeys()
+    );
+    let v = values(take(&mut lines, "strategies")?, "strategies", 1)?;
+    ensure!(
+        v[0] == schema_strategies(),
+        "model artifact strategy inventory {:?} does not match this build's {:?}: the \
+         one-hot strategy columns would be misaligned — retrain the model",
+        v[0],
+        schema_strategies()
+    );
+    let v = values(take(&mut lines, "backend")?, "backend", 1)?;
+    let backend = match v[0] {
+        "gbdt" => EtrmBackend::Gbdt(Gbdt::decode(&mut lines)?),
+        "ridge" => EtrmBackend::Ridge(Ridge::decode(&mut lines)?),
+        "mlp" => EtrmBackend::Mlp(Mlp::decode(&mut lines)?),
+        other => bail!("unknown model backend {other:?} (expected gbdt, ridge or mlp)"),
+    };
+    ensure!(lines.next().is_none(), "trailing data after the model body");
+    // the decoded model must actually accept this build's encoding
+    match &backend {
+        EtrmBackend::Gbdt(m) => ensure!(
+            m.dim == FEATURE_DIM,
+            "gbdt body dimension {} disagrees with the manifest ({FEATURE_DIM})",
+            m.dim
+        ),
+        EtrmBackend::Ridge(m) => ensure!(
+            m.weights.len() == FEATURE_DIM + 1,
+            "ridge body carries {} weights, expected {} (+ intercept)",
+            m.weights.len(),
+            FEATURE_DIM + 1
+        ),
+        EtrmBackend::Mlp(m) => ensure!(
+            m.dim == FEATURE_DIM,
+            "mlp body dimension {} disagrees with the manifest ({FEATURE_DIM})",
+            m.dim
+        ),
+        EtrmBackend::External(_) => unreachable!("External is never decoded"),
+    }
+    Ok(Etrm { backend, label })
+}
+
+/// Load a model artifact from disk.
+pub fn load(path: &Path) -> Result<Etrm> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read model artifact {}", path.display()))?;
+    parse(&text).with_context(|| format!("model artifact {}", path.display()))
+}
+
+/// Load a model artifact and additionally require a specific training
+/// label channel (the `repro select --label` contract): a mismatch is
+/// a clear error, never a silently wrong prediction unit.
+pub fn load_expecting(path: &Path, label: Option<Label>) -> Result<Etrm> {
+    let etrm = load(path)?;
+    if let Some(want) = label {
+        ensure!(
+            etrm.label == want,
+            "model artifact {} was trained on the {} label channel, but {} was requested — \
+             retrain with --label {}",
+            path.display(),
+            etrm.label.name(),
+            want.name(),
+            want.name()
+        );
+    }
+    Ok(etrm)
+}
+
+/// Render one task's `predict_all` output as exact bit patterns — the
+/// cross-process bit-identity probe `scripts/verify.sh` byte-compares
+/// between the in-memory model at training time and the reloaded
+/// artifact at serving time.
+pub fn prediction_bits(etrm: &Etrm, graph: &str, algorithm: &str, task: &TaskFeatures) -> String {
+    let mut out = format!(
+        "task {graph}/{algorithm} ({} backend, {} label)\n",
+        etrm.backend.name(),
+        etrm.label.name()
+    );
+    for (s, t) in etrm.predict_all(task) {
+        writeln!(out, "{} {} {}", s.psid(), s.name(), fsio::f64_hex(t)).unwrap();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The schema fingerprints pin the current build: 52 encoded
+    /// columns, 21 opkeys, the 11-strategy inventory.
+    #[test]
+    fn schema_fingerprints_match_build() {
+        assert_eq!(FEATURE_DIM, 52);
+        assert_eq!(schema_opkeys().split(',').count(), crate::analyzer::NUM_OP_KEYS);
+        let strategies = schema_strategies();
+        assert_eq!(strategies.split(',').count(), 11);
+        assert!(strategies.starts_with("0:1DSrc,"), "{strategies}");
+        assert!(strategies.ends_with("11:Ginger"), "{strategies}");
+    }
+
+    /// render → parse round trip at the unit level (the integration
+    /// gates live in tests/model_store.rs).
+    #[test]
+    fn render_parse_roundtrip_ridge() {
+        use crate::ml::TrainSet;
+        let mut train = TrainSet::default();
+        let mut rng = crate::util::rng::Rng::new(91);
+        for _ in 0..80 {
+            let x: Vec<f64> = (0..FEATURE_DIM).map(|_| rng.next_f64()).collect();
+            let y = 1.0 + x[0];
+            train.push(x, y);
+        }
+        let etrm = Etrm {
+            backend: EtrmBackend::Ridge(crate::ml::linear::Ridge::fit(&train, 1.0, true)),
+            label: Label::WallClock,
+        };
+        let text = render(&etrm).unwrap();
+        let parsed = parse(&text).unwrap();
+        assert_eq!(parsed.label, Label::WallClock);
+        assert_eq!(parsed.backend.name(), "ridge");
+        // tampering any payload byte breaks the checksum
+        let mut bytes = text.clone().into_bytes();
+        bytes[text.len() / 2] ^= 1;
+        let err = parse(std::str::from_utf8(&bytes).unwrap()).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+    }
+}

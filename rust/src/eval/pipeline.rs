@@ -16,7 +16,7 @@ use crate::algorithms::Algorithm;
 use crate::analyzer::analyze;
 use crate::dataset::augment::augment;
 use crate::dataset::checkpoint;
-use crate::dataset::logs::LogStore;
+use crate::dataset::logs::{ExecutionLog, LogStore};
 use crate::dataset::split::{test_split, TestSet};
 use crate::engine::cost::ClusterConfig;
 use crate::engine::ExecutionMode;
@@ -24,6 +24,7 @@ use crate::etrm::scores::{rank_of_selected, TaskScores};
 use crate::etrm::Etrm;
 use crate::features::{DataFeatures, TaskFeatures};
 use crate::ml::gbdt::GbdtParams;
+use crate::ml::Label;
 use crate::partition::Strategy;
 use crate::util::error::Result;
 use crate::util::pool;
@@ -62,6 +63,12 @@ pub struct PipelineConfig {
     pub r_hi: usize,
     /// ETRM hyper-parameters.
     pub gbdt: GbdtParams,
+    /// Training-label channel: the simulated cost-model oracle
+    /// (default) or the measured wall-clock column of the logs. The
+    /// evaluation stage always *scores* selections against the
+    /// simulated oracle — the deterministic, reproducible ground truth
+    /// — whichever channel trained the model.
+    pub label: Label,
 }
 
 impl Default for PipelineConfig {
@@ -82,6 +89,7 @@ impl Default for PipelineConfig {
                 learning_rate: 0.08,
                 ..GbdtParams::paper()
             },
+            label: Label::SimTime,
         }
     }
 }
@@ -153,16 +161,29 @@ pub struct Evaluation {
     pub tasks: Vec<TaskEval>,
 }
 
-/// Run the full pipeline.
-pub fn run(config: PipelineConfig) -> Result<Evaluation> {
-    run_with_progress(config, |_| {})
+/// Stages 1-2 output: the real-execution corpus plus the synthetic
+/// augmented training set, before any model is trained. `repro train`
+/// consumes this directly so it can pick its own backend.
+pub struct TrainingSet {
+    pub store: LogStore,
+    pub synthetic: Vec<ExecutionLog>,
 }
 
-/// Run with a progress callback (the CLI prints stage banners).
-pub fn run_with_progress(
-    config: PipelineConfig,
-    mut progress: impl FnMut(&str),
-) -> Result<Evaluation> {
+/// Stages 1-3 output: the train-once half of the lifecycle. `repro
+/// train` persists `etrm` via [`crate::etrm::store::save`];
+/// [`run_with_progress`] continues into the 96-task evaluation.
+pub struct TrainedModel {
+    pub store: LogStore,
+    pub synthetic: Vec<ExecutionLog>,
+    pub etrm: Etrm,
+}
+
+/// Stages 1-2: build (or resume) the execution-log corpus and augment
+/// the synthetic training set.
+pub fn build_training_set(
+    config: &PipelineConfig,
+    progress: &mut impl FnMut(&str),
+) -> Result<TrainingSet> {
     let cfg = ClusterConfig::with_workers(config.workers);
     let threads = pool::resolve_threads(config.threads);
     progress(&format!(
@@ -184,13 +205,39 @@ pub fn run_with_progress(
         config.engine_mode,
         config.checkpoint_dir.as_deref(),
     )?;
-
     progress("augmenting synthetic training set");
     let synthetic = augment(&store, config.r_lo..=config.r_hi, config.augment_cap, config.seed);
-    let synthetic_count = synthetic.len();
+    Ok(TrainingSet { store, synthetic })
+}
 
-    progress("training ETRM (histogram GBDT)");
-    let etrm = Etrm::train_gbdt(&synthetic, config.gbdt);
+/// Stages 1-3: build the training set and train the GBDT ETRM on the
+/// configured label channel — the shared train-once front half of
+/// [`run_with_progress`] and `repro train --model-out`.
+pub fn train_with_progress(
+    config: &PipelineConfig,
+    progress: &mut impl FnMut(&str),
+) -> Result<TrainedModel> {
+    let TrainingSet { store, synthetic } = build_training_set(config, progress)?;
+    progress(&format!("training ETRM (histogram GBDT, {} label)", config.label.name()));
+    let etrm = Etrm::train_gbdt(&synthetic, config.gbdt, config.label);
+    Ok(TrainedModel { store, synthetic, etrm })
+}
+
+/// Run the full pipeline.
+pub fn run(config: PipelineConfig) -> Result<Evaluation> {
+    run_with_progress(config, |_| {})
+}
+
+/// Run with a progress callback (the CLI prints stage banners). The
+/// evaluation stage always ranks and scores against the simulated
+/// oracle times — the reproducible ground truth — regardless of which
+/// label channel trained the model.
+pub fn run_with_progress(
+    config: PipelineConfig,
+    mut progress: impl FnMut(&str),
+) -> Result<Evaluation> {
+    let TrainedModel { store, synthetic, etrm } = train_with_progress(&config, &mut progress)?;
+    let synthetic_count = synthetic.len();
 
     progress("evaluating 96 test tasks");
     let split = test_split();
@@ -312,6 +359,7 @@ mod tests {
         let eval = run(PipelineConfig::fast_test()).unwrap();
         assert_eq!(eval.tasks.len(), 96);
         assert_eq!(eval.store.logs.len(), 12 * 8 * 11);
+        assert_eq!(eval.etrm.label, crate::ml::Label::SimTime, "default channel is the oracle");
         assert!(eval.synthetic_count > 1000, "{}", eval.synthetic_count);
         // per-set cardinalities
         assert_eq!(eval.of_set(TestSet::A).len(), 8);

@@ -29,33 +29,39 @@ fn log1p(x: f64) -> f64 {
     (1.0 + x.max(0.0)).ln()
 }
 
-fn push_moments(out: &mut Vec<f64>, m: &MomentFeatures) {
-    out.push(log1p(m.mean));
-    out.push(log1p(m.std));
-    out.push(if m.skewness < 0.0 { -1.0 } else { 1.0 });
-    out.push(log1p(m.skewness.abs()));
-    out.push(if m.kurtosis < 0.0 { -1.0 } else { 1.0 });
-    out.push(log1p(m.kurtosis.abs()));
+fn push_moments(push: &mut impl FnMut(f64), m: &MomentFeatures) {
+    push(log1p(m.mean));
+    push(log1p(m.std));
+    push(if m.skewness < 0.0 { -1.0 } else { 1.0 });
+    push(log1p(m.skewness.abs()));
+    push(if m.kurtosis < 0.0 { -1.0 } else { 1.0 });
+    push(log1p(m.kurtosis.abs()));
 }
 
-/// Encode one (task, strategy) pair into the model-input vector.
-pub fn encode(task: &TaskFeatures, strategy: Strategy) -> [f64; FEATURE_DIM] {
-    let mut out = Vec::with_capacity(FEATURE_DIM);
-    out.push(log1p(task.data.num_vertices));
-    out.push(log1p(task.data.num_edges));
-    push_moments(&mut out, &task.data.in_deg);
-    push_moments(&mut out, &task.data.out_deg);
+/// Encode one (task, strategy) pair into a caller-provided buffer —
+/// the allocation-free hot path of prediction: batched selection
+/// encodes all 11 candidate strategies of a task into one reused stack
+/// buffer instead of allocating a vector per predict.
+pub fn encode_into(task: &TaskFeatures, strategy: Strategy, out: &mut [f64; FEATURE_DIM]) {
+    let mut i = 0usize;
+    let mut push = |v: f64| {
+        out[i] = v;
+        i += 1;
+    };
+    push(log1p(task.data.num_vertices));
+    push(log1p(task.data.num_edges));
+    push_moments(&mut push, &task.data.in_deg);
+    push_moments(&mut push, &task.data.out_deg);
     // direction one-hot
-    out.push(if task.data.directed { 0.0 } else { 1.0 });
-    out.push(if task.data.directed { 1.0 } else { 0.0 });
+    push(if task.data.directed { 0.0 } else { 1.0 });
+    push(if task.data.directed { 1.0 } else { 0.0 });
     // 21 algorithm counts
     for &x in &task.algo {
-        out.push(log1p(x));
+        push(log1p(x));
     }
     // strategy one-hot over the 11-strategy inventory
-    let inventory = Strategy::inventory();
-    for s in &inventory {
-        out.push(if *s == strategy { 1.0 } else { 0.0 });
+    for s in Strategy::INVENTORY {
+        push(if s == strategy { 1.0 } else { 0.0 });
     }
     // family flags help the tree generalise across related strategies
     let (hash, greedy, degree_aware, grid) = match strategy {
@@ -68,11 +74,18 @@ pub fn encode(task: &TaskFeatures, strategy: Strategy) -> [f64; FEATURE_DIM] {
         Strategy::Hdrf(_) => (0.0, 1.0, 1.0, 0.0),
         Strategy::Ginger => (0.0, 1.0, 1.0, 0.0),
     };
-    out.extend([hash, greedy, degree_aware, grid]);
-    debug_assert_eq!(out.len(), FEATURE_DIM);
-    let mut arr = [0.0; FEATURE_DIM];
-    arr.copy_from_slice(&out);
-    arr
+    push(hash);
+    push(greedy);
+    push(degree_aware);
+    push(grid);
+    debug_assert_eq!(i, FEATURE_DIM);
+}
+
+/// Encode one (task, strategy) pair into the model-input vector.
+pub fn encode(task: &TaskFeatures, strategy: Strategy) -> [f64; FEATURE_DIM] {
+    let mut out = [0.0; FEATURE_DIM];
+    encode_into(task, strategy, &mut out);
+    out
 }
 
 /// Column names (for importance reporting, Tables 3/4).
@@ -139,6 +152,19 @@ mod tests {
         let v = encode(&t, Strategy::Hybrid);
         assert_eq!(v.len(), FEATURE_DIM);
         assert_eq!(feature_names().len(), FEATURE_DIM);
+    }
+
+    /// The buffer-reuse path is the same encoding: writing two
+    /// different strategies into one buffer leaves exactly the second
+    /// strategy's vector (every slot is overwritten, none is stale).
+    #[test]
+    fn encode_into_reused_buffer_matches_encode() {
+        let t = task();
+        let mut buf = [0.0; FEATURE_DIM];
+        encode_into(&t, Strategy::Ginger, &mut buf);
+        assert_eq!(buf, encode(&t, Strategy::Ginger));
+        encode_into(&t, Strategy::OneDSrc, &mut buf);
+        assert_eq!(buf, encode(&t, Strategy::OneDSrc));
     }
 
     #[test]

@@ -11,5 +11,5 @@ pub mod encoding;
 pub mod task;
 
 pub use data::DataFeatures;
-pub use encoding::{encode, feature_names, FEATURE_DIM};
+pub use encoding::{encode, encode_into, feature_names, FEATURE_DIM};
 pub use task::TaskFeatures;

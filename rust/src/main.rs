@@ -6,6 +6,18 @@
 //!   — regenerate paper artifacts (runs the full pipeline once).
 //! * `pipeline` — run corpus → augmentation → training → evaluation and
 //!   print the headline summary.
+//! * `train --model-out m.etrm [--backend gbdt|ridge|mlp] [--label
+//!   sim_time|wall_clock]` — the train-once half: build (or resume)
+//!   the corpus, augment, train the chosen backend on the chosen label
+//!   channel and persist the model as a checksummed artifact
+//!   (`etrm::store`). `--probe <graph>/<ALGO> --probe-bits <file>`
+//!   additionally writes the in-memory model's predictions as exact
+//!   bit patterns for the save→load round-trip gate.
+//! * `select --model m.etrm --graph wiki --algorithm PR[,TC,…]` — the
+//!   serve-many half: load a saved model (no corpus, no training),
+//!   extract the task features and run the batched selector; `--label`
+//!   demands a specific training channel, `--bits-out <file>` writes
+//!   the loaded model's predictions for the round-trip gate.
 //! * `run --graph wiki --algorithm PR --strategy Hybrid` — execute one
 //!   task on the engine and report the simulated time breakdown.
 //! * `partition --graph wiki [--workers 64]` — partition-quality metrics
@@ -36,20 +48,26 @@
 //! its share of the run over TCP instead of dispatching a subcommand
 //! (see `engine::transport::socket`).
 
+use std::path::Path;
+
 use gps_select::algorithms::Algorithm;
 use gps_select::analyzer;
 use gps_select::dataset::checkpoint;
 use gps_select::dataset::logs::LogStore;
 use gps_select::engine::cost::ClusterConfig;
 use gps_select::engine::ExecutionMode;
+use gps_select::etrm::{store as model_store, Etrm};
 use gps_select::eval::{figures, pipeline};
 use gps_select::features::{DataFeatures, TaskFeatures};
 use gps_select::graph::datasets::DatasetSpec;
 use gps_select::ml::gbdt::GbdtParams;
+use gps_select::ml::mlp::MlpParams;
+use gps_select::ml::Label;
 use gps_select::partition::metrics::PartitionMetrics;
 use gps_select::partition::Strategy;
 use gps_select::util::cli::Args;
 use gps_select::util::error::{bail, ensure, Context, Result};
+use gps_select::util::fsio;
 
 fn main() {
     let args = Args::parse();
@@ -91,6 +109,7 @@ fn pipeline_config(args: &Args) -> Result<pipeline::PipelineConfig> {
             max_depth: args.get_usize("depth", default.gbdt.max_depth)?,
             ..default.gbdt
         },
+        label: Label::resolve(args.get("label"))?,
     })
 }
 
@@ -106,6 +125,8 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand() {
         Some("figures") => cmd_figures(args),
         Some("pipeline") => cmd_pipeline(args),
+        Some("train") => cmd_train(args),
+        Some("select") => cmd_select(args),
         Some("run") => cmd_run(args),
         Some("partition") => cmd_partition(args),
         Some("features") => cmd_features(args),
@@ -115,12 +136,132 @@ fn dispatch(args: &Args) -> Result<()> {
         Some(other) => bail!("unknown subcommand {other:?} (see the README)"),
         None => {
             println!(
-                "usage: repro <figures|pipeline|run|partition|features|analyze|logs|\
-                 runtime-check> [flags]"
+                "usage: repro <figures|pipeline|train|select|run|partition|features|analyze|\
+                 logs|runtime-check> [flags]"
             );
             Ok(())
         }
     }
+}
+
+/// Extract one task's features exactly as the selection service does:
+/// build the dataset at (scale, seed), sweep the data features, analyze
+/// the pseudo-code. Returns canonical (graph, algorithm) names so the
+/// train-side probe and the select side render byte-identical headers.
+fn probe_task(
+    graph: &str,
+    algorithm: &str,
+    scale: f64,
+    seed: u64,
+) -> Result<(String, String, TaskFeatures)> {
+    let spec = DatasetSpec::by_name(graph)
+        .with_context(|| format!("unknown graph {graph:?} (see Table 5 aliases)"))?;
+    let algo = Algorithm::by_name(algorithm)
+        .with_context(|| format!("unknown algorithm {algorithm:?} (AID AOD PR GC APCN TC CC RW)"))?;
+    let g = spec.build(scale, seed);
+    let task = TaskFeatures::extract(&g, algo.pseudo_code())?;
+    Ok((g.name.clone(), algo.name().to_string(), task))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let config = pipeline_config(args)?;
+    let model_out = args
+        .get("model-out")
+        .context("--model-out <path> required (the model artifact to write)")?;
+    let backend = args.get_or("backend", "gbdt");
+    let mut progress = |stage: &str| eprintln!("[train] {stage}");
+    let set = pipeline::build_training_set(&config, &mut progress)?;
+    progress(&format!(
+        "training {backend} ETRM on {} synthetic tuples ({} label)",
+        set.synthetic.len(),
+        config.label.name()
+    ));
+    let etrm = match backend {
+        "gbdt" => Etrm::train_gbdt(&set.synthetic, config.gbdt, config.label),
+        "ridge" => Etrm::train_ridge(&set.synthetic, args.get_f64("lambda", 1.0)?, config.label),
+        "mlp" => Etrm::train_mlp(
+            &set.synthetic,
+            MlpParams {
+                hidden: args.get_usize("hidden", MlpParams::default().hidden)?,
+                epochs: args.get_usize("epochs", MlpParams::default().epochs)?,
+                ..Default::default()
+            },
+            config.label,
+        ),
+        other => bail!("unknown --backend {other:?} (gbdt|ridge|mlp)"),
+    };
+    model_store::save(&etrm, Path::new(model_out))?;
+    println!(
+        "wrote {backend} model ({} label, trained on {} tuples) to {model_out}",
+        config.label.name(),
+        set.synthetic.len()
+    );
+    match (args.get("probe"), args.get("probe-bits")) {
+        (None, None) => {}
+        (Some(spec), Some(path)) => {
+            let (graph, algorithm) = spec
+                .split_once('/')
+                .context("--probe expects <graph>/<ALGO>, e.g. wiki/PR")?;
+            let (graph, algorithm, task) =
+                probe_task(graph, algorithm, config.scale, config.seed)?;
+            let bits = model_store::prediction_bits(&etrm, &graph, &algorithm, &task);
+            fsio::write_atomic(Path::new(path), bits.as_bytes())?;
+            println!("probe predictions ({graph}/{algorithm}) written to {path}");
+        }
+        _ => bail!("--probe and --probe-bits must be given together"),
+    }
+    Ok(())
+}
+
+fn cmd_select(args: &Args) -> Result<()> {
+    let model_path = args
+        .get("model")
+        .context("--model <artifact> required (train one with `repro train --model-out …`)")?;
+    // --label here is a *demand* on the loaded artifact, not a default
+    let expect = match args.get("label") {
+        Some(v) => Some(Label::resolve(Some(v))?),
+        None => None,
+    };
+    let etrm = model_store::load_expecting(Path::new(model_path), expect)?;
+    let g = build_graph(args)?;
+    let mut algos = Vec::new();
+    for name in args.get_or("algorithm", "PR").split(',') {
+        algos.push(
+            Algorithm::by_name(name)
+                .with_context(|| format!("unknown algorithm {name:?} in --algorithm"))?,
+        );
+    }
+    // the graph sweep runs once; every algorithm task shares it
+    let data = DataFeatures::of(&g);
+    let mut tasks = Vec::with_capacity(algos.len());
+    for a in &algos {
+        tasks.push(TaskFeatures::from_parts(data, &analyzer::analyze(a.pseudo_code())?));
+    }
+    let threads = args.get_usize("threads", 0)?;
+    let picks = etrm.select_batch(&tasks, threads);
+    println!(
+        "model {model_path} ({} backend, {} label), {} task(s) on {}",
+        etrm.backend.name(),
+        etrm.label.name(),
+        tasks.len(),
+        g.name
+    );
+    for ((a, task), pick) in algos.iter().zip(&tasks).zip(&picks) {
+        println!("task {}/{}:", g.name, a.name());
+        for (s, t) in etrm.predict_all(task) {
+            let marker = if s == *pick { "  ← selected" } else { "" };
+            println!("  {:<8} {t:>14.6}{marker}", s.name());
+        }
+    }
+    if let Some(path) = args.get("bits-out") {
+        let mut out = String::new();
+        for (a, task) in algos.iter().zip(&tasks) {
+            out.push_str(&model_store::prediction_bits(&etrm, &g.name, a.name(), task));
+        }
+        fsio::write_atomic(Path::new(path), out.as_bytes())?;
+        println!("prediction bit patterns written to {path}");
+    }
+    Ok(())
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {

@@ -20,7 +20,12 @@ pub mod importance;
 pub mod trainer;
 pub mod tree;
 
+use std::fmt::Write as _;
+
+use crate::ml::codec::{flag, take, values};
 use crate::ml::{Regressor, TrainSet};
+use crate::util::error::{ensure, Context, Result};
+use crate::util::fsio::{f64_hex, parse_f64_hex};
 use crate::util::rng::Rng;
 
 pub use export::GbdtTensors;
@@ -147,6 +152,123 @@ impl Gbdt {
             v
         }
     }
+
+    /// Serialize into the model-artifact text body: hyper-parameters,
+    /// base score, importance statistics and every tree node, all f64
+    /// values as exact bit patterns ([`f64_hex`]) so a decoded model
+    /// predicts bit-identically.
+    pub fn encode(&self, out: &mut String) {
+        let p = &self.params;
+        writeln!(
+            out,
+            "gbdt-params {} {} {} {} {} {} {} {} {} {} {} {}",
+            p.n_estimators,
+            f64_hex(p.learning_rate),
+            p.max_depth,
+            f64_hex(p.min_child_weight),
+            f64_hex(p.gamma),
+            f64_hex(p.reg_lambda),
+            f64_hex(p.reg_alpha),
+            f64_hex(p.subsample),
+            f64_hex(p.colsample_bytree),
+            p.max_bins,
+            u8::from(p.log_target),
+            p.seed
+        )
+        .unwrap();
+        writeln!(out, "gbdt-model {} {}", f64_hex(self.base_score), self.dim).unwrap();
+        out.push_str("gbdt-gain");
+        for g in &self.importance.total_gain {
+            out.push(' ');
+            out.push_str(&f64_hex(*g));
+        }
+        out.push('\n');
+        out.push_str("gbdt-splits");
+        for c in &self.importance.split_count {
+            write!(out, " {c}").unwrap();
+        }
+        out.push('\n');
+        writeln!(out, "gbdt-trees {}", self.trees.len()).unwrap();
+        for t in &self.trees {
+            writeln!(out, "tree {}", t.nodes.len()).unwrap();
+            for n in &t.nodes {
+                writeln!(
+                    out,
+                    "{} {} {} {} {}",
+                    n.feature,
+                    f64_hex(n.threshold),
+                    n.left,
+                    n.right,
+                    f64_hex(n.value)
+                )
+                .unwrap();
+            }
+        }
+    }
+
+    /// Inverse of [`Gbdt::encode`]: consume the body lines and rebuild
+    /// the ensemble. Callers (the model store) verify the artifact
+    /// checksum before decoding.
+    pub fn decode(lines: &mut std::str::Lines<'_>) -> Result<Gbdt> {
+        let v = values(take(lines, "gbdt-params")?, "gbdt-params", 12)?;
+        let params = GbdtParams {
+            n_estimators: v[0].parse().context("gbdt n_estimators")?,
+            learning_rate: parse_f64_hex(v[1])?,
+            max_depth: v[2].parse().context("gbdt max_depth")?,
+            min_child_weight: parse_f64_hex(v[3])?,
+            gamma: parse_f64_hex(v[4])?,
+            reg_lambda: parse_f64_hex(v[5])?,
+            reg_alpha: parse_f64_hex(v[6])?,
+            subsample: parse_f64_hex(v[7])?,
+            colsample_bytree: parse_f64_hex(v[8])?,
+            max_bins: v[9].parse().context("gbdt max_bins")?,
+            log_target: flag(v[10])?,
+            seed: v[11].parse().context("gbdt seed")?,
+        };
+        let v = values(take(lines, "gbdt-model")?, "gbdt-model", 2)?;
+        let base_score = parse_f64_hex(v[0])?;
+        let dim: usize = v[1].parse().context("gbdt dim")?;
+        let total_gain = values(take(lines, "gbdt-gain")?, "gbdt-gain", dim)?
+            .into_iter()
+            .map(parse_f64_hex)
+            .collect::<Result<Vec<_>>>()?;
+        let split_count = values(take(lines, "gbdt-splits")?, "gbdt-splits", dim)?
+            .into_iter()
+            .map(|t| t.parse::<u64>().context("gbdt split count"))
+            .collect::<Result<Vec<_>>>()?;
+        let v = values(take(lines, "gbdt-trees")?, "gbdt-trees", 1)?;
+        let n_trees: usize = v[0].parse().context("gbdt tree count")?;
+        let mut trees = Vec::new();
+        for ti in 0..n_trees {
+            let v = values(take(lines, "tree")?, "tree", 1)?;
+            let n_nodes: usize = v[0].parse().context("tree node count")?;
+            let mut nodes = Vec::new();
+            for ni in 0..n_nodes {
+                let line = take(lines, "tree node")?;
+                let toks: Vec<&str> = line.split_whitespace().collect();
+                ensure!(
+                    toks.len() == 5,
+                    "tree {ti} node {ni} has {} fields, expected 5",
+                    toks.len()
+                );
+                nodes.push(tree::Node {
+                    feature: toks[0].parse().context("node feature")?,
+                    threshold: parse_f64_hex(toks[1])?,
+                    left: toks[2].parse().context("node left child")?,
+                    right: toks[3].parse().context("node right child")?,
+                    value: parse_f64_hex(toks[4])?,
+                });
+            }
+            trees.push(Tree { nodes });
+        }
+        Ok(Gbdt {
+            params,
+            trees,
+            base_score,
+            dim,
+            importance: Importance { total_gain, split_count },
+        })
+    }
 }
 
 impl Regressor for Gbdt {
@@ -240,5 +362,32 @@ mod tests {
     #[should_panic(expected = "empty")]
     fn empty_train_panics() {
         Gbdt::fit(&TrainSet::default(), GbdtParams::fast());
+    }
+
+    /// encode → decode reproduces predictions bit-for-bit (the unit
+    /// half of the model-store round-trip gate).
+    #[test]
+    fn encode_decode_roundtrip_is_bit_exact() {
+        let mut rng = Rng::new(504);
+        let mut train = TrainSet::default();
+        for _ in 0..300 {
+            let a = rng.next_f64();
+            let b = rng.next_f64();
+            train.push(vec![a, b], (3.0 * a - b).abs() + 0.1);
+        }
+        let model =
+            Gbdt::fit(&train, GbdtParams { n_estimators: 25, max_depth: 5, ..GbdtParams::fast() });
+        let mut text = String::new();
+        model.encode(&mut text);
+        let decoded = Gbdt::decode(&mut text.lines()).unwrap();
+        assert_eq!(decoded.dim, model.dim);
+        assert_eq!(decoded.trees.len(), model.trees.len());
+        assert_eq!(decoded.importance.split_count, model.importance.split_count);
+        for x in &train.x {
+            assert_eq!(decoded.predict(x).to_bits(), model.predict(x).to_bits());
+        }
+        // a truncated body errors instead of misparsing
+        let cut: String = text.lines().take(6).map(|l| format!("{l}\n")).collect();
+        assert!(Gbdt::decode(&mut cut.lines()).is_err());
     }
 }

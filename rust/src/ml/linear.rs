@@ -3,7 +3,12 @@
 //! Closed-form `(XᵀX + λI)⁻¹ Xᵀy` via Gaussian elimination with partial
 //! pivoting; an intercept column is appended internally.
 
+use std::fmt::Write as _;
+
+use crate::ml::codec::{flag, take, values};
 use crate::ml::{Regressor, TrainSet};
+use crate::util::error::{Context, Result};
+use crate::util::fsio::{f64_hex, parse_f64_hex};
 
 /// Trained ridge model.
 #[derive(Clone, Debug)]
@@ -72,6 +77,31 @@ impl Ridge {
         }
         Ridge { weights: solve(xtx, xty), log_target }
     }
+
+    /// Serialize into the model-artifact text body (weights as exact
+    /// f64 bit patterns).
+    pub fn encode(&self, out: &mut String) {
+        writeln!(out, "ridge-params {} {}", u8::from(self.log_target), self.weights.len())
+            .unwrap();
+        out.push_str("ridge-weights");
+        for w in &self.weights {
+            out.push(' ');
+            out.push_str(&f64_hex(*w));
+        }
+        out.push('\n');
+    }
+
+    /// Inverse of [`Ridge::encode`].
+    pub fn decode(lines: &mut std::str::Lines<'_>) -> Result<Ridge> {
+        let v = values(take(lines, "ridge-params")?, "ridge-params", 2)?;
+        let log_target = flag(v[0])?;
+        let n: usize = v[1].parse().context("ridge weight count")?;
+        let weights = values(take(lines, "ridge-weights")?, "ridge-weights", n)?
+            .into_iter()
+            .map(parse_f64_hex)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Ridge { weights, log_target })
+    }
 }
 
 impl Regressor for Ridge {
@@ -122,6 +152,29 @@ mod tests {
         let loose = Ridge::fit(&train, 1e-9, false);
         let tight = Ridge::fit(&train, 100.0, false);
         assert!(tight.weights[0].abs() < loose.weights[0].abs());
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_is_bit_exact() {
+        let mut rng = Rng::new(542);
+        let mut train = TrainSet::default();
+        for _ in 0..120 {
+            let a = rng.next_f64();
+            let b = rng.next_f64();
+            train.push(vec![a, b], 4.0 * a - b + 0.25);
+        }
+        let m = Ridge::fit(&train, 0.1, true);
+        let mut text = String::new();
+        m.encode(&mut text);
+        let decoded = Ridge::decode(&mut text.lines()).unwrap();
+        assert_eq!(decoded.log_target, m.log_target);
+        assert_eq!(decoded.weights.len(), m.weights.len());
+        for x in &train.x {
+            assert_eq!(decoded.predict(x).to_bits(), m.predict(x).to_bits());
+        }
+        // the weight count guards against a truncated weights line
+        let cut = text.replace("ridge-weights ", "ridge-weights bad ");
+        assert!(Ridge::decode(&mut cut.lines()).is_err());
     }
 
     #[test]

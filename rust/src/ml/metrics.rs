@@ -1,6 +1,22 @@
 //! Regression quality metrics.
+//!
+//! **Degenerate-case contract** (pinned by the tests below): these
+//! metrics are consumed by automated gates, so every edge case has a
+//! defined finite-control answer instead of a NaN that would poison a
+//! comparison or an unwrap that would panic.
+//!
+//! * [`rmse`]/[`mae`] on empty slices → `0.0` (no error observed).
+//! * [`r2`] with constant truth: `1.0` when the residuals are zero
+//!   (a constant target perfectly predicted), `-∞` otherwise (any miss
+//!   on a zero-variance target is infinitely worse than the mean
+//!   predictor) — never NaN. Empty input → `1.0` (vacuously perfect).
+//! * [`spearman`] with fewer than two points → `1.0` (any ordering is
+//!   vacuously preserved); with a constant (zero-rank-variance) input
+//!   → `0.0` (no ordering information). NaN inputs are ranked by IEEE
+//!   total order, so the function never panics and stays
+//!   deterministic.
 
-/// Root-mean-square error.
+/// Root-mean-square error (`0.0` on empty input).
 pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
     assert_eq!(pred.len(), truth.len());
     if pred.is_empty() {
@@ -10,7 +26,7 @@ pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
         .sqrt()
 }
 
-/// Mean absolute error.
+/// Mean absolute error (`0.0` on empty input).
 pub fn mae(pred: &[f64], truth: &[f64]) -> f64 {
     assert_eq!(pred.len(), truth.len());
     if pred.is_empty() {
@@ -19,7 +35,8 @@ pub fn mae(pred: &[f64], truth: &[f64]) -> f64 {
     pred.iter().zip(truth).map(|(p, t)| (p - t).abs()).sum::<f64>() / pred.len() as f64
 }
 
-/// Coefficient of determination R².
+/// Coefficient of determination R². Constant truth is never NaN: `1.0`
+/// when perfectly predicted, `-∞` on any miss (see the module docs).
 pub fn r2(pred: &[f64], truth: &[f64]) -> f64 {
     assert_eq!(pred.len(), truth.len());
     let mean = truth.iter().sum::<f64>() / truth.len().max(1) as f64;
@@ -33,7 +50,9 @@ pub fn r2(pred: &[f64], truth: &[f64]) -> f64 {
 
 fn ranks(xs: &[f64]) -> Vec<f64> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    // IEEE total order: NaN inputs get a deterministic rank (after
+    // +∞ for positive NaN) instead of panicking a partial comparison
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
     let mut out = vec![0.0; xs.len()];
     let mut i = 0;
     while i < idx.len() {
@@ -53,6 +72,8 @@ fn ranks(xs: &[f64]) -> Vec<f64> {
 
 /// Spearman rank correlation — the metric that matters for strategy
 /// *selection*: only the predicted ordering of strategies counts.
+/// `1.0` below two points, `0.0` on zero rank variance (constant
+/// input); NaN inputs are ranked by total order, never a panic.
 pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
     assert_eq!(a.len(), b.len());
     let (ra, rb) = (ranks(a), ranks(b));
@@ -112,5 +133,40 @@ mod tests {
         let t = [1.0, 2.0, 3.0];
         let p = [2.0, 2.0, 2.0];
         assert!(r2(&p, &t).abs() < 1e-12);
+    }
+
+    /// The degenerate-case contract of the module docs, pinned.
+    #[test]
+    fn degenerate_constant_truth_r2() {
+        let t = [2.0, 2.0, 2.0];
+        assert_eq!(r2(&t, &t), 1.0, "constant target perfectly predicted");
+        assert_eq!(
+            r2(&[2.0, 2.0, 2.5], &t),
+            f64::NEG_INFINITY,
+            "any miss on a zero-variance target"
+        );
+        assert!(!r2(&[1.0, 3.0, 5.0], &t).is_nan(), "never NaN on constant truth");
+        assert_eq!(r2(&[], &[]), 1.0, "empty input is vacuously perfect");
+    }
+
+    #[test]
+    fn degenerate_empty_rmse_mae() {
+        assert_eq!(rmse(&[], &[]), 0.0);
+        assert_eq!(mae(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn degenerate_spearman_constant_short_and_nan() {
+        // constant input carries no ordering information
+        assert_eq!(spearman(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+        assert_eq!(spearman(&[1.0, 2.0, 3.0], &[7.0, 7.0, 7.0]), 0.0);
+        // below two points any ordering is vacuously preserved
+        assert_eq!(spearman(&[5.0], &[9.0]), 1.0);
+        assert_eq!(spearman(&[], &[]), 1.0);
+        // NaN inputs rank by total order — deterministic, no panic
+        let rho = spearman(&[f64::NAN, 1.0, 2.0], &[1.0, 2.0, 3.0]);
+        assert!(rho.is_finite(), "{rho}");
+        let again = spearman(&[f64::NAN, 1.0, 2.0], &[1.0, 2.0, 3.0]);
+        assert_eq!(rho.to_bits(), again.to_bits());
     }
 }

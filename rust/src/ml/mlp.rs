@@ -6,7 +6,12 @@
 //! (`python/compile/model.py::mlp_train_step`); both implement the same
 //! update so either backend can drive training.
 
+use std::fmt::Write as _;
+
+use crate::ml::codec::{flag, take, values};
 use crate::ml::{Regressor, TrainSet};
+use crate::util::error::{Context, Result};
+use crate::util::fsio::{f64_hex, parse_f64_hex};
 use crate::util::rng::Rng;
 
 /// Hyper-parameters.
@@ -148,6 +153,80 @@ impl Mlp {
         }
         model
     }
+
+    /// Serialize into the model-artifact text body: hyper-parameters,
+    /// every weight matrix and the per-feature normalisation, all f64
+    /// values as exact bit patterns.
+    pub fn encode(&self, out: &mut String) {
+        let p = &self.params;
+        writeln!(
+            out,
+            "mlp-params {} {} {} {} {} {}",
+            p.hidden,
+            p.epochs,
+            p.batch,
+            f64_hex(p.lr),
+            u8::from(p.log_target),
+            p.seed
+        )
+        .unwrap();
+        writeln!(out, "mlp-dim {}", self.dim).unwrap();
+        for row in &self.w1 {
+            out.push_str("mlp-w1");
+            for v in row {
+                out.push(' ');
+                out.push_str(&f64_hex(*v));
+            }
+            out.push('\n');
+        }
+        for (tag, xs) in [("mlp-b1", &self.b1), ("mlp-w2", &self.w2)] {
+            out.push_str(tag);
+            for v in xs {
+                out.push(' ');
+                out.push_str(&f64_hex(*v));
+            }
+            out.push('\n');
+        }
+        writeln!(out, "mlp-b2 {}", f64_hex(self.b2)).unwrap();
+        out.push_str("mlp-norm");
+        for (m, s) in &self.norm {
+            out.push(' ');
+            out.push_str(&f64_hex(*m));
+            out.push(' ');
+            out.push_str(&f64_hex(*s));
+        }
+        out.push('\n');
+    }
+
+    /// Inverse of [`Mlp::encode`].
+    pub fn decode(lines: &mut std::str::Lines<'_>) -> Result<Mlp> {
+        let v = values(take(lines, "mlp-params")?, "mlp-params", 6)?;
+        let params = MlpParams {
+            hidden: v[0].parse().context("mlp hidden")?,
+            epochs: v[1].parse().context("mlp epochs")?,
+            batch: v[2].parse().context("mlp batch")?,
+            lr: parse_f64_hex(v[3])?,
+            log_target: flag(v[4])?,
+            seed: v[5].parse().context("mlp seed")?,
+        };
+        let v = values(take(lines, "mlp-dim")?, "mlp-dim", 1)?;
+        let dim: usize = v[0].parse().context("mlp dim")?;
+        let hex_row = |toks: Vec<&str>| -> Result<Vec<f64>> {
+            toks.into_iter().map(parse_f64_hex).collect()
+        };
+        let mut w1 = Vec::new();
+        for _ in 0..params.hidden {
+            w1.push(hex_row(values(take(lines, "mlp-w1")?, "mlp-w1", dim)?)?);
+        }
+        let b1 = hex_row(values(take(lines, "mlp-b1")?, "mlp-b1", params.hidden)?)?;
+        let w2 = hex_row(values(take(lines, "mlp-w2")?, "mlp-w2", params.hidden)?)?;
+        let v = values(take(lines, "mlp-b2")?, "mlp-b2", 1)?;
+        let b2 = parse_f64_hex(v[0])?;
+        // arity already enforced by `values` (exactly 2*dim tokens)
+        let flat = hex_row(values(take(lines, "mlp-norm")?, "mlp-norm", 2 * dim)?)?;
+        let norm: Vec<(f64, f64)> = flat.chunks(2).map(|c| (c[0], c[1])).collect();
+        Ok(Mlp { params, dim, w1, b1, w2, b2, norm })
+    }
 }
 
 impl Regressor for Mlp {
@@ -209,5 +288,31 @@ mod tests {
         let a = Mlp::fit(&train, p);
         let b = Mlp::fit(&train, p);
         assert_eq!(a.predict(&[0.5]), b.predict(&[0.5]));
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_is_bit_exact() {
+        let mut rng = Rng::new(552);
+        let mut train = TrainSet::default();
+        for _ in 0..200 {
+            let a = rng.next_f64();
+            let b = rng.next_f64();
+            train.push(vec![a, b], a + 2.0 * b + 0.5);
+        }
+        let m = Mlp::fit(
+            &train,
+            MlpParams { hidden: 8, epochs: 10, log_target: false, ..Default::default() },
+        );
+        let mut text = String::new();
+        m.encode(&mut text);
+        let decoded = Mlp::decode(&mut text.lines()).unwrap();
+        assert_eq!(decoded.dim, m.dim);
+        assert_eq!(decoded.norm, m.norm);
+        for x in &train.x {
+            assert_eq!(decoded.predict(x).to_bits(), m.predict(x).to_bits());
+        }
+        // a missing weight row is a clear error
+        let cut: String = text.lines().take(3).map(|l| format!("{l}\n")).collect();
+        assert!(Mlp::decode(&mut cut.lines()).is_err());
     }
 }

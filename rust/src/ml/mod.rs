@@ -13,11 +13,81 @@
 //! * [`mlp`] — two-layer perceptron baseline (pure-Rust SGD; the PJRT
 //!   train-step artifact offers the same update AOT-compiled).
 //! * [`metrics`] — RMSE / MAE / R² / Spearman.
+//!
+//! Every trained backend serializes to the [`crate::etrm::store`] text
+//! artifact (exact f64 bit patterns via `util::fsio::f64_hex`, FNV-1a
+//! checksum footer), so a model trains once and serves from any later
+//! process bit-identically. Training sets carry the [`Label`] channel
+//! they were built from — the simulated cost-model oracle or the
+//! measured wall-clock column of the execution logs.
 
 pub mod gbdt;
 pub mod linear;
 pub mod metrics;
 pub mod mlp;
+
+use crate::util::error::{Context, Result};
+
+/// The training-label channel: which execution-time column of the
+/// execution logs the regressor fits.
+///
+/// * [`Label::SimTime`] — the simulated cost-model oracle in *seconds*:
+///   deterministic and bit-reproducible, the channel every paper figure
+///   uses.
+/// * [`Label::WallClock`] — the measured wall-clock label in
+///   *milliseconds*, recorded at the engine coordinator of every task
+///   run (the real-execution channel next to the oracle): noisy and
+///   machine-dependent, but grounded in actual execution rather than
+///   the cost model.
+///
+/// The units differ (seconds vs milliseconds); the default log-space
+/// training objective makes the regressors indifferent to the scale.
+/// Saved model artifacts record their channel, and the selection CLI
+/// can demand a specific one, so a sim-trained model is never silently
+/// served where measured-label predictions were requested.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Label {
+    /// Simulated cost-model oracle (seconds) — the default.
+    #[default]
+    SimTime,
+    /// Measured wall-clock at the coordinator (milliseconds).
+    WallClock,
+}
+
+impl Label {
+    /// Canonical channel name (the form stored in model artifacts).
+    pub fn name(self) -> &'static str {
+        match self {
+            Label::SimTime => "sim_time",
+            Label::WallClock => "wall_clock",
+        }
+    }
+
+    /// Both channels.
+    pub fn all() -> [Label; 2] {
+        [Label::SimTime, Label::WallClock]
+    }
+
+    /// Parse a channel name; common aliases accepted, case-insensitive.
+    pub fn by_name(name: &str) -> Option<Label> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "sim" | "sim_time" | "simtime" | "simulated" => Some(Label::SimTime),
+            "wall" | "wall_clock" | "wallclock" | "measured" => Some(Label::WallClock),
+            _ => None,
+        }
+    }
+
+    /// CLI rule for `--label`: an absent flag means the simulated
+    /// oracle; junk values are a clear error, not a silent default.
+    pub fn resolve(cli: Option<&str>) -> Result<Label> {
+        match cli {
+            None => Ok(Label::SimTime),
+            Some(v) => Label::by_name(v).with_context(|| {
+                format!("unknown --label {v:?} (expected sim_time or wall_clock)")
+            }),
+        }
+    }
+}
 
 /// A trained regression model mapping encoded feature vectors to a
 /// predicted execution time.
@@ -36,6 +106,9 @@ pub trait Regressor {
 pub struct TrainSet {
     pub x: Vec<Vec<f64>>,
     pub y: Vec<f64>,
+    /// Which [`Label`] channel `y` was taken from (recorded into saved
+    /// model artifacts so serving can reject the wrong channel).
+    pub label: Label,
 }
 
 impl TrainSet {
@@ -64,6 +137,37 @@ impl TrainSet {
     }
 }
 
+/// Shared line-oriented decoding helpers for the text model artifacts
+/// (the `etrm::store` header plus the per-backend bodies below).
+pub(crate) mod codec {
+    use crate::util::error::{bail, ensure, Context, Result};
+
+    /// Next line, or a clear truncation error naming what was missing.
+    pub fn take<'a>(lines: &mut std::str::Lines<'a>, what: &str) -> Result<&'a str> {
+        lines
+            .next()
+            .with_context(|| format!("truncated model artifact: missing {what} line"))
+    }
+
+    /// Split a `tag v…` line into its values, checking tag and arity.
+    pub fn values<'a>(line: &'a str, tag: &str, n: usize) -> Result<Vec<&'a str>> {
+        let mut toks = line.split_whitespace();
+        ensure!(toks.next() == Some(tag), "expected a {tag} line, got {line:?}");
+        let vals: Vec<&'a str> = toks.collect();
+        ensure!(vals.len() == n, "{tag} line carries {} values, expected {n}", vals.len());
+        Ok(vals)
+    }
+
+    /// Parse a `0`/`1` flag token.
+    pub fn flag(tok: &str) -> Result<bool> {
+        match tok {
+            "0" => Ok(false),
+            "1" => Ok(true),
+            other => bail!("bad flag {other:?} (expected 0 or 1)"),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -72,6 +176,7 @@ mod tests {
     fn trainset_invariants() {
         let mut t = TrainSet::default();
         assert!(t.is_empty());
+        assert_eq!(t.label, Label::SimTime, "default channel is the oracle");
         t.push(vec![1.0, 2.0], 3.0);
         assert_eq!(t.len(), 1);
         assert_eq!(t.dim(), 2);
@@ -83,5 +188,41 @@ mod tests {
         let mut t = TrainSet::default();
         t.push(vec![1.0], 0.0);
         t.push(vec![1.0, 2.0], 0.0);
+    }
+
+    #[test]
+    fn label_names_and_aliases() {
+        for l in Label::all() {
+            assert_eq!(Label::by_name(l.name()), Some(l), "canonical name round-trips");
+        }
+        assert_eq!(Label::by_name("SIM"), Some(Label::SimTime));
+        assert_eq!(Label::by_name(" wall "), Some(Label::WallClock));
+        assert_eq!(Label::by_name("measured"), Some(Label::WallClock));
+        assert_eq!(Label::by_name("oracle?"), None);
+    }
+
+    #[test]
+    fn label_resolve_rule() {
+        assert_eq!(Label::resolve(None).unwrap(), Label::SimTime);
+        assert_eq!(Label::resolve(Some("wall_clock")).unwrap(), Label::WallClock);
+        let err = Label::resolve(Some("nope")).unwrap_err().to_string();
+        assert!(err.contains("--label"), "{err}");
+    }
+
+    #[test]
+    fn codec_helpers() {
+        let mut lines = "alpha 1 2\nbeta 3\n".lines();
+        let v = codec::values(codec::take(&mut lines, "alpha").unwrap(), "alpha", 2).unwrap();
+        assert_eq!(v, vec!["1", "2"]);
+        let err = codec::values("beta 3", "alpha", 1).unwrap_err().to_string();
+        assert!(err.contains("alpha"), "{err}");
+        let err = codec::values("beta 3 4", "beta", 1).unwrap_err().to_string();
+        assert!(err.contains("expected 1"), "{err}");
+        assert!(codec::flag("1").unwrap());
+        assert!(!codec::flag("0").unwrap());
+        assert!(codec::flag("2").is_err());
+        let mut empty = "".lines();
+        let err = codec::take(&mut empty, "header").unwrap_err().to_string();
+        assert!(err.contains("header"), "{err}");
     }
 }

@@ -69,21 +69,27 @@ pub enum Strategy {
 }
 
 impl Strategy {
-    /// The 11 strategies of the paper's inventory, in PSID order.
+    /// The 11 strategies of the paper's inventory, in PSID order, as a
+    /// const array — the allocation-free form used by the encoding and
+    /// selection hot paths (one `encode` + `select` per candidate must
+    /// not allocate an inventory vector each call).
+    pub const INVENTORY: [Strategy; 11] = [
+        Strategy::OneDSrc,
+        Strategy::OneDDst,
+        Strategy::Random,
+        Strategy::CanonicalRandom,
+        Strategy::TwoD,
+        Strategy::Hybrid,
+        Strategy::Hdrf(10),
+        Strategy::Hdrf(20),
+        Strategy::Hdrf(50),
+        Strategy::Hdrf(100),
+        Strategy::Ginger,
+    ];
+
+    /// The inventory as a `Vec` (see [`Strategy::INVENTORY`]).
     pub fn inventory() -> Vec<Strategy> {
-        vec![
-            Strategy::OneDSrc,
-            Strategy::OneDDst,
-            Strategy::Random,
-            Strategy::CanonicalRandom,
-            Strategy::TwoD,
-            Strategy::Hybrid,
-            Strategy::Hdrf(10),
-            Strategy::Hdrf(20),
-            Strategy::Hdrf(50),
-            Strategy::Hdrf(100),
-            Strategy::Ginger,
-        ]
+        Self::INVENTORY.to_vec()
     }
 
     /// All 12 implemented strategies (inventory + Oblivious).

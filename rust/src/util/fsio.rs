@@ -1,13 +1,21 @@
-//! Crash-safe file I/O: write-temp-then-rename commits.
+//! Crash-safe file I/O: write-temp-then-rename commits, plus the shared
+//! exact-bit `f64` text convention of the persistent artifacts.
 //!
-//! The corpus checkpoint store (and anything else that persists state a
-//! crash must not corrupt) funnels every file commit through
-//! [`write_atomic`]: content is written and flushed to a temporary
-//! sibling file in the *same directory* (so the final rename cannot
-//! cross a filesystem boundary) and only then renamed over the target.
-//! On POSIX filesystems the rename is atomic, so a reader — including a
-//! resumed build after a mid-write crash — observes either the complete
-//! old file, the complete new file, or no file; never a torn prefix.
+//! The corpus checkpoint store and the ETRM model store (and anything
+//! else that persists state a crash must not corrupt) funnel every file
+//! commit through [`write_atomic`]: content is written and flushed to a
+//! temporary sibling file in the *same directory* (so the final rename
+//! cannot cross a filesystem boundary) and only then renamed over the
+//! target. On POSIX filesystems the rename is atomic, so a reader —
+//! including a resumed build after a mid-write crash — observes either
+//! the complete old file, the complete new file, or no file; never a
+//! torn prefix.
+//!
+//! [`f64_hex`]/[`parse_f64_hex`] are the on-disk float convention those
+//! artifacts share (`{:016x}` of `f64::to_bits`): every value —
+//! subnormals, -0.0, NaN payloads — round-trips bit-exactly, which is
+//! what makes checkpoint resume and model save→load provably
+//! bit-identical.
 
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -34,6 +42,19 @@ fn temp_sibling(path: &Path) -> Result<PathBuf> {
         std::process::id(),
         SEQ.fetch_add(1, Ordering::Relaxed)
     )))
+}
+
+/// Exact-bit rendering of an `f64` (`{:016x}` of [`f64::to_bits`]).
+pub fn f64_hex(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+/// Inverse of [`f64_hex`]: parse a 16-digit hex bit pattern back into
+/// the identical `f64`.
+pub fn parse_f64_hex(s: &str) -> Result<f64> {
+    let bits =
+        u64::from_str_radix(s, 16).with_context(|| format!("bad f64 bit pattern {s:?}"))?;
+    Ok(f64::from_bits(bits))
 }
 
 /// Atomically replace `path` with `bytes`: write + flush a temporary
@@ -67,6 +88,25 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
         dir
+    }
+
+    #[test]
+    fn f64_hex_roundtrips_every_bit_pattern() {
+        for x in [
+            0.0,
+            -0.0,
+            1.5,
+            -3.25e300,
+            f64::MIN_POSITIVE / 2.0, // subnormal
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+        ] {
+            assert_eq!(parse_f64_hex(&f64_hex(x)).unwrap().to_bits(), x.to_bits());
+        }
+        // NaN payload bits survive too
+        let nan = f64::from_bits(0x7ff8_dead_beef_0001);
+        assert_eq!(parse_f64_hex(&f64_hex(nan)).unwrap().to_bits(), nan.to_bits());
+        assert!(parse_f64_hex("not-hex").is_err());
     }
 
     #[test]

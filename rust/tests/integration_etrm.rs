@@ -11,6 +11,7 @@ use gps_select::features::{encode, FEATURE_DIM};
 use gps_select::graph::datasets::DatasetSpec;
 use gps_select::ml::gbdt::GbdtParams;
 use gps_select::ml::metrics::spearman;
+use gps_select::ml::Label;
 use gps_select::partition::Strategy;
 
 fn small_corpus(scale: f64) -> LogStore {
@@ -43,6 +44,7 @@ fn generalises_to_unseen_graph() {
     let etrm = Etrm::train_gbdt(
         &synthetic,
         GbdtParams { n_estimators: 200, max_depth: 8, ..GbdtParams::paper() },
+        Label::SimTime,
     );
     // rank correlation between predicted and real times on the unseen
     // graph must be clearly positive for the expensive algorithms
@@ -71,6 +73,7 @@ fn synthetic_tasks_predict_larger_times() {
     let etrm = Etrm::train_gbdt(
         &synthetic,
         GbdtParams { n_estimators: 120, max_depth: 8, ..GbdtParams::fast() },
+        Label::SimTime,
     );
     let aid = store
         .logs
@@ -111,7 +114,37 @@ fn encoding_stability_and_dimension() {
 #[test]
 #[should_panic(expected = "empty")]
 fn empty_training_set_panics() {
-    Etrm::train_gbdt(&[], GbdtParams::fast());
+    Etrm::train_gbdt(&[], GbdtParams::fast(), Label::SimTime);
+}
+
+/// The measured wall-clock label channel trains end to end: same
+/// features, genuinely different targets, finite positive predictions,
+/// and a valid selection.
+#[test]
+fn wall_clock_label_channel_trains() {
+    use gps_select::etrm::model::encode_logs;
+    let store = small_corpus(0.008);
+    let synthetic = augment(&store, 2..=4, Some(4000), 3);
+    assert!(!synthetic.is_empty());
+    let sim = encode_logs(&synthetic, Label::SimTime);
+    let wall = encode_logs(&synthetic, Label::WallClock);
+    assert_eq!(sim.len(), wall.len());
+    assert_eq!(sim.label, Label::SimTime);
+    assert_eq!(wall.label, Label::WallClock);
+    assert!(wall.y.iter().all(|&v| v > 0.0 && v.is_finite()));
+    assert_ne!(sim.y, wall.y, "oracle seconds vs measured milliseconds");
+    let etrm = Etrm::train_gbdt(
+        &synthetic,
+        GbdtParams { n_estimators: 40, max_depth: 6, ..GbdtParams::fast() },
+        Label::WallClock,
+    );
+    assert_eq!(etrm.label, Label::WallClock);
+    let preds: Vec<f64> = Strategy::inventory()
+        .iter()
+        .map(|s| etrm.predict(&store.logs[0].features, *s))
+        .collect();
+    assert!(preds.iter().all(|t| t.is_finite() && *t > 0.0), "{preds:?}");
+    assert!(Strategy::inventory().contains(&etrm.select(&store.logs[0].features)));
 }
 
 /// Selection works even when all candidate times are identical
@@ -126,6 +159,7 @@ fn degenerate_equal_times_still_selects() {
     let etrm = Etrm::train_gbdt(
         &logs,
         GbdtParams { n_estimators: 30, max_depth: 4, ..GbdtParams::fast() },
+        Label::SimTime,
     );
     let s = etrm.select(&store.logs[0].features);
     assert!(Strategy::inventory().contains(&s));

@@ -44,6 +44,25 @@ cut -d, -f1-4,6- "$CKPT_TMP/clean.csv" > "$CKPT_TMP/clean.det.csv"
 cmp "$CKPT_TMP/resumed.det.csv" "$CKPT_TMP/clean.det.csv"
 echo "verify: checkpoint resume round-trip is bit-identical (wall-clock column excluded)"
 
+# ETRM model lifecycle round-trip (same gate CI's release job runs):
+# train a tiny model and save the artifact, writing the *in-memory*
+# model's predict_all output for a probe task as exact f64 bit
+# patterns; then reload the artifact in a fresh process via `repro
+# select` and byte-compare its predictions. Any serialization drift —
+# a single mantissa bit — fails the cmp.
+"$REPRO" train --scale 0.002 --seed 7 --workers 16 --trees 20 --depth 4 --cap 2000 \
+    --model-out "$CKPT_TMP/model.etrm" --probe wiki/PR --probe-bits "$CKPT_TMP/train.bits"
+"$REPRO" select --model "$CKPT_TMP/model.etrm" --scale 0.002 --seed 7 \
+    --graph wiki --algorithm PR --bits-out "$CKPT_TMP/select.bits"
+cmp "$CKPT_TMP/train.bits" "$CKPT_TMP/select.bits"
+# a wrong label-channel demand must be rejected, not silently served
+if "$REPRO" select --model "$CKPT_TMP/model.etrm" --label wall_clock \
+    --graph wiki --algorithm PR >/dev/null 2>&1; then
+    echo "verify: FAIL — label-channel mismatch was not rejected" >&2
+    exit 1
+fi
+echo "verify: model save→load→select round-trip is bit-identical (and label demands enforced)"
+
 # ~10-second engine bench smoke in release mode: runs only the engine
 # rows of benches/hotpath.rs (no full cargo-bench sweep) and records
 # the sim-vs-threaded-vs-socket timings at the repository root.
