@@ -52,6 +52,7 @@ fn main() -> Result<()> {
         },
         ..default
     };
+    #[allow(clippy::disallowed_methods)] // progress timestamps for the console log
     let t0 = std::time::Instant::now();
     let eval = pipeline::run_with_progress(config, |stage| {
         eprintln!("[{:7.1?}] {stage}", t0.elapsed());

@@ -34,6 +34,7 @@ pub fn bench_config() -> PipelineConfig {
 }
 
 /// Run (and time) the full pipeline once for artifact rendering.
+#[allow(clippy::disallowed_methods)] // bench progress timestamps, not labels
 pub fn pipeline_eval() -> Evaluation {
     let t0 = std::time::Instant::now();
     let eval = run_with_progress(bench_config(), |stage| {

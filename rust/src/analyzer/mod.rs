@@ -248,7 +248,7 @@ mod tests {
         assert_eq!(OpKey::Apply.category(), "Basic");
         assert_eq!(OpKey::NumVertex.category(), "Graph Object");
         // names unique
-        let names: std::collections::HashSet<_> =
+        let names: std::collections::BTreeSet<_> =
             OpKey::all().iter().map(|k| k.name()).collect();
         assert_eq!(names.len(), 21);
     }

@@ -1,9 +1,11 @@
-//! Lexer for the pseudo-code language of §4.1.2 (Listing 1).
+//! Lexer for the pseudo-code language of §4.1.2 (Listing 1), plus a
+//! permissive line-tracking Rust lexer ([`lex_rust`]) shared with the
+//! `audit` determinism linter.
 //!
-//! The language is the small C-like dialect the paper feeds to its
-//! JavaCC analyzer: declarations, assignments, `for`/`if` control flow,
-//! member access, calls, arithmetic and comparison operators, `//`
-//! comments, numeric and string literals.
+//! The pseudo-code language is the small C-like dialect the paper feeds
+//! to its JavaCC analyzer: declarations, assignments, `for`/`if`
+//! control flow, member access, calls, arithmetic and comparison
+//! operators, `//` comments, numeric and string literals.
 
 use crate::util::error::{bail, err, Result};
 
@@ -110,6 +112,258 @@ pub fn lex(src: &str) -> Result<Vec<Token>> {
     Ok(out)
 }
 
+/// A Rust token paired with its 1-based source line — the unit the
+/// `audit` rule engine matches on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RustToken {
+    pub tok: RustTok,
+    pub line: u32,
+}
+
+/// Token kinds of the permissive Rust lexer. Multi-character operators
+/// are *not* fused: `::` is two `Punct(':')`, `->` is `Punct('-')
+/// Punct('>')` — rule patterns match the raw sequence, which keeps the
+/// lexer trivially total over operator soup.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RustTok {
+    /// Identifier, keyword or raw identifier body.
+    Ident(String),
+    /// `'a` in generics/references (distinct from a char literal).
+    Lifetime(String),
+    /// Numeric literal, verbatim (`0x7f`, `1_000`, `2.5e-3f64`, …).
+    Number(String),
+    /// String literal body (escapes kept verbatim; raw strings
+    /// unwrapped).
+    Str(String),
+    /// Char or byte-char literal (the body is irrelevant to auditing).
+    Char,
+    /// `// …` comment body (without the slashes) — kept so
+    /// `audit:allow` annotations can be read off the stream.
+    LineComment(String),
+    /// `/* … */` comment body, nesting-aware.
+    BlockComment(String),
+    /// Any other single character (`{ } ( ) ; , . : # ! & …`).
+    Punct(char),
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Tokenize Rust source, permissively: the only errors are unterminated
+/// string literals and unterminated block comments. Anything the lexer
+/// does not model (macro sigils, operators, attributes) degrades to
+/// single-character [`RustTok::Punct`] tokens, which is exactly enough
+/// structure for token-pattern lint rules.
+pub fn lex_rust(src: &str) -> Result<Vec<RustToken>> {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        let start_line = line;
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            ' ' | '\t' | '\r' => i += 1,
+            '/' if i + 1 < b.len() && b[i + 1] == '/' => {
+                let start = i + 2;
+                let mut j = start;
+                while j < b.len() && b[j] != '\n' {
+                    j += 1;
+                }
+                out.push(RustToken {
+                    tok: RustTok::LineComment(b[start..j].iter().collect()),
+                    line: start_line,
+                });
+                i = j;
+            }
+            '/' if i + 1 < b.len() && b[i + 1] == '*' => {
+                let start = i + 2;
+                let mut j = start;
+                let mut depth = 1usize;
+                while j < b.len() && depth > 0 {
+                    if b[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                    } else if b[j] == '/' && j + 1 < b.len() && b[j + 1] == '*' {
+                        depth += 1;
+                        j += 2;
+                    } else if b[j] == '*' && j + 1 < b.len() && b[j + 1] == '/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                if depth > 0 {
+                    bail!("unterminated block comment starting at line {start_line}");
+                }
+                out.push(RustToken {
+                    tok: RustTok::BlockComment(b[start..j - 2].iter().collect()),
+                    line: start_line,
+                });
+                i = j;
+            }
+            '"' => {
+                let (body, j, nl) = scan_string(&b, i, start_line)?;
+                line += nl;
+                out.push(RustToken { tok: RustTok::Str(body), line: start_line });
+                i = j;
+            }
+            '\'' => {
+                // lifetime (`'a`) vs char literal (`'x'`, `'\n'`, `'\u{…}'`)
+                if i + 1 < b.len() && b[i + 1] == '\\' {
+                    // escaped char literal: skip the escaped character,
+                    // then scan to the closing quote
+                    let mut j = i + 3;
+                    while j < b.len() && b[j] != '\'' {
+                        j += 1;
+                    }
+                    if j == b.len() {
+                        bail!("unterminated char literal at line {start_line}");
+                    }
+                    out.push(RustToken { tok: RustTok::Char, line: start_line });
+                    i = j + 1;
+                } else if i + 2 < b.len() && b[i + 2] == '\'' && b[i + 1] != '\'' {
+                    out.push(RustToken { tok: RustTok::Char, line: start_line });
+                    i += 3;
+                } else if i + 1 < b.len() && is_ident_start(b[i + 1]) {
+                    let start = i + 1;
+                    let mut j = start;
+                    while j < b.len() && is_ident_continue(b[j]) {
+                        j += 1;
+                    }
+                    out.push(RustToken {
+                        tok: RustTok::Lifetime(b[start..j].iter().collect()),
+                        line: start_line,
+                    });
+                    i = j;
+                } else {
+                    out.push(RustToken { tok: RustTok::Punct('\''), line: start_line });
+                    i += 1;
+                }
+            }
+            '0'..='9' => {
+                let start = i;
+                i += 1;
+                while i < b.len() {
+                    let d = b[i];
+                    if d.is_ascii_alphanumeric() || d == '_' {
+                        i += 1;
+                    } else if d == '.' && i + 1 < b.len() && b[i + 1].is_ascii_digit() {
+                        // fraction only when a digit follows, so range
+                        // expressions (`0..10`) and tuple indexing
+                        // (`t.0`) lex as separate tokens
+                        i += 1;
+                    } else if (d == '+' || d == '-')
+                        && matches!(b[i - 1], 'e' | 'E')
+                        && b[start..i].iter().any(|x| x.is_ascii_digit())
+                    {
+                        // exponent sign (`2.5e-3`)
+                        i += 1;
+                    } else {
+                        break;
+                    }
+                }
+                out.push(RustToken {
+                    tok: RustTok::Number(b[start..i].iter().collect()),
+                    line: start_line,
+                });
+            }
+            c if is_ident_start(c) => {
+                let start = i;
+                while i < b.len() && is_ident_continue(b[i]) {
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                // raw/byte string literal prefixes: r"…", r#"…"#, b"…", br"…"
+                if matches!(text.as_str(), "r" | "b" | "br" | "rb") && i < b.len() {
+                    if b[i] == '"' {
+                        let (body, j, nl) = scan_string(&b, i, start_line)?;
+                        line += nl;
+                        out.push(RustToken { tok: RustTok::Str(body), line: start_line });
+                        i = j;
+                        continue;
+                    }
+                    if b[i] == '#' && text.starts_with('r') {
+                        let mut hashes = 0usize;
+                        let mut j = i;
+                        while j < b.len() && b[j] == '#' {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if j < b.len() && b[j] == '"' {
+                            let (body, k, nl) = scan_raw_string(&b, j + 1, hashes, start_line)?;
+                            line += nl;
+                            out.push(RustToken { tok: RustTok::Str(body), line: start_line });
+                            i = k;
+                            continue;
+                        }
+                        // `r#ident` raw identifier: fall through, the
+                        // `#` lexes as Punct and the body as an Ident
+                    }
+                }
+                out.push(RustToken { tok: RustTok::Ident(text), line: start_line });
+            }
+            other => {
+                out.push(RustToken { tok: RustTok::Punct(other), line: start_line });
+                i += 1;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Scan an escape-aware `"…"` literal starting at the opening quote.
+/// Returns (body, index after the closing quote, newlines consumed).
+fn scan_string(b: &[char], open: usize, line: u32) -> Result<(String, usize, u32)> {
+    let start = open + 1;
+    let mut j = start;
+    let mut nl = 0u32;
+    while j < b.len() {
+        match b[j] {
+            '\\' => j += 2,
+            '"' => {
+                return Ok((b[start..j].iter().collect(), j + 1, nl));
+            }
+            '\n' => {
+                nl += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    bail!("unterminated string literal starting at line {line}")
+}
+
+/// Scan a raw string body after its opening quote: ends at `"` followed
+/// by `hashes` `#` characters. No escapes.
+fn scan_raw_string(b: &[char], start: usize, hashes: usize, line: u32) -> Result<(String, usize, u32)> {
+    let mut j = start;
+    let mut nl = 0u32;
+    while j < b.len() {
+        if b[j] == '"'
+            && b.len() - j - 1 >= hashes
+            && b[j + 1..j + 1 + hashes].iter().all(|&h| h == '#')
+        {
+            return Ok((b[start..j].iter().collect(), j + 1 + hashes, nl));
+        }
+        if b[j] == '\n' {
+            nl += 1;
+        }
+        j += 1;
+    }
+    bail!("unterminated raw string literal starting at line {line}")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,5 +407,89 @@ mod tests {
         assert!(lex("\"unterminated").is_err());
         assert!(lex("a # b").is_err());
         assert!(lex("1.2.3.4").is_err());
+    }
+
+    fn rust_kinds(src: &str) -> Vec<RustTok> {
+        lex_rust(src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn rust_lexes_idents_puncts_and_lines() {
+        let toks = lex_rust("use std::collections::HashMap;\nlet x = 1;").unwrap();
+        let hm = toks
+            .iter()
+            .find(|t| t.tok == RustTok::Ident("HashMap".into()))
+            .unwrap();
+        assert_eq!(hm.line, 1);
+        let x = toks.iter().find(|t| t.tok == RustTok::Ident("x".into())).unwrap();
+        assert_eq!(x.line, 2);
+        // `::` stays two single-char puncts
+        assert!(toks.windows(2).any(|w| w[0].tok == RustTok::Punct(':')
+            && w[1].tok == RustTok::Punct(':')));
+    }
+
+    #[test]
+    fn rust_comments_carry_bodies_and_lines() {
+        let toks =
+            lex_rust("// audit:allow(x): why\n/* block\nspans */ fn f() {}").unwrap();
+        assert_eq!(
+            toks[0],
+            RustToken { tok: RustTok::LineComment(" audit:allow(x): why".into()), line: 1 }
+        );
+        assert_eq!(
+            toks[1],
+            RustToken { tok: RustTok::BlockComment(" block\nspans ".into()), line: 2 }
+        );
+        // the fn after the 2-line block comment is on line 3
+        assert_eq!(toks[2], RustToken { tok: RustTok::Ident("fn".into()), line: 3 });
+    }
+
+    #[test]
+    fn rust_nested_block_comments_and_errors() {
+        let toks = rust_kinds("/* a /* nested */ b */ x");
+        assert_eq!(toks.len(), 2);
+        assert_eq!(toks[1], RustTok::Ident("x".into()));
+        assert!(lex_rust("/* never closed").is_err());
+        assert!(lex_rust("\"never closed").is_err());
+    }
+
+    #[test]
+    fn rust_strings_raw_strings_and_escapes() {
+        assert_eq!(
+            rust_kinds(r#"let s = "a\"b";"#)
+                .into_iter()
+                .filter(|t| matches!(t, RustTok::Str(_)))
+                .collect::<Vec<_>>(),
+            vec![RustTok::Str("a\\\"b".into())]
+        );
+        let toks = rust_kinds("let s = r#\"raw \"quoted\" body\"#;");
+        assert!(toks.contains(&RustTok::Str("raw \"quoted\" body".into())));
+        let toks = rust_kinds("let s = r\"no hashes\";");
+        assert!(toks.contains(&RustTok::Str("no hashes".into())));
+    }
+
+    #[test]
+    fn rust_lifetimes_vs_char_literals() {
+        let toks = rust_kinds("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert_eq!(
+            toks.iter().filter(|t| matches!(t, RustTok::Lifetime(_))).count(),
+            2
+        );
+        assert_eq!(toks.iter().filter(|t| matches!(t, RustTok::Char)).count(), 1);
+        let toks = rust_kinds(r"let c = '\n'; let q = '\'';");
+        assert_eq!(toks.iter().filter(|t| matches!(t, RustTok::Char)).count(), 2);
+    }
+
+    #[test]
+    fn rust_numbers_ranges_and_tuple_indexing() {
+        let toks = rust_kinds("for i in 0..10 { t.0 += 2.5e-3; x = 0x7f_u8; }");
+        let nums: Vec<String> = toks
+            .iter()
+            .filter_map(|t| match t {
+                RustTok::Number(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(nums, vec!["0", "10", "0", "2.5e-3", "0x7f_u8"]);
     }
 }

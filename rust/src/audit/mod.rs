@@ -1,0 +1,187 @@
+//! `repro audit` — the static determinism linter.
+//!
+//! Every headline guarantee of this reproduction rests on bit-identical
+//! determinism: execution logs identical across the three engine
+//! transports and any worker count, checkpoint resume identical to a
+//! clean build, model artifacts identical across save→load. Those
+//! invariants are enforced dynamically by tests, but the *disciplines*
+//! that make them hold are textual and easy to erode one edit at a
+//! time: an iteration over a `HashMap`, a float formatted with
+//! `Display` on its way into an artifact, a stray `Instant::now()`
+//! feeding a label. This module audits `rust/src` itself — using the
+//! in-repo Rust lexer (`analyzer::token::lex_rust`), no external
+//! tooling — and fails CI when a discipline is broken.
+//!
+//! The rule table lives in [`rules`], the module scoping in [`scope`],
+//! and the output formats in [`report`]. Suppressions are per-site
+//! `audit:allow` annotations with mandatory justifications; see the
+//! README's "Determinism invariants" section for the catalogue.
+
+pub mod report;
+pub mod rules;
+pub mod scope;
+
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Context, Result};
+
+pub use report::{Report, Violation};
+pub use rules::{
+    RULE_ALLOW, RULE_FLOAT_FMT, RULE_HASH, RULE_INSTANT, RULE_PARTIAL_CMP, RULE_UNWRAP_BUDGET,
+};
+
+/// The ratchet for non-test `.unwrap()`/`.expect()` in `engine` and
+/// `dataset`: exactly the number of sites in the tree when the audit
+/// landed. New sites must either clear the error path properly or raise
+/// this constant in the same change that justifies them.
+pub const DEFAULT_UNWRAP_BUDGET: usize = 41;
+
+/// Audit every `.rs` file under `root` with the default budget.
+pub fn audit_tree(root: &Path) -> Result<Report> {
+    audit_tree_with_budget(root, DEFAULT_UNWRAP_BUDGET)
+}
+
+/// Audit every `.rs` file under `root` against an explicit unwrap
+/// budget. Files are visited in sorted relative-path order, so reports
+/// (and the budget's "first N sites are inside budget" attribution) are
+/// stable across platforms.
+pub fn audit_tree_with_budget(root: &Path, unwrap_budget: usize) -> Result<Report> {
+    let mut files: Vec<(String, PathBuf)> = Vec::new();
+    collect_rs_files(root, root, &mut files)?;
+    files.sort();
+
+    let mut violations: Vec<Violation> = Vec::new();
+    let mut sites: Vec<(String, u32)> = Vec::new();
+    for (rel, path) in &files {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("audit: read {}", path.display()))?;
+        let scan =
+            rules::scan_file(rel, &src).with_context(|| format!("audit: lex {rel}"))?;
+        violations.extend(scan.violations);
+        sites.extend(scan.unwrap_lines.into_iter().map(|l| (rel.clone(), l)));
+    }
+
+    if sites.len() > unwrap_budget {
+        for (i, (file, line)) in sites.iter().enumerate().skip(unwrap_budget) {
+            violations.push(Violation {
+                file: file.clone(),
+                line: *line,
+                rule: rules::RULE_UNWRAP_BUDGET,
+                message: format!(
+                    "unwrap/expect site {} of {} exceeds the engine/dataset budget of {}",
+                    i + 1,
+                    sites.len(),
+                    unwrap_budget
+                ),
+                hint: rules::HINT_UNWRAP,
+            });
+        }
+    }
+
+    violations.sort();
+    Ok(Report {
+        root: root.display().to_string(),
+        files_scanned: files.len(),
+        violations,
+        unwrap_sites: sites.len(),
+        unwrap_budget,
+    })
+}
+
+/// Audit a single in-memory file (per-file rules only — the unwrap
+/// budget needs the whole tree). `rel_path` decides the rule scopes.
+pub fn audit_file(rel_path: &str, src: &str) -> Result<Vec<Violation>> {
+    let mut scan = rules::scan_file(rel_path, src)?;
+    scan.violations.sort();
+    Ok(scan.violations)
+}
+
+/// Recursively collect `.rs` files as (slash-relative path, full path),
+/// directory entries sorted for deterministic traversal.
+fn collect_rs_files(
+    root: &Path,
+    dir: &Path,
+    out: &mut Vec<(String, PathBuf)>,
+) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("audit: read dir {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs_files(root, &p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            let rel = p
+                .strip_prefix(root)
+                .map_err(|_| crate::err!("audit: {} escapes {}", p.display(), root.display()))?
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push((rel, p));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("gps_audit_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn write(dir: &Path, rel: &str, src: &str) {
+        let path = dir.join(rel);
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(path, src).unwrap();
+    }
+
+    #[test]
+    fn tree_walk_scopes_and_sorts() {
+        let dir = scratch("walk");
+        write(&dir, "engine/state.rs", "use std::collections::HashMap;\n");
+        write(&dir, "util/rng.rs", "use std::collections::HashMap;\n");
+        write(&dir, "engine/notes.txt", "HashMap here is not Rust\n");
+        let r = audit_tree(&dir).unwrap();
+        assert_eq!(r.files_scanned, 2);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].file, "engine/state.rs");
+        assert_eq!(r.violations[0].rule, RULE_HASH);
+        assert!(!r.is_clean());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unwrap_budget_flags_only_excess_sites() {
+        let dir = scratch("budget");
+        write(&dir, "engine/a.rs", "fn f() { x.unwrap(); y.unwrap(); }\n");
+        write(&dir, "dataset/b.rs", "fn g() { z.expect(\"boom\"); }\n");
+        write(&dir, "etrm/c.rs", "fn h() { out_of_scope.unwrap(); }\n");
+        let clean = audit_tree_with_budget(&dir, 3).unwrap();
+        assert!(clean.is_clean(), "{:?}", clean.violations);
+        assert_eq!(clean.unwrap_sites, 3);
+        let over = audit_tree_with_budget(&dir, 1).unwrap();
+        let budget_viols: Vec<_> =
+            over.violations.iter().filter(|v| v.rule == RULE_UNWRAP_BUDGET).collect();
+        assert_eq!(budget_viols.len(), 2);
+        // sites are attributed in sorted file order, so the one
+        // in-budget site is dataset/b.rs and both excess sites land in
+        // engine/a.rs
+        assert!(budget_viols.iter().all(|v| v.file == "engine/a.rs"), "{budget_viols:?}");
+        assert!(budget_viols[0].message.contains("site 2 of 3"), "{budget_viols:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn audit_file_sorts_violations() {
+        let src = "fn f() { let t = Instant::now(); }\nuse std::collections::HashSet;\n";
+        let v = audit_file("partition/hybrid.rs", src).unwrap();
+        assert_eq!(v.len(), 2);
+        assert!(v[0].line <= v[1].line);
+    }
+}

@@ -1,0 +1,161 @@
+//! Audit findings and their renderings: the human `file:line` listing
+//! the CLI prints and the machine-readable JSON document the CI job
+//! uploads.
+
+use std::fmt::Write as _;
+
+/// One rule violation, anchored to a source location.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Violation {
+    /// Path relative to the scan root, `/`-separated.
+    pub file: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// Stable rule identifier (`hash-collections`, `partial-cmp`, …).
+    pub rule: &'static str,
+    /// What was found.
+    pub message: String,
+    /// How to fix it.
+    pub hint: &'static str,
+}
+
+/// The result of auditing a tree.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// Scan root as given.
+    pub root: String,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// All violations, sorted by (file, line, rule).
+    pub violations: Vec<Violation>,
+    /// Non-test `.unwrap()`/`.expect()` sites found in budget scope.
+    pub unwrap_sites: usize,
+    /// The budget those sites were checked against.
+    pub unwrap_budget: usize,
+}
+
+impl Report {
+    /// True when the tree passed every rule.
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Human-readable listing (one violation per block).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for v in &self.violations {
+            let _ = writeln!(out, "{}:{} [{}] {}", v.file, v.line, v.rule, v.message);
+            let _ = writeln!(out, "    fix: {}", v.hint);
+        }
+        let _ = writeln!(
+            out,
+            "audit: {} file(s), {} violation(s); unwrap budget {}/{} used",
+            self.files_scanned,
+            self.violations.len(),
+            self.unwrap_sites,
+            self.unwrap_budget
+        );
+        out
+    }
+
+    /// Machine-readable JSON document (hand-rolled; the crate is
+    /// dependency-free).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        let _ = writeln!(out, "  \"root\": {},", json_str(&self.root));
+        let _ = writeln!(out, "  \"files_scanned\": {},", self.files_scanned);
+        let _ = writeln!(out, "  \"unwrap_sites\": {},", self.unwrap_sites);
+        let _ = writeln!(out, "  \"unwrap_budget\": {},", self.unwrap_budget);
+        let _ = writeln!(out, "  \"clean\": {},", self.is_clean());
+        out.push_str("  \"violations\": [");
+        for (i, v) in self.violations.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n    {");
+            let _ = write!(
+                out,
+                "\"file\": {}, \"line\": {}, \"rule\": {}, \"message\": {}, \"hint\": {}",
+                json_str(&v.file),
+                v.line,
+                json_str(v.rule),
+                json_str(&v.message),
+                json_str(v.hint)
+            );
+            out.push('}');
+        }
+        if !self.violations.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str("]\n}\n");
+        out
+    }
+}
+
+/// JSON string literal with escaping.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        Report {
+            root: "src".into(),
+            files_scanned: 2,
+            violations: vec![Violation {
+                file: "engine/mod.rs".into(),
+                line: 7,
+                rule: "hash-collections",
+                message: "HashMap in determinism-critical module `engine`".into(),
+                hint: "use BTreeMap/BTreeSet or a sorted Vec",
+            }],
+            unwrap_sites: 3,
+            unwrap_budget: 41,
+        }
+    }
+
+    #[test]
+    fn text_rendering_lists_location_rule_and_hint() {
+        let r = sample();
+        let text = r.render_text();
+        assert!(text.contains("engine/mod.rs:7 [hash-collections]"), "{text}");
+        assert!(text.contains("fix: use BTreeMap"), "{text}");
+        assert!(text.contains("unwrap budget 3/41"), "{text}");
+        assert!(!r.is_clean());
+    }
+
+    #[test]
+    fn json_shape_and_escaping() {
+        let mut r = sample();
+        r.violations[0].message = "quote \" and\nnewline".into();
+        let j = r.to_json();
+        assert!(j.contains("\"files_scanned\": 2"), "{j}");
+        assert!(j.contains("\"clean\": false"), "{j}");
+        assert!(j.contains("\"rule\": \"hash-collections\""), "{j}");
+        assert!(j.contains("quote \\\" and\\nnewline"), "{j}");
+        let clean = Report { violations: vec![], ..r };
+        let j = clean.to_json();
+        assert!(j.contains("\"violations\": []"), "{j}");
+        assert!(j.contains("\"clean\": true"), "{j}");
+    }
+}

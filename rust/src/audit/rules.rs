@@ -1,0 +1,572 @@
+//! The determinism rule table and its token-pattern detectors.
+//!
+//! Every rule works on the permissive token stream of
+//! `analyzer::token::lex_rust` — no type information, no macro
+//! expansion. That is deliberate: the invariants being enforced are
+//! *textual* disciplines (which collection names appear, which method
+//! chains are spelled, which macros format which identifiers), so
+//! token patterns catch them without a compiler in the loop, and the
+//! linter stays runnable from the plain `repro` binary in CI.
+//!
+//! Rules are suppressed per-site with an inline annotation on the same
+//! line or the line above:
+//!
+//! ```text
+//! // audit:allow(instant-now): connect timeout, not a label source
+//! ```
+//!
+//! The justification after the `:` is mandatory — a bare allow with no
+//! text after the rule name is itself reported as `unjustified-allow`,
+//! so every suppression in the tree carries its reasoning next to it.
+
+use std::collections::BTreeMap;
+
+use crate::analyzer::token::{lex_rust, RustTok, RustToken};
+use crate::util::error::Result;
+
+use super::report::Violation;
+use super::scope;
+
+/// `HashMap`/`HashSet` named in a determinism-critical module.
+pub const RULE_HASH: &str = "hash-collections";
+/// `partial_cmp(..).unwrap()`/`.expect()` chain anywhere.
+pub const RULE_PARTIAL_CMP: &str = "partial-cmp";
+/// Display/Debug-formatted `f64` in a persistence/wire file.
+pub const RULE_FLOAT_FMT: &str = "float-fmt";
+/// `Instant::now()` outside the blessed transport-driver choke point.
+pub const RULE_INSTANT: &str = "instant-now";
+/// Non-test `.unwrap()`/`.expect()` count in engine/dataset over budget.
+pub const RULE_UNWRAP_BUDGET: &str = "unwrap-budget";
+/// `audit:allow` with no justification or an unknown rule name.
+pub const RULE_ALLOW: &str = "unjustified-allow";
+
+/// Every rule id, for docs and the allow-annotation validator.
+pub const ALL_RULES: &[&str] =
+    &[RULE_HASH, RULE_PARTIAL_CMP, RULE_FLOAT_FMT, RULE_INSTANT, RULE_UNWRAP_BUDGET, RULE_ALLOW];
+
+/// Rules an `audit:allow` annotation may name (the per-site rules; the
+/// budget is a tree-wide count and the allow rule guards itself).
+const ALLOWABLE_RULES: &[&str] = &[RULE_HASH, RULE_PARTIAL_CMP, RULE_FLOAT_FMT, RULE_INSTANT];
+
+const HINT_HASH: &str =
+    "use BTreeMap/BTreeSet or a sorted Vec; Hash* iteration order is nondeterministic";
+const HINT_PARTIAL_CMP: &str = "use total_cmp (total order over all f64 bit patterns)";
+const HINT_FLOAT_FMT: &str =
+    "route persisted/transmitted f64 through util::fsio::f64_hex or engine::wire";
+const HINT_INSTANT: &str =
+    "wall-clock reads only at engine::try_run_mode (the measured-label choke point)";
+pub(crate) const HINT_UNWRAP: &str =
+    "handle the failure with util::error (bail!/ensure!/Context) or raise the audited budget \
+     deliberately";
+const HINT_ALLOW: &str =
+    "write `// audit:allow(rule): <justification>` naming a real per-site rule";
+
+/// Format-like macros whose first string argument is a format string.
+const FMT_MACROS: &[&str] = &[
+    "format", "write", "writeln", "print", "println", "eprint", "eprintln", "panic", "bail",
+    "err",
+];
+
+/// The per-file scan result: violations plus the file's contribution to
+/// the tree-wide unwrap budget.
+#[derive(Debug, Default)]
+pub(crate) struct FileScan {
+    pub violations: Vec<Violation>,
+    /// Lines of non-test `.unwrap()`/`.expect()` sites, when the file
+    /// is in budget scope.
+    pub unwrap_lines: Vec<u32>,
+}
+
+/// A parsed `audit:allow` annotation.
+struct Allow {
+    rule: String,
+    justified: bool,
+}
+
+/// Run every per-file rule over one source file.
+pub(crate) fn scan_file(rel_path: &str, src: &str) -> Result<FileScan> {
+    let toks = lex_rust(src)?;
+    let mut code: Vec<RustToken> = Vec::with_capacity(toks.len());
+    let mut allows: BTreeMap<u32, Vec<Allow>> = BTreeMap::new();
+    let mut out = FileScan::default();
+
+    for t in toks {
+        match &t.tok {
+            RustTok::LineComment(body) | RustTok::BlockComment(body) => {
+                if let Some((allow, bad)) = parse_allow(body, t.line, rel_path) {
+                    if let Some(v) = bad {
+                        out.violations.push(v);
+                    }
+                    allows.entry(t.line).or_default().push(allow);
+                }
+            }
+            _ => code.push(t),
+        }
+    }
+
+    let test_ranges = test_regions(&code);
+    let in_test = |line: u32| test_ranges.iter().any(|&(a, b)| line >= a && line <= b);
+    let allowed = |rule: &str, line: u32| {
+        [line, line.saturating_sub(1)].iter().any(|l| {
+            allows
+                .get(l)
+                .map(|v| v.iter().any(|a| a.justified && a.rule == rule))
+                .unwrap_or(false)
+        })
+    };
+    let mut push = |rule: &'static str, line: u32, message: String, hint: &'static str| {
+        if !in_test(line) && !allowed(rule, line) {
+            out.violations.push(Violation {
+                file: rel_path.to_string(),
+                line,
+                rule,
+                message,
+                hint,
+            });
+        }
+    };
+
+    if scope::in_determinism_scope(rel_path) {
+        for t in &code {
+            if let RustTok::Ident(name) = &t.tok {
+                if name == "HashMap" || name == "HashSet" {
+                    push(
+                        RULE_HASH,
+                        t.line,
+                        format!(
+                            "{name} in determinism-critical module `{}`",
+                            scope::module_of(rel_path)
+                        ),
+                        HINT_HASH,
+                    );
+                }
+            }
+        }
+    }
+
+    for line in partial_cmp_unwrap_sites(&code) {
+        push(
+            RULE_PARTIAL_CMP,
+            line,
+            "partial_cmp(..) chained into unwrap/expect".to_string(),
+            HINT_PARTIAL_CMP,
+        );
+    }
+
+    if !scope::is_blessed_instant(rel_path) {
+        for i in 0..code.len().saturating_sub(3) {
+            if ident_at(&code, i, "Instant")
+                && punct_at(&code, i + 1, ':')
+                && punct_at(&code, i + 2, ':')
+                && ident_at(&code, i + 3, "now")
+            {
+                push(
+                    RULE_INSTANT,
+                    code[i].line,
+                    "Instant::now() outside the transport driver".to_string(),
+                    HINT_INSTANT,
+                );
+            }
+        }
+    }
+
+    if scope::in_float_fmt_scope(rel_path) {
+        for (line, what) in float_fmt_sites(&code) {
+            push(RULE_FLOAT_FMT, line, what, HINT_FLOAT_FMT);
+        }
+    }
+
+    if scope::in_unwrap_scope(rel_path) {
+        for i in 1..code.len() {
+            if punct_at(&code, i - 1, '.')
+                && (ident_at(&code, i, "unwrap") || ident_at(&code, i, "expect"))
+                && !in_test(code[i].line)
+            {
+                out.unwrap_lines.push(code[i].line);
+            }
+        }
+    }
+
+    Ok(out)
+}
+
+fn ident_at(code: &[RustToken], i: usize, name: &str) -> bool {
+    match code.get(i) {
+        Some(RustToken { tok: RustTok::Ident(s), .. }) => s == name,
+        _ => false,
+    }
+}
+
+fn punct_at(code: &[RustToken], i: usize, c: char) -> bool {
+    matches!(code.get(i), Some(RustToken { tok: RustTok::Punct(p), .. }) if *p == c)
+}
+
+/// Parse an allow annotation — `audit:allow` with a parenthesised rule
+/// id and a `:`-prefixed justification — out of a comment body. Returns
+/// the allow plus an optional violation when the annotation is
+/// malformed (unknown rule / missing justification); malformed allows
+/// never suppress anything.
+fn parse_allow(body: &str, line: u32, rel_path: &str) -> Option<(Allow, Option<Violation>)> {
+    let idx = body.find("audit:allow(")?;
+    let rest = &body[idx + "audit:allow(".len()..];
+    let (rule, after) = match rest.split_once(')') {
+        Some((r, a)) => (r.trim().to_string(), a),
+        None => (rest.trim().to_string(), ""),
+    };
+    let justification = after.strip_prefix(':').map(str::trim).unwrap_or("");
+    let known = ALLOWABLE_RULES.contains(&rule.as_str());
+    let justified = known && !justification.is_empty();
+    let bad = if !known {
+        Some(format!("audit:allow names unknown or non-allowable rule `{rule}`"))
+    } else if justification.is_empty() {
+        Some(format!("audit:allow({rule}) carries no justification"))
+    } else {
+        None
+    };
+    let violation = bad.map(|message| Violation {
+        file: rel_path.to_string(),
+        line,
+        rule: RULE_ALLOW,
+        message,
+        hint: HINT_ALLOW,
+    });
+    Some((Allow { rule, justified }, violation))
+}
+
+/// Line ranges covered by `#[cfg(test)]`-attributed items (the
+/// attribute line through the matching close brace of the item body).
+fn test_regions(code: &[RustToken]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < code.len() {
+        let is_cfg_test = punct_at(code, i, '#')
+            && punct_at(code, i + 1, '[')
+            && ident_at(code, i + 2, "cfg")
+            && punct_at(code, i + 3, '(')
+            && ident_at(code, i + 4, "test")
+            && punct_at(code, i + 5, ')')
+            && punct_at(code, i + 6, ']');
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        let start_line = code[i].line;
+        // find the item's opening brace, then its matching close
+        let mut j = i + 7;
+        while j < code.len() && !punct_at(code, j, '{') {
+            j += 1;
+        }
+        let mut depth = 0usize;
+        let mut end_line = start_line;
+        while j < code.len() {
+            if punct_at(code, j, '{') {
+                depth += 1;
+            } else if punct_at(code, j, '}') {
+                depth -= 1;
+                if depth == 0 {
+                    end_line = code[j].line;
+                    break;
+                }
+            }
+            j += 1;
+        }
+        if depth != 0 {
+            // unbalanced (half-written file): treat the rest as test code
+            end_line = code.last().map(|t| t.line).unwrap_or(start_line);
+            j = code.len();
+        }
+        out.push((start_line, end_line));
+        i = j;
+    }
+    out
+}
+
+/// `partial_cmp( … ).unwrap()` / `.expect(` chains: the line of each
+/// `partial_cmp` whose balanced call is followed by `.unwrap`/`.expect`.
+fn partial_cmp_unwrap_sites(code: &[RustToken]) -> Vec<u32> {
+    let mut out = Vec::new();
+    for i in 0..code.len() {
+        if !ident_at(code, i, "partial_cmp") || !punct_at(code, i + 1, '(') {
+            continue;
+        }
+        let mut depth = 0usize;
+        let mut j = i + 1;
+        while j < code.len() {
+            if punct_at(code, j, '(') {
+                depth += 1;
+            } else if punct_at(code, j, ')') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            j += 1;
+        }
+        if j < code.len()
+            && punct_at(code, j + 1, '.')
+            && (ident_at(code, j + 2, "unwrap") || ident_at(code, j + 2, "expect"))
+        {
+            out.push(code[i].line);
+        }
+    }
+    out
+}
+
+/// Display/Debug-formatted `f64` sites in a float-format-scoped file:
+/// inline `{name}` placeholders and bare `name` arguments of format
+/// macros where `name` is declared `: f64` somewhere in the file, plus
+/// `name.to_string()` calls on such names.
+fn float_fmt_sites(code: &[RustToken]) -> Vec<(u32, String)> {
+    // file-local set of identifiers annotated `: f64` (params, fields,
+    // lets) — `name : [& mut]* f64`
+    let mut f64_idents: Vec<String> = Vec::new();
+    for i in 0..code.len() {
+        if let RustTok::Ident(name) = &code[i].tok {
+            if punct_at(code, i + 1, ':') && !punct_at(code, i + 2, ':') {
+                let mut j = i + 2;
+                while punct_at(code, j, '&') || ident_at(code, j, "mut") {
+                    j += 1;
+                }
+                if ident_at(code, j, "f64") && !f64_idents.contains(name) {
+                    f64_idents.push(name.clone());
+                }
+            }
+        }
+    }
+    let is_f64 = |name: &str| f64_idents.iter().any(|n| n == name);
+
+    let mut out = Vec::new();
+    for i in 0..code.len() {
+        // `x.to_string()` on a known f64
+        if let RustTok::Ident(name) = &code[i].tok {
+            if is_f64(name)
+                && punct_at(code, i + 1, '.')
+                && ident_at(code, i + 2, "to_string")
+            {
+                out.push((code[i].line, format!("f64 `{name}` stringified via to_string()")));
+            }
+        }
+        // format-macro invocations
+        let is_fmt_macro = matches!(&code[i].tok, RustTok::Ident(m) if FMT_MACROS.contains(&m.as_str()))
+            && punct_at(code, i + 1, '!')
+            && punct_at(code, i + 2, '(');
+        if !is_fmt_macro {
+            continue;
+        }
+        // walk the macro's balanced parens
+        let mut depth = 0usize;
+        let mut j = i + 2;
+        let mut end = code.len();
+        while j < code.len() {
+            if punct_at(code, j, '(') {
+                depth += 1;
+            } else if punct_at(code, j, ')') {
+                depth -= 1;
+                if depth == 0 {
+                    end = j;
+                    break;
+                }
+            }
+            j += 1;
+        }
+        // first string literal inside = the format string
+        let mut fmt_idx = None;
+        for k in i + 3..end {
+            if matches!(&code[k].tok, RustTok::Str(_)) {
+                fmt_idx = Some(k);
+                break;
+            }
+        }
+        let Some(fmt_idx) = fmt_idx else { continue };
+        let RustTok::Str(fmt) = &code[fmt_idx].tok else { continue };
+        for name in inline_placeholders(fmt) {
+            if is_f64(&name) {
+                out.push((
+                    code[fmt_idx].line,
+                    format!("f64 `{name}` rendered via a {{{name}}} format placeholder"),
+                ));
+            }
+        }
+        // bare `name` / `&name` arguments at the macro's top comma level
+        let mut k = fmt_idx + 1;
+        let mut inner = 0usize;
+        while k < end {
+            match &code[k].tok {
+                RustTok::Punct('(') | RustTok::Punct('[') | RustTok::Punct('{') => inner += 1,
+                RustTok::Punct(')') | RustTok::Punct(']') | RustTok::Punct('}') => {
+                    inner = inner.saturating_sub(1)
+                }
+                RustTok::Punct(',') if inner == 0 => {
+                    let mut a = k + 1;
+                    while punct_at(code, a, '&') {
+                        a += 1;
+                    }
+                    if let Some(RustTok::Ident(name)) = code.get(a).map(|t| &t.tok) {
+                        let next_is_end = a + 1 >= end || punct_at(code, a + 1, ',');
+                        if next_is_end && is_f64(name) {
+                            out.push((
+                                code[a].line,
+                                format!("f64 `{name}` passed to a Display/Debug format macro"),
+                            ));
+                        }
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+    }
+    out
+}
+
+/// Named placeholders in a format string: `{name}` or `{name:spec}`,
+/// skipping `{{` escapes and positional `{}`/`{0}` forms.
+fn inline_placeholders(fmt: &str) -> Vec<String> {
+    let b: Vec<char> = fmt.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        if b[i] == '{' {
+            if i + 1 < b.len() && b[i + 1] == '{' {
+                i += 2;
+                continue;
+            }
+            let mut j = i + 1;
+            let mut name = String::new();
+            while j < b.len() && b[j] != '}' && b[j] != ':' {
+                name.push(b[j]);
+                j += 1;
+            }
+            if !name.is_empty() && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+            {
+                out.push(name);
+            }
+            while j < b.len() && b[j] != '}' {
+                j += 1;
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(path: &str, src: &str) -> FileScan {
+        scan_file(path, src).unwrap()
+    }
+
+    fn rules_of(s: &FileScan) -> Vec<&'static str> {
+        s.violations.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn hash_rule_scoped_to_determinism_modules() {
+        let bad = "use std::collections::HashMap;\nfn f() { let m: HashMap<u32, u32>; }";
+        let s = scan("engine/state.rs", bad);
+        assert_eq!(rules_of(&s), vec![RULE_HASH, RULE_HASH]);
+        assert!(s.violations[0].message.contains("engine"), "{:?}", s.violations[0]);
+        // same text outside the scope is fine
+        assert!(scan("util/rng.rs", bad).violations.is_empty());
+        // BTree variants are fine in scope
+        let good = "use std::collections::BTreeMap;\nfn f() { let m: BTreeMap<u32, u32>; }";
+        assert!(scan("engine/state.rs", good).violations.is_empty());
+    }
+
+    #[test]
+    fn partial_cmp_rule_applies_everywhere() {
+        let bad = "fn f(xs: &mut [f64]) { xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); }";
+        let s = scan("ml/linear.rs", bad);
+        assert_eq!(rules_of(&s), vec![RULE_PARTIAL_CMP]);
+        assert_eq!(s.violations[0].line, 1);
+        let bad2 = "fn f() { x.partial_cmp(&y).expect(\"cmp\"); }";
+        assert_eq!(rules_of(&scan("util/stats.rs", bad2)), vec![RULE_PARTIAL_CMP]);
+        let good = "fn f(xs: &mut [f64]) { xs.sort_by(|a, b| a.total_cmp(b)); }";
+        assert!(scan("ml/linear.rs", good).violations.is_empty());
+        // partial_cmp without the unwrap chain is allowed
+        let ok = "fn f() -> Option<std::cmp::Ordering> { a.partial_cmp(&b) }";
+        assert!(scan("ml/linear.rs", ok).violations.is_empty());
+    }
+
+    #[test]
+    fn instant_rule_blessed_site_exempt() {
+        let src = "fn f() { let t = Instant::now(); }";
+        assert_eq!(rules_of(&scan("etrm/model.rs", src)), vec![RULE_INSTANT]);
+        assert_eq!(rules_of(&scan("util/benchkit.rs", src)), vec![RULE_INSTANT]);
+        assert!(scan("engine/mod.rs", src).violations.is_empty());
+        let qualified = "fn f() { let t = std::time::Instant::now(); }";
+        assert_eq!(rules_of(&scan("engine/transport/socket.rs", qualified)), vec![RULE_INSTANT]);
+    }
+
+    #[test]
+    fn float_fmt_rule_flags_display_of_f64() {
+        let inline = "fn w(scale: f64) { let s = format!(\"scale {scale}\"); }";
+        let s = scan("dataset/checkpoint.rs", inline);
+        assert_eq!(rules_of(&s), vec![RULE_FLOAT_FMT]);
+        let bare = "fn w(x: f64, out: &mut String) { writeln!(out, \"x {}\", x); }";
+        assert_eq!(rules_of(&scan("etrm/store.rs", bare)), vec![RULE_FLOAT_FMT]);
+        let to_s = "fn w(x: f64) -> String { x.to_string() }";
+        assert_eq!(rules_of(&scan("engine/wire.rs", to_s)), vec![RULE_FLOAT_FMT]);
+        // the sanctioned path: f64_hex(x) — the f64 is a call argument,
+        // not a bare formatted value
+        let hex = "fn w(x: f64, out: &mut String) { writeln!(out, \"x {}\", f64_hex(x)); }";
+        assert!(scan("dataset/checkpoint.rs", hex).violations.is_empty());
+        // and the same Display formatting outside the scoped files is fine
+        assert!(scan("dataset/logs.rs", bare).violations.is_empty());
+        // non-f64 identifiers are not flagged
+        let other = "fn w(n: usize, out: &mut String) { writeln!(out, \"n {n}\"); }";
+        assert!(scan("dataset/checkpoint.rs", other).violations.is_empty());
+    }
+
+    #[test]
+    fn unwrap_budget_sites_counted_outside_tests_only() {
+        let src = "fn f() { a.unwrap(); b.expect(\"x\"); c.unwrap_or(0); }\n\
+                   #[cfg(test)]\nmod tests { fn g() { d.unwrap(); } }";
+        let s = scan("engine/worker.rs", src);
+        assert_eq!(s.unwrap_lines, vec![1, 1]);
+        // out of scope: no sites recorded
+        assert!(scan("etrm/model.rs", src).unwrap_lines.is_empty());
+    }
+
+    #[test]
+    fn test_regions_skip_all_rules() {
+        let src = "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n    \
+                   fn f() { let t = Instant::now(); }\n}";
+        assert!(scan("engine/state.rs", src).violations.is_empty());
+        // the same code outside a test region trips both rules
+        let live = "use std::collections::HashMap;\nfn f() { let t = Instant::now(); }";
+        let s = scan("engine/state.rs", live);
+        assert_eq!(rules_of(&s), vec![RULE_HASH, RULE_INSTANT]);
+    }
+
+    #[test]
+    fn allow_annotations_gate_on_justification() {
+        let justified = "// audit:allow(instant-now): connect deadline, not a label\n\
+                         fn f() { let t = Instant::now(); }";
+        assert!(scan("engine/transport/socket.rs", justified).violations.is_empty());
+        let trailing = "fn f() { let t = Instant::now(); } \
+                        // audit:allow(instant-now): deadline only";
+        assert!(scan("engine/transport/socket.rs", trailing).violations.is_empty());
+        let bare = "// audit:allow(instant-now)\nfn f() { let t = Instant::now(); }";
+        let s = scan("engine/transport/socket.rs", bare);
+        assert_eq!(rules_of(&s), vec![RULE_ALLOW, RULE_INSTANT]);
+        let unknown = "// audit:allow(made-up): because\nfn f() { let t = Instant::now(); }";
+        let s = scan("engine/transport/socket.rs", unknown);
+        assert_eq!(rules_of(&s), vec![RULE_ALLOW, RULE_INSTANT]);
+        // an allow for rule A does not suppress rule B
+        let wrong = "// audit:allow(hash-collections): misdirected\n\
+                     fn f() { let t = Instant::now(); }";
+        let s = scan("engine/transport/socket.rs", wrong);
+        assert_eq!(rules_of(&s), vec![RULE_INSTANT]);
+    }
+
+    #[test]
+    fn inline_placeholder_parsing() {
+        assert_eq!(inline_placeholders("a {x} b {y:.3} {{z}} {} {0}"), vec!["x", "y"]);
+        assert!(inline_placeholders("no holes").is_empty());
+    }
+}

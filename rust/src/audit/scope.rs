@@ -1,0 +1,101 @@
+//! Module scoping for the audit rules: which crate modules each rule
+//! applies to, derived from a file's path relative to the scan root.
+//!
+//! Paths use `/` separators and are relative to `src` (e.g.
+//! `engine/transport/socket.rs`). The *module* of a file is its first
+//! path component — `engine` for everything under `engine/`, and the
+//! file stem for root files (`main.rs` → `main`).
+
+/// Modules whose results feed the bit-identity guarantees: any
+/// iteration-order nondeterminism here can change logs, checkpoints or
+/// model artifacts. `HashMap`/`HashSet` are banned in favour of
+/// `BTreeMap`/`BTreeSet`/sorted vecs.
+pub const DETERMINISM_MODULES: &[&str] =
+    &["engine", "dataset", "etrm", "partition", "features"];
+
+/// Modules that own persisted or transmitted artifacts, where floats
+/// must flow through `util::fsio::f64_hex` / `engine::wire` rather than
+/// lossy `Display`/`Debug` formatting.
+pub const FLOAT_FMT_MODULES: &[&str] = &["dataset", "etrm", "engine"];
+
+/// Within [`FLOAT_FMT_MODULES`], only the files that actually write
+/// artifacts are float-format scoped (matched on file stem).
+pub const FLOAT_FMT_FILES: &[&str] = &["checkpoint", "store", "wire"];
+
+/// Modules under the `.unwrap()`/`.expect()` budget (non-test code).
+pub const UNWRAP_SCOPE: &[&str] = &["engine", "dataset"];
+
+/// The one file allowed to call `Instant::now()` in non-test code: the
+/// transport driver's wall-clock choke point (`engine::try_run_mode`).
+pub const BLESSED_INSTANT_FILE: &str = "engine/mod.rs";
+
+/// First path component of a `/`-relative file path, or the file stem
+/// for root-level files.
+pub fn module_of(rel_path: &str) -> &str {
+    match rel_path.split_once('/') {
+        Some((first, _)) => first,
+        None => rel_path.strip_suffix(".rs").unwrap_or(rel_path),
+    }
+}
+
+/// File stem (`checkpoint` for `dataset/checkpoint.rs`).
+pub fn stem_of(rel_path: &str) -> &str {
+    let base = rel_path.rsplit('/').next().unwrap_or(rel_path);
+    base.strip_suffix(".rs").unwrap_or(base)
+}
+
+/// Is `rel_path` in the hash-collection determinism scope?
+pub fn in_determinism_scope(rel_path: &str) -> bool {
+    DETERMINISM_MODULES.contains(&module_of(rel_path))
+}
+
+/// Is `rel_path` in the persisted-float formatting scope?
+pub fn in_float_fmt_scope(rel_path: &str) -> bool {
+    FLOAT_FMT_MODULES.contains(&module_of(rel_path))
+        && FLOAT_FMT_FILES.contains(&stem_of(rel_path))
+}
+
+/// Is `rel_path` under the unwrap/expect budget?
+pub fn in_unwrap_scope(rel_path: &str) -> bool {
+    UNWRAP_SCOPE.contains(&module_of(rel_path))
+}
+
+/// Is `rel_path` the blessed `Instant::now()` site?
+pub fn is_blessed_instant(rel_path: &str) -> bool {
+    rel_path == BLESSED_INSTANT_FILE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_and_stem_extraction() {
+        assert_eq!(module_of("engine/transport/socket.rs"), "engine");
+        assert_eq!(module_of("main.rs"), "main");
+        assert_eq!(module_of("lib.rs"), "lib");
+        assert_eq!(stem_of("dataset/checkpoint.rs"), "checkpoint");
+        assert_eq!(stem_of("wire.rs"), "wire");
+    }
+
+    #[test]
+    fn scopes() {
+        assert!(in_determinism_scope("engine/state.rs"));
+        assert!(in_determinism_scope("features/data.rs"));
+        assert!(!in_determinism_scope("util/rng.rs"));
+        assert!(!in_determinism_scope("analyzer/mod.rs"));
+
+        assert!(in_float_fmt_scope("dataset/checkpoint.rs"));
+        assert!(in_float_fmt_scope("etrm/store.rs"));
+        assert!(in_float_fmt_scope("engine/wire.rs"));
+        assert!(!in_float_fmt_scope("dataset/logs.rs"));
+        assert!(!in_float_fmt_scope("util/fsio.rs"));
+
+        assert!(in_unwrap_scope("engine/barrier.rs"));
+        assert!(in_unwrap_scope("dataset/mod.rs"));
+        assert!(!in_unwrap_scope("etrm/model.rs"));
+
+        assert!(is_blessed_instant("engine/mod.rs"));
+        assert!(!is_blessed_instant("engine/transport/socket.rs"));
+    }
+}

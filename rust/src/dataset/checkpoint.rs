@@ -81,7 +81,7 @@ const MANIFEST_FILE: &str = "manifest.txt";
 pub fn manifest_text(scale: f64, seed: u64, cfg: &ClusterConfig, mode: ExecutionMode) -> String {
     let mut m = String::new();
     writeln!(m, "gps-corpus-checkpoint v{FORMAT_VERSION}").unwrap();
-    // exact bits plus the human-readable value for debugging
+    // audit:allow(float-fmt): debugging echo only — the load path compares the hex bits
     writeln!(m, "scale {:016x} ({scale})", scale.to_bits()).unwrap();
     writeln!(m, "seed {seed}").unwrap();
     writeln!(m, "workers {}", cfg.num_workers).unwrap();

@@ -185,6 +185,9 @@ pub fn try_run_mode<P: VertexProgram>(
     mode: ExecutionMode,
 ) -> Result<RunResult<P::Value>> {
     assert_eq!(p.num_workers, cfg.num_workers, "partitioning/cluster mismatch");
+    // The one blessed wall-clock read: every measured label flows
+    // through this choke point (see `audit::scope::BLESSED_INSTANT_FILE`).
+    #[allow(clippy::disallowed_methods)]
     let t0 = std::time::Instant::now();
     let mut r = match mode {
         ExecutionMode::Simulated => transport::local::run(g, p, prog, cfg)?,

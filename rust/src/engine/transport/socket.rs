@@ -184,6 +184,7 @@ impl<P: VertexProgram> Transport<P> for SocketTransport<P> {
 
 /// Spawn the worker processes and complete the HELLO handshake,
 /// returning the links indexed by worker rank.
+#[allow(clippy::disallowed_methods)] // Instant::now is a connect deadline here, not a label
 fn connect_workers(w_count: usize) -> Result<Vec<WorkerLink>> {
     let bin = resolve_worker_binary()?;
     let listener =
@@ -223,6 +224,7 @@ fn connect_workers(w_count: usize) -> Result<Vec<WorkerLink>> {
     let mut reaper = Reaper(children);
 
     let mut streams: Vec<Option<TcpStream>> = (0..w_count).map(|_| None).collect();
+    // audit:allow(instant-now): connect-timeout deadline, never persisted or used as a label
     let deadline = Instant::now() + CONNECT_TIMEOUT;
     let mut connected = 0usize;
     while connected < w_count {
@@ -258,6 +260,7 @@ fn connect_workers(w_count: usize) -> Result<Vec<WorkerLink>> {
                         }
                     }
                 }
+                // audit:allow(instant-now): deadline check for the worker handshake
                 if Instant::now() > deadline {
                     bail!(
                         "socket workers did not connect within {CONNECT_TIMEOUT:?}; the \

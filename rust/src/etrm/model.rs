@@ -163,7 +163,9 @@ impl Etrm {
 
     /// Select and report the wall-clock selection latency (the
     /// model-inference part of the §5.7 cost).
+    #[allow(clippy::disallowed_methods)] // §5.7 latency measurement, reported but never persisted
     pub fn select_timed(&self, task: &TaskFeatures) -> (Strategy, f64) {
+        // audit:allow(instant-now): measures the §5.7 selection cost, not an execution label
         let t0 = Instant::now();
         let s = self.select(task);
         (s, t0.elapsed().as_secs_f64())

@@ -107,7 +107,7 @@ fn importance_table(
     };
     let mut t = Table::new(vec!["Feature", "Gain importance", "Split importance"]);
     let mut rows = model.importance.grouped(group);
-    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    rows.sort_by(|a, b| b.1.total_cmp(&a.1));
     for (label, gain, splits) in rows {
         t.row(vec![label, f(gain, 4), splits.to_string()]);
     }

@@ -34,7 +34,7 @@ pub fn generate_edges(n: usize, m: usize, beta: f64, directed: bool, rng: &mut R
     rng.shuffle(&mut perm);
     let pick = |r: &mut Rng| -> u32 {
         let x = r.next_f64() * total;
-        let idx = match cum.binary_search_by(|w| w.partial_cmp(&x).unwrap()) {
+        let idx = match cum.binary_search_by(|w| w.total_cmp(&x)) {
             Ok(i) => i + 1,
             Err(i) => i,
         };

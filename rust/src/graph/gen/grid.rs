@@ -3,7 +3,7 @@
 //! essentially zero degree skew and enormous diameter; a sparse grid
 //! with a few random local diagonals reproduces those statistics.
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 use crate::graph::{Edge, Graph};
 use crate::util::rng::Rng;
@@ -22,9 +22,9 @@ pub fn generate_edges(n: usize, m: usize, rng: &mut Rng) -> Vec<Edge> {
         let v = r * side + c;
         (r < side && c < side && v < n).then_some(v as u32)
     };
-    let mut seen: HashSet<Edge> = HashSet::with_capacity(m * 2);
+    let mut seen: BTreeSet<Edge> = BTreeSet::new();
     let mut edges: Vec<Edge> = Vec::with_capacity(m);
-    let push = |u: u32, v: u32, seen: &mut HashSet<Edge>, edges: &mut Vec<Edge>| {
+    let push = |u: u32, v: u32, seen: &mut BTreeSet<Edge>, edges: &mut Vec<Edge>| {
         let e = if u < v { (u, v) } else { (v, u) };
         if u != v && seen.insert(e) {
             edges.push(e);

@@ -26,7 +26,7 @@ pub mod grid;
 pub mod rmat;
 pub mod smallworld;
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 use crate::graph::Edge;
 use crate::util::rng::Rng;
@@ -43,7 +43,7 @@ pub(crate) fn fill_distinct(
 ) -> Vec<Edge> {
     let cap = if directed { n * (n - 1) } else { n * (n - 1) / 2 };
     assert!(m <= cap, "requested {m} edges but only {cap} possible");
-    let mut seen: HashSet<Edge> = HashSet::with_capacity(m * 2);
+    let mut seen: BTreeSet<Edge> = BTreeSet::new();
     let mut edges = Vec::with_capacity(m);
     // After long rejection streaks fall back to uniform sampling so the
     // generator always terminates even with badly skewed weights.
@@ -82,7 +82,7 @@ mod tests {
             (r.gen_range(50) as u32, r.gen_range(50) as u32)
         });
         assert_eq!(edges.len(), 200);
-        let set: HashSet<_> = edges.iter().collect();
+        let set: BTreeSet<_> = edges.iter().collect();
         assert_eq!(set.len(), 200);
         assert!(edges.iter().all(|&(u, v)| u != v));
     }

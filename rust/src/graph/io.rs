@@ -2,7 +2,7 @@
 //! line, `#` comments, whitespace separated. Vertex ids are compacted to
 //! `0..n` on load (SNAP files have sparse id spaces).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
@@ -12,7 +12,7 @@ use super::{Edge, Graph};
 
 /// Parse SNAP-style edge-list text into a compacted graph.
 pub fn parse_edge_list(name: &str, text: &str, directed: bool) -> Result<Graph> {
-    let mut remap: HashMap<u64, u32> = HashMap::new();
+    let mut remap: BTreeMap<u64, u32> = BTreeMap::new();
     let mut edges: Vec<Edge> = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
@@ -27,7 +27,7 @@ pub fn parse_edge_list(name: &str, text: &str, directed: bool) -> Result<Graph> 
         };
         let u = parse(it.next())?;
         let v = parse(it.next())?;
-        let intern = |x: u64, remap: &mut HashMap<u64, u32>| -> u32 {
+        let intern = |x: u64, remap: &mut BTreeMap<u64, u32>| -> u32 {
             let next = remap.len() as u32;
             *remap.entry(x).or_insert(next)
         };

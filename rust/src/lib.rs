@@ -29,7 +29,13 @@
 //! * [`algorithms`] — the eight graph algorithms of §5.3 implemented as
 //!   GAS vertex programs, with their pseudo-code sources.
 //! * [`analyzer`] — the pseudo-code static analyzer (lexer, parser,
-//!   symbolic loop analysis) replacing the paper's JavaCC tool.
+//!   symbolic loop analysis) replacing the paper's JavaCC tool, plus
+//!   the permissive Rust lexer the audit reuses.
+//! * [`audit`] — the static determinism linter (`repro audit`): scans
+//!   the crate's own sources for invariant-eroding patterns
+//!   (hash-ordered collections in determinism scopes, lossy float
+//!   formatting in persistence paths, stray wall-clock reads) and
+//!   gates CI on a clean report.
 //! * [`features`] — data features (Table 3) + algorithm features (Table 4)
 //!   and the model input encoding of Fig 5.
 //! * [`dataset`] — execution-log store with the parallel
@@ -46,6 +52,7 @@
 
 pub mod algorithms;
 pub mod analyzer;
+pub mod audit;
 pub mod dataset;
 pub mod engine;
 pub mod etrm;

@@ -32,6 +32,10 @@
 //!   without the limit).
 //! * `runtime-check` — load the AOT artifact manifest and smoke-test the
 //!   runtime kernels.
+//! * `audit [--root rust/src] [--json report.json] [--unwrap-budget n]`
+//!   — run the static determinism linter over the crate's own sources
+//!   and exit non-zero on any violation (the CI gate; see the README's
+//!   "Determinism invariants" section).
 //!
 //! Common flags: `--scale` (default 1/32 of the paper's dataset sizes),
 //! `--seed`, `--workers`, `--threads` (corpus-build parallelism;
@@ -133,11 +137,12 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("analyze") => cmd_analyze(args),
         Some("logs") => cmd_logs(args),
         Some("runtime-check") => cmd_runtime_check(),
+        Some("audit") => cmd_audit(args),
         Some(other) => bail!("unknown subcommand {other:?} (see the README)"),
         None => {
             println!(
                 "usage: repro <figures|pipeline|train|select|run|partition|features|analyze|\
-                 logs|runtime-check> [flags]"
+                 logs|runtime-check|audit> [flags]"
             );
             Ok(())
         }
@@ -496,6 +501,30 @@ fn cmd_logs(args: &Args) -> Result<()> {
         "wrote {} execution logs to {path} ({threads} threads, {} engine)",
         store.logs.len(),
         config.engine_mode.name()
+    );
+    Ok(())
+}
+
+fn cmd_audit(args: &Args) -> Result<()> {
+    // default scan root: works from the repo root and from rust/
+    let root = match args.get("root") {
+        Some(r) => r.to_string(),
+        None if Path::new("rust/src").is_dir() => "rust/src".to_string(),
+        None => "src".to_string(),
+    };
+    let budget =
+        args.get_usize("unwrap-budget", gps_select::audit::DEFAULT_UNWRAP_BUDGET)?;
+    let report = gps_select::audit::audit_tree_with_budget(Path::new(&root), budget)?;
+    if let Some(path) = args.get("json") {
+        fsio::write_atomic(Path::new(path), report.to_json().as_bytes())?;
+        println!("audit report written to {path}");
+    }
+    print!("{}", report.render_text());
+    ensure!(
+        report.is_clean(),
+        "audit failed: {} violation(s) in {}",
+        report.violations.len(),
+        root
     );
     Ok(())
 }

@@ -32,7 +32,7 @@ impl BinnedMatrix {
         let mut edges = Vec::with_capacity(dim);
         for f in 0..dim {
             let mut vals: Vec<f64> = x.iter().map(|r| r[f]).collect();
-            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.sort_by(|a, b| a.total_cmp(b));
             vals.dedup();
             // candidate edges at quantiles of distinct values
             let nb = max_bins.min(vals.len());

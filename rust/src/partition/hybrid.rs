@@ -58,7 +58,7 @@ mod tests {
         let edges: Vec<(u32, u32)> = (1..=50).map(|u| (u as u32, 0)).collect();
         let g = Graph::from_edges("hub", 51, edges, true);
         let p = partition(&g, 8, 10);
-        let distinct: std::collections::HashSet<u16> = p.edge_worker.iter().copied().collect();
+        let distinct: std::collections::BTreeSet<u16> = p.edge_worker.iter().copied().collect();
         assert!(distinct.len() > 1, "hub edges must spread, got {distinct:?}");
         // and the assignment matches 1DSrc for those edges
         let by_src = crate::partition::oned::partition_src(&g, 8);

@@ -25,7 +25,7 @@ pub struct Timing {
 
 impl Timing {
     fn from_samples(mut xs: Vec<f64>) -> Self {
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(|a, b| a.total_cmp(b));
         let q = |p: f64| crate::util::stats::quantile_sorted(&xs, p);
         Timing {
             samples: xs.len(),
@@ -74,6 +74,8 @@ impl Bench {
         }
         let mut samples = Vec::with_capacity(self.samples);
         for _ in 0..self.samples {
+            #[allow(clippy::disallowed_methods)]
+            // audit:allow(instant-now): bench harness wall timing, never a training label
             let t0 = Instant::now();
             black_box(f());
             samples.push(t0.elapsed().as_secs_f64());

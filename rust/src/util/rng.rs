@@ -125,7 +125,7 @@ impl Rng {
             all.truncate(k);
             return all;
         }
-        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut chosen = std::collections::BTreeSet::new();
         let mut out = Vec::with_capacity(k);
         for j in (n - k)..n {
             let t = self.gen_range(j + 1);
@@ -146,7 +146,7 @@ impl Rng {
     pub fn choose_weighted_cum(&mut self, cum: &[f64]) -> usize {
         let total = *cum.last().expect("empty weights");
         let x = self.next_f64() * total;
-        match cum.binary_search_by(|w| w.partial_cmp(&x).unwrap()) {
+        match cum.binary_search_by(|w| w.total_cmp(&x)) {
             Ok(i) => (i + 1).min(cum.len() - 1),
             Err(i) => i.min(cum.len() - 1),
         }
@@ -275,7 +275,7 @@ mod tests {
         for &(n, k) in &[(100, 5), (100, 80), (10, 10), (1, 1), (1000, 0)] {
             let s = r.sample_indices(n, k);
             assert_eq!(s.len(), k);
-            let set: std::collections::HashSet<_> = s.iter().collect();
+            let set: std::collections::BTreeSet<_> = s.iter().collect();
             assert_eq!(set.len(), k, "distinct");
             assert!(s.iter().all(|&i| i < n));
         }
@@ -310,7 +310,7 @@ mod tests {
 
     #[test]
     fn cantor_pairing_is_injective_on_grid() {
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         for a in 0..60u64 {
             for b in 0..60u64 {
                 assert!(seen.insert(cantor_pair(a, b)));

@@ -119,7 +119,7 @@ impl BoxPlot {
     pub fn of(xs: &[f64]) -> Self {
         assert!(!xs.is_empty(), "boxplot of empty sample");
         let mut v = xs.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.total_cmp(b));
         let mean = v.iter().sum::<f64>() / v.len() as f64;
         BoxPlot {
             min: v[0],

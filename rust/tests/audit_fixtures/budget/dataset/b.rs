@@ -1,0 +1,13 @@
+// Fixture: one expect site in dataset scope, plus a test-only unwrap
+// that must not count against the budget.
+pub fn g(z: Option<u32>) -> u32 {
+    z.expect("fixture")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        super::g(Some(1u32.checked_add(2).unwrap()));
+    }
+}

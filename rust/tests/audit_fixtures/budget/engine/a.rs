@@ -1,0 +1,4 @@
+// Fixture: two non-test unwrap sites in engine scope.
+pub fn f(x: Option<u32>, y: Option<u32>) -> u32 {
+    x.unwrap() + y.unwrap()
+}

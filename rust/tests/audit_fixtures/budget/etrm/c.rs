@@ -1,0 +1,5 @@
+// Fixture: unwrap outside the engine/dataset budget scope — never
+// counted.
+pub fn h(w: Option<u32>) -> u32 {
+    w.unwrap()
+}

@@ -1,0 +1,5 @@
+// Fixture: a justified allow suppresses the float-fmt rule.
+pub fn manifest(scale: f64) -> String {
+    // audit:allow(float-fmt): debugging echo next to the exact hex bits
+    format!("scale {scale}")
+}

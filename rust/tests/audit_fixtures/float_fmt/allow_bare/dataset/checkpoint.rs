@@ -1,0 +1,5 @@
+// Fixture: a bare allow fails and suppresses nothing.
+pub fn manifest(scale: f64) -> String {
+    // audit:allow(float-fmt)
+    format!("scale {scale}")
+}

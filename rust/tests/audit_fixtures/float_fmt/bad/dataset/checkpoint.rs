@@ -1,0 +1,5 @@
+// Fixture: Display-formatting an f64 into a persisted artifact loses
+// bits; checkpoint/store/wire files must use f64_hex.
+pub fn manifest(scale: f64) -> String {
+    format!("scale {scale}")
+}

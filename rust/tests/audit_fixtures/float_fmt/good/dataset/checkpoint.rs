@@ -1,0 +1,5 @@
+// Fixture: the sanctioned path — f64 rendered via the exact-bits hex
+// helper, never bare Display.
+pub fn manifest(scale: f64) -> String {
+    format!("scale {}", f64_hex(scale))
+}

@@ -1,0 +1,8 @@
+// Fixture: a justified allow suppresses the hash-collections rule.
+// audit:allow(hash-collections): membership-only set, iteration order never observed
+use std::collections::HashSet;
+
+pub fn count_distinct(xs: &[u32]) -> usize {
+    let set: HashSet<u32> = xs.iter().copied().collect(); // audit:allow(hash-collections): membership only
+    set.len()
+}

@@ -1,0 +1,4 @@
+// Fixture: a bare allow (no justification) suppresses nothing and is
+// itself a violation.
+// audit:allow(hash-collections)
+use std::collections::HashSet;

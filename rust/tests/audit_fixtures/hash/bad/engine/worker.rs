@@ -1,0 +1,6 @@
+// Fixture: HashMap named in a determinism-critical module.
+use std::collections::HashMap;
+
+pub fn state() -> HashMap<u32, f64> {
+    HashMap::new()
+}

@@ -1,0 +1,6 @@
+// Fixture: ordered collections pass in a determinism-critical module.
+use std::collections::BTreeMap;
+
+pub fn state() -> BTreeMap<u32, f64> {
+    BTreeMap::new()
+}

@@ -1,0 +1,6 @@
+// Fixture: a justified allow suppresses the instant-now rule.
+pub fn timed() -> f64 {
+    // audit:allow(instant-now): latency report only, never a training label
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

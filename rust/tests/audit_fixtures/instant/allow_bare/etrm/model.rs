@@ -1,0 +1,6 @@
+// Fixture: a bare allow fails and suppresses nothing.
+pub fn timed() -> f64 {
+    // audit:allow(instant-now)
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,5 @@
+// Fixture: a wall-clock read outside the engine choke point.
+pub fn timed() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,6 @@
+// Fixture: engine/mod.rs is the blessed Instant::now() site (the
+// measured-label choke point), so the same read passes here.
+pub fn timed() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,5 @@
+// Fixture: a justified allow suppresses the partial-cmp rule.
+pub fn sort(xs: &mut [f64]) {
+    // audit:allow(partial-cmp): inputs are proven finite by the caller
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

@@ -1,0 +1,5 @@
+// Fixture: a bare allow fails and suppresses nothing.
+pub fn sort(xs: &mut [f64]) {
+    // audit:allow(partial-cmp)
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

@@ -1,0 +1,5 @@
+// Fixture: partial_cmp chained into unwrap panics on NaN and is
+// order-unstable; the rule applies in every module.
+pub fn sort(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

@@ -1,0 +1,4 @@
+// Fixture: total_cmp is the sanctioned total order over f64.
+pub fn sort(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+}

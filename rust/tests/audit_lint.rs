@@ -1,0 +1,174 @@
+//! End-to-end tests of `audit::` (the static determinism linter) and
+//! the `repro audit` CLI gate, driven by the small fixture trees under
+//! `tests/audit_fixtures/`. Fixture files live in subdirectories, so
+//! cargo never compiles them — each tree exists purely to be scanned.
+//!
+//! Per rule the fixtures cover the full gate matrix: the bad tree
+//! trips, the good tree passes, a justified `audit:allow` suppresses,
+//! and a bare allow both fails itself and suppresses nothing.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use gps_select::audit::{
+    audit_tree, audit_tree_with_budget, Report, DEFAULT_UNWRAP_BUDGET, RULE_ALLOW,
+    RULE_FLOAT_FMT, RULE_HASH, RULE_INSTANT, RULE_PARTIAL_CMP, RULE_UNWRAP_BUDGET,
+};
+
+fn fixture(tree: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/audit_fixtures").join(tree)
+}
+
+fn audit(tree: &str) -> Report {
+    audit_tree(&fixture(tree)).unwrap_or_else(|e| panic!("audit of {tree}: {e}"))
+}
+
+fn rules(r: &Report) -> Vec<&'static str> {
+    r.violations.iter().map(|v| v.rule).collect()
+}
+
+/// bad trips / good passes / justified allow suppresses / bare allow
+/// fails, for each per-site rule.
+#[test]
+fn hash_rule_fixture_matrix() {
+    let bad = audit("hash/bad");
+    assert_eq!(rules(&bad), vec![RULE_HASH, RULE_HASH, RULE_HASH], "{:?}", bad.violations);
+    assert!(audit("hash/good").is_clean());
+    assert!(audit("hash/allow").is_clean());
+    let bare = audit("hash/allow_bare");
+    assert_eq!(rules(&bare), vec![RULE_ALLOW, RULE_HASH], "{:?}", bare.violations);
+}
+
+#[test]
+fn partial_cmp_rule_fixture_matrix() {
+    let bad = audit("partial_cmp/bad");
+    assert_eq!(rules(&bad), vec![RULE_PARTIAL_CMP], "{:?}", bad.violations);
+    assert_eq!(bad.violations[0].file, "ml/sort.rs");
+    assert_eq!(bad.violations[0].line, 4);
+    assert!(audit("partial_cmp/good").is_clean());
+    assert!(audit("partial_cmp/allow").is_clean());
+    assert_eq!(rules(&audit("partial_cmp/allow_bare")), vec![RULE_ALLOW, RULE_PARTIAL_CMP]);
+}
+
+#[test]
+fn float_fmt_rule_fixture_matrix() {
+    let bad = audit("float_fmt/bad");
+    assert_eq!(rules(&bad), vec![RULE_FLOAT_FMT], "{:?}", bad.violations);
+    assert!(bad.violations[0].message.contains("scale"), "{:?}", bad.violations);
+    // the sanctioned f64_hex(..) call in the good tree is not flagged
+    assert!(audit("float_fmt/good").is_clean());
+    assert!(audit("float_fmt/allow").is_clean());
+    assert_eq!(rules(&audit("float_fmt/allow_bare")), vec![RULE_ALLOW, RULE_FLOAT_FMT]);
+}
+
+#[test]
+fn instant_rule_fixture_matrix() {
+    let bad = audit("instant/bad");
+    assert_eq!(rules(&bad), vec![RULE_INSTANT], "{:?}", bad.violations);
+    // the good tree holds the identical read in engine/mod.rs — the
+    // blessed measured-label choke point
+    assert!(audit("instant/good").is_clean());
+    assert!(audit("instant/allow").is_clean());
+    assert_eq!(rules(&audit("instant/allow_bare")), vec![RULE_ALLOW, RULE_INSTANT]);
+}
+
+#[test]
+fn unwrap_budget_counts_scope_and_tests_correctly() {
+    // 2 sites in engine/a.rs + 1 in dataset/b.rs; the etrm/c.rs unwrap
+    // and dataset/b.rs's #[cfg(test)] unwrap are out of scope
+    let within = audit_tree_with_budget(&fixture("budget"), 3).unwrap();
+    assert!(within.is_clean(), "{:?}", within.violations);
+    assert_eq!(within.unwrap_sites, 3);
+    let over = audit_tree_with_budget(&fixture("budget"), 1).unwrap();
+    assert_eq!(rules(&over), vec![RULE_UNWRAP_BUDGET, RULE_UNWRAP_BUDGET]);
+    assert!(over.violations[0].message.contains("budget of 1"), "{:?}", over.violations);
+}
+
+#[test]
+fn test_regions_are_exempt() {
+    let r = audit("test_only");
+    assert!(r.is_clean(), "{:?}", r.violations);
+    assert_eq!(r.unwrap_sites, 0);
+}
+
+/// The gate itself: the crate's own tree must audit clean under the
+/// default budget (this is what CI runs via `repro audit`).
+#[test]
+fn crate_sources_audit_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let r = audit_tree(&src).unwrap();
+    assert!(
+        r.is_clean(),
+        "rust/src must audit clean:\n{}",
+        r.render_text()
+    );
+    assert!(
+        r.unwrap_sites <= DEFAULT_UNWRAP_BUDGET,
+        "unwrap ratchet exceeded: {} sites > budget {}",
+        r.unwrap_sites,
+        DEFAULT_UNWRAP_BUDGET
+    );
+    assert!(r.files_scanned > 50, "expected the full tree, saw {}", r.files_scanned);
+}
+
+#[test]
+fn cli_exits_nonzero_on_violations_and_writes_json() {
+    let json = std::env::temp_dir()
+        .join(format!("gps_audit_cli_bad_{}.json", std::process::id()));
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args([
+            "audit",
+            "--root",
+            fixture("instant/bad").to_str().unwrap(),
+            "--json",
+            json.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn repro audit");
+    assert!(!out.status.success(), "audit of a bad tree must fail");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("[instant-now]"), "{stdout}");
+    assert!(stdout.contains("fix:"), "{stdout}");
+    // the JSON report is written before the exit code is decided, so CI
+    // can upload it from a failing run
+    let doc = std::fs::read_to_string(&json).expect("json report exists");
+    assert!(doc.contains("\"clean\": false"), "{doc}");
+    assert!(doc.contains("\"rule\": \"instant-now\""), "{doc}");
+    std::fs::remove_file(&json).ok();
+}
+
+#[test]
+fn cli_passes_on_clean_tree() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let json = std::env::temp_dir()
+        .join(format!("gps_audit_cli_ok_{}.json", std::process::id()));
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["audit", "--root", src.to_str().unwrap(), "--json", json.to_str().unwrap()])
+        .output()
+        .expect("spawn repro audit");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout: {stdout}\nstderr: {stderr}");
+    assert!(stdout.contains("violation(s)"), "{stdout}");
+    let doc = std::fs::read_to_string(&json).expect("json report exists");
+    assert!(doc.contains("\"clean\": true"), "{doc}");
+    std::fs::remove_file(&json).ok();
+}
+
+#[test]
+fn cli_honours_explicit_unwrap_budget() {
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args([
+            "audit",
+            "--root",
+            fixture("budget").to_str().unwrap(),
+            "--unwrap-budget",
+            "1",
+        ])
+        .output()
+        .expect("spawn repro audit");
+    assert!(!out.status.success(), "3 sites against a budget of 1 must fail");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("[unwrap-budget]"), "{stdout}");
+    assert!(stdout.contains("unwrap budget 3/1 used"), "{stdout}");
+}

@@ -1,12 +1,26 @@
 #!/usr/bin/env bash
-# Tier-1 verification: release build, tests, formatting, plus the
-# engine execution-mode gates (the three-mode equivalence test + a
-# short release smoke of the sim-vs-threaded-vs-socket engine benches).
+# Tier-1 verification: release build, the static determinism audit
+# (`repro audit`), tests, formatting, plus the engine execution-mode
+# gates (the three-mode equivalence test + a short release smoke of
+# the sim-vs-threaded-vs-socket engine benches, diffed against the
+# committed BENCH_engine.json baseline).
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
 
 cargo build --release
+REPRO=target/release/repro
+CKPT_TMP=$(mktemp -d)
+trap 'rm -rf "$CKPT_TMP"' EXIT
+
+# Static determinism audit, before any dynamic gate: the linter proves
+# the *sources* cannot produce order-, locale- or clock-dependent
+# output in the determinism-critical modules, so a violation fails
+# fast here instead of surfacing as a flaky bit-diff below. The JSON
+# report lands in the temp dir (CI writes its own copy for artifact
+# upload).
+"$REPRO" audit --root src --json "$CKPT_TMP/audit.json"
+
 # The big mode-equivalence matrices are skipped in the debug pass (they
 # run in release below, where the full matrix stays fast); everything
 # else matches tier-1's `cargo test -q`.
@@ -31,9 +45,6 @@ cargo test -q --release --test wire_roundtrip
 # wall_clock_ms column (5) is the *measured* label and legitimately
 # differs between a restored shard and a fresh run, so it is stripped
 # before the byte comparison.
-CKPT_TMP=$(mktemp -d)
-trap 'rm -rf "$CKPT_TMP"' EXIT
-REPRO=target/release/repro
 "$REPRO" logs --scale 0.002 --seed 7 --workers 16 \
     --checkpoint-dir "$CKPT_TMP/ck" --limit-graphs 6
 "$REPRO" logs --scale 0.002 --seed 7 --workers 16 \
@@ -64,9 +75,25 @@ fi
 echo "verify: model save→load→select round-trip is bit-identical (and label demands enforced)"
 
 # ~10-second engine bench smoke in release mode: runs only the engine
-# rows of benches/hotpath.rs (no full cargo-bench sweep) and records
-# the sim-vs-threaded-vs-socket timings at the repository root.
-GPS_BENCH_FAST=1 GPS_BENCH_OUT=../BENCH_engine.json cargo bench --bench hotpath -- engine
+# rows of benches/hotpath.rs (no full cargo-bench sweep). Timings are
+# machine-specific, so the fresh run is diffed *structurally* against
+# the committed baseline at the repository root: the set of bench rows
+# and the per-row sample counts must match ../BENCH_engine.json
+# exactly. A renamed, dropped or added engine-mode row fails here; the
+# baseline's reference timings are for trend reading only.
+GPS_BENCH_FAST=1 GPS_BENCH_OUT="$CKPT_TMP/bench.json" cargo bench --bench hotpath -- engine
+grep -o '"bench": "[^"]*"\|"samples": [0-9]*' "$CKPT_TMP/bench.json" \
+    | sort > "$CKPT_TMP/bench.rows"
+grep -o '"bench": "[^"]*"\|"samples": [0-9]*' ../BENCH_engine.json \
+    | sort > "$CKPT_TMP/baseline.rows"
+if ! diff -u "$CKPT_TMP/baseline.rows" "$CKPT_TMP/bench.rows"; then
+    echo "verify: FAIL — engine bench rows drifted from the committed BENCH_engine.json baseline" >&2
+    exit 1
+fi
+echo "verify: engine bench row set matches the committed baseline"
+# Keep this machine's fresh timings inspectable (and uploadable by CI)
+# at a gitignored path, so they never shadow the committed baseline.
+cp "$CKPT_TMP/bench.json" BENCH_engine.json
 
 # Formatting gate. The crate predates rustfmt enforcement, so on the
 # first run this applies `cargo fmt` once (commit the result), then
