@@ -6,23 +6,29 @@
 //!
 //! An optional positional argument filters rows by substring —
 //! `cargo bench --bench hotpath -- engine` runs only the engine rows
-//! (and skips the other sections' setup). When any engine-mode
-//! comparison row (simulated vs threaded vs socket, 8 workers) runs,
-//! its timings are recorded as JSON in `GPS_BENCH_OUT` (default
-//! `BENCH_engine.json`) for CI trend tracking.
+//! (and skips the other sections' setup). When any `engine/…` row runs
+//! (the execution-mode triple, the CSR-vs-grouped lookup pair, the
+//! coalesced-vs-per-envelope wire pair, or the partition-warm thread
+//! ladder), its timings are recorded as JSON in `GPS_BENCH_OUT`
+//! (default `BENCH_engine.json`) for CI trend tracking.
 
 #[path = "common.rs"]
 mod common;
 
+use gps_select::algorithms::pagerank::PageRank;
 use gps_select::algorithms::Algorithm;
 use gps_select::analyzer::analyze;
 use gps_select::dataset::logs::LogStore;
 use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::msg::{Envelope, Msg, PhaseStats};
+use gps_select::engine::wire;
+use gps_select::engine::worker::build_local_edges;
 use gps_select::engine::ExecutionMode;
 use gps_select::graph::gen::chung_lu;
+use gps_select::graph::{Edge, Graph};
 use gps_select::ml::gbdt::{Gbdt, GbdtParams};
 use gps_select::ml::{Regressor, TrainSet};
-use gps_select::partition::Strategy;
+use gps_select::partition::{PartitionCache, Strategy};
 use gps_select::util::benchkit::{black_box, Bench, Timing};
 use gps_select::util::rng::Rng;
 use gps_select::util::stats::PowerSums;
@@ -83,6 +89,7 @@ fn main() {
             ));
         }
     }
+    let mut pair_json: Vec<String> = Vec::new();
     if engine_rows.iter().any(|(name, _, _)| want(name)) {
         let p = Strategy::Hdrf(50).partition(&g, workers);
         let cfg = ClusterConfig::with_workers(workers);
@@ -90,7 +97,6 @@ fn main() {
         // laptop-class CI machines
         let p8 = Strategy::Hdrf(50).partition(&g, 8);
         let cfg8 = ClusterConfig::with_workers(8);
-        let mut pair_json: Vec<String> = Vec::new();
         for (name, algo, mode) in &engine_rows {
             if !want(name) {
                 continue;
@@ -105,14 +111,148 @@ fn main() {
                 }
             }
         }
-        if !pair_json.is_empty() {
-            let out =
-                std::env::var("GPS_BENCH_OUT").unwrap_or_else(|_| "BENCH_engine.json".to_string());
-            let json = format!("{{\n  \"engine_modes\": [\n{}\n  ]\n}}\n", pair_json.join(",\n"));
-            match std::fs::write(&out, json) {
-                Ok(()) => println!("engine mode timings written to {out}"),
-                Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+
+    // ---- engine: CSR O(1) slice lookup vs the pre-CSR sorted-copy
+    // binary-search group lookup, full-vertex sweep over the 8-worker
+    // Hdrf(50) locals of the bench graph ----
+    let csr_rows = ["engine/csr/csr-lookup/100k-edges", "engine/csr/grouped-lookup/100k-edges"];
+    if csr_rows.iter().any(|n| want(n)) {
+        let p8 = Strategy::Hdrf(50).partition(&g, 8);
+        let locals = build_local_edges(&g, &p8);
+        let n = g.num_vertices() as u32;
+        if want(csr_rows[0]) {
+            let t = bench.run(csr_rows[0], || {
+                let mut acc = 0usize;
+                for l in &locals {
+                    for v in 0..n {
+                        acc += l.out_of(v).len() + l.in_of(v).len();
+                    }
+                }
+                black_box(acc)
+            });
+            pair_json.push(json_row(csr_rows[0], &t));
+        }
+        if want(csr_rows[1]) {
+            // the old layout: two independently sorted edge-list copies
+            // per worker, each vertex's group found by partition_point
+            let copies: Vec<(Vec<Edge>, Vec<Edge>)> = (0..8usize)
+                .map(|w| {
+                    let mut by_src = Vec::new();
+                    let mut by_dst = Vec::new();
+                    for (e, &(u, v)) in g.edges().iter().enumerate() {
+                        if p8.edge_worker[e] as usize == w {
+                            by_src.push((u, v));
+                            by_dst.push((v, u));
+                        }
+                    }
+                    by_src.sort_unstable();
+                    by_dst.sort_unstable();
+                    (by_src, by_dst)
+                })
+                .collect();
+            let group = |list: &[Edge], v: u32| {
+                let lo = list.partition_point(|&(a, _)| a < v);
+                let hi = list.partition_point(|&(a, _)| a <= v);
+                hi - lo
+            };
+            let t = bench.run(csr_rows[1], || {
+                let mut acc = 0usize;
+                for (by_src, by_dst) in &copies {
+                    for v in 0..n {
+                        acc += group(by_src, v) + group(by_dst, v);
+                    }
+                }
+                black_box(acc)
+            });
+            pair_json.push(json_row(csr_rows[1], &t));
+        }
+    }
+
+    // ---- engine: coalesced delta-coded frame vs one fixed-width
+    // record per envelope, encode + decode of a 10k-message phase ----
+    let wire_rows =
+        ["engine/wire/coalesced-frame/10k-msgs", "engine/wire/per-envelope-frame/10k-msgs"];
+    if wire_rows.iter().any(|n| want(n)) {
+        // the same synthetic gather traffic for both rows: worker 0's
+        // phase output, ~10k partials fanned over 7 peer destinations
+        let make_msgs = || {
+            let mut wrng = Rng::new(0x11fe);
+            (0..10_000).map(move |_| {
+                let to = (wrng.gen_range(7) + 1) as u16;
+                let v = wrng.gen_range(20_000) as u32;
+                (to, v, wrng.next_f64())
+            })
+        };
+        if want(wire_rows[0]) {
+            let mut batches: Vec<Vec<Envelope<PageRank>>> = (0..8).map(|_| Vec::new()).collect();
+            for (to, v, x) in make_msgs() {
+                batches[to as usize].push(Envelope {
+                    from: 0,
+                    to,
+                    msg: Msg::GatherPartial { v, partial: x },
+                });
             }
+            let stats = PhaseStats::default();
+            let t = bench.run(wire_rows[0], || {
+                let payload = wire::encode_phase_out(&stats, &batches);
+                black_box(wire::decode_phase_out::<PageRank>(&payload, 8).unwrap())
+            });
+            pair_json.push(json_row(wire_rows[0], &t));
+        }
+        if want(wire_rows[1]) {
+            let flat: Vec<Envelope<PageRank>> = make_msgs()
+                .map(|(to, v, x)| Envelope { from: 0, to, msg: Msg::GatherPartial { v, partial: x } })
+                .collect();
+            let t = bench.run(wire_rows[1], || {
+                // the pre-coalescing frame shape: count + per-envelope records
+                let mut payload = Vec::new();
+                wire::put_u32(&mut payload, flat.len() as u32);
+                for e in &flat {
+                    wire::encode_envelope(e, &mut payload);
+                }
+                let mut r = wire::Reader::new(&payload);
+                let count = r.u32().unwrap() as usize;
+                let mut env: Vec<Envelope<PageRank>> = Vec::with_capacity(count);
+                for _ in 0..count {
+                    env.push(wire::decode_envelope::<PageRank>(&mut r).unwrap());
+                }
+                black_box(env)
+            });
+            pair_json.push(json_row(wire_rows[1], &t));
+        }
+    }
+
+    // ---- engine: parallel vs sequential partition-cache warming over
+    // the 11-strategy inventory (the corpus pre-warm stage) ----
+    let warm_rows = [
+        "engine/partition-warm/1-threads",
+        "engine/partition-warm/2-threads",
+        "engine/partition-warm/4-threads",
+        "engine/partition-warm/8-threads",
+    ];
+    if warm_rows.iter().any(|n| want(n)) {
+        let inventory = Strategy::inventory();
+        let pairs: Vec<(&Graph, Strategy)> = inventory.iter().map(|&s| (&g, s)).collect();
+        for (name, threads) in warm_rows.iter().zip([1usize, 2, 4, 8]) {
+            if want(name) {
+                let t = bench.run(name, || {
+                    let cache = PartitionCache::new(8);
+                    cache.warm_parallel(threads, &pairs);
+                    black_box(cache.len())
+                });
+                pair_json.push(json_row(name, &t));
+            }
+        }
+    }
+
+    if !pair_json.is_empty() {
+        let out =
+            std::env::var("GPS_BENCH_OUT").unwrap_or_else(|_| "BENCH_engine.json".to_string());
+        let json = format!("{{\n  \"engine_modes\": [\n{}\n  ]\n}}\n", pair_json.join(",\n"));
+        match std::fs::write(&out, json) {
+            Ok(()) => println!("engine timings written to {out}"),
+            Err(e) => eprintln!("could not write {out}: {e}"),
         }
     }
 

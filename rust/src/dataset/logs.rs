@@ -374,10 +374,11 @@ impl LogStore {
         let blocks: Vec<Vec<ExecutionLog>> = match &ckpt {
             None => {
                 let cache = PartitionCache::new(cfg.num_workers);
-                pool::parallel_map(threads, built.len() * strategies.len(), |i| {
-                    let (g, _) = &built[i / strategies.len()];
-                    cache.get_or_partition(g, strategies[i % strategies.len()]);
-                });
+                let pairs: Vec<(&Graph, Strategy)> = built
+                    .iter()
+                    .flat_map(|(g, _)| strategies.iter().map(move |&s| (g, s)))
+                    .collect();
+                cache.warm_parallel(threads, &pairs);
                 let flat = pool::parallel_map(threads, built.len() * per_graph, |i| {
                     let (g, data) = &built[i / per_graph];
                     let rest = i % per_graph;
@@ -395,9 +396,9 @@ impl LogStore {
                 for (j, &gi) in process.iter().enumerate() {
                     let (g, data) = &built[j];
                     let cache = PartitionCache::new(cfg.num_workers);
-                    pool::parallel_map(threads, strategies.len(), |si| {
-                        cache.get_or_partition(g, strategies[si]);
-                    });
+                    let pairs: Vec<(&Graph, Strategy)> =
+                        strategies.iter().map(|&s| (g, s)).collect();
+                    cache.warm_parallel(threads, &pairs);
                     let block = pool::parallel_map(threads, per_graph, |k| {
                         let s = strategies[k / algorithms.len()];
                         let a = algorithms[k % algorithms.len()];

@@ -18,6 +18,15 @@
 //! Values are double-buffered: every gather in superstep `t` reads
 //! values committed at `t − 1` (synchronous BSP semantics, like
 //! PowerGraph's sync engine).
+//!
+//! The gather and scatter folds are executed as **whole-worker edge
+//! sweeps**: [`super::state::WorkerState`] walks its
+//! [`super::worker::LocalEdges`] CSR pair arrays linearly (grouped by
+//! the phase's sweep vertex), so the per-edge `gather`/`scatter`
+//! callbacks run over contiguous memory rather than per-vertex lookup
+//! structures. The fold *order* within each vertex's group is the
+//! sorted neighbour order, which fixes every floating-point
+//! accumulation sequence.
 
 use crate::graph::VertexId;
 

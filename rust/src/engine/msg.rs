@@ -8,12 +8,15 @@
 //!
 //! Cost accounting is derived *from* this layer instead of ad-hoc
 //! `charge_message` calls: [`PhaseOut::push`] is the only way a phase
-//! emits a message, and it simultaneously enqueues the envelope and
-//! folds its size into the phase's [`SendAccount`]. A charged byte
-//! therefore always corresponds to an actual enqueued message, in both
-//! execution modes, and the per-superstep message-round count is
-//! derived from which [`Round`]s saw traffic
-//! ([`super::cost::StepLedger`]).
+//! emits a message, and it simultaneously stages the envelope (per
+//! destination worker) and folds its size into the phase's
+//! [`SendAccount`]. A charged byte therefore always corresponds to an
+//! actual enqueued message, in every execution mode, and the
+//! per-superstep message-round count is derived from which [`Round`]s
+//! saw traffic ([`super::cost::StepLedger`]). **Charged bytes are the
+//! logical envelope bytes** ([`Msg::bytes`]); a transport may move
+//! fewer bytes on its wire (batch headers amortised, vertex ids
+//! delta-coded), which never feeds back into the cost model.
 //!
 //! Envelopes are tagged with the sending worker; receivers process an
 //! inbox sorted by `(sender, send order)` so that combine order — and
@@ -140,30 +143,82 @@ pub struct PhaseStats {
     pub send: SendAccount,
 }
 
-/// One phase's output: the envelopes to deliver plus the stats to fold.
+/// One phase's output: the envelopes to deliver, staged **per
+/// destination worker**, plus the stats to fold.
+///
+/// Staging by destination is what lets every transport ship one
+/// coalesced batch per (destination, phase) — one mpsc send or one
+/// delta-encoded wire frame section instead of per-envelope traffic —
+/// and the buffer is owned by the transport and reused across
+/// supersteps ([`PhaseOut::reset`] clears contents, keeps capacity).
+///
+/// The cost model is untouched by the coalescing: [`PhaseOut::push`]
+/// remains the single choke point that simultaneously stages an
+/// envelope and charges its **logical** size ([`Msg::bytes`]). Charged
+/// bytes are the logical envelope bytes; the bytes a transport actually
+/// moves may be fewer (the socket backend's delta coding is
+/// transport-internal), so `SimTime`, `OpCounts` and value hashes are
+/// independent of how a backend packs its frames.
 pub struct PhaseOut<P: VertexProgram> {
-    pub env: Vec<Envelope<P>>,
+    /// Envelope batches, indexed by destination worker. A worker never
+    /// addresses itself, so `batches[own id]` stays empty.
+    batches: Vec<Vec<Envelope<P>>>,
     pub stats: PhaseStats,
 }
 
 impl<P: VertexProgram> PhaseOut<P> {
-    pub fn new() -> Self {
-        PhaseOut { env: Vec::new(), stats: PhaseStats::default() }
+    /// An empty staging buffer for a `num_workers`-worker run.
+    pub fn new(num_workers: usize) -> Self {
+        PhaseOut {
+            batches: (0..num_workers).map(|_| Vec::new()).collect(),
+            stats: PhaseStats::default(),
+        }
     }
 
-    /// Enqueue `envelope` and charge it — the single choke point that
-    /// keeps the cost model and the actual message stream in lockstep.
+    /// Clear for the next phase: batches are emptied in place (capacity
+    /// retained across supersteps), stats are zeroed.
+    pub fn reset(&mut self) {
+        for b in &mut self.batches {
+            b.clear();
+        }
+        self.stats = PhaseStats::default();
+    }
+
+    /// Stage `envelope` for its destination and charge it — the single
+    /// choke point that keeps the cost model and the actual message
+    /// stream in lockstep.
     #[inline]
     pub fn push(&mut self, cfg: &ClusterConfig, envelope: Envelope<P>) {
         debug_assert_ne!(envelope.from, envelope.to, "local traffic must bypass the msg layer");
         self.stats.send.push(cfg, envelope.from as usize, envelope.to as usize, envelope.msg.bytes());
-        self.env.push(envelope);
+        self.batches[envelope.to as usize].push(envelope);
     }
-}
 
-impl<P: VertexProgram> Default for PhaseOut<P> {
-    fn default() -> Self {
-        Self::new()
+    /// The per-destination batches (index = destination worker).
+    pub fn batches(&self) -> &[Vec<Envelope<P>>] {
+        &self.batches
+    }
+
+    /// Take destination `d`'s batch out, leaving an empty one behind —
+    /// how the mpsc backend hands a whole batch to the receiving
+    /// worker in one channel send.
+    pub fn take_batch(&mut self, d: usize) -> Vec<Envelope<P>> {
+        std::mem::take(&mut self.batches[d])
+    }
+
+    /// Move every staged envelope into per-destination inboxes
+    /// (`pending[d]` receives batch `d`), retaining this buffer's
+    /// capacity — the sequential backend's zero-copy hand-off.
+    pub fn drain_into(&mut self, pending: &mut [Vec<Envelope<P>>]) {
+        debug_assert_eq!(pending.len(), self.batches.len());
+        for (d, b) in self.batches.iter_mut().enumerate() {
+            pending[d].append(b);
+        }
+    }
+
+    /// Total staged envelopes across all destinations.
+    pub fn num_staged(&self) -> usize {
+        self.batches.iter().map(Vec::len).sum()
     }
 }
 
@@ -241,14 +296,30 @@ mod tests {
     #[test]
     fn phase_out_charges_exactly_what_it_enqueues() {
         let cfg = ClusterConfig::with_workers(4);
-        let mut out: PhaseOut<Probe> = PhaseOut::new();
+        let mut out: PhaseOut<Probe> = PhaseOut::new(4);
         out.push(&cfg, Envelope { from: 1, to: 2, msg: Msg::Activate { v: 9 } });
         out.push(&cfg, Envelope { from: 1, to: 0, msg: Msg::ValueUpdate { v: 4, value: 1.0 } });
-        assert_eq!(out.env.len(), 2);
+        assert_eq!(out.num_staged(), 2);
         assert_eq!(out.stats.send.msgs, 2);
         assert_eq!(
             out.stats.send.bytes,
-            out.env.iter().map(|e| e.msg.bytes() as u64).sum::<u64>()
+            out.batches()
+                .iter()
+                .flatten()
+                .map(|e| e.msg.bytes() as u64)
+                .sum::<u64>()
         );
+        // staged by destination, send order preserved within a batch
+        assert_eq!(out.batches()[2].len(), 1);
+        assert_eq!(out.batches()[0].len(), 1);
+        assert!(out.batches()[1].is_empty() && out.batches()[3].is_empty());
+
+        // reset clears contents but keeps the buffers usable
+        out.reset();
+        assert_eq!(out.num_staged(), 0);
+        assert_eq!(out.stats.send.msgs, 0);
+        out.push(&cfg, Envelope { from: 0, to: 3, msg: Msg::Activate { v: 1 } });
+        assert_eq!(out.take_batch(3).len(), 1);
+        assert_eq!(out.num_staged(), 0);
     }
 }

@@ -25,7 +25,7 @@ use crate::partition::Partitioning;
 use super::cost::ClusterConfig;
 use super::gas::{EdgeDirection, GraphInfo, Payload, VertexProgram};
 use super::msg::{Envelope, Msg, PhaseOut, PhaseStats};
-use super::worker::{build_local_edges, LocalEdges};
+use super::worker::{build_local_edges, build_local_edges_for, LocalEdges};
 use super::{edge_rank, effective_dirs};
 
 /// Sentinel for "vertex not present on this worker".
@@ -147,15 +147,7 @@ pub fn build_one_worker_state<P: VertexProgram>(
     assert!(rank < p.num_workers, "rank {rank} of {}", p.num_workers);
     let n = g.num_vertices();
     let w = rank as u16;
-    let mut local = LocalEdges::default();
-    for (e, &(u, v)) in g.edges().iter().enumerate() {
-        if p.edge_worker[e] == w {
-            local.by_src.push((u, v));
-            local.by_dst.push((v, u));
-        }
-    }
-    local.by_src.sort_unstable();
-    local.by_dst.sort_unstable();
+    let local = build_local_edges_for(g, p, rank);
     let mut vs = Vec::new();
     let mut ms = Vec::new();
     // same per-vertex visit order as build_worker_states: the replica
@@ -176,9 +168,9 @@ pub fn build_one_worker_state<P: VertexProgram>(
     make_state(rank, n, local, vs, ms, prog, gi)
 }
 
-/// One sequential sweep over a worker's sorted edge list: group by the
-/// owning vertex, fold active vertices' edges into local partials (no
-/// per-vertex binary searches — the engine's hottest loop).
+/// One sequential sweep over a worker's contiguous CSR pair array
+/// (grouped by the owning vertex): fold active vertices' edges into
+/// local partials. Memory access is linear — the engine's hottest loop.
 #[allow(clippy::too_many_arguments)]
 fn sweep<P: VertexProgram>(
     prog: &P,
@@ -239,8 +231,11 @@ impl<P: VertexProgram> WorkerState<P> {
 
     /// **Gather**: fold the program's gather over this worker's local
     /// edges of every active vertex, then flush each partial — kept
-    /// locally when this worker masters the vertex, otherwise enqueued
-    /// as a [`Msg::GatherPartial`] to the master.
+    /// locally when this worker masters the vertex, otherwise staged
+    /// as a [`Msg::GatherPartial`] to the master. `out` is reset first
+    /// and holds this phase's output on return (the caller owns the
+    /// buffer so its capacity survives across supersteps).
+    #[allow(clippy::too_many_arguments)]
     pub fn gather_phase(
         &mut self,
         prog: &P,
@@ -250,11 +245,12 @@ impl<P: VertexProgram> WorkerState<P> {
         active: &[bool],
         step: usize,
         cfg: &ClusterConfig,
-    ) -> PhaseOut<P> {
-        let mut out = PhaseOut::new();
+        out: &mut PhaseOut<P>,
+    ) {
+        out.reset();
         let dir = prog.gather_edges(step);
         if dir == EdgeDirection::None {
-            return out;
+            return;
         }
         let needs_rank = prog.needs_edge_rank();
         debug_assert!(
@@ -269,15 +265,15 @@ impl<P: VertexProgram> WorkerState<P> {
         debug_assert!(self.gacc_touched.is_empty() && self.self_partials.is_empty());
         if use_in {
             sweep(
-                prog, g, gi, step, dir, needs_rank, op_cost, per_byte, &self.local.by_dst, active,
-                &self.lid, &self.values, &mut self.gacc, &mut self.gacc_touched, &mut cost,
+                prog, g, gi, step, dir, needs_rank, op_cost, per_byte, self.local.in_pairs(),
+                active, &self.lid, &self.values, &mut self.gacc, &mut self.gacc_touched, &mut cost,
                 &mut count,
             );
         }
         if use_out {
             sweep(
-                prog, g, gi, step, dir, needs_rank, op_cost, per_byte, &self.local.by_src, active,
-                &self.lid, &self.values, &mut self.gacc, &mut self.gacc_touched, &mut cost,
+                prog, g, gi, step, dir, needs_rank, op_cost, per_byte, self.local.out_pairs(),
+                active, &self.lid, &self.values, &mut self.gacc, &mut self.gacc_touched, &mut cost,
                 &mut count,
             );
         }
@@ -298,7 +294,6 @@ impl<P: VertexProgram> WorkerState<P> {
             }
         }
         self.gacc_touched.clear();
-        out
     }
 
     /// Fold one gather partial into the master-side accumulator.
@@ -313,9 +308,10 @@ impl<P: VertexProgram> WorkerState<P> {
 
     /// **Apply**: combine the inbound partials (ascending sender order,
     /// with this worker's own partials at its own position), apply
-    /// every active mastered vertex, commit the master copy, and
-    /// enqueue [`Msg::ValueUpdate`]s for the mirrors plus any
-    /// [`Msg::ResultEmit`] records. `inbox` must be sorted by sender.
+    /// every active mastered vertex, commit the master copy, and stage
+    /// [`Msg::ValueUpdate`]s for the mirrors plus any
+    /// [`Msg::ResultEmit`] records into `out` (reset first). `inbox`
+    /// must be sorted by sender.
     #[allow(clippy::too_many_arguments)]
     pub fn apply_phase(
         &mut self,
@@ -326,7 +322,9 @@ impl<P: VertexProgram> WorkerState<P> {
         step: usize,
         cfg: &ClusterConfig,
         inbox: Vec<Envelope<P>>,
-    ) -> PhaseOut<P> {
+        out: &mut PhaseOut<P>,
+    ) {
+        out.reset();
         debug_assert!(inbox.windows(2).all(|w| w[0].from <= w[1].from), "inbox sorted by sender");
         let split = inbox.partition_point(|e| (e.from as usize) < self.id);
         let mut lo = inbox;
@@ -347,7 +345,6 @@ impl<P: VertexProgram> WorkerState<P> {
             fold_envelope(self, e);
         }
 
-        let mut out = PhaseOut::new();
         let emit_target = (self.id + cfg.num_workers / cfg.num_machines) % cfg.num_workers;
         for mi in 0..self.masters.len() {
             let v = self.masters[mi];
@@ -388,7 +385,6 @@ impl<P: VertexProgram> WorkerState<P> {
             // master commits its own copy directly (local, free)
             self.values[l] = new_val;
         }
-        out
     }
 
     /// **Commit**: install the value broadcasts received from masters
@@ -409,10 +405,12 @@ impl<P: VertexProgram> WorkerState<P> {
     }
 
     /// **Scatter**: walk the local edges of every active replica in the
-    /// program's scatter direction (chained slices — no per-vertex
-    /// allocation) and activate neighbours for the next superstep: a
-    /// locally mastered target is recorded directly, a remote one gets
-    /// one [`Msg::Activate`] per (worker, target) per superstep.
+    /// program's scatter direction (chained CSR slices — O(1) lookups,
+    /// no per-vertex allocation) and activate neighbours for the next
+    /// superstep: a locally mastered target is recorded directly, a
+    /// remote one gets one [`Msg::Activate`] per (worker, target) per
+    /// superstep, staged into `out` (reset first).
+    #[allow(clippy::too_many_arguments)]
     pub fn scatter_phase(
         &mut self,
         prog: &P,
@@ -422,11 +420,12 @@ impl<P: VertexProgram> WorkerState<P> {
         active: &[bool],
         step: usize,
         cfg: &ClusterConfig,
-    ) -> PhaseOut<P> {
-        let mut out = PhaseOut::new();
+        out: &mut PhaseOut<P>,
+    ) {
+        out.reset();
         let dir = prog.scatter_edges(step);
         if dir == EdgeDirection::None {
-            return out;
+            return;
         }
         let (use_in, use_out) = effective_dirs(dir, g.directed);
         let scatter_cost = prog.scatter_op_cost();
@@ -463,7 +462,6 @@ impl<P: VertexProgram> WorkerState<P> {
             self.seen[self.lid[u as usize] as usize] = false;
         }
         self.seen_touched.clear();
-        out
     }
 
     /// Record the activation notices addressed to this worker's masters.
@@ -534,8 +532,13 @@ mod tests {
                 let one = build_one_worker_state(&g, &p, &prog, &gi, rank);
                 let full = &all[rank];
                 assert_eq!(one.id, full.id);
-                assert_eq!(one.local.by_src, full.local.by_src, "{} rank {rank}", s.name());
-                assert_eq!(one.local.by_dst, full.local.by_dst);
+                assert_eq!(
+                    one.local.out_pairs(),
+                    full.local.out_pairs(),
+                    "{} rank {rank}",
+                    s.name()
+                );
+                assert_eq!(one.local.in_pairs(), full.local.in_pairs());
                 assert_eq!(one.verts, full.verts);
                 assert_eq!(one.masters, full.masters);
                 assert_eq!(one.lid, full.lid);
@@ -576,7 +579,7 @@ mod tests {
                 assert_eq!(p.master[v as usize] as usize, s.id);
             }
             // edge endpoints are replicated locally
-            for &(a, b) in &s.local.by_src {
+            for &(a, b) in s.local.out_pairs() {
                 assert_ne!(s.lid[a as usize], NO_LID);
                 assert_ne!(s.lid[b as usize], NO_LID);
             }

@@ -4,10 +4,14 @@
 //! thread; envelopes route through double-buffered in-memory inboxes
 //! (`pending` collects a phase's output, the swap delivers it as the
 //! next phase's input — the BSP hand-off). Because workers execute in
-//! ascending order, every delivered inbox is naturally sorted by
+//! ascending order and each worker's [`PhaseOut`] batches preserve send
+//! order per destination, every delivered inbox is naturally sorted by
 //! sender, satisfying the [`super::Transport`] ordering contract with
-//! no sorting at all. This is the fastest backend and the one corpus
-//! construction uses.
+//! no sorting at all. One `PhaseOut` scratch buffer is shared by all
+//! workers and reused across supersteps ([`PhaseOut::drain_into`]
+//! moves envelopes out while keeping the batch capacity), so the
+//! steady-state superstep allocates nothing on the message path. This
+//! is the fastest backend and the one corpus construction uses.
 
 use crate::graph::{Graph, VertexId};
 use crate::partition::Partitioning;
@@ -19,7 +23,7 @@ use super::super::gas::{GraphInfo, VertexProgram};
 use super::super::msg::{Envelope, PhaseOut, PhaseStats};
 use super::super::state::{build_worker_states, WorkerState};
 use super::super::RunResult;
-use super::{drive, route, Transport};
+use super::{drive, Transport};
 
 pub(crate) struct LocalTransport<'a, P: VertexProgram> {
     prog: &'a P,
@@ -32,6 +36,9 @@ pub(crate) struct LocalTransport<'a, P: VertexProgram> {
     current: Vec<Vec<Envelope<P>>>,
     /// Staging inboxes collecting the running phase's output.
     pending: Vec<Vec<Envelope<P>>>,
+    /// Shared per-phase output buffer, reused across workers and
+    /// supersteps.
+    out: PhaseOut<P>,
 }
 
 impl<P: VertexProgram> LocalTransport<'_, P> {
@@ -50,11 +57,11 @@ impl<P: VertexProgram> Transport<P> for LocalTransport<'_, P> {
     fn gather(&mut self, step: usize, active: &[bool]) -> Result<Vec<PhaseStats>> {
         let mut stats = Vec::with_capacity(self.workers.len());
         for w in 0..self.workers.len() {
-            let PhaseOut { env, stats: st } = self.workers[w].gather_phase(
-                self.prog, self.g, self.gi, self.p, active, step, self.cfg,
+            self.workers[w].gather_phase(
+                self.prog, self.g, self.gi, self.p, active, step, self.cfg, &mut self.out,
             );
-            route(&mut self.pending, env);
-            stats.push(st);
+            self.out.drain_into(&mut self.pending);
+            stats.push(self.out.stats);
         }
         self.deliver();
         Ok(stats)
@@ -64,10 +71,11 @@ impl<P: VertexProgram> Transport<P> for LocalTransport<'_, P> {
         let mut stats = Vec::with_capacity(self.workers.len());
         for w in 0..self.workers.len() {
             let inbox = std::mem::take(&mut self.current[w]);
-            let PhaseOut { env, stats: st } =
-                self.workers[w].apply_phase(self.prog, self.gi, self.p, active, step, self.cfg, inbox);
-            route(&mut self.pending, env);
-            stats.push(st);
+            self.workers[w].apply_phase(
+                self.prog, self.gi, self.p, active, step, self.cfg, inbox, &mut self.out,
+            );
+            self.out.drain_into(&mut self.pending);
+            stats.push(self.out.stats);
         }
         self.deliver();
         Ok(stats)
@@ -81,11 +89,11 @@ impl<P: VertexProgram> Transport<P> for LocalTransport<'_, P> {
         }
         let mut stats = Vec::with_capacity(self.workers.len());
         for w in 0..self.workers.len() {
-            let PhaseOut { env, stats: st } = self.workers[w].scatter_phase(
-                self.prog, self.g, self.gi, self.p, active, step, self.cfg,
+            self.workers[w].scatter_phase(
+                self.prog, self.g, self.gi, self.p, active, step, self.cfg, &mut self.out,
             );
-            route(&mut self.pending, env);
-            stats.push(st);
+            self.out.drain_into(&mut self.pending);
+            stats.push(self.out.stats);
         }
         self.deliver();
         Ok(stats)
@@ -132,6 +140,7 @@ pub(crate) fn run<P: VertexProgram>(
         workers,
         current: (0..w_count).map(|_| Vec::new()).collect(),
         pending: (0..w_count).map(|_| Vec::new()).collect(),
+        out: PhaseOut::new(w_count),
     };
     drive(&mut t, prog, &gi, cfg)
 }

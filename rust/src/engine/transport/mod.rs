@@ -28,6 +28,18 @@
 //!    master-side combine order;
 //! 3. the phase code itself is the *same* [`super::state::WorkerState`]
 //!    methods everywhere; a transport only moves envelopes.
+//!
+//! Envelopes are coalesced per **(destination worker, phase)**: each
+//! worker's [`super::msg::PhaseOut`] stages its output into
+//! per-destination batches, and a transport moves whole batches — one
+//! in-memory append, one channel send, or one delta-encoded
+//! [`super::wire`] frame section per destination — instead of routing
+//! envelope by envelope. Because a batch preserves send order and
+//! batches are merged in ascending sender order, contract (2) holds
+//! with no per-envelope work at all. The cost model still charges the
+//! logical per-envelope bytes at [`super::msg::PhaseOut::push`] time,
+//! so coalescing (and the wire-level delta coding) never shows up in
+//! `SimTime` or `OpCounts`.
 
 pub mod local;
 pub mod mpsc;
@@ -38,7 +50,7 @@ use crate::util::error::Result;
 
 use super::cost::{ClusterConfig, OpCounts, SimTime, StepLedger};
 use super::gas::{GraphInfo, VertexProgram};
-use super::msg::{Envelope, PhaseStats, Round};
+use super::msg::{PhaseStats, Round};
 use super::{assemble, initial_active, should_continue, RunResult};
 
 /// One execution backend driving `cfg.num_workers` workers through BSP
@@ -70,15 +82,6 @@ pub trait Transport<P: VertexProgram> {
     /// pairs (and the collect-phase send accounting when `charge`).
     #[allow(clippy::type_complexity)]
     fn collect(&mut self, charge: bool) -> Result<Vec<(PhaseStats, Vec<(VertexId, P::Value)>)>>;
-}
-
-/// Route a phase's envelopes into per-destination staging inboxes.
-/// Callers invoke this per worker in ascending worker order, which is
-/// what keeps every staged inbox sorted by sender.
-pub(crate) fn route<P: VertexProgram>(staged: &mut [Vec<Envelope<P>>], env: Vec<Envelope<P>>) {
-    for e in env {
-        staged[e.to as usize].push(e);
-    }
 }
 
 /// The transport-agnostic superstep driver: the one copy of the BSP

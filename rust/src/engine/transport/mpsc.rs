@@ -3,10 +3,14 @@
 //! One OS thread per engine worker; the calling thread is the
 //! coordinator. Phases on a worker run between [`BspBarrier`]
 //! generations: each send/drain pair is separated by two generations so
-//! a phase's inbox never mixes with the next phase's traffic. mpsc
-//! preserves per-sender order, so a stable sort by sender reproduces
-//! the canonical (sender, send order) inbox sequence of the sequential
-//! backend — which is what keeps this mode bit-identical to it.
+//! a phase's inbox never mixes with the next phase's traffic. Each
+//! worker sends at most one coalesced **batch** per destination per
+//! phase (its [`PhaseOut`] batch, which preserves send order), so a
+//! receiver reassembles the canonical (sender, send order) inbox
+//! sequence of the sequential backend by sorting the arrived batches by
+//! sender and flattening — which is what keeps this mode bit-identical
+//! to it, at one channel send per destination instead of one per
+//! envelope.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -50,48 +54,58 @@ fn worker_loop<P: VertexProgram>(
     gi: &GraphInfo<'_>,
     p: &Partitioning,
     cfg: &ClusterConfig,
-    inbox: mpsc::Receiver<Envelope<P>>,
+    inbox: mpsc::Receiver<Vec<Envelope<P>>>,
     ctl: mpsc::Receiver<Ctl>,
-    peers: Vec<mpsc::Sender<Envelope<P>>>,
+    peers: Vec<mpsc::Sender<Vec<Envelope<P>>>>,
     report: mpsc::Sender<Report<P>>,
     barrier: &BspBarrier,
 ) {
     let worker = state.id;
-    let send_all = |env: Vec<Envelope<P>>| {
-        for e in env {
-            peers[e.to as usize].send(e).expect("peer inbox open");
+    // one coalesced output buffer, reused across phases and supersteps
+    let mut out: PhaseOut<P> = PhaseOut::new(peers.len());
+    let send_batches = |out: &mut PhaseOut<P>| {
+        for d in 0..peers.len() {
+            let batch = out.take_batch(d);
+            if !batch.is_empty() {
+                peers[d].send(batch).expect("peer inbox open");
+            }
         }
     };
-    // mpsc preserves per-sender order; a stable sort by sender yields
-    // the canonical (sender, send order) sequence of the simulated mode
+    // a sender ships at most one batch per destination per phase, in
+    // its own send order; sorting the batches by sender and flattening
+    // yields the canonical (sender, send order) sequence of the
+    // simulated mode
     let drain_sorted = || {
-        let mut v: Vec<Envelope<P>> = inbox.try_iter().collect();
-        v.sort_by_key(|e| e.from);
-        v
+        let mut batches: Vec<Vec<Envelope<P>>> = inbox.try_iter().collect();
+        batches.sort_by_key(|b| b.first().map_or(0, |e| e.from));
+        batches.into_iter().flatten().collect::<Vec<Envelope<P>>>()
     };
     while let Ok(ctl_msg) = ctl.recv() {
         match ctl_msg {
             Ctl::Step { step, active } => {
-                let PhaseOut { env, stats } =
-                    state.gather_phase(prog, g, gi, p, &active, step, cfg);
-                send_all(env);
-                report.send(Report::Phase { worker, round: Round::Gather, stats }).unwrap();
+                state.gather_phase(prog, g, gi, p, &active, step, cfg, &mut out);
+                send_batches(&mut out);
+                report
+                    .send(Report::Phase { worker, round: Round::Gather, stats: out.stats })
+                    .unwrap();
                 barrier.wait();
                 let partials = drain_sorted();
                 barrier.wait();
 
-                let PhaseOut { env, stats } =
-                    state.apply_phase(prog, gi, p, &active, step, cfg, partials);
-                send_all(env);
-                report.send(Report::Phase { worker, round: Round::Apply, stats }).unwrap();
+                state.apply_phase(prog, gi, p, &active, step, cfg, partials, &mut out);
+                send_batches(&mut out);
+                report
+                    .send(Report::Phase { worker, round: Round::Apply, stats: out.stats })
+                    .unwrap();
                 barrier.wait();
                 state.commit(drain_sorted());
                 barrier.wait();
 
-                let PhaseOut { env, stats } =
-                    state.scatter_phase(prog, g, gi, p, &active, step, cfg);
-                send_all(env);
-                report.send(Report::Phase { worker, round: Round::Scatter, stats }).unwrap();
+                state.scatter_phase(prog, g, gi, p, &active, step, cfg, &mut out);
+                send_batches(&mut out);
+                report
+                    .send(Report::Phase { worker, round: Round::Scatter, stats: out.stats })
+                    .unwrap();
                 barrier.wait();
                 state.drain_activations(drain_sorted());
                 let next_active = state.take_next_active();
@@ -213,8 +227,8 @@ pub(crate) fn run<P: VertexProgram>(
     let states = build_worker_states(g, p, prog, &gi);
     let barrier = BspBarrier::new(w_count);
 
-    let mut inbox_txs: Vec<mpsc::Sender<Envelope<P>>> = Vec::with_capacity(w_count);
-    let mut inbox_rxs: Vec<mpsc::Receiver<Envelope<P>>> = Vec::with_capacity(w_count);
+    let mut inbox_txs: Vec<mpsc::Sender<Vec<Envelope<P>>>> = Vec::with_capacity(w_count);
+    let mut inbox_rxs: Vec<mpsc::Receiver<Vec<Envelope<P>>>> = Vec::with_capacity(w_count);
     let mut ctl_txs: Vec<mpsc::Sender<Ctl>> = Vec::with_capacity(w_count);
     let mut ctl_rxs: Vec<mpsc::Receiver<Ctl>> = Vec::with_capacity(w_count);
     for _ in 0..w_count {

@@ -48,7 +48,7 @@ use crate::util::error::{bail, ensure, Context, Result};
 use super::super::cost::ClusterConfig;
 use super::super::degree_vecs;
 use super::super::gas::{GraphInfo, VertexProgram};
-use super::super::msg::{Envelope, PhaseStats};
+use super::super::msg::{Envelope, PhaseOut, PhaseStats};
 use super::super::state::build_one_worker_state;
 use super::super::wire;
 use super::super::RunResult;
@@ -105,28 +105,28 @@ struct SocketTransport<P: VertexProgram> {
 }
 
 impl<P: VertexProgram> SocketTransport<P> {
-    /// Read every worker's phase output in ascending rank order, stage
-    /// its envelopes per destination, then deliver each worker's inbox.
+    /// Read every worker's coalesced phase output in ascending rank
+    /// order, stage its per-destination batches, then deliver each
+    /// worker's inbox as one batched frame. Reading senders in ascending
+    /// rank order (each batch already in send order) is what keeps every
+    /// delivered inbox sorted by sender; the staging buffers are cleared
+    /// in place so their capacity survives across supersteps.
     fn relay_phase(&mut self) -> Result<Vec<PhaseStats>> {
         let n = self.links.len();
         let mut stats = Vec::with_capacity(n);
         for w in 0..n {
             let payload = wire::expect_frame(&mut self.links[w].stream, wire::FRAME_PHASE_OUT)
                 .with_context(|| format!("phase output of socket worker {w}"))?;
-            let (st, env) = wire::decode_phase_out::<P>(&payload)?;
-            for e in env {
-                ensure!(
-                    (e.to as usize) < n,
-                    "socket worker {w} addressed worker {} of {n}",
-                    e.to
-                );
-                self.pending[e.to as usize].push(e);
+            let (st, batches) = wire::decode_phase_out::<P>(&payload, n)
+                .with_context(|| format!("phase output of socket worker {w}"))?;
+            for (to, mut batch) in batches {
+                self.pending[to as usize].append(&mut batch);
             }
             stats.push(st);
         }
         for w in 0..n {
-            let env = std::mem::take(&mut self.pending[w]);
-            let payload = wire::encode_inbox(&env);
+            let payload = wire::encode_inbox(&self.pending[w], w as u16);
+            self.pending[w].clear();
             wire::write_frame(&mut self.links[w].stream, wire::FRAME_INBOX, &payload)
                 .with_context(|| format!("inbox delivery to socket worker {w}"))?;
         }
@@ -421,32 +421,34 @@ pub fn serve_connection<P: VertexProgram>(
         wire::decode_inbox::<P>(&payload)
     };
 
+    // one coalesced output buffer, reused across phases and supersteps
+    let mut out: PhaseOut<P> = PhaseOut::new(p.num_workers);
     loop {
         let (kind, payload) = wire::read_frame(stream)?;
         match kind {
             wire::FRAME_STEP => {
                 let (step, active) = wire::decode_step(&payload, g.num_vertices())?;
-                let out = state.gather_phase(prog, g, &gi, p, &active, step, cfg);
+                state.gather_phase(prog, g, &gi, p, &active, step, cfg, &mut out);
                 wire::write_frame(
                     stream,
                     wire::FRAME_PHASE_OUT,
-                    &wire::encode_phase_out(&out.stats, &out.env),
+                    &wire::encode_phase_out(&out.stats, out.batches()),
                 )?;
                 let partials = read_inbox(stream)?;
 
-                let out = state.apply_phase(prog, &gi, p, &active, step, cfg, partials);
+                state.apply_phase(prog, &gi, p, &active, step, cfg, partials, &mut out);
                 wire::write_frame(
                     stream,
                     wire::FRAME_PHASE_OUT,
-                    &wire::encode_phase_out(&out.stats, &out.env),
+                    &wire::encode_phase_out(&out.stats, out.batches()),
                 )?;
                 state.commit(read_inbox(stream)?);
 
-                let out = state.scatter_phase(prog, g, &gi, p, &active, step, cfg);
+                state.scatter_phase(prog, g, &gi, p, &active, step, cfg, &mut out);
                 wire::write_frame(
                     stream,
                     wire::FRAME_PHASE_OUT,
-                    &wire::encode_phase_out(&out.stats, &out.env),
+                    &wire::encode_phase_out(&out.stats, out.batches()),
                 )?;
                 state.drain_activations(read_inbox(stream)?);
 

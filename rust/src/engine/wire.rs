@@ -19,6 +19,18 @@
 //! is what keeps values, `OpCounts` and `SimTime` bit-identical across
 //! all three [`super::ExecutionMode`] backends
 //! (`tests/mode_equivalence.rs` and `tests/wire_roundtrip.rs` pin it).
+//!
+//! Phase traffic is **coalesced**: a `PHASE_OUT` payload carries one
+//! batched section per destination worker (ascending), an `INBOX`
+//! payload one batched sequence for its receiver. Within a sequence,
+//! envelopes are grouped into maximal runs sharing `(from, kind)` —
+//! the run header carries both once — and vertex ids travel as
+//! zigzag-varint deltas from the previous id in the run (LEB128,
+//! [`put_varint`]/[`put_zigzag`]). This shrinks the dominant frames
+//! well below one fixed-width envelope record each, but it is purely
+//! transport-internal: **charged bytes are the logical envelope
+//! bytes** ([`Msg::bytes`], charged at `PhaseOut::push`), so the cost
+//! model never sees the wire-level compression.
 
 use std::io::{Read as IoRead, Write as IoWrite};
 
@@ -104,6 +116,30 @@ impl<'a> Reader<'a> {
         Ok(f64::from_bits(self.u64()?))
     }
 
+    /// An LEB128 varint (at most 10 bytes for a `u64`).
+    pub fn varint(&mut self) -> Result<u64> {
+        let mut x = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8()?;
+            ensure!(
+                shift < 63 || (shift == 63 && b <= 1),
+                "varint overflows 64 bits on the wire"
+            );
+            x |= u64::from(b & 0x7f) << shift;
+            if b & 0x80 == 0 {
+                return Ok(x);
+            }
+            shift += 7;
+        }
+    }
+
+    /// A zigzag-coded signed varint.
+    pub fn zigzag(&mut self) -> Result<i64> {
+        let z = self.varint()?;
+        Ok((z >> 1) as i64 ^ -((z & 1) as i64))
+    }
+
     /// A length-prefixed UTF-8 string.
     pub fn str(&mut self) -> Result<String> {
         let len = self.u32()? as usize;
@@ -137,6 +173,21 @@ pub fn put_f64(out: &mut Vec<u8>, x: f64) {
 pub fn put_str(out: &mut Vec<u8>, s: &str) {
     put_u32(out, s.len() as u32);
     out.extend_from_slice(s.as_bytes());
+}
+
+/// LEB128: 7 value bits per byte, high bit = continuation.
+pub fn put_varint(out: &mut Vec<u8>, mut x: u64) {
+    while x >= 0x80 {
+        out.push((x as u8 & 0x7f) | 0x80);
+        x >>= 7;
+    }
+    out.push(x as u8);
+}
+
+/// Zigzag-fold a signed value into an unsigned varint (small
+/// magnitudes of either sign stay one byte).
+pub fn put_zigzag(out: &mut Vec<u8>, x: i64) {
+    put_varint(out, ((x << 1) ^ (x >> 63)) as u64);
 }
 
 // ---------------------------------------------------------------- framing
@@ -264,48 +315,168 @@ pub fn decode_stats(r: &mut Reader<'_>) -> Result<PhaseStats> {
     })
 }
 
-/// One phase's output as a `FRAME_PHASE_OUT` payload: stats + envelopes.
-pub fn encode_phase_out<P: VertexProgram>(stats: &PhaseStats, env: &[Envelope<P>]) -> Vec<u8> {
+fn msg_tag<P: VertexProgram>(m: &Msg<P>) -> u8 {
+    match m {
+        Msg::GatherPartial { .. } => MSG_GATHER,
+        Msg::ValueUpdate { .. } => MSG_VALUE,
+        Msg::ResultEmit { .. } => MSG_RESULT,
+        Msg::Activate { .. } => MSG_ACTIVATE,
+    }
+}
+
+/// Serialize a batch of envelopes sharing one destination: a varint
+/// envelope count, then maximal runs of envelopes sharing `(from,
+/// kind)` — `[from: u16][kind: u8][run_len: varint]` once per run,
+/// then per envelope the vertex id as a zigzag delta from the
+/// previous id in the run (first delta is from 0) followed by the
+/// structural payload. `ResultEmit` carries a varint byte count
+/// instead of a vertex id.
+pub fn encode_envelope_seq<P: VertexProgram>(env: &[Envelope<P>], out: &mut Vec<u8>) {
+    put_varint(out, env.len() as u64);
+    let mut i = 0usize;
+    while i < env.len() {
+        let from = env[i].from;
+        let tag = msg_tag(&env[i].msg);
+        let mut j = i + 1;
+        while j < env.len() && env[j].from == from && msg_tag(&env[j].msg) == tag {
+            j += 1;
+        }
+        put_u16(out, from);
+        out.push(tag);
+        put_varint(out, (j - i) as u64);
+        let mut prev = 0i64;
+        for e in &env[i..j] {
+            match &e.msg {
+                Msg::GatherPartial { v, partial } => {
+                    put_zigzag(out, i64::from(*v) - prev);
+                    prev = i64::from(*v);
+                    partial.encode(out);
+                }
+                Msg::ValueUpdate { v, value } => {
+                    put_zigzag(out, i64::from(*v) - prev);
+                    prev = i64::from(*v);
+                    value.encode(out);
+                }
+                Msg::Activate { v } => {
+                    put_zigzag(out, i64::from(*v) - prev);
+                    prev = i64::from(*v);
+                }
+                Msg::ResultEmit { bytes } => put_varint(out, *bytes as u64),
+            }
+        }
+        i = j;
+    }
+}
+
+/// Decode a batched envelope sequence addressed to worker `to` (the
+/// inverse of [`encode_envelope_seq`]).
+pub fn decode_envelope_seq<P: VertexProgram>(
+    r: &mut Reader<'_>,
+    to: u16,
+) -> Result<Vec<Envelope<P>>> {
+    let total = r.varint()? as usize;
+    let mut env: Vec<Envelope<P>> = Vec::with_capacity(total.min(r.remaining()));
+    while env.len() < total {
+        let from = r.u16()?;
+        let tag = r.u8()?;
+        let run = r.varint()? as usize;
+        ensure!(
+            run >= 1 && env.len() + run <= total,
+            "batched wire run of {run} envelopes overruns the declared total {total}"
+        );
+        let mut prev = 0i64;
+        for _ in 0..run {
+            let msg = if tag == MSG_RESULT {
+                Msg::ResultEmit { bytes: r.varint()? as usize }
+            } else {
+                let delta = r.zigzag()?;
+                let v = prev
+                    .checked_add(delta)
+                    .ok_or_else(|| crate::err!("vertex id delta overflow on the wire"))?;
+                ensure!(
+                    (0..=i64::from(u32::MAX)).contains(&v),
+                    "vertex id {v} out of range in a batched wire frame"
+                );
+                prev = v;
+                let v = v as u32;
+                match tag {
+                    MSG_GATHER => Msg::GatherPartial { v, partial: P::Gather::decode(r)? },
+                    MSG_VALUE => Msg::ValueUpdate { v, value: P::Value::decode(r)? },
+                    MSG_ACTIVATE => Msg::Activate { v },
+                    other => bail!("unknown message tag {other} on the wire"),
+                }
+            };
+            env.push(Envelope { from, to, msg });
+        }
+    }
+    Ok(env)
+}
+
+/// One phase's coalesced output as a `FRAME_PHASE_OUT` payload: stats,
+/// then one batched section per non-empty destination in ascending
+/// destination order.
+pub fn encode_phase_out<P: VertexProgram>(
+    stats: &PhaseStats,
+    batches: &[Vec<Envelope<P>>],
+) -> Vec<u8> {
     let mut out = Vec::new();
     encode_stats(stats, &mut out);
-    put_u32(&mut out, env.len() as u32);
-    for e in env {
-        encode_envelope(e, &mut out);
+    let nonempty = batches.iter().filter(|b| !b.is_empty()).count();
+    put_u16(&mut out, nonempty as u16);
+    for (d, batch) in batches.iter().enumerate() {
+        if batch.is_empty() {
+            continue;
+        }
+        debug_assert!(batch.iter().all(|e| e.to as usize == d));
+        put_u16(&mut out, d as u16);
+        encode_envelope_seq(batch, &mut out);
     }
     out
 }
 
+/// Decode a coalesced phase output into `(stats, per-destination
+/// batches)`. Destinations must be valid for `w_count` workers and
+/// strictly ascending (the encoder's order — also what lets a relay
+/// stage them without sorting).
+#[allow(clippy::type_complexity)]
 pub fn decode_phase_out<P: VertexProgram>(
     payload: &[u8],
-) -> Result<(PhaseStats, Vec<Envelope<P>>)> {
+    w_count: usize,
+) -> Result<(PhaseStats, Vec<(u16, Vec<Envelope<P>>)>)> {
     let mut r = Reader::new(payload);
     let stats = decode_stats(&mut r)?;
-    let count = r.u32()? as usize;
-    let mut env = Vec::with_capacity(count.min(r.remaining()));
-    for _ in 0..count {
-        env.push(decode_envelope::<P>(&mut r)?);
+    let sections = r.u16()? as usize;
+    let mut batches = Vec::with_capacity(sections.min(w_count));
+    let mut last: Option<u16> = None;
+    for _ in 0..sections {
+        let to = r.u16()?;
+        ensure!((to as usize) < w_count, "phase output addressed worker {to} of {w_count}");
+        ensure!(
+            last.map_or(true, |l| to > l),
+            "phase output destinations not strictly ascending on the wire"
+        );
+        last = Some(to);
+        let batch = decode_envelope_seq::<P>(&mut r, to)?;
+        batches.push((to, batch));
     }
     r.finish()?;
-    Ok((stats, env))
+    Ok((stats, batches))
 }
 
-/// A delivered inbox as a `FRAME_INBOX` payload.
-pub fn encode_inbox<P: VertexProgram>(env: &[Envelope<P>]) -> Vec<u8> {
+/// A delivered inbox as a `FRAME_INBOX` payload: the receiver's rank,
+/// then one batched envelope sequence (multi-sender; runs carry the
+/// sender).
+pub fn encode_inbox<P: VertexProgram>(env: &[Envelope<P>], to: u16) -> Vec<u8> {
     let mut out = Vec::new();
-    put_u32(&mut out, env.len() as u32);
-    for e in env {
-        encode_envelope(e, &mut out);
-    }
+    put_u16(&mut out, to);
+    encode_envelope_seq(env, &mut out);
     out
 }
 
 pub fn decode_inbox<P: VertexProgram>(payload: &[u8]) -> Result<Vec<Envelope<P>>> {
     let mut r = Reader::new(payload);
-    let count = r.u32()? as usize;
-    let mut env = Vec::with_capacity(count.min(r.remaining()));
-    for _ in 0..count {
-        env.push(decode_envelope::<P>(&mut r)?);
-    }
+    let to = r.u16()?;
+    let env = decode_envelope_seq::<P>(&mut r, to)?;
     r.finish()?;
     Ok(env)
 }
@@ -586,6 +757,36 @@ mod tests {
             assert_eq!(std::mem::discriminant(&got.msg), std::mem::discriminant(&e.msg));
             assert_eq!(msg_digest(&got.msg), msg_digest(&e.msg), "payload bits must survive");
         }
+    }
+
+    #[test]
+    fn varint_and_zigzag_roundtrip() {
+        let us = [0u64, 1, 127, 128, 129, 16_383, 16_384, u32::MAX as u64, u64::MAX];
+        let is = [0i64, 1, -1, 63, -64, 64, -65, i64::MAX, i64::MIN];
+        let mut buf = Vec::new();
+        for &x in &us {
+            put_varint(&mut buf, x);
+        }
+        for &x in &is {
+            put_zigzag(&mut buf, x);
+        }
+        let mut r = Reader::new(&buf);
+        for &x in &us {
+            assert_eq!(r.varint().unwrap(), x);
+        }
+        for &x in &is {
+            assert_eq!(r.zigzag().unwrap(), x);
+        }
+        r.finish().unwrap();
+        // small magnitudes of either sign are one byte
+        let mut one = Vec::new();
+        put_zigzag(&mut one, -64);
+        assert_eq!(one.len(), 1);
+        // an 11-byte continuation chain must be rejected, not wrapped
+        let over = [0xffu8; 11];
+        assert!(Reader::new(&over).varint().is_err());
+        // a truncated varint (dangling continuation bit) must underrun
+        assert!(Reader::new(&[0x80u8]).varint().is_err());
     }
 
     #[test]

@@ -2,65 +2,191 @@
 //!
 //! After partitioning, each worker owns a subset of the edge list. The
 //! engine needs, per worker, "the local in/out-edges of vertex `v`" —
-//! served by two sorted copies of the worker's edges (by source and by
-//! destination) with binary-searched group lookup, mirroring the
-//! paper's sorted-edge-list representation (§3.1) at worker scope.
-//! [`super::state::WorkerState`] builds the rest of a worker's engine
-//! state (value cache, gather buffers) on top of these indexes.
+//! served by a CSR (compressed sparse row) layout: one dense vertex
+//! index into a contiguous neighbour-pair array per direction, the same
+//! offset/adjacency idiom [`crate::graph::Graph`] uses globally, scoped
+//! to the worker's edge subset. `out_of`/`in_of` are O(1) slice lookups
+//! (two offset loads), and a phase that walks the whole worker sweeps
+//! the pair arrays linearly — cache-linear scatter/gather instead of
+//! two binary searches per vertex over independently sorted edge-list
+//! copies. [`super::state::WorkerState`] builds the rest of a worker's
+//! engine state (value cache, gather buffers) on top of these indexes.
+//!
+//! Construction is a counting sort over the canonical edge list:
+//! [`crate::graph::Graph::from_edges`] keeps `g.edges()` sorted by
+//! `(src, dst)` and deduplicated, so bucketing edges by source in
+//! arrival order reproduces the `(src, dst)`-sorted order exactly, and
+//! bucketing the flipped `(dst, src)` pairs by destination reproduces
+//! the `(dst, src)`-sorted order — no comparison sort at all, where the
+//! previous layout sorted each worker's edges twice from scratch. The
+//! pair orders (and therefore every gather fold sequence downstream)
+//! are bit-for-bit the orders the sorted-copy layout produced.
 
 use crate::graph::{Edge, Graph, VertexId};
 use crate::partition::Partitioning;
 
-/// One worker's edges, indexed both ways.
+/// One worker's edges in CSR form, indexed both ways. Offset arrays are
+/// dense over the *global* vertex id space (`n + 1` entries), so a
+/// lookup never searches; the pair arrays hold only the worker's own
+/// edges.
 #[derive(Clone, Debug, Default)]
 pub struct LocalEdges {
-    /// Worker's edges sorted by (src, dst).
-    pub by_src: Vec<Edge>,
-    /// Worker's edges as (dst, src), sorted.
-    pub by_dst: Vec<Edge>,
+    /// `out_pairs[out_off[v]..out_off[v+1]]` are `v`'s local out-edges.
+    out_off: Vec<u32>,
+    /// The worker's edges as `(src, dst)`, grouped by source (ascending
+    /// destination within a group) — identical order to a `(src, dst)`
+    /// sort of the worker's edge subset.
+    out_pairs: Vec<Edge>,
+    /// `in_pairs[in_off[v]..in_off[v+1]]` are `v`'s local in-edges.
+    in_off: Vec<u32>,
+    /// The worker's edges as `(dst, src)`, grouped by destination
+    /// (ascending source within a group) — identical order to a
+    /// `(dst, src)` sort.
+    in_pairs: Vec<Edge>,
 }
 
-fn group<'a>(sorted: &'a [Edge], key: VertexId) -> &'a [Edge] {
-    let lo = sorted.partition_point(|&(a, _)| a < key);
-    let hi = sorted.partition_point(|&(a, _)| a <= key);
-    &sorted[lo..hi]
+/// CSR offsets from per-vertex counts (in place: `counts[v]` becomes
+/// the start of `v`'s group; `counts[n]` the total).
+fn prefix_sum(counts: &mut [u32]) {
+    let mut acc = 0u32;
+    for c in counts.iter_mut() {
+        let here = *c;
+        *c = acc;
+        acc += here;
+    }
 }
 
 impl LocalEdges {
+    /// Build one worker's CSR from its edges, delivered in canonical
+    /// `(src, dst)`-ascending order (the order of `g.edges()`).
+    fn from_canonical_edges(n: usize, edges: impl Iterator<Item = Edge> + Clone) -> LocalEdges {
+        let mut out_off = vec![0u32; n + 1];
+        let mut in_off = vec![0u32; n + 1];
+        let mut total = 0usize;
+        for (u, v) in edges.clone() {
+            out_off[u as usize + 1] += 1;
+            in_off[v as usize + 1] += 1;
+            total += 1;
+        }
+        prefix_sum(&mut out_off);
+        prefix_sum(&mut in_off);
+        let mut out_cursor: Vec<u32> = out_off[..n].to_vec();
+        let mut in_cursor: Vec<u32> = in_off[..n].to_vec();
+        let mut out_pairs = vec![(0u32, 0u32); total];
+        let mut in_pairs = vec![(0u32, 0u32); total];
+        // canonical arrival order means each bucket fills in sorted
+        // order: (src, dst) ascending for out, (dst, src) ascending for
+        // in — the counting sort *is* the sort
+        for (u, v) in edges {
+            let o = out_cursor[u as usize] as usize;
+            out_pairs[o] = (u, v);
+            out_cursor[u as usize] += 1;
+            let i = in_cursor[v as usize] as usize;
+            in_pairs[i] = (v, u);
+            in_cursor[v as usize] += 1;
+        }
+        LocalEdges { out_off, out_pairs, in_off, in_pairs }
+    }
+
     /// Out-edges of `v` held by this worker, as `(v, dst)` pairs.
+    #[inline]
     pub fn out_of(&self, v: VertexId) -> &[Edge] {
-        group(&self.by_src, v)
+        let v = v as usize;
+        if v + 1 >= self.out_off.len() {
+            return &[];
+        }
+        &self.out_pairs[self.out_off[v] as usize..self.out_off[v + 1] as usize]
     }
 
     /// In-edges of `v` held by this worker, as `(v, src)` pairs.
+    #[inline]
     pub fn in_of(&self, v: VertexId) -> &[Edge] {
-        group(&self.by_dst, v)
+        let v = v as usize;
+        if v + 1 >= self.in_off.len() {
+            return &[];
+        }
+        &self.in_pairs[self.in_off[v] as usize..self.in_off[v + 1] as usize]
+    }
+
+    /// All local edges as `(src, dst)` pairs, grouped by source — the
+    /// contiguous array a whole-worker out-direction sweep walks.
+    #[inline]
+    pub fn out_pairs(&self) -> &[Edge] {
+        &self.out_pairs
+    }
+
+    /// All local edges as `(dst, src)` pairs, grouped by destination —
+    /// the contiguous array a whole-worker in-direction sweep walks.
+    #[inline]
+    pub fn in_pairs(&self) -> &[Edge] {
+        &self.in_pairs
     }
 
     /// Number of edges on this worker.
     pub fn len(&self) -> usize {
-        self.by_src.len()
+        self.out_pairs.len()
     }
 
     /// Whether the worker holds no edges.
     pub fn is_empty(&self) -> bool {
-        self.by_src.is_empty()
+        self.out_pairs.is_empty()
     }
 }
 
-/// Build per-worker local edge indexes from a partitioning.
+/// Build per-worker local edge indexes from a partitioning: one pass
+/// over the edge list to count, one to place — no per-worker sorting
+/// (the canonical edge order makes the counting sort order-preserving;
+/// see module docs).
 pub fn build_local_edges(g: &Graph, p: &Partitioning) -> Vec<LocalEdges> {
-    let mut locals = vec![LocalEdges::default(); p.num_workers];
+    let n = g.num_vertices();
+    let mut locals: Vec<LocalEdges> = (0..p.num_workers)
+        .map(|_| LocalEdges {
+            out_off: vec![0u32; n + 1],
+            out_pairs: Vec::new(),
+            in_off: vec![0u32; n + 1],
+            in_pairs: Vec::new(),
+        })
+        .collect();
     for (e, &(u, v)) in g.edges().iter().enumerate() {
         let w = p.edge_worker[e] as usize;
-        locals[w].by_src.push((u, v));
-        locals[w].by_dst.push((v, u));
+        locals[w].out_off[u as usize + 1] += 1;
+        locals[w].in_off[v as usize + 1] += 1;
     }
+    let mut out_cursors: Vec<Vec<u32>> = Vec::with_capacity(locals.len());
+    let mut in_cursors: Vec<Vec<u32>> = Vec::with_capacity(locals.len());
     for l in &mut locals {
-        l.by_src.sort_unstable();
-        l.by_dst.sort_unstable();
+        prefix_sum(&mut l.out_off);
+        prefix_sum(&mut l.in_off);
+        let total = l.out_off[n] as usize;
+        l.out_pairs = vec![(0u32, 0u32); total];
+        l.in_pairs = vec![(0u32, 0u32); total];
+        out_cursors.push(l.out_off[..n].to_vec());
+        in_cursors.push(l.in_off[..n].to_vec());
+    }
+    for (e, &(u, v)) in g.edges().iter().enumerate() {
+        let w = p.edge_worker[e] as usize;
+        let o = &mut out_cursors[w][u as usize];
+        locals[w].out_pairs[*o as usize] = (u, v);
+        *o += 1;
+        let i = &mut in_cursors[w][v as usize];
+        locals[w].in_pairs[*i as usize] = (v, u);
+        *i += 1;
     }
     locals
+}
+
+/// Build a single worker's local edge index — the socket worker's
+/// O(n + local) path.
+pub fn build_local_edges_for(g: &Graph, p: &Partitioning, rank: usize) -> LocalEdges {
+    let w = rank as u16;
+    LocalEdges::from_canonical_edges(
+        g.num_vertices(),
+        g.edges()
+            .iter()
+            .enumerate()
+            .filter(move |&(e, _)| p.edge_worker[e] == w)
+            .map(|(_, &edge)| edge),
+    )
 }
 
 #[cfg(test)]
@@ -80,6 +206,9 @@ mod tests {
         assert_eq!(locals[0].in_of(0), &[(0, 3)], "(dst, src) layout");
         assert_eq!(locals[0].in_of(2), &[(2, 1)]);
         assert!(locals[0].out_of(4).is_empty());
+        // a default (empty) index serves empty slices for any vertex
+        assert!(LocalEdges::default().out_of(17).is_empty());
+        assert!(LocalEdges::default().in_of(0).is_empty());
     }
 
     #[test]
@@ -90,8 +219,50 @@ mod tests {
         let locals = build_local_edges(&g, &p);
         assert_eq!(locals.iter().map(LocalEdges::len).sum::<usize>(), 600);
         for (w, l) in locals.iter().enumerate() {
-            assert_eq!(l.by_src.len(), l.by_dst.len());
+            assert_eq!(l.out_pairs().len(), l.in_pairs().len());
             assert_eq!(l.len(), p.edges_per_worker[w]);
+        }
+    }
+
+    /// The counting-sort build must reproduce the sorted-copy layout's
+    /// pair orders exactly: `out_pairs` is the `(src, dst)` sort of the
+    /// worker's edges, `in_pairs` the `(dst, src)` sort — that identity
+    /// is what keeps every downstream gather fold order bit-identical.
+    #[test]
+    fn counting_sort_matches_comparison_sort() {
+        let mut rng = crate::util::rng::Rng::new(41);
+        for directed in [true, false] {
+            let g = crate::graph::gen::chung_lu::generate("t", 80, 400, 2.0, directed, &mut rng);
+            let p = crate::partition::Strategy::Hdrf(50).partition(&g, 5);
+            let locals = build_local_edges(&g, &p);
+            for (w, l) in locals.iter().enumerate() {
+                let mut by_src: Vec<Edge> = Vec::new();
+                let mut by_dst: Vec<Edge> = Vec::new();
+                for (e, &(u, v)) in g.edges().iter().enumerate() {
+                    if p.edge_worker[e] as usize == w {
+                        by_src.push((u, v));
+                        by_dst.push((v, u));
+                    }
+                }
+                by_src.sort_unstable();
+                by_dst.sort_unstable();
+                assert_eq!(l.out_pairs(), &by_src[..], "worker {w} out order");
+                assert_eq!(l.in_pairs(), &by_dst[..], "worker {w} in order");
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_build_matches_full() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        let g = crate::graph::gen::erdos::generate("t", 60, 300, true, &mut rng);
+        let p = crate::partition::Strategy::TwoD.partition(&g, 4);
+        let all = build_local_edges(&g, &p);
+        for rank in 0..4 {
+            let one = build_local_edges_for(&g, &p, rank);
+            assert_eq!(one.out_pairs(), all[rank].out_pairs());
+            assert_eq!(one.in_pairs(), all[rank].in_pairs());
+            assert_eq!(one.len(), all[rank].len());
         }
     }
 }

@@ -35,6 +35,7 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 use crate::graph::{Graph, VertexId};
+use crate::util::pool;
 use crate::util::rng::hash_u64;
 
 /// A partitioning strategy identifier (the paper's PSID column).
@@ -288,6 +289,33 @@ impl PartitionCache {
         Arc::clone(self.slots.lock().unwrap().entry(key).or_insert(fresh))
     }
 
+    /// Pre-warm the cache over `pairs` using up to `threads` pool
+    /// threads ([`crate::util::pool::parallel_map`]).
+    ///
+    /// Already-cached pairs are skipped; the missing ones are
+    /// partitioned in parallel and committed **in `pairs` order** (the
+    /// caller's inventory order) under one lock acquisition, so the
+    /// cache contents are independent of thread scheduling. Strategies
+    /// are deterministic, so the parallelism cannot change any
+    /// partitioning — only the wall-clock of this warming stage.
+    pub fn warm_parallel(&self, threads: usize, pairs: &[(&Graph, Strategy)]) {
+        let todo: Vec<usize> = {
+            let slots = self.slots.lock().unwrap();
+            (0..pairs.len())
+                .filter(|&i| !slots.contains_key(&(pairs[i].0.name.clone(), pairs[i].1)))
+                .collect()
+        };
+        let fresh = pool::parallel_map(threads, todo.len(), |j| {
+            let (g, s) = pairs[todo[j]];
+            Arc::new(s.partition(g, self.num_workers))
+        });
+        let mut slots = self.slots.lock().unwrap();
+        for (&i, p) in todo.iter().zip(fresh) {
+            let (g, s) = pairs[i];
+            slots.entry((g.name.clone(), s)).or_insert(p);
+        }
+    }
+
     /// Number of distinct `(graph, strategy)` pairs cached so far.
     pub fn len(&self) -> usize {
         self.slots.lock().unwrap().len()
@@ -427,5 +455,37 @@ mod tests {
         }
         assert_eq!(cache.len(), Strategy::inventory().len());
         assert_eq!(cache.num_workers(), 8);
+    }
+
+    /// Parallel pre-warming must produce the identical cache contents
+    /// at every thread count — same edge assignments, same masters —
+    /// and skip pairs that are already cached.
+    #[test]
+    fn warm_parallel_matches_sequential_at_every_thread_count() {
+        let mut rng = crate::util::rng::Rng::new(37);
+        let g1 = crate::graph::gen::erdos::generate("warm-a", 120, 500, true, &mut rng);
+        let g2 = crate::graph::gen::erdos::generate("warm-b", 90, 350, false, &mut rng);
+        let pairs: Vec<(&Graph, Strategy)> = [&g1, &g2]
+            .into_iter()
+            .flat_map(|g| Strategy::inventory().into_iter().map(move |s| (g, s)))
+            .collect();
+        let reference = PartitionCache::new(4);
+        for &(g, s) in &pairs {
+            reference.get_or_partition(g, s);
+        }
+        for threads in [1usize, 2, 4, 8] {
+            let cache = PartitionCache::new(4);
+            // pre-seed one slot: warming must keep it (first insert wins)
+            let seeded = cache.get_or_partition(&g1, Strategy::Random);
+            cache.warm_parallel(threads, &pairs);
+            assert_eq!(cache.len(), pairs.len(), "{threads} threads");
+            assert!(Arc::ptr_eq(&seeded, &cache.get_or_partition(&g1, Strategy::Random)));
+            for &(g, s) in &pairs {
+                let got = cache.get_or_partition(g, s);
+                let want = reference.get_or_partition(g, s);
+                assert_eq!(got.edge_worker, want.edge_worker, "{} {}", g.name, s.name());
+                assert_eq!(got.master, want.master, "{} {}", g.name, s.name());
+            }
+        }
     }
 }

@@ -1,0 +1,125 @@
+//! CSR lookup equivalence: `LocalEdges::out_of`/`in_of` must return
+//! exactly what the pre-CSR sorted-slice `group()` implementation
+//! returned — same pairs, same order — for every vertex, worker,
+//! strategy and graph shape. The reference below *is* that
+//! implementation: two independently sorted copies of the worker's
+//! edges, with each vertex's group found by binary search
+//! (`partition_point` on both bounds).
+
+use gps_select::engine::worker::{build_local_edges, build_local_edges_for, LocalEdges};
+use gps_select::graph::{Edge, Graph};
+use gps_select::partition::{Partitioning, Strategy};
+use gps_select::util::rng::Rng;
+
+/// The pre-CSR layout: one worker's edges sorted `(src, dst)` and
+/// `(dst, src)`, looked up by binary search per vertex.
+struct SortedCopies {
+    by_src: Vec<Edge>,
+    by_dst: Vec<Edge>,
+}
+
+impl SortedCopies {
+    fn build(g: &Graph, p: &Partitioning, w: usize) -> SortedCopies {
+        let mut by_src = Vec::new();
+        let mut by_dst = Vec::new();
+        for (e, &(u, v)) in g.edges().iter().enumerate() {
+            if p.edge_worker[e] as usize == w {
+                by_src.push((u, v));
+                by_dst.push((v, u));
+            }
+        }
+        by_src.sort_unstable();
+        by_dst.sort_unstable();
+        SortedCopies { by_src, by_dst }
+    }
+
+    fn group(list: &[Edge], v: u32) -> &[Edge] {
+        let lo = list.partition_point(|&(a, _)| a < v);
+        let hi = list.partition_point(|&(a, _)| a <= v);
+        &list[lo..hi]
+    }
+}
+
+fn assert_equivalent(g: &Graph, p: &Partitioning, locals: &[LocalEdges], tag: &str) {
+    for (w, l) in locals.iter().enumerate() {
+        let reference = SortedCopies::build(g, p, w);
+        assert_eq!(l.out_pairs(), &reference.by_src[..], "{tag}: worker {w} out sweep order");
+        assert_eq!(l.in_pairs(), &reference.by_dst[..], "{tag}: worker {w} in sweep order");
+        for v in 0..g.num_vertices() as u32 {
+            assert_eq!(
+                l.out_of(v),
+                SortedCopies::group(&reference.by_src, v),
+                "{tag}: out_of({v}) on worker {w}"
+            );
+            assert_eq!(
+                l.in_of(v),
+                SortedCopies::group(&reference.by_dst, v),
+                "{tag}: in_of({v}) on worker {w}"
+            );
+        }
+        // lookups past the vertex space are empty, not a panic
+        assert!(l.out_of(g.num_vertices() as u32 + 7).is_empty());
+        assert!(l.in_of(u32::MAX).is_empty());
+    }
+}
+
+fn strategies() -> Vec<Strategy> {
+    vec![
+        Strategy::OneDSrc,
+        Strategy::Random,
+        Strategy::TwoD,
+        Strategy::Hdrf(50),
+        Strategy::Ginger,
+    ]
+}
+
+#[test]
+fn csr_matches_sorted_slices_on_random_graphs() {
+    let mut rng = Rng::new(0xc5e);
+    for directed in [true, false] {
+        let g = gps_select::graph::gen::erdos::generate("csr-er", 120, 700, directed, &mut rng);
+        for s in strategies() {
+            for workers in [1usize, 3, 8] {
+                let p = s.partition(&g, workers);
+                let locals = build_local_edges(&g, &p);
+                assert_equivalent(&g, &p, &locals, &format!("erdos d={directed} {workers}w"));
+            }
+        }
+    }
+}
+
+#[test]
+fn csr_matches_sorted_slices_on_skewed_graphs() {
+    let mut rng = Rng::new(0xc5f);
+    let g = gps_select::graph::gen::chung_lu::generate("csr-cl", 150, 900, 2.2, true, &mut rng);
+    for s in strategies() {
+        let p = s.partition(&g, 6);
+        let locals = build_local_edges(&g, &p);
+        assert_equivalent(&g, &p, &locals, "chung-lu");
+    }
+}
+
+/// Frontier-style shapes: a long cycle (every vertex degree 2, long
+/// runs of single-edge groups) and a star (one vertex owns every
+/// group), plus an isolated-vertex tail the dense offsets must cover.
+#[test]
+fn csr_matches_sorted_slices_on_frontier_shapes() {
+    let n = 64u32;
+    let cycle: Vec<Edge> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+    let star: Vec<Edge> = (1..n).map(|i| (0, i)).collect();
+    for (name, edges) in [("cycle", cycle), ("star", star)] {
+        // 16 trailing isolated vertices
+        let g = Graph::from_edges(name, n as usize + 16, edges, true);
+        for s in strategies() {
+            let p = s.partition(&g, 4);
+            let locals = build_local_edges(&g, &p);
+            assert_equivalent(&g, &p, &locals, name);
+            // the single-worker builder agrees with the full build
+            for rank in 0..4 {
+                let one = build_local_edges_for(&g, &p, rank);
+                assert_eq!(one.out_pairs(), locals[rank].out_pairs(), "{name} rank {rank}");
+                assert_eq!(one.in_pairs(), locals[rank].in_pairs(), "{name} rank {rank}");
+            }
+        }
+    }
+}

@@ -10,7 +10,7 @@ use gps_select::algorithms::coloring::GreedyColoring;
 use gps_select::algorithms::pagerank::PageRank;
 use gps_select::algorithms::triangle::TriangleCount;
 use gps_select::engine::gas::{Payload, VertexProgram};
-use gps_select::engine::msg::{Envelope, Msg};
+use gps_select::engine::msg::{Envelope, Msg, PhaseStats, SendAccount};
 use gps_select::engine::wire;
 use gps_select::util::rng::{Rng, FNV1A64_OFFSET};
 
@@ -114,6 +114,125 @@ fn envelope_roundtrip_mixed_program() {
         let e: Envelope<GreedyColoring> =
             Envelope { from: 3, to: 0, msg: Msg::GatherPartial { v: 8, partial: acc } };
         assert_bits_survive(&e);
+    }
+}
+
+fn assert_same_envelopes<P: VertexProgram>(got: &[Envelope<P>], want: &[Envelope<P>]) {
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(g.from, w.from);
+        assert_eq!(g.to, w.to);
+        assert_eq!(std::mem::discriminant(&g.msg), std::mem::discriminant(&w.msg));
+        assert_eq!(digest(&g.msg), digest(&w.msg), "payload bits must survive the wire");
+    }
+}
+
+/// The coalesced inbox frame: multiple senders, shared-kind runs,
+/// non-monotonic vertex ids (negative deltas), id 0, ids near
+/// `u32::MAX`, and adversarial f64 bits (NaN payload, subnormal, -0.0).
+#[test]
+fn batched_inbox_roundtrip_multi_sender_runs() {
+    let to = 3u16;
+    let env: Vec<Envelope<PageRank>> = vec![
+        // sender 0: a gather run with descending then ascending ids
+        Envelope { from: 0, to, msg: Msg::GatherPartial { v: 500, partial: -0.0 } },
+        Envelope { from: 0, to, msg: Msg::GatherPartial { v: 2, partial: f64::MIN_POSITIVE / 2.0 } },
+        Envelope {
+            from: 0,
+            to,
+            msg: Msg::GatherPartial {
+                v: u32::MAX,
+                partial: f64::from_bits(0x7ff8_0000_0000_1234),
+            },
+        },
+        // same sender, kind switch mid-stream: run must break
+        Envelope { from: 0, to, msg: Msg::Activate { v: 0 } },
+        Envelope { from: 0, to, msg: Msg::GatherPartial { v: 7, partial: f64::INFINITY } },
+        // sender 2: value updates then a result emission
+        Envelope { from: 2, to, msg: Msg::ValueUpdate { v: 0, value: -0.0 } },
+        Envelope { from: 2, to, msg: Msg::ValueUpdate { v: u32::MAX - 1, value: 1.0e-300 } },
+        Envelope { from: 2, to, msg: Msg::ResultEmit { bytes: usize::MAX >> 16 } },
+        // sender 5: a lone activation
+        Envelope { from: 5, to, msg: Msg::Activate { v: 41 } },
+    ];
+    let payload = wire::encode_inbox(&env, to);
+    let got = wire::decode_inbox::<PageRank>(&payload).expect("decode batched inbox");
+    assert_same_envelopes(&got, &env);
+}
+
+/// The coalesced phase-output frame: stats bits plus per-destination
+/// sections (empty destinations skipped) must survive, and destination
+/// bounds are enforced against the decoder's worker count.
+#[test]
+fn batched_phase_out_roundtrip() {
+    let stats = PhaseStats {
+        compute: 0.1 + 0.2, // a value with an inexact representation
+        gathers: 7,
+        applies: 6,
+        scatters: 5,
+        send: SendAccount { msgs: 4, bytes: 999, intra: -0.0, inter: 1.0e-300 },
+    };
+    let mk = |to: u16, v: u32, list: Vec<u32>| Envelope::<TriangleCount> {
+        from: 1,
+        to,
+        msg: Msg::GatherPartial { v, partial: (list, -0.0) },
+    };
+    let batches: Vec<Vec<Envelope<TriangleCount>>> = vec![
+        vec![mk(0, 9, vec![3, 1, 4]), mk(0, 4, vec![])],
+        Vec::new(), // destination 1 gets nothing: no section on the wire
+        vec![mk(2, 0, vec![u32::MAX])],
+        Vec::new(),
+    ];
+    let payload = wire::encode_phase_out(&stats, &batches);
+    let (got_stats, got) =
+        wire::decode_phase_out::<TriangleCount>(&payload, 4).expect("decode batched phase out");
+    assert_eq!(got_stats.compute.to_bits(), stats.compute.to_bits());
+    assert_eq!(got_stats.send.bytes, stats.send.bytes);
+    assert_eq!(got_stats.send.intra.to_bits(), stats.send.intra.to_bits());
+    assert_eq!(got.len(), 2, "only non-empty destinations travel");
+    assert_eq!(got[0].0, 0);
+    assert_eq!(got[1].0, 2);
+    assert_same_envelopes(&got[0].1, &batches[0]);
+    assert_same_envelopes(&got[1].1, &batches[2]);
+
+    // a decoder sized for fewer workers must reject section 2
+    assert!(wire::decode_phase_out::<TriangleCount>(&payload, 2).is_err());
+}
+
+/// Hand-built section order violation: destinations on the wire must be
+/// strictly ascending, or a relay could deliver sender-unsorted inboxes.
+#[test]
+fn phase_out_rejects_unsorted_destinations() {
+    let stats = PhaseStats::default();
+    let mut payload = Vec::new();
+    wire::encode_stats(&stats, &mut payload);
+    wire::put_u16(&mut payload, 2); // two sections
+    for to in [2u16, 1u16] {
+        wire::put_u16(&mut payload, to);
+        let env: Vec<Envelope<PageRank>> =
+            vec![Envelope { from: 0, to, msg: Msg::Activate { v: 1 } }];
+        wire::encode_envelope_seq(&env, &mut payload);
+    }
+    let err = wire::decode_phase_out::<PageRank>(&payload, 4).unwrap_err().to_string();
+    assert!(err.contains("ascending"), "{err}");
+}
+
+/// Truncating a batched frame anywhere must produce a decode error,
+/// never a panic or a silently short inbox.
+#[test]
+fn truncated_batched_frames_error_cleanly() {
+    let to = 1u16;
+    let env: Vec<Envelope<TriangleCount>> = vec![
+        Envelope { from: 0, to, msg: Msg::GatherPartial { v: 5, partial: (vec![1, 2, 3], 0.25) } },
+        Envelope { from: 0, to, msg: Msg::GatherPartial { v: 3, partial: (vec![], -0.0) } },
+        Envelope { from: 2, to, msg: Msg::ResultEmit { bytes: 1 << 30 } },
+    ];
+    let payload = wire::encode_inbox(&env, to);
+    for cut in 0..payload.len() {
+        assert!(
+            wire::decode_inbox::<TriangleCount>(&payload[..cut]).is_err(),
+            "decode of a {cut}-byte prefix must fail"
+        );
     }
 }
 

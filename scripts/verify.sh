@@ -74,13 +74,19 @@ if "$REPRO" select --model "$CKPT_TMP/model.etrm" --label wall_clock \
 fi
 echo "verify: model save→load→select round-trip is bit-identical (and label demands enforced)"
 
-# ~10-second engine bench smoke in release mode: runs only the engine
-# rows of benches/hotpath.rs (no full cargo-bench sweep). Timings are
-# machine-specific, so the fresh run is diffed *structurally* against
-# the committed baseline at the repository root: the set of bench rows
-# and the per-row sample counts must match ../BENCH_engine.json
-# exactly. A renamed, dropped or added engine-mode row fails here; the
-# baseline's reference timings are for trend reading only.
+# Engine bench smoke in release mode (~20 s): runs only the engine
+# rows of benches/hotpath.rs (the execution-mode triple, the CSR and
+# wire micro-pairs, the partition-warm thread ladder — no full
+# cargo-bench sweep). The fresh run is gated against the committed
+# baseline at the repository root two ways:
+#
+#   1. *structurally* — the set of bench rows and the per-row sample
+#      counts must match ../BENCH_engine.json exactly (a renamed,
+#      dropped or added engine row fails here);
+#   2. *by tolerance* — a fresh median more than 3× the baseline
+#      median fails. Timings are machine-specific, so this is a
+#      loose order-of-magnitude regression ratchet, not an equality
+#      check; the baseline's reference timings remain trend data.
 GPS_BENCH_FAST=1 GPS_BENCH_OUT="$CKPT_TMP/bench.json" cargo bench --bench hotpath -- engine
 grep -o '"bench": "[^"]*"\|"samples": [0-9]*' "$CKPT_TMP/bench.json" \
     | sort > "$CKPT_TMP/bench.rows"
@@ -91,6 +97,20 @@ if ! diff -u "$CKPT_TMP/baseline.rows" "$CKPT_TMP/bench.rows"; then
     exit 1
 fi
 echo "verify: engine bench row set matches the committed baseline"
+extract_medians() {
+    grep -o '"bench": "[^"]*", "median_s": [0-9.e-]*' "$1" \
+        | sed 's/"bench": "\([^"]*\)", "median_s": /\1 /' \
+        | sort
+}
+extract_medians ../BENCH_engine.json > "$CKPT_TMP/baseline.medians"
+extract_medians "$CKPT_TMP/bench.json" > "$CKPT_TMP/fresh.medians"
+# row sets already proven identical above, so the join is total
+if ! join "$CKPT_TMP/baseline.medians" "$CKPT_TMP/fresh.medians" \
+    | awk '{ if ($3 > 3 * $2) { printf "verify: FAIL — %s median %ss regressed >3x vs baseline %ss\n", $1, $3, $2; bad = 1 } } END { exit bad }'; then
+    echo "verify: engine bench medians regressed beyond the 3x tolerance" >&2
+    exit 1
+fi
+echo "verify: engine bench medians within 3x of the committed baseline"
 # Keep this machine's fresh timings inspectable (and uploadable by CI)
 # at a gitignored path, so they never shadow the committed baseline.
 cp "$CKPT_TMP/bench.json" BENCH_engine.json
