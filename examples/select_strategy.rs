@@ -20,6 +20,20 @@
 //! them on the next run — an interrupted sweep recomputes only the
 //! unfinished graphs, bit-identically.
 //!
+//! **Client mode** — with `--connect host:port` the example instead
+//! talks to a running selection daemon (`repro serve`) over its
+//! checksummed wire protocol: it extracts the features for
+//! `--graph`/`--algorithm` locally, ships them as raw bit patterns,
+//! and prints the daemon's picks. `--bits-out <file>` writes the
+//! served prediction tables in the canonical probe-bits form (for
+//! byte-comparison against offline `repro select --bits-out`), and
+//! `--shutdown` drains and stops the daemon afterwards:
+//!
+//! ```bash
+//! cargo run --release --example select_strategy -- \
+//!     --connect 127.0.0.1:7461 --graph wiki --algorithm PR,TC
+//! ```
+//!
 //! Results are recorded in EXPERIMENTS.md.
 
 use gps_select::etrm::EtrmBackend;
@@ -36,6 +50,9 @@ fn main() -> Result<()> {
     // socket-engine worker hook (see engine::transport::socket)
     if let Some(result) = gps_select::algorithms::maybe_serve_socket_worker(&args) {
         return result;
+    }
+    if let Some(addr) = args.get("connect") {
+        return client_mode(&args, addr);
     }
     let default = PipelineConfig::default();
     let config = PipelineConfig {
@@ -115,5 +132,45 @@ fn main() -> Result<()> {
         "\nheadline: Score_best {best:.4} (paper 0.9458) | Score_worst {worst:.4} (2.0770) | \
          Score_avg {avg:.4} (1.4558)"
     );
+    Ok(())
+}
+
+/// `--connect`: drive a running `repro serve` daemon end-to-end —
+/// local feature extraction, one batched wire request, bit-exact
+/// prediction tables back.
+fn client_mode(args: &Args, addr: &str) -> Result<()> {
+    use gps_select::service::app;
+    use gps_select::service::proto::Client;
+
+    let spec = app::GraphSpec {
+        name: args.get("graph").unwrap_or("wiki").to_string(),
+        scale: args.get_f64("scale", PipelineConfig::default().scale)?,
+        seed: args.get_u64("seed", 42)?,
+    };
+    let g = spec.build()?;
+    let names: Vec<&str> =
+        args.get_or("algorithm", "PR").split(',').collect();
+    let (algos, tasks) = app::algorithm_tasks(&g, &names)?;
+
+    let mut client = Client::connect(addr)?;
+    client.set_timeout(std::time::Duration::from_secs(30))?;
+    let reply = client.select(&tasks, true)?;
+    println!(
+        "daemon at {addr}: {} backend, {} label, artifact fingerprint {:016x}",
+        reply.backend, reply.label, reply.fingerprint
+    );
+    for (a, pick) in algos.iter().zip(&reply.picks) {
+        println!("  {}/{} → {}", g.name, a.name(), pick.name());
+    }
+    if let Some(path) = args.get("bits-out") {
+        let algo_names: Vec<String> = algos.iter().map(|a| a.name().to_string()).collect();
+        let bits = reply.render_bits(&g.name, &algo_names)?;
+        gps_select::util::fsio::write_atomic(std::path::Path::new(path), bits.as_bytes())?;
+        println!("served prediction bit patterns written to {path}");
+    }
+    if args.has("shutdown") {
+        let answered = client.shutdown()?;
+        println!("daemon drained and stopped after {answered} request(s)");
+    }
     Ok(())
 }

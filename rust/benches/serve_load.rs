@@ -1,0 +1,210 @@
+//! Load generator for the selection daemon (`repro serve`): spawns a
+//! real child daemon process on an ephemeral port, drives it over N
+//! concurrent TCP connections with mixed single/batched select
+//! requests, and records per-request latency quantiles plus sustained
+//! task throughput as JSON in `GPS_BENCH_OUT` (default
+//! `BENCH_serve.json`) for CI trend tracking.
+//!
+//! `GPS_BENCH_FAST=1` shrinks the request counts for smoke runs. The
+//! committed `BENCH_serve.json` baseline at the repository root is
+//! recorded under that fast profile, because `verify.sh` gates on it
+//! *structurally* (row names, request and task counts — TCP latency
+//! is too machine-varying for a timing tolerance).
+
+use std::io::BufRead;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::Instant;
+
+use gps_select::etrm::{store, Etrm, EtrmBackend};
+use gps_select::features::{zeroed_task, TaskFeatures, FEATURE_DIM};
+use gps_select::ml::linear::Ridge;
+use gps_select::ml::Label;
+use gps_select::service::proto::Client;
+use gps_select::util::rng::Rng;
+use gps_select::util::stats::quantile_sorted;
+
+/// The one wall-clock read of the harness: request latency is what
+/// this bench *measures*, so the crate's clock discipline (route
+/// timing through `engine::try_run_mode`) does not apply here.
+// audit:allow(instant-now): a latency bench measures wall time by definition
+#[allow(clippy::disallowed_methods)]
+fn now() -> Instant {
+    Instant::now()
+}
+
+/// A deterministic ridge artifact: content is irrelevant to the wire
+/// and batching costs being measured, so a hand-built model keeps the
+/// setup in milliseconds.
+fn bench_artifact(dir: &std::path::Path) -> PathBuf {
+    let mut weights = vec![0.0f64; FEATURE_DIM + 1];
+    let mut wrng = Rng::new(0x5e57e);
+    for w in weights.iter_mut() {
+        *w = wrng.next_f64() - 0.5;
+    }
+    let etrm = Etrm {
+        backend: EtrmBackend::Ridge(Ridge { weights, log_target: false }),
+        label: Label::SimTime,
+    };
+    let path = dir.join("serve_bench.etrm");
+    store::save(&etrm, &path).expect("save bench artifact");
+    path
+}
+
+/// Deterministic task pool (a mix of degree shapes) — requests cycle
+/// through batch sizes 1..=4 drawn from here.
+fn bench_tasks() -> Vec<TaskFeatures> {
+    let mut trng = Rng::new(0xbe9c);
+    (0..16)
+        .map(|_| {
+            let mut t = zeroed_task();
+            t.data.num_vertices = 1_000.0 + trng.next_f64() * 1.0e6;
+            t.data.num_edges = t.data.num_vertices * (1.0 + trng.next_f64() * 30.0);
+            for a in t.algo.iter_mut() {
+                *a = (trng.next_f64() * 1.0e4).floor();
+            }
+            t
+        })
+        .collect()
+}
+
+/// Spawn `repro serve` on an ephemeral port and parse the bound
+/// address off its startup banner. The stdout handle is returned too:
+/// dropping it early would SIGPIPE the daemon's shutdown banner.
+fn spawn_daemon(model: &std::path::Path) -> (Child, String, std::io::BufReader<std::process::ChildStdout>) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["serve", "--model"])
+        .arg(model)
+        .args(["--listen", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn repro serve");
+    let mut lines = std::io::BufReader::new(child.stdout.take().expect("child stdout"));
+    let mut addr = String::new();
+    let mut line = String::new();
+    while addr.is_empty() {
+        line.clear();
+        let n = lines.read_line(&mut line).expect("read serve banner");
+        assert!(n > 0, "daemon exited before announcing its address");
+        if let Some(rest) = line.trim_end().strip_prefix("serve: listening on ") {
+            addr = rest.to_string();
+        }
+    }
+    (child, addr, lines)
+}
+
+struct Row {
+    name: String,
+    throughput: f64,
+    p50: f64,
+    p99: f64,
+    requests: usize,
+    tasks: usize,
+}
+
+/// Drive `conns` concurrent connections, each issuing
+/// `requests_per_conn` requests of cycling batch sizes 1..=4.
+fn drive(addr: &str, tasks: &[TaskFeatures], conns: usize, requests_per_conn: usize) -> Row {
+    let t0 = now();
+    let latencies: Vec<Vec<f64>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..conns)
+            .map(|c| {
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr).expect("connect load client");
+                    client.set_timeout(std::time::Duration::from_secs(30)).expect("timeout");
+                    let mut lat = Vec::with_capacity(requests_per_conn);
+                    for r in 0..requests_per_conn {
+                        let batch = 1 + (c + r) % 4;
+                        let lo = (c * 3 + r) % (tasks.len() - batch);
+                        let req = &tasks[lo..lo + batch];
+                        let s = now();
+                        let reply = client.select(req, false).expect("select");
+                        lat.push(s.elapsed().as_secs_f64());
+                        assert_eq!(reply.picks.len(), batch);
+                    }
+                    lat
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("load thread")).collect()
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let mut lat: Vec<f64> = latencies.into_iter().flatten().collect();
+    lat.sort_unstable_by(f64::total_cmp);
+    let requests = conns * requests_per_conn;
+    // batch sizes cycle 1..=4 per connection, so count the real total
+    let tasks_sent: usize =
+        (0..conns).map(|c| (0..requests_per_conn).map(|r| 1 + (c + r) % 4).sum::<usize>()).sum();
+    Row {
+        name: format!("serve/select/{conns}-conns"),
+        throughput: tasks_sent as f64 / elapsed,
+        p50: quantile_sorted(&lat, 0.50),
+        p99: quantile_sorted(&lat, 0.99),
+        requests,
+        tasks: tasks_sent,
+    }
+}
+
+fn main() {
+    let fast = std::env::var("GPS_BENCH_FAST").is_ok();
+    let requests_per_conn = if fast { 25 } else { 200 };
+
+    let dir = std::env::temp_dir().join(format!("gps_serve_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    let model = bench_artifact(&dir);
+    let tasks = bench_tasks();
+
+    let (mut child, addr, mut banner) = spawn_daemon(&model);
+
+    // warm up the daemon (accept loop, model page-in, allocator) off
+    // the record
+    {
+        let mut warm = Client::connect(&addr).expect("warm-up connect");
+        for _ in 0..5 {
+            warm.select(&tasks[..2], false).expect("warm-up select");
+        }
+    }
+
+    let mut rows = Vec::new();
+    for conns in [1usize, 4, 8] {
+        let row = drive(&addr, &tasks, conns, requests_per_conn);
+        println!(
+            "{:<24} {:>10.0} tasks/s   p50 {:>9.1}us   p99 {:>9.1}us   ({} requests)",
+            row.name,
+            row.throughput,
+            row.p50 * 1.0e6,
+            row.p99 * 1.0e6,
+            row.requests
+        );
+        rows.push(row);
+    }
+
+    let mut shut = Client::connect(&addr).expect("shutdown connect");
+    let served = shut.shutdown().expect("shutdown");
+    let expected: u64 = rows.iter().map(|r| r.requests as u64).sum::<u64>() + 5;
+    assert_eq!(served, expected, "daemon answered every request exactly once");
+    // drain the shutdown banner, then reap the child
+    let mut rest = String::new();
+    std::io::Read::read_to_string(&mut banner, &mut rest).expect("drain banner");
+    let status = child.wait().expect("wait for daemon");
+    assert!(status.success(), "daemon exited cleanly: {status:?}");
+
+    let json_rows: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"bench\": \"{}\", \"throughput_tasks_per_s\": {:.3}, \
+                 \"p50_s\": {:.9}, \"p99_s\": {:.9}, \"requests\": {}, \"tasks\": {}}}",
+                r.name, r.throughput, r.p50, r.p99, r.requests, r.tasks
+            )
+        })
+        .collect();
+    let out = std::env::var("GPS_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    let json = format!("{{\n  \"serve\": [\n{}\n  ]\n}}\n", json_rows.join(",\n"));
+    match std::fs::write(&out, json) {
+        Ok(()) => println!("serve timings written to {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -11,16 +11,16 @@
 /// model artifacts. `HashMap`/`HashSet` are banned in favour of
 /// `BTreeMap`/`BTreeSet`/sorted vecs.
 pub const DETERMINISM_MODULES: &[&str] =
-    &["engine", "dataset", "etrm", "partition", "features"];
+    &["engine", "dataset", "etrm", "partition", "features", "service"];
 
 /// Modules that own persisted or transmitted artifacts, where floats
 /// must flow through `util::fsio::f64_hex` / `engine::wire` rather than
 /// lossy `Display`/`Debug` formatting.
-pub const FLOAT_FMT_MODULES: &[&str] = &["dataset", "etrm", "engine"];
+pub const FLOAT_FMT_MODULES: &[&str] = &["dataset", "etrm", "engine", "service"];
 
 /// Within [`FLOAT_FMT_MODULES`], only the files that actually write
 /// artifacts are float-format scoped (matched on file stem).
-pub const FLOAT_FMT_FILES: &[&str] = &["checkpoint", "store", "wire"];
+pub const FLOAT_FMT_FILES: &[&str] = &["checkpoint", "store", "wire", "proto"];
 
 /// Modules under the `.unwrap()`/`.expect()` budget (non-test code).
 pub const UNWRAP_SCOPE: &[&str] = &["engine", "dataset"];
@@ -82,18 +82,22 @@ mod tests {
     fn scopes() {
         assert!(in_determinism_scope("engine/state.rs"));
         assert!(in_determinism_scope("features/data.rs"));
+        assert!(in_determinism_scope("service/serve.rs"));
         assert!(!in_determinism_scope("util/rng.rs"));
         assert!(!in_determinism_scope("analyzer/mod.rs"));
 
         assert!(in_float_fmt_scope("dataset/checkpoint.rs"));
         assert!(in_float_fmt_scope("etrm/store.rs"));
         assert!(in_float_fmt_scope("engine/wire.rs"));
+        assert!(in_float_fmt_scope("service/proto.rs"));
+        assert!(!in_float_fmt_scope("service/app.rs"));
         assert!(!in_float_fmt_scope("dataset/logs.rs"));
         assert!(!in_float_fmt_scope("util/fsio.rs"));
 
         assert!(in_unwrap_scope("engine/barrier.rs"));
         assert!(in_unwrap_scope("dataset/mod.rs"));
         assert!(!in_unwrap_scope("etrm/model.rs"));
+        assert!(!in_unwrap_scope("service/serve.rs"));
 
         assert!(is_blessed_instant("engine/mod.rs"));
         assert!(!is_blessed_instant("engine/transport/socket.rs"));

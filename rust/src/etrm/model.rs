@@ -59,6 +59,27 @@ impl EtrmBackend {
     }
 }
 
+/// NaN-safe total argmin over `(strategy, predicted time)` pairs: a
+/// NaN prediction can never win, ties keep the earlier entry (strict
+/// `<`), and an all-NaN input falls back to the first inventory
+/// strategy — deterministic for *any* regressor output.
+fn argmin_nan_safe(preds: impl IntoIterator<Item = (Strategy, f64)>) -> Strategy {
+    let mut best: Option<(Strategy, f64)> = None;
+    for (s, t) in preds {
+        if t.is_nan() {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some((_, bt)) => t < bt,
+        };
+        if better {
+            best = Some((s, t));
+        }
+    }
+    best.map(|(s, _)| s).unwrap_or(Strategy::INVENTORY[0])
+}
+
 /// A trained Execution Time Regression Model.
 pub struct Etrm {
     pub backend: EtrmBackend,
@@ -132,22 +153,19 @@ impl Etrm {
     pub fn select(&self, task: &TaskFeatures) -> Strategy {
         let mut buf = [0.0; FEATURE_DIM];
         let reg = self.backend.regressor();
-        let mut best: Option<(Strategy, f64)> = None;
-        for s in Strategy::INVENTORY {
+        argmin_nan_safe(Strategy::INVENTORY.iter().map(|&s| {
             encode_into(task, s, &mut buf);
-            let t = reg.predict(&buf);
-            if t.is_nan() {
-                continue;
-            }
-            let better = match best {
-                None => true,
-                Some((_, bt)) => t < bt,
-            };
-            if better {
-                best = Some((s, t));
-            }
-        }
-        best.map(|(s, _)| s).unwrap_or(Strategy::INVENTORY[0])
+            (s, reg.predict(&buf))
+        }))
+    }
+
+    /// The selection rule applied to already-computed predictions
+    /// (e.g. a [`Etrm::predict_all`] vector): the same NaN-safe total
+    /// argmin as [`Etrm::select`], so a consumer holding the full
+    /// prediction table — the selection daemon ships one per task —
+    /// derives exactly the strategy `select` would have picked.
+    pub fn select_from(preds: &[(Strategy, f64)]) -> Strategy {
+        argmin_nan_safe(preds.iter().copied())
     }
 
     /// Batched selection — the serve-many entry point. Tasks fan out
@@ -255,6 +273,25 @@ mod tests {
                 t.to_bits()
             );
         }
+        // the prediction-table argmin is the same selection rule
+        assert_eq!(Etrm::select_from(&preds), etrm.select(&store.logs[0].features));
+    }
+
+    /// `select_from` is the exact `select` rule over a prediction
+    /// table: strict-`<` argmin, NaN never wins, all-NaN falls back to
+    /// the first inventory strategy.
+    #[test]
+    fn select_from_is_nan_safe_argmin() {
+        let inv = Strategy::INVENTORY;
+        let mut preds: Vec<(Strategy, f64)> = inv.iter().map(|&s| (s, 5.0)).collect();
+        preds[4].1 = 1.0;
+        assert_eq!(Etrm::select_from(&preds), inv[4]);
+        preds[2].1 = f64::NAN;
+        assert_eq!(Etrm::select_from(&preds), inv[4]);
+        let all_nan: Vec<(Strategy, f64)> = inv.iter().map(|&s| (s, f64::NAN)).collect();
+        assert_eq!(Etrm::select_from(&all_nan), inv[0]);
+        let flat: Vec<(Strategy, f64)> = inv.iter().map(|&s| (s, 2.0)).collect();
+        assert_eq!(Etrm::select_from(&flat), inv[0]);
     }
 
     /// Both label channels flow through the same trainer path and

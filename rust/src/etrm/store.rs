@@ -186,9 +186,30 @@ pub fn parse(text: &str) -> Result<Etrm> {
 
 /// Load a model artifact from disk.
 pub fn load(path: &Path) -> Result<Etrm> {
+    Ok(load_with_fingerprint(path)?.0)
+}
+
+/// Load a model artifact together with its content fingerprint (the
+/// FNV-1a digest of the full file, checksum footer included). The
+/// fingerprint is computed from the *same bytes that were parsed*, so
+/// a handle caching `(model, fingerprint)` pairs can never associate a
+/// fingerprint with a different file state than the model it serves.
+pub fn load_with_fingerprint(path: &Path) -> Result<(Etrm, u64)> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("read model artifact {}", path.display()))?;
-    parse(&text).with_context(|| format!("model artifact {}", path.display()))
+    let etrm = parse(&text).with_context(|| format!("model artifact {}", path.display()))?;
+    Ok((etrm, fnv1a64(text.as_bytes())))
+}
+
+/// Fingerprint an artifact file *without* parsing it — the cheap
+/// change probe of the serve daemon's hot-reload poll and the CLI's
+/// cached-model validity check. Atomic writes ([`save`] goes through
+/// `write_atomic`) guarantee a reader never sees a half-written file,
+/// so an unchanged fingerprint really means an unchanged artifact.
+pub fn probe_fingerprint(path: &Path) -> Result<u64> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("probe model artifact {}", path.display()))?;
+    Ok(fnv1a64(&bytes))
 }
 
 /// Load a model artifact and additionally require a specific training
@@ -215,13 +236,29 @@ pub fn load_expecting(path: &Path, label: Option<Label>) -> Result<Etrm> {
 /// between the in-memory model at training time and the reloaded
 /// artifact at serving time.
 pub fn prediction_bits(etrm: &Etrm, graph: &str, algorithm: &str, task: &TaskFeatures) -> String {
-    let mut out = format!(
-        "task {graph}/{algorithm} ({} backend, {} label)\n",
+    prediction_bits_from(
         etrm.backend.name(),
-        etrm.label.name()
-    );
-    for (s, t) in etrm.predict_all(task) {
-        writeln!(out, "{} {} {}", s.psid(), s.name(), fsio::f64_hex(t)).unwrap();
+        etrm.label.name(),
+        graph,
+        algorithm,
+        &etrm.predict_all(task),
+    )
+}
+
+/// The `prediction_bits` rendering over an already-computed
+/// prediction table — the single source of the probe format, shared
+/// with the selection daemon's client side (which holds the shipped
+/// predictions but not the model).
+pub fn prediction_bits_from(
+    backend: &str,
+    label: &str,
+    graph: &str,
+    algorithm: &str,
+    preds: &[(Strategy, f64)],
+) -> String {
+    let mut out = format!("task {graph}/{algorithm} ({backend} backend, {label} label)\n");
+    for (s, t) in preds {
+        writeln!(out, "{} {} {}", s.psid(), s.name(), fsio::f64_hex(*t)).unwrap();
     }
     out
 }

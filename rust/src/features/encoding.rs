@@ -16,14 +16,68 @@
 //! Skewness/kurtosis are split into sign and magnitude exactly as
 //! §4.1.1 describes ("divided into a sign and absolute value").
 
-use crate::analyzer::OpKey;
+use crate::analyzer::{OpKey, NUM_OP_KEYS};
 use crate::partition::Strategy;
 
-use super::data::MomentFeatures;
+use super::data::{DataFeatures, MomentFeatures};
 use super::task::TaskFeatures;
 
 /// Total encoded width.
 pub const FEATURE_DIM: usize = 52;
+
+/// Width of the raw task-transport image used by the selection
+/// service's wire protocol: the un-scaled [`TaskFeatures`] fields in a
+/// fixed order (|V|, |E|, directed flag, 2×4 degree moments,
+/// [`NUM_OP_KEYS`] algorithm counts). Unlike the model input
+/// ([`FEATURE_DIM`]), nothing here is log-scaled or one-hot — the
+/// receiver re-encodes through [`encode_into`], so both sides of the
+/// wire run the identical encoding path and selections stay
+/// bit-identical to a local `select`.
+pub const TASK_WIRE_DIM: usize = 11 + NUM_OP_KEYS;
+
+/// Flatten a task into its transport image (the inverse of
+/// [`task_from_values`]). Raw `f64` copies only — the values cross the
+/// wire as exact bit patterns.
+pub fn task_to_values(task: &TaskFeatures, out: &mut [f64; TASK_WIRE_DIM]) {
+    out[0] = task.data.num_vertices;
+    out[1] = task.data.num_edges;
+    out[2] = if task.data.directed { 1.0 } else { 0.0 };
+    for (base, m) in [(3usize, &task.data.in_deg), (7, &task.data.out_deg)] {
+        out[base] = m.mean;
+        out[base + 1] = m.std;
+        out[base + 2] = m.skewness;
+        out[base + 3] = m.kurtosis;
+    }
+    out[11..].copy_from_slice(&task.algo);
+}
+
+/// Rebuild a task from its transport image, writing into a reused
+/// `TaskFeatures` (the service decodes every request into
+/// per-connection buffers instead of allocating per task).
+pub fn task_from_values(vals: &[f64; TASK_WIRE_DIM], into: &mut TaskFeatures) {
+    into.data.num_vertices = vals[0];
+    into.data.num_edges = vals[1];
+    into.data.directed = vals[2] != 0.0;
+    into.data.in_deg =
+        MomentFeatures { mean: vals[3], std: vals[4], skewness: vals[5], kurtosis: vals[6] };
+    into.data.out_deg =
+        MomentFeatures { mean: vals[7], std: vals[8], skewness: vals[9], kurtosis: vals[10] };
+    into.algo.copy_from_slice(&vals[11..]);
+}
+
+/// An all-zero task — the reusable decode target [`task_from_values`]
+/// overwrites field-for-field.
+pub fn zeroed_task() -> TaskFeatures {
+    let zero = MomentFeatures { mean: 0.0, std: 0.0, skewness: 0.0, kurtosis: 0.0 };
+    let data = DataFeatures {
+        num_vertices: 0.0,
+        num_edges: 0.0,
+        directed: false,
+        in_deg: zero,
+        out_deg: zero,
+    };
+    TaskFeatures::from_vector(data, [0.0; NUM_OP_KEYS])
+}
 
 fn log1p(x: f64) -> f64 {
     (1.0 + x.max(0.0)).ln()
@@ -217,5 +271,38 @@ mod tests {
         let b = encode(&t, Strategy::Hdrf(100));
         assert_ne!(a[37..48], b[37..48]);
         assert_eq!(a[48..], b[48..]);
+    }
+
+    /// The wire transport image round-trips every field bit-exactly,
+    /// so a task shipped to the selection daemon re-encodes to the
+    /// identical model input on the other side.
+    #[test]
+    fn task_wire_image_roundtrips_bit_exactly() {
+        let mut t = task();
+        // awkward values that would not survive a lossy text round trip
+        t.data.in_deg.skewness = -0.0;
+        t.data.out_deg.kurtosis = 1.0e-300;
+        t.algo[3] = f64::MIN_POSITIVE;
+        let mut vals = [0.0; TASK_WIRE_DIM];
+        task_to_values(&t, &mut vals);
+        let mut back = zeroed_task();
+        task_from_values(&vals, &mut back);
+        assert_eq!(back.data.directed, t.data.directed);
+        assert_eq!(back.data.in_deg.skewness.to_bits(), (-0.0f64).to_bits());
+        for s in Strategy::INVENTORY {
+            let a = encode(&t, s);
+            let b = encode(&back, s);
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{}", s.name());
+            }
+        }
+        // the decode target is reused: a second decode overwrites
+        // every slot, none is stale
+        let u = task();
+        let mut vals2 = [0.0; TASK_WIRE_DIM];
+        task_to_values(&u, &mut vals2);
+        task_from_values(&vals2, &mut back);
+        assert_eq!(back.data.num_edges.to_bits(), u.data.num_edges.to_bits());
+        assert_eq!(back.algo, u.algo);
     }
 }

@@ -11,5 +11,8 @@ pub mod encoding;
 pub mod task;
 
 pub use data::DataFeatures;
-pub use encoding::{encode, encode_into, feature_names, FEATURE_DIM};
+pub use encoding::{
+    encode, encode_into, feature_names, task_from_values, task_to_values, zeroed_task,
+    FEATURE_DIM, TASK_WIRE_DIM,
+};
 pub use task::TaskFeatures;

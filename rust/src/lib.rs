@@ -49,6 +49,10 @@
 //! * [`runtime`] — artifact-manifest runtime executing the AOT kernel
 //!   shapes (`python/compile/aot.py`) through their pure-Rust twins.
 //! * [`eval`] — drivers regenerating every table and figure of §5.
+//! * [`service`] — the typed application layer behind every `repro`
+//!   subcommand, the fingerprint-cached model loader, and the
+//!   always-on selection daemon (`repro serve`) with its checksummed
+//!   wire protocol and hot-reloading model handle.
 
 pub mod algorithms;
 pub mod analyzer;
@@ -62,4 +66,5 @@ pub mod graph;
 pub mod ml;
 pub mod partition;
 pub mod runtime;
+pub mod service;
 pub mod util;

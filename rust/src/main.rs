@@ -1,5 +1,10 @@
 //! `repro` — the gps-select command-line driver.
 //!
+//! The binary is a thin flag parser: every subcommand body lives in
+//! the typed service layer ([`gps_select::service::app`]) and returns
+//! its report as a string, so the CLI, the selection daemon and the
+//! integration tests all run the same code paths.
+//!
 //! Subcommands:
 //!
 //! * `figures --id <fig1|fig4|table2|table3|table4|fig6|fig7|table6|fig8|table7|all>`
@@ -14,10 +19,19 @@
 //!   additionally writes the in-memory model's predictions as exact
 //!   bit patterns for the save→load round-trip gate.
 //! * `select --model m.etrm --graph wiki --algorithm PR[,TC,…]` — the
-//!   serve-many half: load a saved model (no corpus, no training),
-//!   extract the task features and run the batched selector; `--label`
-//!   demands a specific training channel, `--bits-out <file>` writes
-//!   the loaded model's predictions for the round-trip gate.
+//!   serve-many half: load a saved model through the service layer's
+//!   fingerprint-validated cache (no corpus, no training) and run the
+//!   batched selector; `--label` demands a specific training channel,
+//!   `--bits-out <file>` writes the loaded model's predictions for the
+//!   round-trip gate.
+//! * `serve --model m.etrm [--listen 127.0.0.1:7461]` — the always-on
+//!   selection daemon: a TCP service speaking checksummed
+//!   `engine::wire`-style frames, coalescing concurrent requests into
+//!   batched selections and hot-reloading the artifact when its
+//!   fingerprint changes (`--reload-poll-ms`, 0 disables;
+//!   `--max-coalesce` bounds one batched pass). Answers are
+//!   bit-identical to offline `select` on the same artifact; see the
+//!   README's "Selection service" section.
 //! * `run --graph wiki --algorithm PR --strategy Hybrid` — execute one
 //!   task on the engine and report the simulated time breakdown.
 //! * `partition --graph wiki [--workers 64]` — partition-quality metrics
@@ -52,26 +66,20 @@
 //! its share of the run over TCP instead of dispatching a subcommand
 //! (see `engine::transport::socket`).
 
-use std::path::Path;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
 
 use gps_select::algorithms::Algorithm;
-use gps_select::analyzer;
 use gps_select::dataset::checkpoint;
-use gps_select::dataset::logs::LogStore;
-use gps_select::engine::cost::ClusterConfig;
 use gps_select::engine::ExecutionMode;
-use gps_select::etrm::{store as model_store, Etrm};
-use gps_select::eval::{figures, pipeline};
-use gps_select::features::{DataFeatures, TaskFeatures};
-use gps_select::graph::datasets::DatasetSpec;
+use gps_select::eval::pipeline;
 use gps_select::ml::gbdt::GbdtParams;
 use gps_select::ml::mlp::MlpParams;
 use gps_select::ml::Label;
-use gps_select::partition::metrics::PartitionMetrics;
-use gps_select::partition::Strategy;
+use gps_select::service::app;
+use gps_select::service::serve::{ServeConfig, Server};
 use gps_select::util::cli::Args;
 use gps_select::util::error::{bail, ensure, Context, Result};
-use gps_select::util::fsio;
 
 fn main() {
     let args = Args::parse();
@@ -117,12 +125,21 @@ fn pipeline_config(args: &Args) -> Result<pipeline::PipelineConfig> {
     })
 }
 
-fn build_graph(args: &Args) -> Result<gps_select::graph::Graph> {
+fn graph_spec(args: &Args) -> Result<app::GraphSpec> {
     let name = args.get("graph").context("--graph <name> required")?;
-    let spec = DatasetSpec::by_name(name)
-        .with_context(|| format!("unknown graph {name:?} (see Table 5 aliases)"))?;
-    let scale = args.get_f64("scale", pipeline::PipelineConfig::default().scale)?;
-    Ok(spec.build(scale, args.get_u64("seed", 42)?))
+    Ok(app::GraphSpec {
+        name: name.to_string(),
+        scale: args.get_f64("scale", pipeline::PipelineConfig::default().scale)?,
+        seed: args.get_u64("seed", 42)?,
+    })
+}
+
+/// `--label` as a *demand* on a loaded artifact, not a default.
+fn label_demand(args: &Args) -> Result<Option<Label>> {
+    Ok(match args.get("label") {
+        Some(v) => Some(Label::resolve(Some(v))?),
+        None => None,
+    })
 }
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -131,6 +148,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("pipeline") => cmd_pipeline(args),
         Some("train") => cmd_train(args),
         Some("select") => cmd_select(args),
+        Some("serve") => cmd_serve(args),
         Some("run") => cmd_run(args),
         Some("partition") => cmd_partition(args),
         Some("features") => cmd_features(args),
@@ -141,31 +159,12 @@ fn dispatch(args: &Args) -> Result<()> {
         Some(other) => bail!("unknown subcommand {other:?} (see the README)"),
         None => {
             println!(
-                "usage: repro <figures|pipeline|train|select|run|partition|features|analyze|\
-                 logs|runtime-check|audit> [flags]"
+                "usage: repro <figures|pipeline|train|select|serve|run|partition|features|\
+                 analyze|logs|runtime-check|audit> [flags]"
             );
             Ok(())
         }
     }
-}
-
-/// Extract one task's features exactly as the selection service does:
-/// build the dataset at (scale, seed), sweep the data features, analyze
-/// the pseudo-code. Returns canonical (graph, algorithm) names so the
-/// train-side probe and the select side render byte-identical headers.
-fn probe_task(
-    graph: &str,
-    algorithm: &str,
-    scale: f64,
-    seed: u64,
-) -> Result<(String, String, TaskFeatures)> {
-    let spec = DatasetSpec::by_name(graph)
-        .with_context(|| format!("unknown graph {graph:?} (see Table 5 aliases)"))?;
-    let algo = Algorithm::by_name(algorithm)
-        .with_context(|| format!("unknown algorithm {algorithm:?} (AID AOD PR GC APCN TC CC RW)"))?;
-    let g = spec.build(scale, seed);
-    let task = TaskFeatures::extract(&g, algo.pseudo_code())?;
-    Ok((g.name.clone(), algo.name().to_string(), task))
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -173,253 +172,117 @@ fn cmd_train(args: &Args) -> Result<()> {
     let model_out = args
         .get("model-out")
         .context("--model-out <path> required (the model artifact to write)")?;
-    let backend = args.get_or("backend", "gbdt");
-    let mut progress = |stage: &str| eprintln!("[train] {stage}");
-    let set = pipeline::build_training_set(&config, &mut progress)?;
-    progress(&format!(
-        "training {backend} ETRM on {} synthetic tuples ({} label)",
-        set.synthetic.len(),
-        config.label.name()
-    ));
-    let etrm = match backend {
-        "gbdt" => Etrm::train_gbdt(&set.synthetic, config.gbdt, config.label),
-        "ridge" => Etrm::train_ridge(&set.synthetic, args.get_f64("lambda", 1.0)?, config.label),
-        "mlp" => Etrm::train_mlp(
-            &set.synthetic,
-            MlpParams {
-                hidden: args.get_usize("hidden", MlpParams::default().hidden)?,
-                epochs: args.get_usize("epochs", MlpParams::default().epochs)?,
-                ..Default::default()
-            },
-            config.label,
-        ),
-        other => bail!("unknown --backend {other:?} (gbdt|ridge|mlp)"),
-    };
-    model_store::save(&etrm, Path::new(model_out))?;
-    println!(
-        "wrote {backend} model ({} label, trained on {} tuples) to {model_out}",
-        config.label.name(),
-        set.synthetic.len()
-    );
-    match (args.get("probe"), args.get("probe-bits")) {
-        (None, None) => {}
+    let probe = match (args.get("probe"), args.get("probe-bits")) {
+        (None, None) => None,
         (Some(spec), Some(path)) => {
             let (graph, algorithm) = spec
                 .split_once('/')
                 .context("--probe expects <graph>/<ALGO>, e.g. wiki/PR")?;
-            let (graph, algorithm, task) =
-                probe_task(graph, algorithm, config.scale, config.seed)?;
-            let bits = model_store::prediction_bits(&etrm, &graph, &algorithm, &task);
-            fsio::write_atomic(Path::new(path), bits.as_bytes())?;
-            println!("probe predictions ({graph}/{algorithm}) written to {path}");
+            Some(app::ProbeSpec {
+                graph: graph.to_string(),
+                algorithm: algorithm.to_string(),
+                bits_out: PathBuf::from(path),
+            })
         }
         _ => bail!("--probe and --probe-bits must be given together"),
-    }
+    };
+    let spec = app::TrainSpec {
+        backend: args.get_or("backend", "gbdt").to_string(),
+        lambda: args.get_f64("lambda", 1.0)?,
+        mlp: MlpParams {
+            hidden: args.get_usize("hidden", MlpParams::default().hidden)?,
+            epochs: args.get_usize("epochs", MlpParams::default().epochs)?,
+            ..Default::default()
+        },
+        model_out: PathBuf::from(model_out),
+        probe,
+    };
+    let report = app::train_report(&config, &spec, &mut |stage| eprintln!("[train] {stage}"))?;
+    print!("{report}");
     Ok(())
 }
 
 fn cmd_select(args: &Args) -> Result<()> {
-    let model_path = args
+    let model = args
         .get("model")
         .context("--model <artifact> required (train one with `repro train --model-out …`)")?;
-    // --label here is a *demand* on the loaded artifact, not a default
-    let expect = match args.get("label") {
-        Some(v) => Some(Label::resolve(Some(v))?),
-        None => None,
+    let spec = app::SelectSpec {
+        model: PathBuf::from(model),
+        expect: label_demand(args)?,
+        graph: graph_spec(args)?,
+        algorithms: args.get_or("algorithm", "PR").split(',').map(str::to_string).collect(),
+        threads: args.get_usize("threads", 0)?,
+        bits_out: args.get("bits-out").map(PathBuf::from),
     };
-    let etrm = model_store::load_expecting(Path::new(model_path), expect)?;
-    let g = build_graph(args)?;
-    let mut algos = Vec::new();
-    for name in args.get_or("algorithm", "PR").split(',') {
-        algos.push(
-            Algorithm::by_name(name)
-                .with_context(|| format!("unknown algorithm {name:?} in --algorithm"))?,
-        );
-    }
-    // the graph sweep runs once; every algorithm task shares it
-    let data = DataFeatures::of(&g);
-    let mut tasks = Vec::with_capacity(algos.len());
-    for a in &algos {
-        tasks.push(TaskFeatures::from_parts(data, &analyzer::analyze(a.pseudo_code())?));
-    }
-    let threads = args.get_usize("threads", 0)?;
-    let picks = etrm.select_batch(&tasks, threads);
+    print!("{}", app::select_report(&spec)?);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args
+        .get("model")
+        .context("--model <artifact> required (the daemon serves one artifact path)")?;
+    let cfg = ServeConfig {
+        listen: args.get_or("listen", "127.0.0.1:7461").to_string(),
+        threads: args.get_usize("threads", 0)?,
+        reload_poll_ms: args.get_u64("reload-poll-ms", 200)?,
+        max_coalesce: args.get_usize("max-coalesce", 64)?,
+    };
+    let handle = app::ModelHandle::open(Path::new(model), label_demand(args)?)?;
+    let loaded = handle.current();
     println!(
-        "model {model_path} ({} backend, {} label), {} task(s) on {}",
-        etrm.backend.name(),
-        etrm.label.name(),
-        tasks.len(),
-        g.name
+        "serve: model {model} ({} backend, {} label, fingerprint {:016x})",
+        loaded.etrm.backend.name(),
+        loaded.etrm.label.name(),
+        loaded.fingerprint
     );
-    for ((a, task), pick) in algos.iter().zip(&tasks).zip(&picks) {
-        println!("task {}/{}:", g.name, a.name());
-        for (s, t) in etrm.predict_all(task) {
-            let marker = if s == *pick { "  ← selected" } else { "" };
-            println!("  {:<8} {t:>14.6}{marker}", s.name());
-        }
-    }
-    if let Some(path) = args.get("bits-out") {
-        let mut out = String::new();
-        for (a, task) in algos.iter().zip(&tasks) {
-            out.push_str(&model_store::prediction_bits(&etrm, &g.name, a.name(), task));
-        }
-        fsio::write_atomic(Path::new(path), out.as_bytes())?;
-        println!("prediction bit patterns written to {path}");
-    }
+    let server = Server::start(cfg, handle)?;
+    println!("serve: listening on {}", server.local_addr());
+    // stdout is block-buffered when piped; scripts poll for that line
+    std::io::stdout().flush().context("flush serve banner")?;
+    let summary = server.join()?;
+    println!(
+        "serve: drained and stopped ({} requests, {} tasks, {} batched passes)",
+        summary.requests, summary.tasks, summary.batches
+    );
     Ok(())
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {
     let id = args.get_or("id", "all");
     let config = pipeline_config(args)?;
-    // fig4 and table2 do not need the trained pipeline
-    if id == "table2" {
-        println!("{}", figures::table2());
-        return Ok(());
-    }
-    if id == "fig4" {
-        println!("{}", figures::fig4(config.scale, config.seed)?);
-        return Ok(());
-    }
-    let eval = pipeline::run_with_progress(config, |stage| eprintln!("[pipeline] {stage}"))?;
-    let render = |id: &str, eval: &pipeline::Evaluation| -> Result<String> {
-        Ok(match id {
-            "fig1" => figures::fig1(eval),
-            "fig4" => figures::fig4(eval.config.scale, eval.config.seed)?,
-            "table2" => figures::table2(),
-            "table3" => figures::table3(eval)?,
-            "table4" => figures::table4(eval)?,
-            "fig6" => figures::fig6(eval),
-            "fig7" => figures::fig7(eval),
-            "table6" => figures::table6(eval),
-            "fig8" => figures::fig8(eval),
-            "table7" => figures::table7(eval),
-            other => bail!("unknown figure id {other:?}"),
-        })
-    };
-    if id == "all" {
-        for id in [
-            "fig1", "fig4", "table2", "table3", "table4", "fig6", "fig7", "table6", "fig8",
-            "table7",
-        ] {
-            println!("{}\n", render(id, &eval)?);
-        }
-    } else {
-        println!("{}", render(id, &eval)?);
-    }
+    print!("{}", app::figures_report(config, id, |stage| eprintln!("[pipeline] {stage}"))?);
     Ok(())
 }
 
 fn cmd_pipeline(args: &Args) -> Result<()> {
     let config = pipeline_config(args)?;
-    let eval = pipeline::run_with_progress(config, |stage| eprintln!("[pipeline] {stage}"))?;
-    let all: Vec<&pipeline::TaskEval> = eval.tasks.iter().collect();
-    let (best, worst, avg) = pipeline::Evaluation::mean_scores(&all);
-    let rank1 = all.iter().filter(|t| t.rank == 1).count() as f64 / all.len() as f64;
-    let rank4 = all.iter().filter(|t| t.rank <= 4).count() as f64 / all.len() as f64;
-    println!("pipeline summary");
-    println!("  corpus logs        : {}", eval.store.logs.len());
-    println!("  synthetic tuples   : {}", eval.synthetic_count);
-    println!("  test tasks         : {}", eval.tasks.len());
-    println!("  Score_best (mean)  : {best:.4}   (paper: 0.9458)");
-    println!("  Score_worst (mean) : {worst:.4}   (paper: 2.0770)");
-    println!("  Score_avg (mean)   : {avg:.4}   (paper: 1.4558)");
-    println!("  best-pick ratio    : {rank1:.2}     (paper: 0.52)");
-    println!("  within-rank-4 ratio: {rank4:.2}     (paper: 0.92)");
-    if let Some(path) = args.get("save-csv") {
-        eval.store.save_csv(std::path::Path::new(path))?;
-        println!("  corpus saved       : {path}");
-    }
+    let save_csv = args.get("save-csv").map(PathBuf::from);
+    let report =
+        app::pipeline_report(config, save_csv.as_deref(), |stage| eprintln!("[pipeline] {stage}"))?;
+    print!("{report}");
     Ok(())
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let g = build_graph(args)?;
-    let algo = Algorithm::by_name(args.get_or("algorithm", "PR"))
-        .context("unknown --algorithm (AID AOD PR GC APCN TC CC RW)")?;
-    let strategy = Strategy::by_name(args.get_or("strategy", "Random"))
-        .context("unknown --strategy (see table2)")?;
-    let workers = args.get_usize("workers", 64)?;
-    let mode = ExecutionMode::resolve(args.get("engine-mode"))?;
-    let cfg = ClusterConfig::with_workers(workers);
-    let p = strategy.partition(&g, workers);
-    // try_execute: a socket-backend failure (worker spawn, wire IO)
-    // surfaces as a clean CLI error instead of a panic
-    let outcome = algo.try_execute(&g, &p, &cfg, mode)?;
-    println!(
-        "task {}/{} under {} on {} workers (|V|={}, |E|={}, {} engine)",
-        g.name,
-        algo.name(),
-        strategy.name(),
-        workers,
-        g.num_vertices(),
-        g.num_edges(),
-        mode.name()
-    );
-    println!("  simulated time : {:.6} s", outcome.sim.total);
-    println!("    compute      : {:.6} s", outcome.sim.compute);
-    println!("    comm         : {:.6} s", outcome.sim.comm);
-    println!("    overhead     : {:.6} s", outcome.sim.overhead);
-    println!("  wall clock     : {:.3} ms (measured at the coordinator)", outcome.wall_clock_ms);
-    println!("  supersteps     : {}", outcome.ops.supersteps);
-    println!("  gathers        : {}", outcome.ops.gathers);
-    println!("  messages       : {}", outcome.ops.messages);
-    println!("  bytes          : {}", outcome.ops.bytes);
-    println!("  checksum       : {:.6}", outcome.checksum);
+    let spec = app::RunSpec {
+        graph: graph_spec(args)?,
+        algorithm: args.get_or("algorithm", "PR").to_string(),
+        strategy: args.get_or("strategy", "Random").to_string(),
+        workers: args.get_usize("workers", 64)?,
+        mode: ExecutionMode::resolve(args.get("engine-mode"))?,
+    };
+    print!("{}", app::run_report(&spec)?);
     Ok(())
 }
 
 fn cmd_partition(args: &Args) -> Result<()> {
-    let g = build_graph(args)?;
-    let workers = args.get_usize("workers", 64)?;
-    println!(
-        "partition metrics for {} (|V|={}, |E|={}) on {workers} workers",
-        g.name,
-        g.num_vertices(),
-        g.num_edges()
-    );
-    let mut t = gps_select::util::table::Table::new(vec![
-        "strategy",
-        "replication",
-        "edge balance",
-        "vertex balance",
-        "workers used",
-    ]);
-    for s in Strategy::all() {
-        let p = s.partition(&g, workers);
-        let m = PartitionMetrics::of(&g, &p);
-        t.row(vec![
-            s.name().into_owned(),
-            format!("{:.3}", m.replication_factor),
-            format!("{:.3}", m.edge_balance),
-            format!("{:.3}", m.vertex_balance),
-            format!("{}", m.workers_used),
-        ]);
-    }
-    println!("{}", t.render());
+    print!("{}", app::partition_report(&graph_spec(args)?, args.get_usize("workers", 64)?)?);
     Ok(())
 }
 
 fn cmd_features(args: &Args) -> Result<()> {
-    let g = build_graph(args)?;
-    let algo =
-        Algorithm::by_name(args.get_or("algorithm", "PR")).context("unknown --algorithm")?;
-    let tf = TaskFeatures::extract(&g, algo.pseudo_code())?;
-    println!("data features ({}):", g.name);
-    let d = &tf.data;
-    println!("  |V| = {}  |E| = {}  directed = {}", d.num_vertices, d.num_edges, d.directed);
-    for (label, m) in [("in-degree", d.in_deg), ("out-degree", d.out_deg)] {
-        println!(
-            "  {label}: mean={:.3} std={:.3} skew={:.3} kurt={:.3}",
-            m.mean, m.std, m.skewness, m.kurtosis
-        );
-    }
-    println!("algorithm features ({}):", algo.name());
-    for (k, v) in analyzer::OpKey::all().iter().zip(tf.algo.iter()) {
-        if *v != 0.0 {
-            println!("  {:<22} {v:.1}", k.name());
-        }
-    }
+    print!("{}", app::features_report(&graph_spec(args)?, args.get_or("algorithm", "PR"))?);
     Ok(())
 }
 
@@ -432,29 +295,20 @@ fn cmd_analyze(args: &Args) -> Result<()> {
             algo.pseudo_code().to_string()
         }
     };
-    let counts = analyzer::analyze(&source)?;
-    println!("symbolic operation counts (Listing 2 form):");
-    for (k, e) in &counts.counts {
-        println!("  {:<22} {}", k.name(), e.render());
-    }
-    if let Some(gname) = args.get("graph") {
-        let spec = DatasetSpec::by_name(gname).context("unknown graph")?;
-        let g = spec.build(args.get_f64("scale", 1.0 / 32.0)?, args.get_u64("seed", 42)?);
-        let env = DataFeatures::of(&g).sym_env();
-        println!("evaluated against {gname}:");
-        for (k, v) in counts.evaluate(&env) {
-            if v != 0.0 {
-                println!("  {:<22} {v:.1}", k.name());
-            }
-        }
-    }
+    let graph = match args.get("graph") {
+        Some(name) => Some(app::GraphSpec {
+            name: name.to_string(),
+            scale: args.get_f64("scale", 1.0 / 32.0)?,
+            seed: args.get_u64("seed", 42)?,
+        }),
+        None => None,
+    };
+    print!("{}", app::analyze_report(&app::AnalyzeSpec { source, graph })?);
     Ok(())
 }
 
 fn cmd_logs(args: &Args) -> Result<()> {
     let config = pipeline_config(args)?;
-    let cfg = ClusterConfig::with_workers(config.workers);
-    let threads = gps_select::util::pool::resolve_threads(config.threads);
     if let Some(limit) = args.get("limit-graphs") {
         // partial sweep: checkpoint the first N graphs, then stop — a
         // later run without the limit resumes from the checkpoint
@@ -466,77 +320,31 @@ fn cmd_logs(args: &Args) -> Result<()> {
         let limit: usize = limit
             .parse()
             .with_context(|| format!("--limit-graphs expects an integer, got {limit:?}"))?;
-        let dir = config
-            .checkpoint_dir
-            .as_deref()
-            .context("--limit-graphs requires --checkpoint-dir (or GPS_CHECKPOINT_DIR)")?;
-        let done = LogStore::checkpoint_prefix(
-            config.scale,
-            config.seed,
-            &cfg,
-            threads,
-            config.engine_mode,
-            dir,
-            limit,
-        )?;
-        println!(
-            "checkpointed {done}/{} corpus graphs in {} (re-run without --limit-graphs to \
-             resume)",
-            gps_select::graph::datasets::CORPUS.len(),
-            dir.display()
-        );
+        print!("{}", app::logs_checkpoint_report(&config, limit)?);
         return Ok(());
     }
-    let store = LogStore::build_corpus_checkpointed(
-        config.scale,
-        config.seed,
-        &cfg,
-        threads,
-        config.engine_mode,
-        config.checkpoint_dir.as_deref(),
-    )?;
-    let path = args.get_or("out", "logs.csv");
-    store.save_csv(std::path::Path::new(path))?;
-    println!(
-        "wrote {} execution logs to {path} ({threads} threads, {} engine)",
-        store.logs.len(),
-        config.engine_mode.name()
-    );
+    print!("{}", app::logs_report(&config, Path::new(args.get_or("out", "logs.csv")))?);
     Ok(())
 }
 
 fn cmd_audit(args: &Args) -> Result<()> {
-    // default scan root: works from the repo root and from rust/
     let root = match args.get("root") {
         Some(r) => r.to_string(),
-        None if Path::new("rust/src").is_dir() => "rust/src".to_string(),
-        None => "src".to_string(),
+        None => app::default_audit_root(),
     };
-    let budget =
-        args.get_usize("unwrap-budget", gps_select::audit::DEFAULT_UNWRAP_BUDGET)?;
-    let report = gps_select::audit::audit_tree_with_budget(Path::new(&root), budget)?;
-    if let Some(path) = args.get("json") {
-        fsio::write_atomic(Path::new(path), report.to_json().as_bytes())?;
-        println!("audit report written to {path}");
-    }
-    print!("{}", report.render_text());
+    let budget = args.get_usize("unwrap-budget", gps_select::audit::DEFAULT_UNWRAP_BUDGET)?;
+    let json = args.get("json").map(PathBuf::from);
+    let outcome = app::audit_report(Path::new(&root), budget, json.as_deref())?;
+    print!("{}", outcome.text);
     ensure!(
-        report.is_clean(),
-        "audit failed: {} violation(s) in {}",
-        report.violations.len(),
-        root
+        outcome.violations == 0,
+        "audit failed: {} violation(s) in {root}",
+        outcome.violations
     );
     Ok(())
 }
 
 fn cmd_runtime_check() -> Result<()> {
-    let rt = gps_select::runtime::Runtime::load(&gps_select::runtime::Runtime::default_dir())?;
-    println!("runtime       : {}", rt.platform());
-    println!("manifest      : {:?}", rt.manifest);
-    let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
-    let sums = gps_select::runtime::moments::power_sums(&rt, &xs)?;
-    println!("moments check : Σx = {} (expect 5050)", sums.s1);
-    ensure!(sums.s1 == 5050.0, "moments kernel mismatch");
-    println!("runtime OK");
+    print!("{}", app::runtime_check_report()?);
     Ok(())
 }

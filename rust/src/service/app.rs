@@ -1,0 +1,786 @@
+//! The typed application layer: every `repro` subcommand body as a
+//! reusable API.
+//!
+//! Each `*_report` function takes a typed spec (no `Args` in sight),
+//! performs the work and returns **exactly the bytes the subcommand
+//! prints to stdout** — the binary's dispatch shrinks to flag parsing
+//! plus `print!`. The same functions are what the selection daemon and
+//! the integration tests call, so CLI behaviour and served behaviour
+//! cannot drift apart.
+//!
+//! Model loading is centralized here behind a process-wide cache keyed
+//! by artifact path and validated by content fingerprint
+//! ([`load_model`]): repeated `repro select` calls in one process and
+//! the daemon share one load path, and a cache hit is only served while
+//! the on-disk bytes still hash to the cached fingerprint. The daemon's
+//! hot-reload sits on top as [`ModelHandle`] — a swap-safe slot whose
+//! [`ModelHandle::reload_if_changed`] never drops the serving model on
+//! a stale or corrupt replacement artifact.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+
+use crate::algorithms::Algorithm;
+use crate::analyzer;
+use crate::dataset::logs::LogStore;
+use crate::engine::cost::ClusterConfig;
+use crate::engine::ExecutionMode;
+use crate::etrm::{store as model_store, Etrm};
+use crate::eval::{figures, pipeline};
+use crate::features::{DataFeatures, TaskFeatures};
+use crate::graph::datasets::DatasetSpec;
+use crate::graph::Graph;
+use crate::ml::mlp::MlpParams;
+use crate::ml::Label;
+use crate::partition::metrics::PartitionMetrics;
+use crate::partition::Strategy;
+use crate::util::error::{bail, ensure, Context, Result};
+use crate::util::fsio;
+use crate::util::pool;
+
+// ------------------------------------------------------------ graph / task
+
+/// A dataset to materialize: Table 5 alias plus the (scale, seed) that
+/// make the build deterministic.
+pub struct GraphSpec {
+    pub name: String,
+    pub scale: f64,
+    pub seed: u64,
+}
+
+impl GraphSpec {
+    pub fn build(&self) -> Result<Graph> {
+        let spec = DatasetSpec::by_name(&self.name)
+            .with_context(|| format!("unknown graph {:?} (see Table 5 aliases)", self.name))?;
+        Ok(spec.build(self.scale, self.seed))
+    }
+}
+
+/// Extract one task's features exactly as the selection service does:
+/// build the dataset at (scale, seed), sweep the data features, analyze
+/// the pseudo-code. Returns canonical (graph, algorithm) names so the
+/// train-side probe and the select side render byte-identical headers.
+pub fn probe_task(
+    graph: &str,
+    algorithm: &str,
+    scale: f64,
+    seed: u64,
+) -> Result<(String, String, TaskFeatures)> {
+    let spec = DatasetSpec::by_name(graph)
+        .with_context(|| format!("unknown graph {graph:?} (see Table 5 aliases)"))?;
+    let algo = Algorithm::by_name(algorithm)
+        .with_context(|| format!("unknown algorithm {algorithm:?} (AID AOD PR GC APCN TC CC RW)"))?;
+    let g = spec.build(scale, seed);
+    let task = TaskFeatures::extract(&g, algo.pseudo_code())?;
+    Ok((g.name.clone(), algo.name().to_string(), task))
+}
+
+/// Resolve algorithm names and assemble one task per algorithm over a
+/// shared data-feature sweep (the graph sweep runs once; every
+/// algorithm task reuses it).
+pub fn algorithm_tasks(g: &Graph, names: &[&str]) -> Result<(Vec<Algorithm>, Vec<TaskFeatures>)> {
+    let mut algos = Vec::new();
+    for name in names {
+        algos.push(
+            Algorithm::by_name(name)
+                .with_context(|| format!("unknown algorithm {name:?} in --algorithm"))?,
+        );
+    }
+    let data = DataFeatures::of(g);
+    let mut tasks = Vec::with_capacity(algos.len());
+    for a in &algos {
+        tasks.push(TaskFeatures::from_parts(data, &analyzer::analyze(a.pseudo_code())?));
+    }
+    Ok((algos, tasks))
+}
+
+// ----------------------------------------------------------- model loading
+
+/// A parsed model artifact plus the content fingerprint of the exact
+/// bytes it was parsed from ([`model_store::load_with_fingerprint`]).
+pub struct LoadedModel {
+    pub etrm: Etrm,
+    pub fingerprint: u64,
+}
+
+fn model_cache() -> &'static Mutex<BTreeMap<PathBuf, Arc<LoadedModel>>> {
+    static CACHE: OnceLock<Mutex<BTreeMap<PathBuf, Arc<LoadedModel>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Load a model artifact through the process-wide cache. The cheap
+/// fingerprint probe runs on every call, so a cache hit is only served
+/// while the on-disk bytes are unchanged — a swapped artifact is
+/// re-parsed, never served stale.
+pub fn load_model(path: &Path) -> Result<Arc<LoadedModel>> {
+    let probe = model_store::probe_fingerprint(path)?;
+    let mut cache = model_cache().lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(hit) = cache.get(path) {
+        if hit.fingerprint == probe {
+            return Ok(Arc::clone(hit));
+        }
+    }
+    let (etrm, fingerprint) = model_store::load_with_fingerprint(path)?;
+    let loaded = Arc::new(LoadedModel { etrm, fingerprint });
+    cache.insert(path.to_path_buf(), Arc::clone(&loaded));
+    Ok(loaded)
+}
+
+fn require_label(model: &LoadedModel, path: &Path, expect: Option<Label>) -> Result<()> {
+    if let Some(want) = expect {
+        ensure!(
+            model.etrm.label == want,
+            "model artifact {} was trained on the {} label channel, but {} was requested — \
+             retrain with --label {}",
+            path.display(),
+            model.etrm.label.name(),
+            want.name(),
+            want.name()
+        );
+    }
+    Ok(())
+}
+
+/// [`load_model`] plus the `--label` demand of `repro select`: a
+/// channel mismatch is a clear error, never a silently wrong unit.
+pub fn load_model_expecting(path: &Path, expect: Option<Label>) -> Result<Arc<LoadedModel>> {
+    let model = load_model(path)?;
+    require_label(&model, path, expect)?;
+    Ok(model)
+}
+
+/// Outcome of a [`ModelHandle::reload_if_changed`] probe.
+#[derive(Debug)]
+pub enum Reload {
+    /// On-disk fingerprint equals the serving model's — no work.
+    Unchanged,
+    /// A new artifact generation was parsed, validated and swapped in.
+    Reloaded { from: u64, to: u64 },
+    /// The on-disk artifact is unreadable, corrupt or violates the
+    /// label demand; the previously loaded model keeps serving.
+    Rejected { error: String },
+}
+
+/// A swap-safe handle on one artifact path: readers take a cheap
+/// atomic snapshot ([`ModelHandle::current`]), the reload probe swaps
+/// in new generations without ever letting a bad artifact displace the
+/// serving model.
+pub struct ModelHandle {
+    path: PathBuf,
+    expect: Option<Label>,
+    slot: RwLock<Arc<LoadedModel>>,
+}
+
+impl ModelHandle {
+    /// Open a handle, loading (or cache-hitting) the artifact once.
+    pub fn open(path: &Path, expect: Option<Label>) -> Result<ModelHandle> {
+        let model = load_model_expecting(path, expect)?;
+        Ok(ModelHandle { path: path.to_path_buf(), expect, slot: RwLock::new(model) })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Snapshot the serving model. The `Arc` keeps a generation alive
+    /// for as long as any request still computes against it, so a
+    /// reload never changes answers mid-batch.
+    pub fn current(&self) -> Arc<LoadedModel> {
+        let guard = self.slot.read().unwrap_or_else(|e| e.into_inner());
+        Arc::clone(&*guard)
+    }
+
+    /// Probe the artifact's on-disk fingerprint and swap in a new
+    /// generation if it changed. Every failure path — unreadable file,
+    /// checksum mismatch, schema drift, label mismatch — returns
+    /// [`Reload::Rejected`] and leaves the serving model untouched.
+    pub fn reload_if_changed(&self) -> Reload {
+        let served = self.current();
+        let probe = match model_store::probe_fingerprint(&self.path) {
+            Ok(fp) => fp,
+            Err(e) => return Reload::Rejected { error: e.to_string() },
+        };
+        if probe == served.fingerprint {
+            return Reload::Unchanged;
+        }
+        let fresh = match load_model_expecting(&self.path, self.expect) {
+            Ok(m) => m,
+            Err(e) => return Reload::Rejected { error: e.to_string() },
+        };
+        // the file may change again between probe and parse; what
+        // counts is the fingerprint of the bytes actually parsed
+        if fresh.fingerprint == served.fingerprint {
+            return Reload::Unchanged;
+        }
+        let from = served.fingerprint;
+        let to = fresh.fingerprint;
+        *self.slot.write().unwrap_or_else(|e| e.into_inner()) = fresh;
+        Reload::Reloaded { from, to }
+    }
+}
+
+// -------------------------------------------------------------- selection
+
+/// A batched selection, optionally with the full prediction tables.
+pub struct Selection {
+    /// One selected strategy per task.
+    pub picks: Vec<Strategy>,
+    /// With `want_predictions`: per task, `predict_all` output in
+    /// inventory order.
+    pub predictions: Option<Vec<Vec<(Strategy, f64)>>>,
+}
+
+/// Run the batched selector. When the caller also wants the prediction
+/// tables (CLI display, probe bits, daemon replies), the picks are
+/// derived from the *same* table via [`Etrm::select_from`], so the
+/// reported argmin and the reported predictions can never disagree.
+pub fn select_with_predictions(
+    etrm: &Etrm,
+    tasks: &[TaskFeatures],
+    threads: usize,
+    want_predictions: bool,
+) -> Selection {
+    if want_predictions {
+        let predictions = pool::parallel_map(pool::resolve_threads(threads), tasks.len(), |i| {
+            etrm.predict_all(&tasks[i])
+        });
+        let picks = predictions.iter().map(|table| Etrm::select_from(table)).collect();
+        Selection { picks, predictions: Some(predictions) }
+    } else {
+        Selection { picks: etrm.select_batch(tasks, threads), predictions: None }
+    }
+}
+
+/// Everything `repro select` needs, parsed.
+pub struct SelectSpec {
+    pub model: PathBuf,
+    /// `--label`: a *demand* on the loaded artifact, not a default.
+    pub expect: Option<Label>,
+    pub graph: GraphSpec,
+    pub algorithms: Vec<String>,
+    pub threads: usize,
+    pub bits_out: Option<PathBuf>,
+}
+
+/// The `repro select` body: cached model load, shared feature sweep,
+/// batched selection, prediction table per task.
+pub fn select_report(spec: &SelectSpec) -> Result<String> {
+    let model = load_model_expecting(&spec.model, spec.expect)?;
+    let g = spec.graph.build()?;
+    let names: Vec<&str> = spec.algorithms.iter().map(|s| s.as_str()).collect();
+    let (algos, tasks) = algorithm_tasks(&g, &names)?;
+    let sel = select_with_predictions(&model.etrm, &tasks, spec.threads, true);
+    let tables = sel.predictions.as_ref().ok_or_else(|| crate::err!("predictions requested"))?;
+    let mut out = String::new();
+    writeln!(
+        out,
+        "model {} ({} backend, {} label), {} task(s) on {}",
+        spec.model.display(),
+        model.etrm.backend.name(),
+        model.etrm.label.name(),
+        tasks.len(),
+        g.name
+    )
+    .unwrap();
+    for ((a, table), pick) in algos.iter().zip(tables).zip(&sel.picks) {
+        writeln!(out, "task {}/{}:", g.name, a.name()).unwrap();
+        for (s, t) in table {
+            let marker = if s == pick { "  ← selected" } else { "" };
+            writeln!(out, "  {:<8} {t:>14.6}{marker}", s.name()).unwrap();
+        }
+    }
+    if let Some(path) = &spec.bits_out {
+        let mut bits = String::new();
+        for (a, table) in algos.iter().zip(tables) {
+            bits.push_str(&model_store::prediction_bits_from(
+                model.etrm.backend.name(),
+                model.etrm.label.name(),
+                &g.name,
+                a.name(),
+                table,
+            ));
+        }
+        fsio::write_atomic(path, bits.as_bytes())?;
+        writeln!(out, "prediction bit patterns written to {}", path.display()).unwrap();
+    }
+    Ok(out)
+}
+
+// --------------------------------------------------------------- training
+
+/// The train-side probe: extract one task and write the in-memory
+/// model's prediction bits for the save→load round-trip gate.
+pub struct ProbeSpec {
+    pub graph: String,
+    pub algorithm: String,
+    pub bits_out: PathBuf,
+}
+
+/// Everything `repro train` needs beyond the pipeline config.
+pub struct TrainSpec {
+    pub backend: String,
+    pub lambda: f64,
+    pub mlp: MlpParams,
+    pub model_out: PathBuf,
+    pub probe: Option<ProbeSpec>,
+}
+
+/// The `repro train` body: build (or resume) the corpus, augment,
+/// train the chosen backend on the chosen label channel and persist
+/// the model as a checksummed artifact.
+pub fn train_report(
+    config: &pipeline::PipelineConfig,
+    spec: &TrainSpec,
+    progress: &mut impl FnMut(&str),
+) -> Result<String> {
+    let set = pipeline::build_training_set(config, progress)?;
+    progress(&format!(
+        "training {} ETRM on {} synthetic tuples ({} label)",
+        spec.backend,
+        set.synthetic.len(),
+        config.label.name()
+    ));
+    let etrm = match spec.backend.as_str() {
+        "gbdt" => Etrm::train_gbdt(&set.synthetic, config.gbdt, config.label),
+        "ridge" => Etrm::train_ridge(&set.synthetic, spec.lambda, config.label),
+        "mlp" => Etrm::train_mlp(&set.synthetic, spec.mlp, config.label),
+        other => bail!("unknown --backend {other:?} (gbdt|ridge|mlp)"),
+    };
+    model_store::save(&etrm, &spec.model_out)?;
+    let mut out = String::new();
+    writeln!(
+        out,
+        "wrote {} model ({} label, trained on {} tuples) to {}",
+        spec.backend,
+        config.label.name(),
+        set.synthetic.len(),
+        spec.model_out.display()
+    )
+    .unwrap();
+    if let Some(probe) = &spec.probe {
+        let (graph, algorithm, task) =
+            probe_task(&probe.graph, &probe.algorithm, config.scale, config.seed)?;
+        let bits = model_store::prediction_bits(&etrm, &graph, &algorithm, &task);
+        fsio::write_atomic(&probe.bits_out, bits.as_bytes())?;
+        writeln!(
+            out,
+            "probe predictions ({graph}/{algorithm}) written to {}",
+            probe.bits_out.display()
+        )
+        .unwrap();
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------ figures / pipeline
+
+/// The `repro figures` body. `table2` and `fig4` skip the trained
+/// pipeline entirely.
+pub fn figures_report(
+    config: pipeline::PipelineConfig,
+    id: &str,
+    progress: impl FnMut(&str),
+) -> Result<String> {
+    if id == "table2" {
+        return Ok(format!("{}\n", figures::table2()));
+    }
+    if id == "fig4" {
+        return Ok(format!("{}\n", figures::fig4(config.scale, config.seed)?));
+    }
+    let eval = pipeline::run_with_progress(config, progress)?;
+    let render = |id: &str, eval: &pipeline::Evaluation| -> Result<String> {
+        Ok(match id {
+            "fig1" => figures::fig1(eval),
+            "fig4" => figures::fig4(eval.config.scale, eval.config.seed)?,
+            "table2" => figures::table2(),
+            "table3" => figures::table3(eval)?,
+            "table4" => figures::table4(eval)?,
+            "fig6" => figures::fig6(eval),
+            "fig7" => figures::fig7(eval),
+            "table6" => figures::table6(eval),
+            "fig8" => figures::fig8(eval),
+            "table7" => figures::table7(eval),
+            other => bail!("unknown figure id {other:?}"),
+        })
+    };
+    if id == "all" {
+        let mut out = String::new();
+        for id in [
+            "fig1", "fig4", "table2", "table3", "table4", "fig6", "fig7", "table6", "fig8",
+            "table7",
+        ] {
+            writeln!(out, "{}\n", render(id, &eval)?).unwrap();
+        }
+        Ok(out)
+    } else {
+        Ok(format!("{}\n", render(id, &eval)?))
+    }
+}
+
+/// The `repro pipeline` body: corpus → augmentation → training →
+/// evaluation, headline summary against the paper's numbers.
+pub fn pipeline_report(
+    config: pipeline::PipelineConfig,
+    save_csv: Option<&Path>,
+    progress: impl FnMut(&str),
+) -> Result<String> {
+    let eval = pipeline::run_with_progress(config, progress)?;
+    let all: Vec<&pipeline::TaskEval> = eval.tasks.iter().collect();
+    let (best, worst, avg) = pipeline::Evaluation::mean_scores(&all);
+    let rank1 = all.iter().filter(|t| t.rank == 1).count() as f64 / all.len() as f64;
+    let rank4 = all.iter().filter(|t| t.rank <= 4).count() as f64 / all.len() as f64;
+    let mut out = String::new();
+    writeln!(out, "pipeline summary").unwrap();
+    writeln!(out, "  corpus logs        : {}", eval.store.logs.len()).unwrap();
+    writeln!(out, "  synthetic tuples   : {}", eval.synthetic_count).unwrap();
+    writeln!(out, "  test tasks         : {}", eval.tasks.len()).unwrap();
+    writeln!(out, "  Score_best (mean)  : {best:.4}   (paper: 0.9458)").unwrap();
+    writeln!(out, "  Score_worst (mean) : {worst:.4}   (paper: 2.0770)").unwrap();
+    writeln!(out, "  Score_avg (mean)   : {avg:.4}   (paper: 1.4558)").unwrap();
+    writeln!(out, "  best-pick ratio    : {rank1:.2}     (paper: 0.52)").unwrap();
+    writeln!(out, "  within-rank-4 ratio: {rank4:.2}     (paper: 0.92)").unwrap();
+    if let Some(path) = save_csv {
+        eval.store.save_csv(path)?;
+        writeln!(out, "  corpus saved       : {}", path.display()).unwrap();
+    }
+    Ok(out)
+}
+
+// -------------------------------------------------- run / partition / etc.
+
+/// Everything `repro run` needs, parsed.
+pub struct RunSpec {
+    pub graph: GraphSpec,
+    pub algorithm: String,
+    pub strategy: String,
+    pub workers: usize,
+    pub mode: ExecutionMode,
+}
+
+/// The `repro run` body: execute one task on the engine and report the
+/// simulated time breakdown.
+pub fn run_report(spec: &RunSpec) -> Result<String> {
+    let g = spec.graph.build()?;
+    let algo = Algorithm::by_name(&spec.algorithm)
+        .context("unknown --algorithm (AID AOD PR GC APCN TC CC RW)")?;
+    let strategy =
+        Strategy::by_name(&spec.strategy).context("unknown --strategy (see table2)")?;
+    let cfg = ClusterConfig::with_workers(spec.workers);
+    let p = strategy.partition(&g, spec.workers);
+    // try_execute: a socket-backend failure (worker spawn, wire IO)
+    // surfaces as a clean CLI error instead of a panic
+    let outcome = algo.try_execute(&g, &p, &cfg, spec.mode)?;
+    let mut out = String::new();
+    writeln!(
+        out,
+        "task {}/{} under {} on {} workers (|V|={}, |E|={}, {} engine)",
+        g.name,
+        algo.name(),
+        strategy.name(),
+        spec.workers,
+        g.num_vertices(),
+        g.num_edges(),
+        spec.mode.name()
+    )
+    .unwrap();
+    writeln!(out, "  simulated time : {:.6} s", outcome.sim.total).unwrap();
+    writeln!(out, "    compute      : {:.6} s", outcome.sim.compute).unwrap();
+    writeln!(out, "    comm         : {:.6} s", outcome.sim.comm).unwrap();
+    writeln!(out, "    overhead     : {:.6} s", outcome.sim.overhead).unwrap();
+    writeln!(
+        out,
+        "  wall clock     : {:.3} ms (measured at the coordinator)",
+        outcome.wall_clock_ms
+    )
+    .unwrap();
+    writeln!(out, "  supersteps     : {}", outcome.ops.supersteps).unwrap();
+    writeln!(out, "  gathers        : {}", outcome.ops.gathers).unwrap();
+    writeln!(out, "  messages       : {}", outcome.ops.messages).unwrap();
+    writeln!(out, "  bytes          : {}", outcome.ops.bytes).unwrap();
+    writeln!(out, "  checksum       : {:.6}", outcome.checksum).unwrap();
+    Ok(out)
+}
+
+/// The `repro partition` body: partition-quality metrics for every
+/// strategy.
+pub fn partition_report(graph: &GraphSpec, workers: usize) -> Result<String> {
+    let g = graph.build()?;
+    let mut out = String::new();
+    writeln!(
+        out,
+        "partition metrics for {} (|V|={}, |E|={}) on {workers} workers",
+        g.name,
+        g.num_vertices(),
+        g.num_edges()
+    )
+    .unwrap();
+    let mut t = crate::util::table::Table::new(vec![
+        "strategy",
+        "replication",
+        "edge balance",
+        "vertex balance",
+        "workers used",
+    ]);
+    for s in Strategy::all() {
+        let p = s.partition(&g, workers);
+        let m = PartitionMetrics::of(&g, &p);
+        t.row(vec![
+            s.name().into_owned(),
+            format!("{:.3}", m.replication_factor),
+            format!("{:.3}", m.edge_balance),
+            format!("{:.3}", m.vertex_balance),
+            format!("{}", m.workers_used),
+        ]);
+    }
+    writeln!(out, "{}", t.render()).unwrap();
+    Ok(out)
+}
+
+/// The `repro features` body: the extracted task features (Fig 2
+/// steps 1-2).
+pub fn features_report(graph: &GraphSpec, algorithm: &str) -> Result<String> {
+    let g = graph.build()?;
+    let algo = Algorithm::by_name(algorithm).context("unknown --algorithm")?;
+    let tf = TaskFeatures::extract(&g, algo.pseudo_code())?;
+    let mut out = String::new();
+    writeln!(out, "data features ({}):", g.name).unwrap();
+    let d = &tf.data;
+    writeln!(out, "  |V| = {}  |E| = {}  directed = {}", d.num_vertices, d.num_edges, d.directed)
+        .unwrap();
+    for (label, m) in [("in-degree", d.in_deg), ("out-degree", d.out_deg)] {
+        writeln!(
+            out,
+            "  {label}: mean={:.3} std={:.3} skew={:.3} kurt={:.3}",
+            m.mean, m.std, m.skewness, m.kurtosis
+        )
+        .unwrap();
+    }
+    writeln!(out, "algorithm features ({}):", algo.name()).unwrap();
+    for (k, v) in analyzer::OpKey::all().iter().zip(tf.algo.iter()) {
+        if *v != 0.0 {
+            writeln!(out, "  {:<22} {v:.1}", k.name()).unwrap();
+        }
+    }
+    Ok(out)
+}
+
+/// Everything `repro analyze` needs, parsed: the pseudo-code source
+/// and an optional graph to evaluate the symbolic counts against.
+pub struct AnalyzeSpec {
+    pub source: String,
+    pub graph: Option<GraphSpec>,
+}
+
+/// The `repro analyze` body: symbolic operation counts (Listing 2).
+pub fn analyze_report(spec: &AnalyzeSpec) -> Result<String> {
+    let counts = analyzer::analyze(&spec.source)?;
+    let mut out = String::new();
+    writeln!(out, "symbolic operation counts (Listing 2 form):").unwrap();
+    for (k, e) in &counts.counts {
+        writeln!(out, "  {:<22} {}", k.name(), e.render()).unwrap();
+    }
+    if let Some(graph) = &spec.graph {
+        let g = graph.build()?;
+        let env = DataFeatures::of(&g).sym_env();
+        writeln!(out, "evaluated against {}:", graph.name).unwrap();
+        for (k, v) in counts.evaluate(&env) {
+            if v != 0.0 {
+                writeln!(out, "  {:<22} {v:.1}", k.name()).unwrap();
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// The `repro logs --limit-graphs` body: checkpoint the first `limit`
+/// corpus graphs, then stop (a later run without the limit resumes).
+pub fn logs_checkpoint_report(config: &pipeline::PipelineConfig, limit: usize) -> Result<String> {
+    let cfg = ClusterConfig::with_workers(config.workers);
+    let threads = pool::resolve_threads(config.threads);
+    let dir = config
+        .checkpoint_dir
+        .as_deref()
+        .context("--limit-graphs requires --checkpoint-dir (or GPS_CHECKPOINT_DIR)")?;
+    let done = LogStore::checkpoint_prefix(
+        config.scale,
+        config.seed,
+        &cfg,
+        threads,
+        config.engine_mode,
+        dir,
+        limit,
+    )?;
+    Ok(format!(
+        "checkpointed {done}/{} corpus graphs in {} (re-run without --limit-graphs to resume)\n",
+        crate::graph::datasets::CORPUS.len(),
+        dir.display()
+    ))
+}
+
+/// The `repro logs` body: build (and checkpoint) the full corpus and
+/// save it as CSV.
+pub fn logs_report(config: &pipeline::PipelineConfig, out_path: &Path) -> Result<String> {
+    let cfg = ClusterConfig::with_workers(config.workers);
+    let threads = pool::resolve_threads(config.threads);
+    let store = LogStore::build_corpus_checkpointed(
+        config.scale,
+        config.seed,
+        &cfg,
+        threads,
+        config.engine_mode,
+        config.checkpoint_dir.as_deref(),
+    )?;
+    store.save_csv(out_path)?;
+    Ok(format!(
+        "wrote {} execution logs to {} ({threads} threads, {} engine)\n",
+        store.logs.len(),
+        out_path.display(),
+        config.engine_mode.name()
+    ))
+}
+
+/// Default audit scan root: works from the repo root and from `rust/`.
+pub fn default_audit_root() -> String {
+    if Path::new("rust/src").is_dir() {
+        "rust/src".to_string()
+    } else {
+        "src".to_string()
+    }
+}
+
+/// Result of the `repro audit` body: the rendered report plus the
+/// violation count — the caller prints the text *before* gating on
+/// the count, so a failing audit still shows its findings.
+pub struct AuditOutcome {
+    pub text: String,
+    pub violations: usize,
+}
+
+/// The `repro audit` body: run the static determinism linter over a
+/// source tree (the CI gate).
+pub fn audit_report(root: &Path, budget: usize, json_out: Option<&Path>) -> Result<AuditOutcome> {
+    let report = crate::audit::audit_tree_with_budget(root, budget)?;
+    let mut out = String::new();
+    if let Some(path) = json_out {
+        fsio::write_atomic(path, report.to_json().as_bytes())?;
+        writeln!(out, "audit report written to {}", path.display()).unwrap();
+    }
+    out.push_str(&report.render_text());
+    Ok(AuditOutcome { text: out, violations: report.violations.len() })
+}
+
+/// The `repro runtime-check` body: load the AOT artifact manifest and
+/// smoke-test the runtime kernels.
+pub fn runtime_check_report() -> Result<String> {
+    let rt = crate::runtime::Runtime::load(&crate::runtime::Runtime::default_dir())?;
+    let mut out = String::new();
+    writeln!(out, "runtime       : {}", rt.platform()).unwrap();
+    writeln!(out, "manifest      : {:?}", rt.manifest).unwrap();
+    let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+    let sums = crate::runtime::moments::power_sums(&rt, &xs)?;
+    writeln!(out, "moments check : Σx = {} (expect 5050)", sums.s1).unwrap();
+    ensure!(sums.s1 == 5050.0, "moments kernel mismatch");
+    writeln!(out, "runtime OK").unwrap();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::linear::Ridge;
+    use crate::features::FEATURE_DIM;
+
+    /// A deterministic hand-crafted ridge model whose argmin is the
+    /// inventory strategy at one-hot column `favorite`.
+    fn favoring_etrm(favorite: usize) -> Etrm {
+        let mut weights = vec![0.0; FEATURE_DIM + 1];
+        // the strategy one-hot block sits before the 4 family-flag
+        // columns; see the features::encoding layout table
+        let onehot_base = FEATURE_DIM - 4 - Strategy::INVENTORY.len();
+        weights[onehot_base + favorite] = -1.0;
+        Etrm {
+            backend: crate::etrm::EtrmBackend::Ridge(Ridge { weights, log_target: false }),
+            label: Label::SimTime,
+        }
+    }
+
+    #[test]
+    fn model_cache_hits_and_invalidates_on_rewrite() {
+        let dir = std::env::temp_dir().join(format!("gps-app-cache-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.etrm");
+        model_store::save(&favoring_etrm(2), &path).unwrap();
+        let a = load_model(&path).unwrap();
+        let b = load_model(&path).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "unchanged artifact must cache-hit");
+        model_store::save(&favoring_etrm(5), &path).unwrap();
+        let c = load_model(&path).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c), "rewritten artifact must reload");
+        assert_ne!(a.fingerprint, c.fingerprint);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn model_handle_swaps_and_survives_corruption() {
+        let dir = std::env::temp_dir().join(format!("gps-app-handle-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("handle.etrm");
+        model_store::save(&favoring_etrm(1), &path).unwrap();
+        let handle = ModelHandle::open(&path, Some(Label::SimTime)).unwrap();
+        let first = handle.current();
+        assert!(matches!(handle.reload_if_changed(), Reload::Unchanged));
+
+        // corrupt swap: the serving model must survive
+        fsio::write_atomic(&path, b"gps-etrm v1\ngarbage\n").unwrap();
+        match handle.reload_if_changed() {
+            Reload::Rejected { error } => assert!(!error.is_empty()),
+            other => panic!("corrupt artifact must be rejected, got {other:?}"),
+        }
+        assert!(Arc::ptr_eq(&first, &handle.current()), "old model keeps serving");
+
+        // label-mismatch swap is rejected too
+        let wrong = Etrm { label: Label::WallClock, ..favoring_etrm(3) };
+        model_store::save(&wrong, &path).unwrap();
+        assert!(matches!(handle.reload_if_changed(), Reload::Rejected { .. }));
+        assert!(Arc::ptr_eq(&first, &handle.current()));
+
+        // a valid new generation swaps in
+        model_store::save(&favoring_etrm(3), &path).unwrap();
+        match handle.reload_if_changed() {
+            Reload::Reloaded { from, to } => {
+                assert_eq!(from, first.fingerprint);
+                assert_ne!(from, to);
+            }
+            other => panic!("valid swap must reload, got {other:?}"),
+        }
+        let now = handle.current();
+        assert!(!Arc::ptr_eq(&first, &now));
+        let task = crate::features::zeroed_task();
+        assert_eq!(now.etrm.select(&task), Strategy::INVENTORY[3]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn selection_picks_agree_with_select_batch() {
+        let etrm = favoring_etrm(4);
+        let mut tasks = vec![crate::features::zeroed_task(); 3];
+        tasks[1].data.num_edges = 10.0;
+        tasks[2].algo[0] = 2.0;
+        let with = select_with_predictions(&etrm, &tasks, 1, true);
+        let without = select_with_predictions(&etrm, &tasks, 1, false);
+        assert_eq!(with.picks, without.picks);
+        assert_eq!(with.picks, vec![Strategy::INVENTORY[4]; 3]);
+        let tables = with.predictions.unwrap();
+        assert_eq!(tables.len(), 3);
+        for (table, task) in tables.iter().zip(&tasks) {
+            let direct = etrm.predict_all(task);
+            for ((s1, t1), (s2, t2)) in table.iter().zip(&direct) {
+                assert_eq!(s1, s2);
+                assert_eq!(t1.to_bits(), t2.to_bits());
+            }
+        }
+        assert!(without.predictions.is_none());
+    }
+}

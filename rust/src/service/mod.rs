@@ -1,0 +1,19 @@
+//! The reusable service layer behind the `repro` CLI — and the
+//! always-on selection daemon built on top of it.
+//!
+//! The binary's job shrinks to flag parsing: every subcommand body
+//! lives here as a typed API ([`app`]) that returns its report as a
+//! `String`, so the same train/select/audit logic is callable from the
+//! CLI, from tests, and from the long-running daemon without going
+//! through `std::process`. On top of that sit the daemon's two halves:
+//!
+//! * [`proto`] — the selection service's wire protocol: checksummed
+//!   length-prefixed frames in the [`crate::engine::wire`] conventions
+//!   (f64s as exact bit patterns), plus the blocking [`proto::Client`].
+//! * [`serve`] — the TCP daemon itself: concurrent connections,
+//!   request coalescing into [`crate::etrm::Etrm::select_batch`],
+//!   fingerprint-probed hot model reload and drain-then-exit shutdown.
+
+pub mod app;
+pub mod proto;
+pub mod serve;

@@ -1,0 +1,534 @@
+//! The selection service's wire protocol.
+//!
+//! Every exchange is one checksummed frame in the
+//! [`crate::engine::wire`] conventions — `[len: u32][kind: u8][payload]
+//! [checksum: u64]`, little-endian, FNV-1a over kind + payload — and
+//! every `f64` travels as its exact bit pattern, so a daemon answer
+//! decodes to the identical bits the model computed
+//! (`tests/serve_protocol.rs` pins daemon ≡ offline `repro select`).
+//!
+//! Service frame kinds live in their own `0x2_` block, disjoint from
+//! the engine's worker protocol (kinds 1–8), so a client that
+//! accidentally dials an engine worker desyncs immediately instead of
+//! half-parsing.
+//!
+//! A `SELECT` request carries `[flags: u8][n: u16]` then `n` task
+//! images of [`TASK_WIRE_DIM`] raw f64 bit patterns each (the
+//! [`crate::features::task_to_values`] layout). The `SELECT_OK` reply
+//! carries `[flags: u8][fingerprint: u64][backend: str][label: str]
+//! [n: u16]`, the `n` selected strategy ids, and — when the request
+//! set [`FLAG_WANT_BITS`] — the full `n ×` inventory prediction table,
+//! enough for the client to render the byte-identical
+//! [`store::prediction_bits_from`] probe text without holding the
+//! model. Malformed payloads decode to an error, never a panic: the
+//! daemon answers with a [`FRAME_ERR`] frame or drops the connection.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::engine::wire::{self, put_f64, put_str, put_u16, put_u64, Reader};
+use crate::etrm::store;
+use crate::features::{task_from_values, task_to_values, zeroed_task, TaskFeatures, TASK_WIRE_DIM};
+use crate::partition::Strategy;
+use crate::util::error::{bail, ensure, Context, Result};
+
+/// Frame kinds of the client ↔ selection-daemon protocol.
+pub const FRAME_SELECT: u8 = 0x21;
+pub const FRAME_SELECT_OK: u8 = 0x22;
+pub const FRAME_PING: u8 = 0x23;
+pub const FRAME_PONG: u8 = 0x24;
+pub const FRAME_RELOAD: u8 = 0x25;
+pub const FRAME_RELOAD_OK: u8 = 0x26;
+pub const FRAME_SHUTDOWN: u8 = 0x27;
+pub const FRAME_SHUTDOWN_OK: u8 = 0x28;
+pub const FRAME_ERR: u8 = 0x2F;
+
+/// `SELECT` flag: ship the full prediction table back, not just the
+/// argmin picks (what the probe-bits round trip needs).
+pub const FLAG_WANT_BITS: u8 = 1;
+
+/// Upper bound on tasks per request — a corrupted count must not make
+/// the daemon stage a pathological batch.
+pub const MAX_TASKS_PER_REQUEST: usize = 4096;
+
+// ---------------------------------------------------------------- requests
+
+/// Per-connection reusable decode state: one scratch value image and
+/// the task buffer requests decode into. Tasks are overwritten in
+/// place across requests, so a connection issuing thousands of selects
+/// allocates its feature storage once.
+pub struct RequestScratch {
+    vals: [f64; TASK_WIRE_DIM],
+    /// The decoded tasks of the most recent request.
+    pub tasks: Vec<TaskFeatures>,
+}
+
+impl RequestScratch {
+    pub fn new() -> Self {
+        RequestScratch { vals: [0.0; TASK_WIRE_DIM], tasks: Vec::new() }
+    }
+}
+
+impl Default for RequestScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Serialize a `SELECT` request payload.
+pub fn encode_select_request(tasks: &[TaskFeatures], want_bits: bool) -> Vec<u8> {
+    debug_assert!(!tasks.is_empty() && tasks.len() <= MAX_TASKS_PER_REQUEST);
+    let mut out = Vec::with_capacity(3 + tasks.len() * TASK_WIRE_DIM * 8);
+    out.push(if want_bits { FLAG_WANT_BITS } else { 0 });
+    put_u16(&mut out, tasks.len() as u16);
+    let mut vals = [0.0; TASK_WIRE_DIM];
+    for task in tasks {
+        task_to_values(task, &mut vals);
+        for &v in &vals {
+            put_f64(&mut out, v);
+        }
+    }
+    out
+}
+
+/// Decode a `SELECT` request into `scratch.tasks` (reusing its
+/// buffers) and return whether the client asked for prediction bits.
+/// Every failure is a clean error the daemon converts into a
+/// [`FRAME_ERR`] reply.
+pub fn decode_select_request(payload: &[u8], scratch: &mut RequestScratch) -> Result<bool> {
+    let mut r = Reader::new(payload);
+    let flags = r.u8()?;
+    ensure!(flags & !FLAG_WANT_BITS == 0, "unknown select request flags {flags:#04x}");
+    let n = r.u16()? as usize;
+    ensure!(
+        (1..=MAX_TASKS_PER_REQUEST).contains(&n),
+        "select request carries {n} tasks (limit {MAX_TASKS_PER_REQUEST})"
+    );
+    for i in 0..n {
+        for slot in scratch.vals.iter_mut() {
+            *slot = r.f64_bits()?;
+        }
+        if i == scratch.tasks.len() {
+            scratch.tasks.push(zeroed_task());
+        }
+        task_from_values(&scratch.vals, &mut scratch.tasks[i]);
+    }
+    scratch.tasks.truncate(n);
+    r.finish()?;
+    Ok(flags & FLAG_WANT_BITS != 0)
+}
+
+// ----------------------------------------------------------------- replies
+
+/// A decoded `SELECT_OK` reply.
+pub struct SelectReply {
+    /// Fingerprint of the artifact that answered (see
+    /// [`store::probe_fingerprint`]) — lets a client assert which
+    /// model generation served a request across a hot reload.
+    pub fingerprint: u64,
+    /// Backend family name of the serving model (`gbdt`/`ridge`/`mlp`).
+    pub backend: String,
+    /// Training-label channel of the serving model.
+    pub label: String,
+    /// One selected strategy per requested task.
+    pub picks: Vec<Strategy>,
+    /// With [`FLAG_WANT_BITS`]: per task, the full prediction table in
+    /// inventory order (exact bits).
+    pub predictions: Option<Vec<Vec<f64>>>,
+}
+
+impl SelectReply {
+    /// Render the shipped prediction tables as the canonical
+    /// probe-bits text — byte-identical to what `repro select
+    /// --bits-out` writes for the same model and tasks, because both
+    /// go through [`store::prediction_bits_from`].
+    pub fn render_bits(&self, graph: &str, algorithms: &[String]) -> Result<String> {
+        let preds = self
+            .predictions
+            .as_ref()
+            .ok_or_else(|| crate::err!("reply carries no prediction table (request bits)"))?;
+        ensure!(
+            algorithms.len() == self.picks.len(),
+            "{} algorithm names for {} selected tasks",
+            algorithms.len(),
+            self.picks.len()
+        );
+        let mut out = String::new();
+        for (algo, row) in algorithms.iter().zip(preds) {
+            let table: Vec<(Strategy, f64)> =
+                Strategy::INVENTORY.iter().copied().zip(row.iter().copied()).collect();
+            out.push_str(&store::prediction_bits_from(
+                &self.backend,
+                &self.label,
+                graph,
+                algo,
+                &table,
+            ));
+        }
+        Ok(out)
+    }
+}
+
+/// Serialize a `SELECT_OK` payload. `preds` (when present) is one
+/// inventory-order prediction table per task — exactly
+/// [`crate::etrm::Etrm::predict_all`] output.
+pub fn encode_select_reply(
+    fingerprint: u64,
+    backend: &str,
+    label: &str,
+    picks: &[Strategy],
+    preds: Option<&[Vec<(Strategy, f64)>]>,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32 + picks.len() * 2);
+    out.push(if preds.is_some() { FLAG_WANT_BITS } else { 0 });
+    put_u64(&mut out, fingerprint);
+    put_str(&mut out, backend);
+    put_str(&mut out, label);
+    put_u16(&mut out, picks.len() as u16);
+    for pick in picks {
+        put_u16(&mut out, pick.psid() as u16);
+    }
+    if let Some(tables) = preds {
+        debug_assert_eq!(tables.len(), picks.len());
+        for table in tables {
+            debug_assert_eq!(table.len(), Strategy::INVENTORY.len());
+            for (_, t) in table {
+                put_f64(&mut out, *t);
+            }
+        }
+    }
+    out
+}
+
+fn strategy_by_psid(psid: u16) -> Result<Strategy> {
+    Strategy::INVENTORY
+        .iter()
+        .copied()
+        .find(|s| s.psid() == psid as usize)
+        .ok_or_else(|| crate::err!("strategy id {psid} is not in the inventory"))
+}
+
+/// Decode a `SELECT_OK` payload.
+pub fn decode_select_reply(payload: &[u8]) -> Result<SelectReply> {
+    let mut r = Reader::new(payload);
+    let flags = r.u8()?;
+    ensure!(flags & !FLAG_WANT_BITS == 0, "unknown select reply flags {flags:#04x}");
+    let fingerprint = r.u64()?;
+    let backend = r.str()?;
+    let label = r.str()?;
+    let n = r.u16()? as usize;
+    ensure!(
+        (1..=MAX_TASKS_PER_REQUEST).contains(&n),
+        "select reply carries {n} picks (limit {MAX_TASKS_PER_REQUEST})"
+    );
+    let mut picks = Vec::with_capacity(n);
+    for _ in 0..n {
+        picks.push(strategy_by_psid(r.u16()?)?);
+    }
+    let predictions = if flags & FLAG_WANT_BITS != 0 {
+        let mut tables = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut row = Vec::with_capacity(Strategy::INVENTORY.len());
+            for _ in 0..Strategy::INVENTORY.len() {
+                row.push(r.f64_bits()?);
+            }
+            tables.push(row);
+        }
+        Some(tables)
+    } else {
+        None
+    };
+    r.finish()?;
+    Ok(SelectReply { fingerprint, backend, label, picks, predictions })
+}
+
+// ------------------------------------------------------- reload / shutdown
+
+/// Outcome of a `RELOAD` request (mirrors
+/// [`crate::service::app::Reload`], flattened for the wire).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReloadStatus {
+    /// The artifact's fingerprint is unchanged; nothing happened.
+    Unchanged,
+    /// A new artifact generation was loaded and is now serving.
+    Reloaded,
+    /// The on-disk artifact is stale/corrupt; the previously loaded
+    /// model keeps serving.
+    Rejected,
+}
+
+impl ReloadStatus {
+    fn code(self) -> u8 {
+        match self {
+            ReloadStatus::Unchanged => 0,
+            ReloadStatus::Reloaded => 1,
+            ReloadStatus::Rejected => 2,
+        }
+    }
+
+    fn from_code(code: u8) -> Result<Self> {
+        Ok(match code {
+            0 => ReloadStatus::Unchanged,
+            1 => ReloadStatus::Reloaded,
+            2 => ReloadStatus::Rejected,
+            other => bail!("unknown reload status code {other}"),
+        })
+    }
+}
+
+/// A decoded `RELOAD_OK` reply.
+pub struct ReloadReply {
+    pub status: ReloadStatus,
+    /// Fingerprint of the artifact *currently serving* after the
+    /// reload attempt (the old one when rejected/unchanged).
+    pub fingerprint: u64,
+    /// Human-readable detail (the rejection error, or empty).
+    pub message: String,
+}
+
+/// Serialize a `RELOAD_OK` payload.
+pub fn encode_reload_reply(status: ReloadStatus, fingerprint: u64, message: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + message.len());
+    out.push(status.code());
+    put_u64(&mut out, fingerprint);
+    put_str(&mut out, message);
+    out
+}
+
+/// Decode a `RELOAD_OK` payload.
+pub fn decode_reload_reply(payload: &[u8]) -> Result<ReloadReply> {
+    let mut r = Reader::new(payload);
+    let status = ReloadStatus::from_code(r.u8()?)?;
+    let fingerprint = r.u64()?;
+    let message = r.str()?;
+    r.finish()?;
+    Ok(ReloadReply { status, fingerprint, message })
+}
+
+/// Serialize a `SHUTDOWN_OK` payload: the total select requests the
+/// daemon answered over its lifetime.
+pub fn encode_shutdown_reply(requests: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8);
+    put_u64(&mut out, requests);
+    out
+}
+
+/// Decode a `SHUTDOWN_OK` payload.
+pub fn decode_shutdown_reply(payload: &[u8]) -> Result<u64> {
+    let mut r = Reader::new(payload);
+    let requests = r.u64()?;
+    r.finish()?;
+    Ok(requests)
+}
+
+/// Serialize a `FRAME_ERR` payload.
+pub fn encode_err(message: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + message.len());
+    put_str(&mut out, message);
+    out
+}
+
+/// Decode a `FRAME_ERR` payload (tolerates an undecodable one).
+pub fn decode_err(payload: &[u8]) -> String {
+    let mut r = Reader::new(payload);
+    r.str().unwrap_or_else(|_| "malformed error frame".to_string())
+}
+
+// ------------------------------------------------------------------ client
+
+/// A blocking selection-service client over one TCP connection.
+///
+/// Strictly request/response: every call writes one frame and reads
+/// one frame. A [`FRAME_ERR`] answer surfaces as a clean `Err`; the
+/// connection stays usable afterwards (the daemon only drops it when
+/// the *framing* layer desyncs).
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    /// Connect to a daemon at `host:port`.
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connect to selection daemon at {addr}"))?;
+        stream.set_nodelay(true).context("set TCP_NODELAY")?;
+        Ok(Client { stream })
+    }
+
+    /// Bound every read and write — a wedged daemon becomes a clean
+    /// timeout error instead of a hang.
+    pub fn set_timeout(&self, timeout: Duration) -> Result<()> {
+        self.stream.set_read_timeout(Some(timeout)).context("set read timeout")?;
+        self.stream.set_write_timeout(Some(timeout)).context("set write timeout")?;
+        Ok(())
+    }
+
+    fn call(&mut self, kind: u8, payload: &[u8], want: u8) -> Result<Vec<u8>> {
+        wire::write_frame(&mut self.stream, kind, payload)?;
+        let (got, reply) = wire::read_frame(&mut self.stream)?;
+        if got == FRAME_ERR {
+            bail!("selection daemon error: {}", decode_err(&reply));
+        }
+        ensure!(got == want, "service protocol desync: expected frame kind {want}, got {got}");
+        Ok(reply)
+    }
+
+    /// Select one strategy per task; with `want_bits`, the reply also
+    /// ships the full prediction tables for probe-bits rendering.
+    pub fn select(&mut self, tasks: &[TaskFeatures], want_bits: bool) -> Result<SelectReply> {
+        ensure!(
+            !tasks.is_empty() && tasks.len() <= MAX_TASKS_PER_REQUEST,
+            "a select request needs 1..={MAX_TASKS_PER_REQUEST} tasks, got {}",
+            tasks.len()
+        );
+        let payload = encode_select_request(tasks, want_bits);
+        let reply = decode_select_reply(&self.call(FRAME_SELECT, &payload, FRAME_SELECT_OK)?)?;
+        ensure!(
+            reply.picks.len() == tasks.len(),
+            "daemon answered {} picks for {} tasks",
+            reply.picks.len(),
+            tasks.len()
+        );
+        Ok(reply)
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        self.call(FRAME_PING, &[], FRAME_PONG)?;
+        Ok(())
+    }
+
+    /// Ask the daemon to re-probe its artifact *now* (the poller does
+    /// this on a timer; tests and operators want it synchronous).
+    pub fn reload(&mut self) -> Result<ReloadReply> {
+        decode_reload_reply(&self.call(FRAME_RELOAD, &[], FRAME_RELOAD_OK)?)
+    }
+
+    /// Drain in-flight requests and stop the daemon. Returns the total
+    /// select requests it answered. The daemon closes every connection
+    /// (including this one) after replying.
+    pub fn shutdown(&mut self) -> Result<u64> {
+        decode_shutdown_reply(&self.call(FRAME_SHUTDOWN, &[], FRAME_SHUTDOWN_OK)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe_tasks() -> Vec<TaskFeatures> {
+        let mut tasks = vec![zeroed_task(), zeroed_task(), zeroed_task()];
+        tasks[0].data.num_vertices = 100.0;
+        tasks[0].data.in_deg.skewness = -0.0;
+        tasks[1].data.num_edges = 1.0e-300;
+        tasks[1].algo[3] = f64::MIN_POSITIVE;
+        tasks[2].data.directed = true;
+        tasks[2].algo[20] = 7.5;
+        tasks
+    }
+
+    fn wire_image(t: &TaskFeatures) -> Vec<u64> {
+        let mut vals = [0.0; TASK_WIRE_DIM];
+        task_to_values(t, &mut vals);
+        vals.iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn select_request_roundtrips_and_reuses_scratch() {
+        let tasks = probe_tasks();
+        let payload = encode_select_request(&tasks, true);
+        let mut scratch = RequestScratch::new();
+        // decode twice: the second pass must fully overwrite the first
+        for _ in 0..2 {
+            let want_bits = decode_select_request(&payload, &mut scratch).unwrap();
+            assert!(want_bits);
+            assert_eq!(scratch.tasks.len(), tasks.len());
+            for (got, want) in scratch.tasks.iter().zip(&tasks) {
+                assert_eq!(wire_image(got), wire_image(want), "bit-exact transport");
+            }
+        }
+        // a shorter follow-up request shrinks the task buffer
+        let one = encode_select_request(&tasks[..1], false);
+        assert!(!decode_select_request(&one, &mut scratch).unwrap());
+        assert_eq!(scratch.tasks.len(), 1);
+    }
+
+    #[test]
+    fn select_request_rejects_malformed_payloads() {
+        let tasks = probe_tasks();
+        let mut scratch = RequestScratch::new();
+        let good = encode_select_request(&tasks, false);
+        // unknown flag bit
+        let mut bad = good.clone();
+        bad[0] = 0x80;
+        assert!(decode_select_request(&bad, &mut scratch).is_err());
+        // truncated task image
+        assert!(decode_select_request(&good[..good.len() - 5], &mut scratch).is_err());
+        // trailing garbage
+        let mut long = good.clone();
+        long.push(0);
+        assert!(decode_select_request(&long, &mut scratch).is_err());
+        // zero tasks
+        let empty = [0u8, 0, 0];
+        assert!(decode_select_request(&empty, &mut scratch).is_err());
+    }
+
+    #[test]
+    fn select_reply_roundtrips_bit_exactly() {
+        let picks = vec![Strategy::INVENTORY[4], Strategy::INVENTORY[0]];
+        let tables: Vec<Vec<(Strategy, f64)>> = (0..2)
+            .map(|k| {
+                Strategy::INVENTORY
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &s)| (s, if i == k { -0.0 } else { 1.0e-300 * (i + 1) as f64 }))
+                    .collect()
+            })
+            .collect();
+        let payload = encode_select_reply(0xfeed_beef, "ridge", "sim_time", &picks, Some(&tables));
+        let reply = decode_select_reply(&payload).unwrap();
+        assert_eq!(reply.fingerprint, 0xfeed_beef);
+        assert_eq!(reply.backend, "ridge");
+        assert_eq!(reply.label, "sim_time");
+        assert_eq!(reply.picks, picks);
+        let preds = reply.predictions.as_ref().unwrap();
+        for (row, table) in preds.iter().zip(&tables) {
+            for (got, (_, want)) in row.iter().zip(table) {
+                assert_eq!(got.to_bits(), want.to_bits());
+            }
+        }
+        // rendered bits match the canonical store rendering
+        let algos = vec!["PR".to_string(), "TC".to_string()];
+        let text = reply.render_bits("wiki", &algos).unwrap();
+        let want: String = algos
+            .iter()
+            .zip(&tables)
+            .map(|(a, t)| store::prediction_bits_from("ridge", "sim_time", "wiki", a, t))
+            .collect();
+        assert_eq!(text, want);
+        // without the bits flag there is no table to render
+        let lean = decode_select_reply(&encode_select_reply(1, "ridge", "sim_time", &picks, None))
+            .unwrap();
+        assert!(lean.predictions.is_none());
+        assert!(lean.render_bits("wiki", &algos).is_err());
+    }
+
+    #[test]
+    fn reload_and_shutdown_replies_roundtrip() {
+        for (status, msg) in [
+            (ReloadStatus::Unchanged, ""),
+            (ReloadStatus::Reloaded, "generation 2"),
+            (ReloadStatus::Rejected, "checksum mismatch"),
+        ] {
+            let payload = encode_reload_reply(status, 42, msg);
+            let reply = decode_reload_reply(&payload).unwrap();
+            assert_eq!(reply.status, status);
+            assert_eq!(reply.fingerprint, 42);
+            assert_eq!(reply.message, msg);
+        }
+        assert!(decode_reload_reply(&[9, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0]).is_err());
+        assert_eq!(decode_shutdown_reply(&encode_shutdown_reply(17)).unwrap(), 17);
+        assert_eq!(decode_err(&encode_err("boom")), "boom");
+        assert_eq!(decode_err(&[255, 255]), "malformed error frame");
+    }
+}

@@ -1,0 +1,418 @@
+//! The always-on selection daemon behind `repro serve`.
+//!
+//! A [`Server`] owns one TCP listener and three long-lived threads:
+//!
+//! * the **accept loop**, spawning one handler thread per connection;
+//! * the **batcher**, which coalesces in-flight select requests from
+//!   all connections into single [`select_with_predictions`] calls
+//!   (one [`crate::etrm::Etrm::select_batch`]-equivalent pass instead
+//!   of per-request model walks) — it snapshots the serving model
+//!   *once per batch*, so a hot reload changes answers only at a
+//!   request boundary, never inside one;
+//! * the optional **reload poller**, probing the artifact's
+//!   fingerprint ([`ModelHandle::reload_if_changed`]) on a timer. A
+//!   stale or corrupt replacement artifact is rejected and the loaded
+//!   model keeps serving — swapping a bad file under a live daemon
+//!   costs nothing but a log line.
+//!
+//! Failure containment: a framing error (bad checksum, truncated
+//! frame, mid-request disconnect) desyncs only that connection, which
+//! is dropped cleanly; a well-framed but malformed request gets a
+//! [`proto::FRAME_ERR`] reply and the connection keeps serving. The
+//! daemon itself never panics on client bytes.
+//!
+//! Shutdown ([`proto::FRAME_SHUTDOWN`]) is drain-then-exit: new
+//! selects are refused, in-flight ones finish and are answered, then
+//! every connection is closed and [`Server::join`] returns the
+//! lifetime counters. No clocks run here — pacing is sleep-tick based,
+//! so the daemon stays out of the audit's `Instant::now()` rule.
+
+use std::collections::BTreeMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use crate::engine::wire;
+use crate::features::TaskFeatures;
+use crate::partition::Strategy;
+use crate::util::error::{Context, Result};
+
+use super::app::{select_with_predictions, LoadedModel, ModelHandle, Reload};
+use super::proto;
+
+/// Daemon configuration (the `repro serve` flags, typed).
+pub struct ServeConfig {
+    /// `host:port` to bind; port 0 picks a free port (the chosen
+    /// address is [`Server::local_addr`]).
+    pub listen: String,
+    /// Selection parallelism (0 = `GPS_THREADS` / available cores).
+    pub threads: usize,
+    /// Hot-reload probe period; 0 disables the poller (reloads then
+    /// happen only on explicit [`proto::FRAME_RELOAD`] requests).
+    pub reload_poll_ms: u64,
+    /// Max select requests coalesced into one batched model pass.
+    pub max_coalesce: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            listen: "127.0.0.1:0".to_string(),
+            threads: 0,
+            reload_poll_ms: 200,
+            max_coalesce: 64,
+        }
+    }
+}
+
+/// Lifetime counters reported by [`Server::join`].
+pub struct ServeSummary {
+    /// Select requests answered.
+    pub requests: u64,
+    /// Tasks selected across all requests.
+    pub tasks: u64,
+    /// Batched model passes (≤ requests thanks to coalescing).
+    pub batches: u64,
+}
+
+struct Shared {
+    handle: ModelHandle,
+    threads: usize,
+    max_coalesce: usize,
+    shutdown: AtomicBool,
+    in_flight: AtomicU64,
+    requests: AtomicU64,
+    tasks: AtomicU64,
+    batches: AtomicU64,
+    /// Clone of every live connection, keyed by connection id, so the
+    /// shutdown path can unblock idle readers.
+    conns: Mutex<BTreeMap<u64, TcpStream>>,
+}
+
+/// One coalescable unit of work: a decoded request plus the channel
+/// its reply travels back on.
+struct Job {
+    tasks: Vec<TaskFeatures>,
+    want_bits: bool,
+    reply: mpsc::Sender<Batched>,
+}
+
+/// A job's share of a batched selection, pinned to the model
+/// generation that computed it.
+struct Batched {
+    model: Arc<LoadedModel>,
+    picks: Vec<Strategy>,
+    preds: Option<Vec<Vec<(Strategy, f64)>>>,
+}
+
+/// Decrements the in-flight counter when the request's reply has been
+/// written (or abandoned) — the drain barrier shutdown waits on.
+struct InFlightGuard<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        self.shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A long-running selection daemon bound to one artifact path.
+pub struct Server {
+    shared: Arc<Shared>,
+    local_addr: SocketAddr,
+    accept: thread::JoinHandle<()>,
+    batcher: thread::JoinHandle<()>,
+    poller: Option<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, spawn the worker threads and start serving.
+    pub fn start(cfg: ServeConfig, handle: ModelHandle) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("bind selection daemon on {}", cfg.listen))?;
+        let local_addr = listener.local_addr().context("resolve daemon listen address")?;
+        listener.set_nonblocking(true).context("set listener non-blocking")?;
+        let shared = Arc::new(Shared {
+            handle,
+            threads: cfg.threads,
+            max_coalesce: cfg.max_coalesce.max(1),
+            shutdown: AtomicBool::new(false),
+            in_flight: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            tasks: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            conns: Mutex::new(BTreeMap::new()),
+        });
+        let (jobs_tx, jobs_rx) = mpsc::channel();
+        let accept = {
+            let shared = Arc::clone(&shared);
+            thread::spawn(move || run_accept(&shared, &listener, &jobs_tx))
+        };
+        let batcher = {
+            let shared = Arc::clone(&shared);
+            thread::spawn(move || run_batcher(&shared, &jobs_rx))
+        };
+        let poller = if cfg.reload_poll_ms > 0 {
+            let shared = Arc::clone(&shared);
+            let poll_ms = cfg.reload_poll_ms;
+            Some(thread::spawn(move || run_poller(&shared, poll_ms)))
+        } else {
+            None
+        };
+        Ok(Server { shared, local_addr, accept, batcher, poller })
+    }
+
+    /// The bound address (resolves `--listen 127.0.0.1:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Snapshot of the currently serving model.
+    pub fn model(&self) -> Arc<LoadedModel> {
+        self.shared.handle.current()
+    }
+
+    /// Block until a client-initiated shutdown has drained the daemon,
+    /// then return the lifetime counters.
+    pub fn join(self) -> Result<ServeSummary> {
+        self.accept.join().map_err(|_| crate::err!("daemon accept thread panicked"))?;
+        self.batcher.join().map_err(|_| crate::err!("daemon batcher thread panicked"))?;
+        if let Some(poller) = self.poller {
+            poller.join().map_err(|_| crate::err!("daemon reload poller panicked"))?;
+        }
+        Ok(ServeSummary {
+            requests: self.shared.requests.load(Ordering::SeqCst),
+            tasks: self.shared.tasks.load(Ordering::SeqCst),
+            batches: self.shared.batches.load(Ordering::SeqCst),
+        })
+    }
+}
+
+fn lock_conns(shared: &Shared) -> std::sync::MutexGuard<'_, BTreeMap<u64, TcpStream>> {
+    shared.conns.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn run_accept(shared: &Arc<Shared>, listener: &TcpListener, jobs: &mpsc::Sender<Job>) {
+    let mut next_id = 0u64;
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return; // drops the master job sender: the batcher drains and exits
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if stream.set_nonblocking(false).is_err() || stream.set_nodelay(true).is_err() {
+                    continue;
+                }
+                let conn_id = next_id;
+                next_id += 1;
+                if let Ok(clone) = stream.try_clone() {
+                    lock_conns(shared).insert(conn_id, clone);
+                }
+                let shared = Arc::clone(shared);
+                let jobs = jobs.clone();
+                thread::spawn(move || run_conn(&shared, &jobs, stream, conn_id));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+fn run_conn(shared: &Arc<Shared>, jobs: &mpsc::Sender<Job>, mut stream: TcpStream, conn_id: u64) {
+    let mut scratch = proto::RequestScratch::new();
+    loop {
+        // a framing failure (bad checksum, truncated frame, disconnect)
+        // leaves the byte stream unparseable — drop the connection
+        // cleanly; the daemon itself keeps serving everyone else
+        let (kind, payload) = match wire::read_frame(&mut stream) {
+            Ok(frame) => frame,
+            Err(_) => break,
+        };
+        match handle_frame(shared, jobs, &mut stream, &mut scratch, kind, &payload) {
+            Ok(true) => {}
+            Ok(false) | Err(_) => break, // shutdown, or the peer is gone
+        }
+    }
+    lock_conns(shared).remove(&conn_id);
+}
+
+/// Serve one well-framed request. `Ok(true)` keeps the connection,
+/// `Ok(false)` ends it deliberately, `Err` means the reply could not
+/// be written (the peer disconnected mid-request).
+fn handle_frame(
+    shared: &Arc<Shared>,
+    jobs: &mpsc::Sender<Job>,
+    stream: &mut TcpStream,
+    scratch: &mut proto::RequestScratch,
+    kind: u8,
+    payload: &[u8],
+) -> Result<bool> {
+    match kind {
+        proto::FRAME_PING => {
+            wire::write_frame(stream, proto::FRAME_PONG, &[])?;
+            Ok(true)
+        }
+        proto::FRAME_SELECT => {
+            let want_bits = match proto::decode_select_request(payload, scratch) {
+                Ok(want) => want,
+                Err(e) => {
+                    // well-framed but malformed: error reply, connection survives
+                    let err = proto::encode_err(&e.to_string());
+                    wire::write_frame(stream, proto::FRAME_ERR, &err)?;
+                    return Ok(true);
+                }
+            };
+            if shared.shutdown.load(Ordering::SeqCst) {
+                let err = proto::encode_err("daemon is shutting down");
+                wire::write_frame(stream, proto::FRAME_ERR, &err)?;
+                return Ok(true);
+            }
+            shared.in_flight.fetch_add(1, Ordering::SeqCst);
+            let guard = InFlightGuard { shared };
+            let (reply_tx, reply_rx) = mpsc::channel();
+            let job = Job { tasks: scratch.tasks.clone(), want_bits, reply: reply_tx };
+            let batched = match jobs.send(job) {
+                Ok(()) => reply_rx.recv().ok(),
+                Err(_) => None,
+            };
+            let Some(batched) = batched else {
+                drop(guard);
+                let err = proto::encode_err("daemon is shutting down");
+                wire::write_frame(stream, proto::FRAME_ERR, &err)?;
+                return Ok(true);
+            };
+            shared.requests.fetch_add(1, Ordering::SeqCst);
+            let reply = proto::encode_select_reply(
+                batched.model.fingerprint,
+                batched.model.etrm.backend.name(),
+                batched.model.etrm.label.name(),
+                &batched.picks,
+                batched.preds.as_deref(),
+            );
+            let written = wire::write_frame(stream, proto::FRAME_SELECT_OK, &reply);
+            drop(guard); // reply done (or abandoned): release the drain barrier
+            written?;
+            Ok(true)
+        }
+        proto::FRAME_RELOAD => {
+            let (status, message) = match shared.handle.reload_if_changed() {
+                Reload::Unchanged => (proto::ReloadStatus::Unchanged, String::new()),
+                Reload::Reloaded { from, to } => {
+                    (proto::ReloadStatus::Reloaded, format!("{from:016x} -> {to:016x}"))
+                }
+                Reload::Rejected { error } => (proto::ReloadStatus::Rejected, error),
+            };
+            let fingerprint = shared.handle.current().fingerprint;
+            let reply = proto::encode_reload_reply(status, fingerprint, &message);
+            wire::write_frame(stream, proto::FRAME_RELOAD_OK, &reply)?;
+            Ok(true)
+        }
+        proto::FRAME_SHUTDOWN => {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            // drain: every accepted select is either answered already
+            // or counted in in_flight — wait for the barrier to clear
+            while shared.in_flight.load(Ordering::SeqCst) > 0 {
+                thread::sleep(Duration::from_millis(5));
+            }
+            let total = shared.requests.load(Ordering::SeqCst);
+            let reply = proto::encode_shutdown_reply(total);
+            wire::write_frame(stream, proto::FRAME_SHUTDOWN_OK, &reply)?;
+            // unblock every idle reader so handler threads exit promptly
+            for conn in lock_conns(shared).values() {
+                let _ = conn.shutdown(Shutdown::Both);
+            }
+            Ok(false)
+        }
+        other => {
+            let err = proto::encode_err(&format!("unknown service frame kind {other:#04x}"));
+            wire::write_frame(stream, proto::FRAME_ERR, &err)?;
+            Ok(true)
+        }
+    }
+}
+
+/// The coalescing batcher: pull one job, greedily drain whatever else
+/// is already queued (up to `max_coalesce`), run ONE batched selection
+/// over the concatenated tasks against ONE model snapshot, then split
+/// the results back per job. Exits when every job sender is gone.
+fn run_batcher(shared: &Shared, jobs: &mpsc::Receiver<Job>) {
+    loop {
+        let first = match jobs.recv() {
+            Ok(job) => job,
+            Err(_) => return,
+        };
+        let mut batch = vec![first];
+        while batch.len() < shared.max_coalesce {
+            match jobs.try_recv() {
+                Ok(job) => batch.push(job),
+                Err(_) => break,
+            }
+        }
+        // one snapshot per batch: a concurrent hot reload lands at a
+        // request boundary, never inside a request
+        let model = shared.handle.current();
+        let mut all: Vec<TaskFeatures> = Vec::new();
+        for job in &batch {
+            all.extend(job.tasks.iter().cloned());
+        }
+        let want_bits = batch.iter().any(|job| job.want_bits);
+        let sel = select_with_predictions(&model.etrm, &all, shared.threads, want_bits);
+        shared.batches.fetch_add(1, Ordering::SeqCst);
+        shared.tasks.fetch_add(all.len() as u64, Ordering::SeqCst);
+        let mut offset = 0usize;
+        for job in batch {
+            let n = job.tasks.len();
+            let picks = sel.picks[offset..offset + n].to_vec();
+            let preds = if job.want_bits {
+                sel.predictions.as_ref().map(|tables| tables[offset..offset + n].to_vec())
+            } else {
+                None
+            };
+            offset += n;
+            // a send failure means the requester disconnected mid-wait;
+            // its guard already released the drain barrier
+            let _ = job.reply.send(Batched { model: Arc::clone(&model), picks, preds });
+        }
+    }
+}
+
+/// The hot-reload poller: probe the artifact fingerprint every
+/// `poll_ms`, sleeping in short ticks so shutdown stays prompt.
+/// Repeated rejections of the same bad artifact log once, not per tick.
+fn run_poller(shared: &Shared, poll_ms: u64) {
+    let mut last_error = String::new();
+    loop {
+        let mut waited = 0u64;
+        while waited < poll_ms {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let step = (poll_ms - waited).min(50);
+            thread::sleep(Duration::from_millis(step));
+            waited += step;
+        }
+        match shared.handle.reload_if_changed() {
+            Reload::Unchanged => {}
+            Reload::Reloaded { from, to } => {
+                last_error.clear();
+                eprintln!("serve: model hot-reloaded ({from:016x} -> {to:016x})");
+            }
+            Reload::Rejected { error } => {
+                if error != last_error {
+                    eprintln!(
+                        "serve: rejected artifact swap, still serving the loaded model: {error}"
+                    );
+                    last_error = error;
+                }
+            }
+        }
+    }
+}

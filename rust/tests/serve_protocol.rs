@@ -1,0 +1,425 @@
+//! Selection-daemon gates (ISSUE 8 acceptance): answers served over
+//! TCP are bit-identical to offline `repro select` (cross-process);
+//! N concurrent clients with mixed single/batched requests match
+//! sequential selection bit-for-bit; a hot artifact swap changes
+//! answers only at a request boundary; a corrupt swap is rejected
+//! while the loaded model keeps serving; malformed frames and
+//! mid-request disconnects never take the daemon down; and shutdown
+//! drains in-flight requests before the listener closes.
+
+use std::io::{BufRead, Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::time::Duration;
+
+use gps_select::engine::wire;
+use gps_select::etrm::{store, Etrm, EtrmBackend};
+use gps_select::features::{zeroed_task, TaskFeatures, FEATURE_DIM};
+use gps_select::ml::linear::Ridge;
+use gps_select::ml::Label;
+use gps_select::partition::Strategy;
+use gps_select::service::app::{self, ModelHandle};
+use gps_select::service::proto::{self, Client, ReloadStatus};
+use gps_select::service::serve::{ServeConfig, Server};
+use gps_select::util::rng::Rng;
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gps_serve_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A ridge model whose lone negative weight sits on `favorite`'s
+/// one-hot column — `select` deterministically picks
+/// `Strategy::INVENTORY[favorite]`, making hot swaps observable.
+fn favoring_etrm(favorite: usize) -> Etrm {
+    let mut weights = vec![0.0f64; FEATURE_DIM + 1];
+    let onehot_base = FEATURE_DIM - 4 - Strategy::INVENTORY.len();
+    weights[onehot_base + favorite] = -1.0;
+    Etrm {
+        backend: EtrmBackend::Ridge(Ridge { weights, log_target: false }),
+        label: Label::SimTime,
+    }
+}
+
+/// A ridge model with dense pseudo-random weights: picks genuinely
+/// depend on the task features, so equivalence tests are meaningful.
+fn varied_etrm(seed: u64) -> Etrm {
+    let mut rng = Rng::new(seed);
+    let weights = (0..=FEATURE_DIM).map(|_| rng.next_f64() - 0.5).collect();
+    Etrm {
+        backend: EtrmBackend::Ridge(Ridge { weights, log_target: false }),
+        label: Label::SimTime,
+    }
+}
+
+/// Deterministic synthetic tasks spanning degree shapes.
+fn synthetic_tasks(n: usize, seed: u64) -> Vec<TaskFeatures> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut t = zeroed_task();
+            t.data.num_vertices = (1.0e3 + rng.next_f64() * 1.0e6).floor();
+            t.data.num_edges = (t.data.num_vertices * (1.0 + rng.next_f64() * 40.0)).floor();
+            t.data.directed = rng.next_f64() < 0.5;
+            t.data.in_deg.mean = rng.next_f64() * 30.0;
+            t.data.in_deg.std = rng.next_f64() * 80.0;
+            t.data.in_deg.skewness = rng.next_f64() * 8.0 - 2.0;
+            t.data.in_deg.kurtosis = rng.next_f64() * 40.0 - 3.0;
+            t.data.out_deg = t.data.in_deg;
+            for a in t.algo.iter_mut() {
+                *a = (rng.next_f64() * 1.0e5).floor();
+            }
+            t
+        })
+        .collect()
+}
+
+/// In-process daemon over a freshly saved artifact. Poller disabled:
+/// the tests drive reloads explicitly for determinism.
+fn start_server(model_path: &Path, threads: usize) -> (Server, String) {
+    let handle = ModelHandle::open(model_path, None).unwrap();
+    let cfg = ServeConfig {
+        listen: "127.0.0.1:0".to_string(),
+        threads,
+        reload_poll_ms: 0,
+        max_coalesce: 64,
+    };
+    let server = Server::start(cfg, handle).unwrap();
+    let addr = server.local_addr().to_string();
+    (server, addr)
+}
+
+fn client(addr: &str) -> Client {
+    let c = Client::connect(addr).unwrap();
+    c.set_timeout(Duration::from_secs(30)).unwrap();
+    c
+}
+
+/// The tentpole gate, cross-process: a real `repro serve` child must
+/// answer with exactly the prediction bits that a separate `repro
+/// select --bits-out` process computes offline for the same artifact
+/// and tasks.
+#[test]
+fn daemon_bits_match_offline_select_cross_process() {
+    let dir = scratch("offline");
+    let model = dir.join("model.etrm");
+    store::save(&varied_etrm(0xd00d), &model).unwrap();
+
+    // offline half: a child process renders the probe bits to a file
+    let bits_path = dir.join("offline.bits");
+    let status = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["select", "--model"])
+        .arg(&model)
+        .args(["--graph", "wiki", "--algorithm", "PR,TC", "--scale", "0.01", "--seed", "7"])
+        .args(["--threads", "2", "--bits-out"])
+        .arg(&bits_path)
+        .stdout(Stdio::null())
+        .status()
+        .unwrap();
+    assert!(status.success(), "offline select failed");
+    let offline = std::fs::read_to_string(&bits_path).unwrap();
+
+    // serving half: a daemon child answers the same tasks over TCP
+    let mut child = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["serve", "--model"])
+        .arg(&model)
+        .args(["--listen", "127.0.0.1:0", "--reload-poll-ms", "0"])
+        .stdout(Stdio::piped())
+        .spawn()
+        .unwrap();
+    let mut banner = std::io::BufReader::new(child.stdout.take().unwrap());
+    let mut addr = String::new();
+    let mut line = String::new();
+    while addr.is_empty() {
+        line.clear();
+        assert!(banner.read_line(&mut line).unwrap() > 0, "daemon died during startup");
+        if let Some(rest) = line.trim_end().strip_prefix("serve: listening on ") {
+            addr = rest.to_string();
+        }
+    }
+
+    // the same features the offline process extracted, re-extracted
+    // here (deterministic generators: same scale + seed → same graph)
+    let g = app::GraphSpec { name: "wiki".to_string(), scale: 0.01, seed: 7 }.build().unwrap();
+    let (algos, tasks) = app::algorithm_tasks(&g, &["PR", "TC"]).unwrap();
+    let names: Vec<String> = algos.iter().map(|a| a.name().to_string()).collect();
+
+    let mut c = client(&addr);
+    let reply = c.select(&tasks, true).unwrap();
+    let served = reply.render_bits(&g.name, &names).unwrap();
+    assert_eq!(served, offline, "served bits differ from offline select");
+
+    let answered = c.shutdown().unwrap();
+    assert_eq!(answered, 1);
+    let mut rest = String::new();
+    banner.read_to_string(&mut rest).unwrap();
+    assert!(rest.contains("drained and stopped"), "missing shutdown banner: {rest:?}");
+    assert!(child.wait().unwrap().success());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Satellite gate: N parallel clients issuing mixed single/batched
+/// requests get exactly the answers sequential selection computes.
+#[test]
+fn concurrent_mixed_requests_match_sequential_bit_for_bit() {
+    let dir = scratch("concurrent");
+    let model = dir.join("model.etrm");
+    store::save(&varied_etrm(0xfeed), &model).unwrap();
+    let reference = store::load(&model).unwrap();
+    let (server, addr) = start_server(&model, 2);
+
+    let pool = synthetic_tasks(24, 0xabc);
+    let clients = 8usize;
+    let requests_per_client = 12usize;
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let addr = &addr;
+            let pool = &pool;
+            let reference = &reference;
+            scope.spawn(move || {
+                let mut cl = client(addr);
+                for r in 0..requests_per_client {
+                    let batch = 1 + (c * 5 + r) % 5;
+                    let lo = (c * 7 + r * 3) % (pool.len() - batch);
+                    let req = &pool[lo..lo + batch];
+                    let want_bits = r % 3 == 0;
+                    let reply = cl.select(req, want_bits).unwrap();
+                    for (i, task) in req.iter().enumerate() {
+                        assert_eq!(
+                            reply.picks[i],
+                            reference.select(task),
+                            "client {c} request {r} task {i} diverged from sequential select"
+                        );
+                        if let Some(tables) = &reply.predictions {
+                            let local = reference.predict_all(task);
+                            for (j, (_, t)) in local.iter().enumerate() {
+                                assert_eq!(
+                                    tables[i][j].to_bits(),
+                                    t.to_bits(),
+                                    "prediction bits diverged"
+                                );
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let total = (clients * requests_per_client) as u64;
+    let served = client(&addr).shutdown().unwrap();
+    assert_eq!(served, total);
+    let summary = server.join().unwrap();
+    assert_eq!(summary.requests, total);
+    assert!(summary.batches >= 1 && summary.batches <= summary.requests);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Satellite gate: a hot artifact swap flips every answer at a request
+/// boundary — same connection, no restart, fingerprints consistent.
+#[test]
+fn hot_reload_changes_answers_at_request_boundary() {
+    let dir = scratch("reload");
+    let model = dir.join("model.etrm");
+    store::save(&favoring_etrm(2), &model).unwrap();
+    let (server, addr) = start_server(&model, 1);
+    let tasks = synthetic_tasks(3, 1);
+
+    let mut c = client(&addr);
+    let before = c.select(&tasks, false).unwrap();
+    assert!(before.picks.iter().all(|&s| s == Strategy::INVENTORY[2]), "{:?}", before.picks);
+
+    // same artifact: an explicit reload probe is a no-op
+    let noop = c.reload().unwrap();
+    assert_eq!(noop.status, ReloadStatus::Unchanged);
+    assert_eq!(noop.fingerprint, before.fingerprint);
+
+    // atomically swap the artifact, then reload on the live connection
+    store::save(&favoring_etrm(5), &model).unwrap();
+    let swapped = c.reload().unwrap();
+    assert_eq!(swapped.status, ReloadStatus::Reloaded);
+    assert_ne!(swapped.fingerprint, before.fingerprint);
+    assert!(swapped.message.contains("->"), "{}", swapped.message);
+
+    let after = c.select(&tasks, false).unwrap();
+    assert!(after.picks.iter().all(|&s| s == Strategy::INVENTORY[5]), "{:?}", after.picks);
+    assert_eq!(after.fingerprint, swapped.fingerprint);
+
+    client(&addr).shutdown().unwrap();
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Satellite gate: a corrupt replacement artifact is rejected without
+/// dropping the currently served model — zero downtime, then a later
+/// valid swap still goes through.
+#[test]
+fn corrupt_swap_is_rejected_and_old_model_keeps_serving() {
+    let dir = scratch("corrupt");
+    let model = dir.join("model.etrm");
+    store::save(&favoring_etrm(1), &model).unwrap();
+    let (server, addr) = start_server(&model, 1);
+    let tasks = synthetic_tasks(2, 2);
+
+    let mut c = client(&addr);
+    let before = c.select(&tasks, false).unwrap();
+    assert!(before.picks.iter().all(|&s| s == Strategy::INVENTORY[1]));
+
+    // clobber the artifact with garbage that still changes the
+    // fingerprint — the reload must fail *after* probing, and keep
+    // the loaded model
+    gps_select::util::fsio::write_atomic(&model, b"gps-etrm v1\ngarbage payload\n").unwrap();
+    let rejected = c.reload().unwrap();
+    assert_eq!(rejected.status, ReloadStatus::Rejected);
+    assert!(!rejected.message.is_empty());
+    assert_eq!(rejected.fingerprint, before.fingerprint, "served model must not change");
+
+    let still = c.select(&tasks, false).unwrap();
+    assert_eq!(still.fingerprint, before.fingerprint);
+    assert!(still.picks.iter().all(|&s| s == Strategy::INVENTORY[1]));
+
+    // recovery: a valid artifact swaps in on the same connection
+    store::save(&favoring_etrm(7), &model).unwrap();
+    assert_eq!(c.reload().unwrap().status, ReloadStatus::Reloaded);
+    let after = c.select(&tasks, false).unwrap();
+    assert!(after.picks.iter().all(|&s| s == Strategy::INVENTORY[7]));
+
+    client(&addr).shutdown().unwrap();
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Satellite gate: malformed frames and mid-request disconnects cost
+/// at most their own connection — the daemon never panics and keeps
+/// serving well-behaved clients.
+#[test]
+fn malformed_frames_and_disconnects_never_take_the_daemon_down() {
+    let dir = scratch("malformed");
+    let model = dir.join("model.etrm");
+    store::save(&varied_etrm(0xbad), &model).unwrap();
+    let (server, addr) = start_server(&model, 1);
+    let tasks = synthetic_tasks(2, 3);
+
+    // (a) raw garbage (an impossible frame length): connection dropped
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"\xff\xff\xff\xffgarbage").unwrap();
+        let mut buf = [0u8; 16];
+        let n = s.read(&mut buf).unwrap_or(0); // EOF or reset, never a reply
+        assert_eq!(n, 0, "daemon must drop an unframeable connection");
+    }
+
+    // (b) a well-shaped frame with a corrupted checksum: dropped too
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let payload = proto::encode_select_request(&tasks[..1], false);
+        let mut frame = Vec::new();
+        wire::put_u32(&mut frame, (1 + payload.len() + 8) as u32);
+        frame.push(proto::FRAME_SELECT);
+        frame.extend_from_slice(&payload);
+        wire::put_u64(&mut frame, 0xdead_beef); // wrong checksum
+        s.write_all(&frame).unwrap();
+        let mut buf = [0u8; 16];
+        let n = s.read(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "daemon must drop a checksum-failing connection");
+    }
+
+    // (c) an unknown frame kind: error reply, connection survives
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        wire::write_frame(&mut s, 0x7e, &[]).unwrap();
+        let (kind, payload) = wire::read_frame(&mut s).unwrap();
+        assert_eq!(kind, proto::FRAME_ERR);
+        assert!(proto::decode_err(&payload).contains("unknown service frame kind"));
+        // …and the same connection still answers a real request
+        wire::write_frame(&mut s, proto::FRAME_PING, &[]).unwrap();
+        assert_eq!(wire::read_frame(&mut s).unwrap().0, proto::FRAME_PONG);
+    }
+
+    // (d) well-framed but malformed select payload: error reply, then
+    // a valid select succeeds on the same connection
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let full = proto::encode_select_request(&tasks[..1], false);
+        wire::write_frame(&mut s, proto::FRAME_SELECT, &full[..full.len() / 2]).unwrap();
+        let (kind, payload) = wire::read_frame(&mut s).unwrap();
+        assert_eq!(kind, proto::FRAME_ERR);
+        assert!(!proto::decode_err(&payload).is_empty());
+        wire::write_frame(&mut s, proto::FRAME_SELECT, &full).unwrap();
+        let (kind, payload) = wire::read_frame(&mut s).unwrap();
+        assert_eq!(kind, proto::FRAME_SELECT_OK);
+        assert_eq!(proto::decode_select_reply(&payload).unwrap().picks.len(), 1);
+    }
+
+    // (e) disconnect right after sending a request: the daemon must
+    // absorb the abandoned reply
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let payload = proto::encode_select_request(&tasks, false);
+        wire::write_frame(&mut s, proto::FRAME_SELECT, &payload).unwrap();
+        drop(s);
+    }
+
+    // the daemon is still fully alive for a well-behaved client
+    let mut c = client(&addr);
+    assert_eq!(c.select(&tasks, false).unwrap().picks.len(), tasks.len());
+    c.shutdown().unwrap();
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Satellite gate: shutdown drains in-flight selects, reports the
+/// lifetime counters, and closes the listener.
+#[test]
+fn shutdown_drains_in_flight_requests_then_closes() {
+    let dir = scratch("shutdown");
+    let model = dir.join("model.etrm");
+    store::save(&varied_etrm(0x5151), &model).unwrap();
+    let (server, addr) = start_server(&model, 2);
+    let tasks = synthetic_tasks(8, 4);
+
+    let successes: u64 = std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..4)
+            .map(|c| {
+                let addr = &addr;
+                let tasks = &tasks;
+                scope.spawn(move || {
+                    let mut cl = client(addr);
+                    let mut ok = 0u64;
+                    for r in 0..30 {
+                        let batch = 1 + (c + r) % 4;
+                        match cl.select(&tasks[..batch], false) {
+                            Ok(reply) => {
+                                assert_eq!(reply.picks.len(), batch);
+                                ok += 1;
+                            }
+                            // once the drain begins: refused or closed
+                            Err(_) => break,
+                        }
+                    }
+                    ok
+                })
+            })
+            .collect();
+        // let the load build up, then pull the plug mid-stream
+        std::thread::sleep(Duration::from_millis(30));
+        let served = client(&addr).shutdown().unwrap();
+        let ok: u64 = workers.into_iter().map(|w| w.join().unwrap()).sum();
+        // every reply a client saw was counted; the daemon may have
+        // counted a final answer whose write raced the close
+        assert!(served >= ok, "daemon counted {served} < {ok} client-observed replies");
+        ok
+    });
+
+    let summary = server.join().unwrap();
+    assert!(summary.requests >= successes);
+    assert!(summary.tasks >= summary.requests, "every request carries ≥1 task");
+
+    // the listener is gone: connecting (or speaking) now fails
+    let post = Client::connect(&addr).and_then(|mut c| c.ping());
+    assert!(post.is_err(), "daemon accepted a connection after join()");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

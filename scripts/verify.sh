@@ -3,7 +3,9 @@
 # (`repro audit`), tests, formatting, plus the engine execution-mode
 # gates (the three-mode equivalence test + a short release smoke of
 # the sim-vs-threaded-vs-socket engine benches, diffed against the
-# committed BENCH_engine.json baseline).
+# committed BENCH_engine.json baseline) and the selection-daemon
+# gates (a cross-process serve-vs-offline bit round-trip + the serve
+# load-generator smoke, structurally diffed against BENCH_serve.json).
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -114,6 +116,55 @@ echo "verify: engine bench medians within 3x of the committed baseline"
 # Keep this machine's fresh timings inspectable (and uploadable by CI)
 # at a gitignored path, so they never shadow the committed baseline.
 cp "$CKPT_TMP/bench.json" BENCH_engine.json
+
+# Selection-daemon round-trip, cross-process and first-class: start a
+# real `repro serve` on an ephemeral port over the artifact trained
+# above, drive it with the example's client mode (local feature
+# extraction → wire request → served prediction tables), and
+# byte-compare the served bits against the *training-time* probe bits.
+# Three processes — trainer, daemon, client — must agree on every
+# mantissa bit, or the cmp fails.
+"$REPRO" serve --model "$CKPT_TMP/model.etrm" --listen 127.0.0.1:0 \
+    > "$CKPT_TMP/serve.out" 2> "$CKPT_TMP/serve.err" &
+SERVE_PID=$!
+SERVE_ADDR=""
+for _ in $(seq 1 100); do
+    SERVE_ADDR=$(sed -n 's/^serve: listening on //p' "$CKPT_TMP/serve.out")
+    [ -n "$SERVE_ADDR" ] && break
+    sleep 0.1
+done
+if [ -z "$SERVE_ADDR" ]; then
+    echo "verify: FAIL — selection daemon never announced its listen address" >&2
+    cat "$CKPT_TMP/serve.err" >&2
+    exit 1
+fi
+cargo run --release --example select_strategy -- \
+    --connect "$SERVE_ADDR" --graph wiki --algorithm PR --scale 0.002 --seed 7 \
+    --bits-out "$CKPT_TMP/serve.bits" --shutdown
+wait "$SERVE_PID"
+cmp "$CKPT_TMP/train.bits" "$CKPT_TMP/serve.bits"
+echo "verify: daemon-served predictions are bit-identical to the offline model (cross-process)"
+
+# Serve load-generator smoke: the bench spawns its own daemon child
+# and drives 1/4/8 concurrent connections with mixed batch sizes. The
+# committed ../BENCH_serve.json baseline is recorded under
+# GPS_BENCH_FAST, and the gate is *structural only* — row names,
+# request and task counts must match exactly. TCP latency is far too
+# machine-varying for a median tolerance, so the baseline's timing
+# fields are trend data, not a gate.
+GPS_BENCH_FAST=1 GPS_BENCH_OUT="$CKPT_TMP/serve_bench.json" cargo bench --bench serve_load
+grep -o '"bench": "[^"]*"\|"requests": [0-9]*\|"tasks": [0-9]*' "$CKPT_TMP/serve_bench.json" \
+    | sort > "$CKPT_TMP/serve_bench.rows"
+grep -o '"bench": "[^"]*"\|"requests": [0-9]*\|"tasks": [0-9]*' ../BENCH_serve.json \
+    | sort > "$CKPT_TMP/serve_baseline.rows"
+if ! diff -u "$CKPT_TMP/serve_baseline.rows" "$CKPT_TMP/serve_bench.rows"; then
+    echo "verify: FAIL — serve bench rows drifted from the committed BENCH_serve.json baseline" >&2
+    exit 1
+fi
+echo "verify: serve bench row set matches the committed baseline"
+# Fresh timings stay inspectable (and CI-uploadable) at a gitignored
+# path, never shadowing the committed baseline.
+cp "$CKPT_TMP/serve_bench.json" BENCH_serve.json
 
 # Formatting gate. The crate predates rustfmt enforcement, so on the
 # first run this applies `cargo fmt` once (commit the result), then
