@@ -8,8 +8,9 @@
 //! `cargo bench --bench hotpath -- engine` runs only the engine rows
 //! (and skips the other sections' setup). When any `engine/…` row runs
 //! (the execution-mode triple, the CSR-vs-grouped lookup pair, the
-//! coalesced-vs-per-envelope wire pair, or the partition-warm thread
-//! ladder), its timings are recorded as JSON in `GPS_BENCH_OUT`
+//! coalesced-vs-per-envelope wire pair, the partition-warm thread
+//! ladder, the intra-worker sweep ladder or the single-partition
+//! thread ladder), its timings are recorded as JSON in `GPS_BENCH_OUT`
 //! (default `BENCH_engine.json`) for CI trend tracking.
 
 #[path = "common.rs"]
@@ -30,6 +31,7 @@ use gps_select::ml::gbdt::{Gbdt, GbdtParams};
 use gps_select::ml::{Regressor, TrainSet};
 use gps_select::partition::{PartitionCache, Strategy};
 use gps_select::util::benchkit::{black_box, Bench, Timing};
+use gps_select::util::pool;
 use gps_select::util::rng::Rng;
 use gps_select::util::stats::PowerSums;
 
@@ -240,6 +242,51 @@ fn main() {
                     let cache = PartitionCache::new(8);
                     cache.warm_parallel(threads, &pairs);
                     black_box(cache.len())
+                });
+                pair_json.push(json_row(name, &t));
+            }
+        }
+    }
+
+    // ---- engine: the intra-worker sweep ladder — the same 8-worker
+    // simulated PageRank run at GPS_INTRA_THREADS ∈ {1, 2, 4, 8};
+    // results are bit-identical at every rung (the canonical chunked
+    // fold), so the ladder isolates the pure wall-clock effect ----
+    let intra_rows = [
+        "engine/intra/1-threads",
+        "engine/intra/2-threads",
+        "engine/intra/4-threads",
+        "engine/intra/8-threads",
+    ];
+    if intra_rows.iter().any(|n| want(n)) {
+        let p8 = Strategy::Hdrf(50).partition(&g, 8);
+        let cfg8 = ClusterConfig::with_workers(8);
+        for (name, intra) in intra_rows.iter().zip([1usize, 2, 4, 8]) {
+            if want(name) {
+                pool::set_intra_threads(intra);
+                let t = bench.run(name, || {
+                    black_box(Algorithm::Pr.execute(&g, &p8, &cfg8, ExecutionMode::Simulated))
+                });
+                pair_json.push(json_row(name, &t));
+            }
+        }
+        pool::set_intra_threads(0);
+    }
+
+    // ---- engine: single-(graph,strategy) partition parallelism — one
+    // stateless hash partitioning of the 100k-edge graph with its edge
+    // chunks fanned over {1, 2, 4, 8} pool threads ----
+    let single_rows = [
+        "engine/partition-single/1-threads",
+        "engine/partition-single/2-threads",
+        "engine/partition-single/4-threads",
+        "engine/partition-single/8-threads",
+    ];
+    if single_rows.iter().any(|n| want(n)) {
+        for (name, threads) in single_rows.iter().zip([1usize, 2, 4, 8]) {
+            if want(name) {
+                let t = bench.run(name, || {
+                    black_box(Strategy::Random.partition_with_threads(&g, 8, threads))
                 });
                 pair_json.push(json_row(name, &t));
             }

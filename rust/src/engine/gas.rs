@@ -53,7 +53,12 @@ pub enum EdgeDirection {
 /// that crosses a process boundary decodes to the identical bits. That
 /// is what lets the multi-process backend stay bit-identical to the
 /// in-memory ones.
-pub trait Payload: Clone + Send {
+///
+/// `Sync` is required because the intra-worker chunked sweeps
+/// ([`super::state`]) share the value cache read-only across chunk
+/// threads; every payload here is plain data, so the bound costs
+/// nothing.
+pub trait Payload: Clone + Send + Sync {
     /// Serialized size in bytes (8-byte scalar convention, matching the
     /// MPI doubles the paper's engine exchanges).
     fn bytes(&self) -> usize;

@@ -41,7 +41,12 @@
 //! same order — and the wire format preserves exact `f64` bit
 //! patterns — final values, [`cost::OpCounts`] **and** the simulated
 //! time are bit-identical across all three modes and across thread
-//! counts (`tests/mode_equivalence.rs` pins this).
+//! counts (`tests/mode_equivalence.rs` pins this). That includes the
+//! **intra-worker** thread count: each worker's gather/scatter sweeps
+//! can additionally fan over `GPS_INTRA_THREADS` / `--intra-threads`
+//! pool threads ([`state`]'s canonical chunked fold;
+//! `tests/intra_equivalence.rs` pins the equivalence), budgeted against
+//! worker and corpus threads by [`crate::util::pool`]'s arbiter.
 //!
 //! Every run additionally measures its **wall-clock time at the
 //! coordinator** ([`RunResult::wall_clock_ms`]): the real elapsed

@@ -18,9 +18,37 @@
 //! master's own partial slotted at its own index — the historical
 //! per-replica combine order — so every floating-point fold sequence is
 //! reproduced exactly regardless of transport or thread scheduling.
+//!
+//! ## Intra-worker parallelism and the canonical chunked fold
+//!
+//! The gather and scatter sweeps are split into **deterministic
+//! chunks** of roughly [`INTRA_CHUNK_EDGES`] edges, aligned to
+//! per-vertex group boundaries, and fanned over up to
+//! [`crate::util::pool::intra_threads`] threads. Two invariants make
+//! this bit-identical at *every* thread count:
+//!
+//! 1. **Per-vertex folds never split.** A chunk boundary always falls
+//!    between vertex groups, so each vertex's neighbour pairs are
+//!    folded sequentially in sorted neighbour order by exactly one
+//!    chunk — the floating-point sequence per accumulator is untouched.
+//! 2. **Canonical chunked fold.** The per-phase float cost counters
+//!    are accumulated *per chunk* and the chunk partials are folded in
+//!    ascending chunk order. The chunk boundaries depend only on the
+//!    pair lists (never on the thread count), and the sequential path
+//!    runs the very same chunked code inline — so `1` intra thread and
+//!    `N` intra threads produce the same bits by construction.
+//!
+//! Gather accumulators live in a flat SoA [`GatherBuf`] (dense value
+//! array + set-bitmap rather than `Vec<Option<_>>`), whose unset slots
+//! always hold the fold identity. That keeps the hot gather loop a
+//! tight sweep over contiguous `f64`s that LLVM can vectorize, and
+//! lets chunk tasks take disjoint `&mut` sub-slices (vertex groups are
+//! ascending and the local-index map is monotone, so a chunk's slots
+//! form a contiguous range).
 
 use crate::graph::{Edge, Graph, VertexId};
 use crate::partition::Partitioning;
+use crate::util::pool;
 
 use super::cost::ClusterConfig;
 use super::gas::{EdgeDirection, GraphInfo, Payload, VertexProgram};
@@ -30,6 +58,48 @@ use super::{edge_rank, effective_dirs};
 
 /// Sentinel for "vertex not present on this worker".
 const NO_LID: u32 = u32::MAX;
+
+/// Target edges per intra-worker sweep chunk. Chunk boundaries are a
+/// pure function of the pair lists — computed identically at every
+/// intra-thread setting — which is what keeps the canonical chunked
+/// fold bit-identical across thread counts.
+const INTRA_CHUNK_EDGES: usize = 4096;
+
+/// Flat SoA gather-accumulator buffer: a dense value array plus a
+/// set-bitmap, replacing `Vec<Option<G>>`. Invariant: **unset slots
+/// hold the fold identity** (`init`), so "first touch" needs no
+/// branch-per-edge and [`GatherBuf::take`] never sees a hole. For
+/// `G = f64` this is a plain dense array the chunked sweeps stream
+/// through linearly.
+struct GatherBuf<G> {
+    init: G,
+    vals: Vec<G>,
+    set: Vec<bool>,
+}
+
+impl<G: Clone> GatherBuf<G> {
+    fn new(init: G, len: usize) -> GatherBuf<G> {
+        let vals = vec![init.clone(); len];
+        GatherBuf { init, vals, set: vec![false; len] }
+    }
+
+    fn is_set(&self, l: usize) -> bool {
+        self.set[l]
+    }
+
+    fn put(&mut self, l: usize, g: G) {
+        self.vals[l] = g;
+        self.set[l] = true;
+    }
+
+    /// Move the slot's value out, restoring the unset-holds-identity
+    /// invariant. For an unset slot this correctly returns the fold
+    /// identity.
+    fn take(&mut self, l: usize) -> G {
+        self.set[l] = false;
+        std::mem::replace(&mut self.vals[l], self.init.clone())
+    }
+}
 
 /// One worker's complete engine state.
 pub struct WorkerState<P: VertexProgram> {
@@ -47,9 +117,9 @@ pub struct WorkerState<P: VertexProgram> {
     /// Mirror-synchronised value cache, by local index.
     values: Vec<P::Value>,
     /// Master-side gather accumulators, by local index.
-    accs: Vec<Option<P::Gather>>,
+    accs: GatherBuf<P::Gather>,
     /// Per-phase local partials, by local index (drained every gather).
-    gacc: Vec<Option<P::Gather>>,
+    gacc: GatherBuf<P::Gather>,
     gacc_touched: Vec<VertexId>,
     /// Partials for vertices this worker masters itself (no message).
     self_partials: Vec<(VertexId, P::Gather)>,
@@ -59,6 +129,10 @@ pub struct WorkerState<P: VertexProgram> {
     seen_touched: Vec<VertexId>,
     /// Next-superstep activations this worker's masters learned about.
     next_active: Vec<VertexId>,
+    /// Intra-worker sweep threads, resolved once at build time
+    /// ([`pool::intra_threads`]); results are bit-identical at every
+    /// setting, only wall clock changes.
+    intra: usize,
 }
 
 /// Assemble one worker's state from its local edges, interest set and
@@ -88,13 +162,14 @@ fn make_state<P: VertexProgram>(
         masters: ms,
         lid,
         values,
-        accs: (0..len).map(|_| None).collect(),
-        gacc: (0..len).map(|_| None).collect(),
+        accs: GatherBuf::new(prog.gather_init(), len),
+        gacc: GatherBuf::new(prog.gather_init(), len),
         gacc_touched: Vec::new(),
         self_partials: Vec::new(),
         seen: vec![false; len],
         seen_touched: Vec::new(),
         next_active: Vec::new(),
+        intra: pool::intra_threads(),
     }
 }
 
@@ -168,9 +243,102 @@ pub fn build_one_worker_state<P: VertexProgram>(
     make_state(rank, n, local, vs, ms, prog, gi)
 }
 
-/// One sequential sweep over a worker's contiguous CSR pair array
-/// (grouped by the owning vertex): fold active vertices' edges into
-/// local partials. Memory access is linear — the engine's hottest loop.
+/// Cut a group-sorted pair list into chunks of roughly
+/// [`INTRA_CHUNK_EDGES`] edges, **never splitting a vertex group**.
+/// Returns ascending exclusive end offsets (the last is `list.len()`).
+/// A pure function of the list — identical at every thread count.
+fn chunk_cuts(list: &[Edge]) -> Vec<usize> {
+    let mut cuts = Vec::with_capacity(list.len() / INTRA_CHUNK_EDGES + 1);
+    let mut pos = 0usize;
+    while pos < list.len() {
+        let mut end = (pos + INTRA_CHUNK_EDGES).min(list.len());
+        while end < list.len() && list[end].0 == list[end - 1].0 {
+            end += 1;
+        }
+        cuts.push(end);
+        pos = end;
+    }
+    cuts
+}
+
+/// One sweep chunk's working set: its slice of the pair list plus the
+/// *disjoint* `&mut` window of the gather buffer covering exactly the
+/// local indices its vertices map to (pair lists are grouped by
+/// ascending owning vertex and `lid` is monotone, so the window is
+/// contiguous and chunks never overlap).
+struct SweepTask<'a, G> {
+    pairs: &'a [Edge],
+    lid_base: usize,
+    vals: &'a mut [G],
+    set: &'a mut [bool],
+}
+
+/// A chunk's fold partials, combined in chunk order by [`sweep`].
+struct SweepOut {
+    cost: f64,
+    count: u64,
+    touched: Vec<VertexId>,
+}
+
+/// Fold one chunk of a worker's CSR pair array (grouped by the owning
+/// vertex): active vertices' edges go into the chunk's gather-buffer
+/// window. Memory access is linear — the engine's hottest loop.
+#[allow(clippy::too_many_arguments)]
+fn sweep_chunk<P: VertexProgram>(
+    prog: &P,
+    g: &Graph,
+    gi: &GraphInfo<'_>,
+    step: usize,
+    dir: EdgeDirection,
+    needs_rank: bool,
+    op_cost: f64,
+    per_byte: f64,
+    task: SweepTask<'_, P::Gather>,
+    active: &[bool],
+    lid: &[u32],
+    values: &[P::Value],
+) -> SweepOut {
+    let SweepTask { pairs, lid_base, vals, set } = task;
+    let mut out = SweepOut { cost: 0.0, count: 0, touched: Vec::new() };
+    let mut i = 0usize;
+    while i < pairs.len() {
+        let v = pairs[i].0;
+        let mut j = i + 1;
+        while j < pairs.len() && pairs[j].0 == v {
+            j += 1;
+        }
+        if active[v as usize] {
+            let vl = lid[v as usize] as usize;
+            debug_assert_ne!(vl, NO_LID as usize, "edge endpoint must be replicated here");
+            let sl = vl - lid_base;
+            if !set[sl] {
+                // the slot already holds the fold identity (GatherBuf
+                // invariant) — first touch only records the vertex
+                set[sl] = true;
+                out.touched.push(v);
+            }
+            let acc = &mut vals[sl];
+            let v_val = &values[vl];
+            for &(_, u) in &pairs[i..j] {
+                let u_val = &values[lid[u as usize] as usize];
+                let rank = if needs_rank { edge_rank(g, u, v, dir) } else { 0 };
+                prog.gather_fold(acc, step, v, v_val, u, u_val, rank, gi);
+                out.cost += op_cost + per_byte * u_val.bytes() as f64;
+            }
+            out.count += (j - i) as u64;
+        }
+        i = j;
+    }
+    out
+}
+
+/// One whole-direction sweep over a worker's contiguous CSR pair array:
+/// cut it at vertex-group boundaries ([`chunk_cuts`]), carve each chunk
+/// a disjoint `&mut` window of the gather buffer, fan the chunks over
+/// up to `intra` threads, and fold the chunk partials **in chunk
+/// order** — the canonical chunked fold that makes every intra-thread
+/// setting produce identical bits (the sequential path runs the same
+/// chunks inline).
 #[allow(clippy::too_many_arguments)]
 fn sweep<P: VertexProgram>(
     prog: &P,
@@ -185,37 +353,58 @@ fn sweep<P: VertexProgram>(
     active: &[bool],
     lid: &[u32],
     values: &[P::Value],
-    gacc: &mut [Option<P::Gather>],
+    gacc: &mut GatherBuf<P::Gather>,
     touched: &mut Vec<VertexId>,
     cost: &mut f64,
     count: &mut u64,
+    intra: usize,
 ) {
-    let mut i = 0usize;
-    while i < list.len() {
-        let v = list[i].0;
-        let mut j = i + 1;
-        while j < list.len() && list[j].0 == v {
-            j += 1;
-        }
-        if active[v as usize] {
-            let vl = lid[v as usize] as usize;
-            debug_assert_ne!(vl, NO_LID as usize, "edge endpoint must be replicated here");
-            if gacc[vl].is_none() {
-                gacc[vl] = Some(prog.gather_init());
-                touched.push(v);
-            }
-            let acc = gacc[vl].as_mut().expect("just initialised");
-            let v_val = &values[vl];
-            for &(_, u) in &list[i..j] {
-                let u_val = &values[lid[u as usize] as usize];
-                let rank = if needs_rank { edge_rank(g, u, v, dir) } else { 0 };
-                prog.gather_fold(acc, step, v, v_val, u, u_val, rank, gi);
-                *cost += op_cost + per_byte * u_val.bytes() as f64;
-            }
-            *count += (j - i) as u64;
-        }
-        i = j;
+    if list.is_empty() {
+        return;
     }
+    let cuts = chunk_cuts(list);
+    let mut tasks: Vec<SweepTask<'_, P::Gather>> = Vec::with_capacity(cuts.len());
+    let mut rest_vals: &mut [P::Gather] = &mut gacc.vals;
+    let mut rest_set: &mut [bool] = &mut gacc.set;
+    let mut carved = 0usize;
+    let mut start = 0usize;
+    for &end in &cuts {
+        let lid_base = lid[list[start].0 as usize] as usize;
+        let lid_end = if end < list.len() {
+            lid[list[end].0 as usize] as usize
+        } else {
+            carved + rest_vals.len()
+        };
+        debug_assert!(carved <= lid_base && lid_base <= lid_end, "lid monotone over groups");
+        let (_, r) = std::mem::take(&mut rest_vals).split_at_mut(lid_base - carved);
+        let (mine_vals, r2) = r.split_at_mut(lid_end - lid_base);
+        rest_vals = r2;
+        let (_, s) = std::mem::take(&mut rest_set).split_at_mut(lid_base - carved);
+        let (mine_set, s2) = s.split_at_mut(lid_end - lid_base);
+        rest_set = s2;
+        tasks.push(SweepTask { pairs: &list[start..end], lid_base, vals: mine_vals, set: mine_set });
+        carved = lid_end;
+        start = end;
+    }
+    let outs = pool::parallel_map_tasks(intra, tasks, |t| {
+        sweep_chunk(prog, g, gi, step, dir, needs_rank, op_cost, per_byte, t, active, lid, values)
+    });
+    for o in outs {
+        *cost += o.cost;
+        *count += o.count;
+        touched.extend(o.touched);
+    }
+}
+
+/// A scatter chunk's partials: cost counters plus the activation
+/// *candidates* (every `u` whose scatter returned true, in edge
+/// order). Deduplication against the worker-global per-superstep
+/// `seen` set happens in the sequential chunk-order merge, which
+/// reproduces the exact sequential emission order.
+struct ScatterOut {
+    compute: f64,
+    visits: u64,
+    candidates: Vec<VertexId>,
 }
 
 impl<P: VertexProgram> WorkerState<P> {
@@ -267,14 +456,14 @@ impl<P: VertexProgram> WorkerState<P> {
             sweep(
                 prog, g, gi, step, dir, needs_rank, op_cost, per_byte, self.local.in_pairs(),
                 active, &self.lid, &self.values, &mut self.gacc, &mut self.gacc_touched, &mut cost,
-                &mut count,
+                &mut count, self.intra,
             );
         }
         if use_out {
             sweep(
                 prog, g, gi, step, dir, needs_rank, op_cost, per_byte, self.local.out_pairs(),
                 active, &self.lid, &self.values, &mut self.gacc, &mut self.gacc_touched, &mut cost,
-                &mut count,
+                &mut count, self.intra,
             );
         }
         out.stats.compute = cost;
@@ -282,7 +471,7 @@ impl<P: VertexProgram> WorkerState<P> {
         // flush partials toward the masters, in touch order
         for &v in &self.gacc_touched {
             let l = self.lid[v as usize] as usize;
-            let partial = self.gacc[l].take().expect("touched ⇒ some");
+            let partial = self.gacc.take(l);
             let m = p.master[v as usize];
             if m as usize == self.id {
                 self.self_partials.push((v, partial));
@@ -300,10 +489,12 @@ impl<P: VertexProgram> WorkerState<P> {
     fn fold_partial(&mut self, prog: &P, v: VertexId, partial: P::Gather) {
         let l = self.lid[v as usize] as usize;
         debug_assert_ne!(l, NO_LID as usize, "partials only target the vertex's master");
-        self.accs[l] = Some(match self.accs[l].take() {
-            None => partial,
-            Some(a) => prog.sum(a, partial),
-        });
+        if self.accs.is_set(l) {
+            let prev = self.accs.take(l);
+            self.accs.put(l, prog.sum(prev, partial));
+        } else {
+            self.accs.put(l, partial);
+        }
     }
 
     /// **Apply**: combine the inbound partials (ascending sender order,
@@ -352,7 +543,9 @@ impl<P: VertexProgram> WorkerState<P> {
                 continue;
             }
             let l = self.lid[v as usize] as usize;
-            let acc = self.accs[l].take().unwrap_or_else(|| prog.gather_init());
+            // an unset slot yields the fold identity — exactly the
+            // historical `unwrap_or(gather_init())` semantics
+            let acc = self.accs.take(l);
             let new_val = prog.apply(step, v, &self.values[l], acc, gi);
             out.stats.compute += prog.apply_cost(step, v, gi);
             out.stats.applies += 1;
@@ -410,6 +603,14 @@ impl<P: VertexProgram> WorkerState<P> {
     /// superstep: a locally mastered target is recorded directly, a
     /// remote one gets one [`Msg::Activate`] per (worker, target) per
     /// superstep, staged into `out` (reset first).
+    ///
+    /// The edge walk is chunked over the vertex list (edge-count
+    /// weighted, computed identically at every intra setting) and
+    /// fanned over up to `intra` threads; chunks only *collect*
+    /// activation candidates, and a sequential merge in chunk order
+    /// performs the worker-global dedup and emission — reproducing the
+    /// exact sequential emission order and the canonical chunked cost
+    /// fold.
     #[allow(clippy::too_many_arguments)]
     pub fn scatter_phase(
         &mut self,
@@ -429,31 +630,73 @@ impl<P: VertexProgram> WorkerState<P> {
         }
         let (use_in, use_out) = effective_dirs(dir, g.directed);
         let scatter_cost = prog.scatter_op_cost();
-        for vi in 0..self.verts.len() {
-            let v = self.verts[vi];
-            if !active[v as usize] {
-                continue;
+        let verts = &self.verts;
+        let local = &self.local;
+        let lid = &self.lid;
+        let values = &self.values;
+        // chunk bounds over the vertex list by local edge weight — a
+        // pure function of (graph, direction), never of the thread
+        // count or the activation set
+        let mut cuts: Vec<usize> = Vec::new();
+        let mut weight = 0usize;
+        for (vi, &v) in verts.iter().enumerate() {
+            if use_in {
+                weight += local.in_of(v).len();
             }
-            let vl = self.lid[v as usize] as usize;
-            let ins: &[Edge] = if use_in { self.local.in_of(v) } else { &[] };
-            let outs: &[Edge] = if use_out { self.local.out_of(v) } else { &[] };
-            for &(_, u) in ins.iter().chain(outs.iter()) {
-                out.stats.compute += scatter_cost;
-                out.stats.scatters += 1;
-                if prog.scatter(step, v, &self.values[vl], u, gi) {
-                    let ul = self.lid[u as usize] as usize;
-                    if !self.seen[ul] {
-                        self.seen[ul] = true;
-                        self.seen_touched.push(u);
-                        let mu = p.master[u as usize];
-                        if mu as usize == self.id {
-                            self.next_active.push(u);
-                        } else {
-                            out.push(
-                                cfg,
-                                Envelope { from: self.id as u16, to: mu, msg: Msg::Activate { v: u } },
-                            );
-                        }
+            if use_out {
+                weight += local.out_of(v).len();
+            }
+            if weight >= INTRA_CHUNK_EDGES {
+                cuts.push(vi + 1);
+                weight = 0;
+            }
+        }
+        if cuts.last().copied() != Some(verts.len()) && !verts.is_empty() {
+            cuts.push(verts.len());
+        }
+        let chunks = pool::parallel_map(self.intra, cuts.len(), |k| {
+            let lo = if k == 0 { 0 } else { cuts[k - 1] };
+            let hi = cuts[k];
+            let mut o = ScatterOut { compute: 0.0, visits: 0, candidates: Vec::new() };
+            for &v in &verts[lo..hi] {
+                if !active[v as usize] {
+                    continue;
+                }
+                let vl = lid[v as usize] as usize;
+                let ins: &[Edge] = if use_in { local.in_of(v) } else { &[] };
+                let outs: &[Edge] = if use_out { local.out_of(v) } else { &[] };
+                for &(_, u) in ins.iter().chain(outs.iter()) {
+                    o.compute += scatter_cost;
+                    o.visits += 1;
+                    if prog.scatter(step, v, &values[vl], u, gi) {
+                        o.candidates.push(u);
+                    }
+                }
+            }
+            o
+        });
+        // sequential merge in chunk order: worker-global dedup and the
+        // exact sequential emission order
+        for o in chunks {
+            out.stats.compute += o.compute;
+            out.stats.scatters += o.visits;
+            for u in o.candidates {
+                let ul = self.lid[u as usize] as usize;
+                if !self.seen[ul] {
+                    self.seen[ul] = true;
+                    self.seen_touched.push(u);
+                    let mu = p.master[u as usize];
+                    if mu as usize == self.id {
+                        self.next_active.push(u);
+                    } else {
+                        out.push(
+                            cfg,
+                            Envelope {
+                                from: self.id as u16,
+                                to: mu,
+                                msg: Msg::Activate { v: u },
+                            },
+                        );
                     }
                 }
             }
@@ -584,5 +827,44 @@ mod tests {
                 assert_ne!(s.lid[b as usize], NO_LID);
             }
         }
+    }
+
+    #[test]
+    fn chunk_cuts_respect_group_boundaries() {
+        // one oversized group plus a tail of small groups: the cut
+        // after the big group must land exactly on its boundary, and
+        // the cuts must partition the list
+        let mut list: Vec<Edge> = Vec::new();
+        for _ in 0..(INTRA_CHUNK_EDGES + 100) {
+            list.push((7, 1));
+        }
+        for v in 8..40u32 {
+            for u in 0..300u32 {
+                list.push((v, u));
+            }
+        }
+        let cuts = chunk_cuts(&list);
+        assert_eq!(*cuts.last().unwrap(), list.len());
+        assert!(cuts.windows(2).all(|w| w[0] < w[1]));
+        for &c in &cuts[..cuts.len() - 1] {
+            assert_ne!(list[c - 1].0, list[c].0, "cut at {c} splits a vertex group");
+        }
+        assert_eq!(cuts[0], INTRA_CHUNK_EDGES + 100, "big group closes its own chunk");
+        // degenerate inputs
+        assert!(chunk_cuts(&[]).is_empty());
+        assert_eq!(chunk_cuts(&[(1, 2)]), vec![1]);
+    }
+
+    #[test]
+    fn gather_buf_take_restores_identity() {
+        let mut buf = GatherBuf::new(0.25f64, 3);
+        assert!(!buf.is_set(1));
+        // an unset slot takes to the identity
+        assert_eq!(buf.take(1), 0.25);
+        buf.put(1, 9.0);
+        assert!(buf.is_set(1));
+        assert_eq!(buf.take(1), 9.0);
+        assert!(!buf.is_set(1));
+        assert_eq!(buf.take(1), 0.25, "take restores the identity value");
     }
 }

@@ -12,6 +12,12 @@
 //! moves envelopes out while keeping the batch capacity), so the
 //! steady-state superstep allocates nothing on the message path. This
 //! is the fastest backend and the one corpus construction uses.
+//!
+//! With `GPS_INTRA_THREADS > 1` the per-worker chunked sweeps inside
+//! [`WorkerState`] fan over the pool — in this sequential backend that
+//! intra-worker parallelism is the *only* parallelism, and results stay
+//! bit-identical at every setting (the canonical chunked fold,
+//! documented in [`super::super::state`]).
 
 use crate::graph::{Graph, VertexId};
 use crate::partition::Partitioning;

@@ -241,6 +241,12 @@ pub(crate) fn run<P: VertexProgram>(
     }
     let (report_tx, report_rx) = mpsc::channel::<Report<P>>();
 
+    // The worker threads are mandatory (one per worker is the BSP
+    // protocol, not elastic parallelism), so register them with the
+    // pool's budget arbiter: nested optional fan-outs — notably the
+    // intra-worker chunked sweeps — then see this pressure and shrink
+    // to inline instead of oversubscribing the machine.
+    let _worker_lease = crate::util::pool::lease_mandatory(w_count);
     std::thread::scope(|scope| {
         let gi_ref = &gi;
         let barrier_ref = &barrier;

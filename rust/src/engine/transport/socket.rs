@@ -203,6 +203,11 @@ fn connect_workers(w_count: usize) -> Result<Vec<WorkerLink>> {
             // --worker-rank and ends up back in this function, the
             // marker turns a would-be fork bomb into a clean error
             .env("GPS_SOCKET_WORKER", "1")
+            // a coordinator-side --intra-threads override would not
+            // cross the process boundary on its own; results are
+            // bit-identical at every setting, so this only equalises
+            // wall clock
+            .env("GPS_INTRA_THREADS", crate::util::pool::intra_threads().to_string())
             .stdin(Stdio::null())
             .stdout(Stdio::null())
             .stderr(Stdio::inherit())

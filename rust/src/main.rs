@@ -54,11 +54,15 @@
 //! Common flags: `--scale` (default 1/32 of the paper's dataset sizes),
 //! `--seed`, `--workers`, `--threads` (corpus-build parallelism;
 //! defaults to the `GPS_THREADS` env var, then to the machine's
-//! available cores), `--engine-mode simulated|threaded|socket` (engine
-//! backend; defaults to the `GPS_ENGINE_MODE` env var, then to
-//! `simulated`), and `--checkpoint-dir` (crash-safe corpus checkpoint
-//! directory; defaults to the `GPS_CHECKPOINT_DIR` env var, then to no
-//! checkpointing — see the README's corpus-checkpointing section).
+//! available cores), `--intra-threads` (per-engine-worker sweep
+//! parallelism; defaults to the `GPS_INTRA_THREADS` env var, then to 1
+//! — results are bit-identical at every setting, see the README's
+//! intra-worker parallelism section), `--engine-mode
+//! simulated|threaded|socket` (engine backend; defaults to the
+//! `GPS_ENGINE_MODE` env var, then to `simulated`), and
+//! `--checkpoint-dir` (crash-safe corpus checkpoint directory; defaults
+//! to the `GPS_CHECKPOINT_DIR` env var, then to no checkpointing — see
+//! the README's corpus-checkpointing section).
 //!
 //! `--worker-rank <r> --worker-connect <addr>` is the hidden entry
 //! point of the socket engine's worker processes: the coordinator
@@ -143,6 +147,10 @@ fn label_demand(args: &Args) -> Result<Option<Label>> {
 }
 
 fn dispatch(args: &Args) -> Result<()> {
+    // global knob, read by the engine on worker-state construction: a
+    // CLI value overrides the GPS_INTRA_THREADS env var for every
+    // subcommand that reaches the engine (0 = keep env/default)
+    gps_select::util::pool::set_intra_threads(args.get_usize("intra-threads", 0)?);
     match args.subcommand() {
         Some("figures") => cmd_figures(args),
         Some("pipeline") => cmd_pipeline(args),

@@ -17,11 +17,26 @@
 use crate::graph::Graph;
 use crate::util::rng::hash_u64;
 
-use super::{worker_of_hash, Partitioning};
+use super::{map_edges, worker_of_hash, Partitioning};
 
 /// PSID 11 — Ginger with the given in-degree threshold for the
 /// low/high-degree split (the paper pairs it with Hybrid's threshold).
+/// Sequential reference path.
 pub fn partition(g: &Graph, num_workers: usize, threshold: usize) -> Partitioning {
+    partition_threads(g, num_workers, threshold, 1)
+}
+
+/// Ginger with up to `threads` pool threads. The streaming Fennel
+/// owner loop is inherently order-dependent and stays sequential
+/// byte-for-byte; the *final* per-edge assignment (a pure function of
+/// the finished `owner` table) and the replica/master derivation fan
+/// over the pool — byte-identical by construction.
+pub fn partition_threads(
+    g: &Graph,
+    num_workers: usize,
+    threshold: usize,
+    threads: usize,
+) -> Partitioning {
     let n = g.num_vertices();
     let ratio = if g.num_edges() > 0 {
         n as f64 / g.num_edges() as f64
@@ -67,18 +82,14 @@ pub fn partition(g: &Graph, num_workers: usize, threshold: usize) -> Partitionin
         vcount[best_w] += 1;
         ecount[best_w] += indeg;
     }
-    let assign = g
-        .edges()
-        .iter()
-        .map(|&(u, v)| {
-            if g.in_degree(v) <= threshold {
-                owner[v as usize]
-            } else {
-                worker_of_hash(hash_u64(u as u64), num_workers)
-            }
-        })
-        .collect();
-    Partitioning::from_edge_assignment(g, num_workers, assign)
+    let assign = map_edges(g, threads, |(u, v)| {
+        if g.in_degree(v) <= threshold {
+            owner[v as usize]
+        } else {
+            worker_of_hash(hash_u64(u as u64), num_workers)
+        }
+    });
+    Partitioning::from_edge_assignment_threads(g, num_workers, assign, threads)
 }
 
 #[cfg(test)]

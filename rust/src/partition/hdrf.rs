@@ -25,13 +25,27 @@ use super::Partitioning;
 
 const EPS: f64 = 1.0;
 
-/// HDRF with balance weight `lambda`.
+/// HDRF with balance weight `lambda` (sequential reference path).
 ///
 /// The per-edge scoring scan is the partitioner's hot loop; for the
 /// common `|W| ≤ 64` case each endpoint's replica set is a single
 /// `u64` word, hoisted into registers so `C_REP` is two bit tests per
 /// worker instead of two bounds-checked bitset lookups.
 pub fn partition(g: &Graph, num_workers: usize, lambda: f64) -> Partitioning {
+    partition_threads(g, num_workers, lambda, 1)
+}
+
+/// HDRF with up to `threads` pool threads. The streaming scoring loop
+/// is order-dependent (scores read the loads and replica sets left by
+/// every earlier edge) and stays sequential byte-for-byte; only the
+/// replica/master derivation over the finished assignment fans over
+/// the pool (per-chunk counts and bitsets, order-independent merge).
+pub fn partition_threads(
+    g: &Graph,
+    num_workers: usize,
+    lambda: f64,
+    threads: usize,
+) -> Partitioning {
     let n = g.num_vertices();
     let mut replicas = ReplicaSets::new(n, num_workers);
     let mut load = vec![0usize; num_workers];
@@ -100,7 +114,7 @@ pub fn partition(g: &Graph, num_workers: usize, lambda: f64) -> Partitioning {
         }
         assign.push(best_w as u16);
     }
-    Partitioning::from_edge_assignment(g, num_workers, assign)
+    Partitioning::from_edge_assignment_threads(g, num_workers, assign, threads)
 }
 
 #[cfg(test)]

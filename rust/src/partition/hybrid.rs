@@ -10,25 +10,35 @@
 use crate::graph::Graph;
 use crate::util::rng::hash_u64;
 
-use super::{worker_of_hash, Partitioning};
+use super::{map_edges, worker_of_hash, Partitioning};
 
 /// PowerLyra's default degree threshold.
 pub const DEFAULT_THRESHOLD: usize = 100;
 
-/// PSID 5 — hybrid-cut with the given in-degree threshold.
+/// PSID 5 — hybrid-cut with the given in-degree threshold (sequential
+/// reference path).
 pub fn partition(g: &Graph, num_workers: usize, threshold: usize) -> Partitioning {
-    let assign = g
-        .edges()
-        .iter()
-        .map(|&(u, v)| {
-            if g.in_degree(v) <= threshold {
-                worker_of_hash(hash_u64(v as u64), num_workers)
-            } else {
-                worker_of_hash(hash_u64(u as u64), num_workers)
-            }
-        })
-        .collect();
-    Partitioning::from_edge_assignment(g, num_workers, assign)
+    partition_threads(g, num_workers, threshold, 1)
+}
+
+/// PSID 5 with up to `threads` pool threads. The degree "precompute"
+/// is the graph's own CSR (`in_degree` is an O(1) lookup), so the
+/// whole assignment is a pure per-edge function and the chunked
+/// parallel map is byte-identical.
+pub fn partition_threads(
+    g: &Graph,
+    num_workers: usize,
+    threshold: usize,
+    threads: usize,
+) -> Partitioning {
+    let assign = map_edges(g, threads, |(u, v)| {
+        if g.in_degree(v) <= threshold {
+            worker_of_hash(hash_u64(v as u64), num_workers)
+        } else {
+            worker_of_hash(hash_u64(u as u64), num_workers)
+        }
+    });
+    Partitioning::from_edge_assignment_threads(g, num_workers, assign, threads)
 }
 
 #[cfg(test)]

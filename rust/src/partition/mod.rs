@@ -38,6 +38,40 @@ use crate::graph::{Graph, VertexId};
 use crate::util::pool;
 use crate::util::rng::hash_u64;
 
+/// Target edges per chunk when a *single* partitioning call fans its
+/// per-edge work over the pool. Chunk boundaries are a pure function of
+/// the edge count — identical at every thread count — and the chunk
+/// results are concatenated (or merged order-independently) in chunk
+/// order, so the produced [`Partitioning`] is byte-identical to the
+/// sequential one.
+pub(crate) const SINGLE_PARTITION_CHUNK_EDGES: usize = 16_384;
+
+/// Apply a pure per-edge function over `g.edges()` in canonical order,
+/// fanning fixed-size chunks over up to `threads` pool threads. The
+/// chunks are concatenated in chunk order, so the result is the exact
+/// vector the sequential `edges().iter().map(f).collect()` produces —
+/// the backbone of every stateless hash strategy's parallel path.
+pub(crate) fn map_edges<F>(g: &Graph, threads: usize, f: F) -> Vec<u16>
+where
+    F: Fn((VertexId, VertexId)) -> u16 + Sync,
+{
+    let edges = g.edges();
+    if threads.max(1) <= 1 || edges.len() < 2 * SINGLE_PARTITION_CHUNK_EDGES {
+        return edges.iter().map(|&e| f(e)).collect();
+    }
+    let n_chunks = crate::util::div_ceil(edges.len(), SINGLE_PARTITION_CHUNK_EDGES);
+    let parts = pool::parallel_map(threads, n_chunks, |k| {
+        let lo = k * SINGLE_PARTITION_CHUNK_EDGES;
+        let hi = (lo + SINGLE_PARTITION_CHUNK_EDGES).min(edges.len());
+        edges[lo..hi].iter().map(|&e| f(e)).collect::<Vec<u16>>()
+    });
+    let mut out = Vec::with_capacity(edges.len());
+    for p in parts {
+        out.extend(p);
+    }
+    out
+}
+
 /// A partitioning strategy identifier (the paper's PSID column).
 pub type StrategyId = usize;
 
@@ -164,18 +198,45 @@ impl Strategy {
         }
     }
 
-    /// Run the strategy.
+    /// Run the strategy with up to [`pool::default_threads`] threads
+    /// speeding up this *single* partitioning call. The result is
+    /// byte-identical to the sequential computation (pinned by
+    /// `tests/intra_equivalence.rs`), and the pool's budget arbiter
+    /// keeps nested fan-outs (e.g. `warm_parallel` over many pairs)
+    /// from oversubscribing — inner calls simply run inline when the
+    /// budget is spent.
     pub fn partition(&self, g: &Graph, num_workers: usize) -> Partitioning {
+        self.partition_with_threads(g, num_workers, pool::default_threads())
+    }
+
+    /// Run the strategy using up to `threads` pool threads for the
+    /// per-edge work of this one call. Stateless hash strategies
+    /// parallelize their whole edge map; the stateful streaming
+    /// partitioners (HDRF/Ginger/Oblivious) keep their sequential core
+    /// byte-identical and parallelize the replica/master derivation
+    /// ([`Partitioning::from_edge_assignment_threads`]). `threads ≤ 1`
+    /// is the fully sequential reference path.
+    pub fn partition_with_threads(
+        &self,
+        g: &Graph,
+        num_workers: usize,
+        threads: usize,
+    ) -> Partitioning {
+        let t = threads;
         match self {
-            Strategy::OneDSrc => oned::partition_src(g, num_workers),
-            Strategy::OneDDst => oned::partition_dst(g, num_workers),
-            Strategy::Random => random::partition_random(g, num_workers),
-            Strategy::CanonicalRandom => random::partition_canonical(g, num_workers),
-            Strategy::TwoD => twod::partition(g, num_workers),
-            Strategy::Hybrid => hybrid::partition(g, num_workers, hybrid::DEFAULT_THRESHOLD),
-            Strategy::Oblivious => oblivious::partition(g, num_workers),
-            Strategy::Hdrf(l) => hdrf::partition(g, num_workers, *l as f64),
-            Strategy::Ginger => ginger::partition(g, num_workers, hybrid::DEFAULT_THRESHOLD),
+            Strategy::OneDSrc => oned::partition_src_threads(g, num_workers, t),
+            Strategy::OneDDst => oned::partition_dst_threads(g, num_workers, t),
+            Strategy::Random => random::partition_random_threads(g, num_workers, t),
+            Strategy::CanonicalRandom => random::partition_canonical_threads(g, num_workers, t),
+            Strategy::TwoD => twod::partition_threads(g, num_workers, t),
+            Strategy::Hybrid => {
+                hybrid::partition_threads(g, num_workers, hybrid::DEFAULT_THRESHOLD, t)
+            }
+            Strategy::Oblivious => oblivious::partition_threads(g, num_workers, t),
+            Strategy::Hdrf(l) => hdrf::partition_threads(g, num_workers, *l as f64, t),
+            Strategy::Ginger => {
+                ginger::partition_threads(g, num_workers, hybrid::DEFAULT_THRESHOLD, t)
+            }
         }
     }
 }
@@ -197,14 +258,88 @@ pub struct Partitioning {
 }
 
 impl Partitioning {
-    /// Derive replica/master structure from a per-edge assignment.
+    /// Derive replica/master structure from a per-edge assignment
+    /// (sequential reference path — see
+    /// [`Partitioning::from_edge_assignment_threads`]).
     pub fn from_edge_assignment(g: &Graph, num_workers: usize, edge_worker: Vec<u16>) -> Self {
+        Self::from_edge_assignment_threads(g, num_workers, edge_worker, 1)
+    }
+
+    /// Derive replica/master structure from a per-edge assignment,
+    /// fanning the per-edge scan over up to `threads` pool threads.
+    ///
+    /// The parallel path computes per-chunk worker edge counts (integer
+    /// sums — order-independent) and per-vertex replica *bitsets*
+    /// (OR-merged — a set union, also order-independent), then extracts
+    /// the sorted replica lists and masters exactly as the sequential
+    /// scan would: ascending bit extraction equals
+    /// `sort_unstable`-then-dedup of the insertion-order lists, and the
+    /// master formula reads only the sorted list. The result is
+    /// therefore **byte-identical** at every thread count. Graphs below
+    /// [`SINGLE_PARTITION_CHUNK_EDGES`]×2 edges and partitionings over
+    /// 64 workers (no single-word bitset) take the sequential path.
+    pub fn from_edge_assignment_threads(
+        g: &Graph,
+        num_workers: usize,
+        edge_worker: Vec<u16>,
+        threads: usize,
+    ) -> Self {
         assert_eq!(edge_worker.len(), g.num_edges());
         assert!(num_workers > 0 && num_workers <= u16::MAX as usize);
         let n = g.num_vertices();
+        let edges = g.edges();
+        if threads.max(1) > 1
+            && num_workers <= 64
+            && edges.len() >= 2 * SINGLE_PARTITION_CHUNK_EDGES
+        {
+            let n_chunks = crate::util::div_ceil(edges.len(), SINGLE_PARTITION_CHUNK_EDGES);
+            let ew = &edge_worker;
+            let parts = pool::parallel_map(threads, n_chunks, |k| {
+                let lo = k * SINGLE_PARTITION_CHUNK_EDGES;
+                let hi = (lo + SINGLE_PARTITION_CHUNK_EDGES).min(edges.len());
+                let mut counts = vec![0usize; num_workers];
+                let mut bits = vec![0u64; n];
+                for (e, &(u, v)) in edges[lo..hi].iter().enumerate() {
+                    let w = ew[lo + e];
+                    debug_assert!((w as usize) < num_workers);
+                    counts[w as usize] += 1;
+                    bits[u as usize] |= 1u64 << w;
+                    bits[v as usize] |= 1u64 << w;
+                }
+                (counts, bits)
+            });
+            let mut edges_per_worker = vec![0usize; num_workers];
+            let mut bits = vec![0u64; n];
+            for (counts, b) in parts {
+                for (t, c) in edges_per_worker.iter_mut().zip(counts) {
+                    *t += c;
+                }
+                for (t, x) in bits.iter_mut().zip(b) {
+                    *t |= x;
+                }
+            }
+            let mut replicas: Vec<Vec<u16>> = Vec::with_capacity(n);
+            let mut master = vec![0u16; n];
+            for (v, &word0) in bits.iter().enumerate() {
+                let mut word = word0;
+                let mut r = Vec::with_capacity(word.count_ones() as usize);
+                while word != 0 {
+                    r.push(word.trailing_zeros() as u16);
+                    word &= word - 1;
+                }
+                let h = (hash_u64(v as u64) % num_workers as u64) as u16;
+                master[v] = if r.is_empty() || r.contains(&h) {
+                    h
+                } else {
+                    r[(hash_u64(v as u64 ^ 0x5bd1e995) as usize) % r.len()]
+                };
+                replicas.push(r);
+            }
+            return Partitioning { num_workers, edge_worker, edges_per_worker, replicas, master };
+        }
         let mut edges_per_worker = vec![0usize; num_workers];
         let mut replicas: Vec<Vec<u16>> = vec![Vec::new(); n];
-        for (e, &(u, v)) in g.edges().iter().enumerate() {
+        for (e, &(u, v)) in edges.iter().enumerate() {
             let w = edge_worker[e];
             debug_assert!((w as usize) < num_workers);
             edges_per_worker[w as usize] += 1;
@@ -406,6 +541,26 @@ mod tests {
         assert!(p.replicas[2].contains(&p.master[2]));
         assert_eq!(p.num_mirrors(2), 1);
         assert_eq!(p.num_mirrors(0), 0);
+    }
+
+    /// The parallel replica/master derivation (per-chunk bitsets,
+    /// OR-merge) must be byte-identical to the sequential scan on a
+    /// graph large enough to actually take the chunked path.
+    #[test]
+    fn parallel_edge_assignment_matches_sequential() {
+        let mut rng = crate::util::rng::Rng::new(38);
+        let g = crate::graph::gen::erdos::generate("big", 3000, 40_000, true, &mut rng);
+        assert!(g.num_edges() >= 2 * SINGLE_PARTITION_CHUNK_EDGES, "graph must exceed threshold");
+        let assign: Vec<u16> =
+            (0..g.num_edges()).map(|i| (i % 8) as u16).collect();
+        let seq = Partitioning::from_edge_assignment_threads(&g, 8, assign.clone(), 1);
+        for threads in [2usize, 4, 8] {
+            let par = Partitioning::from_edge_assignment_threads(&g, 8, assign.clone(), threads);
+            assert_eq!(par.edge_worker, seq.edge_worker, "{threads} threads");
+            assert_eq!(par.edges_per_worker, seq.edges_per_worker, "{threads} threads");
+            assert_eq!(par.replicas, seq.replicas, "{threads} threads");
+            assert_eq!(par.master, seq.master, "{threads} threads");
+        }
     }
 
     #[test]

@@ -78,8 +78,16 @@ fn least_loaded(workers: impl Iterator<Item = usize>, load: &[usize]) -> Option<
     workers.min_by_key(|&w| (load[w], w))
 }
 
-/// PSID 6 — greedy Oblivious vertex-cut.
+/// PSID 6 — greedy Oblivious vertex-cut (sequential reference path).
 pub fn partition(g: &Graph, num_workers: usize) -> Partitioning {
+    partition_threads(g, num_workers, 1)
+}
+
+/// Oblivious with up to `threads` pool threads. The greedy placement
+/// stream is order-dependent by design and stays sequential
+/// byte-for-byte; only the replica/master derivation over the finished
+/// assignment fans over the pool.
+pub fn partition_threads(g: &Graph, num_workers: usize, threads: usize) -> Partitioning {
     let n = g.num_vertices();
     let mut replicas = ReplicaSets::new(n, num_workers);
     let mut load = vec![0usize; num_workers];
@@ -112,7 +120,7 @@ pub fn partition(g: &Graph, num_workers: usize) -> Partitioning {
         load[w] += 1;
         assign.push(w as u16);
     }
-    Partitioning::from_edge_assignment(g, num_workers, assign)
+    Partitioning::from_edge_assignment_threads(g, num_workers, assign, threads)
 }
 
 #[cfg(test)]

@@ -9,26 +9,29 @@
 use crate::graph::Graph;
 use crate::util::rng::hash_u64;
 
-use super::{worker_of_hash, Partitioning};
+use super::{map_edges, worker_of_hash, Partitioning};
 
-/// PSID 0 — hash of the source vertex.
+/// PSID 0 — hash of the source vertex (sequential reference path).
 pub fn partition_src(g: &Graph, num_workers: usize) -> Partitioning {
-    let assign = g
-        .edges()
-        .iter()
-        .map(|&(u, _)| worker_of_hash(hash_u64(u as u64), num_workers))
-        .collect();
-    Partitioning::from_edge_assignment(g, num_workers, assign)
+    partition_src_threads(g, num_workers, 1)
 }
 
-/// PSID 1 — hash of the destination vertex.
+/// PSID 0 with up to `threads` pool threads — the hash is a pure
+/// per-edge function, so the chunked parallel map is byte-identical.
+pub fn partition_src_threads(g: &Graph, num_workers: usize, threads: usize) -> Partitioning {
+    let assign = map_edges(g, threads, |(u, _)| worker_of_hash(hash_u64(u as u64), num_workers));
+    Partitioning::from_edge_assignment_threads(g, num_workers, assign, threads)
+}
+
+/// PSID 1 — hash of the destination vertex (sequential reference path).
 pub fn partition_dst(g: &Graph, num_workers: usize) -> Partitioning {
-    let assign = g
-        .edges()
-        .iter()
-        .map(|&(_, v)| worker_of_hash(hash_u64(v as u64), num_workers))
-        .collect();
-    Partitioning::from_edge_assignment(g, num_workers, assign)
+    partition_dst_threads(g, num_workers, 1)
+}
+
+/// PSID 1 with up to `threads` pool threads.
+pub fn partition_dst_threads(g: &Graph, num_workers: usize, threads: usize) -> Partitioning {
+    let assign = map_edges(g, threads, |(_, v)| worker_of_hash(hash_u64(v as u64), num_workers));
+    Partitioning::from_edge_assignment_threads(g, num_workers, assign, threads)
 }
 
 #[cfg(test)]

@@ -9,7 +9,7 @@
 use crate::graph::Graph;
 use crate::util::rng::{cantor_pair, fnv1a64};
 
-use super::{worker_of_hash, Partitioning};
+use super::{map_edges, worker_of_hash, Partitioning};
 
 fn pair_hash(a: u64, b: u64) -> u64 {
     // Cantor-pair to one dimension, then mix through FNV so the worker
@@ -18,27 +18,32 @@ fn pair_hash(a: u64, b: u64) -> u64 {
     fnv1a64(&p.to_le_bytes())
 }
 
-/// PSID 2 — order-sensitive pair hash.
+/// PSID 2 — order-sensitive pair hash (sequential reference path).
 pub fn partition_random(g: &Graph, num_workers: usize) -> Partitioning {
-    let assign = g
-        .edges()
-        .iter()
-        .map(|&(u, v)| worker_of_hash(pair_hash(u as u64, v as u64), num_workers))
-        .collect();
-    Partitioning::from_edge_assignment(g, num_workers, assign)
+    partition_random_threads(g, num_workers, 1)
 }
 
-/// PSID 3 — order-insensitive (canonical) pair hash.
+/// PSID 2 with up to `threads` pool threads — pure per-edge hash, so
+/// the chunked parallel map is byte-identical.
+pub fn partition_random_threads(g: &Graph, num_workers: usize, threads: usize) -> Partitioning {
+    let assign =
+        map_edges(g, threads, |(u, v)| worker_of_hash(pair_hash(u as u64, v as u64), num_workers));
+    Partitioning::from_edge_assignment_threads(g, num_workers, assign, threads)
+}
+
+/// PSID 3 — order-insensitive (canonical) pair hash (sequential
+/// reference path).
 pub fn partition_canonical(g: &Graph, num_workers: usize) -> Partitioning {
-    let assign = g
-        .edges()
-        .iter()
-        .map(|&(u, v)| {
-            let (a, b) = if u <= v { (u, v) } else { (v, u) };
-            worker_of_hash(pair_hash(a as u64, b as u64), num_workers)
-        })
-        .collect();
-    Partitioning::from_edge_assignment(g, num_workers, assign)
+    partition_canonical_threads(g, num_workers, 1)
+}
+
+/// PSID 3 with up to `threads` pool threads.
+pub fn partition_canonical_threads(g: &Graph, num_workers: usize, threads: usize) -> Partitioning {
+    let assign = map_edges(g, threads, |(u, v)| {
+        let (a, b) = if u <= v { (u, v) } else { (v, u) };
+        worker_of_hash(pair_hash(a as u64, b as u64), num_workers)
+    });
+    Partitioning::from_edge_assignment_threads(g, num_workers, assign, threads)
 }
 
 #[cfg(test)]

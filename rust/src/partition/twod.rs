@@ -10,7 +10,7 @@
 use crate::graph::Graph;
 use crate::util::rng::hash_u64;
 
-use super::Partitioning;
+use super::{map_edges, Partitioning};
 
 /// Choose the most-square factorisation `r × c = w` with `r ≤ c`.
 pub fn grid_shape(w: usize) -> (usize, usize) {
@@ -25,19 +25,22 @@ pub fn grid_shape(w: usize) -> (usize, usize) {
     best
 }
 
-/// PSID 4 — two independent 1-D hashes onto a worker grid.
+/// PSID 4 — two independent 1-D hashes onto a worker grid (sequential
+/// reference path).
 pub fn partition(g: &Graph, num_workers: usize) -> Partitioning {
+    partition_threads(g, num_workers, 1)
+}
+
+/// PSID 4 with up to `threads` pool threads — the tile hash is a pure
+/// per-edge function, so the chunked parallel map is byte-identical.
+pub fn partition_threads(g: &Graph, num_workers: usize, threads: usize) -> Partitioning {
     let (rows, cols) = grid_shape(num_workers);
-    let assign = g
-        .edges()
-        .iter()
-        .map(|&(u, v)| {
-            let r = (hash_u64(u as u64) % rows as u64) as usize;
-            let c = (hash_u64(v as u64 ^ 0x9e3779b9) % cols as u64) as usize;
-            (r * cols + c) as u16
-        })
-        .collect();
-    Partitioning::from_edge_assignment(g, num_workers, assign)
+    let assign = map_edges(g, threads, |(u, v)| {
+        let r = (hash_u64(u as u64) % rows as u64) as usize;
+        let c = (hash_u64(v as u64 ^ 0x9e3779b9) % cols as u64) as usize;
+        (r * cols + c) as u16
+    });
+    Partitioning::from_edge_assignment_threads(g, num_workers, assign, threads)
 }
 
 #[cfg(test)]

@@ -4,9 +4,28 @@
 //! vector is always in task order — callers get deterministic output
 //! regardless of thread count or scheduling.
 //!
-//! The thread count comes from the `GPS_THREADS` environment variable
-//! (or a CLI `--threads` override upstream), defaulting to the machine's
-//! available parallelism.
+//! Two thread-count knobs feed the pool:
+//!
+//! * `GPS_THREADS` (or the CLI `--threads` override upstream) — the
+//!   *outer* worker count for corpus-style fan-out, defaulting to the
+//!   machine's available parallelism.
+//! * `GPS_INTRA_THREADS` (or `--intra-threads` /
+//!   [`set_intra_threads`]) — the *intra-worker* count used by the
+//!   engine's chunked gather/scatter sweeps and by single-partition
+//!   chunking, defaulting to `1` (opt-in: the common corpus workload is
+//!   already saturated by the outer pool).
+//!
+//! Because those pools nest (corpus threads × engine workers × intra
+//! threads), every spawn routes through a process-wide **budget
+//! arbiter**: a global counter of extra threads currently leased,
+//! capped at the machine's available parallelism. A [`lease`] never
+//! blocks — when the budget is exhausted it simply grants fewer (or
+//! zero) extra threads and the caller runs with less parallelism, which
+//! is always legal because every parallel path here is bit-identical to
+//! its sequential path by construction. Mandatory spawns that cannot be
+//! shrunk (the thread-per-worker engine transport) register through
+//! [`lease_mandatory`] so optional nested parallelism sees their
+//! pressure.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -41,6 +60,103 @@ fn available_parallelism() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Process-wide intra-thread override installed by `--intra-threads`
+/// (`0` = no override; fall back to the environment rule).
+static INTRA_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Install (or with `0`, clear) the process-wide intra-worker thread
+/// override — the CLI `--intra-threads` flag and the bench ladders land
+/// here. Takes precedence over `GPS_INTRA_THREADS`.
+pub fn set_intra_threads(n: usize) {
+    INTRA_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// The intra-worker thread count for chunked phase sweeps:
+/// [`set_intra_threads`] override first, then `GPS_INTRA_THREADS`,
+/// defaulting to `1` (intra parallelism is opt-in — results are
+/// bit-identical at every setting, only wall-clock changes).
+pub fn intra_threads() -> usize {
+    match INTRA_OVERRIDE.load(Ordering::Relaxed) {
+        0 => intra_from(std::env::var("GPS_INTRA_THREADS").ok().as_deref()),
+        n => n,
+    }
+}
+
+/// `GPS_INTRA_THREADS` parsing rule: positive integers are honoured,
+/// everything else (unset included) means sequential sweeps.
+pub(crate) fn intra_from(value: Option<&str>) -> usize {
+    match value.and_then(|v| v.trim().parse::<usize>().ok()) {
+        Some(n) if n > 0 => n,
+        _ => 1,
+    }
+}
+
+/// Extra threads (beyond the calling thread) currently leased
+/// process-wide.
+static LEASED: AtomicUsize = AtomicUsize::new(0);
+
+/// The process-wide budget of *extra* threads: everything beyond the
+/// one thread a caller already runs on, capped at the hardware.
+fn extra_budget() -> usize {
+    available_parallelism().saturating_sub(1)
+}
+
+/// A granted slice of the process-wide thread budget; returned to the
+/// pool on drop. [`Lease::granted`] is how many *extra* threads the
+/// holder may spawn.
+pub struct Lease {
+    granted: usize,
+}
+
+impl Lease {
+    /// Extra threads this lease covers.
+    pub fn granted(&self) -> usize {
+        self.granted
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        if self.granted > 0 {
+            LEASED.fetch_sub(self.granted, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Lease up to `requested` extra threads from the process-wide budget.
+/// Never blocks: grants `min(requested, budget - leased)`, possibly
+/// zero — the caller then runs with fewer threads (or inline), which
+/// every pool code path supports bit-identically.
+pub fn lease(requested: usize) -> Lease {
+    if requested == 0 {
+        return Lease { granted: 0 };
+    }
+    let cap = extra_budget();
+    let mut cur = LEASED.load(Ordering::Relaxed);
+    loop {
+        let take = requested.min(cap.saturating_sub(cur));
+        if take == 0 {
+            return Lease { granted: 0 };
+        }
+        match LEASED.compare_exchange_weak(cur, cur + take, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return Lease { granted: take },
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// Register `n` extra threads unconditionally — for spawns whose count
+/// is semantic rather than elastic (the thread-per-worker engine
+/// transport needs every worker thread live for its BSP protocol).
+/// Overshooting the budget is allowed; nested *optional* leases then
+/// see zero remaining and stay inline, which is the whole point.
+pub fn lease_mandatory(n: usize) -> Lease {
+    if n > 0 {
+        LEASED.fetch_add(n, Ordering::Relaxed);
+    }
+    Lease { granted: n }
+}
+
 /// Run `f(0), f(1), …, f(n_tasks - 1)` on up to `threads` scoped worker
 /// threads and collect the results **in task order**.
 ///
@@ -48,14 +164,21 @@ fn available_parallelism() -> usize {
 /// deterministic output, a pure function of its index. With `threads`
 /// ≤ 1 (or a single task) everything runs inline on the caller's
 /// thread — the sequential and parallel paths produce identical output
-/// by construction. A panic inside any task propagates to the caller
-/// once the scope joins.
+/// by construction. The spawn count is additionally clipped by the
+/// budget arbiter ([`lease`]), so nested pools cannot oversubscribe the
+/// machine. A panic inside any task propagates to the caller once the
+/// scope joins.
 pub fn parallel_map<T, F>(threads: usize, n_tasks: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
     let threads = threads.max(1).min(n_tasks.max(1));
+    if threads == 1 {
+        return (0..n_tasks).map(f).collect();
+    }
+    let budget = lease(threads - 1);
+    let threads = budget.granted() + 1;
     if threads == 1 {
         return (0..n_tasks).map(f).collect();
     }
@@ -69,6 +192,55 @@ where
                     break;
                 }
                 let out = f(i);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("every claimed task completes"))
+        .collect()
+}
+
+/// Like [`parallel_map`] but over a vector of **owned** task values,
+/// each consumed exactly once — the shape the engine's chunked sweeps
+/// need, because a task can then carry a pre-split `&mut` sub-slice of
+/// a shared buffer (disjointness proven to the borrow checker by
+/// `split_at_mut`, not by a runtime lock).
+///
+/// Results come back **in task order**; with `threads` ≤ 1 (or ≤ 1
+/// task, or an exhausted budget) everything runs inline on the caller's
+/// thread over the *same* task sequence, so sequential and parallel
+/// executions are bit-identical by construction.
+pub fn parallel_map_tasks<T, R, F>(threads: usize, tasks: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n_tasks = tasks.len();
+    let mut threads = threads.max(1).min(n_tasks.max(1));
+    let mut budget = Lease { granted: 0 };
+    if threads > 1 {
+        budget = lease(threads - 1);
+        threads = budget.granted() + 1;
+    }
+    let _hold = budget;
+    if threads == 1 {
+        return tasks.into_iter().map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let inputs: Vec<Mutex<Option<T>>> = tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let slots: Vec<Mutex<Option<R>>> = (0..n_tasks).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_tasks {
+                    break;
+                }
+                let task = inputs[i].lock().unwrap().take().expect("each task is claimed once");
+                let out = f(task);
                 *slots[i].lock().unwrap() = Some(out);
             });
         }
@@ -118,5 +290,84 @@ mod tests {
         assert!(threads_from(Some("0")) >= 1);
         assert!(threads_from(Some("lots")) >= 1);
         assert!(threads_from(None) >= 1);
+    }
+
+    #[test]
+    fn intra_from_env_rule() {
+        // unlike GPS_THREADS, the intra default is sequential
+        assert_eq!(intra_from(None), 1);
+        assert_eq!(intra_from(Some("0")), 1);
+        assert_eq!(intra_from(Some("junk")), 1);
+        assert_eq!(intra_from(Some("4")), 4);
+        assert_eq!(intra_from(Some(" 2 ")), 2);
+    }
+
+    #[test]
+    fn tasks_preserve_order_and_consume_each_once() {
+        let tasks: Vec<Vec<u64>> = (0..40).map(|i| vec![i as u64; 3]).collect();
+        let out = parallel_map_tasks(4, tasks, |t| t.iter().sum::<u64>());
+        assert_eq!(out, (0..40u64).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tasks_match_sequential_path() {
+        let mk = || (0..25usize).map(|i| i.wrapping_mul(31)).collect::<Vec<usize>>();
+        let f = |t: usize| (t as u64).rotate_left(11) ^ 0xabcd;
+        assert_eq!(parallel_map_tasks(1, mk(), f), parallel_map_tasks(8, mk(), f));
+        assert_eq!(parallel_map_tasks(3, Vec::<usize>::new(), f), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn tasks_can_carry_mutable_slices() {
+        // the engine-sweep shape: disjoint &mut chunks of one buffer
+        let mut buf = vec![0u32; 64];
+        let chunks: Vec<&mut [u32]> = buf.chunks_mut(16).collect();
+        let sums = parallel_map_tasks(4, chunks, |chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = i as u32 + 1;
+            }
+            chunk.iter().sum::<u32>()
+        });
+        assert_eq!(sums, vec![136; 4]);
+        assert_eq!(buf[..16], buf[16..32]);
+    }
+
+    #[test]
+    fn lease_never_blocks_and_caps_at_budget() {
+        let l = lease(usize::MAX / 2);
+        assert!(l.granted() <= extra_budget());
+        // zero-requests are free
+        assert_eq!(lease(0).granted(), 0);
+    }
+
+    #[test]
+    fn saturated_budget_grants_nothing_but_work_still_runs() {
+        // a mandatory lease for the whole budget starves optional leases
+        let hold = lease_mandatory(extra_budget().max(1));
+        assert_eq!(lease(4).granted(), 0, "budget saturated");
+        // pools still complete — they just run inline
+        assert_eq!(parallel_map(8, 10, |i| i + 1), (1..=10).collect::<Vec<_>>());
+        let tasks: Vec<usize> = (0..10).collect();
+        assert_eq!(parallel_map_tasks(8, tasks, |i| i + 1), (1..=10).collect::<Vec<_>>());
+        drop(hold);
+    }
+
+    #[test]
+    fn dropped_lease_returns_budget() {
+        // saturate, release, and the next lease can grant again (when
+        // the machine has any extra budget at all)
+        let hold = lease_mandatory(extra_budget().max(1));
+        drop(hold);
+        let l = lease(1);
+        assert!(l.granted() <= 1);
+    }
+
+    #[test]
+    fn intra_override_wins_over_env() {
+        // the override is process-global; restore it for other tests
+        set_intra_threads(3);
+        assert_eq!(intra_threads(), 3);
+        set_intra_threads(0);
+        assert!(intra_threads() >= 1);
     }
 }

@@ -1,0 +1,122 @@
+//! Intra-worker parallelism equivalence: with `GPS_INTRA_THREADS > 1`
+//! each engine worker fans its gather/scatter sweeps over deterministic
+//! CSR chunks, and single-(graph,strategy) partitioning calls fan their
+//! per-edge work over the pool — both must be **bit-identical** to the
+//! sequential computation. The engine side is pinned across all three
+//! transports (final values through `value_hash`, the full `OpCounts`,
+//! the simulated-time label and the checksum); the partition side is
+//! pinned field-by-field over the whole strategy inventory. This is the
+//! property that makes the intra-thread count a pure wall-clock knob:
+//! no corpus label, fingerprint or figure can depend on it.
+
+use std::sync::Mutex;
+
+use gps_select::algorithms::{Algorithm, SimOutcome};
+use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::transport::socket;
+use gps_select::engine::ExecutionMode;
+use gps_select::graph::Graph;
+use gps_select::partition::Strategy;
+use gps_select::util::pool;
+use gps_select::util::rng::Rng;
+
+/// The intra-thread override is process-global; the tests that mutate
+/// it serialize on this lock so libtest's parallel runner cannot
+/// interleave their settings.
+static INTRA_LOCK: Mutex<()> = Mutex::new(());
+
+/// The socket backend spawns worker processes; point it at the repro
+/// CLI, which installs the `--worker-rank` hook (the test binary's
+/// libtest main does not).
+fn use_repro_workers() {
+    socket::set_worker_binary(env!("CARGO_BIN_EXE_repro"));
+}
+
+fn assert_matches_reference(ctx: &str, sim: &SimOutcome, other: &SimOutcome) {
+    assert_eq!(sim.value_hash, other.value_hash, "{ctx}: values must be bit-identical");
+    assert_eq!(sim.ops, other.ops, "{ctx}: op counts must match");
+    assert_eq!(
+        sim.sim.total.to_bits(),
+        other.sim.total.to_bits(),
+        "{ctx}: simulated time must be bit-identical ({} vs {})",
+        sim.sim.total,
+        other.sim.total
+    );
+    assert_eq!(sim.checksum.to_bits(), other.checksum.to_bits(), "{ctx}: checksums must match");
+}
+
+fn assert_intra_equivalent(g: &Graph, workers: usize, modes: &[ExecutionMode]) {
+    let cfg = ClusterConfig::with_workers(workers);
+    let p = Strategy::Hdrf(50).partition(g, workers);
+    for a in Algorithm::all() {
+        pool::set_intra_threads(1);
+        let reference = a.execute(g, &p, &cfg, ExecutionMode::Simulated);
+        for intra in [1usize, 2, 4] {
+            pool::set_intra_threads(intra);
+            for &mode in modes {
+                let got = a.execute(g, &p, &cfg, mode);
+                let ctx = format!(
+                    "{}/{} at {workers} workers, intra={intra} ({} mode)",
+                    g.name,
+                    a.name(),
+                    mode.name()
+                );
+                assert_matches_reference(&ctx, &reference, &got);
+            }
+        }
+    }
+    pool::set_intra_threads(0);
+}
+
+/// Fast debug-mode pin: every algorithm on the sequential oracle, small
+/// directed and undirected graphs (the undirected case exercises the
+/// both-direction chunked sweeps), intra ∈ {1, 2, 4}.
+#[test]
+fn intra_chunked_sweeps_match_sequential_simulated() {
+    let _guard = INTRA_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(7171);
+    let gd =
+        gps_select::graph::gen::chung_lu::generate("intra-eq-d", 400, 2400, 2.2, true, &mut rng);
+    assert_intra_equivalent(&gd, 4, &[ExecutionMode::Simulated]);
+    let gu = gps_select::graph::gen::erdos::generate("intra-eq-u", 300, 1500, false, &mut rng);
+    assert_intra_equivalent(&gu, 3, &[ExecutionMode::Simulated]);
+}
+
+/// The full acceptance matrix (release-only; the debug tier skips on
+/// the `bit_identical_to_simulated` name filter): all 8 algorithms ×
+/// intra ∈ {1, 2, 4} × all three transports on a ~40k-edge power-law
+/// graph, every cell compared against the intra=1 simulated reference.
+#[test]
+fn intra_threads_are_bit_identical_to_simulated_all_transports() {
+    let _guard = INTRA_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    use_repro_workers();
+    let mut rng = Rng::new(9090);
+    let g =
+        gps_select::graph::gen::chung_lu::generate("intra-eq", 8_000, 40_000, 2.1, true, &mut rng);
+    assert_intra_equivalent(
+        &g,
+        4,
+        &[ExecutionMode::Simulated, ExecutionMode::Threaded, ExecutionMode::Socket],
+    );
+}
+
+/// Chunked single-partition parallelism ≡ sequential, field by field,
+/// for every strategy in the inventory plus Oblivious — on a graph past
+/// the parallel-path threshold so the chunked code actually runs.
+#[test]
+fn parallel_single_partition_matches_sequential_for_all_strategies() {
+    let mut rng = Rng::new(6161);
+    let g = gps_select::graph::gen::erdos::generate("part-eq", 6_000, 40_000, true, &mut rng);
+    let workers = 8;
+    for s in Strategy::all() {
+        let seq = s.partition_with_threads(&g, workers, 1);
+        for threads in [2usize, 4, 8] {
+            let par = s.partition_with_threads(&g, workers, threads);
+            let ctx = format!("{} at {threads} threads", s.name());
+            assert_eq!(seq.edge_worker, par.edge_worker, "{ctx}: edge assignment");
+            assert_eq!(seq.edges_per_worker, par.edges_per_worker, "{ctx}: per-worker counts");
+            assert_eq!(seq.replicas, par.replicas, "{ctx}: replica sets");
+            assert_eq!(seq.master, par.master, "{ctx}: master designation");
+        }
+    }
+}

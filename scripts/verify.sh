@@ -35,6 +35,13 @@ cargo test -q -- --skip bit_identical_to_simulated
 # engine worker, exercising the wire serialization end to end.
 cargo test -q --release --test mode_equivalence
 
+# Intra-worker parallelism equivalence, release: every GPS_INTRA_THREADS
+# setting must be bit-identical to the sequential sweep across all
+# three transports (the canonical chunked fold), and the chunked
+# single-partition path must match the sequential partitioner field by
+# field for every strategy in the inventory.
+cargo test -q --release --test intra_equivalence
+
 # Wire-format property gate in release too: Envelope → bytes → Envelope
 # round-trips bit-exactly for every Msg variant.
 cargo test -q --release --test wire_roundtrip
@@ -78,7 +85,8 @@ echo "verify: model save→load→select round-trip is bit-identical (and label 
 
 # Engine bench smoke in release mode (~20 s): runs only the engine
 # rows of benches/hotpath.rs (the execution-mode triple, the CSR and
-# wire micro-pairs, the partition-warm thread ladder — no full
+# wire micro-pairs, the partition-warm thread ladder, the intra-worker
+# sweep ladder and the single-partition thread ladder — no full
 # cargo-bench sweep). The fresh run is gated against the committed
 # baseline at the repository root two ways:
 #
