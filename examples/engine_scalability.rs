@@ -16,7 +16,7 @@
 //! default simulated oracle either way.
 
 use gps_select::algorithms::Algorithm;
-use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::cluster::ClusterSpec;
 use gps_select::engine::ExecutionMode;
 use gps_select::graph::datasets::DatasetSpec;
 use gps_select::partition::Strategy;
@@ -47,7 +47,7 @@ fn main() -> Result<()> {
     );
     let mut base: Option<(f64, f64)> = None;
     for &w in &[4usize, 8, 16, 32, 64] {
-        let cfg = ClusterConfig::with_workers(w);
+        let cfg = ClusterSpec::with_workers(w);
         let p = Strategy::TwoD.partition(&g, w);
         let pr = Algorithm::Pr.execute(&g, &p, &cfg, mode).sim.total;
         let tc = Algorithm::Tc.execute(&g, &p, &cfg, mode).sim.total;

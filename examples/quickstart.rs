@@ -6,7 +6,7 @@
 //! ```
 
 use gps_select::algorithms::Algorithm;
-use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::cluster::ClusterSpec;
 use gps_select::graph::datasets::DatasetSpec;
 use gps_select::partition::metrics::PartitionMetrics;
 use gps_select::partition::Strategy;
@@ -36,7 +36,7 @@ fn main() -> Result<()> {
     );
 
     // 2. partition with every strategy and report quality + PR time
-    let cfg = ClusterConfig::with_workers(workers);
+    let cfg = ClusterSpec::with_workers(workers);
     println!(
         "\n{:<10} {:>12} {:>13} {:>14}",
         "strategy", "replication", "edge balance", "PR time (s)"

@@ -24,8 +24,10 @@
 //! talks to a running selection daemon (`repro serve`) over its
 //! checksummed wire protocol: it extracts the features for
 //! `--graph`/`--algorithm` locally, ships them as raw bit patterns,
-//! and prints the daemon's picks. `--bits-out <file>` writes the
-//! served prediction tables in the canonical probe-bits form (for
+//! and prints the daemon's picks. `--cluster <preset|file>` attaches a
+//! heterogeneous cluster descriptor to the request (proto v2; the
+//! daemon conditions its selections on it), `--bits-out <file>` writes
+//! the served prediction tables in the canonical probe-bits form (for
 //! byte-comparison against offline `repro select --bits-out`), and
 //! `--shutdown` drains and stops the daemon afterwards:
 //!
@@ -36,6 +38,7 @@
 //!
 //! Results are recorded in EXPERIMENTS.md.
 
+use gps_select::engine::cluster::ClusterSpec;
 use gps_select::etrm::EtrmBackend;
 use gps_select::eval::pipeline::{self, Evaluation, PipelineConfig, TaskEval};
 use gps_select::eval::figures;
@@ -60,6 +63,7 @@ fn main() -> Result<()> {
         seed: args.get_u64("seed", default.seed)?,
         workers: args.get_usize("workers", default.workers)?,
         threads: args.get_usize("threads", default.threads)?,
+        cluster: args.get("cluster").map(ClusterSpec::parse).transpose()?,
         checkpoint_dir: gps_select::dataset::checkpoint::resolve_dir(args.get("checkpoint-dir")),
         augment_cap: Some(args.get_usize("cap", 40_000)?),
         gbdt: GbdtParams {
@@ -151,10 +155,13 @@ fn client_mode(args: &Args, addr: &str) -> Result<()> {
     let names: Vec<&str> =
         args.get_or("algorithm", "PR").split(',').collect();
     let (algos, tasks) = app::algorithm_tasks(&g, &names)?;
+    // optional heterogeneous cluster descriptor: ships as a proto v2
+    // frame; without it the request is byte-identical to proto v1
+    let cluster = args.get("cluster").map(ClusterSpec::parse).transpose()?;
 
     let mut client = Client::connect(addr)?;
     client.set_timeout(std::time::Duration::from_secs(30))?;
-    let reply = client.select(&tasks, true)?;
+    let reply = client.select_with_cluster(&tasks, true, cluster.as_ref())?;
     println!(
         "daemon at {addr}: {} backend, {} label, artifact fingerprint {:016x}",
         reply.backend, reply.label, reply.fingerprint

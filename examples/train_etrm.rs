@@ -19,7 +19,7 @@
 use gps_select::dataset::augment::augment;
 use gps_select::dataset::logs::LogStore;
 use gps_select::dataset::split::test_split;
-use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::cluster::ClusterSpec;
 use gps_select::etrm::scores::{rank_of_selected, TaskScores};
 use gps_select::etrm::Etrm;
 use gps_select::features::TaskFeatures;
@@ -88,7 +88,7 @@ fn main() -> Result<()> {
     let seed = args.get_u64("seed", 42)?;
     let cap = args.get_usize("cap", 20_000)?;
     let label = Label::resolve(args.get("label"))?;
-    let cfg = ClusterConfig::with_workers(args.get_usize("workers", 64)?);
+    let cfg = ClusterSpec::with_workers(args.get_usize("workers", 64)?);
 
     eprintln!("building corpus at scale {scale}…");
     let store = LogStore::build_corpus(scale, seed, &cfg)?;

@@ -31,7 +31,7 @@ from compile import model
 # ---- static artifact shapes (mirrored in rust/src/runtime/mod.rs) ----
 MOMENTS_N = 1 << 16          # degree-array chunk (rust merges chunks)
 GBDT_BATCH = 16              # ≥ the 11-strategy inventory
-GBDT_FEATURES = 52           # features::encoding::FEATURE_DIM
+GBDT_FEATURES = 59           # features::encoding::FEATURE_DIM (52 paper cols + 7 cluster)
 GBDT_TREES = 1024            # ≥ the paper's n_estimators = 1000
 GBDT_NODES = 256             # padded nodes per tree
 GBDT_DEPTH = 15              # paper max_depth

@@ -17,7 +17,7 @@ mod common;
 use gps_select::dataset::augment::augment;
 use gps_select::dataset::logs::LogStore;
 use gps_select::dataset::split::test_split;
-use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::cluster::ClusterSpec;
 use gps_select::etrm::scores::{rank_of_selected, TaskScores};
 use gps_select::etrm::Etrm;
 use gps_select::ml::gbdt::GbdtParams;
@@ -57,7 +57,7 @@ fn evaluate(etrm: &Etrm, store: &LogStore) -> Outcome {
 fn main() {
     let scale = common::bench_scale();
     let seed = common::bench_seed();
-    let cfg = ClusterConfig::with_workers(64);
+    let cfg = ClusterSpec::with_workers(64);
     eprintln!("[ablation] building corpus at scale {scale}");
     let store = LogStore::build_corpus(scale, seed, &cfg).unwrap();
     let synthetic = augment(&store, 2..=9, Some(15_000), seed);

@@ -6,14 +6,14 @@ mod common;
 
 use gps_select::algorithms::Algorithm;
 use gps_select::dataset::logs::LogStore;
-use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::cluster::ClusterSpec;
 use gps_select::eval::figures;
 use gps_select::graph::datasets::DatasetSpec;
 use gps_select::partition::Strategy;
 use gps_select::util::benchkit::Bench;
 
 fn build_store(scale: f64, seed: u64) -> LogStore {
-    let cfg = ClusterConfig::with_workers(64);
+    let cfg = ClusterSpec::with_workers(64);
     let mut store = LogStore::default();
     for name in ["stanford", "gd-hu", "gd-hr"] {
         let g = DatasetSpec::by_name(name).unwrap().build(scale, seed);

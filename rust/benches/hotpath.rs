@@ -20,7 +20,7 @@ use gps_select::algorithms::pagerank::PageRank;
 use gps_select::algorithms::Algorithm;
 use gps_select::analyzer::analyze;
 use gps_select::dataset::logs::LogStore;
-use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::cluster::ClusterSpec;
 use gps_select::engine::msg::{Envelope, Msg, PhaseStats};
 use gps_select::engine::wire;
 use gps_select::engine::worker::build_local_edges;
@@ -94,11 +94,11 @@ fn main() {
     let mut pair_json: Vec<String> = Vec::new();
     if engine_rows.iter().any(|(name, _, _)| want(name)) {
         let p = Strategy::Hdrf(50).partition(&g, workers);
-        let cfg = ClusterConfig::with_workers(workers);
+        let cfg = ClusterSpec::with_workers(workers);
         // 8 workers keeps the threaded pair's thread count honest on
         // laptop-class CI machines
         let p8 = Strategy::Hdrf(50).partition(&g, 8);
-        let cfg8 = ClusterConfig::with_workers(8);
+        let cfg8 = ClusterSpec::with_workers(8);
         for (name, algo, mode) in &engine_rows {
             if !want(name) {
                 continue;
@@ -260,7 +260,7 @@ fn main() {
     ];
     if intra_rows.iter().any(|n| want(n)) {
         let p8 = Strategy::Hdrf(50).partition(&g, 8);
-        let cfg8 = ClusterConfig::with_workers(8);
+        let cfg8 = ClusterSpec::with_workers(8);
         for (name, intra) in intra_rows.iter().zip([1usize, 2, 4, 8]) {
             if want(name) {
                 pool::set_intra_threads(intra);
@@ -315,7 +315,7 @@ fn main() {
     let corpus_rows = ["corpus/build/1-thread", "corpus/build/2-threads", "corpus/build/4-threads"];
     if corpus_rows.iter().any(|n| want(n)) {
         let corpus_bench = Bench::new(0, 3);
-        let cfg64 = ClusterConfig::with_workers(64);
+        let cfg64 = ClusterSpec::with_workers(64);
         let corpus_scale = common::bench_scale().min(0.004);
         let seed = common::bench_seed();
         for (name, threads) in corpus_rows.iter().zip([1usize, 2, 4]) {

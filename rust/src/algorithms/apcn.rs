@@ -165,7 +165,7 @@ pub fn apcn_oracle(g: &crate::graph::Graph) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::cost::ClusterConfig;
+    use crate::engine::cluster::ClusterSpec;
     use crate::partition::Strategy;
 
     #[test]
@@ -173,7 +173,7 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(360);
         let g = crate::graph::gen::chung_lu::generate("t", 150, 900, 2.2, true, &mut rng);
         let p = Strategy::TwoD.partition(&g, 4);
-        let r = crate::engine::run(&g, &p, &Apcn, &ClusterConfig::with_workers(4));
+        let r = crate::engine::run(&g, &p, &Apcn, &ClusterSpec::with_workers(4));
         let total: f64 = r.values.iter().map(|v| v.1).sum();
         assert_eq!(total, apcn_oracle(&g));
     }
@@ -183,7 +183,7 @@ mod tests {
         let edges: Vec<(u32, u32)> = (1..=6).map(|i| (0u32, i)).collect();
         let g = crate::graph::Graph::from_edges("star", 7, edges, false);
         let p = Strategy::Random.partition(&g, 2);
-        let r = crate::engine::run(&g, &p, &Apcn, &ClusterConfig::with_workers(2));
+        let r = crate::engine::run(&g, &p, &Apcn, &ClusterSpec::with_workers(2));
         assert_eq!(r.values[0].1, 15.0, "C(6,2) pairs at the hub");
         assert!(r.values[1..].iter().all(|v| v.1 == 0.0));
     }
@@ -194,7 +194,7 @@ mod tests {
         // same graph — the Table 7 cost hierarchy.
         let mut rng = crate::util::rng::Rng::new(361);
         let g = crate::graph::gen::chung_lu::generate("t", 800, 8000, 2.05, true, &mut rng);
-        let cfg = ClusterConfig::with_workers(8);
+        let cfg = ClusterSpec::with_workers(8);
         let p = Strategy::Random.partition(&g, 8);
         let t_apcn = crate::engine::run(&g, &p, &Apcn, &cfg).sim.total;
         let t_aid = crate::engine::run(&g, &p, &super::super::degree::InDegree, &cfg).sim.total;
@@ -215,7 +215,7 @@ mod tests {
             true,
             &mut rng,
         );
-        let cfg = ClusterConfig::with_workers(16);
+        let cfg = ClusterSpec::with_workers(16);
         let t = |s: Strategy| {
             let p = s.partition(&g, 16);
             crate::engine::run(&g, &p, &Apcn, &cfg).sim.total

@@ -136,7 +136,7 @@ pub fn clustering_oracle(g: &crate::graph::Graph) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::cost::ClusterConfig;
+    use crate::engine::cluster::ClusterSpec;
     use crate::partition::Strategy;
 
     #[test]
@@ -144,7 +144,7 @@ mod tests {
         let g = crate::graph::Graph::from_edges("tri", 3, vec![(0, 1), (1, 2), (0, 2)], false);
         let p = Strategy::Random.partition(&g, 2);
         let r =
-            crate::engine::run(&g, &p, &ClusteringCoefficient, &ClusterConfig::with_workers(2));
+            crate::engine::run(&g, &p, &ClusteringCoefficient, &ClusterSpec::with_workers(2));
         for v in g.vertices() {
             assert!((r.values[v as usize].1 - 1.0).abs() < 1e-12);
         }
@@ -155,7 +155,7 @@ mod tests {
         let g = crate::graph::Graph::from_edges("path", 3, vec![(0, 1), (1, 2)], false);
         let p = Strategy::Random.partition(&g, 2);
         let r =
-            crate::engine::run(&g, &p, &ClusteringCoefficient, &ClusterConfig::with_workers(2));
+            crate::engine::run(&g, &p, &ClusteringCoefficient, &ClusterSpec::with_workers(2));
         assert!(r.values.iter().all(|v| v.1 == 0.0));
     }
 
@@ -165,7 +165,7 @@ mod tests {
         let g = crate::graph::gen::smallworld::generate("t", 120, 720, 0.1, &mut rng);
         let p = Strategy::Ginger.partition(&g, 4);
         let r =
-            crate::engine::run(&g, &p, &ClusteringCoefficient, &ClusterConfig::with_workers(4));
+            crate::engine::run(&g, &p, &ClusteringCoefficient, &ClusterSpec::with_workers(4));
         let oracle = clustering_oracle(&g);
         for v in g.vertices() {
             assert!(

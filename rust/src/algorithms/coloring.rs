@@ -138,7 +138,7 @@ pub fn is_proper_coloring(g: &crate::graph::Graph, colors: &[i64]) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::cost::ClusterConfig;
+    use crate::engine::cluster::ClusterSpec;
     use crate::partition::Strategy;
 
     #[test]
@@ -146,7 +146,7 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(330);
         let g = crate::graph::gen::erdos::generate("t", 300, 1500, false, &mut rng);
         let p = Strategy::CanonicalRandom.partition(&g, 8);
-        let r = crate::engine::run(&g, &p, &GreedyColoring, &ClusterConfig::with_workers(8));
+        let r = crate::engine::run(&g, &p, &GreedyColoring, &ClusterSpec::with_workers(8));
         assert!(is_proper_coloring(&g, &r.values));
     }
 
@@ -157,7 +157,7 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(331);
         let g = crate::graph::gen::grid::generate("road", 900, 1600, &mut rng);
         let p = Strategy::TwoD.partition(&g, 4);
-        let r = crate::engine::run(&g, &p, &GreedyColoring, &ClusterConfig::with_workers(4));
+        let r = crate::engine::run(&g, &p, &GreedyColoring, &ClusterSpec::with_workers(4));
         assert!(is_proper_coloring(&g, &r.values));
         assert!(r.ops.supersteps < 100, "{} rounds", r.ops.supersteps);
         // planar-ish grid with shortcuts: should not need many colors
@@ -173,13 +173,13 @@ mod tests {
             &g,
             &Strategy::Random.partition(&g, 4),
             &GreedyColoring,
-            &ClusterConfig::with_workers(4),
+            &ClusterSpec::with_workers(4),
         );
         let b = crate::engine::run(
             &g,
             &Strategy::Ginger.partition(&g, 8),
             &GreedyColoring,
-            &ClusterConfig::with_workers(8),
+            &ClusterSpec::with_workers(8),
         );
         assert_eq!(a.values, b.values);
     }
@@ -188,7 +188,7 @@ mod tests {
     fn triangle_needs_three_colors() {
         let g = crate::graph::Graph::from_edges("tri", 3, vec![(0, 1), (1, 2), (0, 2)], false);
         let p = Strategy::Random.partition(&g, 2);
-        let r = crate::engine::run(&g, &p, &GreedyColoring, &ClusterConfig::with_workers(2));
+        let r = crate::engine::run(&g, &p, &GreedyColoring, &ClusterSpec::with_workers(2));
         assert!(is_proper_coloring(&g, &r.values));
         let mut cs = r.values.clone();
         cs.sort_unstable();

@@ -109,7 +109,7 @@ impl VertexProgram for OutDegree {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::cost::ClusterConfig;
+    use crate::engine::cluster::ClusterSpec;
     use crate::partition::Strategy;
 
     #[test]
@@ -117,7 +117,7 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(310);
         let g = crate::graph::gen::erdos::generate("t", 150, 700, true, &mut rng);
         let p = Strategy::Hybrid.partition(&g, 8);
-        let cfg = ClusterConfig::with_workers(8);
+        let cfg = ClusterSpec::with_workers(8);
         let rin = crate::engine::run(&g, &p, &InDegree, &cfg);
         let rout = crate::engine::run(&g, &p, &OutDegree, &cfg);
         for v in g.vertices() {
@@ -131,7 +131,7 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(311);
         let g = crate::graph::gen::erdos::generate("t", 100, 300, false, &mut rng);
         let p = Strategy::Random.partition(&g, 4);
-        let cfg = ClusterConfig::with_workers(4);
+        let cfg = ClusterSpec::with_workers(4);
         let rin = crate::engine::run(&g, &p, &InDegree, &cfg);
         let rout = crate::engine::run(&g, &p, &OutDegree, &cfg);
         assert_eq!(rin.values, rout.values);

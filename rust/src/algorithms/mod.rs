@@ -20,7 +20,8 @@ pub mod pagerank;
 pub mod randomwalk;
 pub mod triangle;
 
-use crate::engine::cost::{ClusterConfig, OpCounts, SimTime};
+use crate::engine::cluster::ClusterSpec;
+use crate::engine::cost::{OpCounts, SimTime};
 use crate::engine::gas::{Payload, VertexProgram};
 use crate::engine::transport::socket;
 use crate::engine::ExecutionMode;
@@ -141,7 +142,7 @@ impl Algorithm {
 
     /// Execute on the engine and return the simulation outcome
     /// (default [`ExecutionMode::Simulated`] backend).
-    pub fn simulate(&self, g: &Graph, p: &Partitioning, cfg: &ClusterConfig) -> SimOutcome {
+    pub fn simulate(&self, g: &Graph, p: &Partitioning, cfg: &ClusterSpec) -> SimOutcome {
         self.execute(g, p, cfg, ExecutionMode::Simulated)
     }
 
@@ -154,7 +155,7 @@ impl Algorithm {
         &self,
         g: &Graph,
         p: &Partitioning,
-        cfg: &ClusterConfig,
+        cfg: &ClusterSpec,
         mode: ExecutionMode,
     ) -> SimOutcome {
         self.try_execute(g, p, cfg, mode).unwrap_or_else(|e| {
@@ -168,14 +169,14 @@ impl Algorithm {
         &self,
         g: &Graph,
         p: &Partitioning,
-        cfg: &ClusterConfig,
+        cfg: &ClusterSpec,
         mode: ExecutionMode,
     ) -> Result<SimOutcome> {
         fn go<P: VertexProgram>(
             prog: &P,
             g: &Graph,
             p: &Partitioning,
-            cfg: &ClusterConfig,
+            cfg: &ClusterSpec,
             mode: ExecutionMode,
             sum: impl Fn(&[P::Value]) -> f64,
         ) -> Result<SimOutcome> {
@@ -249,7 +250,7 @@ pub fn socket_worker_main(rank: usize, connect: &str) -> Result<()> {
     struct Serve<'a> {
         g: &'a Graph,
         p: &'a Partitioning,
-        cfg: &'a ClusterConfig,
+        cfg: &'a ClusterSpec,
         rank: usize,
         stream: &'a mut std::net::TcpStream,
     }
@@ -296,7 +297,7 @@ mod tests {
     fn checksums_partition_invariant() {
         let mut rng = crate::util::rng::Rng::new(300);
         let g = crate::graph::gen::chung_lu::generate("t", 200, 1200, 2.2, true, &mut rng);
-        let cfg = ClusterConfig::with_workers(4);
+        let cfg = ClusterSpec::with_workers(4);
         for a in Algorithm::all() {
             let refsum = a.simulate(&g, &Strategy::Random.partition(&g, 4), &cfg).checksum;
             for s in [Strategy::Hybrid, Strategy::Hdrf(50), Strategy::TwoD] {

@@ -88,7 +88,7 @@ pub fn pagerank_oracle(g: &crate::graph::Graph, damping: f64, iterations: usize)
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::cost::ClusterConfig;
+    use crate::engine::cluster::ClusterSpec;
     use crate::partition::Strategy;
 
     #[test]
@@ -96,7 +96,7 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(320);
         let g = crate::graph::gen::chung_lu::generate("t", 250, 1500, 2.2, true, &mut rng);
         let p = Strategy::Hdrf(20).partition(&g, 8);
-        let r = crate::engine::run(&g, &p, &PageRank::default(), &ClusterConfig::with_workers(8));
+        let r = crate::engine::run(&g, &p, &PageRank::default(), &ClusterSpec::with_workers(8));
         let oracle = pagerank_oracle(&g, 0.85, 10);
         for v in g.vertices() {
             assert!(
@@ -113,7 +113,7 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(321);
         let g = crate::graph::gen::smallworld::generate("t", 200, 800, 0.1, &mut rng);
         let p = Strategy::Ginger.partition(&g, 4);
-        let r = crate::engine::run(&g, &p, &PageRank::default(), &ClusterConfig::with_workers(4));
+        let r = crate::engine::run(&g, &p, &PageRank::default(), &ClusterSpec::with_workers(4));
         let oracle = pagerank_oracle(&g, 0.85, 10);
         for v in g.vertices() {
             assert!((r.values[v as usize] - oracle[v as usize]).abs() < 1e-12);
@@ -125,7 +125,7 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(322);
         let g = crate::graph::gen::erdos::generate("t", 100, 400, true, &mut rng);
         let p = Strategy::Random.partition(&g, 4);
-        let r = crate::engine::run(&g, &p, &PageRank::default(), &ClusterConfig::with_workers(4));
+        let r = crate::engine::run(&g, &p, &PageRank::default(), &ClusterSpec::with_workers(4));
         assert_eq!(r.ops.supersteps, 10);
     }
 
@@ -135,7 +135,7 @@ mod tests {
         let edges: Vec<(u32, u32)> = (0..100u32).map(|i| (i, (i + 1) % 100)).collect();
         let g = crate::graph::Graph::from_edges("cycle", 100, edges, true);
         let p = Strategy::OneDSrc.partition(&g, 4);
-        let r = crate::engine::run(&g, &p, &PageRank::default(), &ClusterConfig::with_workers(4));
+        let r = crate::engine::run(&g, &p, &PageRank::default(), &ClusterSpec::with_workers(4));
         let total: f64 = r.values.iter().sum();
         assert!((total - 1.0).abs() < 1e-9, "total {total}");
     }

@@ -145,7 +145,7 @@ impl VertexProgram for RandomWalk {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::cost::ClusterConfig;
+    use crate::engine::cluster::ClusterSpec;
     use crate::partition::Strategy;
 
     /// Cycle: every vertex has out-degree 1, so walkers are conserved.
@@ -157,7 +157,7 @@ mod tests {
         let rw = RandomWalk::default();
         let sources = (0..n).filter(|v| v % rw.stride == 0).count() as f64;
         let p = Strategy::Random.partition(&g, 4);
-        let r = crate::engine::run(&g, &p, &rw, &ClusterConfig::with_workers(4));
+        let r = crate::engine::run(&g, &p, &rw, &ClusterSpec::with_workers(4));
         let total: f64 = r.values.iter().sum();
         assert_eq!(total, sources, "walkers conserved");
         // on a cycle each walker moved exactly `steps` positions
@@ -176,13 +176,13 @@ mod tests {
             &g,
             &Strategy::Random.partition(&g, 4),
             &rw,
-            &ClusterConfig::with_workers(4),
+            &ClusterSpec::with_workers(4),
         );
         let b = crate::engine::run(
             &g,
             &Strategy::Hybrid.partition(&g, 8),
             &rw,
-            &ClusterConfig::with_workers(8),
+            &ClusterSpec::with_workers(8),
         );
         assert_eq!(a.values, b.values);
     }
@@ -193,7 +193,7 @@ mod tests {
         let g = crate::graph::Graph::from_edges("path", 3, vec![(0, 1), (1, 2)], true);
         let rw = RandomWalk { stride: 3, steps: 10, seed: 1 };
         let p = Strategy::Random.partition(&g, 2);
-        let r = crate::engine::run(&g, &p, &rw, &ClusterConfig::with_workers(2));
+        let r = crate::engine::run(&g, &p, &rw, &ClusterSpec::with_workers(2));
         assert_eq!(r.values.iter().sum::<f64>(), 0.0);
     }
 
@@ -204,7 +204,7 @@ mod tests {
         // not dominate (as in the paper's real workloads).
         let mut rng = crate::util::rng::Rng::new(371);
         let g = crate::graph::gen::chung_lu::generate("t", 20_000, 160_000, 2.2, true, &mut rng);
-        let cfg = ClusterConfig::with_workers(8);
+        let cfg = ClusterSpec::with_workers(8);
         let p = Strategy::Random.partition(&g, 8);
         let t_rw = crate::engine::run(&g, &p, &RandomWalk::default(), &cfg).sim.total;
         let t_pr = crate::engine::run(

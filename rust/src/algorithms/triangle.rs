@@ -160,7 +160,7 @@ pub fn triangle_oracle(g: &crate::graph::Graph) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::cost::ClusterConfig;
+    use crate::engine::cluster::ClusterSpec;
     use crate::partition::Strategy;
 
     fn total_triangles(values: &[NbValue]) -> f64 {
@@ -180,7 +180,7 @@ mod tests {
         let edges = vec![(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)];
         let g = crate::graph::Graph::from_edges("k4", 4, edges, false);
         let p = Strategy::Random.partition(&g, 2);
-        let r = crate::engine::run(&g, &p, &TriangleCount, &ClusterConfig::with_workers(2));
+        let r = crate::engine::run(&g, &p, &TriangleCount, &ClusterSpec::with_workers(2));
         assert_eq!(total_triangles(&r.values), 4.0);
         assert_eq!(triangle_oracle(&g), 4);
     }
@@ -191,7 +191,7 @@ mod tests {
             let mut rng = crate::util::rng::Rng::new(seed);
             let g = crate::graph::gen::smallworld::generate("t", 150, 900, 0.2, &mut rng);
             let p = Strategy::Hdrf(10).partition(&g, 4);
-            let r = crate::engine::run(&g, &p, &TriangleCount, &ClusterConfig::with_workers(4));
+            let r = crate::engine::run(&g, &p, &TriangleCount, &ClusterSpec::with_workers(4));
             assert_eq!(total_triangles(&r.values), triangle_oracle(&g) as f64, "seed {seed}");
         }
     }
@@ -201,7 +201,7 @@ mod tests {
         // directed 3-cycle is one undirected triangle
         let g = crate::graph::Graph::from_edges("c3", 3, vec![(0, 1), (1, 2), (2, 0)], true);
         let p = Strategy::OneDSrc.partition(&g, 2);
-        let r = crate::engine::run(&g, &p, &TriangleCount, &ClusterConfig::with_workers(2));
+        let r = crate::engine::run(&g, &p, &TriangleCount, &ClusterSpec::with_workers(2));
         assert_eq!(total_triangles(&r.values), 1.0);
     }
 
@@ -211,7 +211,7 @@ mod tests {
         // pay: Random (high rf) must move more bytes than Hybrid.
         let mut rng = crate::util::rng::Rng::new(343);
         let g = crate::graph::gen::chung_lu::generate("t", 500, 5000, 2.1, true, &mut rng);
-        let cfg = ClusterConfig::with_workers(16);
+        let cfg = ClusterSpec::with_workers(16);
         let brand = crate::engine::run(&g, &Strategy::Random.partition(&g, 16), &TriangleCount, &cfg).ops.bytes;
         let bhyb = crate::engine::run(&g, &Strategy::Hybrid.partition(&g, 16), &TriangleCount, &cfg).ops.bytes;
         assert!(bhyb < brand, "hybrid {bhyb} < random {brand}");

@@ -19,8 +19,9 @@ pub const DETERMINISM_MODULES: &[&str] =
 pub const FLOAT_FMT_MODULES: &[&str] = &["dataset", "etrm", "engine", "service"];
 
 /// Within [`FLOAT_FMT_MODULES`], only the files that actually write
-/// artifacts are float-format scoped (matched on file stem).
-pub const FLOAT_FMT_FILES: &[&str] = &["checkpoint", "store", "wire", "proto"];
+/// artifacts are float-format scoped (matched on file stem). `cluster`
+/// owns the spec wire image and the spec-file text format.
+pub const FLOAT_FMT_FILES: &[&str] = &["checkpoint", "store", "wire", "proto", "cluster"];
 
 /// Modules under the `.unwrap()`/`.expect()` budget (non-test code).
 pub const UNWRAP_SCOPE: &[&str] = &["engine", "dataset"];
@@ -90,6 +91,10 @@ mod tests {
         assert!(in_float_fmt_scope("etrm/store.rs"));
         assert!(in_float_fmt_scope("engine/wire.rs"));
         assert!(in_float_fmt_scope("service/proto.rs"));
+        // the cluster-spec module persists specs (wire image + text
+        // format) and sits in both artifact scopes
+        assert!(in_float_fmt_scope("engine/cluster.rs"));
+        assert!(in_determinism_scope("engine/cluster.rs"));
         assert!(!in_float_fmt_scope("service/app.rs"));
         assert!(!in_float_fmt_scope("dataset/logs.rs"));
         assert!(!in_float_fmt_scope("util/fsio.rs"));

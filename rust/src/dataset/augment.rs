@@ -110,11 +110,17 @@ pub fn augment(
                 let mut feats: Vec<[f64; NUM_OP_KEYS]> = Vec::with_capacity(combo.len());
                 let mut time = 0.0;
                 let mut wall = 0.0;
+                let mut cluster = None;
                 let mut ok = true;
                 for &ai in combo {
                     match index.get(&(gname.to_string(), algos[ai].name(), s.psid())) {
                         Some((f, t, w)) => {
                             feats.push(f.algo);
+                            // a synthetic tuple runs on the same cluster
+                            // as its members; inherit their block
+                            if cluster.is_none() {
+                                cluster = Some(f.cluster);
+                            }
                             time += t;
                             wall += w;
                         }
@@ -131,11 +137,13 @@ pub fn augment(
                     Some(d) => *d,
                     None => continue,
                 };
+                let mut features = TaskFeatures::aggregate_algos(data, &feats);
+                features.cluster = cluster.unwrap_or_default();
                 out.push(ExecutionLog {
                     graph: gname.to_string(),
                     algorithm: label.clone(),
                     strategy: *s,
-                    features: TaskFeatures::aggregate_algos(data, &feats),
+                    features,
                     time,
                     // a synthetic tuple models its members run back to
                     // back, so both label channels sum
@@ -150,7 +158,7 @@ pub fn augment(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::cost::ClusterConfig;
+    use crate::engine::cluster::ClusterSpec;
     use crate::graph::datasets::DatasetSpec;
 
     #[test]
@@ -220,7 +228,7 @@ mod tests {
     fn small_store() -> LogStore {
         // one training graph, two training algorithms, two strategies
         let mut store = LogStore::default();
-        let cfg = ClusterConfig::with_workers(4);
+        let cfg = ClusterSpec::with_workers(4);
         let g = DatasetSpec::by_name("wiki").unwrap().build(0.01, 7);
         store
             .record_graph(
@@ -279,5 +287,20 @@ mod tests {
         let store = small_store();
         let synth = augment(&store, 2..=4, None, 1);
         assert!(synth.iter().all(|l| l.algorithm.contains('+')));
+    }
+
+    /// Synthetic tuples inherit the cluster block of the real logs they
+    /// are built from — augmentation does not erase heterogeneity.
+    #[test]
+    fn synthetic_tuples_inherit_cluster_features() {
+        let mut store = LogStore::default();
+        let cfg = ClusterSpec::builder().workers(4).speed(0, 1.0e5).build().unwrap();
+        let g = DatasetSpec::by_name("wiki").unwrap().build(0.01, 7);
+        store
+            .record_graph(&g, &[Algorithm::Aid, Algorithm::Pr], &Strategy::inventory(), &cfg)
+            .unwrap();
+        let synth = augment(&store, 2..=2, None, 1);
+        assert!(!synth.is_empty());
+        assert!(synth.iter().all(|l| l.features.cluster == cfg.features()));
     }
 }

@@ -48,7 +48,7 @@ use std::path::{Path, PathBuf};
 
 use crate::algorithms::Algorithm;
 use crate::analyzer::{OpKey, NUM_OP_KEYS};
-use crate::engine::cost::ClusterConfig;
+use crate::engine::cluster::ClusterSpec;
 use crate::engine::ExecutionMode;
 use crate::features::data::MomentFeatures;
 use crate::features::{DataFeatures, TaskFeatures};
@@ -75,25 +75,36 @@ const MANIFEST_FILE: &str = "manifest.txt";
 
 /// Render the manifest for one build configuration. Two builds may
 /// share a checkpoint directory iff their manifests are byte-identical.
-/// The whole [`ClusterConfig`] is fingerprinted — not just the worker
-/// count — because every cost-model knob (machines, ops/s, bandwidths,
-/// latency, barrier) flows into the simulated time labels.
-pub fn manifest_text(scale: f64, seed: u64, cfg: &ClusterConfig, mode: ExecutionMode) -> String {
+/// The whole [`ClusterSpec`] is fingerprinted — not just the worker
+/// count — because every cost-model knob (machines, per-worker speeds,
+/// link tiers, barrier) flows into the simulated time labels. A classic
+/// uniform two-tier spec renders the historical five constant lines
+/// byte-for-byte (so pre-existing checkpoint directories built under
+/// the flat config still open); a heterogeneous spec renders a single
+/// `cluster <fingerprint>` line covering its full wire image instead.
+pub fn manifest_text(scale: f64, seed: u64, cfg: &ClusterSpec, mode: ExecutionMode) -> String {
     let mut m = String::new();
     writeln!(m, "gps-corpus-checkpoint v{FORMAT_VERSION}").unwrap();
     // audit:allow(float-fmt): debugging echo only — the load path compares the hex bits
     writeln!(m, "scale {:016x} ({scale})", scale.to_bits()).unwrap();
     writeln!(m, "seed {seed}").unwrap();
-    writeln!(m, "workers {}", cfg.num_workers).unwrap();
-    writeln!(m, "machines {}", cfg.num_machines).unwrap();
-    for (key, x) in [
-        ("ops_per_sec", cfg.ops_per_sec),
-        ("bw_inter", cfg.bw_inter),
-        ("bw_intra", cfg.bw_intra),
-        ("latency", cfg.latency),
-        ("barrier", cfg.barrier),
-    ] {
-        writeln!(m, "{key} {:016x} ({x})", x.to_bits()).unwrap();
+    writeln!(m, "workers {}", cfg.num_workers()).unwrap();
+    writeln!(m, "machines {}", cfg.num_machines()).unwrap();
+    match cfg.flat_view() {
+        Some(f) => {
+            for (key, x) in [
+                ("ops_per_sec", f.ops_per_sec),
+                ("bw_inter", f.bw_inter),
+                ("bw_intra", f.bw_intra),
+                ("latency", f.latency),
+                ("barrier", f.barrier),
+            ] {
+                writeln!(m, "{key} {:016x} ({x})", x.to_bits()).unwrap();
+            }
+        }
+        None => {
+            m.push_str(&format!("cluster {:016x}\n", cfg.fingerprint()));
+        }
     }
     writeln!(m, "engine {}", mode.name()).unwrap();
     let ops: Vec<&str> = OpKey::all().iter().map(|k| k.name()).collect();
@@ -387,7 +398,6 @@ fn parse_shard(text: &str, expect_graph: &str) -> Result<(DataFeatures, Vec<Exec
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::cost::ClusterConfig;
     use crate::graph::datasets::DatasetSpec;
 
     fn scratch(tag: &str) -> PathBuf {
@@ -398,7 +408,7 @@ mod tests {
 
     fn tiny_block() -> (DataFeatures, Vec<ExecutionLog>) {
         let mut store = crate::dataset::logs::LogStore::default();
-        let cfg = ClusterConfig::with_workers(4);
+        let cfg = ClusterSpec::with_workers(4);
         let g = DatasetSpec::by_name("wiki").unwrap().build(0.005, 7);
         store
             .record_graph(&g, &[Algorithm::Aid, Algorithm::Pr], &Strategy::inventory(), &cfg)
@@ -438,7 +448,7 @@ mod tests {
     /// fail to parse rather than misparse.
     #[test]
     fn old_format_directories_are_rejected() {
-        let cfg = ClusterConfig::with_workers(4);
+        let cfg = ClusterSpec::with_workers(4);
         let manifest = manifest_text(0.005, 7, &cfg, ExecutionMode::Simulated);
         assert!(manifest.starts_with("gps-corpus-checkpoint v2\n"), "{manifest}");
 
@@ -471,7 +481,7 @@ mod tests {
     fn store_open_save_load() {
         let dir = scratch("roundtrip");
         let manifest =
-            manifest_text(0.005, 7, &ClusterConfig::with_workers(4), ExecutionMode::Simulated);
+            manifest_text(0.005, 7, &ClusterSpec::with_workers(4), ExecutionMode::Simulated);
         let store = CheckpointStore::open(&dir, &manifest).unwrap();
         assert!(!store.has("wiki"));
         assert!(store.load("wiki").unwrap().is_none());
@@ -488,11 +498,15 @@ mod tests {
 
     #[test]
     fn manifest_fingerprints_every_knob() {
-        let cfg4 = ClusterConfig::with_workers(4);
-        let cfg8 = ClusterConfig::with_workers(8);
+        let cfg4 = ClusterSpec::with_workers(4);
+        let cfg8 = ClusterSpec::with_workers(8);
         // a cost-model knob change (not just the worker count) must
         // also invalidate: the simulated time labels depend on it
-        let slow_nic = ClusterConfig { bw_inter: 1.0e8, ..cfg4 };
+        let slow_nic = ClusterSpec::builder()
+            .workers(4)
+            .inter_link(1.0e8, 6.0e-6)
+            .build()
+            .unwrap();
         let base = manifest_text(0.005, 7, &cfg4, ExecutionMode::Simulated);
         for other in [
             manifest_text(0.006, 7, &cfg4, ExecutionMode::Simulated),
@@ -507,10 +521,34 @@ mod tests {
         assert_eq!(base, manifest_text(0.005, 7, &cfg4, ExecutionMode::Simulated));
     }
 
+    /// Uniform specs keep the historical five constant lines (so flat
+    /// checkpoints from earlier builds still open); heterogeneous specs
+    /// collapse them into a `cluster <fingerprint>` line that still
+    /// distinguishes every spec.
+    #[test]
+    fn manifest_distinguishes_heterogeneous_specs() {
+        let flat =
+            manifest_text(0.005, 7, &ClusterSpec::with_workers(4), ExecutionMode::Simulated);
+        assert!(flat.contains("\nops_per_sec "), "{flat}");
+        assert!(!flat.contains("\ncluster "), "{flat}");
+
+        let strag = ClusterSpec::builder().workers(4).speed(0, 2.5e5).build().unwrap();
+        let het = manifest_text(0.005, 7, &strag, ExecutionMode::Simulated);
+        assert!(het.contains("\ncluster "), "{het}");
+        assert!(!het.contains("\nops_per_sec "), "{het}");
+        assert_ne!(flat, het);
+
+        // a different straggler speed → different fingerprint line
+        let strag2 = ClusterSpec::builder().workers(4).speed(0, 2.6e5).build().unwrap();
+        assert_ne!(het, manifest_text(0.005, 7, &strag2, ExecutionMode::Simulated));
+        // the same spec reproduces its manifest byte-for-byte
+        assert_eq!(het, manifest_text(0.005, 7, &strag, ExecutionMode::Simulated));
+    }
+
     #[test]
     fn mismatched_manifest_is_rejected() {
         let dir = scratch("mismatch");
-        let cfg = ClusterConfig::with_workers(4);
+        let cfg = ClusterSpec::with_workers(4);
         let a = manifest_text(0.005, 7, &cfg, ExecutionMode::Simulated);
         CheckpointStore::open(&dir, &a).unwrap();
         let b = manifest_text(0.005, 8, &cfg, ExecutionMode::Simulated);

@@ -24,7 +24,7 @@ use std::sync::OnceLock;
 
 use crate::algorithms::Algorithm;
 use crate::analyzer::{AlgoCounts, NUM_OP_KEYS};
-use crate::engine::cost::ClusterConfig;
+use crate::engine::cluster::ClusterSpec;
 use crate::engine::ExecutionMode;
 use crate::features::{DataFeatures, TaskFeatures};
 use crate::graph::Graph;
@@ -113,10 +113,14 @@ fn run_task(
     a: Algorithm,
     s: Strategy,
     p: &Partitioning,
-    cfg: &ClusterConfig,
+    cfg: &ClusterSpec,
     mode: ExecutionMode,
 ) -> Result<ExecutionLog> {
-    let features = TaskFeatures::from_parts(data, counts);
+    let mut features = TaskFeatures::from_parts(data, counts);
+    // the log's feature row is conditioned on the cluster the task ran
+    // on, so the trained model can tell the same (graph, algorithm)
+    // task apart across cluster specs
+    features.cluster = cfg.features();
     let outcome = a
         .try_execute(g, p, cfg, mode)
         .with_context(|| format!("corpus task {}/{}/{}", g.name, a.name(), s.name()))?;
@@ -187,14 +191,14 @@ impl LogStore {
         g: &Graph,
         algorithms: &[Algorithm],
         strategies: &[Strategy],
-        cfg: &ClusterConfig,
+        cfg: &ClusterSpec,
     ) -> Result<()> {
         let mode = ExecutionMode::Simulated;
         let data = DataFeatures::of(g);
         self.graph_features.insert(g.name.clone(), data);
         let counts = algo_counts(algorithms)?;
         for s in strategies {
-            let p = s.partition(g, cfg.num_workers);
+            let p = s.partition(g, cfg.num_workers());
             for (a, c) in algorithms.iter().zip(&counts) {
                 self.logs.push(run_task(g, data, c, *a, *s, &p, cfg, mode)?);
             }
@@ -210,7 +214,7 @@ impl LogStore {
     /// augmentation). Uses the `GPS_THREADS`, `GPS_ENGINE_MODE` and
     /// `GPS_CHECKPOINT_DIR` defaults; see
     /// [`LogStore::build_corpus_checkpointed`] for explicit control.
-    pub fn build_corpus(scale: f64, seed: u64, cfg: &ClusterConfig) -> Result<Self> {
+    pub fn build_corpus(scale: f64, seed: u64, cfg: &ClusterSpec) -> Result<Self> {
         let dir = checkpoint::resolve_dir(None);
         Self::build_corpus_checkpointed(
             scale,
@@ -228,7 +232,7 @@ impl LogStore {
     pub fn build_corpus_parallel(
         scale: f64,
         seed: u64,
-        cfg: &ClusterConfig,
+        cfg: &ClusterSpec,
         threads: usize,
         mode: ExecutionMode,
     ) -> Result<Self> {
@@ -270,7 +274,7 @@ impl LogStore {
     pub fn build_corpus_checkpointed(
         scale: f64,
         seed: u64,
-        cfg: &ClusterConfig,
+        cfg: &ClusterSpec,
         threads: usize,
         mode: ExecutionMode,
         checkpoint_dir: Option<&Path>,
@@ -287,7 +291,7 @@ impl LogStore {
     pub fn checkpoint_prefix(
         scale: f64,
         seed: u64,
-        cfg: &ClusterConfig,
+        cfg: &ClusterSpec,
         threads: usize,
         mode: ExecutionMode,
         dir: &Path,
@@ -304,7 +308,7 @@ impl LogStore {
     fn build_impl(
         scale: f64,
         seed: u64,
-        cfg: &ClusterConfig,
+        cfg: &ClusterSpec,
         threads: usize,
         mode: ExecutionMode,
         checkpoint_dir: Option<&Path>,
@@ -332,15 +336,23 @@ impl LogStore {
         // self-contained (data features + log block), so no external
         // feature re-attachment is needed; invalid shards error out
         // rather than merging into the corpus.
+        let cluster_feats = cfg.features();
         let mut restored: Vec<Option<(DataFeatures, Vec<ExecutionLog>)>> =
             Vec::with_capacity(corpus.len());
         for spec in corpus {
-            let block = match &ckpt {
+            let mut block = match &ckpt {
                 Some(c) => c.load(spec.name)?,
                 None => None,
             };
-            if let Some((_, logs)) = &block {
+            if let Some((_, logs)) = &mut block {
                 validate_block(spec.name, logs, &strategies, &algorithms)?;
+                // shards persist only the algorithm-feature half; the
+                // cluster block is a function of the build's spec (part
+                // of the checkpoint manifest), so stamping it makes the
+                // restored rows bit-identical to a fresh run's
+                for l in logs.iter_mut() {
+                    l.features.cluster = cluster_feats;
+                }
             }
             restored.push(block);
         }
@@ -373,7 +385,7 @@ impl LogStore {
         let per_graph = strategies.len() * algorithms.len();
         let blocks: Vec<Vec<ExecutionLog>> = match &ckpt {
             None => {
-                let cache = PartitionCache::new(cfg.num_workers);
+                let cache = PartitionCache::new(cfg.num_workers());
                 let pairs: Vec<(&Graph, Strategy)> = built
                     .iter()
                     .flat_map(|(g, _)| strategies.iter().map(move |&s| (g, s)))
@@ -395,7 +407,7 @@ impl LogStore {
                 let mut blocks = Vec::with_capacity(process.len());
                 for (j, &gi) in process.iter().enumerate() {
                     let (g, data) = &built[j];
-                    let cache = PartitionCache::new(cfg.num_workers);
+                    let cache = PartitionCache::new(cfg.num_workers());
                     let pairs: Vec<(&Graph, Strategy)> =
                         strategies.iter().map(|&s| (g, s)).collect();
                     cache.warm_parallel(threads, &pairs);
@@ -581,7 +593,7 @@ mod tests {
 
     fn tiny_corpus() -> LogStore {
         let mut store = LogStore::default();
-        let cfg = ClusterConfig::with_workers(4);
+        let cfg = ClusterSpec::with_workers(4);
         let spec = DatasetSpec::by_name("wiki").unwrap();
         let g = spec.build(0.01, 7);
         store
@@ -625,7 +637,7 @@ mod tests {
         assert!(err.contains("strategy inventory"), "{err}");
 
         let mut full = LogStore::default();
-        let cfg = ClusterConfig::with_workers(4);
+        let cfg = ClusterSpec::with_workers(4);
         let g = DatasetSpec::by_name("wiki").unwrap().build(0.01, 7);
         full.record_graph(&g, &[Algorithm::Pr], &Strategy::inventory(), &cfg).unwrap();
         let times = full.times_of_task("wiki", "PR").unwrap();
@@ -643,7 +655,7 @@ mod tests {
     fn time_index_survives_later_records() {
         let mut store = tiny_corpus();
         assert!(store.time_of("wiki", "PR", Strategy::Random).is_some()); // builds the index
-        let cfg = ClusterConfig::with_workers(4);
+        let cfg = ClusterSpec::with_workers(4);
         let g = DatasetSpec::by_name("facebook").unwrap().build(0.01, 7);
         store.record_graph(&g, &[Algorithm::Pr], &[Strategy::Random], &cfg).unwrap();
         assert!(store.time_of("facebook", "PR", Strategy::Random).is_some());
@@ -655,6 +667,23 @@ mod tests {
         cloned.graph = "synthetic".to_string();
         store.logs.push(cloned);
         assert!(store.time_of("synthetic", "AID", Strategy::Random).is_some());
+    }
+
+    /// Every log's feature row carries the cluster block of the spec it
+    /// ran under — a heterogeneous spec is visible in the features, and
+    /// the default spec stamps the default block.
+    #[test]
+    fn logs_carry_cluster_features() {
+        use crate::engine::cluster::ClusterFeatures;
+        let uniform = tiny_corpus();
+        assert!(uniform.logs.iter().all(|l| l.features.cluster == ClusterFeatures::default()));
+
+        let mut store = LogStore::default();
+        let cfg = ClusterSpec::builder().workers(4).speed(0, 1.0e5).build().unwrap();
+        let g = DatasetSpec::by_name("wiki").unwrap().build(0.01, 7);
+        store.record_graph(&g, &[Algorithm::Pr], &[Strategy::Random], &cfg).unwrap();
+        assert_eq!(store.logs[0].features.cluster, cfg.features());
+        assert_ne!(store.logs[0].features.cluster, ClusterFeatures::default());
     }
 
     #[test]
@@ -705,7 +734,7 @@ mod tests {
     /// graph-major (CORPUS order), then strategy, then algorithm.
     #[test]
     fn parallel_corpus_preserves_grid_order() {
-        let cfg = ClusterConfig::with_workers(4);
+        let cfg = ClusterSpec::with_workers(4);
         let store =
             LogStore::build_corpus_parallel(0.001, 3, &cfg, 2, ExecutionMode::Simulated).unwrap();
         let strategies = Strategy::inventory();

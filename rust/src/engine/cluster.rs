@@ -1,0 +1,1058 @@
+//! Heterogeneity-aware cluster specification — the [`ClusterSpec`] API.
+//!
+//! The paper's §5.1 testbed is homogeneous: identical workers, one NIC
+//! bandwidth, one shared-memory bandwidth. WindGP (PAPERS.md) shows the
+//! best partitioning *flips* once machines differ in compute speed or
+//! link bandwidth, so the flat `ClusterConfig` is replaced by a spec
+//! that carries
+//!
+//! * a **per-worker compute speed** (`ops/s`), so the BSP compute term
+//!   is `max_w(ops_w / speed_w)` — slowest-worker barrier semantics;
+//! * a **pairwise link model**: every ordered worker pair maps to one
+//!   of at most [`MAX_LINK_TIERS`] deduplicated [`LinkTier`]s, each
+//!   with its own bandwidth, latency and serialisation
+//!   [`TierDomain`] (per source worker for shared memory, per source
+//!   machine for a NIC);
+//! * the per-superstep `barrier` cost.
+//!
+//! Construction goes through [`ClusterSpec::builder`] or the named
+//! presets ([`ClusterSpec::paper_default`], [`ClusterSpec::straggler`],
+//! [`ClusterSpec::two_tier`]); the fields themselves are private so
+//! every spec in the tree is validated. For the classic uniform shape
+//! the cost model's arithmetic is arranged to be **bit-identical** to
+//! the historical flat model (see `engine::cost`), so default-spec
+//! corpora, checkpoints and labels are unchanged.
+//!
+//! The spec has one canonical binary image ([`ClusterSpec::encode_wire`]
+//! / [`ClusterSpec::decode_wire`]) used by the engine's socket
+//! bootstrap, the service's v2 request frames and the
+//! [`ClusterSpec::fingerprint`] that checkpoint manifests embed. CLI
+//! surfaces accept a textual descriptor ([`ClusterSpec::parse`]):
+//! a preset name (`default`, `straggler:K:SLOWDOWN`,
+//! `two_tier:W:FAST:SLOW:RATIO`) or a path to a line-based spec file
+//! ([`ClusterSpec::parse_spec_text`]).
+
+use crate::util::error::{bail, ensure, Context, Result};
+use crate::util::rng::fnv1a64;
+
+/// Hard cap on distinct link tiers. Small and fixed so per-phase send
+/// accounting ([`super::msg::SendAccount`]) can hold a `Copy` array of
+/// per-tier byte counters with a fixed wire size.
+pub const MAX_LINK_TIERS: usize = 4;
+
+/// Number of scalar cluster features fed to the ETRM
+/// ([`ClusterFeatures`]).
+pub const CLUSTER_FEATURE_DIM: usize = 7;
+
+/// Cap on `num_workers` accepted from untrusted wire bytes (the tier
+/// matrix is `n²` bytes; this bounds a decode at 1 MiB).
+const MAX_WIRE_WORKERS: usize = 1024;
+
+const DEFAULT_WORKERS: usize = 64;
+const DEFAULT_MACHINES: usize = 4;
+const DEFAULT_OPS_PER_SEC: f64 = 2.0e6;
+const DEFAULT_BW_INTER: f64 = 1.25e9;
+const DEFAULT_BW_INTRA: f64 = 8.0e9;
+const DEFAULT_LATENCY: f64 = 6e-6;
+const DEFAULT_BARRIER: f64 = 12e-6;
+
+/// Which resource a link tier serialises through — equivalently, the
+/// granularity of the per-step byte buckets the cost model maxes over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TierDomain {
+    /// Serialised per source **machine** (a NIC): all workers of one
+    /// machine share the bucket.
+    Machine,
+    /// Serialised per source **worker** (shared-memory copies): each
+    /// worker has its own bucket.
+    Worker,
+}
+
+impl TierDomain {
+    fn code(self) -> u8 {
+        match self {
+            TierDomain::Machine => 0,
+            TierDomain::Worker => 1,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<TierDomain> {
+        match c {
+            0 => Ok(TierDomain::Machine),
+            1 => Ok(TierDomain::Worker),
+            other => bail!("cluster spec: unknown tier domain code {other}"),
+        }
+    }
+}
+
+/// One deduplicated link class of the pairwise model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkTier {
+    /// Bytes per second through this tier.
+    pub bandwidth: f64,
+    /// Per-message-round setup latency, seconds.
+    pub latency: f64,
+    /// Bucket granularity of the serialising resource.
+    pub domain: TierDomain,
+}
+
+/// The uniform "flat" reading of a spec, when one exists — exactly the
+/// five calibration constants of the historical `ClusterConfig`. Used
+/// by the checkpoint manifest to render legacy-identical lines so
+/// pre-existing default-spec checkpoint directories still open.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FlatView {
+    pub ops_per_sec: f64,
+    pub bw_inter: f64,
+    pub bw_intra: f64,
+    pub latency: f64,
+    pub barrier: f64,
+}
+
+/// A validated, heterogeneity-aware cluster description. Construct via
+/// [`ClusterSpec::builder`] or a preset; fields are private so every
+/// instance satisfies the invariants the cost model relies on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSpec {
+    num_workers: usize,
+    num_machines: usize,
+    barrier: f64,
+    /// Per-worker compute speed, ops/s.
+    ops: Vec<f64>,
+    /// Worker → hosting machine.
+    machine: Vec<u16>,
+    /// Deduplicated link tiers, at most [`MAX_LINK_TIERS`]. Tier 0 is
+    /// the cross-machine NIC and tier 1 the intra-machine shared-memory
+    /// path in every builder-made spec, preserving the historical
+    /// accumulation order (inter before intra).
+    tiers: Vec<LinkTier>,
+    /// Row-major `num_workers × num_workers` map from an ordered worker
+    /// pair to its tier index. The diagonal is never consulted — local
+    /// traffic is free.
+    tier_of: Vec<u8>,
+}
+
+impl Default for ClusterSpec {
+    /// The paper's §5.1 cluster ([`ClusterSpec::paper_default`]).
+    fn default() -> Self {
+        ClusterSpec::paper_default()
+    }
+}
+
+/// The derived classic pair→tier map: tier 1 (intra) within a machine,
+/// tier 0 (inter) across machines.
+fn derive_tier_of(n: usize, machine: &[u16]) -> Vec<u8> {
+    let mut t = vec![0u8; n * n];
+    for (a, &ma) in machine.iter().enumerate() {
+        for (b, &mb) in machine.iter().enumerate() {
+            if ma == mb {
+                t[a * n + b] = 1;
+            }
+        }
+    }
+    t
+}
+
+fn ensure_pos(x: f64, what: &str) -> Result<()> {
+    ensure!(
+        x.is_finite() && x > 0.0,
+        "cluster spec: {what} must be a positive finite number"
+    );
+    Ok(())
+}
+
+fn ensure_nonneg(x: f64, what: &str) -> Result<()> {
+    ensure!(
+        x.is_finite() && x >= 0.0,
+        "cluster spec: {what} must be a non-negative finite number"
+    );
+    Ok(())
+}
+
+impl ClusterSpec {
+    /// The classic uniform two-tier shape with explicit constants.
+    fn classic_with(
+        num_workers: usize,
+        num_machines: usize,
+        ops_per_sec: f64,
+        inter: (f64, f64),
+        intra: (f64, f64),
+        barrier: f64,
+    ) -> ClusterSpec {
+        let n = num_workers.max(1);
+        let m = num_machines.max(1);
+        let machine: Vec<u16> = (0..n).map(|w| (w * m / n) as u16).collect();
+        let tier_of = derive_tier_of(n, &machine);
+        ClusterSpec {
+            num_workers: n,
+            num_machines: m,
+            barrier,
+            ops: vec![ops_per_sec; n],
+            machine,
+            tiers: vec![
+                LinkTier { bandwidth: inter.0, latency: inter.1, domain: TierDomain::Machine },
+                LinkTier { bandwidth: intra.0, latency: intra.1, domain: TierDomain::Worker },
+            ],
+            tier_of,
+        }
+    }
+
+    fn classic(num_workers: usize, num_machines: usize) -> ClusterSpec {
+        ClusterSpec::classic_with(
+            num_workers,
+            num_machines,
+            DEFAULT_OPS_PER_SEC,
+            (DEFAULT_BW_INTER, DEFAULT_LATENCY),
+            (DEFAULT_BW_INTRA, DEFAULT_LATENCY),
+            DEFAULT_BARRIER,
+        )
+    }
+
+    /// The paper's §5.1 experimental cluster: 4 machines × 16 uniform
+    /// workers, 10 Gbps NICs, shared memory within a machine.
+    pub fn paper_default() -> ClusterSpec {
+        ClusterSpec::classic(DEFAULT_WORKERS, DEFAULT_MACHINES)
+    }
+
+    /// A smaller uniform testbed (tests/examples): `num_workers` workers
+    /// striped over the default 4 machines, all other constants the
+    /// paper's.
+    pub fn with_workers(num_workers: usize) -> ClusterSpec {
+        ClusterSpec::classic(num_workers, DEFAULT_MACHINES)
+    }
+
+    /// The paper cluster with worker `k` slowed by `slowdown`× — the
+    /// canonical single-straggler scenario. Out-of-range `k` wraps;
+    /// a non-finite or non-positive `slowdown` means no slowdown.
+    pub fn straggler(k: usize, slowdown: f64) -> ClusterSpec {
+        let mut s = ClusterSpec::paper_default();
+        let f = if slowdown.is_finite() && slowdown > 0.0 { slowdown } else { 1.0 };
+        let k = k % s.num_workers;
+        s.ops[k] = DEFAULT_OPS_PER_SEC / f;
+        s
+    }
+
+    /// A compute-two-tier cluster: `num_workers` workers striped over
+    /// `fast_machines + slow_machines` machines; every worker hosted on
+    /// a slow machine runs at `slow_speed_ratio` × the paper speed
+    /// (ratio < 1 slows them). Links are the classic two-tier model.
+    pub fn two_tier(
+        num_workers: usize,
+        fast_machines: usize,
+        slow_machines: usize,
+        slow_speed_ratio: f64,
+    ) -> ClusterSpec {
+        let fm = fast_machines.max(1);
+        let sm = slow_machines.max(1);
+        let mut s = ClusterSpec::classic(num_workers, fm + sm);
+        let r = if slow_speed_ratio.is_finite() && slow_speed_ratio > 0.0 {
+            slow_speed_ratio
+        } else {
+            1.0
+        };
+        for w in 0..s.num_workers {
+            if s.machine[w] as usize >= fm {
+                s.ops[w] = DEFAULT_OPS_PER_SEC * r;
+            }
+        }
+        s
+    }
+
+    /// Start building a custom spec from the paper defaults.
+    pub fn builder() -> ClusterSpecBuilder {
+        ClusterSpecBuilder::default()
+    }
+
+    /// Total workers.
+    #[inline]
+    pub fn num_workers(&self) -> usize {
+        self.num_workers
+    }
+
+    /// Physical machines.
+    #[inline]
+    pub fn num_machines(&self) -> usize {
+        self.num_machines
+    }
+
+    /// Per-superstep barrier cost, seconds.
+    #[inline]
+    pub fn barrier(&self) -> f64 {
+        self.barrier
+    }
+
+    /// Worker `w`'s compute speed, ops/s.
+    #[inline]
+    pub fn ops_of(&self, w: usize) -> f64 {
+        self.ops[w]
+    }
+
+    /// All per-worker speeds, worker order.
+    pub fn speeds(&self) -> &[f64] {
+        &self.ops
+    }
+
+    /// Machine hosting worker `w`.
+    #[inline]
+    pub fn machine_of(&self, w: usize) -> usize {
+        self.machine[w] as usize
+    }
+
+    /// The deduplicated link tiers.
+    pub fn tiers(&self) -> &[LinkTier] {
+        &self.tiers
+    }
+
+    /// The tier a `from → to` message is charged to, or `None` when
+    /// local (free) — the single source of truth for the charging rule.
+    #[inline]
+    pub fn tier_between(&self, from: usize, to: usize) -> Option<usize> {
+        if from == to {
+            None
+        } else {
+            Some(self.tier_of[from * self.num_workers + to] as usize)
+        }
+    }
+
+    /// The byte bucket tier `t` traffic from worker `w` serialises
+    /// through: the worker itself or its hosting machine, per the
+    /// tier's [`TierDomain`].
+    #[inline]
+    pub fn bucket_of(&self, tier: usize, w: usize) -> usize {
+        match self.tiers[tier].domain {
+            TierDomain::Machine => self.machine_of(w),
+            TierDomain::Worker => w,
+        }
+    }
+
+    /// Bucket count of tier `t` (machines or workers, per its domain).
+    pub fn bucket_count(&self, tier: usize) -> usize {
+        match self.tiers[tier].domain {
+            TierDomain::Machine => self.num_machines,
+            TierDomain::Worker => self.num_workers,
+        }
+    }
+
+    /// The slowest link latency over all tiers — the per-round setup
+    /// cost under slowest-link BSP round semantics.
+    pub fn max_latency(&self) -> f64 {
+        self.tiers.iter().map(|t| t.latency).fold(0.0, f64::max)
+    }
+
+    /// The flat uniform reading, when this spec is exactly the classic
+    /// shape (uniform speeds, derived striping, two classic tiers with
+    /// one latency). `None` for any genuinely heterogeneous spec.
+    pub fn flat_view(&self) -> Option<FlatView> {
+        if self.tiers.len() != 2 {
+            return None;
+        }
+        let (inter, intra) = (self.tiers[0], self.tiers[1]);
+        if inter.domain != TierDomain::Machine || intra.domain != TierDomain::Worker {
+            return None;
+        }
+        if inter.latency.to_bits() != intra.latency.to_bits() {
+            return None;
+        }
+        let s0 = self.ops[0];
+        if !self.ops.iter().all(|o| o.to_bits() == s0.to_bits()) {
+            return None;
+        }
+        let (n, m) = (self.num_workers, self.num_machines);
+        let derived: Vec<u16> = (0..n).map(|w| (w * m / n) as u16).collect();
+        if derived != self.machine || derive_tier_of(n, &self.machine) != self.tier_of {
+            return None;
+        }
+        Some(FlatView {
+            ops_per_sec: s0,
+            bw_inter: inter.bandwidth,
+            bw_intra: intra.bandwidth,
+            latency: inter.latency,
+            barrier: self.barrier,
+        })
+    }
+
+    /// The scalar feature block the ETRM conditions on.
+    pub fn features(&self) -> ClusterFeatures {
+        let n = self.ops.len() as f64;
+        let speed_min = self.ops.iter().cloned().fold(f64::INFINITY, f64::min);
+        let speed_max = self.ops.iter().cloned().fold(0.0, f64::max);
+        let mean = self.ops.iter().sum::<f64>() / n;
+        let var = self
+            .ops
+            .iter()
+            .map(|&x| {
+                let d = x - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / n;
+        let speed_cv = if mean > 0.0 { var.sqrt() / mean } else { 0.0 };
+        let bw_min = self.tiers.iter().map(|t| t.bandwidth).fold(f64::INFINITY, f64::min);
+        let bw_max = self.tiers.iter().map(|t| t.bandwidth).fold(0.0, f64::max);
+        ClusterFeatures {
+            speed_min,
+            speed_max,
+            speed_cv,
+            bw_min,
+            bw_max,
+            latency_max: self.max_latency(),
+            tier_count: self.tiers.len() as f64,
+        }
+    }
+
+    /// FNV-1a digest of the canonical wire image: equal fingerprints ⇔
+    /// bit-identical specs. Embedded in checkpoint manifests of
+    /// non-flat specs.
+    pub fn fingerprint(&self) -> u64 {
+        let mut buf = Vec::with_capacity(self.encoded_len());
+        self.encode_wire(&mut buf);
+        fnv1a64(&buf)
+    }
+
+    /// Size of [`ClusterSpec::encode_wire`]'s output in bytes.
+    pub fn encoded_len(&self) -> usize {
+        2 + 2 + 8 + 1 + self.tiers.len() * 17 + self.num_workers * 10
+            + self.num_workers * self.num_workers
+    }
+
+    /// Append the canonical little-endian binary image (exact f64 bit
+    /// patterns throughout).
+    pub fn encode_wire(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.num_workers as u16).to_le_bytes());
+        out.extend_from_slice(&(self.num_machines as u16).to_le_bytes());
+        out.extend_from_slice(&self.barrier.to_bits().to_le_bytes());
+        out.push(self.tiers.len() as u8);
+        for t in &self.tiers {
+            out.extend_from_slice(&t.bandwidth.to_bits().to_le_bytes());
+            out.extend_from_slice(&t.latency.to_bits().to_le_bytes());
+            out.push(t.domain.code());
+        }
+        for o in &self.ops {
+            out.extend_from_slice(&o.to_bits().to_le_bytes());
+        }
+        for m in &self.machine {
+            out.extend_from_slice(&m.to_le_bytes());
+        }
+        out.extend_from_slice(&self.tier_of);
+    }
+
+    /// Decode one spec from the front of `bytes`, returning it and the
+    /// number of bytes consumed. Every structural invariant is
+    /// re-validated — wire bytes are untrusted.
+    pub fn decode_wire(bytes: &[u8]) -> Result<(ClusterSpec, usize)> {
+        let mut pos = 0usize;
+        let n = take_u16(bytes, &mut pos)? as usize;
+        let m = take_u16(bytes, &mut pos)? as usize;
+        ensure!(n >= 1, "cluster spec wire: zero workers");
+        ensure!(n <= MAX_WIRE_WORKERS, "cluster spec wire: {n} workers exceeds the decode cap");
+        ensure!(m >= 1, "cluster spec wire: zero machines");
+        let barrier = f64::from_bits(take_u64(bytes, &mut pos)?);
+        ensure_nonneg(barrier, "barrier")?;
+        let ntiers = take_u8(bytes, &mut pos)? as usize;
+        ensure!(
+            (1..=MAX_LINK_TIERS).contains(&ntiers),
+            "cluster spec wire: {ntiers} link tiers outside 1..={MAX_LINK_TIERS}"
+        );
+        let mut tiers = Vec::with_capacity(ntiers);
+        for _ in 0..ntiers {
+            let bandwidth = f64::from_bits(take_u64(bytes, &mut pos)?);
+            let latency = f64::from_bits(take_u64(bytes, &mut pos)?);
+            ensure_pos(bandwidth, "tier bandwidth")?;
+            ensure_nonneg(latency, "tier latency")?;
+            let domain = TierDomain::from_code(take_u8(bytes, &mut pos)?)?;
+            tiers.push(LinkTier { bandwidth, latency, domain });
+        }
+        let mut ops = Vec::with_capacity(n);
+        for _ in 0..n {
+            let o = f64::from_bits(take_u64(bytes, &mut pos)?);
+            ensure_pos(o, "worker speed")?;
+            ops.push(o);
+        }
+        let mut machine = Vec::with_capacity(n);
+        for _ in 0..n {
+            let h = take_u16(bytes, &mut pos)?;
+            ensure!((h as usize) < m, "cluster spec wire: worker on machine {h} of {m}");
+            machine.push(h);
+        }
+        ensure!(
+            bytes.len() >= pos + n * n,
+            "cluster spec wire: truncated tier matrix"
+        );
+        let tier_of = bytes[pos..pos + n * n].to_vec();
+        pos += n * n;
+        ensure!(
+            tier_of.iter().all(|&t| (t as usize) < ntiers),
+            "cluster spec wire: tier matrix entry out of range"
+        );
+        Ok((
+            ClusterSpec { num_workers: n, num_machines: m, barrier, ops, machine, tiers, tier_of },
+            pos,
+        ))
+    }
+
+    /// Parse a CLI cluster descriptor: a preset name — `default` (or
+    /// `paper`/`uniform`), `straggler[:K:SLOWDOWN]`,
+    /// `two_tier[:WORKERS:FAST:SLOW:RATIO]` — or a path to a spec file
+    /// in the [`ClusterSpec::parse_spec_text`] format.
+    pub fn parse(descriptor: &str) -> Result<ClusterSpec> {
+        let d = descriptor.trim();
+        ensure!(!d.is_empty(), "empty cluster descriptor");
+        let (head, rest) = match d.split_once(':') {
+            Some((h, r)) => (h, Some(r)),
+            None => (d, None),
+        };
+        match head {
+            "default" | "paper" | "uniform" => {
+                ensure!(rest.is_none(), "the {head:?} cluster preset takes no arguments");
+                Ok(ClusterSpec::paper_default())
+            }
+            "straggler" => {
+                let (k, slowdown) = match rest {
+                    None => (0usize, 8.0f64),
+                    Some(r) => {
+                        let (ks, ss) = r
+                            .split_once(':')
+                            .context("straggler preset wants straggler:K:SLOWDOWN")?;
+                        let k: usize = ks
+                            .trim()
+                            .parse()
+                            .with_context(|| format!("bad straggler worker index {ks:?}"))?;
+                        let s: f64 = ss
+                            .trim()
+                            .parse()
+                            .with_context(|| format!("bad straggler slowdown {ss:?}"))?;
+                        ensure!(
+                            s.is_finite() && s > 0.0,
+                            "straggler slowdown {ss:?} must be positive and finite"
+                        );
+                        ensure!(
+                            k < DEFAULT_WORKERS,
+                            "straggler worker index {k} outside the {DEFAULT_WORKERS}-worker paper cluster"
+                        );
+                        (k, s)
+                    }
+                };
+                Ok(ClusterSpec::straggler(k, slowdown))
+            }
+            "two_tier" | "two-tier" => {
+                let (w, fast, slow, ratio) = match rest {
+                    None => (DEFAULT_WORKERS, 2usize, 2usize, 0.25f64),
+                    Some(r) => {
+                        let p: Vec<&str> = r.split(':').collect();
+                        ensure!(
+                            p.len() == 4,
+                            "two_tier preset wants two_tier:WORKERS:FAST:SLOW:RATIO"
+                        );
+                        let w: usize = p[0]
+                            .trim()
+                            .parse()
+                            .with_context(|| format!("bad two_tier worker count {:?}", p[0]))?;
+                        let fast: usize = p[1]
+                            .trim()
+                            .parse()
+                            .with_context(|| format!("bad two_tier fast machines {:?}", p[1]))?;
+                        let slow: usize = p[2]
+                            .trim()
+                            .parse()
+                            .with_context(|| format!("bad two_tier slow machines {:?}", p[2]))?;
+                        let ratio: f64 = p[3]
+                            .trim()
+                            .parse()
+                            .with_context(|| format!("bad two_tier speed ratio {:?}", p[3]))?;
+                        ensure!(
+                            (1..=MAX_WIRE_WORKERS).contains(&w),
+                            "two_tier workers out of range"
+                        );
+                        ensure!(fast >= 1 && slow >= 1, "two_tier machine counts must be >= 1");
+                        ensure!(
+                            ratio.is_finite() && ratio > 0.0,
+                            "two_tier speed ratio {:?} must be positive and finite",
+                            p[3]
+                        );
+                        (w, fast, slow, ratio)
+                    }
+                };
+                Ok(ClusterSpec::two_tier(w, fast, slow, ratio))
+            }
+            _ => {
+                let text = std::fs::read_to_string(d)
+                    .with_context(|| format!("{d:?} is neither a cluster preset nor a readable spec file"))?;
+                ClusterSpec::parse_spec_text(&text)
+                    .with_context(|| format!("parse cluster spec file {d:?}"))
+            }
+        }
+    }
+
+    /// Parse the line-based spec file format. Directives (later lines
+    /// override earlier ones; `#` starts a comment):
+    ///
+    /// ```text
+    /// workers 8            # worker count
+    /// machines 2           # machine count (round-robin striping)
+    /// speed 2.0e6          # uniform ops/s
+    /// speed 3 2.5e5        # per-worker override
+    /// inter 1.25e9 6e-6    # cross-machine bandwidth B/s, latency s
+    /// intra 8.0e9 6e-6     # intra-machine bandwidth B/s, latency s
+    /// link 0 1 1.0e8 5e-5  # extra tier between machines 0 and 1
+    /// barrier 12e-6        # per-superstep barrier, seconds
+    /// ```
+    pub fn parse_spec_text(text: &str) -> Result<ClusterSpec> {
+        let mut b = ClusterSpec::builder();
+        for (i, raw) in text.lines().enumerate() {
+            let line = match raw.split('#').next() {
+                Some(l) => l.trim(),
+                None => "",
+            };
+            if line.is_empty() {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let fval = |s: &str| -> Result<f64> {
+                s.parse::<f64>()
+                    .with_context(|| format!("bad number {s:?} on spec line {}", i + 1))
+            };
+            let uval = |s: &str| -> Result<usize> {
+                s.parse::<usize>()
+                    .with_context(|| format!("bad index {s:?} on spec line {}", i + 1))
+            };
+            b = match (toks[0], toks.len()) {
+                ("workers", 2) => b.workers(uval(toks[1])?),
+                ("machines", 2) => b.machines(uval(toks[1])?),
+                ("speed", 2) => b.uniform_speed(fval(toks[1])?),
+                ("speed", 3) => b.speed(uval(toks[1])?, fval(toks[2])?),
+                ("inter", 3) => b.inter_link(fval(toks[1])?, fval(toks[2])?),
+                ("intra", 3) => b.intra_link(fval(toks[1])?, fval(toks[2])?),
+                ("link", 5) => {
+                    b.machine_link(uval(toks[1])?, uval(toks[2])?, fval(toks[3])?, fval(toks[4])?)
+                }
+                ("barrier", 2) => b.barrier(fval(toks[1])?),
+                _ => bail!("unrecognised cluster spec directive on line {}: {line:?}", i + 1),
+            };
+        }
+        b.build()
+    }
+}
+
+fn take_u8(b: &[u8], pos: &mut usize) -> Result<u8> {
+    ensure!(b.len() > *pos, "cluster spec wire: truncated");
+    let v = b[*pos];
+    *pos += 1;
+    Ok(v)
+}
+
+fn take_u16(b: &[u8], pos: &mut usize) -> Result<u16> {
+    ensure!(b.len() >= *pos + 2, "cluster spec wire: truncated");
+    let v = u16::from_le_bytes([b[*pos], b[*pos + 1]]);
+    *pos += 2;
+    Ok(v)
+}
+
+fn take_u64(b: &[u8], pos: &mut usize) -> Result<u64> {
+    ensure!(b.len() >= *pos + 8, "cluster spec wire: truncated");
+    let mut a = [0u8; 8];
+    a.copy_from_slice(&b[*pos..*pos + 8]);
+    *pos += 8;
+    Ok(u64::from_le_bytes(a))
+}
+
+/// Consuming builder over the classic shape plus overrides. All
+/// validation happens in [`ClusterSpecBuilder::build`].
+#[derive(Clone, Debug)]
+pub struct ClusterSpecBuilder {
+    num_workers: usize,
+    num_machines: usize,
+    uniform_ops: f64,
+    speed_overrides: Vec<(usize, f64)>,
+    inter: (f64, f64),
+    intra: (f64, f64),
+    machine_links: Vec<(usize, usize, f64, f64)>,
+    barrier: f64,
+}
+
+impl Default for ClusterSpecBuilder {
+    fn default() -> Self {
+        ClusterSpecBuilder {
+            num_workers: DEFAULT_WORKERS,
+            num_machines: DEFAULT_MACHINES,
+            uniform_ops: DEFAULT_OPS_PER_SEC,
+            speed_overrides: Vec::new(),
+            inter: (DEFAULT_BW_INTER, DEFAULT_LATENCY),
+            intra: (DEFAULT_BW_INTRA, DEFAULT_LATENCY),
+            machine_links: Vec::new(),
+            barrier: DEFAULT_BARRIER,
+        }
+    }
+}
+
+impl ClusterSpecBuilder {
+    /// Worker count.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.num_workers = n;
+        self
+    }
+
+    /// Machine count (workers stripe round-robin).
+    pub fn machines(mut self, m: usize) -> Self {
+        self.num_machines = m;
+        self
+    }
+
+    /// Uniform compute speed, ops/s (cleared per-worker overrides
+    /// still apply on top).
+    pub fn uniform_speed(mut self, ops_per_sec: f64) -> Self {
+        self.uniform_ops = ops_per_sec;
+        self
+    }
+
+    /// Override worker `w`'s compute speed.
+    pub fn speed(mut self, w: usize, ops_per_sec: f64) -> Self {
+        self.speed_overrides.push((w, ops_per_sec));
+        self
+    }
+
+    /// Cross-machine NIC tier: bandwidth B/s, latency s.
+    pub fn inter_link(mut self, bandwidth: f64, latency: f64) -> Self {
+        self.inter = (bandwidth, latency);
+        self
+    }
+
+    /// Intra-machine shared-memory tier: bandwidth B/s, latency s.
+    pub fn intra_link(mut self, bandwidth: f64, latency: f64) -> Self {
+        self.intra = (bandwidth, latency);
+        self
+    }
+
+    /// A dedicated link tier between machines `a` and `b` (both
+    /// directions), e.g. a slow cross-rack hop. Tiers with identical
+    /// constants are deduplicated; at most [`MAX_LINK_TIERS`] total.
+    pub fn machine_link(mut self, a: usize, b: usize, bandwidth: f64, latency: f64) -> Self {
+        self.machine_links.push((a, b, bandwidth, latency));
+        self
+    }
+
+    /// Per-superstep barrier cost, seconds.
+    pub fn barrier(mut self, seconds: f64) -> Self {
+        self.barrier = seconds;
+        self
+    }
+
+    /// Validate and build.
+    pub fn build(self) -> Result<ClusterSpec> {
+        ensure!(self.num_workers >= 1, "cluster spec: at least one worker required");
+        ensure!(
+            self.num_workers <= MAX_WIRE_WORKERS,
+            "cluster spec: {} workers exceeds the {MAX_WIRE_WORKERS} cap",
+            self.num_workers
+        );
+        ensure!(self.num_machines >= 1, "cluster spec: at least one machine required");
+        ensure_pos(self.uniform_ops, "uniform speed")?;
+        ensure_pos(self.inter.0, "inter bandwidth")?;
+        ensure_pos(self.intra.0, "intra bandwidth")?;
+        ensure_nonneg(self.inter.1, "inter latency")?;
+        ensure_nonneg(self.intra.1, "intra latency")?;
+        ensure_nonneg(self.barrier, "barrier")?;
+        let mut spec = ClusterSpec::classic_with(
+            self.num_workers,
+            self.num_machines,
+            self.uniform_ops,
+            self.inter,
+            self.intra,
+            self.barrier,
+        );
+        let n = spec.num_workers;
+        let m = spec.num_machines;
+        for &(w, s) in &self.speed_overrides {
+            ensure!(w < n, "cluster spec: speed override for worker {w} of {n}");
+            ensure_pos(s, "worker speed")?;
+            spec.ops[w] = s;
+        }
+        for &(a, b, bw, lat) in &self.machine_links {
+            ensure!(a < m && b < m, "cluster spec: link between machines {a},{b} of {m}");
+            ensure!(a != b, "cluster spec: a machine link must join two distinct machines");
+            ensure_pos(bw, "link bandwidth")?;
+            ensure_nonneg(lat, "link latency")?;
+            let idx = match spec.tiers.iter().position(|t| {
+                t.bandwidth.to_bits() == bw.to_bits()
+                    && t.latency.to_bits() == lat.to_bits()
+                    && t.domain == TierDomain::Machine
+            }) {
+                Some(i) => i,
+                None => {
+                    ensure!(
+                        spec.tiers.len() < MAX_LINK_TIERS,
+                        "cluster spec: more than {MAX_LINK_TIERS} distinct link tiers"
+                    );
+                    spec.tiers.push(LinkTier {
+                        bandwidth: bw,
+                        latency: lat,
+                        domain: TierDomain::Machine,
+                    });
+                    spec.tiers.len() - 1
+                }
+            };
+            for f in 0..n {
+                for t in 0..n {
+                    let (mf, mt) = (spec.machine[f] as usize, spec.machine[t] as usize);
+                    if (mf == a && mt == b) || (mf == b && mt == a) {
+                        spec.tier_of[f * n + t] = idx as u8;
+                    }
+                }
+            }
+        }
+        Ok(spec)
+    }
+}
+
+/// The scalar cluster-feature block appended to every encoded task
+/// vector (`features::encoding`), so the ETRM can learn
+/// cluster-conditional strategy choice. `Default` is exactly
+/// [`ClusterSpec::paper_default`]'s block, which keeps every
+/// pre-heterogeneity log, artifact and wire image semantically
+/// unchanged.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClusterFeatures {
+    /// Slowest worker's ops/s.
+    pub speed_min: f64,
+    /// Fastest worker's ops/s.
+    pub speed_max: f64,
+    /// Coefficient of variation of worker speeds (0 = uniform).
+    pub speed_cv: f64,
+    /// Slowest link tier bandwidth, B/s.
+    pub bw_min: f64,
+    /// Fastest link tier bandwidth, B/s.
+    pub bw_max: f64,
+    /// Slowest link latency, seconds.
+    pub latency_max: f64,
+    /// Number of distinct link tiers.
+    pub tier_count: f64,
+}
+
+impl Default for ClusterFeatures {
+    fn default() -> Self {
+        ClusterFeatures {
+            speed_min: DEFAULT_OPS_PER_SEC,
+            speed_max: DEFAULT_OPS_PER_SEC,
+            speed_cv: 0.0,
+            bw_min: DEFAULT_BW_INTER,
+            bw_max: DEFAULT_BW_INTRA,
+            latency_max: DEFAULT_LATENCY,
+            tier_count: 2.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_matches_legacy_striping() {
+        let s = ClusterSpec::paper_default();
+        assert_eq!(s.num_workers(), 64);
+        assert_eq!(s.num_machines(), 4);
+        assert_eq!(s.machine_of(0), 0);
+        assert_eq!(s.machine_of(15), 0);
+        assert_eq!(s.machine_of(16), 1);
+        assert_eq!(s.machine_of(63), 3);
+        assert_eq!(s.tiers().len(), 2);
+        // tier 0 = inter (per machine), tier 1 = intra (per worker)
+        assert_eq!(s.tiers()[0].domain, TierDomain::Machine);
+        assert_eq!(s.tiers()[1].domain, TierDomain::Worker);
+        assert_eq!(s.tier_between(0, 1), Some(1));
+        assert_eq!(s.tier_between(0, 16), Some(0));
+        assert_eq!(s.tier_between(5, 5), None);
+        assert_eq!(s.bucket_of(0, 17), 1);
+        assert_eq!(s.bucket_of(1, 17), 17);
+    }
+
+    #[test]
+    fn flat_view_roundtrips_the_paper_constants() {
+        let f = ClusterSpec::paper_default().flat_view().unwrap();
+        assert_eq!(f.ops_per_sec.to_bits(), 2.0e6f64.to_bits());
+        assert_eq!(f.bw_inter.to_bits(), 1.25e9f64.to_bits());
+        assert_eq!(f.bw_intra.to_bits(), 8.0e9f64.to_bits());
+        assert_eq!(f.latency.to_bits(), 6e-6f64.to_bits());
+        assert_eq!(f.barrier.to_bits(), 12e-6f64.to_bits());
+        assert!(ClusterSpec::with_workers(4).flat_view().is_some());
+        // any heterogeneity forfeits the flat reading
+        assert!(ClusterSpec::straggler(3, 8.0).flat_view().is_none());
+        assert!(ClusterSpec::two_tier(8, 1, 1, 0.5).flat_view().is_none());
+        let linked = ClusterSpec::builder()
+            .workers(8)
+            .machines(2)
+            .machine_link(0, 1, 1.0e8, 5e-5)
+            .build()
+            .unwrap();
+        assert!(linked.flat_view().is_none());
+    }
+
+    #[test]
+    fn default_features_match_paper_default() {
+        assert_eq!(ClusterFeatures::default(), ClusterSpec::paper_default().features());
+        let s = ClusterSpec::straggler(7, 4.0);
+        let f = s.features();
+        assert_eq!(f.speed_min.to_bits(), (2.0e6f64 / 4.0).to_bits());
+        assert_eq!(f.speed_max.to_bits(), 2.0e6f64.to_bits());
+        assert!(f.speed_cv > 0.0);
+    }
+
+    #[test]
+    fn wire_roundtrip_is_bit_exact() {
+        let specs = [
+            ClusterSpec::paper_default(),
+            ClusterSpec::with_workers(3),
+            ClusterSpec::straggler(9, 16.0),
+            ClusterSpec::two_tier(10, 2, 3, 0.125),
+            ClusterSpec::builder()
+                .workers(6)
+                .machines(3)
+                .speed(1, 5.0e5)
+                .machine_link(0, 2, 1.0e8, 5e-5)
+                .barrier(1e-5)
+                .build()
+                .unwrap(),
+        ];
+        for s in specs {
+            let mut buf = Vec::new();
+            s.encode_wire(&mut buf);
+            assert_eq!(buf.len(), s.encoded_len());
+            // trailing bytes are left unconsumed
+            buf.push(0xAB);
+            let (d, used) = ClusterSpec::decode_wire(&buf).unwrap();
+            assert_eq!(used, buf.len() - 1);
+            assert_eq!(d, s);
+            assert_eq!(d.fingerprint(), s.fingerprint());
+        }
+    }
+
+    #[test]
+    fn wire_rejects_malformed_bytes() {
+        let mut buf = Vec::new();
+        ClusterSpec::with_workers(4).encode_wire(&mut buf);
+        // truncations at every prefix fail cleanly
+        for cut in 0..buf.len() {
+            assert!(ClusterSpec::decode_wire(&buf[..cut]).is_err(), "cut {cut}");
+        }
+        // a non-finite speed is rejected
+        let mut bad = Vec::new();
+        let mut s = ClusterSpec::with_workers(2);
+        s.ops[0] = f64::NAN;
+        s.encode_wire(&mut bad);
+        assert!(ClusterSpec::decode_wire(&bad).is_err());
+        // oversized worker counts are rejected before any allocation
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&u16::MAX.to_le_bytes());
+        huge.extend_from_slice(&1u16.to_le_bytes());
+        assert!(ClusterSpec::decode_wire(&huge).is_err());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_specs() {
+        let base = ClusterSpec::paper_default();
+        assert_eq!(base.fingerprint(), ClusterSpec::paper_default().fingerprint());
+        for other in [
+            ClusterSpec::with_workers(32),
+            ClusterSpec::straggler(0, 2.0),
+            ClusterSpec::two_tier(64, 2, 2, 0.5),
+        ] {
+            assert_ne!(base.fingerprint(), other.fingerprint());
+        }
+    }
+
+    #[test]
+    fn builder_validates() {
+        assert!(ClusterSpec::builder().workers(0).build().is_err());
+        assert!(ClusterSpec::builder().machines(0).build().is_err());
+        assert!(ClusterSpec::builder().uniform_speed(-1.0).build().is_err());
+        assert!(ClusterSpec::builder().uniform_speed(f64::NAN).build().is_err());
+        assert!(ClusterSpec::builder().workers(4).speed(4, 1.0e6).build().is_err());
+        assert!(ClusterSpec::builder().machines(2).machine_link(0, 2, 1e8, 1e-6).build().is_err());
+        assert!(ClusterSpec::builder().machines(2).machine_link(1, 1, 1e8, 1e-6).build().is_err());
+        // tier dedup: the same constants twice occupy one tier
+        let s = ClusterSpec::builder()
+            .machines(4)
+            .machine_link(0, 1, 1e8, 1e-6)
+            .machine_link(2, 3, 1e8, 1e-6)
+            .build()
+            .unwrap();
+        assert_eq!(s.tiers().len(), 3);
+        // but four distinct extra tiers blow the cap
+        let over = ClusterSpec::builder()
+            .machines(4)
+            .machine_link(0, 1, 1e8, 1e-6)
+            .machine_link(0, 2, 2e8, 1e-6)
+            .machine_link(0, 3, 3e8, 1e-6)
+            .build();
+        assert!(over.is_err());
+    }
+
+    #[test]
+    fn parse_presets_and_files() {
+        assert_eq!(ClusterSpec::parse("default").unwrap(), ClusterSpec::paper_default());
+        assert_eq!(ClusterSpec::parse("paper").unwrap(), ClusterSpec::paper_default());
+        assert_eq!(
+            ClusterSpec::parse("straggler:3:8.0").unwrap(),
+            ClusterSpec::straggler(3, 8.0)
+        );
+        assert_eq!(
+            ClusterSpec::parse("two_tier:16:1:1:0.5").unwrap(),
+            ClusterSpec::two_tier(16, 1, 1, 0.5)
+        );
+        assert!(ClusterSpec::parse("straggler:99:2.0").is_err());
+        assert!(ClusterSpec::parse("straggler:0:-1").is_err());
+        assert!(ClusterSpec::parse("no-such-preset-or-file").is_err());
+        assert!(ClusterSpec::parse("").is_err());
+
+        let text = "# a small straggler cluster\nworkers 4\nmachines 2\nspeed 1.0e6\n\
+                    speed 3 2.5e5\ninter 1.0e9 5e-6\nintra 4.0e9 2e-6\nbarrier 1e-5\n";
+        let s = ClusterSpec::parse_spec_text(text).unwrap();
+        assert_eq!(s.num_workers(), 4);
+        assert_eq!(s.num_machines(), 2);
+        assert_eq!(s.ops_of(0).to_bits(), 1.0e6f64.to_bits());
+        assert_eq!(s.ops_of(3).to_bits(), 2.5e5f64.to_bits());
+        assert_eq!(s.tiers()[0].bandwidth.to_bits(), 1.0e9f64.to_bits());
+        assert_eq!(s.tiers()[1].latency.to_bits(), 2e-6f64.to_bits());
+        assert_eq!(s.barrier().to_bits(), 1e-5f64.to_bits());
+        assert!(ClusterSpec::parse_spec_text("frobnicate 3\n").is_err());
+        assert!(ClusterSpec::parse_spec_text("workers zero\n").is_err());
+
+        let dir = std::env::temp_dir()
+            .join(format!("gps_cluster_spec_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("spec.cluster");
+        std::fs::write(&path, text).unwrap();
+        let from_file = ClusterSpec::parse(path.to_str().unwrap()).unwrap();
+        assert_eq!(from_file, s);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn straggler_and_two_tier_shapes() {
+        let s = ClusterSpec::straggler(70, 8.0); // wraps to worker 6
+        assert_eq!(s.ops_of(6).to_bits(), (2.0e6f64 / 8.0).to_bits());
+        assert_eq!(s.ops_of(5).to_bits(), 2.0e6f64.to_bits());
+        let t = ClusterSpec::two_tier(8, 1, 1, 0.5);
+        assert_eq!(t.num_machines(), 2);
+        // workers 0..4 on the fast machine, 4..8 slowed
+        assert_eq!(t.ops_of(0).to_bits(), 2.0e6f64.to_bits());
+        assert_eq!(t.ops_of(7).to_bits(), 1.0e6f64.to_bits());
+        // degenerate inputs are sanitised, not panicked on
+        let d = ClusterSpec::two_tier(4, 0, 0, f64::NAN);
+        assert_eq!(d.num_machines(), 2);
+        assert!(d.flat_view().is_some());
+    }
+
+    #[test]
+    fn max_latency_is_slowest_tier() {
+        let s = ClusterSpec::builder()
+            .machines(2)
+            .machine_link(0, 1, 1.0e8, 5e-5)
+            .build()
+            .unwrap();
+        assert_eq!(s.max_latency().to_bits(), 5e-5f64.to_bits());
+        assert_eq!(
+            ClusterSpec::paper_default().max_latency().to_bits(),
+            6e-6f64.to_bits()
+        );
+    }
+}

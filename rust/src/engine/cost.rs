@@ -2,34 +2,47 @@
 //!
 //! The paper's testbed — 4 machines × 16 worker processes, Xeon X7560
 //! 2.27 GHz, 10 Gbps NICs, Open MPI — is replaced by an analytical model
-//! charged while the engine executes the algorithm *exactly*. Execution
-//! time is accumulated per superstep as
+//! charged while the engine executes the algorithm *exactly*. The
+//! topology and calibration constants live in
+//! [`ClusterSpec`](super::cluster::ClusterSpec): per-worker compute
+//! speeds plus a small set of deduplicated link *tiers* (the classic
+//! layout has two — inter-machine NIC and intra-machine shared memory).
+//! Execution time is accumulated per superstep as
 //!
 //! ```text
-//! T_step = max_w(compute_w)                       (BSP compute)
-//!        + max_m(inter_bytes_m) / BW_inter        (NIC serialisation)
-//!        + max_w(intra_bytes_w) / BW_intra        (shared-memory copies)
-//!        + latency · message_rounds + barrier
+//! T_step = max_w(compute_ops_w / speed_w)          (BSP barrier: slowest worker)
+//!        + Σ_t max_b(tier_bytes_t,b) / BW_t        (per link tier, bucketed)
+//!        + max_latency · message_rounds + barrier
 //! ```
+//!
+//! For the uniform paper cluster this reduces bit-for-bit to the
+//! historical flat formula (`max(ops)/ops_per_sec + inter/BW_inter +
+//! intra/BW_intra + latency·rounds + barrier`): per-worker division by a
+//! common positive speed commutes with the max fold, and the tier order
+//! is pinned to [inter, intra] so the float accumulation order is
+//! unchanged.
 //!
 //! Partition quality feeds the model through exactly the channels §1
 //! describes: the replication factor multiplies mirror↔master traffic,
-//! load imbalance raises `max_w(compute_w)`, and locality reduces
-//! cross-machine bytes.
+//! load imbalance raises the slowest-worker compute term, and locality
+//! reduces cross-machine bytes.
 
-/// Cluster topology + calibration constants.
+use super::cluster::{ClusterSpec, MAX_LINK_TIERS};
+
+/// Legacy flat cluster description, superseded by
+/// [`ClusterSpec`](super::cluster::ClusterSpec).
+///
+/// Kept for one release so downstream diffs stay reviewable; convert
+/// with `ClusterSpec::from(cfg)`. All engine entry points now take
+/// `&ClusterSpec`.
+#[deprecated(note = "use engine::cluster::ClusterSpec (builder / presets)")]
 #[derive(Clone, Copy, Debug)]
 pub struct ClusterConfig {
     /// Total workers (the paper sweeps 4..64; experiments use 64).
     pub num_workers: usize,
     /// Physical machines (workers are striped round-robin).
     pub num_machines: usize,
-    /// Simple vertex-program ops per second per worker. Calibrated so
-    /// the paper's headline workloads land in the right second range
-    /// (10-iteration PageRank on Web-Stanford ≈ tens of seconds, APCN
-    /// ≈ thousands): GAS engines pay queue, hash-map and MPI
-    /// serialisation overhead per edge op, leaving a few million
-    /// effective ops/s per worker process on a 2.27 GHz Xeon.
+    /// Vertex-program ops per second per worker.
     pub ops_per_sec: f64,
     /// Inter-machine NIC bandwidth, bytes/s (10 Gbps = 1.25e9 B/s).
     pub bw_inter: f64,
@@ -41,6 +54,7 @@ pub struct ClusterConfig {
     pub barrier: f64,
 }
 
+#[allow(deprecated)]
 impl Default for ClusterConfig {
     /// The paper's experimental setup (§5.1).
     fn default() -> Self {
@@ -50,54 +64,33 @@ impl Default for ClusterConfig {
             ops_per_sec: 2.0e6,
             bw_inter: 1.25e9,
             bw_intra: 8.0e9,
-            // Fixed per-superstep overheads are negligible against the
-            // paper's full-size workloads; keeping them proportionally
-            // small preserves the compute/comm-dominated regime when
-            // datasets are run at reduced --scale (DESIGN.md
-            // §Substitutions).
             latency: 6e-6,
             barrier: 12e-6,
         }
     }
 }
 
+#[allow(deprecated)]
 impl ClusterConfig {
     /// A smaller testbed (used by tests/examples).
     pub fn with_workers(num_workers: usize) -> Self {
         ClusterConfig { num_workers, ..Default::default() }
     }
-
-    /// Machine hosting worker `w` (round-robin striping, 16 workers per
-    /// machine in the default layout).
-    #[inline]
-    pub fn machine_of(&self, w: usize) -> usize {
-        w * self.num_machines / self.num_workers.max(1)
-    }
-
-    /// The single source of truth for the charging rule: which
-    /// bandwidth pool a `from → to` message consumes — `None` when
-    /// local (free), shared memory within a machine, the NIC across
-    /// machines. Both [`StepCost::charge_message`] and the message
-    /// layer's send accounting route through this.
-    #[inline]
-    pub fn route(&self, from: usize, to: usize) -> Option<Link> {
-        if from == to {
-            None
-        } else if self.machine_of(from) == self.machine_of(to) {
-            Some(Link::Intra)
-        } else {
-            Some(Link::Inter)
-        }
-    }
 }
 
-/// Which bandwidth pool a cross-worker message consumes.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Link {
-    /// Same machine: shared-memory copy.
-    Intra,
-    /// Different machines: NIC serialisation.
-    Inter,
+#[allow(deprecated)]
+impl From<ClusterConfig> for ClusterSpec {
+    fn from(cfg: ClusterConfig) -> ClusterSpec {
+        ClusterSpec::builder()
+            .workers(cfg.num_workers)
+            .machines(cfg.num_machines)
+            .uniform_speed(cfg.ops_per_sec)
+            .inter_link(cfg.bw_inter, cfg.latency)
+            .intra_link(cfg.bw_intra, cfg.latency)
+            .barrier(cfg.barrier)
+            .build()
+            .unwrap_or_default()
+    }
 }
 
 /// Mutable per-superstep accounting, folded into [`SimTime`].
@@ -105,11 +98,11 @@ pub enum Link {
 pub struct StepCost {
     /// Compute ops per worker (already weighted by op costs).
     pub compute_ops: Vec<f64>,
-    /// Bytes sent worker→worker crossing a machine boundary, per source
-    /// machine.
-    pub inter_bytes: Vec<f64>,
-    /// Intra-machine bytes per worker.
-    pub intra_bytes: Vec<f64>,
+    /// Bytes per link tier, bucketed at the tier's contention
+    /// granularity (per source machine for `TierDomain::Machine` tiers,
+    /// per source worker for `TierDomain::Worker` tiers). Tier indices
+    /// match [`ClusterSpec::tiers`].
+    pub tier_bytes: Vec<Vec<f64>>,
     /// Distinct message rounds in this step (gather up + apply down = 2
     /// when anything was replicated).
     pub message_rounds: usize,
@@ -118,43 +111,41 @@ pub struct StepCost {
 }
 
 impl StepCost {
-    pub fn new(cfg: &ClusterConfig) -> Self {
+    pub fn new(spec: &ClusterSpec) -> Self {
         StepCost {
-            compute_ops: vec![0.0; cfg.num_workers],
-            inter_bytes: vec![0.0; cfg.num_machines],
-            intra_bytes: vec![0.0; cfg.num_workers],
+            compute_ops: vec![0.0; spec.num_workers()],
+            tier_bytes: (0..spec.tiers().len())
+                .map(|t| vec![0.0; spec.bucket_count(t)])
+                .collect(),
             message_rounds: 0,
             messages: 0,
         }
     }
 
-    /// Charge a message of `bytes` from worker `from` to worker `to`.
+    /// Charge a message of `bytes` from worker `from` to worker `to`
+    /// at its actual link tier. Local messages are free.
     #[inline]
-    pub fn charge_message(&mut self, cfg: &ClusterConfig, from: usize, to: usize, bytes: usize) {
-        match cfg.route(from, to) {
-            None => {} // local, free
-            Some(Link::Intra) => {
-                self.messages += 1;
-                self.intra_bytes[from] += bytes as f64;
-            }
-            Some(Link::Inter) => {
-                self.messages += 1;
-                self.inter_bytes[cfg.machine_of(from)] += bytes as f64;
-            }
+    pub fn charge_message(&mut self, spec: &ClusterSpec, from: usize, to: usize, bytes: usize) {
+        if let Some(t) = spec.tier_between(from, to) {
+            self.messages += 1;
+            self.tier_bytes[t][spec.bucket_of(t, from)] += bytes as f64;
         }
     }
 
     /// Fold into elapsed seconds under the model.
-    pub fn elapsed(&self, cfg: &ClusterConfig) -> f64 {
+    pub fn elapsed(&self, spec: &ClusterSpec) -> f64 {
         let compute = self
             .compute_ops
             .iter()
-            .cloned()
-            .fold(0.0, f64::max)
-            / cfg.ops_per_sec;
-        let inter = self.inter_bytes.iter().cloned().fold(0.0, f64::max) / cfg.bw_inter;
-        let intra = self.intra_bytes.iter().cloned().fold(0.0, f64::max) / cfg.bw_intra;
-        compute + inter + intra + cfg.latency * self.message_rounds as f64 + cfg.barrier
+            .zip(spec.speeds())
+            .map(|(ops, speed)| ops / speed)
+            .fold(0.0, f64::max);
+        let mut acc = compute;
+        for (t, tier) in spec.tiers().iter().enumerate() {
+            acc += self.tier_bytes[t].iter().cloned().fold(0.0, f64::max) / tier.bandwidth;
+        }
+        acc += spec.max_latency() * self.message_rounds as f64;
+        acc + spec.barrier()
     }
 }
 
@@ -163,9 +154,9 @@ impl StepCost {
 pub struct SimTime {
     /// Total simulated seconds (the execution-log label `y`).
     pub total: f64,
-    /// max-compute component.
+    /// max-compute component (slowest worker per step).
     pub compute: f64,
-    /// network components.
+    /// network components (all link tiers).
     pub comm: f64,
     /// latency + barrier overheads.
     pub overhead: f64,
@@ -173,16 +164,31 @@ pub struct SimTime {
 
 impl SimTime {
     /// Accumulate one superstep.
-    pub fn add_step(&mut self, step: &StepCost, cfg: &ClusterConfig) {
-        let compute =
-            step.compute_ops.iter().cloned().fold(0.0, f64::max) / cfg.ops_per_sec;
-        let inter = step.inter_bytes.iter().cloned().fold(0.0, f64::max) / cfg.bw_inter;
-        let intra = step.intra_bytes.iter().cloned().fold(0.0, f64::max) / cfg.bw_intra;
-        let overhead = cfg.latency * step.message_rounds as f64 + cfg.barrier;
+    pub fn add_step(&mut self, step: &StepCost, spec: &ClusterSpec) {
+        let compute = step
+            .compute_ops
+            .iter()
+            .zip(spec.speeds())
+            .map(|(ops, speed)| ops / speed)
+            .fold(0.0, f64::max);
+        let ntiers = spec.tiers().len();
+        let mut tier_time = [0.0f64; MAX_LINK_TIERS];
+        for (t, tier) in spec.tiers().iter().enumerate() {
+            tier_time[t] =
+                step.tier_bytes[t].iter().cloned().fold(0.0, f64::max) / tier.bandwidth;
+        }
+        let overhead = spec.max_latency() * step.message_rounds as f64 + spec.barrier();
+        let mut comm = 0.0;
+        let mut step_total = compute;
+        for &tt in tier_time.iter().take(ntiers) {
+            comm += tt;
+            step_total += tt;
+        }
+        step_total += overhead;
         self.compute += compute;
-        self.comm += inter + intra;
+        self.comm += comm;
         self.overhead += overhead;
-        self.total += compute + inter + intra + overhead;
+        self.total += step_total;
     }
 }
 
@@ -214,23 +220,24 @@ pub struct StepLedger {
 }
 
 impl StepLedger {
-    pub fn new(cfg: &ClusterConfig) -> Self {
-        StepLedger { sc: StepCost::new(cfg), saw_traffic: [false; 4] }
+    pub fn new(spec: &ClusterSpec) -> Self {
+        StepLedger { sc: StepCost::new(spec), saw_traffic: [false; 4] }
     }
 
     /// Fold worker `w`'s stats for one phase. Must be called in
     /// ascending worker order within a phase (the drivers do).
     pub fn fold(
         &mut self,
-        cfg: &ClusterConfig,
+        spec: &ClusterSpec,
         w: usize,
         round: Round,
         st: &PhaseStats,
         ops: &mut OpCounts,
     ) {
         self.sc.compute_ops[w] += st.compute;
-        self.sc.intra_bytes[w] += st.send.intra;
-        self.sc.inter_bytes[cfg.machine_of(w)] += st.send.inter;
+        for t in 0..spec.tiers().len() {
+            self.sc.tier_bytes[t][spec.bucket_of(t, w)] += st.send.tier_bytes[t];
+        }
         self.sc.messages += st.send.msgs as usize;
         if st.send.msgs > 0 {
             self.saw_traffic[round as usize] = true;
@@ -244,15 +251,15 @@ impl StepLedger {
 
     /// Close a regular superstep: one latency round per message kind
     /// that actually travelled.
-    pub fn finish(mut self, sim: &mut SimTime, cfg: &ClusterConfig) {
+    pub fn finish(mut self, sim: &mut SimTime, spec: &ClusterSpec) {
         self.sc.message_rounds = self.saw_traffic.iter().filter(|&&b| b).count();
-        sim.add_step(&self.sc, cfg);
+        sim.add_step(&self.sc, spec);
     }
 
     /// Close the final result-collect step (a single shipment round).
-    pub fn finish_collect(mut self, sim: &mut SimTime, cfg: &ClusterConfig) {
+    pub fn finish_collect(mut self, sim: &mut SimTime, spec: &ClusterSpec) {
         self.sc.message_rounds = 1;
-        sim.add_step(&self.sc, cfg);
+        sim.add_step(&self.sc, spec);
     }
 }
 
@@ -261,62 +268,108 @@ mod tests {
     use super::*;
 
     #[test]
-    fn machine_striping() {
-        let cfg = ClusterConfig::default();
-        assert_eq!(cfg.machine_of(0), 0);
-        assert_eq!(cfg.machine_of(15), 0);
-        assert_eq!(cfg.machine_of(16), 1);
-        assert_eq!(cfg.machine_of(63), 3);
-    }
-
-    #[test]
     fn local_messages_free() {
-        let cfg = ClusterConfig::with_workers(4);
-        let mut s = StepCost::new(&cfg);
-        s.charge_message(&cfg, 2, 2, 1_000_000);
+        let spec = ClusterSpec::with_workers(4);
+        let mut s = StepCost::new(&spec);
+        s.charge_message(&spec, 2, 2, 1_000_000);
         assert_eq!(s.messages, 0);
-        assert!(s.elapsed(&cfg) <= cfg.barrier + 1e-12);
+        assert!(s.elapsed(&spec) <= spec.barrier() + 1e-12);
     }
 
     #[test]
     fn intra_vs_inter_machine() {
-        let cfg = ClusterConfig { num_workers: 4, num_machines: 2, ..Default::default() };
-        let mut s = StepCost::new(&cfg);
-        // workers 0,1 on machine 0; 2,3 on machine 1
-        s.charge_message(&cfg, 0, 1, 1000); // intra
-        s.charge_message(&cfg, 0, 2, 1000); // inter
-        assert_eq!(s.intra_bytes[0], 1000.0);
-        assert_eq!(s.inter_bytes[0], 1000.0);
+        let spec = ClusterSpec::builder().workers(4).machines(2).build().unwrap();
+        let mut s = StepCost::new(&spec);
+        // workers 0,1 on machine 0; 2,3 on machine 1; tier 0 = inter
+        // (bucketed per machine), tier 1 = intra (bucketed per worker)
+        s.charge_message(&spec, 0, 1, 1000); // intra
+        s.charge_message(&spec, 0, 2, 1000); // inter
+        assert_eq!(s.tier_bytes[1][0], 1000.0);
+        assert_eq!(s.tier_bytes[0][0], 1000.0);
         assert_eq!(s.messages, 2);
     }
 
     #[test]
     fn imbalance_raises_elapsed() {
-        let cfg = ClusterConfig::with_workers(2);
-        let mut balanced = StepCost::new(&cfg);
+        let spec = ClusterSpec::with_workers(2);
+        let mut balanced = StepCost::new(&spec);
         balanced.compute_ops = vec![500.0, 500.0];
-        let mut skewed = StepCost::new(&cfg);
+        let mut skewed = StepCost::new(&spec);
         skewed.compute_ops = vec![1000.0, 0.0];
-        assert!(skewed.elapsed(&cfg) > balanced.elapsed(&cfg));
+        assert!(skewed.elapsed(&spec) > balanced.elapsed(&spec));
+    }
+
+    #[test]
+    fn straggler_slows_the_whole_step() {
+        // Identical per-worker loads, but worker 0 computes 8x slower:
+        // the BSP barrier waits for it, so elapsed scales by 8.
+        let uniform = ClusterSpec::with_workers(4);
+        let strag = ClusterSpec::builder().workers(4).speed(0, 2.0e6 / 8.0).build().unwrap();
+        let mut s = StepCost::new(&uniform);
+        s.compute_ops = vec![2.0e6, 2.0e6, 2.0e6, 2.0e6];
+        let fast = s.elapsed(&uniform);
+        let slow = s.elapsed(&strag);
+        assert!((fast - (1.0 + 12e-6)).abs() < 1e-9, "fast {fast}");
+        assert!((slow - (8.0 + 12e-6)).abs() < 1e-9, "slow {slow}");
+    }
+
+    #[test]
+    fn machine_link_charges_its_own_tier() {
+        // A degraded 0↔1 machine link: traffic crossing it lands in its
+        // own tier and is charged at the slow bandwidth + latency.
+        let spec = ClusterSpec::builder()
+            .workers(4)
+            .machines(2)
+            .machine_link(0, 1, 1.0e6, 1e-3)
+            .build()
+            .unwrap();
+        assert_eq!(spec.tiers().len(), 3);
+        let mut s = StepCost::new(&spec);
+        s.charge_message(&spec, 0, 2, 1000); // machine 0 -> machine 1
+        s.message_rounds = 1;
+        assert_eq!(s.tier_bytes[2][0], 1000.0);
+        let want = 1000.0 / 1.0e6 + 1e-3 + 12e-6;
+        assert!((s.elapsed(&spec) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_spec_elapsed_is_bit_identical_to_legacy_formula() {
+        // The generalized tiered fold must reproduce the historical
+        // flat formula bit-for-bit on the uniform paper cluster.
+        let spec = ClusterSpec::builder().workers(4).machines(2).build().unwrap();
+        let mut s = StepCost::new(&spec);
+        s.compute_ops = vec![123.0, 4567.0, 89.0, 1011.0];
+        s.charge_message(&spec, 0, 1, 777); // intra
+        s.charge_message(&spec, 1, 3, 1234); // inter
+        s.charge_message(&spec, 2, 3, 55); // intra
+        s.message_rounds = 2;
+        let compute = s.compute_ops.iter().cloned().fold(0.0, f64::max) / 2.0e6;
+        let inter = s.tier_bytes[0].iter().cloned().fold(0.0, f64::max) / 1.25e9;
+        let intra = s.tier_bytes[1].iter().cloned().fold(0.0, f64::max) / 8.0e9;
+        let legacy = compute + inter + intra + 6e-6 * 2.0 + 12e-6;
+        assert_eq!(s.elapsed(&spec).to_bits(), legacy.to_bits());
+        let mut sim = SimTime::default();
+        sim.add_step(&s, &spec);
+        assert_eq!(sim.total.to_bits(), legacy.to_bits());
     }
 
     #[test]
     fn ledger_derives_rounds_from_traffic() {
         use crate::engine::msg::{PhaseStats, Round};
-        let cfg = ClusterConfig::with_workers(2);
+        let spec = ClusterSpec::with_workers(2);
         let mut ops = OpCounts::default();
         let mut sim = SimTime::default();
-        let mut ledger = StepLedger::new(&cfg);
+        let mut ledger = StepLedger::new(&spec);
         let quiet = PhaseStats::default();
         let mut chatty = PhaseStats::default();
-        chatty.send.push(&cfg, 0, 1, 64);
-        ledger.fold(&cfg, 0, Round::Gather, &quiet, &mut ops);
-        ledger.fold(&cfg, 0, Round::Apply, &chatty, &mut ops);
-        ledger.fold(&cfg, 1, Round::Scatter, &chatty, &mut ops);
-        ledger.finish(&mut sim, &cfg);
+        chatty.send.push(&spec, 0, 1, 64);
+        ledger.fold(&spec, 0, Round::Gather, &quiet, &mut ops);
+        ledger.fold(&spec, 0, Round::Apply, &chatty, &mut ops);
+        ledger.fold(&spec, 1, Round::Scatter, &chatty, &mut ops);
+        ledger.finish(&mut sim, &spec);
         // exactly two rounds saw traffic (apply + scatter), gather not
         assert!(
-            (sim.overhead - (2.0 * cfg.latency + cfg.barrier)).abs() < 1e-12,
+            (sim.overhead - (2.0 * spec.max_latency() + spec.barrier())).abs() < 1e-12,
             "overhead {}",
             sim.overhead
         );
@@ -326,14 +379,28 @@ mod tests {
 
     #[test]
     fn simtime_accumulates_components() {
-        let cfg = ClusterConfig::with_workers(2);
+        let spec = ClusterSpec::with_workers(2);
         let mut t = SimTime::default();
-        let mut s = StepCost::new(&cfg);
-        s.compute_ops = vec![cfg.ops_per_sec, 0.0]; // exactly 1s compute
+        let mut s = StepCost::new(&spec);
+        s.compute_ops = vec![spec.ops_of(0), 0.0]; // exactly 1s compute
         s.message_rounds = 1;
-        t.add_step(&s, &cfg);
+        t.add_step(&s, &spec);
         assert!((t.compute - 1.0).abs() < 1e-9);
-        assert!((t.overhead - (cfg.latency + cfg.barrier)).abs() < 1e-12);
+        assert!((t.overhead - (spec.max_latency() + spec.barrier())).abs() < 1e-12);
         assert!((t.total - (t.compute + t.comm + t.overhead)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn legacy_config_converts_to_equivalent_spec() {
+        #[allow(deprecated)]
+        let spec: ClusterSpec = ClusterConfig::with_workers(8).into();
+        let flat = spec.flat_view().expect("legacy config is a classic flat cluster");
+        assert_eq!(spec.num_workers(), 8);
+        assert_eq!(spec.num_machines(), 4);
+        assert_eq!(flat.ops_per_sec, 2.0e6);
+        assert_eq!(flat.bw_inter, 1.25e9);
+        assert_eq!(flat.bw_intra, 8.0e9);
+        assert_eq!(flat.latency, 6e-6);
+        assert_eq!(flat.barrier, 12e-6);
     }
 }

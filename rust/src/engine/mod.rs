@@ -2,8 +2,8 @@
 //!
 //! The engine executes a [`gas::VertexProgram`] over a partitioned graph
 //! with exact algorithm semantics (results are bit-identical regardless
-//! of partitioning) while charging the [`cost::ClusterConfig`] model for
-//! every compute op and every master↔mirror message. The returned
+//! of partitioning) while charging the [`cluster::ClusterSpec`] cost
+//! model for every compute op and every master↔mirror message. The returned
 //! [`RunResult::sim`] time is the execution-log label the ETRM learns
 //! to predict; it depends on the partitioning through load balance,
 //! replication factor and locality — the channels §1 identifies.
@@ -60,6 +60,7 @@
 //! concurrently against shared `Arc<Partitioning>` values.
 
 pub mod barrier;
+pub mod cluster;
 pub mod cost;
 pub mod gas;
 pub mod msg;
@@ -72,7 +73,8 @@ use crate::graph::{Graph, VertexId};
 use crate::partition::Partitioning;
 use crate::util::error::{err, Result};
 
-use cost::{ClusterConfig, OpCounts, SimTime};
+use cluster::ClusterSpec;
+use cost::{OpCounts, SimTime};
 use gas::{GraphInfo, InitialActive, VertexProgram};
 
 /// Which backend executes the superstep loop.
@@ -161,7 +163,7 @@ pub fn run<P: VertexProgram>(
     g: &Graph,
     p: &Partitioning,
     prog: &P,
-    cfg: &ClusterConfig,
+    cfg: &ClusterSpec,
 ) -> RunResult<P::Value> {
     run_mode(g, p, prog, cfg, ExecutionMode::Simulated)
 }
@@ -173,7 +175,7 @@ pub fn run_mode<P: VertexProgram>(
     g: &Graph,
     p: &Partitioning,
     prog: &P,
-    cfg: &ClusterConfig,
+    cfg: &ClusterSpec,
     mode: ExecutionMode,
 ) -> RunResult<P::Value> {
     try_run_mode(g, p, prog, cfg, mode)
@@ -186,10 +188,10 @@ pub fn try_run_mode<P: VertexProgram>(
     g: &Graph,
     p: &Partitioning,
     prog: &P,
-    cfg: &ClusterConfig,
+    cfg: &ClusterSpec,
     mode: ExecutionMode,
 ) -> Result<RunResult<P::Value>> {
-    assert_eq!(p.num_workers, cfg.num_workers, "partitioning/cluster mismatch");
+    assert_eq!(p.num_workers, cfg.num_workers(), "partitioning/cluster mismatch");
     // The one blessed wall-clock read: every measured label flows
     // through this choke point (see `audit::scope::BLESSED_INSTANT_FILE`).
     #[allow(clippy::disallowed_methods)]
@@ -333,7 +335,7 @@ mod tests {
     #[test]
     fn indegree_exact_under_every_strategy() {
         let g = small_graph();
-        let cfg = ClusterConfig::with_workers(8);
+        let cfg = ClusterSpec::with_workers(8);
         for s in Strategy::all() {
             let p = s.partition(&g, 8);
             let r = run(&g, &p, &InDegreeProg, &cfg);
@@ -356,7 +358,7 @@ mod tests {
         // fixed per-superstep barrier overhead
         let mut rng = crate::util::rng::Rng::new(201);
         let g = crate::graph::gen::chung_lu::generate("big", 8000, 64_000, 2.1, true, &mut rng);
-        let cfg = ClusterConfig::with_workers(8);
+        let cfg = ClusterSpec::with_workers(8);
         let times: Vec<f64> = Strategy::inventory()
             .iter()
             .map(|s| run(&g, &s.partition(&g, 8), &InDegreeProg, &cfg).sim.total)
@@ -371,11 +373,11 @@ mod tests {
         let g = small_graph();
         let reference = {
             let p = Strategy::Random.partition(&g, 4);
-            run(&g, &p, &InDegreeProg, &ClusterConfig::with_workers(4)).values
+            run(&g, &p, &InDegreeProg, &ClusterSpec::with_workers(4)).values
         };
         for &w in &[1usize, 2, 16, 64] {
             let p = Strategy::Hdrf(50).partition(&g, w);
-            let r = run(&g, &p, &InDegreeProg, &ClusterConfig::with_workers(w));
+            let r = run(&g, &p, &InDegreeProg, &ClusterSpec::with_workers(w));
             assert_eq!(r.values, reference, "workers={w}");
         }
     }
@@ -386,11 +388,11 @@ mod tests {
         let g = small_graph();
         let t4 = {
             let p = Strategy::TwoD.partition(&g, 4);
-            run(&g, &p, &InDegreeProg, &ClusterConfig::with_workers(4)).sim.compute
+            run(&g, &p, &InDegreeProg, &ClusterSpec::with_workers(4)).sim.compute
         };
         let t16 = {
             let p = Strategy::TwoD.partition(&g, 16);
-            run(&g, &p, &InDegreeProg, &ClusterConfig::with_workers(16)).sim.compute
+            run(&g, &p, &InDegreeProg, &ClusterSpec::with_workers(16)).sim.compute
         };
         assert!(t16 < t4, "compute {t16} < {t4}");
     }
@@ -400,7 +402,7 @@ mod tests {
     fn worker_count_mismatch_panics() {
         let g = small_graph();
         let p = Strategy::Random.partition(&g, 4);
-        run(&g, &p, &InDegreeProg, &ClusterConfig::with_workers(8));
+        run(&g, &p, &InDegreeProg, &ClusterSpec::with_workers(8));
     }
 
     /// The concurrency contract the parallel corpus builder depends on:
@@ -410,7 +412,7 @@ mod tests {
         fn check<T: Send + Sync>() {}
         check::<Graph>();
         check::<Partitioning>();
-        check::<ClusterConfig>();
+        check::<ClusterSpec>();
     }
 
     /// The threaded backend is bit-identical to the simulated oracle —
@@ -422,7 +424,7 @@ mod tests {
     fn threaded_matches_simulated_smoke() {
         let g = small_graph();
         for &w in &[1usize, 3, 4] {
-            let cfg = ClusterConfig::with_workers(w);
+            let cfg = ClusterSpec::with_workers(w);
             let p = Strategy::Hdrf(50).partition(&g, w);
             let a = run_mode(&g, &p, &InDegreeProg, &cfg, ExecutionMode::Simulated);
             let b = run_mode(&g, &p, &InDegreeProg, &cfg, ExecutionMode::Threaded);
@@ -442,7 +444,7 @@ mod tests {
     fn socket_mode_rejects_non_inventory_programs() {
         let g = small_graph();
         let p = Strategy::Random.partition(&g, 2);
-        let cfg = ClusterConfig::with_workers(2);
+        let cfg = ClusterSpec::with_workers(2);
         let err =
             try_run_mode(&g, &p, &InDegreeProg, &cfg, ExecutionMode::Socket).unwrap_err();
         assert!(err.to_string().contains("inventory"), "{err}");
@@ -453,7 +455,7 @@ mod tests {
     fn wall_clock_label_is_measured() {
         let g = small_graph();
         let p = Strategy::Random.partition(&g, 2);
-        let cfg = ClusterConfig::with_workers(2);
+        let cfg = ClusterSpec::with_workers(2);
         for mode in [ExecutionMode::Simulated, ExecutionMode::Threaded] {
             let r = run_mode(&g, &p, &InDegreeProg, &cfg, mode);
             assert!(

@@ -28,7 +28,7 @@
 
 use crate::graph::VertexId;
 
-use super::cost::ClusterConfig;
+use super::cluster::{ClusterSpec, MAX_LINK_TIERS};
 use super::gas::{Payload, VertexProgram};
 
 /// Activation notices carry one vertex id (8-byte scalar convention).
@@ -100,28 +100,22 @@ pub struct SendAccount {
     pub msgs: u64,
     /// Their payload bytes.
     pub bytes: u64,
-    /// Bytes that stayed on the sender's machine (charged against
-    /// shared-memory bandwidth).
-    pub intra: f64,
-    /// Bytes that crossed a machine boundary (charged against the NIC).
-    pub inter: f64,
+    /// Payload bytes per link tier (indices match
+    /// [`ClusterSpec::tiers`]; unused tiers stay zero). In the classic
+    /// layout tier 0 is the inter-machine NIC and tier 1 is
+    /// intra-machine shared memory.
+    pub tier_bytes: [f64; MAX_LINK_TIERS],
 }
 
 impl SendAccount {
-    /// Account one message under the [`ClusterConfig::route`] charging
-    /// rule (local messages are free and uncounted).
+    /// Account one message under the [`ClusterSpec::tier_between`]
+    /// charging rule (local messages are free and uncounted).
     #[inline]
-    pub fn push(&mut self, cfg: &ClusterConfig, from: usize, to: usize, bytes: usize) {
-        match cfg.route(from, to) {
-            None => {}
-            Some(link) => {
-                self.msgs += 1;
-                self.bytes += bytes as u64;
-                match link {
-                    super::cost::Link::Intra => self.intra += bytes as f64,
-                    super::cost::Link::Inter => self.inter += bytes as f64,
-                }
-            }
+    pub fn push(&mut self, spec: &ClusterSpec, from: usize, to: usize, bytes: usize) {
+        if let Some(t) = spec.tier_between(from, to) {
+            self.msgs += 1;
+            self.bytes += bytes as u64;
+            self.tier_bytes[t] += bytes as f64;
         }
     }
 }
@@ -188,9 +182,9 @@ impl<P: VertexProgram> PhaseOut<P> {
     /// choke point that keeps the cost model and the actual message
     /// stream in lockstep.
     #[inline]
-    pub fn push(&mut self, cfg: &ClusterConfig, envelope: Envelope<P>) {
+    pub fn push(&mut self, spec: &ClusterSpec, envelope: Envelope<P>) {
         debug_assert_ne!(envelope.from, envelope.to, "local traffic must bypass the msg layer");
-        self.stats.send.push(cfg, envelope.from as usize, envelope.to as usize, envelope.msg.bytes());
+        self.stats.send.push(spec, envelope.from as usize, envelope.to as usize, envelope.msg.bytes());
         self.batches[envelope.to as usize].push(envelope);
     }
 
@@ -281,21 +275,21 @@ mod tests {
     }
 
     #[test]
-    fn send_account_buckets_by_machine() {
-        let cfg = ClusterConfig { num_workers: 4, num_machines: 2, ..Default::default() };
+    fn send_account_buckets_by_tier() {
+        let spec = ClusterSpec::builder().workers(4).machines(2).build().unwrap();
         let mut acc = SendAccount::default();
-        acc.push(&cfg, 0, 1, 100); // same machine
-        acc.push(&cfg, 0, 2, 10); // cross machine
-        acc.push(&cfg, 3, 3, 1000); // local: free
+        acc.push(&spec, 0, 1, 100); // same machine: intra tier (1)
+        acc.push(&spec, 0, 2, 10); // cross machine: inter tier (0)
+        acc.push(&spec, 3, 3, 1000); // local: free
         assert_eq!(acc.msgs, 2);
         assert_eq!(acc.bytes, 110);
-        assert_eq!(acc.intra, 100.0);
-        assert_eq!(acc.inter, 10.0);
+        assert_eq!(acc.tier_bytes[1], 100.0);
+        assert_eq!(acc.tier_bytes[0], 10.0);
     }
 
     #[test]
     fn phase_out_charges_exactly_what_it_enqueues() {
-        let cfg = ClusterConfig::with_workers(4);
+        let cfg = ClusterSpec::with_workers(4);
         let mut out: PhaseOut<Probe> = PhaseOut::new(4);
         out.push(&cfg, Envelope { from: 1, to: 2, msg: Msg::Activate { v: 9 } });
         out.push(&cfg, Envelope { from: 1, to: 0, msg: Msg::ValueUpdate { v: 4, value: 1.0 } });

@@ -50,7 +50,7 @@ use crate::graph::{Edge, Graph, VertexId};
 use crate::partition::Partitioning;
 use crate::util::pool;
 
-use super::cost::ClusterConfig;
+use super::cluster::ClusterSpec;
 use super::gas::{EdgeDirection, GraphInfo, Payload, VertexProgram};
 use super::msg::{Envelope, Msg, PhaseOut, PhaseStats};
 use super::worker::{build_local_edges, build_local_edges_for, LocalEdges};
@@ -433,7 +433,7 @@ impl<P: VertexProgram> WorkerState<P> {
         p: &Partitioning,
         active: &[bool],
         step: usize,
-        cfg: &ClusterConfig,
+        cfg: &ClusterSpec,
         out: &mut PhaseOut<P>,
     ) {
         out.reset();
@@ -511,7 +511,7 @@ impl<P: VertexProgram> WorkerState<P> {
         p: &Partitioning,
         active: &[bool],
         step: usize,
-        cfg: &ClusterConfig,
+        cfg: &ClusterSpec,
         inbox: Vec<Envelope<P>>,
         out: &mut PhaseOut<P>,
     ) {
@@ -536,7 +536,8 @@ impl<P: VertexProgram> WorkerState<P> {
             fold_envelope(self, e);
         }
 
-        let emit_target = (self.id + cfg.num_workers / cfg.num_machines) % cfg.num_workers;
+        let emit_target =
+            (self.id + cfg.num_workers() / cfg.num_machines()) % cfg.num_workers();
         for mi in 0..self.masters.len() {
             let v = self.masters[mi];
             if !active[v as usize] {
@@ -620,7 +621,7 @@ impl<P: VertexProgram> WorkerState<P> {
         p: &Partitioning,
         active: &[bool],
         step: usize,
-        cfg: &ClusterConfig,
+        cfg: &ClusterSpec,
         out: &mut PhaseOut<P>,
     ) {
         out.reset();
@@ -728,7 +729,7 @@ impl<P: VertexProgram> WorkerState<P> {
     /// ([`VertexProgram::collect_result`]).
     pub fn collect_phase(
         &mut self,
-        cfg: &ClusterConfig,
+        cfg: &ClusterSpec,
         charge: bool,
     ) -> (PhaseStats, Vec<(VertexId, P::Value)>) {
         let mut stats = PhaseStats::default();

@@ -23,7 +23,7 @@ use crate::graph::{Graph, VertexId};
 use crate::partition::Partitioning;
 use crate::util::error::Result;
 
-use super::super::cost::ClusterConfig;
+use super::super::cluster::ClusterSpec;
 use super::super::degree_vecs;
 use super::super::gas::{GraphInfo, VertexProgram};
 use super::super::msg::{Envelope, PhaseOut, PhaseStats};
@@ -36,7 +36,7 @@ pub(crate) struct LocalTransport<'a, P: VertexProgram> {
     g: &'a Graph,
     gi: &'a GraphInfo<'a>,
     p: &'a Partitioning,
-    cfg: &'a ClusterConfig,
+    cfg: &'a ClusterSpec,
     workers: Vec<WorkerState<P>>,
     /// Inboxes of the phase currently running (drained per worker).
     current: Vec<Vec<Envelope<P>>>,
@@ -125,7 +125,7 @@ pub(crate) fn run<P: VertexProgram>(
     g: &Graph,
     p: &Partitioning,
     prog: &P,
-    cfg: &ClusterConfig,
+    cfg: &ClusterSpec,
 ) -> Result<RunResult<P::Value>> {
     let (in_degree, out_degree) = degree_vecs(g);
     let gi = GraphInfo {

@@ -48,13 +48,14 @@ pub mod socket;
 use crate::graph::VertexId;
 use crate::util::error::Result;
 
-use super::cost::{ClusterConfig, OpCounts, SimTime, StepLedger};
+use super::cluster::ClusterSpec;
+use super::cost::{OpCounts, SimTime, StepLedger};
 use super::gas::{GraphInfo, VertexProgram};
 use super::msg::{PhaseStats, Round};
 use super::{assemble, initial_active, should_continue, RunResult};
 
-/// One execution backend driving `cfg.num_workers` workers through BSP
-/// supersteps. See the module docs for the ordering contract.
+/// One execution backend driving `cfg.num_workers()` workers through
+/// BSP supersteps. See the module docs for the ordering contract.
 pub trait Transport<P: VertexProgram> {
     /// Announce superstep `step` (and its activation bitmap) to every
     /// worker before the first phase runs.
@@ -94,10 +95,10 @@ pub(crate) fn drive<P: VertexProgram, T: Transport<P>>(
     t: &mut T,
     prog: &P,
     gi: &GraphInfo<'_>,
-    cfg: &ClusterConfig,
+    cfg: &ClusterSpec,
 ) -> Result<RunResult<P::Value>> {
     let n = gi.num_vertices;
-    let w_count = cfg.num_workers;
+    let w_count = cfg.num_workers();
     let mut ops = OpCounts::default();
     let mut sim = SimTime::default();
     let mut active = initial_active(prog, gi, n);

@@ -20,7 +20,7 @@ use crate::partition::Partitioning;
 use crate::util::error::Result;
 
 use super::super::barrier::BspBarrier;
-use super::super::cost::ClusterConfig;
+use super::super::cluster::ClusterSpec;
 use super::super::degree_vecs;
 use super::super::gas::{GraphInfo, VertexProgram};
 use super::super::msg::{Envelope, PhaseOut, PhaseStats, Round};
@@ -53,7 +53,7 @@ fn worker_loop<P: VertexProgram>(
     g: &Graph,
     gi: &GraphInfo<'_>,
     p: &Partitioning,
-    cfg: &ClusterConfig,
+    cfg: &ClusterSpec,
     inbox: mpsc::Receiver<Vec<Envelope<P>>>,
     ctl: mpsc::Receiver<Ctl>,
     peers: Vec<mpsc::Sender<Vec<Envelope<P>>>>,
@@ -213,7 +213,7 @@ pub(crate) fn run<P: VertexProgram>(
     g: &Graph,
     p: &Partitioning,
     prog: &P,
-    cfg: &ClusterConfig,
+    cfg: &ClusterSpec,
 ) -> Result<RunResult<P::Value>> {
     let w_count = p.num_workers;
     let (in_degree, out_degree) = degree_vecs(g);

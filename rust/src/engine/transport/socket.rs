@@ -45,7 +45,7 @@ use crate::graph::{Graph, VertexId};
 use crate::partition::Partitioning;
 use crate::util::error::{bail, ensure, Context, Result};
 
-use super::super::cost::ClusterConfig;
+use super::super::cluster::ClusterSpec;
 use super::super::degree_vecs;
 use super::super::gas::{GraphInfo, VertexProgram};
 use super::super::msg::{Envelope, PhaseOut, PhaseStats};
@@ -325,7 +325,7 @@ pub(crate) fn run<P: VertexProgram>(
     g: &Graph,
     p: &Partitioning,
     prog: &P,
-    cfg: &ClusterConfig,
+    cfg: &ClusterSpec,
 ) -> Result<RunResult<P::Value>> {
     let algorithm = prog.name();
     let algo = crate::algorithms::Algorithm::by_name(algorithm).ok_or_else(|| {
@@ -406,7 +406,7 @@ pub fn serve_connection<P: VertexProgram>(
     prog: &P,
     g: &Graph,
     p: &Partitioning,
-    cfg: &ClusterConfig,
+    cfg: &ClusterSpec,
     rank: usize,
     stream: &mut TcpStream,
 ) -> Result<()> {

@@ -39,7 +39,7 @@ use crate::partition::Partitioning;
 use crate::util::error::{bail, ensure, Context, Result};
 use crate::util::rng::{fnv1a64_fold, FNV1A64_OFFSET};
 
-use super::cost::ClusterConfig;
+use super::cluster::{ClusterSpec, MAX_LINK_TIERS};
 use super::gas::{Payload, VertexProgram};
 use super::msg::{Envelope, Msg, PhaseStats, SendAccount};
 
@@ -79,7 +79,9 @@ impl<'a> Reader<'a> {
         self.buf.len() - self.pos
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    /// Consume the next `n` bytes as a raw slice (length-prefixed
+    /// sub-blocks, e.g. an embedded cluster-spec image).
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         ensure!(
             n <= self.remaining(),
             "wire underrun: need {n} bytes at offset {}, only {} left",
@@ -296,22 +298,28 @@ pub fn encode_stats(st: &PhaseStats, out: &mut Vec<u8>) {
     put_u64(out, st.scatters);
     put_u64(out, st.send.msgs);
     put_u64(out, st.send.bytes);
-    put_f64(out, st.send.intra);
-    put_f64(out, st.send.inter);
+    for &b in &st.send.tier_bytes {
+        put_f64(out, b);
+    }
 }
 
 pub fn decode_stats(r: &mut Reader<'_>) -> Result<PhaseStats> {
+    let compute = r.f64_bits()?;
+    let gathers = r.u64()?;
+    let applies = r.u64()?;
+    let scatters = r.u64()?;
+    let msgs = r.u64()?;
+    let bytes = r.u64()?;
+    let mut tier_bytes = [0.0f64; MAX_LINK_TIERS];
+    for b in tier_bytes.iter_mut() {
+        *b = r.f64_bits()?;
+    }
     Ok(PhaseStats {
-        compute: r.f64_bits()?,
-        gathers: r.u64()?,
-        applies: r.u64()?,
-        scatters: r.u64()?,
-        send: SendAccount {
-            msgs: r.u64()?,
-            bytes: r.u64()?,
-            intra: r.f64_bits()?,
-            inter: r.f64_bits()?,
-        },
+        compute,
+        gathers,
+        applies,
+        scatters,
+        send: SendAccount { msgs, bytes, tier_bytes },
     })
 }
 
@@ -576,7 +584,7 @@ pub struct Bootstrap {
     pub algorithm: String,
     pub graph: Graph,
     pub partitioning: Partitioning,
-    pub cfg: ClusterConfig,
+    pub cfg: ClusterSpec,
 }
 
 /// Serialize a `FRAME_BOOTSTRAP` payload.
@@ -584,7 +592,7 @@ pub fn encode_bootstrap(
     algorithm: &str,
     g: &Graph,
     p: &Partitioning,
-    cfg: &ClusterConfig,
+    cfg: &ClusterSpec,
 ) -> Vec<u8> {
     let mut out = Vec::with_capacity(64 + g.num_edges() * 10);
     put_str(&mut out, algorithm);
@@ -600,11 +608,7 @@ pub fn encode_bootstrap(
     for &w in &p.edge_worker {
         put_u16(&mut out, w);
     }
-    put_u64(&mut out, cfg.num_workers as u64);
-    put_u64(&mut out, cfg.num_machines as u64);
-    for x in [cfg.ops_per_sec, cfg.bw_inter, cfg.bw_intra, cfg.latency, cfg.barrier] {
-        put_f64(&mut out, x);
-    }
+    cfg.encode_wire(&mut out);
     out
 }
 
@@ -635,19 +639,16 @@ pub fn decode_bootstrap(payload: &[u8]) -> Result<Bootstrap> {
     for _ in 0..num_edges {
         edge_worker.push(r.u16()?);
     }
-    let cfg = ClusterConfig {
-        num_workers: r.u64()? as usize,
-        num_machines: r.u64()? as usize,
-        ops_per_sec: r.f64_bits()?,
-        bw_inter: r.f64_bits()?,
-        bw_intra: r.f64_bits()?,
-        latency: r.f64_bits()?,
-        barrier: r.f64_bits()?,
-    };
-    r.finish()?;
+    let spec_bytes = r.take(r.remaining())?;
+    let (cfg, used) = ClusterSpec::decode_wire(spec_bytes)?;
     ensure!(
-        cfg.num_workers == num_workers,
-        "bootstrap cluster config disagrees with the partitioning's worker count"
+        used == spec_bytes.len(),
+        "{} trailing bytes after the bootstrap cluster spec",
+        spec_bytes.len() - used
+    );
+    ensure!(
+        cfg.num_workers() == num_workers,
+        "bootstrap cluster spec disagrees with the partitioning's worker count"
     );
     // `from_edges` sorts + dedups; the coordinator's edge list is already
     // canonical, so the rebuilt graph is identical — and the edge→worker
@@ -822,7 +823,11 @@ mod tests {
             gathers: 9,
             applies: 8,
             scatters: 7,
-            send: SendAccount { msgs: 6, bytes: 5, intra: -0.0, inter: 1.0e-300 },
+            send: SendAccount {
+                msgs: 6,
+                bytes: 5,
+                tier_bytes: [1.0e-300, -0.0, 3.5, 0.0],
+            },
         };
         let mut buf = Vec::new();
         encode_stats(&st, &mut buf);
@@ -832,8 +837,13 @@ mod tests {
         assert_eq!(got.compute.to_bits(), st.compute.to_bits());
         assert_eq!(got.gathers, st.gathers);
         assert_eq!(got.send.msgs, st.send.msgs);
-        assert_eq!(got.send.intra.to_bits(), st.send.intra.to_bits());
-        assert_eq!(got.send.inter.to_bits(), st.send.inter.to_bits());
+        for t in 0..MAX_LINK_TIERS {
+            assert_eq!(
+                got.send.tier_bytes[t].to_bits(),
+                st.send.tier_bytes[t].to_bits(),
+                "tier {t}"
+            );
+        }
     }
 
     #[test]
@@ -856,7 +866,7 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(77);
         let g = crate::graph::gen::erdos::generate("wire-boot", 60, 240, true, &mut rng);
         let p = crate::partition::Strategy::Hdrf(50).partition(&g, 4);
-        let cfg = ClusterConfig::with_workers(4);
+        let cfg = ClusterSpec::with_workers(4);
         let payload = encode_bootstrap("PR", &g, &p, &cfg);
         let boot = decode_bootstrap(&payload).unwrap();
         assert_eq!(boot.algorithm, "PR");
@@ -866,7 +876,24 @@ mod tests {
         assert_eq!(boot.partitioning.edge_worker, p.edge_worker);
         assert_eq!(boot.partitioning.master, p.master);
         assert_eq!(boot.partitioning.replicas, p.replicas);
-        assert_eq!(boot.cfg.num_workers, cfg.num_workers);
-        assert_eq!(boot.cfg.ops_per_sec.to_bits(), cfg.ops_per_sec.to_bits());
+        assert_eq!(boot.cfg, cfg, "the cluster spec survives the bootstrap bit-exactly");
+    }
+
+    #[test]
+    fn bootstrap_carries_heterogeneous_specs() {
+        let mut rng = crate::util::rng::Rng::new(78);
+        let g = crate::graph::gen::erdos::generate("wire-het", 40, 120, true, &mut rng);
+        let p = crate::partition::Strategy::Random.partition(&g, 4);
+        let cfg = ClusterSpec::builder()
+            .workers(4)
+            .machines(2)
+            .speed(1, 5.0e5)
+            .machine_link(0, 1, 1.0e8, 1e-4)
+            .build()
+            .unwrap();
+        let payload = encode_bootstrap("PR", &g, &p, &cfg);
+        let boot = decode_bootstrap(&payload).unwrap();
+        assert_eq!(boot.cfg, cfg);
+        assert!(boot.cfg.flat_view().is_none(), "spec is genuinely heterogeneous");
     }
 }

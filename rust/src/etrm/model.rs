@@ -195,14 +195,14 @@ mod tests {
     use super::*;
     use crate::algorithms::Algorithm;
     use crate::dataset::logs::LogStore;
-    use crate::engine::cost::ClusterConfig;
+    use crate::engine::cluster::ClusterSpec;
     use crate::graph::datasets::DatasetSpec;
 
     /// Train on two graphs' logs; the model must reproduce the ordering
     /// of strategies on the training tasks (in-sample sanity).
     #[test]
     fn in_sample_selection_close_to_best() {
-        let cfg = ClusterConfig::with_workers(8);
+        let cfg = ClusterSpec::with_workers(8);
         let mut store = LogStore::default();
         for name in ["wiki", "epinions"] {
             let g = DatasetSpec::by_name(name).unwrap().build(0.02, 11);
@@ -251,7 +251,7 @@ mod tests {
 
     #[test]
     fn predict_all_covers_inventory() {
-        let cfg = ClusterConfig::with_workers(4);
+        let cfg = ClusterSpec::with_workers(4);
         let mut store = LogStore::default();
         let g = DatasetSpec::by_name("wiki").unwrap().build(0.01, 5);
         store
@@ -298,7 +298,7 @@ mod tests {
     /// produce genuinely different training targets.
     #[test]
     fn label_channels_select_different_targets() {
-        let cfg = ClusterConfig::with_workers(4);
+        let cfg = ClusterSpec::with_workers(4);
         let mut store = LogStore::default();
         let g = DatasetSpec::by_name("wiki").unwrap().build(0.01, 5);
         store

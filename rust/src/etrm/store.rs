@@ -13,7 +13,7 @@
 //! ```text
 //! gps-etrm v1                     format magic + version
 //! label sim_time                  training-label channel
-//! feature-dim 52                  encoded input width
+//! feature-dim 59                  encoded input width
 //! opkeys NUM_VERTEX,…             algorithm-feature schema
 //! strategies 0:1DSrc,…,11:Ginger  strategy inventory (PSID:name)
 //! backend gbdt                    regressor family

@@ -4,7 +4,7 @@
 
 use crate::algorithms::Algorithm;
 use crate::dataset::split::TestSet;
-use crate::engine::cost::ClusterConfig;
+use crate::engine::cluster::ClusterSpec;
 use crate::etrm::EtrmBackend;
 use crate::features::encoding::{table3_group, table4_group};
 use crate::graph::datasets::DatasetSpec;
@@ -65,7 +65,7 @@ pub fn fig4(scale: f64, seed: u64) -> Result<String> {
     let g = DatasetSpec::by_name("stanford").unwrap().build(scale, seed);
     let mut t = Table::new(vec!["workers", "PR time (s)", "TC time (s)"]);
     for &w in &[4usize, 8, 16, 32, 64] {
-        let cfg = ClusterConfig::with_workers(w);
+        let cfg = ClusterSpec::with_workers(w);
         let p = Strategy::TwoD.partition(&g, w);
         let pr = Algorithm::Pr.simulate(&g, &p, &cfg).sim.total;
         let tc = Algorithm::Tc.simulate(&g, &p, &cfg).sim.total;

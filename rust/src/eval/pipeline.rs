@@ -18,7 +18,7 @@ use crate::dataset::augment::augment;
 use crate::dataset::checkpoint;
 use crate::dataset::logs::{ExecutionLog, LogStore};
 use crate::dataset::split::{test_split, TestSet};
-use crate::engine::cost::ClusterConfig;
+use crate::engine::cluster::ClusterSpec;
 use crate::engine::ExecutionMode;
 use crate::etrm::scores::{rank_of_selected, TaskScores};
 use crate::etrm::Etrm;
@@ -26,7 +26,7 @@ use crate::features::{DataFeatures, TaskFeatures};
 use crate::ml::gbdt::GbdtParams;
 use crate::ml::Label;
 use crate::partition::Strategy;
-use crate::util::error::Result;
+use crate::util::error::{ensure, Result};
 use crate::util::pool;
 use crate::util::rng::Rng;
 
@@ -69,6 +69,12 @@ pub struct PipelineConfig {
     /// simulated oracle — the deterministic, reproducible ground truth
     /// — whichever channel trained the model.
     pub label: Label,
+    /// Cluster the corpus runs on. `None` (default) = the uniform
+    /// paper cluster sized to `workers`; an explicit spec (its worker
+    /// count must match `workers`) builds a skewed-cluster corpus whose
+    /// logs carry the spec's cluster features, and is folded into the
+    /// checkpoint manifest fingerprint.
+    pub cluster: Option<ClusterSpec>,
 }
 
 impl Default for PipelineConfig {
@@ -90,6 +96,7 @@ impl Default for PipelineConfig {
                 ..GbdtParams::paper()
             },
             label: Label::SimTime,
+            cluster: None,
         }
     }
 }
@@ -184,7 +191,14 @@ pub fn build_training_set(
     config: &PipelineConfig,
     progress: &mut impl FnMut(&str),
 ) -> Result<TrainingSet> {
-    let cfg = ClusterConfig::with_workers(config.workers);
+    let cfg =
+        config.cluster.clone().unwrap_or_else(|| ClusterSpec::with_workers(config.workers));
+    ensure!(
+        cfg.num_workers() == config.workers,
+        "pipeline cluster spec has {} workers, but config.workers is {}",
+        cfg.num_workers(),
+        config.workers
+    );
     let threads = pool::resolve_threads(config.threads);
     progress(&format!(
         "building execution-log corpus (12 graphs × 8 algorithms × 11 strategies, \
@@ -253,6 +267,12 @@ pub fn run_with_progress(
     for t in &split {
         *tasks_per_graph.entry(t.graph).or_insert(0.0) += 1.0;
     }
+    // Evaluation tasks carry the same cluster features the corpus logs
+    // were built with, so the model sees a consistent feature space.
+    let cluster_feats = config
+        .cluster
+        .as_ref()
+        .map_or_else(|| ClusterSpec::with_workers(config.workers).features(), |c| c.features());
     let mut features_of: BTreeMap<&'static str, (DataFeatures, f64)> = BTreeMap::new();
     let mut tasks = Vec::with_capacity(split.len());
     for t in split {
@@ -269,7 +289,8 @@ pub fn run_with_progress(
         let t0 = Instant::now();
         let counts = analyze(t.algorithm.pseudo_code())?;
         let cost_algo = t0.elapsed().as_secs_f64();
-        let features = TaskFeatures::from_parts(data, &counts);
+        let mut features = TaskFeatures::from_parts(data, &counts);
+        features.cluster = cluster_feats;
         // audit:allow(instant-now): §5.7 prediction cost, reported only
         let t0 = Instant::now();
         let selected = etrm.select(&features);

@@ -1,29 +1,32 @@
 //! Model-input encoding (Fig 5): scaling + one-hot.
 //!
-//! Layout (52 columns):
+//! Layout (59 columns):
 //!
 //! | cols  | content |
 //! |-------|---------|
 //! | 0-1   | log1p(|V|), log1p(|E|) |
-//! | 2-9   | in-degree: log1p(mean), log1p(std), sign(skew), log1p(|skew|), sign(kurt), log1p(|kurt|) is 6 → cols 2-7; see below |
 //! | 2-7   | in-degree moments (mean, std, skew sign/abs, kurt sign/abs) |
 //! | 8-13  | out-degree moments (same shape) |
 //! | 14-15 | direction one-hot (undirected, directed) |
 //! | 16-36 | 21 algorithm features, log1p |
 //! | 37-47 | strategy one-hot (PSID order of `Strategy::inventory()`, 11) |
 //! | 48-51 | strategy family flags (hash, greedy, degree-aware, grid) |
+//! | 52-58 | cluster block ([`crate::engine::cluster::ClusterFeatures`]) |
 //!
 //! Skewness/kurtosis are split into sign and magnitude exactly as
-//! §4.1.1 describes ("divided into a sign and absolute value").
+//! §4.1.1 describes ("divided into a sign and absolute value"). The
+//! cluster block is appended *after* every paper column so the pinned
+//! Table-3/Table-4/one-hot column indices are unchanged.
 
 use crate::analyzer::{OpKey, NUM_OP_KEYS};
+use crate::engine::cluster::CLUSTER_FEATURE_DIM;
 use crate::partition::Strategy;
 
 use super::data::{DataFeatures, MomentFeatures};
 use super::task::TaskFeatures;
 
 /// Total encoded width.
-pub const FEATURE_DIM: usize = 52;
+pub const FEATURE_DIM: usize = 52 + CLUSTER_FEATURE_DIM;
 
 /// Width of the raw task-transport image used by the selection
 /// service's wire protocol: the un-scaled [`TaskFeatures`] fields in a
@@ -132,6 +135,17 @@ pub fn encode_into(task: &TaskFeatures, strategy: Strategy, out: &mut [f64; FEAT
     push(greedy);
     push(degree_aware);
     push(grid);
+    // cluster block: speed spread (scaled like the other magnitudes),
+    // link spread, tier count — lets one model condition its choice on
+    // which cluster the task will run on
+    let c = &task.cluster;
+    push(log1p(c.speed_min));
+    push(log1p(c.speed_max));
+    push(c.speed_cv);
+    push(log1p(c.bw_min));
+    push(log1p(c.bw_max));
+    push(log1p(c.latency_max * 1e6));
+    push(c.tier_count);
     debug_assert_eq!(i, FEATURE_DIM);
 }
 
@@ -161,6 +175,18 @@ pub fn feature_names() -> Vec<String> {
     names.extend(
         ["family_hash", "family_greedy", "family_degree_aware", "family_grid"]
             .map(String::from),
+    );
+    names.extend(
+        [
+            "cluster_speed_min",
+            "cluster_speed_max",
+            "cluster_speed_cv",
+            "cluster_bw_min",
+            "cluster_bw_max",
+            "cluster_latency_us",
+            "cluster_tiers",
+        ]
+        .map(String::from),
     );
     assert_eq!(names.len(), FEATURE_DIM);
     names
@@ -271,6 +297,34 @@ mod tests {
         let b = encode(&t, Strategy::Hdrf(100));
         assert_ne!(a[37..48], b[37..48]);
         assert_eq!(a[48..], b[48..]);
+    }
+
+    /// The cluster block occupies the trailing columns: default specs
+    /// encode the uniform paper cluster, and a heterogeneous spec
+    /// changes *only* those columns, leaving every pinned paper column
+    /// untouched.
+    #[test]
+    fn cluster_block_is_appended_after_paper_columns() {
+        use crate::engine::cluster::{ClusterSpec, CLUSTER_FEATURE_DIM};
+        let names = feature_names();
+        assert_eq!(names[52], "cluster_speed_min");
+        assert_eq!(names[FEATURE_DIM - 1], "cluster_tiers");
+        assert_eq!(FEATURE_DIM, 52 + CLUSTER_FEATURE_DIM);
+
+        let t = task();
+        let base = encode(&t, Strategy::Hybrid);
+        let mut het = t.clone();
+        het.cluster = ClusterSpec::straggler(0, 8.0).features();
+        let v = encode(&het, Strategy::Hybrid);
+        assert_eq!(base[..52], v[..52], "paper columns unchanged");
+        assert_ne!(base[52..], v[52..], "cluster columns respond to spec");
+        // uniform default: min == max speed, zero cv, two tiers
+        assert_eq!(base[52], base[53]);
+        assert_eq!(base[54], 0.0);
+        assert_eq!(base[FEATURE_DIM - 1], 2.0);
+        // straggler: speed spread appears
+        assert!(v[52] < v[53]);
+        assert!(v[54] > 0.0);
     }
 
     /// The wire transport image round-trips every field bit-exactly,

@@ -1,12 +1,13 @@
 //! Task features: data features ⊕ algorithm features (Fig 2 steps 1-2).
 
 use crate::analyzer::{analyze, AlgoCounts, NUM_OP_KEYS};
-use crate::util::error::Result;
+use crate::engine::cluster::ClusterFeatures;
 use crate::graph::Graph;
+use crate::util::error::Result;
 
 use super::data::DataFeatures;
 
-/// The feature bundle of one task (graph × algorithm).
+/// The feature bundle of one task (graph × algorithm × cluster).
 #[derive(Clone, Debug)]
 pub struct TaskFeatures {
     /// Table 3 features of the graph.
@@ -14,6 +15,13 @@ pub struct TaskFeatures {
     /// Evaluated Table 4 counts ([`NUM_OP_KEYS`] entries, Table 4
     /// order).
     pub algo: [f64; NUM_OP_KEYS],
+    /// Cluster-feature block of the cluster the task targets
+    /// (heterogeneity summary: speed spread, link-tier spread). The
+    /// default is the uniform paper cluster, which every constructor
+    /// stamps; callers running against a non-default
+    /// [`crate::engine::cluster::ClusterSpec`] overwrite it with
+    /// `spec.features()`.
+    pub cluster: ClusterFeatures,
 }
 
 impl TaskFeatures {
@@ -30,17 +38,19 @@ impl TaskFeatures {
     /// PJRT paths).
     pub fn from_parts(data: DataFeatures, counts: &AlgoCounts) -> Self {
         let algo = counts.feature_vector(&data.sym_env());
-        TaskFeatures { data, algo }
+        TaskFeatures { data, algo, cluster: ClusterFeatures::default() }
     }
 
     /// Assemble from a raw evaluated algorithm-feature vector.
     pub fn from_vector(data: DataFeatures, algo: [f64; NUM_OP_KEYS]) -> Self {
-        TaskFeatures { data, algo }
+        TaskFeatures { data, algo, cluster: ClusterFeatures::default() }
     }
 
     /// Sum of algorithm features — the aggregation used when synthetic
     /// tasks are built from sequences of real algorithms (§4.2.1:
-    /// `AF(s) = Σ AF(r_i)`).
+    /// `AF(s) = Σ AF(r_i)`). The cluster block is *not* summed: a
+    /// synthetic task targets the same cluster as its members, so the
+    /// caller stamps it (the default is the uniform paper cluster).
     pub fn aggregate_algos(data: DataFeatures, parts: &[[f64; NUM_OP_KEYS]]) -> Self {
         let mut algo = [0.0; NUM_OP_KEYS];
         for p in parts {
@@ -48,7 +58,7 @@ impl TaskFeatures {
                 algo[i] += p[i];
             }
         }
-        TaskFeatures { data, algo }
+        TaskFeatures { data, algo, cluster: ClusterFeatures::default() }
     }
 }
 

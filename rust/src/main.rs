@@ -62,7 +62,12 @@
 //! `GPS_ENGINE_MODE` env var, then to `simulated`), and
 //! `--checkpoint-dir` (crash-safe corpus checkpoint directory; defaults
 //! to the `GPS_CHECKPOINT_DIR` env var, then to no checkpointing — see
-//! the README's corpus-checkpointing section).
+//! the README's corpus-checkpointing section). Subcommands that cost
+//! or select (`pipeline`, `figures`, `train`, `logs`, `select`, `run`)
+//! additionally take `--cluster <preset|file>` to describe a
+//! heterogeneous cluster (`default`, `straggler[:K:SLOWDOWN]`,
+//! `two_tier[:W:FAST:SLOW:RATIO]`, or a spec-file path — see the
+//! README's cluster-model section).
 //!
 //! `--worker-rank <r> --worker-connect <addr>` is the hidden entry
 //! point of the socket engine's worker processes: the coordinator
@@ -74,8 +79,7 @@ use std::io::Write as _;
 use std::path::{Path, PathBuf};
 
 use gps_select::algorithms::Algorithm;
-use gps_select::dataset::checkpoint;
-use gps_select::engine::ExecutionMode;
+use gps_select::engine::cluster::ClusterSpec;
 use gps_select::eval::pipeline;
 use gps_select::ml::gbdt::GbdtParams;
 use gps_select::ml::mlp::MlpParams;
@@ -101,15 +105,26 @@ fn main() {
     }
 }
 
+/// `--cluster <preset|file>` as a parsed spec (`None` = the uniform
+/// paper cluster). Presets: `default`, `straggler[:K:SLOWDOWN]`,
+/// `two_tier[:W:FAST:SLOW:RATIO]`; anything else is a spec-file path.
+fn cluster_arg(args: &Args) -> Result<Option<ClusterSpec>> {
+    args.get("cluster").map(ClusterSpec::parse).transpose()
+}
+
 fn pipeline_config(args: &Args) -> Result<pipeline::PipelineConfig> {
     let default = pipeline::PipelineConfig::default();
+    // threads / engine-mode / checkpoint-dir resolve through the one
+    // typed flag+env resolver every entry point shares
+    let opts = app::RunOptions::from_args(args)?;
     Ok(pipeline::PipelineConfig {
         scale: args.get_f64("scale", default.scale)?,
         seed: args.get_u64("seed", default.seed)?,
         workers: args.get_usize("workers", default.workers)?,
-        threads: args.get_usize("threads", default.threads)?,
-        engine_mode: ExecutionMode::resolve(args.get("engine-mode"))?,
-        checkpoint_dir: checkpoint::resolve_dir(args.get("checkpoint-dir")),
+        threads: opts.threads,
+        engine_mode: opts.mode,
+        checkpoint_dir: opts.checkpoint_dir,
+        cluster: cluster_arg(args)?,
         augment_cap: match args.get("cap") {
             Some("none") => None,
             Some(v) => Some(
@@ -147,10 +162,11 @@ fn label_demand(args: &Args) -> Result<Option<Label>> {
 }
 
 fn dispatch(args: &Args) -> Result<()> {
-    // global knob, read by the engine on worker-state construction: a
-    // CLI value overrides the GPS_INTRA_THREADS env var for every
-    // subcommand that reaches the engine (0 = keep env/default)
-    gps_select::util::pool::set_intra_threads(args.get_usize("intra-threads", 0)?);
+    // resolve the shared flag+env knobs once (threads, intra-threads,
+    // engine mode, checkpoint dir) and publish the global ones: a CLI
+    // value overrides the matching GPS_* env var for every subcommand
+    // that reaches the engine (0 = keep env/default)
+    app::RunOptions::from_args(args)?.apply();
     match args.subcommand() {
         Some("figures") => cmd_figures(args),
         Some("pipeline") => cmd_pipeline(args),
@@ -221,6 +237,7 @@ fn cmd_select(args: &Args) -> Result<()> {
         algorithms: args.get_or("algorithm", "PR").split(',').map(str::to_string).collect(),
         threads: args.get_usize("threads", 0)?,
         bits_out: args.get("bits-out").map(PathBuf::from),
+        cluster: cluster_arg(args)?,
     };
     print!("{}", app::select_report(&spec)?);
     Ok(())
@@ -278,7 +295,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         algorithm: args.get_or("algorithm", "PR").to_string(),
         strategy: args.get_or("strategy", "Random").to_string(),
         workers: args.get_usize("workers", 64)?,
-        mode: ExecutionMode::resolve(args.get("engine-mode"))?,
+        mode: app::RunOptions::from_args(args)?.mode,
+        cluster: cluster_arg(args)?,
     };
     print!("{}", app::run_report(&spec)?);
     Ok(())

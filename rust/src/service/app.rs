@@ -24,8 +24,9 @@ use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use crate::algorithms::Algorithm;
 use crate::analyzer;
+use crate::dataset::checkpoint;
 use crate::dataset::logs::LogStore;
-use crate::engine::cost::ClusterConfig;
+use crate::engine::cluster::ClusterSpec;
 use crate::engine::ExecutionMode;
 use crate::etrm::{store as model_store, Etrm};
 use crate::eval::{figures, pipeline};
@@ -36,9 +37,69 @@ use crate::ml::mlp::MlpParams;
 use crate::ml::Label;
 use crate::partition::metrics::PartitionMetrics;
 use crate::partition::Strategy;
+use crate::util::cli::Args;
 use crate::util::error::{bail, ensure, Context, Result};
 use crate::util::fsio;
 use crate::util::pool;
+
+// ------------------------------------------------------------- run options
+
+/// The runtime knobs shared by every entry point that reaches the
+/// engine or the corpus builder — CLI subcommands, the selection
+/// daemon and the integration tests — resolved in **one** place
+/// instead of each call site re-reading flags and environment
+/// variables. Resolution order everywhere: explicit CLI flag, then the
+/// environment variable, then the default.
+///
+/// | knob | flag | env | default |
+/// |------|------|-----|---------|
+/// | pool threads | `--threads` | `GPS_THREADS` | available cores |
+/// | intra-worker threads | `--intra-threads` | `GPS_INTRA_THREADS` | 1 |
+/// | engine backend | `--engine-mode` | `GPS_ENGINE_MODE` | simulated |
+/// | checkpoint dir | `--checkpoint-dir` | `GPS_CHECKPOINT_DIR` | off |
+///
+/// `threads`/`intra_threads` keep the crate's `0 = resolve at the use
+/// site` convention, so late env reads ([`pool::resolve_threads`])
+/// behave exactly as before.
+#[derive(Clone, Debug)]
+pub struct RunOptions {
+    /// Corpus/selection pool parallelism (0 = `GPS_THREADS`, then the
+    /// machine's available cores).
+    pub threads: usize,
+    /// Per-engine-worker sweep parallelism (0 = `GPS_INTRA_THREADS`,
+    /// then 1).
+    pub intra_threads: usize,
+    /// Engine backend every task runs on.
+    pub mode: ExecutionMode,
+    /// Crash-safe corpus checkpoint directory (`None` = off).
+    pub checkpoint_dir: Option<PathBuf>,
+}
+
+impl RunOptions {
+    /// Resolve from CLI flags with environment fallbacks (the `repro`
+    /// dispatch path).
+    pub fn from_args(args: &Args) -> Result<Self> {
+        Ok(RunOptions {
+            threads: args.get_usize("threads", 0)?,
+            intra_threads: args.get_usize("intra-threads", 0)?,
+            mode: ExecutionMode::resolve(args.get("engine-mode"))?,
+            checkpoint_dir: checkpoint::resolve_dir(args.get("checkpoint-dir")),
+        })
+    }
+
+    /// Resolve from the environment alone (daemon workers, tests and
+    /// library callers with no CLI).
+    pub fn from_env() -> Result<Self> {
+        Self::from_args(&Args::default())
+    }
+
+    /// Install the process-global knobs (currently the intra-worker
+    /// thread count the engine reads on worker-state construction).
+    /// Idempotent; call once after parsing.
+    pub fn apply(&self) {
+        pool::set_intra_threads(self.intra_threads);
+    }
+}
 
 // ------------------------------------------------------------ graph / task
 
@@ -262,6 +323,10 @@ pub struct SelectSpec {
     pub algorithms: Vec<String>,
     pub threads: usize,
     pub bits_out: Option<PathBuf>,
+    /// `--cluster`: condition the selection on a target cluster. `None`
+    /// selects for the uniform paper cluster (the features' default
+    /// block), byte-identical to the pre-cluster behaviour.
+    pub cluster: Option<ClusterSpec>,
 }
 
 /// The `repro select` body: cached model load, shared feature sweep,
@@ -270,7 +335,13 @@ pub fn select_report(spec: &SelectSpec) -> Result<String> {
     let model = load_model_expecting(&spec.model, spec.expect)?;
     let g = spec.graph.build()?;
     let names: Vec<&str> = spec.algorithms.iter().map(|s| s.as_str()).collect();
-    let (algos, tasks) = algorithm_tasks(&g, &names)?;
+    let (algos, mut tasks) = algorithm_tasks(&g, &names)?;
+    if let Some(c) = &spec.cluster {
+        let feats = c.features();
+        for t in &mut tasks {
+            t.cluster = feats;
+        }
+    }
     let sel = select_with_predictions(&model.etrm, &tasks, spec.threads, true);
     let tables = sel.predictions.as_ref().ok_or_else(|| crate::err!("predictions requested"))?;
     let mut out = String::new();
@@ -284,6 +355,17 @@ pub fn select_report(spec: &SelectSpec) -> Result<String> {
         g.name
     )
     .unwrap();
+    if let Some(c) = &spec.cluster {
+        writeln!(
+            out,
+            "cluster: {} workers / {} machines, {} link tier(s), fingerprint {:016x}",
+            c.num_workers(),
+            c.num_machines(),
+            c.tiers().len(),
+            c.fingerprint()
+        )
+        .unwrap();
+    }
     for ((a, table), pick) in algos.iter().zip(tables).zip(&sel.picks) {
         writeln!(out, "task {}/{}:", g.name, a.name()).unwrap();
         for (s, t) in table {
@@ -457,6 +539,9 @@ pub struct RunSpec {
     pub strategy: String,
     pub workers: usize,
     pub mode: ExecutionMode,
+    /// `--cluster`: run the cost model against this spec. When set, its
+    /// worker count wins over `workers`.
+    pub cluster: Option<ClusterSpec>,
 }
 
 /// The `repro run` body: execute one task on the engine and report the
@@ -467,8 +552,11 @@ pub fn run_report(spec: &RunSpec) -> Result<String> {
         .context("unknown --algorithm (AID AOD PR GC APCN TC CC RW)")?;
     let strategy =
         Strategy::by_name(&spec.strategy).context("unknown --strategy (see table2)")?;
-    let cfg = ClusterConfig::with_workers(spec.workers);
-    let p = strategy.partition(&g, spec.workers);
+    let cfg = match &spec.cluster {
+        Some(c) => c.clone(),
+        None => ClusterSpec::with_workers(spec.workers),
+    };
+    let p = strategy.partition(&g, cfg.num_workers());
     // try_execute: a socket-backend failure (worker spawn, wire IO)
     // surfaces as a clean CLI error instead of a panic
     let outcome = algo.try_execute(&g, &p, &cfg, spec.mode)?;
@@ -479,7 +567,7 @@ pub fn run_report(spec: &RunSpec) -> Result<String> {
         g.name,
         algo.name(),
         strategy.name(),
-        spec.workers,
+        cfg.num_workers(),
         g.num_vertices(),
         g.num_edges(),
         spec.mode.name()
@@ -597,7 +685,8 @@ pub fn analyze_report(spec: &AnalyzeSpec) -> Result<String> {
 /// The `repro logs --limit-graphs` body: checkpoint the first `limit`
 /// corpus graphs, then stop (a later run without the limit resumes).
 pub fn logs_checkpoint_report(config: &pipeline::PipelineConfig, limit: usize) -> Result<String> {
-    let cfg = ClusterConfig::with_workers(config.workers);
+    let cfg =
+        config.cluster.clone().unwrap_or_else(|| ClusterSpec::with_workers(config.workers));
     let threads = pool::resolve_threads(config.threads);
     let dir = config
         .checkpoint_dir
@@ -622,7 +711,8 @@ pub fn logs_checkpoint_report(config: &pipeline::PipelineConfig, limit: usize) -
 /// The `repro logs` body: build (and checkpoint) the full corpus and
 /// save it as CSV.
 pub fn logs_report(config: &pipeline::PipelineConfig, out_path: &Path) -> Result<String> {
-    let cfg = ClusterConfig::with_workers(config.workers);
+    let cfg =
+        config.cluster.clone().unwrap_or_else(|| ClusterSpec::with_workers(config.workers));
     let threads = pool::resolve_threads(config.threads);
     let store = LogStore::build_corpus_checkpointed(
         config.scale,
@@ -697,13 +787,47 @@ mod tests {
     fn favoring_etrm(favorite: usize) -> Etrm {
         let mut weights = vec![0.0; FEATURE_DIM + 1];
         // the strategy one-hot block sits before the 4 family-flag
-        // columns; see the features::encoding layout table
-        let onehot_base = FEATURE_DIM - 4 - Strategy::INVENTORY.len();
+        // columns and the trailing cluster block; see the
+        // features::encoding layout table
+        let onehot_base = FEATURE_DIM
+            - crate::engine::cluster::CLUSTER_FEATURE_DIM
+            - 4
+            - Strategy::INVENTORY.len();
         weights[onehot_base + favorite] = -1.0;
         Etrm {
             backend: crate::etrm::EtrmBackend::Ridge(Ridge { weights, log_target: false }),
             label: Label::SimTime,
         }
+    }
+
+    #[test]
+    fn run_options_resolve_flags_first() {
+        let args = Args::parse_from(
+            [
+                "logs",
+                "--threads",
+                "3",
+                "--intra-threads",
+                "2",
+                "--engine-mode",
+                "simulated",
+                "--checkpoint-dir",
+                "ckpt/x",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        );
+        let opts = RunOptions::from_args(&args).unwrap();
+        assert_eq!(opts.threads, 3);
+        assert_eq!(opts.intra_threads, 2);
+        assert!(matches!(opts.mode, ExecutionMode::Simulated));
+        assert_eq!(opts.checkpoint_dir.as_deref(), Some(Path::new("ckpt/x")));
+        // without flags, both thread knobs keep the crate's
+        // 0 = resolve-at-use-site convention
+        let env = RunOptions::from_env().unwrap();
+        assert_eq!(env.threads, 0);
+        assert_eq!(env.intra_threads, 0);
     }
 
     #[test]

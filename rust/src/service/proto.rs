@@ -12,10 +12,15 @@
 //! accidentally dials an engine worker desyncs immediately instead of
 //! half-parsing.
 //!
-//! A `SELECT` request carries `[flags: u8][n: u16]` then `n` task
-//! images of [`TASK_WIRE_DIM`] raw f64 bit patterns each (the
-//! [`crate::features::task_to_values`] layout). The `SELECT_OK` reply
-//! carries `[flags: u8][fingerprint: u64][backend: str][label: str]
+//! A `SELECT` request carries `[flags: u8][n: u16]`, then — when the
+//! v2 [`FLAG_CLUSTER`] bit is set — a `u32`-length-prefixed
+//! [`ClusterSpec`] wire image, then `n` task images of
+//! [`TASK_WIRE_DIM`] raw f64 bit patterns each (the
+//! [`crate::features::task_to_values`] layout). A v1 frame (no cluster
+//! bit) decodes exactly as before, with every task stamped for the
+//! default uniform cluster — old clients keep getting bit-identical
+//! answers from a new daemon. The `SELECT_OK` reply carries
+//! `[flags: u8][fingerprint: u64][backend: str][label: str]
 //! [n: u16]`, the `n` selected strategy ids, and — when the request
 //! set [`FLAG_WANT_BITS`] — the full `n ×` inventory prediction table,
 //! enough for the client to render the byte-identical
@@ -26,7 +31,8 @@
 use std::net::TcpStream;
 use std::time::Duration;
 
-use crate::engine::wire::{self, put_f64, put_str, put_u16, put_u64, Reader};
+use crate::engine::cluster::{ClusterFeatures, ClusterSpec};
+use crate::engine::wire::{self, put_f64, put_str, put_u16, put_u32, put_u64, Reader};
 use crate::etrm::store;
 use crate::features::{task_from_values, task_to_values, zeroed_task, TaskFeatures, TASK_WIRE_DIM};
 use crate::partition::Strategy;
@@ -46,6 +52,13 @@ pub const FRAME_ERR: u8 = 0x2F;
 /// `SELECT` flag: ship the full prediction table back, not just the
 /// argmin picks (what the probe-bits round trip needs).
 pub const FLAG_WANT_BITS: u8 = 1;
+
+/// `SELECT` flag (protocol v2): the request carries a
+/// `u32`-length-prefixed [`ClusterSpec`] wire image between the task
+/// count and the task images; the daemon conditions every task's
+/// selection on it. Absent (v1 frames), tasks select for the default
+/// uniform cluster.
+pub const FLAG_CLUSTER: u8 = 2;
 
 /// Upper bound on tasks per request — a corrupted count must not make
 /// the daemon stage a pathological batch.
@@ -75,12 +88,33 @@ impl Default for RequestScratch {
     }
 }
 
-/// Serialize a `SELECT` request payload.
+/// Serialize a v1 `SELECT` request payload (no cluster block) —
+/// shorthand for [`encode_select_request_with_cluster`] with `None`.
 pub fn encode_select_request(tasks: &[TaskFeatures], want_bits: bool) -> Vec<u8> {
+    encode_select_request_with_cluster(tasks, want_bits, None)
+}
+
+/// Serialize a `SELECT` request payload. With a `cluster` spec the
+/// frame is protocol v2 ([`FLAG_CLUSTER`] set, spec wire image
+/// embedded); without one it is byte-identical to a v1 frame.
+pub fn encode_select_request_with_cluster(
+    tasks: &[TaskFeatures],
+    want_bits: bool,
+    cluster: Option<&ClusterSpec>,
+) -> Vec<u8> {
     debug_assert!(!tasks.is_empty() && tasks.len() <= MAX_TASKS_PER_REQUEST);
-    let mut out = Vec::with_capacity(3 + tasks.len() * TASK_WIRE_DIM * 8);
-    out.push(if want_bits { FLAG_WANT_BITS } else { 0 });
+    let spec_len = cluster.map_or(0, |c| 4 + c.encoded_len());
+    let mut out = Vec::with_capacity(3 + spec_len + tasks.len() * TASK_WIRE_DIM * 8);
+    let mut flags = if want_bits { FLAG_WANT_BITS } else { 0 };
+    if cluster.is_some() {
+        flags |= FLAG_CLUSTER;
+    }
+    out.push(flags);
     put_u16(&mut out, tasks.len() as u16);
+    if let Some(c) = cluster {
+        put_u32(&mut out, c.encoded_len() as u32);
+        c.encode_wire(&mut out);
+    }
     let mut vals = [0.0; TASK_WIRE_DIM];
     for task in tasks {
         task_to_values(task, &mut vals);
@@ -93,17 +127,33 @@ pub fn encode_select_request(tasks: &[TaskFeatures], want_bits: bool) -> Vec<u8>
 
 /// Decode a `SELECT` request into `scratch.tasks` (reusing its
 /// buffers) and return whether the client asked for prediction bits.
-/// Every failure is a clean error the daemon converts into a
-/// [`FRAME_ERR`] reply.
+/// Every decoded task's cluster block is stamped — from the embedded
+/// spec of a v2 frame, or the uniform default for a v1 frame. The
+/// stamp is unconditional because the scratch tasks are *reused*
+/// across requests on one connection: a v1 request after a v2 request
+/// must not inherit the previous request's cluster. Every failure is a
+/// clean error the daemon converts into a [`FRAME_ERR`] reply.
 pub fn decode_select_request(payload: &[u8], scratch: &mut RequestScratch) -> Result<bool> {
     let mut r = Reader::new(payload);
     let flags = r.u8()?;
-    ensure!(flags & !FLAG_WANT_BITS == 0, "unknown select request flags {flags:#04x}");
+    ensure!(
+        flags & !(FLAG_WANT_BITS | FLAG_CLUSTER) == 0,
+        "unknown select request flags {flags:#04x}"
+    );
     let n = r.u16()? as usize;
     ensure!(
         (1..=MAX_TASKS_PER_REQUEST).contains(&n),
         "select request carries {n} tasks (limit {MAX_TASKS_PER_REQUEST})"
     );
+    let cluster_feats = if flags & FLAG_CLUSTER != 0 {
+        let len = r.u32()? as usize;
+        let block = r.take(len).context("select request cluster block")?;
+        let (spec, used) = ClusterSpec::decode_wire(block)?;
+        ensure!(used == len, "cluster block declares {len} bytes but decodes {used}");
+        spec.features()
+    } else {
+        ClusterFeatures::default()
+    };
     for i in 0..n {
         for slot in scratch.vals.iter_mut() {
             *slot = r.f64_bits()?;
@@ -112,6 +162,7 @@ pub fn decode_select_request(payload: &[u8], scratch: &mut RequestScratch) -> Re
             scratch.tasks.push(zeroed_task());
         }
         task_from_values(&scratch.vals, &mut scratch.tasks[i]);
+        scratch.tasks[i].cluster = cluster_feats;
     }
     scratch.tasks.truncate(n);
     r.finish()?;
@@ -375,13 +426,27 @@ impl Client {
 
     /// Select one strategy per task; with `want_bits`, the reply also
     /// ships the full prediction tables for probe-bits rendering.
+    /// Sends a v1 frame — the daemon selects for the default uniform
+    /// cluster.
     pub fn select(&mut self, tasks: &[TaskFeatures], want_bits: bool) -> Result<SelectReply> {
+        self.select_with_cluster(tasks, want_bits, None)
+    }
+
+    /// [`Client::select`] conditioned on a target cluster: a `Some`
+    /// spec ships as a protocol-v2 frame and the daemon stamps it into
+    /// every task's cluster-feature block before selecting.
+    pub fn select_with_cluster(
+        &mut self,
+        tasks: &[TaskFeatures],
+        want_bits: bool,
+        cluster: Option<&ClusterSpec>,
+    ) -> Result<SelectReply> {
         ensure!(
             !tasks.is_empty() && tasks.len() <= MAX_TASKS_PER_REQUEST,
             "a select request needs 1..={MAX_TASKS_PER_REQUEST} tasks, got {}",
             tasks.len()
         );
-        let payload = encode_select_request(tasks, want_bits);
+        let payload = encode_select_request_with_cluster(tasks, want_bits, cluster);
         let reply = decode_select_reply(&self.call(FRAME_SELECT, &payload, FRAME_SELECT_OK)?)?;
         ensure!(
             reply.picks.len() == tasks.len(),
@@ -451,6 +516,59 @@ mod tests {
         let one = encode_select_request(&tasks[..1], false);
         assert!(!decode_select_request(&one, &mut scratch).unwrap());
         assert_eq!(scratch.tasks.len(), 1);
+    }
+
+    /// Protocol-version compatibility, both directions: a v1 frame
+    /// (no cluster bit) decodes to default-cluster tasks, a v2 frame
+    /// stamps its spec's features on every task, and a v1 frame
+    /// arriving *after* a v2 frame on the same scratch resets the
+    /// stamp (the reused task buffers must not leak the previous
+    /// request's cluster).
+    #[test]
+    fn select_request_cluster_versioning() {
+        let tasks = probe_tasks();
+        let mut scratch = RequestScratch::new();
+
+        // v1: byte layout unchanged, default cluster stamped
+        let v1 = encode_select_request(&tasks, false);
+        assert_eq!(v1[0] & FLAG_CLUSTER, 0);
+        decode_select_request(&v1, &mut scratch).unwrap();
+        assert!(scratch.tasks.iter().all(|t| t.cluster == ClusterFeatures::default()));
+
+        // v2: the embedded spec's features land on every task
+        let spec = ClusterSpec::builder().workers(4).speed(0, 2.5e5).build().unwrap();
+        let v2 = encode_select_request_with_cluster(&tasks, true, Some(&spec));
+        assert_ne!(v2[0] & FLAG_CLUSTER, 0);
+        let want_bits = decode_select_request(&v2, &mut scratch).unwrap();
+        assert!(want_bits);
+        assert!(scratch.tasks.iter().all(|t| t.cluster == spec.features()));
+        // the task transport image itself is untouched by the cluster
+        for (got, want) in scratch.tasks.iter().zip(&tasks) {
+            assert_eq!(wire_image(got), wire_image(want));
+        }
+
+        // v1 after v2 on the same scratch: stamp resets to default
+        decode_select_request(&v1, &mut scratch).unwrap();
+        assert!(scratch.tasks.iter().all(|t| t.cluster == ClusterFeatures::default()));
+
+        // explicit None encodes a byte-identical v1 frame
+        assert_eq!(v1, encode_select_request_with_cluster(&tasks, false, None));
+    }
+
+    /// A corrupt or truncated embedded cluster block is a clean error.
+    #[test]
+    fn select_request_rejects_bad_cluster_blocks() {
+        let tasks = probe_tasks();
+        let mut scratch = RequestScratch::new();
+        let spec = ClusterSpec::with_workers(4);
+        let good = encode_select_request_with_cluster(&tasks, false, Some(&spec));
+        // truncate inside the cluster block (flags + n + len prefix = 7
+        // bytes; the block follows)
+        assert!(decode_select_request(&good[..9], &mut scratch).is_err());
+        // corrupt the declared block length
+        let mut bad = good.clone();
+        bad[3] = bad[3].wrapping_add(1);
+        assert!(decode_select_request(&bad, &mut scratch).is_err());
     }
 
     #[test]

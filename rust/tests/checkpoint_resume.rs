@@ -9,7 +9,7 @@ use std::path::PathBuf;
 
 use gps_select::dataset::checkpoint::{manifest_text, CheckpointStore};
 use gps_select::dataset::logs::LogStore;
-use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::cluster::ClusterSpec;
 use gps_select::engine::ExecutionMode;
 
 const SCALE: f64 = 0.002;
@@ -44,7 +44,7 @@ fn assert_stores_identical(a: &LogStore, b: &LogStore) {
 
 #[test]
 fn interrupted_build_resumes_bit_identical() {
-    let cfg = ClusterConfig::with_workers(16);
+    let cfg = ClusterSpec::with_workers(16);
     let clean =
         LogStore::build_corpus_parallel(SCALE, SEED, &cfg, 1, ExecutionMode::Simulated).unwrap();
 
@@ -100,7 +100,7 @@ fn interrupted_build_resumes_bit_identical() {
 
 #[test]
 fn threaded_mode_resume_matches_simulated_reference() {
-    let cfg = ClusterConfig::with_workers(4);
+    let cfg = ClusterSpec::with_workers(4);
     let reference =
         LogStore::build_corpus_parallel(SCALE, SEED, &cfg, 1, ExecutionMode::Simulated).unwrap();
     let dir = scratch("threaded");
@@ -129,7 +129,7 @@ fn threaded_mode_resume_matches_simulated_reference() {
 /// corpus.
 #[test]
 fn resume_trusts_checkpointed_shards() {
-    let cfg = ClusterConfig::with_workers(16);
+    let cfg = ClusterSpec::with_workers(16);
     let dir = scratch("tamper");
     LogStore::checkpoint_prefix(SCALE, SEED, &cfg, 2, ExecutionMode::Simulated, &dir, 2)
         .unwrap();
@@ -161,13 +161,13 @@ fn resume_trusts_checkpointed_shards() {
 
 #[test]
 fn mismatched_manifest_is_rejected_not_merged() {
-    let cfg = ClusterConfig::with_workers(16);
+    let cfg = ClusterSpec::with_workers(16);
     let dir = scratch("mismatch");
     LogStore::checkpoint_prefix(SCALE, SEED, &cfg, 2, ExecutionMode::Simulated, &dir, 1)
         .unwrap();
 
     // each fingerprinted knob, changed one at a time, must invalidate
-    let other_workers = ClusterConfig::with_workers(8);
+    let other_workers = ClusterSpec::with_workers(8);
     let attempts: Vec<(&str, gps_select::util::error::Error)> = vec![
         (
             "scale",
@@ -227,7 +227,7 @@ fn mismatched_manifest_is_rejected_not_merged() {
 
 #[test]
 fn truncated_shard_is_rejected() {
-    let cfg = ClusterConfig::with_workers(16);
+    let cfg = ClusterSpec::with_workers(16);
     let dir = scratch("truncate");
     LogStore::checkpoint_prefix(SCALE, SEED, &cfg, 2, ExecutionMode::Simulated, &dir, 1)
         .unwrap();
@@ -252,7 +252,7 @@ fn truncated_shard_is_rejected() {
 
 #[test]
 fn corrupted_shard_is_rejected() {
-    let cfg = ClusterConfig::with_workers(16);
+    let cfg = ClusterSpec::with_workers(16);
     let dir = scratch("corrupt");
     LogStore::checkpoint_prefix(SCALE, SEED, &cfg, 2, ExecutionMode::Simulated, &dir, 1)
         .unwrap();

@@ -4,7 +4,7 @@
 //! thread count — on either engine execution mode.
 
 use gps_select::dataset::logs::LogStore;
-use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::cluster::ClusterSpec;
 use gps_select::engine::ExecutionMode;
 use gps_select::eval::pipeline::{run, PipelineConfig};
 use gps_select::ml::gbdt::GbdtParams;
@@ -34,7 +34,7 @@ fn assert_stores_identical(a: &LogStore, b: &LogStore) {
 
 #[test]
 fn corpus_is_bit_identical_across_thread_counts() {
-    let cfg = ClusterConfig::with_workers(16);
+    let cfg = ClusterSpec::with_workers(16);
     let serial =
         LogStore::build_corpus_parallel(0.002, 7, &cfg, 1, ExecutionMode::Simulated).unwrap();
     assert_eq!(serial.logs.len(), 12 * 8 * 11);
@@ -52,7 +52,7 @@ fn corpus_is_bit_identical_across_thread_counts() {
 /// corpus as well.
 #[test]
 fn corpus_threaded_mode_matches_simulated_across_thread_counts() {
-    let cfg = ClusterConfig::with_workers(4);
+    let cfg = ClusterSpec::with_workers(4);
     let reference =
         LogStore::build_corpus_parallel(0.002, 7, &cfg, 1, ExecutionMode::Simulated).unwrap();
     for threads in [1usize, 3] {

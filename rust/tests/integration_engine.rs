@@ -2,7 +2,7 @@
 //! the engine's global guarantees on realistic corpus graphs.
 
 use gps_select::algorithms::Algorithm;
-use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::cluster::ClusterSpec;
 use gps_select::graph::datasets::DatasetSpec;
 use gps_select::partition::Strategy;
 
@@ -12,12 +12,12 @@ use gps_select::partition::Strategy;
 fn results_invariant_across_strategies_and_workers() {
     let g = DatasetSpec::by_name("wiki").unwrap().build(0.008, 123);
     let reference: Vec<f64> = {
-        let cfg = ClusterConfig::with_workers(1);
+        let cfg = ClusterSpec::with_workers(1);
         let p = Strategy::OneDSrc.partition(&g, 1);
         Algorithm::all().iter().map(|a| a.simulate(&g, &p, &cfg).checksum).collect()
     };
     for &workers in &[4usize, 64] {
-        let cfg = ClusterConfig::with_workers(workers);
+        let cfg = ClusterSpec::with_workers(workers);
         for s in Strategy::all() {
             let p = s.partition(&g, workers);
             for (i, a) in Algorithm::all().iter().enumerate() {
@@ -42,7 +42,7 @@ fn results_invariant_across_strategies_and_workers() {
 /// disappear.
 #[test]
 fn best_strategy_differs_per_task() {
-    let cfg = ClusterConfig::with_workers(64);
+    let cfg = ClusterSpec::with_workers(64);
     let mut winners = std::collections::BTreeSet::new();
     for (gname, algo) in
         [("stanford", Algorithm::Pr), ("stanford", Algorithm::Tc), ("gd-hu", Algorithm::Apcn)]
@@ -67,7 +67,7 @@ fn best_strategy_differs_per_task() {
 fn more_workers_scale_on_stanford() {
     let g = DatasetSpec::by_name("stanford").unwrap().build(0.008, 42);
     let time = |w: usize| {
-        let cfg = ClusterConfig::with_workers(w);
+        let cfg = ClusterSpec::with_workers(w);
         let p = Strategy::TwoD.partition(&g, w);
         Algorithm::Pr.simulate(&g, &p, &cfg).sim.total
     };
@@ -81,7 +81,7 @@ fn more_workers_scale_on_stanford() {
 #[test]
 fn imbalance_costs_time() {
     let g = DatasetSpec::by_name("epinions").unwrap().build(0.008, 42);
-    let cfg = ClusterConfig::with_workers(8);
+    let cfg = ClusterSpec::with_workers(8);
     let balanced = Strategy::Hdrf(100).partition(&g, 8);
     let skewed = gps_select::partition::Partitioning::from_edge_assignment(
         &g,
@@ -97,7 +97,7 @@ fn imbalance_costs_time() {
 #[test]
 fn cost_hierarchy_matches_table7() {
     let g = DatasetSpec::by_name("stanford").unwrap().build(0.008, 42);
-    let cfg = ClusterConfig::with_workers(64);
+    let cfg = ClusterSpec::with_workers(64);
     let p = Strategy::Random.partition(&g, 64);
     let t = |a: Algorithm| a.simulate(&g, &p, &cfg).sim.total;
     let (aid, pr, apcn, rw) = (t(Algorithm::Aid), t(Algorithm::Pr), t(Algorithm::Apcn), t(Algorithm::Rw));

@@ -5,7 +5,7 @@
 use gps_select::algorithms::Algorithm;
 use gps_select::dataset::augment::augment;
 use gps_select::dataset::logs::LogStore;
-use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::cluster::ClusterSpec;
 use gps_select::etrm::Etrm;
 use gps_select::features::{encode, FEATURE_DIM};
 use gps_select::graph::datasets::DatasetSpec;
@@ -15,7 +15,7 @@ use gps_select::ml::Label;
 use gps_select::partition::Strategy;
 
 fn small_corpus(scale: f64) -> LogStore {
-    let cfg = ClusterConfig::with_workers(16);
+    let cfg = ClusterSpec::with_workers(16);
     let mut store = LogStore::default();
     for name in ["wiki", "epinions", "facebook", "gd-ro"] {
         let g = DatasetSpec::by_name(name).unwrap().build(scale, 7);
@@ -98,7 +98,8 @@ fn synthetic_tasks_predict_larger_times() {
 }
 
 /// Encoding must be stable: same task+strategy → same vector; the
-/// feature dimension is pinned to what the AOT artifact was built with.
+/// feature dimension is pinned so an artifact built under a stale
+/// schema cannot silently load (52 paper columns + the cluster block).
 #[test]
 fn encoding_stability_and_dimension() {
     let store = small_corpus(0.008);
@@ -106,7 +107,11 @@ fn encoding_stability_and_dimension() {
     let a = encode(&l.features, l.strategy);
     let b = encode(&l.features, l.strategy);
     assert_eq!(a, b);
-    assert_eq!(FEATURE_DIM, 52, "artifact gbdt_features must match");
+    assert_eq!(
+        FEATURE_DIM,
+        52 + gps_select::engine::cluster::CLUSTER_FEATURE_DIM,
+        "pinned feature schema changed"
+    );
 }
 
 /// Failure injection: training on an empty log set must panic loudly

@@ -12,7 +12,7 @@
 use std::sync::Mutex;
 
 use gps_select::algorithms::{Algorithm, SimOutcome};
-use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::cluster::ClusterSpec;
 use gps_select::engine::transport::socket;
 use gps_select::engine::ExecutionMode;
 use gps_select::graph::Graph;
@@ -46,7 +46,7 @@ fn assert_matches_reference(ctx: &str, sim: &SimOutcome, other: &SimOutcome) {
 }
 
 fn assert_intra_equivalent(g: &Graph, workers: usize, modes: &[ExecutionMode]) {
-    let cfg = ClusterConfig::with_workers(workers);
+    let cfg = ClusterSpec::with_workers(workers);
     let p = Strategy::Hdrf(50).partition(g, workers);
     for a in Algorithm::all() {
         pool::set_intra_threads(1);

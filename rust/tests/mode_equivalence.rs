@@ -11,7 +11,7 @@
 //! (for the socket mode) proves the wire format loses no bits.
 
 use gps_select::algorithms::Algorithm;
-use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::cluster::ClusterSpec;
 use gps_select::engine::transport::socket;
 use gps_select::engine::ExecutionMode;
 use gps_select::graph::Graph;
@@ -26,15 +26,21 @@ fn use_repro_workers() {
 }
 
 fn assert_modes_agree(g: &Graph, strategies: &[Strategy], workers: &[usize]) {
-    use_repro_workers();
     for &w in workers {
-        let cfg = ClusterConfig::with_workers(w);
+        assert_modes_agree_with(g, strategies, &ClusterSpec::with_workers(w));
+    }
+}
+
+fn assert_modes_agree_with(g: &Graph, strategies: &[Strategy], cfg: &ClusterSpec) {
+    use_repro_workers();
+    {
+        let w = cfg.num_workers();
         for &s in strategies {
             let p = s.partition(g, w);
             for a in Algorithm::all() {
-                let sim = a.execute(g, &p, &cfg, ExecutionMode::Simulated);
+                let sim = a.execute(g, &p, cfg, ExecutionMode::Simulated);
                 for mode in [ExecutionMode::Threaded, ExecutionMode::Socket] {
-                    let other = a.execute(g, &p, &cfg, mode);
+                    let other = a.execute(g, &p, cfg, mode);
                     let ctx = format!(
                         "{}/{}/{} at {w} workers ({} mode)",
                         g.name,
@@ -105,4 +111,121 @@ fn threaded_matches_on_activation_frontiers() {
     let edges: Vec<(u32, u32)> = (0..n).map(|i| (i, (i + 1) % n)).collect();
     let g = Graph::from_edges("mode-eq-cycle", n as usize, edges, true);
     assert_modes_agree(&g, &[Strategy::Random, Strategy::CanonicalRandom], &[1, 3]);
+}
+
+/// A genuinely heterogeneous cluster — one 4× straggler worker, two
+/// machines, asymmetric link tiers — must not break transport
+/// equivalence: the cost model charges every mode through the same
+/// ledger, so values, op counts and the simulated label stay
+/// bit-identical across Simulated / Threaded / Socket.
+#[test]
+fn straggler_cluster_stays_bit_identical_across_modes() {
+    let mut rng = Rng::new(4244);
+    let g =
+        gps_select::graph::gen::chung_lu::generate("mode-eq-het", 300, 1800, 2.1, true, &mut rng);
+    let cfg = ClusterSpec::builder()
+        .workers(4)
+        .machines(2)
+        .uniform_speed(2.0e6)
+        .speed(1, 5.0e5)
+        .inter_link(6.0e8, 9.0e-6)
+        .intra_link(8.0e9, 1.0e-6)
+        .build()
+        .unwrap();
+    assert_modes_agree_with(&g, &[Strategy::Random, Strategy::Hybrid], &cfg);
+}
+
+/// The committed uniform-vs-straggler spec pair is cluster-conditional
+/// end to end: (a) the simulated oracle's best strategy flips on at
+/// least one (graph, algorithm) task, and (b) an ETRM trained on the
+/// union of both corpora — whose logs carry the cluster feature block —
+/// reproduces a flip from the features alone. This is the pinned
+/// acceptance pair for the heterogeneity-aware selection API.
+#[test]
+fn uniform_vs_straggler_specs_flip_selection() {
+    use gps_select::dataset::logs::{ExecutionLog, LogStore};
+    use gps_select::etrm::Etrm;
+    use gps_select::graph::datasets::DatasetSpec;
+    use gps_select::ml::gbdt::GbdtParams;
+    use gps_select::ml::Label;
+
+    let uniform = ClusterSpec::with_workers(8);
+    // the committed skew: worker 0 runs 64× slower, so compute on the
+    // straggler dominates and the oracle favours whichever strategy
+    // keeps load off it — not the uniform cluster's comm-optimal pick
+    let straggler = ClusterSpec::builder().workers(8).speed(0, 2.0e6 / 64.0).build().unwrap();
+
+    let graphs = ["wiki", "facebook"];
+    let algos = Algorithm::all();
+    let strategies = Strategy::inventory();
+    let mut stores: Vec<LogStore> = Vec::new();
+    for cfg in [&uniform, &straggler] {
+        let mut store = LogStore::default();
+        for name in graphs {
+            let g = DatasetSpec::by_name(name).unwrap().build(0.01, 7);
+            store.record_graph(&g, &algos, &strategies, cfg).unwrap();
+        }
+        stores.push(store);
+    }
+
+    // (a) the simulated oracle flips its argmin on ≥ 1 task
+    let oracle_best = |store: &LogStore, graph: &str, algo: &str| -> Strategy {
+        strategies
+            .iter()
+            .copied()
+            .min_by(|&x, &y| {
+                let tx = store.time_of(graph, algo, x).unwrap();
+                let ty = store.time_of(graph, algo, y).unwrap();
+                tx.partial_cmp(&ty).unwrap()
+            })
+            .unwrap()
+    };
+    let mut oracle_flips = 0usize;
+    for name in graphs {
+        for a in &algos {
+            let u = oracle_best(&stores[0], name, a.name());
+            let s = oracle_best(&stores[1], name, a.name());
+            if u != s {
+                oracle_flips += 1;
+            }
+        }
+    }
+    assert!(
+        oracle_flips > 0,
+        "a 64× straggler must change the oracle-best strategy on at least one task"
+    );
+
+    // (b) a high-capacity in-sample ETRM reproduces a flip from the
+    // cluster feature block alone (the only columns that differ
+    // between the two corpora's copies of the same task)
+    let union: Vec<ExecutionLog> =
+        stores[0].logs.iter().chain(stores[1].logs.iter()).cloned().collect();
+    let etrm = Etrm::train_gbdt(
+        &union,
+        GbdtParams { n_estimators: 300, max_depth: 10, ..GbdtParams::fast() },
+        Label::SimTime,
+    );
+    let mut model_flips = 0usize;
+    for name in graphs {
+        for a in &algos {
+            let task_of = |store: &LogStore| {
+                store
+                    .logs
+                    .iter()
+                    .find(|l| l.graph == name && l.algorithm == a.name())
+                    .unwrap()
+                    .features
+                    .clone()
+            };
+            if etrm.select(&task_of(&stores[0])) != etrm.select(&task_of(&stores[1])) {
+                model_flips += 1;
+            }
+        }
+    }
+    assert!(
+        model_flips > 0,
+        "the trained ETRM must select differently under the straggler cluster features \
+         (oracle flipped {oracle_flips} of {} tasks)",
+        graphs.len() * algos.len()
+    );
 }

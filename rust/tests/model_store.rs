@@ -10,7 +10,7 @@ use std::path::PathBuf;
 
 use gps_select::algorithms::Algorithm;
 use gps_select::dataset::logs::LogStore;
-use gps_select::engine::cost::ClusterConfig;
+use gps_select::engine::cluster::ClusterSpec;
 use gps_select::etrm::{store, Etrm, EtrmBackend};
 use gps_select::features::TaskFeatures;
 use gps_select::graph::datasets::DatasetSpec;
@@ -30,7 +30,7 @@ fn scratch(tag: &str) -> PathBuf {
 
 /// A small real corpus: 2 graphs × 3 algorithms × the full inventory.
 fn corpus() -> LogStore {
-    let cfg = ClusterConfig::with_workers(8);
+    let cfg = ClusterSpec::with_workers(8);
     let mut store = LogStore::default();
     for name in ["wiki", "epinions"] {
         let g = DatasetSpec::by_name(name).unwrap().build(0.008, 11);
@@ -160,7 +160,10 @@ fn mismatched_manifests_are_rejected() {
 
     // a model built under a different feature schema must be rejected
     // (re-checksummed, so the *schema* check — not the checksum — fires)
-    let tampered = rechecksum(&text.replace("feature-dim 52", "feature-dim 51"));
+    let tampered = rechecksum(&text.replace(
+        &format!("feature-dim {}", gps_select::features::FEATURE_DIM),
+        "feature-dim 51",
+    ));
     std::fs::write(&path, &tampered).unwrap();
     let err = store::load(&path).unwrap_err().to_string();
     assert!(err.contains("feature dimension"), "{err}");

@@ -36,7 +36,12 @@ fn scratch(tag: &str) -> PathBuf {
 /// `Strategy::INVENTORY[favorite]`, making hot swaps observable.
 fn favoring_etrm(favorite: usize) -> Etrm {
     let mut weights = vec![0.0f64; FEATURE_DIM + 1];
-    let onehot_base = FEATURE_DIM - 4 - Strategy::INVENTORY.len();
+    // one-hot block sits before the 4 family columns and the trailing
+    // cluster block
+    let onehot_base = FEATURE_DIM
+        - gps_select::engine::cluster::CLUSTER_FEATURE_DIM
+        - 4
+        - Strategy::INVENTORY.len();
     weights[onehot_base + favorite] = -1.0;
     Etrm {
         backend: EtrmBackend::Ridge(Ridge { weights, log_target: false }),

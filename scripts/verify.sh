@@ -32,7 +32,12 @@ cargo test -q -- --skip bit_identical_to_simulated
 # Threaded AND the multi-process Socket backend must be bit-identical
 # (values, op counts, simulated times) across algorithms, strategies
 # and worker counts. The socket rows spawn one worker process per
-# engine worker, exercising the wire serialization end to end.
+# engine worker, exercising the wire serialization end to end. The
+# matrix includes the heterogeneous-cluster rows: a straggler spec
+# with asymmetric link tiers must stay bit-identical across all three
+# transports, and the committed uniform-vs-straggler spec pair must
+# flip the selected strategy (oracle and trained ETRM) on at least one
+# corpus task.
 cargo test -q --release --test mode_equivalence
 
 # Intra-worker parallelism equivalence, release: every GPS_INTRA_THREADS
@@ -152,6 +157,36 @@ cargo run --release --example select_strategy -- \
 wait "$SERVE_PID"
 cmp "$CKPT_TMP/train.bits" "$CKPT_TMP/serve.bits"
 echo "verify: daemon-served predictions are bit-identical to the offline model (cross-process)"
+
+# Heterogeneous-cluster selection round-trip: the same artifact driven
+# under a non-default ClusterSpec — offline via `repro select
+# --cluster`, and across the wire via a proto v2 frame carrying the
+# encoded spec — must return byte-identical prediction tables. This
+# gates the cluster-conditional path end to end: descriptor parse →
+# task stamping → encode → daemon decode → batched select.
+"$REPRO" select --model "$CKPT_TMP/model.etrm" --scale 0.002 --seed 7 \
+    --graph wiki --algorithm PR --cluster straggler:0:8 \
+    --bits-out "$CKPT_TMP/het_select.bits"
+"$REPRO" serve --model "$CKPT_TMP/model.etrm" --listen 127.0.0.1:0 \
+    > "$CKPT_TMP/het_serve.out" 2> "$CKPT_TMP/het_serve.err" &
+SERVE_PID=$!
+SERVE_ADDR=""
+for _ in $(seq 1 100); do
+    SERVE_ADDR=$(sed -n 's/^serve: listening on //p' "$CKPT_TMP/het_serve.out")
+    [ -n "$SERVE_ADDR" ] && break
+    sleep 0.1
+done
+if [ -z "$SERVE_ADDR" ]; then
+    echo "verify: FAIL — het-cluster daemon never announced its listen address" >&2
+    cat "$CKPT_TMP/het_serve.err" >&2
+    exit 1
+fi
+cargo run --release --example select_strategy -- \
+    --connect "$SERVE_ADDR" --graph wiki --algorithm PR --scale 0.002 --seed 7 \
+    --cluster straggler:0:8 --bits-out "$CKPT_TMP/het_serve.bits" --shutdown
+wait "$SERVE_PID"
+cmp "$CKPT_TMP/het_select.bits" "$CKPT_TMP/het_serve.bits"
+echo "verify: het-cluster (proto v2) served predictions are bit-identical to offline --cluster select"
 
 # Serve load-generator smoke: the bench spawns its own daemon child
 # and drives 1/4/8 concurrent connections with mixed batch sizes. The
